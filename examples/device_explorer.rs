@@ -1,0 +1,63 @@
+//! Device explorer: interactive-style CLI over the pure-Rust AMS device
+//! simulator — sweep any (tile, bits, gain, noise) point and print the
+//! error statistics and saturation behaviour, no artifacts required.
+//!
+//!   cargo run --release --example device_explorer -- \
+//!       --tile 128 --bw 8 --bx 8 --by 8 --gain 8 --noise 0.5
+
+use abfp::abfp::{matmul_error_stats, DeviceConfig};
+use abfp::cli::Args;
+use abfp::energy::{full_precision_bits, DesignPoint};
+use abfp::numerics::BitWindow;
+use abfp::sweep::figs1::protocol_inputs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let tile = args.usize_or("tile", 128)?;
+    let bw = args.usize_or("bw", 8)? as u32;
+    let bx = args.usize_or("bx", 8)? as u32;
+    let by = args.usize_or("by", 8)? as u32;
+    let gain = args.f32_or("gain", 8.0)?;
+    let noise = args.f32_or("noise", 0.5)?;
+    let rows = args.usize_or("rows", 100)?;
+
+    let cfg = DeviceConfig::new(tile, (bw, bx, by), gain, noise);
+    println!("device: tile {tile}, bits {bw}/{bx}/{by}, gain {gain}, noise {noise} LSB");
+    println!(
+        "  output bin (1 LSB) = n*delta_y = {:.6}; clamp tau_Y = {}",
+        cfg.output_bin(),
+        tile
+    );
+    println!(
+        "  full-precision output would need {:.1} bits; ADC has {by}",
+        full_precision_bits(bw, bx, tile)
+    );
+    let g2 = (gain as f64).log2().round() as u32;
+    let win = BitWindow::new(bw, bx, by, tile, g2);
+    println!(
+        "  bit window at G=2^{g2}: saturates {} MSBs, captures {}, loses {} LSBs",
+        win.saturated_msbs,
+        win.captured(),
+        win.lost_lsbs()
+    );
+
+    let (x, w) = protocol_inputs(2022, rows);
+    let s = matmul_error_stats(cfg, 7, &x, &w)?;
+    println!("\nFig. S1 protocol ({rows}x768 @ 768x768, X~N(0,1), W~Laplace):");
+    println!("  error mean {:+.3e}  std {:.3e}", s.mean, s.std);
+    println!("  error extrema [{:+.3e}, {:+.3e}]", s.min, s.max);
+    println!("  p01 {:+.3e}  p50 {:+.3e}  p99 {:+.3e}", s.p01, s.p50, s.p99);
+    println!("  ADC saturation: {:.3}% of conversions", 100.0 * s.sat_frac);
+
+    let dp = DesignPoint {
+        n: tile,
+        adc_bits: by as f64,
+        gain: gain as f64,
+    };
+    println!(
+        "\nenergy model: {:.3e} per conversion, {:.3e} per MAC (relative units)",
+        dp.adc_energy_per_conversion(),
+        dp.adc_energy_per_mac()
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Serving demo: the L3 coordinator under load.
+//!
+//! Starts the router with two model workers (BERT + DLRM archetypes) on
+//! the simulated ABFP device, drives an open-loop request stream from
+//! multiple client threads, and reports throughput and latency
+//! percentiles — the serving-paper-style validation of the stack.
+//!
+//!   make artifacts && cargo run --release --example serve_demo
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use abfp::abfp::DeviceConfig;
+use abfp::coordinator::{BatchPolicy, Router, WorkerConfig};
+use abfp::data::dataset_for;
+use abfp::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let models = vec!["bert".to_string(), "dlrm".to_string()];
+    let cfg = WorkerConfig {
+        device: Some(DeviceConfig::new(128, (8, 8, 8), 8.0, 0.5)),
+        policy: BatchPolicy::new(32, 4),
+    };
+    println!("starting router: models {models:?}, ABFP tile 128 gain 8");
+    let router = Arc::new(Router::start("artifacts", "checkpoints", &models, cfg)?);
+
+    const CLIENTS: usize = 4;
+    const REQS_PER_CLIENT: usize = 64;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let router = router.clone();
+        let models = models.clone();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+            let mut rng = Pcg64::seeded(100 + c as u64);
+            let mut done = 0u64;
+            for i in 0..REQS_PER_CLIENT {
+                let model = &models[(c + i) % models.len()];
+                let ds = dataset_for(model)?;
+                let b = ds.batch(&mut rng, 1);
+                let shape: Vec<usize> = b.x.shape()[1..].to_vec();
+                let x = b.x.clone().reshape(&shape)?;
+                let resp = router.infer(model, x)?;
+                assert!(!resp.outputs.is_empty());
+                done += 1;
+            }
+            Ok(done)
+        }));
+    }
+    let total: u64 = joins
+        .into_iter()
+        .map(|j| j.join().unwrap().unwrap())
+        .sum();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\n{total} requests from {CLIENTS} clients in {wall:.2}s = {:.1} req/s",
+        total as f64 / wall
+    );
+    for m in router.served_models() {
+        let s = router.stats(&m)?;
+        println!(
+            "  {m:<5} reqs {:>4}  batches {:>3} (mean size {:>4.1})  \
+             exec {:>6.1} ms  p50 {:>6.1} ms  p95 {:>6.1} ms",
+            s.requests, s.batches, s.mean_batch, s.mean_exec_ms, s.p50_ms, s.p95_ms
+        );
+    }
+    println!("\nNote: requests are single examples; the dynamic batcher\nfuses them into one device execution (dynamic batching win).");
+    Ok(())
+}

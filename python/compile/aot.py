@@ -1,0 +1,289 @@
+"""AOT compiler: lowers every computation the Rust runtime needs to HLO
+*text* artifacts plus a JSON manifest describing their signatures.
+
+HLO text (NOT ``lowered.compiler_ir("hlo")`` protos and NOT
+``.serialize()``) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifact inventory (DESIGN.md section 5):
+  per model M in {cnn, ssd, unet, gru, bert, dlrm}:
+    M_init                      seed -> initial params
+    M_fwd_f32                   FLOAT32 digital twin forward
+    M_fwd_abfp_t{8,32,128}      ABFP device forward (gain/bits/noise are
+                                runtime scalars; tile width is static)
+    M_train_f32                 FLOAT32 pretraining step
+  for the finetuned models {cnn, ssd}:
+    M_train_qat_t128            QAT step (STE)
+    M_train_dnf                 DNF step (noise tensors as inputs)
+    M_calib_t128                per-layer differential noise (Fig. 3)
+  numeric experiments:
+    figs1_t{8,32,128}           Fig. S1 matmul error distributions
+    quickstart                  tiny ABFP-vs-FLOAT32 matmul demo
+
+Python runs once (`make artifacts`); afterwards the Rust binary is fully
+self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import train
+from compile.kernels import abfp as kabfp
+from compile.kernels import ref
+from compile.layers import AbfpCtx
+from compile.models import REGISTRY, Mode
+from compile.models import common
+
+TILES = (8, 32, 128)
+FINETUNED = ("cnn", "ssd")      # the two sub-99% models of Table III
+FINETUNE_TILE = 128             # paper: finetune at tile 128, gain 8
+FIGS1_ROWS = 100                # Fig. S1 row-chunk per execution
+TRAIN_SUFFIXES = ("f32", "qat", "dnf")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def key_spec():
+    return spec((2,), jnp.uint32)
+
+
+def wrap_key(raw):
+    return jax.random.wrap_key_data(raw, impl="threefry2x32")
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = []
+        self.models = {}
+
+    def lower(self, name: str, fn, arg_specs, arg_names, meta=None):
+        t0 = time.time()
+        # keep_unused: the manifest promises every listed input is a real
+        # HLO parameter. Without it XLA prunes dead inputs (e.g. the
+        # final-layer biases in calib graphs, whose diffs are pre-bias)
+        # and execution fails with a buffer-count mismatch.
+        lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *arg_specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [
+                {"name": nm, "shape": list(s.shape), "dtype": str(s.dtype)}
+                for nm, s in zip(arg_names, arg_specs)
+            ],
+            "outputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in jax.tree_util.tree_leaves(out_shapes)
+            ],
+        }
+        entry.update(meta or {})
+        self.artifacts.append(entry)
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO "
+              f"({time.time() - t0:.1f}s)")
+        return entry
+
+
+def build_model_artifacts(b: Builder, model, fast: bool):
+    name = model.name
+    params0 = model.init(jax.random.PRNGKey(0))
+    names = common.param_names(params0)
+    pspecs = [spec(tuple(params0[k].shape)) for k in names]
+    pnames = [f"p:{k}" for k in names]
+    be, bt = model.batch_eval, model.batch_train
+    x_eval = spec((be,) + model.input_shape)
+    x_train = spec((bt,) + model.input_shape)
+    y_train = spec((bt,) + model.target_shape)
+    taps = common.tap_index(model, bt)
+
+    b.models[name] = {
+        "params": [{"name": k, "shape": list(params0[k].shape)}
+                   for k in names],
+        "taps": [{"name": t[0], "shape": list(t[1])} for t in taps],
+        "metric": model.metric,
+        "optimizer": model.optimizer,
+        "batch_eval": be,
+        "batch_train": bt,
+        "input_shape": list(model.input_shape),
+        "target_shape": list(model.target_shape),
+        "tiles": list(TILES),
+        "finetuned": name in FINETUNED,
+        "num_outputs": len(model.forward(
+            params0, jnp.zeros((1,) + model.input_shape), Mode("f32"))),
+    }
+
+    # --- init ------------------------------------------------------------
+    def init_fn(key_raw):
+        return tuple(common.flatten(model.init(wrap_key(key_raw))))
+    b.lower(f"{name}_init", init_fn, [key_spec()], ["key"],
+            {"kind": "init", "model": name})
+
+    # --- FLOAT32 forward ---------------------------------------------------
+    def fwd_f32(*args):
+        params = common.unflatten(names, args[:-1])
+        return model.forward(params, args[-1], Mode("f32"))
+    b.lower(f"{name}_fwd_f32", fwd_f32, pspecs + [x_eval], pnames + ["x"],
+            {"kind": "fwd_f32", "model": name})
+
+    # --- ABFP forwards, one per tile width ---------------------------------
+    tiles = TILES if not fast else (8,)
+    for n in tiles:
+        def fwd_abfp(*args, n=n):
+            flat, x, key_raw, scalars, amp = (
+                args[:-4], args[-4], args[-3], args[-2], args[-1])
+            params = common.unflatten(names, flat)
+            ctx = AbfpCtx(n=n, scalars=scalars, noise_amp=amp,
+                          key=wrap_key(key_raw))
+            return model.forward(params, x, Mode("abfp", ctx=ctx))
+        b.lower(f"{name}_fwd_abfp_t{n}", fwd_abfp,
+                pspecs + [x_eval, key_spec(), spec((4,)), spec(())],
+                pnames + ["x", "key", "scalars", "noise_amp"],
+                {"kind": "fwd_abfp", "model": name, "tile": n})
+
+    # --- train steps --------------------------------------------------------
+    opt_specs = pspecs + pspecs            # m, v (or momentum + spare)
+    opt_names = [f"m:{k}" for k in names] + [f"v:{k}" for k in names]
+    state = pspecs + opt_specs + [spec(())]
+    state_names = pnames + opt_names + ["step"]
+
+    f32_step = train.make_train_step(model, names, "f32")
+    b.lower(f"{name}_train_f32", f32_step,
+            state + [x_train, y_train, spec(())],
+            state_names + ["x", "y", "lr"],
+            {"kind": "train_f32", "model": name})
+
+    if name in FINETUNED and not fast:
+        qat_step = train.make_train_step(
+            model, names, "qat", n=FINETUNE_TILE)
+        b.lower(f"{name}_train_qat_t{FINETUNE_TILE}", qat_step,
+                state + [x_train, y_train, spec(()),
+                         key_spec(), spec((4,)), spec(())],
+                state_names + ["x", "y", "lr", "key", "scalars", "noise_amp"],
+                {"kind": "train_qat", "model": name, "tile": FINETUNE_TILE})
+
+        dnf_step = train.make_train_step(model, names, "dnf")
+        xi_specs = [spec(tuple(t[1])) for t in taps]
+        xi_names = [f"xi:{t[0]}" for t in taps]
+        b.lower(f"{name}_train_dnf", dnf_step,
+                state + [x_train, y_train, spec(())] + xi_specs,
+                state_names + ["x", "y", "lr"] + xi_names,
+                {"kind": "train_dnf", "model": name})
+
+        def calib(*args, n=FINETUNE_TILE):
+            flat, x, key_raw, scalars, amp = (
+                args[:-4], args[-4], args[-3], args[-2], args[-1])
+            params = common.unflatten(names, flat)
+            ctx = AbfpCtx(n=n, scalars=scalars, noise_amp=amp,
+                          key=wrap_key(key_raw))
+            mode = Mode("calib", ctx=ctx)
+            model.forward(params, x, mode)
+            return tuple(d for _, d in mode.diffs)
+        b.lower(f"{name}_calib_t{FINETUNE_TILE}", calib,
+                pspecs + [x_train, key_spec(), spec((4,)), spec(())],
+                pnames + ["x", "key", "scalars", "noise_amp"],
+                {"kind": "calib", "model": name, "tile": FINETUNE_TILE,
+                 "taps": [t[0] for t in taps]})
+
+
+def build_numeric_artifacts(b: Builder, fast: bool):
+    # Fig. S1: BERT-Base projection shapes — weights 768x768 (Laplace),
+    # inputs (16*25)x768 (Normal), chunked to FIGS1_ROWS rows per call.
+    for n in (TILES if not fast else (8,)):
+        def figs1(x, w, key_raw, scalars, amp, n=n):
+            ctx_key = wrap_key(key_raw)
+            t = ref.num_tiles(768, n)
+            noise = ref.sample_noise(
+                ctx_key, t, FIGS1_ROWS, 768, n, scalars[3], amp)
+            out = kabfp.abfp_matmul(x, w, noise, scalars, n=n)
+            return out, ref.float_matmul(x, w)
+        b.lower(f"figs1_t{n}", figs1,
+                [spec((FIGS1_ROWS, 768)), spec((768, 768)),
+                 key_spec(), spec((4,)), spec(())],
+                ["x", "w", "key", "scalars", "noise_amp"],
+                {"kind": "figs1", "tile": n})
+
+    def quickstart(x, w, key_raw, scalars, amp):
+        t = ref.num_tiles(64, 8)
+        noise = ref.sample_noise(wrap_key(key_raw), t, 4, 8, 8, scalars[3], amp)
+        out = kabfp.abfp_matmul(x, w, noise, scalars, n=8)
+        return out, ref.float_matmul(x, w)
+    b.lower("quickstart", quickstart,
+            [spec((4, 64)), spec((8, 64)), key_spec(), spec((4,)), spec(())],
+            ["x", "w", "key", "scalars", "noise_amp"],
+            {"kind": "quickstart", "tile": 8})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="tile-8 artifacts only (CI smoke)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model subset")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    b = Builder(args.out)
+    t0 = time.time()
+    only = args.only.split(",") if args.only else None
+    for name, model in REGISTRY.items():
+        if only and name not in only:
+            continue
+        print(f"[{name}]")
+        build_model_artifacts(b, model, args.fast)
+    if not only:
+        print("[numeric]")
+        build_numeric_artifacts(b, args.fast)
+
+    manifest = {
+        "version": 1,
+        "finetune_tile": FINETUNE_TILE,
+        "figs1_rows": FIGS1_ROWS,
+        "models": b.models,
+        "artifacts": b.artifacts,
+    }
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if only and os.path.exists(manifest_path):
+        # Partial rebuild: merge into the existing manifest instead of
+        # clobbering the other models' entries.
+        with open(manifest_path) as f:
+            old = json.load(f)
+        old["models"].update(manifest["models"])
+        new_names = {a["name"] for a in b.artifacts}
+        merged = [a for a in old["artifacts"] if a["name"] not in new_names]
+        merged.extend(b.artifacts)
+        old["artifacts"] = merged
+        manifest = old
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"total: {len(b.artifacts)} artifacts in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: ABFP tiled matrix multiplication.
+
+The kernel maps the paper's AMS device onto a Pallas grid (DESIGN.md
+section 3, "Hardware adaptation"):
+
+  * the grid iterates over the ``T = ceil(K/n)`` reduction tiles — one grid
+    step models one pass of the ``n``-wide analog MVM array;
+  * each step loads a ``(M, n)`` activation slab and an ``(N, n)`` weight
+    slab into VMEM via BlockSpec (the DAC staging buffers), computes the
+    per-vector BFLOAT16 scales (DAC normalization), quantizes both operands
+    (DAC), performs the matmul (the analog MVM / MXU systolic pass),
+    applies gain + additive ADC noise + output quantization (the ADC), and
+    accumulates the rescaled partial into a FLOAT32 ``(M, N)`` accumulator
+    that stays resident in VMEM across the grid (Eq. 4/6 digital sum);
+  * gain and the three quantization bins are *runtime* scalars so a single
+    compiled artifact serves the entire gain x bitwidth sweep; only the
+    tile width ``n`` is static.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers the kernel to plain HLO that the
+Rust runtime executes. The block structure is nevertheless the one a real
+TPU lowering would use (see DESIGN.md section 7 for the VMEM/MXU budget).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels import ref
+
+
+def _abfp_kernel(x_ref, w_ref, noise_ref, scal_ref, out_ref, *, n: int):
+    """One reduction-tile step of the ABFP matmul.
+
+    Refs (per grid step j):
+      x_ref:     (M, n)  activation tile j            [VMEM in]
+      w_ref:     (N, n)  weight tile j                [VMEM in]
+      noise_ref: (1, M, N) pre-sampled ADC noise for tile j [VMEM in]
+      scal_ref:  (4,)    [gain, delta_w, delta_x, delta_y]  [SMEM-like in]
+      out_ref:   (M, N)  FLOAT32 accumulator, grid-invariant [VMEM acc]
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _zero_acc():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    gain = scal_ref[0]
+    delta_w = scal_ref[1]
+    delta_x = scal_ref[2]
+    delta_y = scal_ref[3]
+
+    x = x_ref[...]
+    w = w_ref[...]
+
+    # DAC normalization: per-vector BFLOAT16 scales (zero tile -> 1).
+    sx = ref.bf16_round(jnp.max(jnp.abs(x), axis=1, keepdims=True))
+    sx = jnp.where(sx == 0.0, 1.0, sx)                       # (M, 1)
+    sw = ref.bf16_round(jnp.max(jnp.abs(w), axis=1, keepdims=True))
+    sw = jnp.where(sw == 0.0, 1.0, sw)                       # (N, 1)
+
+    # DAC quantization of the normalized operands (Eq. 2).
+    xq = ref.quantize(x / sx, delta_x, 1.0)
+    wq = ref.quantize(w / sw, delta_w, 1.0)
+
+    # Analog MVM: the MXU pass. f32 inputs, f32 accumulation.
+    dot = jax.lax.dot_general(
+        xq, wq, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+        precision=jax.lax.Precision.HIGHEST,
+    )                                                        # (M, N)
+
+    # ADC: gain, additive noise, output quantization (Eq. 7).
+    pre_adc = gain * dot + noise_ref[0]
+    yq = ref.quantize(pre_adc, n * delta_y, float(n))
+
+    # Digital accumulate of the rescaled partial (Eq. 6).
+    out_ref[...] += yq * sx * sw.T / gain
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def abfp_matmul(x, w, noise, scalars, *, n: int):
+    """ABFP matmul ``x @ w.T`` via the Pallas kernel.
+
+    Args:
+      x: (M, K) float32 activations (BFLOAT16-valued).
+      w: (N, K) float32 weights, output-features-major.
+      noise: (T, M, N) pre-sampled ADC noise in absolute units, where
+        ``T = ceil(K/n)``; pass zeros for a noiseless device.
+      scalars: (4,) float32 ``[gain, delta_w, delta_x, delta_y]``.
+      n: static tile width.
+
+    Returns:
+      (M, N) float32 output, BFLOAT16-rounded.
+    """
+    m, k = x.shape
+    nn, kw = w.shape
+    assert k == kw, f"reduction mismatch {k} vs {kw}"
+    xp = ref.pad_to_tiles(x, n)
+    wp = ref.pad_to_tiles(w, n)
+    t = xp.shape[-1] // n
+    assert noise.shape == (t, m, nn), (noise.shape, (t, m, nn))
+
+    acc = pl.pallas_call(
+        functools.partial(_abfp_kernel, n=n),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda j: (0, j)),        # x tile j
+            pl.BlockSpec((nn, n), lambda j: (0, j)),       # w tile j
+            pl.BlockSpec((1, m, nn), lambda j: (j, 0, 0)),  # noise tile j
+            pl.BlockSpec((4,), lambda j: (0,)),            # runtime scalars
+        ],
+        out_specs=pl.BlockSpec((m, nn), lambda j: (0, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((m, nn), jnp.float32),
+        interpret=True,
+    )(xp, wp, noise, scalars)
+    return ref.bf16_round(acc)
+
+
+def make_scalars(gain: float, bw: int, bx: int, by: int) -> jnp.ndarray:
+    """Pack the runtime scalar vector for :func:`abfp_matmul`."""
+    return jnp.array(
+        [gain, ref.delta(bw), ref.delta(bx), ref.delta(by)], dtype=jnp.float32
+    )

@@ -1,0 +1,197 @@
+"""Pure-jnp oracle for the ABFP tiled matrix multiplication.
+
+Implements Eq. (1)-(7) of "Adaptive Block Floating-Point for Analog Deep
+Learning Hardware" (Basumallik et al., 2022) verbatim, with the semantic
+decisions pinned in DESIGN.md section 6:
+
+  * per-vector scales ``s = max|v|`` over each length-``n`` tile, rounded to
+    BFLOAT16 (round-to-nearest-even); zero tiles use ``s = 1``;
+  * symmetric quantization ``Q(v; d, t) = clamp(rne(v/d)*d, +-t)`` with
+    ``d_b = 1/(2^(b-1)-1)``, ``t_W = t_X = 1`` and ``t_Y = n`` with output
+    bin ``n*d_Y``;
+  * gain ``G`` amplifies the pre-ADC analog value, the ADC quantizes
+    ``G*dot + eps``, accumulation divides the rescaled partial by ``G``;
+  * ADC noise ``eps ~ U(-a*n*d_Y, +a*n*d_Y)`` with ``a`` in LSB units
+    (paper: a = 0.5);
+  * tile accumulation in FLOAT32; the final output is rounded to BFLOAT16.
+
+This module is the correctness oracle: the Pallas kernel
+(:mod:`compile.kernels.abfp`) and the Rust device simulator
+(``rust/src/abfp``) are both tested against it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def delta(bits: int) -> float:
+    """Discretization bin for symmetric signed quantization (Eq. 1)."""
+    return 1.0 / (2 ** (bits - 1) - 1)
+
+
+def bf16_round(v: jnp.ndarray) -> jnp.ndarray:
+    """Round a float32 array to the nearest BFLOAT16 value (RNE), as f32."""
+    return v.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def quantize(v: jnp.ndarray, d, tau) -> jnp.ndarray:
+    """Eq. (1): Q(v; d, tau) = clamp(rne(v/d) * d, -tau, +tau).
+
+    ``jnp.round`` implements round-half-to-even, matching the paper.
+    """
+    return jnp.clip(jnp.round(v / d) * d, -tau, tau)
+
+
+def tile_scales(v: jnp.ndarray) -> jnp.ndarray:
+    """Per-tile shared scale s = max|v| along the last axis, in BFLOAT16.
+
+    Zero tiles (all elements zero, e.g. from K-padding) get scale 1 so the
+    normalized vector is well defined; their contribution is exactly zero.
+    """
+    s = jnp.max(jnp.abs(v), axis=-1, keepdims=True)
+    s = bf16_round(s)
+    return jnp.where(s == 0.0, 1.0, s)
+
+
+def pad_to_tiles(v: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Zero-pad the last (reduction) axis to a multiple of the tile width."""
+    k = v.shape[-1]
+    rem = (-k) % n
+    if rem:
+        pad = [(0, 0)] * (v.ndim - 1) + [(0, rem)]
+        v = jnp.pad(v, pad)
+    return v
+
+
+class AbfpParts(NamedTuple):
+    """Intermediates of the ABFP pipeline, for analysis and tests."""
+
+    out: jnp.ndarray        # (M, N) final BFLOAT16-rounded output
+    partial_q: jnp.ndarray  # (T, M, N) post-ADC quantized partials
+    sat_frac: jnp.ndarray   # scalar: fraction of ADC outputs that clamped
+    sx: jnp.ndarray         # (M, T, 1) input scales
+    sw: jnp.ndarray         # (N, T, 1) weight scales
+
+
+def abfp_matmul_parts(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    n: int,
+    gain,
+    delta_w,
+    delta_x,
+    delta_y,
+    noise=None,
+) -> AbfpParts:
+    """ABFP matmul ``x @ w.T`` returning all intermediates.
+
+    Args:
+      x: (M, K) float32 activations (assumed already BFLOAT16-valued).
+      w: (N, K) float32 weights, row-major (output features first).
+      n: tile width (static).
+      gain: scalar analog gain G >= 1 (runtime).
+      delta_w/delta_x/delta_y: quantization bins (runtime scalars).
+      noise: optional (T, M, N) pre-sampled ADC noise, in *absolute* units
+        (already scaled by ``a * n * delta_y``); None means noiseless.
+
+    Returns:
+      AbfpParts with the (M, N) output and pipeline intermediates.
+    """
+    m, k = x.shape
+    nn, kw = w.shape
+    assert k == kw, f"reduction mismatch {k} vs {kw}"
+    xt = pad_to_tiles(x, n).reshape(m, -1, n)       # (M, T, n)
+    wt = pad_to_tiles(w, n).reshape(nn, -1, n)      # (N, T, n)
+
+    sx = tile_scales(xt)                            # (M, T, 1)
+    sw = tile_scales(wt)                            # (N, T, 1)
+    xq = quantize(xt / sx, delta_x, 1.0)            # Eq. (2)
+    wq = quantize(wt / sw, delta_w, 1.0)
+
+    # Per-tile dot products: analog MVM output before the ADC.
+    dots = jnp.einsum("mtk,ntk->tmn", xq, wq,
+                      precision=jax.lax.Precision.HIGHEST)
+    pre_adc = gain * dots                           # Eq. (5)
+    if noise is not None:
+        pre_adc = pre_adc + noise                   # Eq. (7)
+    ybin = n * delta_y
+    tau_y = float(n)
+    yq = quantize(pre_adc, ybin, tau_y)             # (T, M, N)
+    sat = jnp.mean((jnp.abs(pre_adc) > tau_y).astype(jnp.float32))
+
+    # Eq. (6): rescale partials by s_w * s_x / G and accumulate in FLOAT32.
+    scale = sx.transpose(1, 0, 2) * sw.transpose(1, 2, 0)   # (T, M, N)
+    partials = yq * scale / gain
+    acc = jnp.sum(partials, axis=0)                 # FLOAT32 accumulation
+    return AbfpParts(bf16_round(acc), yq, sat, sx, sw)
+
+
+def abfp_matmul(x, w, *, n, gain, delta_w, delta_x, delta_y, noise=None):
+    """ABFP matmul ``x @ w.T`` -> (M, N); see :func:`abfp_matmul_parts`."""
+    return abfp_matmul_parts(
+        x, w, n=n, gain=gain, delta_w=delta_w, delta_x=delta_x,
+        delta_y=delta_y, noise=noise,
+    ).out
+
+
+def sample_noise(key, t: int, m: int, nn: int, n: int, delta_y, amp) -> jnp.ndarray:
+    """ADC noise tensor eps ~ U(-amp*n*delta_y, +amp*n*delta_y), (T, M, N).
+
+    ``amp`` is in LSB units (paper's model: amp = 0.5 gives a uniform error
+    of width one output bin, Var = (n*delta_y)^2 / 12).
+    """
+    u = jax.random.uniform(key, (t, m, nn), minval=-1.0, maxval=1.0)
+    return u * (amp * n * delta_y)
+
+
+def abfp_bmm(x, w, *, n, gain, delta_w, delta_x, delta_y, noise=None):
+    """Batched ABFP matmul: ``x[g] @ w[g].T`` for every group ``g``.
+
+    Used for attention score/value matmuls where the device executes one
+    small MVM per (batch, head) group. Same Eq. (1)-(7) pipeline as
+    :func:`abfp_matmul`, vectorized over the leading group axis.
+
+    Args:
+      x: (G, M, K); w: (G, N, K);
+      noise: optional (G, T, M, N) pre-sampled absolute ADC noise.
+
+    Returns:
+      (G, M, N) float32 output, BFLOAT16-rounded.
+    """
+    g, m, k = x.shape
+    _, nn, kw = w.shape
+    assert k == kw
+    xt = pad_to_tiles(x, n).reshape(g, m, -1, n)    # (G, M, T, n)
+    wt = pad_to_tiles(w, n).reshape(g, nn, -1, n)   # (G, N, T, n)
+
+    sx = tile_scales(xt)                            # (G, M, T, 1)
+    sw = tile_scales(wt)                            # (G, N, T, 1)
+    xq = quantize(xt / sx, delta_x, 1.0)
+    wq = quantize(wt / sw, delta_w, 1.0)
+
+    dots = jnp.einsum("gmtk,gntk->gtmn", xq, wq,
+                      precision=jax.lax.Precision.HIGHEST)
+    pre_adc = gain * dots
+    if noise is not None:
+        pre_adc = pre_adc + noise
+    yq = quantize(pre_adc, n * delta_y, float(n))   # (G, T, M, N)
+
+    scale = sx.transpose(0, 2, 1, 3) * sw.transpose(0, 2, 3, 1)
+    acc = jnp.sum(yq * scale / gain, axis=1)
+    return bf16_round(acc)
+
+
+def num_tiles(k: int, n: int) -> int:
+    """Number of length-``n`` tiles covering a reduction dim of ``k``."""
+    return math.ceil(k / n)
+
+
+def float_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """FLOAT32 reference ``x @ w.T`` with highest precision."""
+    return jnp.einsum("mk,nk->mn", x, w, precision=jax.lax.Precision.HIGHEST)

@@ -1,0 +1,214 @@
+"""Layer-2 building blocks: ABFP and FLOAT32 twin layers.
+
+Every matrix multiplication in a model goes through :func:`matmul`, which
+dispatches on the :class:`AbfpCtx`:
+
+  * ``ctx is None``       -> FLOAT32 digital reference path;
+  * ``ctx.use_pallas``    -> the Layer-1 Pallas kernel (projections);
+  * otherwise             -> the pure-jnp oracle (used for vmapped inner
+                             attention matmuls, where a pallas_call per
+                             (batch x head) would bloat the lowering — see
+                             DESIGN.md section 4).
+
+Per section V of the paper, non-matmul ops (norms, activations, softmax,
+pooling, embedding lookups) are "digital": they run in FLOAT32 with
+BFLOAT16 memory boundaries, which we model by rounding layer inputs and
+outputs to BFLOAT16.
+
+ADC noise is sampled *inside* each ABFP layer from a folded PRNG key, with
+a runtime amplitude scalar, so one AOT artifact covers noiseless and noisy
+device models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import abfp as kabfp
+from compile.kernels import ref
+
+
+@dataclasses.dataclass
+class AbfpCtx:
+    """Runtime + static configuration of the simulated AMS device.
+
+    Attributes:
+      n: tile width (static — fixed by the analog array geometry).
+      scalars: (4,) float32 [gain, delta_w, delta_x, delta_y] (runtime).
+      noise_amp: scalar ADC noise amplitude in LSB units (runtime; the
+        paper's device model is 0.5, i.e. +-half an output bin).
+      key: PRNG key for device noise; folded per layer call.
+      use_pallas: route 2-D projections through the Pallas kernel.
+      counter: python-level call counter used to fold the key (static
+        unrolling — the layer graph is fixed at trace time).
+    """
+
+    n: int
+    scalars: jnp.ndarray
+    noise_amp: jnp.ndarray
+    key: jax.Array
+    use_pallas: bool = True
+    counter: int = 0
+
+    def next_key(self) -> jax.Array:
+        self.counter += 1
+        return jax.random.fold_in(self.key, self.counter)
+
+    @property
+    def gain(self):
+        return self.scalars[0]
+
+    @property
+    def delta_w(self):
+        return self.scalars[1]
+
+    @property
+    def delta_x(self):
+        return self.scalars[2]
+
+    @property
+    def delta_y(self):
+        return self.scalars[3]
+
+
+def bf16(v: jnp.ndarray) -> jnp.ndarray:
+    """BFLOAT16 memory boundary (round-to-nearest-even, kept as f32)."""
+    return ref.bf16_round(v)
+
+
+def matmul(ctx: Optional[AbfpCtx], x: jnp.ndarray, w: jnp.ndarray,
+           *, pallas_ok: bool = True) -> jnp.ndarray:
+    """``x @ w.T`` on the simulated device (or FLOAT32 when ctx is None).
+
+    Args:
+      ctx: device context or None for the FLOAT32 twin.
+      x: (M, K) activations.
+      w: (N, K) weights (output-features-major, as stored on device).
+      pallas_ok: set False for call sites inside vmap (oracle path).
+    """
+    if ctx is None:
+        return ref.float_matmul(x, w)
+    x = bf16(x)
+    w = bf16(w)
+    m, k = x.shape
+    nn = w.shape[0]
+    t = ref.num_tiles(k, ctx.n)
+    noise = ref.sample_noise(
+        ctx.next_key(), t, m, nn, ctx.n, ctx.delta_y, ctx.noise_amp)
+    if ctx.use_pallas and pallas_ok:
+        return kabfp.abfp_matmul(x, w, noise, ctx.scalars, n=ctx.n)
+    return ref.abfp_matmul(
+        x, w, n=ctx.n, gain=ctx.gain, delta_w=ctx.delta_w,
+        delta_x=ctx.delta_x, delta_y=ctx.delta_y, noise=noise)
+
+
+def dense(ctx, x, w, b):
+    """Linear layer ``x @ w.T + b``; bias added digitally in FLOAT32."""
+    return matmul(ctx, x, w) + b
+
+
+# ------------------------------------------------------------- conv --------
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
+           padding: int = 0) -> jnp.ndarray:
+    """Extract convolution patches (the paper converts convs to tiled
+    matmuls with im2col, section V).
+
+    Args:
+      x: (B, H, W, C) input.
+    Returns:
+      (B, OH, OW, kh*kw*C) patches.
+    """
+    b, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i:i + stride * oh:stride, j:j + stride * ow:stride, :]
+            cols.append(patch)
+    return jnp.concatenate(cols, axis=-1).reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d(ctx, x, w, b, *, stride: int = 1, padding: int = 0):
+    """2-D convolution as an ABFP tiled matmul over im2col patches.
+
+    Args:
+      x: (B, H, W, Cin).
+      w: (kh, kw, Cin, Cout) weights.
+      b: (Cout,) bias.
+    """
+    kh, kw_, cin, cout = w.shape
+    patches = im2col(x, kh, kw_, stride=stride, padding=padding)
+    bsz, oh, ow, k = patches.shape
+    wmat = w.reshape(k, cout).T                     # (Cout, K) rows on device
+    out = matmul(ctx, patches.reshape(-1, k), wmat)
+    return out.reshape(bsz, oh, ow, cout) + b
+
+
+# ------------------------------------------------- digital (f32) ops -------
+
+
+def relu(x):
+    return bf16(jnp.maximum(x, 0.0))
+
+
+def gelu(x):
+    return bf16(jax.nn.gelu(x))
+
+
+def sigmoid(x):
+    return bf16(jax.nn.sigmoid(x))
+
+
+def tanh(x):
+    return bf16(jnp.tanh(x))
+
+
+def softmax(x, axis=-1):
+    return bf16(jax.nn.softmax(x, axis=axis))
+
+
+def layernorm(x, g, b, axis=-1, eps=1e-5):
+    """LayerNorm in FLOAT32 (sensitive to small+large values, section VI)."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    var = jnp.var(x, axis=axis, keepdims=True)
+    return bf16((x - mu) / jnp.sqrt(var + eps) * g + b)
+
+
+def channel_scale(x, g, b):
+    """Per-channel learned scale/shift (our BN-free normalization twin)."""
+    return bf16(x * g + b)
+
+
+def avgpool_global(x):
+    """Global average pooling over spatial dims: (B,H,W,C) -> (B,C)."""
+    return bf16(jnp.mean(x, axis=(1, 2)))
+
+
+def maxpool2(x):
+    """2x2 max pooling, stride 2."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return bf16(jnp.max(x, axis=(2, 4)))
+
+
+def upsample2(x):
+    """Nearest-neighbour 2x upsampling: (B,H,W,C) -> (B,2H,2W,C)."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def embedding(table, ids):
+    """Digital embedding lookup (data storage stays digital)."""
+    return bf16(table[ids])
+
+
+def onehot(ids, num):
+    return jax.nn.one_hot(ids, num, dtype=jnp.float32)

@@ -1,0 +1,4 @@
+"""Model registry: importing this package registers all six archetypes."""
+
+from compile.models import bert, cnn, dlrm, gru, ssd, unet  # noqa: F401
+from compile.models.common import REGISTRY, Mode, ModelDef  # noqa: F401

@@ -1,0 +1,126 @@
+"""MiniBERT — the BERT-Large/SQuAD archetype (Table I row 5).
+
+A 2-layer transformer encoder (d=256, 4 heads, FFN 512) on a synthetic
+span-extraction QA task: the answer is the unique triple-repetition of
+the query token planted in the sequence; the model predicts start/end
+positions. Metric: span F1 (SQuAD-style overlap F1).
+
+Projection GEMMs (wq/wk/wv/wo/ffn/span) run through the Pallas kernel;
+attention score/value BMMs run through the batched ABFP oracle (one
+small analog MVM per (batch x head) group — see DESIGN.md section 4).
+Wide reduction dims (256, 512) make the tile-128 regime of Table II
+meaningful.
+
+Inputs are (32,) token ids carried as float32; targets (2,) = start/end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.models import common
+from compile.models.common import Mode
+
+VOCAB = 64
+SEQ = 32
+DIM = 256
+HEADS = 4
+DHEAD = DIM // HEADS
+FFN = 512
+NLAYERS = 2
+INPUT_SHAPE = (SEQ,)
+
+
+def init(key):
+    ks = jax.random.split(key, 4 + NLAYERS * 8)
+    p = {}
+    p["emb.w"] = jax.random.normal(ks[0], (VOCAB, DIM)) * 0.05
+    p["pos.w"] = jax.random.normal(ks[1], (SEQ, DIM)) * 0.05
+    i = 2
+    for l in range(NLAYERS):
+        for nm in ("wq", "wk", "wv", "wo"):
+            p[f"l{l}.{nm}.w"] = common.glorot(ks[i], (DIM, DIM))
+            p[f"l{l}.{nm}.b"] = common.zeros((DIM,))
+            i += 1
+        p[f"l{l}.ln1.g"] = common.ones((DIM,))
+        p[f"l{l}.ln1.b"] = common.zeros((DIM,))
+        p[f"l{l}.ffn1.w"] = common.glorot(ks[i], (FFN, DIM))
+        p[f"l{l}.ffn1.b"] = common.zeros((FFN,))
+        i += 1
+        p[f"l{l}.ffn2.w"] = common.glorot(ks[i], (DIM, FFN))
+        p[f"l{l}.ffn2.b"] = common.zeros((DIM,))
+        i += 1
+        p[f"l{l}.ln2.g"] = common.ones((DIM,))
+        p[f"l{l}.ln2.b"] = common.zeros((DIM,))
+    p["span.w"] = common.glorot(ks[i], (2, DIM))
+    p["span.b"] = common.zeros((2,))
+    return p
+
+
+def _heads(v, b):
+    """(B*S, D) -> (B*H, S, Dh)."""
+    return (v.reshape(b, SEQ, HEADS, DHEAD)
+             .transpose(0, 2, 1, 3)
+             .reshape(b * HEADS, SEQ, DHEAD))
+
+
+def forward(p, x, mode: Mode):
+    """x: (B, 32) token ids -> (start_logits (B, 32), end_logits (B, 32))."""
+    ids = x.astype(jnp.int32)
+    b = ids.shape[0]
+    h = layers.embedding(p["emb.w"], ids) + p["pos.w"]      # (B, S, D)
+    h = layers.bf16(h)
+
+    for l in range(NLAYERS):
+        h2 = h.reshape(b * SEQ, DIM)
+        q = mode.dense(f"l{l}.wq", h2, p[f"l{l}.wq.w"], p[f"l{l}.wq.b"])
+        k = mode.dense(f"l{l}.wk", h2, p[f"l{l}.wk.w"], p[f"l{l}.wk.b"])
+        v = mode.dense(f"l{l}.wv", h2, p[f"l{l}.wv.w"], p[f"l{l}.wv.b"])
+        qh, kh, vh = _heads(q, b), _heads(k, b), _heads(v, b)
+        # Attention scores: one analog MVM per (batch, head) group.
+        scores = mode.bmm(f"l{l}.qk", qh, kh) / jnp.sqrt(float(DHEAD))
+        attn = layers.softmax(scores, axis=-1)              # digital
+        # Attention-weighted values: attn @ v == bmm(attn, v^T).
+        av = mode.bmm(f"l{l}.av", attn, vh.transpose(0, 2, 1))
+        av = (av.reshape(b, HEADS, SEQ, DHEAD)
+                .transpose(0, 2, 1, 3)
+                .reshape(b * SEQ, DIM))
+        o = mode.dense(f"l{l}.wo", av, p[f"l{l}.wo.w"], p[f"l{l}.wo.b"])
+        h = layers.layernorm(h + o.reshape(b, SEQ, DIM),
+                             p[f"l{l}.ln1.g"], p[f"l{l}.ln1.b"])
+        h2 = h.reshape(b * SEQ, DIM)
+        f = layers.gelu(mode.dense(f"l{l}.ffn1", h2,
+                                   p[f"l{l}.ffn1.w"], p[f"l{l}.ffn1.b"]))
+        f = mode.dense(f"l{l}.ffn2", f, p[f"l{l}.ffn2.w"], p[f"l{l}.ffn2.b"])
+        h = layers.layernorm(h + f.reshape(b, SEQ, DIM),
+                             p[f"l{l}.ln2.g"], p[f"l{l}.ln2.b"])
+
+    span = mode.dense("span", h.reshape(b * SEQ, DIM),
+                      p["span.w"], p["span.b"]).reshape(b, SEQ, 2)
+    return span[:, :, 0], span[:, :, 1]
+
+
+def loss(outputs, y):
+    """y: (B, 2) = [start, end] positions as float32."""
+    start_logits, end_logits = outputs
+    s = layers.onehot(y[:, 0].astype(jnp.int32), SEQ)
+    e = layers.onehot(y[:, 1].astype(jnp.int32), SEQ)
+    ls = -jnp.mean(jnp.sum(s * jax.nn.log_softmax(start_logits), axis=-1))
+    le = -jnp.mean(jnp.sum(e * jax.nn.log_softmax(end_logits), axis=-1))
+    return 0.5 * (ls + le)
+
+
+MODEL = common.register(common.ModelDef(
+    name="bert",
+    init=init,
+    forward=forward,
+    loss=loss,
+    input_shape=INPUT_SHAPE,
+    target_shape=(2,),
+    batch_eval=16,
+    batch_train=16,
+    metric="span_f1",
+    optimizer="adamw",
+))

@@ -1,0 +1,100 @@
+"""MiniCNN — the ResNet50/ImageNet archetype (Table I row 1).
+
+A BN-free residual CNN classifying 16x16x3 synthetic grating images into
+10 orientation classes. Convolutions run as ABFP tiled matmuls over
+im2col patches (paper section V); per-channel scale/shift replaces
+batch-norm (the paper reports BN folding makes no significant difference).
+
+Reduction dims reach 288 (3x3x32 conv) and 256 (fc), so tile widths
+{8, 32, 128} all exercise multi-tile accumulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.models import common
+from compile.models.common import Mode
+
+NUM_CLASSES = 10
+INPUT_SHAPE = (16, 16, 3)
+
+
+def init(key):
+    ks = jax.random.split(key, 16)
+    p = {}
+    p["c1.w"] = common.conv_init(ks[0], 3, 3, 3, 16)
+    p["c1.b"] = common.zeros((16,))
+    p["n1.g"], p["n1.b"] = common.ones((16,)), common.zeros((16,))
+    # Residual block 1 (16 -> 16).
+    p["b1c1.w"] = common.conv_init(ks[1], 3, 3, 16, 16)
+    p["b1c1.b"] = common.zeros((16,))
+    p["b1n.g"], p["b1n.b"] = common.ones((16,)), common.zeros((16,))
+    p["b1c2.w"] = common.conv_init(ks[2], 3, 3, 16, 16)
+    p["b1c2.b"] = common.zeros((16,))
+    # Downsample (16 -> 32, stride 2).
+    p["d1.w"] = common.conv_init(ks[3], 3, 3, 16, 32)
+    p["d1.b"] = common.zeros((32,))
+    p["d1n.g"], p["d1n.b"] = common.ones((32,)), common.zeros((32,))
+    # Residual block 2 (32 -> 32).
+    p["b2c1.w"] = common.conv_init(ks[4], 3, 3, 32, 32)
+    p["b2c1.b"] = common.zeros((32,))
+    p["b2n.g"], p["b2n.b"] = common.ones((32,)), common.zeros((32,))
+    p["b2c2.w"] = common.conv_init(ks[5], 3, 3, 32, 32)
+    p["b2c2.b"] = common.zeros((32,))
+    # Classifier head.
+    p["fc1.w"] = common.glorot(ks[6], (256, 32))
+    p["fc1.b"] = common.zeros((256,))
+    p["fc2.w"] = common.glorot(ks[7], (NUM_CLASSES, 256))
+    p["fc2.b"] = common.zeros((NUM_CLASSES,))
+    return p
+
+
+def forward(p, x, mode: Mode):
+    """x: (B, 16, 16, 3) -> (logits (B, 10),)."""
+    h = mode.conv2d("c1", x, p["c1.w"], p["c1.b"], padding=1)
+    h = layers.relu(layers.channel_scale(h, p["n1.g"], p["n1.b"]))
+
+    skip = h
+    h = mode.conv2d("b1c1", h, p["b1c1.w"], p["b1c1.b"], padding=1)
+    h = layers.relu(layers.channel_scale(h, p["b1n.g"], p["b1n.b"]))
+    h = mode.conv2d("b1c2", h, p["b1c2.w"], p["b1c2.b"], padding=1)
+    h = layers.relu(h + skip)
+
+    h = mode.conv2d("d1", h, p["d1.w"], p["d1.b"], stride=2, padding=1)
+    h = layers.relu(layers.channel_scale(h, p["d1n.g"], p["d1n.b"]))
+
+    skip = h
+    h = mode.conv2d("b2c1", h, p["b2c1.w"], p["b2c1.b"], padding=1)
+    h = layers.relu(layers.channel_scale(h, p["b2n.g"], p["b2n.b"]))
+    h = mode.conv2d("b2c2", h, p["b2c2.w"], p["b2c2.b"], padding=1)
+    h = layers.relu(h + skip)
+
+    h = layers.avgpool_global(h)                       # (B, 32)
+    h = layers.relu(mode.dense("fc1", h, p["fc1.w"], p["fc1.b"]))
+    logits = mode.dense("fc2", h, p["fc2.w"], p["fc2.b"])
+    return (logits,)
+
+
+def loss(outputs, y):
+    """Cross-entropy; y: (B,) class ids carried as float32."""
+    (logits,) = outputs
+    labels = layers.onehot(y.astype(jnp.int32), NUM_CLASSES)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels * logp, axis=-1))
+
+
+MODEL = common.register(common.ModelDef(
+    name="cnn",
+    init=init,
+    forward=forward,
+    loss=loss,
+    input_shape=INPUT_SHAPE,
+    target_shape=(),
+    batch_eval=32,
+    batch_train=32,
+    metric="top1",
+    optimizer="adamw",
+))

@@ -1,0 +1,190 @@
+"""Shared model machinery: execution modes, parameter handling, registry.
+
+Every model implements one ``forward(params, x, mode)`` and the
+:class:`Mode` object decides what each matmul-bearing layer does:
+
+  * ``f32``   — FLOAT32 digital twin (the paper's baseline).
+  * ``abfp``  — full ABFP device simulation (Eq. 1-7), via Pallas/oracle.
+  * ``qat``   — ABFP forward with Straight-Through-Estimator gradients:
+                ``y = f32 + stop_grad(abfp - f32)`` so the backward pass
+                sees the FLOAT32 matmul (Eq. 8).
+  * ``calib`` — run f32 AND abfp from the *same* f32 input per layer and
+                record the differential noise ``dy^l = abfp - f32``
+                (Fig. 3, step 1); forward continues on the f32 path.
+  * ``dnf``   — FLOAT32 forward plus externally sampled differential noise
+                ``xi^l`` added at each tap (Eq. 9); Rust samples ``xi``
+                from the calibration histograms.
+
+This single-code-path design guarantees all five behaviours stay in sync
+as models evolve, and pins the tap points (one per device matmul).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.kernels import ref
+from compile.layers import AbfpCtx
+
+
+@dataclasses.dataclass
+class Mode:
+    """Per-forward execution mode; records taps and consumes DNF noise."""
+
+    kind: str                        # f32 | abfp | qat | calib | dnf
+    ctx: Optional[AbfpCtx] = None    # device context (abfp/qat/calib)
+    xi: Optional[list] = None        # DNF noise tensors, consumed in order
+    diffs: list = dataclasses.field(default_factory=list)
+    tap_shapes: list = dataclasses.field(default_factory=list)
+    _xi_idx: int = 0
+
+    def mm(self, name: str, x: jnp.ndarray, w: jnp.ndarray,
+           *, pallas_ok: bool = True) -> jnp.ndarray:
+        """Device matmul ``x @ w.T`` under this mode; the DNF tap point."""
+        self.tap_shapes.append((name, tuple(x.shape[:-1]) + (w.shape[0],)))
+        if self.kind == "f32":
+            return ref.float_matmul(x, w)
+        if self.kind == "abfp":
+            return layers.matmul(self.ctx, x, w, pallas_ok=pallas_ok)
+        if self.kind == "qat":
+            # STE (Eq. 8): forward value is the ABFP result, gradients see
+            # the FLOAT32 matmul. Gradients are severed at the device
+            # inputs so linearization never enters the Pallas call.
+            f = ref.float_matmul(x, w)
+            a = layers.matmul(self.ctx, jax.lax.stop_gradient(x),
+                              jax.lax.stop_gradient(w), pallas_ok=pallas_ok)
+            return f + jax.lax.stop_gradient(a - f)
+        if self.kind == "calib":
+            f = ref.float_matmul(x, w)
+            a = layers.matmul(self.ctx, x, w, pallas_ok=pallas_ok)
+            self.diffs.append((name, a - f))
+            return f
+        if self.kind == "dnf":
+            f = ref.float_matmul(x, w)
+            xi = self.xi[self._xi_idx]
+            self._xi_idx += 1
+            return f + xi.reshape(f.shape)
+        raise ValueError(self.kind)
+
+    def bmm(self, name: str, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """Batched device matmul ``x[g] @ w[g].T`` (attention groups).
+
+        Attention BMMs are device matmuls too, but they are *activation x
+        activation* products — no weight tensor — so they are not DNF tap
+        points (DNF taps follow the paper: layer outputs of weight-bearing
+        layers).
+        """
+        if self.kind in ("f32", "dnf"):
+            return jnp.einsum("gmk,gnk->gmn", x, w,
+                              precision=jax.lax.Precision.HIGHEST)
+        ctx = self.ctx
+        g, m, k = x.shape
+        nn = w.shape[1]
+        t = ref.num_tiles(k, ctx.n)
+        key = ctx.next_key()
+        u = jax.random.uniform(key, (g, t, m, nn), minval=-1.0, maxval=1.0)
+        noise = u * (ctx.noise_amp * ctx.n * ctx.delta_y)
+        xd, wd = x, w
+        if self.kind == "qat":
+            xd = jax.lax.stop_gradient(x)
+            wd = jax.lax.stop_gradient(w)
+        out = ref.abfp_bmm(
+            layers.bf16(xd), layers.bf16(wd), n=ctx.n, gain=ctx.gain,
+            delta_w=ctx.delta_w, delta_x=ctx.delta_x, delta_y=ctx.delta_y,
+            noise=noise)
+        if self.kind == "qat":
+            f = jnp.einsum("gmk,gnk->gmn", x, w,
+                           precision=jax.lax.Precision.HIGHEST)
+            return f + jax.lax.stop_gradient(out - f)
+        return out
+
+    def dense(self, name, x, w, b, *, pallas_ok=True):
+        return self.mm(name, x, w, pallas_ok=pallas_ok) + b
+
+    def conv2d(self, name, x, w, b, *, stride=1, padding=0):
+        kh, kw_, cin, cout = w.shape
+        patches = layers.im2col(x, kh, kw_, stride=stride, padding=padding)
+        bsz, oh, ow, k = patches.shape
+        wmat = w.reshape(k, cout).T
+        out = self.mm(name, patches.reshape(-1, k), wmat)
+        return out.reshape(bsz, oh, ow, cout) + b
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """A registered model archetype."""
+
+    name: str
+    init: Callable            # (key) -> params dict (ordered)
+    forward: Callable         # (params, x, mode) -> outputs tuple
+    loss: Callable            # (outputs, y) -> scalar loss
+    input_shape: tuple        # per-example input shape (f32 encoding)
+    target_shape: tuple       # per-example target shape (f32 encoding)
+    batch_eval: int           # eval artifact batch size
+    batch_train: int          # train artifact batch size
+    metric: str               # rust-side metric id
+    optimizer: str = "adamw"  # finetune optimizer (paper: sgd for ssd)
+
+
+REGISTRY: dict[str, ModelDef] = {}
+
+
+def register(model: ModelDef) -> ModelDef:
+    REGISTRY[model.name] = model
+    return model
+
+
+def param_names(params: dict) -> list[str]:
+    """Stable flattening order (dict insertion order from init)."""
+    return list(params.keys())
+
+
+def flatten(params: dict) -> list[jnp.ndarray]:
+    return [params[k] for k in param_names(params)]
+
+
+def unflatten(names: list[str], flat) -> dict:
+    return dict(zip(names, flat))
+
+
+def tap_index(model: ModelDef, batch: int, n: int = 8) -> list:
+    """Trace the forward once to enumerate DNF tap names and shapes."""
+    params = model.init(jax.random.PRNGKey(0))
+    mode = Mode("f32")
+    x = jnp.zeros((batch,) + model.input_shape, jnp.float32)
+    jax.eval_shape(lambda p, xx: model.forward(p, xx, mode), params, x)
+    return mode.tap_shapes
+
+
+# -------------------------------------------------------- initializers -----
+
+
+def glorot(key, shape, fan_in=None, fan_out=None):
+    """Glorot/Xavier uniform init."""
+    if fan_in is None:
+        fan_in = shape[-1] if len(shape) > 1 else shape[0]
+    if fan_out is None:
+        fan_out = shape[0] if len(shape) > 1 else shape[0]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, minval=-lim, maxval=lim,
+                              dtype=jnp.float32)
+
+
+def conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    lim = jnp.sqrt(6.0 / (fan_in + cout))
+    return jax.random.uniform(key, (kh, kw, cin, cout), minval=-lim,
+                              maxval=lim, dtype=jnp.float32)
+
+
+def zeros(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def ones(shape):
+    return jnp.ones(shape, jnp.float32)

@@ -1,0 +1,86 @@
+"""MiniDLRM — the DLRM/Click-Logs archetype (Table I row 6).
+
+Embeddings + bottom MLP + pairwise-dot feature interaction + top MLP on
+synthetic CTR data from a fixed random teacher. Two output classes make
+this the paper's most ABFP-robust model (Table II bottom). Metric:
+ROC AUC.
+
+Inputs are (12,) float32: 8 dense features followed by 4 categorical
+ids; targets are scalar click labels in {0, 1}.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.models import common
+from compile.models.common import Mode
+
+NUM_DENSE = 8
+NUM_CAT = 4
+CAT_VOCAB = 32
+EMBED = 32
+INPUT_SHAPE = (NUM_DENSE + NUM_CAT,)
+
+
+def init(key):
+    ks = jax.random.split(key, 10)
+    p = {}
+    for i in range(NUM_CAT):
+        p[f"emb{i}.w"] = jax.random.normal(ks[i], (CAT_VOCAB, EMBED)) * 0.1
+    p["bot1.w"] = common.glorot(ks[4], (64, NUM_DENSE))
+    p["bot1.b"] = common.zeros((64,))
+    p["bot2.w"] = common.glorot(ks[5], (EMBED, 64))
+    p["bot2.b"] = common.zeros((EMBED,))
+    # interaction: 5 feature vectors -> C(5,2)=10 dots, concat with bottom.
+    p["top1.w"] = common.glorot(ks[6], (256, EMBED + 10))
+    p["top1.b"] = common.zeros((256,))
+    p["top2.w"] = common.glorot(ks[7], (128, 256))
+    p["top2.b"] = common.zeros((128,))
+    p["top3.w"] = common.glorot(ks[8], (1, 128))
+    p["top3.b"] = common.zeros((1,))
+    return p
+
+
+def forward(p, x, mode: Mode):
+    """x: (B, 12) -> (click logit (B,),)."""
+    dense = x[:, :NUM_DENSE]
+    cats = x[:, NUM_DENSE:].astype(jnp.int32)          # (B, 4)
+    h = layers.relu(mode.dense("bot1", dense, p["bot1.w"], p["bot1.b"]))
+    bot = layers.relu(mode.dense("bot2", h, p["bot2.w"], p["bot2.b"]))
+    feats = [bot] + [layers.embedding(p[f"emb{i}.w"], cats[:, i])
+                     for i in range(NUM_CAT)]          # 5 x (B, 32)
+    f = jnp.stack(feats, axis=1)                       # (B, 5, 32)
+    # Pairwise dot interactions (digital — tiny reduction, like DLRM's
+    # interaction op which is memory-bound, not MVM-bound).
+    gram = jnp.einsum("bie,bje->bij", f, f)
+    iu, ju = jnp.triu_indices(5, k=1)
+    inter = gram[:, iu, ju]                            # (B, 10)
+    z = jnp.concatenate([bot, layers.bf16(inter)], axis=-1)
+    z = layers.relu(mode.dense("top1", z, p["top1.w"], p["top1.b"]))
+    z = layers.relu(mode.dense("top2", z, p["top2.w"], p["top2.b"]))
+    logit = mode.dense("top3", z, p["top3.w"], p["top3.b"])[:, 0]
+    return (logit,)
+
+
+def loss(outputs, y):
+    """Binary cross-entropy from logits; y: (B,) in {0,1}."""
+    (logit,) = outputs
+    return jnp.mean(jnp.maximum(logit, 0.0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+MODEL = common.register(common.ModelDef(
+    name="dlrm",
+    init=init,
+    forward=forward,
+    loss=loss,
+    input_shape=INPUT_SHAPE,
+    target_shape=(),
+    batch_eval=64,
+    batch_train=64,
+    metric="auc",
+    optimizer="adamw",
+))

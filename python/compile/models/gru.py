@@ -1,0 +1,99 @@
+"""MiniGRU — the RNN-T/Librispeech archetype (Table I row 4).
+
+A GRU sequence classifier over synthetic motif sequences (vocab 16,
+length 24, 12 motif classes). Recurrence makes quantization error
+*accumulate across timesteps*, the mechanism behind RNN-T's collapse at
+tile 128 / low gain in Table II. Metric: accuracy (the 1-WER analogue).
+
+Device noise keys are split per timestep outside the scan so each step
+sees independent ADC noise (DESIGN.md section 6).
+
+Inputs are (24,) token ids carried as float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.models import common
+from compile.models.common import Mode
+
+VOCAB = 16
+EMBED = 32
+HIDDEN = 128
+SEQ = 24
+NUM_CLASSES = 12
+INPUT_SHAPE = (SEQ,)
+
+
+def init(key):
+    ks = jax.random.split(key, 6)
+    p = {}
+    p["emb.w"] = jax.random.normal(ks[0], (VOCAB, EMBED)) * 0.1
+    p["ih.w"] = common.glorot(ks[1], (3 * HIDDEN, EMBED))
+    p["ih.b"] = common.zeros((3 * HIDDEN,))
+    p["hh.w"] = common.glorot(ks[2], (3 * HIDDEN, HIDDEN))
+    p["hh.b"] = common.zeros((3 * HIDDEN,))
+    p["fc.w"] = common.glorot(ks[3], (NUM_CLASSES, HIDDEN))
+    p["fc.b"] = common.zeros((NUM_CLASSES,))
+    return p
+
+
+def forward(p, x, mode: Mode):
+    """x: (B, 24) token ids as float32 -> (logits (B, 12),)."""
+    ids = x.astype(jnp.int32)
+    emb = layers.embedding(p["emb.w"], ids)            # (B, T, E)
+    b = emb.shape[0]
+    h0 = jnp.zeros((b, HIDDEN), jnp.float32)
+
+    ctx = mode.ctx
+    if ctx is not None:
+        step_keys = jax.random.split(ctx.next_key(), SEQ)
+        saved_key, saved_counter = ctx.key, ctx.counter
+    else:
+        step_keys = jnp.zeros((SEQ, 2), jnp.uint32)
+
+    def cell(h, inputs):
+        xt, key_t = inputs
+        if ctx is not None:
+            ctx.key = key_t                     # per-step device noise
+            ctx.counter = 0
+        gx = mode.dense("ih", xt, p["ih.w"], p["ih.b"])    # (B, 3H)
+        gh = mode.dense("hh", h, p["hh.w"], p["hh.b"])     # (B, 3H)
+        rx, zx, nx = jnp.split(gx, 3, axis=-1)
+        rh, zh, nh = jnp.split(gh, 3, axis=-1)
+        r = layers.sigmoid(rx + rh)
+        z = layers.sigmoid(zx + zh)
+        n = layers.tanh(nx + r * nh)
+        h_new = (1.0 - z) * n + z * h
+        return layers.bf16(h_new), None
+
+    hT, _ = jax.lax.scan(cell, h0, (emb.transpose(1, 0, 2), step_keys))
+    if ctx is not None:
+        # Restore the pre-scan key: the per-step tracer must not escape.
+        ctx.key, ctx.counter = saved_key, saved_counter
+    logits = mode.dense("fc", hT, p["fc.w"], p["fc.b"])
+    return (logits,)
+
+
+def loss(outputs, y):
+    (logits,) = outputs
+    labels = layers.onehot(y.astype(jnp.int32), NUM_CLASSES)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels * logp, axis=-1))
+
+
+MODEL = common.register(common.ModelDef(
+    name="gru",
+    init=init,
+    forward=forward,
+    loss=loss,
+    input_shape=INPUT_SHAPE,
+    target_shape=(),
+    batch_eval=32,
+    batch_train=32,
+    metric="top1",
+    optimizer="adamw",
+))

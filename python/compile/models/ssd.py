@@ -1,0 +1,90 @@
+"""MiniSSD — the SSD-ResNet34/COCO archetype (Table I row 2).
+
+Single-object detection on 24x24x3 synthetic scenes: a strided conv
+backbone feeding separate *localization* (box regression) and
+*confidence* (classification) heads, the structure whose first/last
+layers the paper finds most noise-sensitive (Fig. 5). Metric is a
+detection score = classification accuracy x mean IoU (the mAP analogue
+for the one-object case).
+
+Targets are encoded per example as (5,) float32: [class, cx, cy, w, h]
+with box coordinates normalized to [0, 1].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.models import common
+from compile.models.common import Mode
+
+NUM_CLASSES = 4
+INPUT_SHAPE = (24, 24, 3)
+
+
+def init(key):
+    ks = jax.random.split(key, 10)
+    p = {}
+    p["c1.w"] = common.conv_init(ks[0], 3, 3, 3, 16)
+    p["c1.b"] = common.zeros((16,))
+    p["n1.g"], p["n1.b"] = common.ones((16,)), common.zeros((16,))
+    p["c2.w"] = common.conv_init(ks[1], 3, 3, 16, 32)
+    p["c2.b"] = common.zeros((32,))
+    p["n2.g"], p["n2.b"] = common.ones((32,)), common.zeros((32,))
+    p["c3.w"] = common.conv_init(ks[2], 3, 3, 32, 64)
+    p["c3.b"] = common.zeros((64,))
+    p["n3.g"], p["n3.b"] = common.ones((64,)), common.zeros((64,))
+    p["feat.w"] = common.glorot(ks[3], (256, 3 * 3 * 64))
+    p["feat.b"] = common.zeros((256,))
+    p["conf.w"] = common.glorot(ks[4], (NUM_CLASSES, 256))
+    p["conf.b"] = common.zeros((NUM_CLASSES,))
+    p["loc.w"] = common.glorot(ks[5], (4, 256))
+    p["loc.b"] = common.zeros((4,))
+    return p
+
+
+def forward(p, x, mode: Mode):
+    """x: (B, 24, 24, 3) -> (conf_logits (B, 4), box (B, 4) in [0,1])."""
+    h = mode.conv2d("c1", x, p["c1.w"], p["c1.b"], stride=2, padding=1)
+    h = layers.relu(layers.channel_scale(h, p["n1.g"], p["n1.b"]))
+    h = mode.conv2d("c2", h, p["c2.w"], p["c2.b"], stride=2, padding=1)
+    h = layers.relu(layers.channel_scale(h, p["n2.g"], p["n2.b"]))
+    h = mode.conv2d("c3", h, p["c3.w"], p["c3.b"], stride=2, padding=1)
+    h = layers.relu(layers.channel_scale(h, p["n3.g"], p["n3.b"]))
+    h = h.reshape(h.shape[0], -1)                      # (B, 576)
+    h = layers.relu(mode.dense("feat", h, p["feat.w"], p["feat.b"]))
+    conf = mode.dense("conf", h, p["conf.w"], p["conf.b"])
+    box = layers.sigmoid(mode.dense("loc", h, p["loc.w"], p["loc.b"]))
+    return conf, box
+
+
+def smooth_l1(pred, target):
+    d = jnp.abs(pred - target)
+    return jnp.where(d < 1.0, 0.5 * d * d, d - 0.5)
+
+
+def loss(outputs, y):
+    """y: (B, 5) = [class, cx, cy, w, h]."""
+    conf, box = outputs
+    cls = y[:, 0].astype(jnp.int32)
+    labels = layers.onehot(cls, NUM_CLASSES)
+    logp = jax.nn.log_softmax(conf, axis=-1)
+    ce = -jnp.mean(jnp.sum(labels * logp, axis=-1))
+    loc = jnp.mean(jnp.sum(smooth_l1(box, y[:, 1:5]), axis=-1))
+    return ce + 2.0 * loc
+
+
+MODEL = common.register(common.ModelDef(
+    name="ssd",
+    init=init,
+    forward=forward,
+    loss=loss,
+    input_shape=INPUT_SHAPE,
+    target_shape=(5,),
+    batch_eval=32,
+    batch_train=24,
+    metric="detection",
+    optimizer="sgd",
+))

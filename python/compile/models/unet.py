@@ -1,0 +1,75 @@
+"""MiniUNet — the 3D U-Net/BraTS archetype (Table I row 3).
+
+A 2-D encoder-decoder with a skip connection segmenting synthetic
+Gaussian-blob images into {background, foreground}. Two output classes,
+which the paper identifies as the robust regime under ABFP (section VI).
+Metric: mean Dice / mean accuracy over classes.
+
+Targets are (16, 16) float32 binary masks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers
+from compile.models import common
+from compile.models.common import Mode
+
+NUM_CLASSES = 2
+INPUT_SHAPE = (16, 16, 1)
+
+
+def init(key):
+    ks = jax.random.split(key, 8)
+    p = {}
+    p["e1a.w"] = common.conv_init(ks[0], 3, 3, 1, 16)
+    p["e1a.b"] = common.zeros((16,))
+    p["e1b.w"] = common.conv_init(ks[1], 3, 3, 16, 16)
+    p["e1b.b"] = common.zeros((16,))
+    p["e2.w"] = common.conv_init(ks[2], 3, 3, 16, 32)
+    p["e2.b"] = common.zeros((32,))
+    p["bott.w"] = common.conv_init(ks[3], 3, 3, 32, 32)
+    p["bott.b"] = common.zeros((32,))
+    p["d1.w"] = common.conv_init(ks[4], 3, 3, 48, 16)   # concat(up32, skip16)
+    p["d1.b"] = common.zeros((16,))
+    p["out.w"] = common.conv_init(ks[5], 1, 1, 16, NUM_CLASSES)
+    p["out.b"] = common.zeros((NUM_CLASSES,))
+    return p
+
+
+def forward(p, x, mode: Mode):
+    """x: (B, 16, 16, 1) -> (per-pixel logits (B, 16, 16, 2),)."""
+    e1 = layers.relu(mode.conv2d("e1a", x, p["e1a.w"], p["e1a.b"], padding=1))
+    e1 = layers.relu(mode.conv2d("e1b", e1, p["e1b.w"], p["e1b.b"], padding=1))
+    h = layers.maxpool2(e1)                             # (B, 8, 8, 16)
+    h = layers.relu(mode.conv2d("e2", h, p["e2.w"], p["e2.b"], padding=1))
+    h = layers.relu(mode.conv2d("bott", h, p["bott.w"], p["bott.b"], padding=1))
+    h = layers.upsample2(h)                             # (B, 16, 16, 32)
+    h = jnp.concatenate([h, e1], axis=-1)               # (B, 16, 16, 48)
+    h = layers.relu(mode.conv2d("d1", h, p["d1.w"], p["d1.b"], padding=1))
+    logits = mode.conv2d("out", h, p["out.w"], p["out.b"])
+    return (logits,)
+
+
+def loss(outputs, y):
+    """Per-pixel cross-entropy; y: (B, 16, 16) binary mask as float32."""
+    (logits,) = outputs
+    labels = layers.onehot(y.astype(jnp.int32), NUM_CLASSES)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(labels * logp, axis=-1))
+
+
+MODEL = common.register(common.ModelDef(
+    name="unet",
+    init=init,
+    forward=forward,
+    loss=loss,
+    input_shape=INPUT_SHAPE,
+    target_shape=(16, 16),
+    batch_eval=32,
+    batch_train=32,
+    metric="dice",
+    optimizer="adamw",
+))

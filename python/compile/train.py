@@ -1,0 +1,141 @@
+"""Build-time training graphs: losses are model-owned; this module owns
+optimizers (hand-rolled AdamW and SGD-momentum — no optax at build time)
+and the three train-step builders the paper needs:
+
+  * ``f32``  — standard FLOAT32 pretraining (produces the "pre-trained
+               checkpoint" that the paper downloads; we train in-repo).
+  * ``qat``  — Quantization-Aware Training (section IV-A): full ABFP
+               simulation in the forward pass, STE gradients (Eq. 8),
+               FLOAT32 accumulation in the backward pass.
+  * ``dnf``  — Differential Noise Finetuning (section IV-B): FLOAT32
+               forward plus per-layer noise tensors sampled (by the Rust
+               coordinator) from the calibration histograms (Eq. 9).
+
+Every step function is pure and flat-argument so it AOT-lowers to a
+single HLO artifact the Rust trainer drives: params and optimizer state
+stream through as device literals; the learning rate is a runtime scalar
+(schedules live in Rust).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.layers import AbfpCtx
+from compile.models import common
+from compile.models.common import Mode, ModelDef
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+ADAM_WD = 0.01
+SGD_MOMENTUM = 0.728      # paper section V-B (SSD finetuning)
+SGD_WD = 5e-4
+
+
+def adamw_update(params: Sequence, grads, m, v, step, lr):
+    """One AdamW step (Loshchilov & Hutter); step is 1-based after incr."""
+    step = step + 1.0
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + ADAM_WD * p)
+        new_p.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, step
+
+
+def sgd_update(params: Sequence, grads, mom, unused_v, step, lr):
+    """SGD with momentum + weight decay (paper's SSD recipe).
+
+    The unused second state slot keeps the artifact signature identical
+    to AdamW so the Rust trainer is optimizer-agnostic.
+    """
+    step = step + 1.0
+    new_p, new_m = [], []
+    for p, g, mi in zip(params, grads, mom):
+        g = g + SGD_WD * p
+        mi = SGD_MOMENTUM * mi + g
+        p = p - lr * mi
+        new_p.append(p)
+        new_m.append(mi)
+    return new_p, new_m, list(unused_v), step
+
+
+def _loss_fn(model: ModelDef, names, mode_kind, ctx=None, xi=None):
+    def fn(flat_params, x, y):
+        params = common.unflatten(names, flat_params)
+        mode = Mode(mode_kind, ctx=ctx, xi=xi)
+        outputs = model.forward(params, x, mode)
+        return model.loss(outputs, y)
+    return fn
+
+
+def make_train_step(model: ModelDef, names, kind: str, n: int | None = None):
+    """Build the flat train-step function for AOT lowering.
+
+    Flat signature (P = number of param tensors, L = number of DNF taps):
+      f32: (p_0..p_P, m_0.., v_0.., step, x, y, lr)
+      qat: (...same..., key, scalars4, noise_amp)
+      dnf: (...same..., xi_0..xi_L)
+    Returns (new params, new m, new v, new step, loss).
+    """
+    update = adamw_update if model.optimizer == "adamw" else sgd_update
+    num_p = len(names)
+
+    def split_state(args):
+        params = list(args[:num_p])
+        m = list(args[num_p:2 * num_p])
+        v = list(args[2 * num_p:3 * num_p])
+        step = args[3 * num_p]
+        rest = args[3 * num_p + 1:]
+        return params, m, v, step, rest
+
+    if kind == "f32":
+        # Pretraining always uses AdamW: the paper's SGD recipe applies to
+        # SSD *finetuning* (section V-B), not to producing the checkpoint
+        # (plain SGD at finetune-scale lrs cannot train the mini SSD from
+        # scratch — verified empirically, see DESIGN.md).
+        def step_fn(*args):
+            params, m, v, step, (x, y, lr) = split_state(args)
+            loss, grads = jax.value_and_grad(
+                _loss_fn(model, names, "f32"))(params, x, y)
+            params, m, v, step = adamw_update(params, grads, m, v, step, lr)
+            return tuple(params + m + v + [step, loss])
+        return step_fn
+
+    if kind == "qat":
+        assert n is not None
+
+        def step_fn(*args):
+            params, m, v, step, (x, y, lr, key, scalars, amp) = \
+                split_state(args)
+            ctx = AbfpCtx(n=n, scalars=scalars, noise_amp=amp,
+                          key=jax.random.wrap_key_data(key), use_pallas=True)
+            loss, grads = jax.value_and_grad(
+                _loss_fn(model, names, "qat", ctx=ctx))(params, x, y)
+            params, m, v, step = update(params, grads, m, v, step, lr)
+            return tuple(params + m + v + [step, loss])
+        return step_fn
+
+    if kind == "dnf":
+        def step_fn(*args):
+            params, m, v, step, rest = split_state(args)
+            x, y, lr = rest[0], rest[1], rest[2]
+            xi = list(rest[3:])
+            loss, grads = jax.value_and_grad(
+                _loss_fn(model, names, "dnf", xi=xi))(params, x, y)
+            params, m, v, step = update(params, grads, m, v, step, lr)
+            return tuple(params + m + v + [step, loss])
+        return step_fn
+
+    raise ValueError(kind)

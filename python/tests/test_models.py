@@ -1,0 +1,216 @@
+"""L2 coverage: the six archetypes across all five execution modes,
+training-step semantics (AdamW/SGD, STE), and the bmm oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train
+from compile.kernels import abfp as kabfp
+from compile.kernels import ref
+from compile.layers import AbfpCtx
+from compile.models import REGISTRY, Mode
+from compile.models import common
+
+jax.config.update("jax_platform_name", "cpu")
+
+B = 2
+
+
+def ctx(n=32, gain=2.0, bits=(8, 8, 8), amp=0.5, seed=1, use_pallas=False):
+    return AbfpCtx(
+        n=n,
+        scalars=kabfp.make_scalars(gain, *bits),
+        noise_amp=jnp.float32(amp),
+        key=jax.random.PRNGKey(seed),
+        use_pallas=use_pallas,
+    )
+
+
+def batch_for(model):
+    kx = jax.random.PRNGKey(3)
+    if model.name in ("gru", "bert"):
+        x = jax.random.randint(kx, (B,) + model.input_shape, 0, 12).astype(jnp.float32)
+    else:
+        x = jax.random.normal(kx, (B,) + model.input_shape)
+    y = jnp.zeros((B,) + model.target_shape, jnp.float32)
+    return x, y
+
+
+# The abfp-mode compiles are expensive on small CI boxes; the full
+# six-model matrix runs in the Rust integration tests (which reuse the
+# AOT artifacts), so the per-model python matrix covers a spread of
+# architectures: conv (cnn), recurrence (gru), embeddings+MLP (dlrm).
+FAST_SET = ["cnn", "gru", "dlrm"]
+
+
+@pytest.mark.parametrize("name", FAST_SET)
+class TestAllModels:
+    def test_f32_and_abfp_shapes_agree(self, name):
+        model = REGISTRY[name]
+        params = model.init(jax.random.PRNGKey(0))
+        x, _ = batch_for(model)
+        out_f = model.forward(params, x, Mode("f32"))
+        out_a = model.forward(params, x, Mode("abfp", ctx=ctx()))
+        assert len(out_f) == len(out_a)
+        for a, b in zip(out_f, out_a):
+            assert a.shape == b.shape
+            assert bool(jnp.isfinite(b).all())
+
+    def test_abfp_converges_to_f32_at_high_precision(self, name):
+        # With 14/14/20 bits, tiny tiles and no noise, ABFP ~= FLOAT32.
+        model = REGISTRY[name]
+        params = model.init(jax.random.PRNGKey(0))
+        x, _ = batch_for(model)
+        out_f = model.forward(params, x, Mode("f32"))
+        hp = ctx(n=8, gain=1.0, bits=(14, 14, 20), amp=0.0)
+        out_a = model.forward(params, x, Mode("abfp", ctx=hp))
+        for a, b in zip(out_f, out_a):
+            np.testing.assert_allclose(
+                np.asarray(b), np.asarray(a), rtol=0.1, atol=0.15)
+
+    def test_loss_is_finite_scalar(self, name):
+        model = REGISTRY[name]
+        params = model.init(jax.random.PRNGKey(0))
+        x, y = batch_for(model)
+        loss = model.loss(model.forward(params, x, Mode("f32")), y)
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss))
+
+
+def test_loss_finite_for_all_six_models():
+    # Cheap f32-only check that covers the models outside FAST_SET.
+    for model in REGISTRY.values():
+        params = model.init(jax.random.PRNGKey(0))
+        x, y = batch_for(model)
+        loss = model.loss(model.forward(params, x, Mode("f32")), y)
+        assert loss.shape == () and bool(jnp.isfinite(loss)), model.name
+
+    def test_taps_stable_across_modes(self, name):
+        model = REGISTRY[name]
+        taps = common.tap_index(model, B)
+        assert len(taps) > 0
+        # Same tap count when traced in dnf mode with matching xi.
+        params = model.init(jax.random.PRNGKey(0))
+        x, _ = batch_for(model)
+        xi = [jnp.zeros(s, jnp.float32) for _, s in taps]
+        out = model.forward(params, x, Mode("dnf", xi=xi))
+        assert all(bool(jnp.isfinite(o).all()) for o in out)
+
+
+class TestTrainSteps:
+    def test_f32_step_decreases_loss_eventually(self):
+        model = REGISTRY["dlrm"]
+        params = model.init(jax.random.PRNGKey(0))
+        names = common.param_names(params)
+        step = jax.jit(train.make_train_step(model, names, "f32"))
+        kx, ky = jax.random.split(jax.random.PRNGKey(1))
+        x = jax.random.normal(kx, (8,) + model.input_shape)
+        x = x.at[:, 8:].set(jnp.abs(x[:, 8:]) % 32 // 1)
+        y = (jax.random.uniform(ky, (8,)) > 0.5).astype(jnp.float32)
+        flat = common.flatten(params)
+        m = [jnp.zeros_like(p) for p in flat]
+        v = [jnp.zeros_like(p) for p in flat]
+        st = jnp.float32(0)
+        losses = []
+        for _ in range(30):
+            out = step(*flat, *m, *v, st, x, y, jnp.float32(1e-2))
+            p = len(flat)
+            flat = list(out[:p])
+            m = list(out[p:2 * p])
+            v = list(out[2 * p:3 * p])
+            st = out[3 * p]
+            losses.append(float(out[-1]))
+        assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+        assert float(st) == 30.0
+
+    def test_qat_ste_gradients_match_f32_path_when_exact(self):
+        # At very high precision the STE forward equals f32, so the QAT
+        # step must produce (nearly) the same parameter update.
+        model = REGISTRY["dlrm"]
+        params = model.init(jax.random.PRNGKey(0))
+        names = common.param_names(params)
+        x, y = batch_for(model)
+        flat = common.flatten(params)
+        zeros = [jnp.zeros_like(p) for p in flat]
+
+        qat = train.make_train_step(model, names, "qat", n=8)
+        out_q = qat(*flat, *zeros, *zeros, jnp.float32(0), x, y,
+                    jnp.float32(1e-3),
+                    jax.random.key_data(jax.random.PRNGKey(5)),
+                    kabfp.make_scalars(1.0, 16, 16, 24), jnp.float32(0.0))
+        f32 = train.make_train_step(model, names, "f32")
+        out_f = f32(*flat, *zeros, *zeros, jnp.float32(0), x, y,
+                    jnp.float32(1e-3))
+        # First-step AdamW updates are -lr*sign(g): where the true grad is
+        # ~0 a vanishing forward difference can flip the sign, so the
+        # contract is elementwise agreement on all but a few percent.
+        total = 0
+        mismatched = 0
+        for a, b in zip(out_q[:len(flat)], out_f[:len(flat)]):
+            a, b = np.asarray(a), np.asarray(b)
+            total += a.size
+            mismatched += int((np.abs(a - b) > 5e-4 + 5e-2 * np.abs(b)).sum())
+        assert mismatched <= max(2, 0.05 * total), f"{mismatched}/{total}"
+
+    def test_sgd_step_has_same_signature(self):
+        model = REGISTRY["ssd"]
+        assert model.optimizer == "sgd"
+        params = model.init(jax.random.PRNGKey(0))
+        names = common.param_names(params)
+        x, y = batch_for(model)
+        flat = common.flatten(params)
+        zeros = [jnp.zeros_like(p) for p in flat]
+        qat = train.make_train_step(model, names, "qat", n=128)
+        out = qat(*flat, *zeros, *zeros, jnp.float32(0), x, y,
+                  jnp.float32(1e-4),
+                  jax.random.key_data(jax.random.PRNGKey(5)),
+                  kabfp.make_scalars(8.0, 8, 8, 8), jnp.float32(0.5))
+        assert len(out) == 3 * len(flat) + 2
+        assert bool(jnp.isfinite(out[-1]))
+
+    def test_dnf_noise_shifts_loss(self):
+        model = REGISTRY["cnn"]
+        params = model.init(jax.random.PRNGKey(0))
+        names = common.param_names(params)
+        taps = common.tap_index(model, B)
+        x, y = batch_for(model)
+        flat = common.flatten(params)
+        zeros = [jnp.zeros_like(p) for p in flat]
+        dnf = train.make_train_step(model, names, "dnf")
+        xi0 = [jnp.zeros(s, jnp.float32) for _, s in taps]
+        xin = [jnp.full(s, 0.3, jnp.float32) for _, s in taps]
+        l0 = dnf(*flat, *zeros, *zeros, jnp.float32(0), x, y,
+                 jnp.float32(0.0), *xi0)[-1]
+        ln = dnf(*flat, *zeros, *zeros, jnp.float32(0), x, y,
+                 jnp.float32(0.0), *xin)[-1]
+        assert float(l0) != float(ln)
+
+
+class TestBmmOracle:
+    def test_bmm_matches_per_group_matmul(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+        x = ref.bf16_round(jax.random.normal(k1, (3, 4, 40)))
+        w = ref.bf16_round(jax.random.normal(k2, (3, 5, 40)))
+        kw = dict(n=16, gain=2.0, delta_w=ref.delta(8),
+                  delta_x=ref.delta(8), delta_y=ref.delta(8))
+        out = ref.abfp_bmm(x, w, **kw)
+        for g in range(3):
+            single = ref.abfp_matmul(x[g], w[g], **kw)
+            np.testing.assert_allclose(np.asarray(out[g]), np.asarray(single),
+                                       atol=1e-6)
+
+    def test_calib_diffs_shrink_with_bits(self):
+        model = REGISTRY["cnn"]
+        params = model.init(jax.random.PRNGKey(0))
+        x, _ = batch_for(model)
+
+        def total_diff(bits):
+            mode = Mode("calib", ctx=ctx(n=128, gain=8.0, bits=bits, amp=0.0))
+            model.forward(params, x, mode)
+            return sum(float(jnp.abs(d).mean()) for _, d in mode.diffs)
+
+        assert total_diff((12, 12, 16)) < total_diff((4, 4, 6))

@@ -1,0 +1,50 @@
+//! L3 hot path: the Rust ABFP device simulator matmul.
+//!
+//! This is the substrate under Fig. S1 / Appendix A; the perf pass in
+//! EXPERIMENTS.md §Perf tracks the 128-tile case (the paper's preferred
+//! device geometry).
+
+use abfp::abfp::{Device, DeviceConfig};
+use abfp::benchkit::{black_box, Bench};
+use abfp::numerics::bf16_round;
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
+
+fn rand_t(rng: &mut Pcg64, shape: &[usize]) -> Tensor {
+    let len = shape.iter().product();
+    Tensor::new(shape, (0..len).map(|_| bf16_round(rng.normal())).collect()).unwrap()
+}
+
+fn main() {
+    let mut rng = Pcg64::seeded(1);
+    let x = rand_t(&mut rng, &[64, 768]);
+    let w = rand_t(&mut rng, &[256, 768]);
+    let macs = (64 * 768 * 256) as f64;
+
+    let mut b = Bench::new("abfp_core").with_samples(2, 8);
+    for tile in [8usize, 32, 128] {
+        let cfg = DeviceConfig::new(tile, (8, 8, 8), 8.0, 0.5);
+        let r = b
+            .run(&format!("simulator_matmul_t{tile}"), 1, || {
+                let mut dev = Device::new(cfg, 7);
+                black_box(dev.matmul(&x, &w).unwrap());
+            })
+            .clone();
+        println!(
+            "    -> {:.2} GMAC/s (64x768 @ 256x768)",
+            r.throughput(macs) / 1e9
+        );
+    }
+
+    // The FLOAT32 reference for the simulator's overhead factor.
+    b.run("float32_matmul", 1, || {
+        black_box(x.matmul_nt(&w).unwrap());
+    });
+
+    // Noiseless variant isolates the RNG cost in the ADC model.
+    let cfg = DeviceConfig::new(128, (8, 8, 8), 8.0, 0.0);
+    b.run("simulator_matmul_t128_noiseless", 1, || {
+        let mut dev = Device::new(cfg, 7);
+        black_box(dev.matmul(&x, &w).unwrap());
+    });
+}

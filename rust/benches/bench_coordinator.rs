@@ -1,0 +1,58 @@
+//! Coordinator overhead: dynamic batcher throughput and router
+//! round-trip latency with a trivial workload — L3 must not be the
+//! bottleneck (the executable dominates; see EXPERIMENTS.md §Perf).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use abfp::benchkit::{black_box, Bench};
+use abfp::coordinator::{collect_batch, BatchPolicy};
+
+fn main() {
+    let mut b = Bench::new("coordinator");
+
+    // Pure batcher: hot queue, how fast can we group 32k items?
+    b.run("batcher_hot_queue_32k_items", 32_768, || {
+        let (tx, rx) = mpsc::sync_channel(40_000);
+        for i in 0..32_768u32 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(100),
+        };
+        let mut total = 0usize;
+        while let Some(batch) = collect_batch(&rx, policy) {
+            total += batch.len();
+        }
+        assert_eq!(black_box(total), 32_768);
+    });
+
+    // Channel round-trip: the per-request fixed cost of the router path.
+    b.run("request_response_roundtrip", 1000, || {
+        let (tx, rx) = mpsc::sync_channel::<(u32, mpsc::Sender<u32>)>(16);
+        let worker = std::thread::spawn(move || {
+            while let Ok((v, resp)) = rx.recv() {
+                resp.send(v + 1).ok();
+            }
+        });
+        for i in 0..1000u32 {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((i, rtx)).unwrap();
+            assert_eq!(rrx.recv().unwrap(), i + 1);
+        }
+        drop(tx);
+        worker.join().unwrap();
+    });
+
+    // Batch assembly: padding a 32x768 device batch from single requests.
+    let example = vec![1.0f32; 768];
+    b.run("batch_assembly_32x768", 1, || {
+        let mut xdata = vec![0.0f32; 32 * 768];
+        for i in 0..24 {
+            xdata[i * 768..(i + 1) * 768].copy_from_slice(&example);
+        }
+        black_box(&xdata);
+    });
+}

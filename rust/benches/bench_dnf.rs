@@ -1,0 +1,69 @@
+//! DNF sampling cost — the paper: "the key overhead during finetuning is
+//! the time taken to sample from a histogram, proportional to the number
+//! of bins and noise size". The alias sampler makes draws O(1) in bins;
+//! this bench quantifies both the naive (linear-scan CDF) and alias
+//! paths, plus full tap-tensor sampling for the CNN archetype.
+
+use abfp::benchkit::{black_box, Bench};
+use abfp::dnf::{layer_noise, AliasSampler, NoiseModel};
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
+
+fn naive_sample(probs: &[f64], rng: &mut Pcg64) -> usize {
+    let mut t = rng.next_f64();
+    for (i, &p) in probs.iter().enumerate() {
+        t -= p;
+        if t <= 0.0 {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+fn main() {
+    let mut rng = Pcg64::seeded(3);
+    let samples: Vec<f32> = (0..10_000).map(|_| rng.normal() * 0.05).collect();
+    let ln = layer_noise("l".into(), &Tensor::from_vec(samples));
+    let probs = ln.hist.probs();
+    let alias = AliasSampler::new(&probs);
+
+    let mut b = Bench::new("dnf");
+    const DRAWS: usize = 100_000;
+    b.run("alias_sample_100k_draws_100bins", DRAWS, || {
+        let mut acc = 0usize;
+        for _ in 0..DRAWS {
+            acc = acc.wrapping_add(alias.sample(&mut rng));
+        }
+        black_box(acc);
+    });
+    b.run("naive_cdf_sample_100k_draws_100bins", DRAWS, || {
+        let mut acc = 0usize;
+        for _ in 0..DRAWS {
+            acc = acc.wrapping_add(naive_sample(&probs, &mut rng));
+        }
+        black_box(acc);
+    });
+
+    // Full xi sampling for a CNN-archetype step: 8 taps, ~50k elements.
+    let model = NoiseModel {
+        model: "cnn".into(),
+        layers: (0..8).map(|i| {
+            let mut r = Pcg64::seeded(i);
+            layer_noise(
+                format!("l{i}"),
+                &Tensor::from_vec((0..2000).map(|_| r.normal() * 0.1).collect()),
+            )
+        }).collect(),
+    };
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![8192, 16], vec![8192, 16], vec![8192, 16], vec![2048, 32],
+        vec![2048, 32], vec![2048, 32], vec![32, 256], vec![32, 10],
+    ];
+    let elems: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    let r = b
+        .run("sample_taps_cnn_full_step", 1, || {
+            black_box(model.sample_taps(&shapes, &mut rng, 1.0, None));
+        })
+        .clone();
+    println!("    -> {:.1} M noise values/s", r.throughput(elems as f64) / 1e6);
+}

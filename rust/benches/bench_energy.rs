@@ -1,0 +1,46 @@
+//! E1: energy-model evaluation cost (trivially fast — included so every
+//! experiment in DESIGN.md §5 has a bench target) plus a design-space
+//! scan that mirrors the section VI analysis at scale.
+
+use abfp::benchkit::{black_box, Bench};
+use abfp::energy::{compare, DesignPoint};
+
+fn main() {
+    let mut b = Bench::new("energy");
+    b.run("compare_1k_design_points", 1000, || {
+        let mut acc = 0.0f64;
+        for n_pow in 0..10u32 {
+            for bits10 in 40..140u32 {
+                let p = DesignPoint {
+                    n: 1usize << n_pow,
+                    adc_bits: bits10 as f64 / 10.0,
+                    gain: 8.0,
+                };
+                acc += compare(p, DesignPoint::rekhi_optimal()).per_mac_saving;
+            }
+        }
+        black_box(acc);
+    });
+
+    // Print the best design under the paper's accuracy-proxy constraint
+    // (captured bits >= 8 after gain) as a scan artifact.
+    let mut best: Option<(DesignPoint, f64)> = None;
+    for n_pow in 3..8u32 {
+        for g_pow in 0..5u32 {
+            let p = DesignPoint {
+                n: 1usize << n_pow,
+                adc_bits: 8.0,
+                gain: (1u64 << g_pow) as f64,
+            };
+            let e = p.adc_energy_per_mac();
+            if best.map(|(_, be)| e < be).unwrap_or(true) {
+                best = Some((p, e));
+            }
+        }
+    }
+    let (p, e) = best.unwrap();
+    println!(
+        "    -> min ADC energy/MAC at n={}, G={}: {:.3e} (relative)",
+        p.n, p.gain, e
+    );
+}

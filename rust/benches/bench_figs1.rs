@@ -1,0 +1,17 @@
+//! Fig. S1 regeneration cost: one error-distribution cell (the paper's
+//! protocol matmul) on the Rust simulator, per tile width.
+
+use abfp::abfp::{matmul_error_stats, DeviceConfig};
+use abfp::benchkit::{black_box, Bench};
+use abfp::sweep::figs1::protocol_inputs;
+
+fn main() {
+    let (x, w) = protocol_inputs(2022, 100);
+    let mut b = Bench::new("figs1_cell").with_samples(1, 5);
+    for tile in [8usize, 32, 128] {
+        let cfg = DeviceConfig::new(tile, (8, 8, 8), 8.0, 0.5);
+        b.run(&format!("error_stats_t{tile}_100x768"), 1, || {
+            black_box(matmul_error_stats(cfg, 7, &x, &w).unwrap());
+        });
+    }
+}

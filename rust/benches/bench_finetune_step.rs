@@ -1,0 +1,83 @@
+//! Table III wall-clock claim: QAT step vs DNF step cost.
+//!
+//! The paper reports QAT ~4x slower than DNF on A100 because QAT
+//! simulates the full ABFP pipeline in the forward pass while DNF only
+//! adds sampled noise to a FLOAT32 forward. The same asymmetry must
+//! appear here (CPU PJRT): bench one optimizer step of each kind for
+//! the CNN archetype. Requires `make artifacts`.
+
+use abfp::benchkit::Bench;
+use abfp::data::dataset_for;
+use abfp::dnf::{layer_noise, NoiseModel};
+use abfp::rng::Pcg64;
+use abfp::runtime::Engine;
+use abfp::tensor::Tensor;
+use abfp::train::{StepKind, Trainer};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP bench_finetune_step: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load("artifacts").unwrap();
+    let model = "cnn";
+    let info = engine.manifest.model(model).unwrap().clone();
+    let ds = dataset_for(model).unwrap();
+    let mut rng = Pcg64::seeded(1);
+    let batch = ds.batch(&mut rng, info.batch_train);
+
+    // Synthetic noise model (distribution content doesn't affect cost).
+    let nm = NoiseModel {
+        model: model.into(),
+        layers: info
+            .taps
+            .iter()
+            .map(|t| {
+                let mut r = Pcg64::seeded(7);
+                layer_noise(
+                    t.name.clone(),
+                    &Tensor::from_vec((0..1000).map(|_| r.normal() * 0.05).collect()),
+                )
+            })
+            .collect(),
+    };
+    let tap_shapes: Vec<Vec<usize>> =
+        info.taps.iter().map(|t| t.shape.clone()).collect();
+
+    let mut b = Bench::new("finetune_step").with_samples(1, 5);
+
+    let mut tr = Trainer::new(&engine, model, 1).unwrap();
+    // Warm compile caches.
+    tr.step(StepKind::F32, &batch.x, &batch.y, 1e-4, None).unwrap();
+    b.run("f32_step", 1, || {
+        tr.step(StepKind::F32, &batch.x, &batch.y, 1e-4, None).unwrap();
+    });
+
+    let qat = StepKind::Qat {
+        gain: 8.0,
+        bits: (8, 8, 8),
+        noise_lsb: 0.5,
+    };
+    tr.step(qat, &batch.x, &batch.y, 1e-4, None).unwrap();
+    let rq = b
+        .run("qat_step_t128", 1, || {
+            tr.step(qat, &batch.x, &batch.y, 1e-4, None).unwrap();
+        })
+        .clone();
+
+    let mut xi_rng = Pcg64::seeded(9);
+    let xi = nm.sample_taps(&tap_shapes, &mut xi_rng, 1.0, None);
+    tr.step(StepKind::Dnf, &batch.x, &batch.y, 1e-4, Some(&xi)).unwrap();
+    let rd = b
+        .run("dnf_step_incl_sampling", 1, || {
+            let xi = nm.sample_taps(&tap_shapes, &mut xi_rng, 1.0, None);
+            tr.step(StepKind::Dnf, &batch.x, &batch.y, 1e-4, Some(&xi))
+                .unwrap();
+        })
+        .clone();
+
+    println!(
+        "\n    QAT/DNF step-cost ratio: {:.2}x (paper: ~4x on A100)",
+        rq.median_ns / rd.median_ns
+    );
+}

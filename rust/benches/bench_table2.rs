@@ -1,0 +1,40 @@
+//! Table II end-to-end cell cost: one ABFP evaluation pass per model
+//! through the PJRT artifacts (the unit of work the sweep driver runs
+//! 30x per model x repeats). Requires `make artifacts` + checkpoints
+//! (falls back to init params so the bench always runs).
+
+use abfp::abfp::DeviceConfig;
+use abfp::benchkit::Bench;
+use abfp::models;
+use abfp::runtime::Engine;
+use abfp::sweep::eval;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP bench_table2: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load("artifacts").unwrap();
+    let mut b = Bench::new("table2_cell").with_samples(1, 5);
+    for model in ["cnn", "bert", "dlrm"] {
+        let info = engine.manifest.model(model).unwrap().clone();
+        let params = eval::load_pretrained(&engine, model, "checkpoints")
+            .unwrap_or_else(|_| models::init_params(&engine, &info, 7).unwrap());
+        for tile in [8usize, 128] {
+            let cfg = DeviceConfig::new(tile, (8, 8, 8), 8.0, 0.5);
+            // Warm the compile cache outside the timer.
+            engine
+                .executable(&models::art_fwd_abfp(model, tile))
+                .unwrap();
+            let r = b
+                .run(&format!("{model}_t{tile}_64samples"), 1, || {
+                    eval::eval_abfp(&engine, model, &params, cfg, 1, 64).unwrap();
+                })
+                .clone();
+            println!(
+                "    -> {:.1} samples/s",
+                r.throughput(64.0)
+            );
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! The ABFP analog device model (Eq. 1–7).
+
+use anyhow::{bail, Result};
+
+use crate::numerics::{bf16_round, delta, num_tiles, quantize};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// Static + runtime configuration of the simulated analog device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceConfig {
+    /// Tile width `n`: the analog array computes length-`n` dot products.
+    pub n: usize,
+    /// Weight DAC bits `b_W`.
+    pub bits_w: u32,
+    /// Activation DAC bits `b_X`.
+    pub bits_x: u32,
+    /// Output ADC bits `b_Y`.
+    pub bits_y: u32,
+    /// Analog gain `G >= 1` (powers of two in the paper's sweeps).
+    pub gain: f32,
+    /// ADC noise amplitude in LSB units (paper's device model: 0.5).
+    pub noise_lsb: f32,
+}
+
+impl DeviceConfig {
+    pub fn new(n: usize, bits: (u32, u32, u32), gain: f32, noise_lsb: f32) -> Self {
+        DeviceConfig {
+            n,
+            bits_w: bits.0,
+            bits_x: bits.1,
+            bits_y: bits.2,
+            gain,
+            noise_lsb,
+        }
+    }
+
+    /// The paper's default operating point: 8/8/8 bits, no gain, 0.5 LSB.
+    pub fn paper_default(n: usize) -> Self {
+        Self::new(n, (8, 8, 8), 1.0, 0.5)
+    }
+
+    pub fn delta_w(&self) -> f32 {
+        delta(self.bits_w)
+    }
+
+    pub fn delta_x(&self) -> f32 {
+        delta(self.bits_x)
+    }
+
+    pub fn delta_y(&self) -> f32 {
+        delta(self.bits_y)
+    }
+
+    /// One output ADC bin: `n * delta_y` (the LSB of footnote 2).
+    pub fn output_bin(&self) -> f32 {
+        self.n as f32 * self.delta_y()
+    }
+}
+
+/// Error / saturation statistics accumulated during a matmul.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AbfpError {
+    /// Fraction of ADC conversions that clamped (saturation).
+    pub sat_frac: f64,
+    /// Total ADC conversions performed.
+    pub conversions: u64,
+}
+
+/// The simulated device: configuration plus its private noise source.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub cfg: DeviceConfig,
+    rng: Pcg64,
+    sat_count: u64,
+    conv_count: u64,
+}
+
+/// All tiles of one operand staged for the analog array: per-tile
+/// BFLOAT16 scales plus the DAC-quantized normalized values, stored
+/// flat (rows x tiles x n) — one allocation instead of rows*tiles
+/// (perf pass iteration 1, see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+struct Staged {
+    n: usize,
+    scales: Vec<f32>, // rows * tiles
+    q: Vec<f32>,      // rows * tiles * n, zero-padded
+}
+
+impl Staged {
+    #[inline]
+    fn tile(&self, row_tile: usize) -> &[f32] {
+        &self.q[row_tile * self.n..(row_tile + 1) * self.n]
+    }
+}
+
+impl Device {
+    pub fn new(cfg: DeviceConfig, seed: u64) -> Self {
+        Device {
+            cfg,
+            rng: Pcg64::new(seed, 0x0abf_9000),
+            sat_count: 0,
+            conv_count: 0,
+        }
+    }
+
+    /// Saturation statistics since construction.
+    pub fn error_stats(&self) -> AbfpError {
+        AbfpError {
+            sat_frac: if self.conv_count == 0 {
+                0.0
+            } else {
+                self.sat_count as f64 / self.conv_count as f64
+            },
+            conversions: self.conv_count,
+        }
+    }
+
+    /// Prepare one length-`n` vector tile into the staging buffers:
+    /// BFLOAT16 scale (zero tile -> 1) and symmetric quantization of the
+    /// normalized values (Eq. 2). `out` is the flat n-wide destination.
+    fn scale_tile_into(&self, tile: &[f32], d: f32, out: &mut [f32]) -> f32 {
+        let mut m = 0.0f32;
+        for &v in tile {
+            m = m.max(bf16_round(v).abs());
+        }
+        let scale = if bf16_round(m) == 0.0 { 1.0 } else { bf16_round(m) };
+        for (o, &v) in out.iter_mut().zip(tile) {
+            *o = quantize(bf16_round(v) / scale, d, 1.0);
+        }
+        for o in out.iter_mut().skip(tile.len()) {
+            *o = 0.0;
+        }
+        scale
+    }
+
+    /// One analog dot product + ADC conversion (Eq. 5/7), returning the
+    /// post-ADC quantized value (still in normalized units).
+    fn adc(&mut self, analog_dot: f32) -> f32 {
+        let bin = self.cfg.output_bin();
+        let tau = self.cfg.n as f32;
+        let mut pre = self.cfg.gain * analog_dot;
+        if self.cfg.noise_lsb > 0.0 {
+            let eps = self.rng.uniform(-1.0, 1.0) * self.cfg.noise_lsb * bin;
+            pre += eps;
+        }
+        self.conv_count += 1;
+        if pre.abs() > tau {
+            self.sat_count += 1;
+        }
+        quantize(pre, bin, tau)
+    }
+
+    /// ABFP matmul `x (M,K) @ w^T (N,K) -> (M,N)` with per-vector scales,
+    /// gain, ADC quantization and noise; FLOAT32 accumulation over tiles
+    /// and BFLOAT16 output rounding (Eq. 1–7 end to end).
+    pub fn matmul(&mut self, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        if x.shape().len() != 2 || w.shape().len() != 2 {
+            bail!("abfp matmul wants 2-D operands");
+        }
+        let (m, k) = (x.shape()[0], x.shape()[1]);
+        let (nn, kw) = (w.shape()[0], w.shape()[1]);
+        if k != kw {
+            bail!("reduction mismatch {k} vs {kw}");
+        }
+        let n = self.cfg.n;
+        let t = num_tiles(k, n);
+        let dx = self.cfg.delta_x();
+        let dw = self.cfg.delta_w();
+
+        // Stage operands once (the paper: weights are converted to ABFP
+        // once and stored; activations are converted per call).
+        let xs = self.stage(x, m, k, t, dx);
+        let ws = self.stage(w, nn, k, t, dw);
+
+        let mut out = vec![0.0f32; m * nn];
+        let gain = self.cfg.gain;
+        for i in 0..m {
+            for j in 0..nn {
+                let mut acc = 0.0f32; // FLOAT32 tile accumulator (Eq. 6)
+                for ti in 0..t {
+                    let xt = xs.tile(i * t + ti);
+                    let wt = ws.tile(j * t + ti);
+                    let mut dot = 0.0f32;
+                    for e in 0..n {
+                        dot += xt[e] * wt[e];
+                    }
+                    let yq = self.adc(dot);
+                    acc += yq * xs.scales[i * t + ti] * ws.scales[j * t + ti]
+                        / gain;
+                }
+                out[i * nn + j] = bf16_round(acc);
+            }
+        }
+        Tensor::new(&[m, nn], out)
+    }
+
+    /// Stage all tiles of a (rows, K) operand into flat buffers.
+    fn stage(&self, v: &Tensor, rows: usize, k: usize, t: usize, d: f32) -> Staged {
+        let n = self.cfg.n;
+        let mut staged = Staged {
+            n,
+            scales: Vec::with_capacity(rows * t),
+            q: vec![0.0f32; rows * t * n],
+        };
+        for r in 0..rows {
+            let row = v.row(r);
+            for ti in 0..t {
+                let lo = ti * n;
+                let hi = ((ti + 1) * n).min(k);
+                let dst =
+                    &mut staged.q[(r * t + ti) * n..(r * t + ti + 1) * n];
+                let scale = self.scale_tile_into(&row[lo..hi], d, dst);
+                staged.scales.push(scale);
+            }
+        }
+        staged
+    }
+
+    /// FLOAT32 reference matmul for error analysis.
+    pub fn float_matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        x.matmul_nt(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_t(rng: &mut Pcg64, shape: &[usize], laplace: bool) -> Tensor {
+        let len = shape.iter().product();
+        let data = (0..len)
+            .map(|_| if laplace { rng.laplace() } else { rng.normal() })
+            .collect();
+        Tensor::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn zero_input_zero_output() {
+        let mut dev = Device::new(DeviceConfig::new(8, (8, 8, 8), 1.0, 0.0), 1);
+        let x = Tensor::zeros(&[3, 32]);
+        let w = Tensor::full(&[4, 32], 1.0);
+        let y = dev.matmul(&x, &w).unwrap();
+        assert!(y.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn close_to_float_at_high_precision() {
+        let mut rng = Pcg64::seeded(3);
+        let x = rand_t(&mut rng, &[8, 96], false);
+        let w = rand_t(&mut rng, &[8, 96], false);
+        let mut dev = Device::new(DeviceConfig::new(8, (16, 16, 24), 1.0, 0.0), 1);
+        let y = dev.matmul(&x, &w).unwrap();
+        let f = Device::float_matmul(&x, &w).unwrap();
+        for (a, b) in y.data().iter().zip(f.data()) {
+            assert!((a - b).abs() < 0.05 + 0.02 * b.abs(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = Pcg64::seeded(5);
+        let x = rand_t(&mut rng, &[8, 128], false);
+        let w = rand_t(&mut rng, &[8, 128], false);
+        let f = Device::float_matmul(&x, &w).unwrap();
+        let mut errs = Vec::new();
+        for bits in [4u32, 6, 8, 12] {
+            let mut dev =
+                Device::new(DeviceConfig::new(8, (bits, bits, bits + 4), 1.0, 0.0), 1);
+            let y = dev.matmul(&x, &w).unwrap();
+            let err: f64 = y
+                .data()
+                .iter()
+                .zip(f.data())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum();
+            errs.push(err);
+        }
+        for pair in errs.windows(2) {
+            assert!(pair[1] <= pair[0], "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn gain_rescues_large_tiles() {
+        // The paper's core claim (Table II shape): at n = 128, gain 8
+        // beats gain 1 by a wide margin.
+        let mut rng = Pcg64::seeded(7);
+        let x = rand_t(&mut rng, &[16, 256], false);
+        let w = rand_t(&mut rng, &[16, 256], true);
+        let f = Device::float_matmul(&x, &w).unwrap();
+        let err_at = |gain: f32| {
+            let mut dev =
+                Device::new(DeviceConfig::new(128, (8, 8, 8), gain, 0.5), 1);
+            let y = dev.matmul(&x, &w).unwrap();
+            y.data()
+                .iter()
+                .zip(f.data())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+        };
+        let e1 = err_at(1.0);
+        let e8 = err_at(8.0);
+        assert!(e8 < e1 * 0.5, "gain should help at n=128: e1={e1} e8={e8}");
+    }
+
+    #[test]
+    fn excess_gain_hurts_small_tiles() {
+        // Table II shape at n = 8: gain 16 is catastrophic.
+        let mut rng = Pcg64::seeded(9);
+        let x = rand_t(&mut rng, &[16, 64], false);
+        let w = rand_t(&mut rng, &[16, 64], false);
+        let f = Device::float_matmul(&x, &w).unwrap();
+        let err_at = |gain: f32| {
+            let mut dev = Device::new(DeviceConfig::new(8, (8, 8, 8), gain, 0.5), 1);
+            let y = dev.matmul(&x, &w).unwrap();
+            y.data()
+                .iter()
+                .zip(f.data())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+        };
+        assert!(err_at(16.0) > 2.0 * err_at(1.0));
+    }
+
+    #[test]
+    fn saturation_tracked() {
+        let mut dev = Device::new(DeviceConfig::new(8, (8, 8, 8), 64.0, 0.0), 1);
+        let mut rng = Pcg64::seeded(11);
+        let x = rand_t(&mut rng, &[4, 32], false);
+        let w = rand_t(&mut rng, &[4, 32], false);
+        dev.matmul(&x, &w).unwrap();
+        let stats = dev.error_stats();
+        assert!(stats.sat_frac > 0.1, "{stats:?}");
+        assert_eq!(stats.conversions, (4 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn noiseless_deterministic_noisy_varies() {
+        let mut rng = Pcg64::seeded(13);
+        let x = rand_t(&mut rng, &[4, 64], false);
+        let w = rand_t(&mut rng, &[4, 64], false);
+        let cfg0 = DeviceConfig::new(32, (8, 8, 8), 2.0, 0.0);
+        let a = Device::new(cfg0, 1).matmul(&x, &w).unwrap();
+        let b = Device::new(cfg0, 2).matmul(&x, &w).unwrap();
+        assert_eq!(a, b);
+        let cfgn = DeviceConfig::new(32, (8, 8, 8), 2.0, 0.5);
+        let c = Device::new(cfgn, 1).matmul(&x, &w).unwrap();
+        let d = Device::new(cfgn, 2).matmul(&x, &w).unwrap();
+        assert_ne!(c, d);
+    }
+
+    #[test]
+    fn pow2_scaling_equivariance() {
+        let mut rng = Pcg64::seeded(15);
+        let x = rand_t(&mut rng, &[4, 64], false);
+        let w = rand_t(&mut rng, &[4, 64], false);
+        let xs = x.map(|v| v * 4.0);
+        let cfg = DeviceConfig::new(16, (8, 8, 8), 2.0, 0.0);
+        let a = Device::new(cfg, 1).matmul(&xs, &w).unwrap();
+        let b = Device::new(cfg, 1).matmul(&x, &w).unwrap();
+        for (ai, bi) in a.data().iter().zip(b.data()) {
+            assert!((ai - 4.0 * bi).abs() <= 1e-6 * ai.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn ragged_k_padding_is_exact_zero() {
+        // K = 70 with n = 32 -> last tile is 6 real + 26 zero pad.
+        let mut rng = Pcg64::seeded(17);
+        let x = rand_t(&mut rng, &[3, 70], false);
+        let w = rand_t(&mut rng, &[5, 70], false);
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 1.0, 0.0);
+        let y = Device::new(cfg, 1).matmul(&x, &w).unwrap();
+        assert_eq!(y.shape(), &[3, 5]);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+}

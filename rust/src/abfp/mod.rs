@@ -1,0 +1,18 @@
+//! The AMS device simulator: a bit-exact Rust implementation of the ABFP
+//! tiled matrix multiplication (Eq. 1–7 of the paper).
+//!
+//! This is the same arithmetic as the Pallas kernel and the jnp oracle
+//! (DESIGN.md section 6); `rust/tests/golden.rs` checks the three agree
+//! through the PJRT artifacts. Having the device model natively in Rust
+//! serves three purposes:
+//!
+//! 1. pure-Rust experiments (Fig. S1 error distributions, Appendix A
+//!    saturation analysis) run without artifacts;
+//! 2. property tests on the numeric format run at `cargo test` speed;
+//! 3. the criterion-lite benches profile the L3 hot path in isolation.
+
+mod device;
+mod stats;
+
+pub use device::{AbfpError, Device, DeviceConfig};
+pub use stats::{matmul_error_stats, ErrorStats};

@@ -1,0 +1,143 @@
+//! Error statistics of the ABFP representation vs FLOAT32 — the numeric
+//! experiment behind Fig. S1 and the Appendix A saturation analysis.
+
+use anyhow::Result;
+
+use super::device::{Device, DeviceConfig};
+use crate::tensor::Tensor;
+
+/// Summary statistics of the elementwise error `abfp - float32`.
+#[derive(Debug, Clone, Copy)]
+pub struct ErrorStats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    /// 1st / 50th / 99th percentiles of the error distribution.
+    pub p01: f64,
+    pub p50: f64,
+    pub p99: f64,
+    /// Fraction of ADC conversions that clamped.
+    pub sat_frac: f64,
+}
+
+/// Run one ABFP-vs-FLOAT32 matmul and summarize the error distribution.
+pub fn matmul_error_stats(
+    cfg: DeviceConfig,
+    seed: u64,
+    x: &Tensor,
+    w: &Tensor,
+) -> Result<ErrorStats> {
+    let mut dev = Device::new(cfg, seed);
+    let y = dev.matmul(x, w)?;
+    let f = Device::float_matmul(x, w)?;
+    let mut errs: Vec<f64> = y
+        .data()
+        .iter()
+        .zip(f.data())
+        .map(|(a, b)| (*a - *b) as f64)
+        .collect();
+    errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let nl = errs.len() as f64;
+    let mean = errs.iter().sum::<f64>() / nl;
+    let var = errs.iter().map(|e| (e - mean).powi(2)).sum::<f64>() / nl;
+    let pct = |p: f64| errs[((p * (errs.len() - 1) as f64).round()) as usize];
+    Ok(ErrorStats {
+        mean,
+        std: var.sqrt(),
+        min: errs[0],
+        max: errs[errs.len() - 1],
+        p01: pct(0.01),
+        p50: pct(0.50),
+        p99: pct(0.99),
+        sat_frac: dev.error_stats().sat_frac,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn figs1_inputs(rows: usize, k: usize) -> (Tensor, Tensor) {
+        // Fig. S1 protocol: weights Laplace, inputs Normal.
+        let mut rng = Pcg64::seeded(2022);
+        let x = Tensor::new(&[rows, k], rng.normal_vec(rows * k)).unwrap();
+        let w = Tensor::new(
+            &[k, k],
+            (0..k * k).map(|_| rng.laplace()).collect(),
+        )
+        .unwrap();
+        (x, w)
+    }
+
+    #[test]
+    fn error_centered_near_zero() {
+        let (x, w) = figs1_inputs(16, 128);
+        let s = matmul_error_stats(
+            DeviceConfig::new(32, (8, 8, 8), 2.0, 0.0),
+            1,
+            &x,
+            &w,
+        )
+        .unwrap();
+        assert!(s.mean.abs() < s.std, "{s:?}");
+        assert!(s.min <= s.p01 && s.p01 <= s.p50 && s.p50 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn noise_increases_error_std() {
+        // Appendix A: variance with ADC noise > variance without.
+        let (x, w) = figs1_inputs(16, 128);
+        let s0 = matmul_error_stats(
+            DeviceConfig::new(32, (8, 8, 8), 1.0, 0.0),
+            1,
+            &x,
+            &w,
+        )
+        .unwrap();
+        let s5 = matmul_error_stats(
+            DeviceConfig::new(32, (8, 8, 8), 1.0, 0.5),
+            1,
+            &x,
+            &w,
+        )
+        .unwrap();
+        assert!(s5.std > s0.std, "noisy {} vs clean {}", s5.std, s0.std);
+    }
+
+    #[test]
+    fn gain_reduces_error_at_large_tile() {
+        // Fig. S1 bottom row: at the largest tile, error shrinks as gain
+        // grows (until extrema appear from saturation).
+        let (x, w) = figs1_inputs(16, 256);
+        let e = |g: f32| {
+            matmul_error_stats(
+                DeviceConfig::new(128, (8, 8, 8), g, 0.5),
+                1,
+                &x,
+                &w,
+            )
+            .unwrap()
+            .std
+        };
+        assert!(e(8.0) < e(1.0) * 0.5, "e1={} e8={}", e(1.0), e(8.0));
+    }
+
+    #[test]
+    fn gain_increases_error_at_small_tile() {
+        // Fig. S1 top row: at the smallest tile, gain only saturates.
+        let (x, w) = figs1_inputs(16, 256);
+        let e = |g: f32| {
+            matmul_error_stats(
+                DeviceConfig::new(8, (8, 8, 8), g, 0.5),
+                1,
+                &x,
+                &w,
+            )
+            .unwrap()
+            .std
+        };
+        assert!(e(16.0) > e(1.0), "e1={} e16={}", e(1.0), e(16.0));
+    }
+}

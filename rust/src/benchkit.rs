@@ -1,0 +1,154 @@
+//! criterion-lite: a timing harness for `benches/` (the real criterion
+//! crate is unavailable offline; `cargo bench` runs these with
+//! `harness = false`).
+//!
+//! Methodology: warmup iterations, then timed samples; reports min /
+//! median / p95 / mean and derived throughput. Deterministic iteration
+//! counts keep runs comparable across the perf-pass iterations recorded
+//! in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+/// One benchmark's timing summary (nanoseconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10} {:>10} {:>10}  ({} samples)",
+            self.name,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            self.samples
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// The harness: `Bench::new("suite").run("case", iters, || work())`.
+pub struct Bench {
+    pub suite: String,
+    pub results: Vec<BenchResult>,
+    warmup: usize,
+    samples: usize,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        println!("\n== bench suite: {suite} ==");
+        println!(
+            "{:<42} {:>10} {:>10} {:>10}",
+            "case", "min", "median", "p95"
+        );
+        Bench {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            warmup: 3,
+            samples: 12,
+        }
+    }
+
+    /// Override sampling (slow end-to-end cases use fewer samples).
+    pub fn with_samples(mut self, warmup: usize, samples: usize) -> Bench {
+        self.warmup = warmup;
+        self.samples = samples;
+        self
+    }
+
+    /// Time `f`, which performs `iters` internal iterations per sample.
+    pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_nanos() as f64 / iters.max(1) as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let result = BenchResult {
+            name: format!("{}/{}", self.suite, name),
+            samples: self.samples,
+            min_ns: times[0],
+            median_ns: times[times.len() / 2],
+            p95_ns: times[((times.len() - 1) as f64 * 0.95) as usize],
+            mean_ns: times.iter().sum::<f64>() / times.len() as f64,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").with_samples(1, 5);
+        let mut acc = 0u64;
+        let r = b
+            .run("spin", 1000, || {
+                for i in 0..1000u64 {
+                    acc = black_box(acc.wrapping_add(i));
+                }
+            })
+            .clone();
+        assert!(r.min_ns > 0.0);
+        assert!(r.median_ns >= r.min_ns);
+        assert!(r.p95_ns >= r.median_ns);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50us");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00ms");
+        assert_eq!(fmt_ns(2e9), "2.000s");
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 1,
+            min_ns: 1e6,
+            median_ns: 1e6,
+            p95_ns: 1e6,
+            mean_ns: 1e6,
+        };
+        assert!((r.throughput(1000.0) - 1e9 / 1e3).abs() < 1.0);
+    }
+}

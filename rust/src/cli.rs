@@ -1,0 +1,172 @@
+//! Argument parsing for the launcher (clap-lite).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: subcommand, flags, options, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`; the first non-flag token is the subcommand.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    // (then it's a boolean).
+                    let is_val = it
+                        .peek()
+                        .map(|next| !next.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_val {
+                        args.flags
+                            .insert(body.to_string(), it.next().unwrap());
+                    } else {
+                        args.flags.insert(body.to_string(), "true".to_string());
+                    }
+                }
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list: `--models cnn,bert`.
+    pub fn list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Reject unknown flags (typo guard); `known` lists accepted keys.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; accepted: {known:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("sweep --models cnn,bert --repeats 3 --fast");
+        assert_eq!(a.command, "sweep");
+        assert_eq!(a.list("models").unwrap(), vec!["cnn", "bert"]);
+        assert_eq!(a.usize_or("repeats", 1).unwrap(), 3);
+        assert!(a.bool("fast"));
+        assert!(!a.bool("slow"));
+    }
+
+    #[test]
+    fn eq_form_and_positional() {
+        let a = parse("serve model.hlo --port=8080 extra");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.usize_or("port", 0).unwrap(), 8080);
+        assert_eq!(a.positional(), &["model.hlo", "extra"]);
+    }
+
+    #[test]
+    fn boolean_before_flag() {
+        let a = parse("run --verbose --out dir");
+        assert!(a.bool("verbose"));
+        assert_eq!(a.str_or("out", ""), "dir");
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.f32_or("n", 1.0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = parse("x --good 1 --bad 2");
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.f32_or("g", 2.5).unwrap(), 2.5);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+}

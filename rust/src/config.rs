@@ -1,0 +1,223 @@
+//! Experiment configuration: the sweep grids of the paper's evaluation
+//! and a TOML-subset parser for user config files.
+//!
+//! The paper's grid (section V-A): tile widths {8, 32, 128}, gains
+//! {1, 2, 4, 8, 16}, bitwidths {6/6/8, 8/8/8}, ADC noise 0.5 LSB,
+//! 10 repeats (3 for 3D U-Net). Those defaults are encoded here and can
+//! be overridden from a config file or CLI flags.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abfp::DeviceConfig;
+
+/// The evaluation grid of Table II / Fig. 4.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepGrid {
+    pub tiles: Vec<usize>,
+    pub gains: Vec<f32>,
+    pub bitwidths: Vec<(u32, u32, u32)>,
+    pub noise_lsb: f32,
+    pub repeats: usize,
+    pub eval_samples: usize,
+}
+
+impl Default for SweepGrid {
+    fn default() -> Self {
+        SweepGrid {
+            tiles: vec![8, 32, 128],
+            gains: vec![1.0, 2.0, 4.0, 8.0, 16.0],
+            bitwidths: vec![(6, 6, 8), (8, 8, 8)],
+            noise_lsb: 0.5,
+            repeats: 3,
+            eval_samples: 256,
+        }
+    }
+}
+
+impl SweepGrid {
+    /// A reduced grid for smoke runs and CI.
+    pub fn fast() -> Self {
+        SweepGrid {
+            tiles: vec![8, 128],
+            gains: vec![1.0, 8.0],
+            bitwidths: vec![(8, 8, 8)],
+            noise_lsb: 0.5,
+            repeats: 1,
+            eval_samples: 64,
+        }
+    }
+
+    /// Enumerate every device configuration in the grid.
+    pub fn configs(&self) -> Vec<DeviceConfig> {
+        let mut out = Vec::new();
+        for &n in &self.tiles {
+            for &bits in &self.bitwidths {
+                for &gain in &self.gains {
+                    out.push(DeviceConfig::new(n, bits, gain, self.noise_lsb));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A parsed TOML-subset document: `[section]` headers and
+/// `key = value` lines (string, number, bool, [array]).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    fn parse(text: &str) -> Result<TomlValue> {
+        let t = text.trim();
+        if t == "true" {
+            return Ok(TomlValue::Bool(true));
+        }
+        if t == "false" {
+            return Ok(TomlValue::Bool(false));
+        }
+        if let Some(inner) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let items = inner
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(TomlValue::parse)
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(TomlValue::Arr(items));
+        }
+        if let Some(inner) = t
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .or_else(|| t.strip_prefix('\'').and_then(|s| s.strip_suffix('\'')))
+        {
+            return Ok(TomlValue::Str(inner.to_string()));
+        }
+        t.parse::<f64>()
+            .map(TomlValue::Num)
+            .map_err(|_| anyhow!("cannot parse value {t:?}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), TomlValue::parse(v)?);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Build a sweep grid from the `[sweep]` section, with defaults.
+    pub fn sweep_grid(&self) -> Result<SweepGrid> {
+        let mut grid = SweepGrid::default();
+        if let Some(TomlValue::Arr(a)) = self.get("sweep", "tiles") {
+            grid.tiles = a
+                .iter()
+                .map(|v| Ok(v.as_f64()? as usize))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(TomlValue::Arr(a)) = self.get("sweep", "gains") {
+            grid.gains = a
+                .iter()
+                .map(|v| Ok(v.as_f64()? as f32))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = self.get("sweep", "noise_lsb") {
+            grid.noise_lsb = v.as_f64()? as f32;
+        }
+        if let Some(v) = self.get("sweep", "repeats") {
+            grid.repeats = v.as_f64()? as usize;
+        }
+        if let Some(v) = self.get("sweep", "eval_samples") {
+            grid.eval_samples = v.as_f64()? as usize;
+        }
+        Ok(grid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_matches_paper() {
+        let g = SweepGrid::default();
+        assert_eq!(g.tiles, vec![8, 32, 128]);
+        assert_eq!(g.gains, vec![1.0, 2.0, 4.0, 8.0, 16.0]);
+        assert_eq!(g.bitwidths.len(), 2);
+        // 3 tiles x 2 bitwidths x 5 gains = 30 device configs per model.
+        assert_eq!(g.configs().len(), 30);
+    }
+
+    #[test]
+    fn parses_toml_subset() {
+        let cfg = Config::parse(
+            "# comment\n[sweep]\ntiles = [8, 128] # inline\nrepeats = 5\n\
+             noise_lsb = 0.0\n[serve]\nname = \"bert\"\nfast = true\n",
+        )
+        .unwrap();
+        let g = cfg.sweep_grid().unwrap();
+        assert_eq!(g.tiles, vec![8, 128]);
+        assert_eq!(g.repeats, 5);
+        assert_eq!(g.noise_lsb, 0.0);
+        assert_eq!(
+            cfg.get("serve", "name"),
+            Some(&TomlValue::Str("bert".into()))
+        );
+        assert_eq!(cfg.get("serve", "fast"), Some(&TomlValue::Bool(true)));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[a]\nnot a kv line\n").is_err());
+        assert!(Config::parse("[a]\nx = @bad\n").is_err());
+    }
+
+    #[test]
+    fn empty_and_comments_ok() {
+        let cfg = Config::parse("\n# only comments\n\n").unwrap();
+        assert!(cfg.get("sweep", "tiles").is_none());
+        assert_eq!(cfg.sweep_grid().unwrap(), SweepGrid::default());
+    }
+}

@@ -1,0 +1,96 @@
+//! The dynamic batcher: group queued requests into one device execution.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (the artifact's compiled batch size).
+    pub max_batch: usize,
+    /// Maximum time the first request in a batch may wait.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+        }
+    }
+}
+
+/// Collect one batch: blocks for the first item, then drains either
+/// until `max_batch` items are held or `max_wait` has elapsed since the
+/// first item arrived. Returns `None` when the channel is closed and
+/// empty (shutdown).
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    #[test]
+    fn fills_to_max_batch_when_queue_is_hot() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = collect_batch(&rx, BatchPolicy::new(4, 50)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = collect_batch(&rx, BatchPolicy::new(4, 50)).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, BatchPolicy::new(8, 30)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        drop(tx);
+    }
+
+    #[test]
+    fn none_on_shutdown() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(collect_batch(&rx, BatchPolicy::new(4, 10)).is_none());
+    }
+
+    #[test]
+    fn stragglers_join_before_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(0).unwrap();
+        let sender = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            tx.send(1).unwrap();
+            thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+        });
+        let b = collect_batch(&rx, BatchPolicy::new(3, 200)).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        sender.join().unwrap();
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving coordinator: request router + dynamic batcher + device
+//! workers (the vLLM-router-shaped component of the stack).
+//!
+//! Architecture (one box per thread):
+//!
+//! ```text
+//!   clients ----> Router ----> [ModelWorker "cnn"]  (device thread:
+//!      |            |             Engine + batcher +  PJRT executable)
+//!      |            +--------> [ModelWorker "bert"]
+//!      +--- submit(Request) -> oneshot Response
+//! ```
+//!
+//! `PjRtClient` is thread-confined (Rc internals), so each ModelWorker
+//! owns its Engine on a dedicated thread — the same discipline as one
+//! accelerator stream per model replica. The batcher groups requests up
+//! to the artifact's compiled batch size or a deadline, pads the tail,
+//! executes once, and fans results back out; padding rows cost nothing
+//! extra because the artifact batch is fixed either way.
+
+mod batcher;
+mod server;
+
+pub use batcher::{collect_batch, BatchPolicy};
+pub use server::{Request, Response, Router, ServerStats, WorkerConfig};

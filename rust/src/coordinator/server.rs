@@ -1,0 +1,333 @@
+//! The router and per-model device workers.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{collect_batch, BatchPolicy};
+use crate::abfp::DeviceConfig;
+use crate::models;
+use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine, Manifest};
+use crate::stats::{Percentiles, Running};
+use crate::tensor::Tensor;
+
+/// One inference request: a single example for a named model.
+pub struct Request {
+    pub model: String,
+    pub x: Tensor,
+    pub enqueued: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// The response: per-output tensors for this example plus timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub outputs: Vec<Tensor>,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub batch_size: usize,
+}
+
+/// Worker configuration: which executable variant serves the model.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerConfig {
+    /// None = FLOAT32 twin; Some(cfg) = ABFP device simulation.
+    pub device: Option<DeviceConfig>,
+    pub policy: BatchPolicy,
+}
+
+/// Aggregated serving statistics (read via [`Router::stats`]).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub mean_exec_ms: f64,
+}
+
+struct WorkerStats {
+    latency: Percentiles,
+    exec_ms: Running,
+    batch_sizes: Running,
+    requests: u64,
+    batches: u64,
+}
+
+impl WorkerStats {
+    fn new() -> Self {
+        WorkerStats {
+            latency: Percentiles::new(4096),
+            exec_ms: Running::new(),
+            batch_sizes: Running::new(),
+            requests: 0,
+            batches: 0,
+        }
+    }
+
+    fn snapshot(&self) -> ServerStats {
+        ServerStats {
+            requests: self.requests,
+            batches: self.batches,
+            mean_batch: self.batch_sizes.mean(),
+            p50_ms: self.latency.quantile(0.5),
+            p95_ms: self.latency.quantile(0.95),
+            mean_exec_ms: self.exec_ms.mean(),
+        }
+    }
+}
+
+/// The request router: owns one worker thread per served model.
+pub struct Router {
+    workers: BTreeMap<String, WorkerHandle>,
+}
+
+struct WorkerHandle {
+    tx: SyncSender<Request>,
+    stats: Arc<Mutex<WorkerStats>>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Start a router serving `model_names` from `artifacts_dir`, using
+    /// pretrained checkpoints in `ckpt_dir` when present (init params
+    /// otherwise — useful for latency benches).
+    pub fn start(
+        artifacts_dir: &str,
+        ckpt_dir: &str,
+        model_names: &[String],
+        cfg: WorkerConfig,
+    ) -> Result<Router> {
+        let mut workers = BTreeMap::new();
+        for name in model_names {
+            let (tx, rx) = mpsc::sync_channel::<Request>(1024);
+            let stats = Arc::new(Mutex::new(WorkerStats::new()));
+            let stats_c = stats.clone();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let name_c = name.clone();
+            let dir = artifacts_dir.to_string();
+            let ckpt = ckpt_dir.to_string();
+            let join = std::thread::Builder::new()
+                .name(format!("abfp-worker-{name}"))
+                .spawn(move || {
+                    worker_main(&dir, &ckpt, &name_c, cfg, rx, stats_c, ready_tx)
+                })?;
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker {name} died during startup"))??;
+            workers.insert(
+                name.clone(),
+                WorkerHandle {
+                    tx,
+                    stats,
+                    join: Some(join),
+                },
+            );
+        }
+        Ok(Router { workers })
+    }
+
+    /// Submit one example; returns a receiver for the response.
+    pub fn submit(&self, model: &str, x: Tensor) -> Result<Receiver<Response>> {
+        let worker = self
+            .workers
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model:?} is not served"))?;
+        let (tx, rx) = mpsc::channel();
+        worker
+            .tx
+            .send(Request {
+                model: model.to_string(),
+                x,
+                enqueued: Instant::now(),
+                respond: tx,
+            })
+            .map_err(|_| anyhow!("worker {model} is gone"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, model: &str, x: Tensor) -> Result<Response> {
+        Ok(self.submit(model, x)?.recv()?)
+    }
+
+    pub fn stats(&self, model: &str) -> Result<ServerStats> {
+        let worker = self
+            .workers
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model:?} is not served"))?;
+        Ok(worker.stats.lock().unwrap().snapshot())
+    }
+
+    pub fn served_models(&self) -> Vec<String> {
+        self.workers.keys().cloned().collect()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        // Close request channels first, then join workers.
+        let handles: Vec<JoinHandle<()>> = self
+            .workers
+            .values_mut()
+            .filter_map(|w| w.join.take())
+            .collect();
+        self.workers.clear(); // drops senders
+        for h in handles {
+            h.join().ok();
+        }
+    }
+}
+
+/// The device thread: engine + compile + batch loop.
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    artifacts_dir: &str,
+    ckpt_dir: &str,
+    model: &str,
+    cfg: WorkerConfig,
+    rx: Receiver<Request>,
+    stats: Arc<Mutex<WorkerStats>>,
+    ready: Sender<Result<()>>,
+) {
+    let setup = || -> Result<_> {
+        let engine = Engine::new(Manifest::load(artifacts_dir)?)?;
+        let info = engine.manifest.model(model)?.clone();
+        let params: Vec<Tensor> = {
+            let path = format!("{ckpt_dir}/{model}.ckpt");
+            match models::load_checkpoint(&path) {
+                Ok(named) => named.into_iter().map(|(_, t)| t).collect(),
+                Err(_) => models::init_params(&engine, &info, 7)?,
+            }
+        };
+        let art = match cfg.device {
+            Some(d) => models::art_fwd_abfp(model, d.n),
+            None => models::art_fwd_f32(model),
+        };
+        let exe = engine.executable(&art)?;
+        // Pre-marshal parameter literals once; they are identical for
+        // every request (the paper: weights converted to ABFP once).
+        let param_lits: Vec<xla::Literal> =
+            params.iter().map(lit_f32).collect::<Result<_>>()?;
+        Ok((engine, info, param_lits, exe))
+    };
+    let (_engine, info, param_lits, exe) = match setup() {
+        Ok(v) => {
+            ready.send(Ok(())).ok();
+            v
+        }
+        Err(e) => {
+            ready.send(Err(e)).ok();
+            return;
+        }
+    };
+
+    let b = info.batch_eval;
+    let in_elems: usize = info.input_shape.iter().product();
+    let policy = BatchPolicy {
+        max_batch: cfg.policy.max_batch.min(b),
+        ..cfg.policy
+    };
+    let mut noise_seed = 0x5e12_7e00u64;
+
+    while let Some(batch) = collect_batch(&rx, policy) {
+        let t_exec = Instant::now();
+        // Assemble the padded device batch.
+        let mut xshape = vec![b];
+        xshape.extend(&info.input_shape);
+        let mut xdata = vec![0.0f32; b * in_elems];
+        for (i, req) in batch.iter().enumerate() {
+            xdata[i * in_elems..(i + 1) * in_elems].copy_from_slice(req.x.data());
+        }
+        let x = Tensor::new(&xshape, xdata).unwrap();
+
+        // Weights were marshalled once at startup; only the dynamic
+        // inputs are created per batch (zero-copy via borrowed args).
+        let x_lit = lit_f32(&x).unwrap();
+        let mut dyn_lits: Vec<xla::Literal> = vec![x_lit];
+        if let Some(d) = cfg.device {
+            noise_seed = noise_seed.wrapping_add(1);
+            dyn_lits.push(lit_key(noise_seed));
+            dyn_lits.push(lit_scalars(d.gain, d.bits_w, d.bits_x, d.bits_y));
+            dyn_lits.push(xla::Literal::scalar(d.noise_lsb));
+        }
+        let args: Vec<&xla::Literal> =
+            param_lits.iter().chain(dyn_lits.iter()).collect();
+        let outs = match exe.run(&args) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("worker {model}: execute failed: {e}");
+                continue;
+            }
+        };
+        let out_tensors: Vec<Tensor> = outs
+            .iter()
+            .map(|o| to_tensor(o).unwrap())
+            .collect();
+        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+
+        // Fan results back out, slicing each example's rows.
+        let bsz = batch.len();
+        for (i, req) in batch.into_iter().enumerate() {
+            let outputs: Vec<Tensor> = out_tensors
+                .iter()
+                .map(|t| slice_example(t, i, b))
+                .collect();
+            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = (total_ms - exec_ms).max(0.0);
+            req.respond
+                .send(Response {
+                    outputs,
+                    queue_ms,
+                    total_ms,
+                    batch_size: bsz,
+                })
+                .ok();
+        }
+
+        let mut s = stats.lock().unwrap();
+        s.requests += bsz as u64;
+        s.batches += 1;
+        s.batch_sizes.push(bsz as f64);
+        s.exec_ms.push(exec_ms);
+        // Record per-request total latency (approximate: same for all).
+        for _ in 0..bsz {
+            s.latency.push(exec_ms);
+        }
+    }
+}
+
+/// Slice example `i` out of a batched output (leading dim = batch).
+fn slice_example(t: &Tensor, i: usize, batch: usize) -> Tensor {
+    let shape = t.shape();
+    if shape.is_empty() || shape[0] != batch {
+        return t.clone(); // scalar/global outputs are shared
+    }
+    let per = t.len() / batch;
+    let data = t.data()[i * per..(i + 1) * per].to_vec();
+    Tensor::new(&shape[1..], data).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_example_rows() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let s = slice_example(&t, 1, 2);
+        assert_eq!(s.shape(), &[3]);
+        assert_eq!(s.data(), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn slice_example_passthrough_scalars() {
+        let t = Tensor::scalar(5.0);
+        assert_eq!(slice_example(&t, 1, 4), t);
+    }
+}

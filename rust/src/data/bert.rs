@@ -1,0 +1,71 @@
+//! Synthetic span-extraction QA.
+//!
+//! The sequence starts with a query token `q` (drawn from a reserved
+//! range), followed by random filler tokens; the unique answer span is
+//! the contiguous triple `q q q` planted at a random position. The
+//! target is `[start, end]`. The model must relate the query position to
+//! the span via attention — a miniature of SQuAD extraction, with the
+//! span-F1 metric of the paper.
+
+use super::Dataset;
+use crate::rng::Pcg64;
+
+pub const VOCAB: u64 = 64;
+pub const SEQ: usize = 32;
+pub const SPAN_LEN: usize = 3;
+/// Query tokens live in [1, 9); filler in [16, 64); 0 is [CLS]-like.
+const QUERY_LO: u64 = 1;
+const QUERY_HI: u64 = 9;
+const FILLER_LO: u64 = 16;
+
+pub struct SpanQa;
+
+impl Dataset for SpanQa {
+    fn input_shape(&self) -> Vec<usize> {
+        vec![SEQ]
+    }
+
+    fn target_shape(&self) -> Vec<usize> {
+        vec![2]
+    }
+
+    fn example(&self, rng: &mut Pcg64, x: &mut [f32], y: &mut [f32]) {
+        let q = QUERY_LO + rng.below(QUERY_HI - QUERY_LO);
+        x[0] = q as f32;
+        for slot in x.iter_mut().skip(1) {
+            *slot = (FILLER_LO + rng.below(VOCAB - FILLER_LO)) as f32;
+        }
+        let start = 2 + rng.below((SEQ - SPAN_LEN - 2) as u64) as usize;
+        for t in 0..SPAN_LEN {
+            x[start + t] = q as f32;
+        }
+        y[0] = start as f32;
+        y[1] = (start + SPAN_LEN - 1) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_is_unique_query_run() {
+        let ds = SpanQa;
+        let b = ds.batch(&mut Pcg64::seeded(8), 64);
+        for i in 0..64 {
+            let row = &b.x.data()[i * SEQ..(i + 1) * SEQ];
+            let (s, e) = (b.y.data()[i * 2] as usize, b.y.data()[i * 2 + 1] as usize);
+            assert_eq!(e - s + 1, SPAN_LEN);
+            let q = row[0];
+            for t in s..=e {
+                assert_eq!(row[t], q);
+            }
+            // No other occurrence of q outside [s, e] and position 0.
+            for (t, &v) in row.iter().enumerate().skip(1) {
+                if !(s..=e).contains(&t) {
+                    assert_ne!(v, q, "row {i} pos {t}");
+                }
+            }
+        }
+    }
+}

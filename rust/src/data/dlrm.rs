@@ -1,0 +1,104 @@
+//! Synthetic click-through-rate logs from a fixed random teacher.
+//!
+//! 8 dense features ~ N(0,1) and 4 categorical ids; the click
+//! probability is a logistic teacher mixing a linear dense term,
+//! per-category biases and one dense-categorical interaction, with label
+//! noise. AUC of a learned model lands in the realistic 0.75–0.85 band.
+
+use super::Dataset;
+use crate::rng::Pcg64;
+
+pub const NUM_DENSE: usize = 8;
+pub const NUM_CAT: usize = 4;
+pub const CAT_VOCAB: u64 = 32;
+
+pub struct ClickLogs {
+    dense_w: Vec<f32>,
+    cat_bias: Vec<Vec<f32>>,
+    interact_w: Vec<f32>,
+}
+
+impl Default for ClickLogs {
+    fn default() -> Self {
+        // The teacher is fixed across runs (seeded separately from data).
+        let mut rng = Pcg64::new(0xd12a_4000, 9);
+        ClickLogs {
+            dense_w: rng.normal_vec(NUM_DENSE).iter().map(|v| v * 0.8).collect(),
+            cat_bias: (0..NUM_CAT)
+                .map(|_| rng.normal_vec(CAT_VOCAB as usize))
+                .collect(),
+            interact_w: rng.normal_vec(NUM_CAT),
+        }
+    }
+}
+
+impl Dataset for ClickLogs {
+    fn input_shape(&self) -> Vec<usize> {
+        vec![NUM_DENSE + NUM_CAT]
+    }
+
+    fn target_shape(&self) -> Vec<usize> {
+        vec![]
+    }
+
+    fn example(&self, rng: &mut Pcg64, x: &mut [f32], y: &mut [f32]) {
+        let mut logit = -0.3f32; // base rate below 50%
+        for d in 0..NUM_DENSE {
+            x[d] = rng.normal();
+            logit += self.dense_w[d] * x[d];
+        }
+        for c in 0..NUM_CAT {
+            let id = rng.below(CAT_VOCAB);
+            x[NUM_DENSE + c] = id as f32;
+            logit += 0.6 * self.cat_bias[c][id as usize];
+            // dense[c] interacts with the category (cross feature).
+            logit += self.interact_w[c] * x[c] * self.cat_bias[c][id as usize] * 0.3;
+        }
+        let p = 1.0 / (1.0 + (-logit).exp());
+        y[0] = if rng.next_f32() < p { 1.0 } else { 0.0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_binary_and_balancedish() {
+        let ds = ClickLogs::default();
+        let b = ds.batch(&mut Pcg64::seeded(9), 2000);
+        let pos: f64 = b.y.data().iter().map(|&v| v as f64).sum();
+        let rate = pos / 2000.0;
+        assert!(b.y.data().iter().all(|&v| v == 0.0 || v == 1.0));
+        assert!(rate > 0.2 && rate < 0.8, "click rate {rate}");
+    }
+
+    #[test]
+    fn cat_ids_in_vocab() {
+        let ds = ClickLogs::default();
+        let b = ds.batch(&mut Pcg64::seeded(10), 100);
+        for row in 0..100 {
+            for c in 0..NUM_CAT {
+                let v = b.x.data()[row * (NUM_DENSE + NUM_CAT) + NUM_DENSE + c];
+                assert!(v >= 0.0 && v < CAT_VOCAB as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn teacher_is_learnable_signal() {
+        // Labels must correlate with the first dense feature's teacher
+        // weight direction (sanity that the task is not pure noise).
+        let ds = ClickLogs::default();
+        let b = ds.batch(&mut Pcg64::seeded(11), 4000);
+        let stride = NUM_DENSE + NUM_CAT;
+        let mut cov = 0.0f64;
+        for i in 0..4000 {
+            let proj: f32 = (0..NUM_DENSE)
+                .map(|d| ds.dense_w[d] * b.x.data()[i * stride + d])
+                .sum();
+            cov += proj as f64 * (b.y.data()[i] as f64 - 0.5);
+        }
+        assert!(cov / 4000.0 > 0.1, "teacher signal too weak: {cov}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Synthetic dataset generators for the six MLPerf-archetype tasks.
+//!
+//! The paper evaluates on ImageNet/COCO/BraTS/Librispeech/SQuAD/Click-Logs;
+//! none are available here (repro gate), so each generator synthesizes a
+//! task with the same *structure* — the property the ABFP experiments
+//! actually stress (DESIGN.md section 2). All generators are
+//! deterministic given a seed, so every paper table is reproducible
+//! bit-for-bit across runs.
+//!
+//! Encoding contract with `python/compile/models/*` (shapes per example):
+//!   cnn   x (16,16,3) grating image, y () class in 0..10
+//!   ssd   x (24,24,3) scene,         y (5,) [class, cx, cy, w, h]
+//!   unet  x (16,16,1) blobs,         y (16,16) binary mask
+//!   gru   x (24,) token ids,         y () motif class in 0..12
+//!   bert  x (32,) token ids,         y (2,) [start, end]
+//!   dlrm  x (12,) 8 dense + 4 cat,   y () click in {0,1}
+
+mod bert;
+mod cnn;
+mod dlrm;
+mod gru;
+mod ssd;
+mod unet;
+
+use anyhow::{bail, Result};
+
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// A generated batch: flattened inputs and targets.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Tensor,
+}
+
+/// A deterministic synthetic dataset for one task.
+pub trait Dataset {
+    /// Per-example input shape (matches the model artifact).
+    fn input_shape(&self) -> Vec<usize>;
+    /// Per-example target shape.
+    fn target_shape(&self) -> Vec<usize>;
+    /// Generate one example into the provided buffers.
+    fn example(&self, rng: &mut Pcg64, x: &mut [f32], y: &mut [f32]);
+
+    /// Generate a batch of `b` examples.
+    fn batch(&self, rng: &mut Pcg64, b: usize) -> Batch {
+        let in_elems: usize = self.input_shape().iter().product();
+        let tgt_elems: usize = self.target_shape().iter().product::<usize>().max(1);
+        let mut xs = vec![0.0f32; b * in_elems];
+        let mut ys = vec![0.0f32; b * tgt_elems];
+        for i in 0..b {
+            self.example(
+                rng,
+                &mut xs[i * in_elems..(i + 1) * in_elems],
+                &mut ys[i * tgt_elems..(i + 1) * tgt_elems],
+            );
+        }
+        let mut xshape = vec![b];
+        xshape.extend(self.input_shape());
+        let mut yshape = vec![b];
+        yshape.extend(self.target_shape());
+        Batch {
+            x: Tensor::new(&xshape, xs).unwrap(),
+            y: Tensor::new(&yshape, ys).unwrap(),
+        }
+    }
+}
+
+/// Instantiate the dataset for a model by name.
+pub fn dataset_for(model: &str) -> Result<Box<dyn Dataset>> {
+    Ok(match model {
+        "cnn" => Box::new(cnn::Gratings),
+        "ssd" => Box::new(ssd::Scenes),
+        "unet" => Box::new(unet::Blobs),
+        "gru" => Box::new(gru::Motifs),
+        "bert" => Box::new(bert::SpanQa),
+        "dlrm" => Box::new(dlrm::ClickLogs::default()),
+        other => bail!("no dataset for model {other:?}"),
+    })
+}
+
+pub use bert::SpanQa;
+pub use cnn::Gratings;
+pub use dlrm::ClickLogs;
+pub use gru::Motifs;
+pub use ssd::Scenes;
+pub use unet::Blobs;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_and_are_deterministic() {
+        for name in ["cnn", "ssd", "unet", "gru", "bert", "dlrm"] {
+            let ds = dataset_for(name).unwrap();
+            let a = ds.batch(&mut Pcg64::seeded(7), 4);
+            let b = ds.batch(&mut Pcg64::seeded(7), 4);
+            assert_eq!(a.x, b.x, "{name} inputs not deterministic");
+            assert_eq!(a.y, b.y, "{name} targets not deterministic");
+            assert_eq!(a.x.shape()[0], 4);
+            assert!(a.x.data().iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(dataset_for("nope").is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Synthetic single-object detection scenes.
+//!
+//! One of four shapes (filled square, hollow square, disc, cross) is
+//! placed at a random position and scale over a noisy background; the
+//! target is `[class, cx, cy, w, h]` with box coordinates normalized to
+//! [0, 1]. This keeps SSD's two-head structure (classification +
+//! regression), whose noise-sensitivity the paper dissects in Fig. 5.
+
+use super::Dataset;
+use crate::rng::Pcg64;
+
+pub const CLASSES: usize = 4;
+pub const SIZE: usize = 24;
+
+pub struct Scenes;
+
+impl Dataset for Scenes {
+    fn input_shape(&self) -> Vec<usize> {
+        vec![SIZE, SIZE, 3]
+    }
+
+    fn target_shape(&self) -> Vec<usize> {
+        vec![5]
+    }
+
+    fn example(&self, rng: &mut Pcg64, x: &mut [f32], y: &mut [f32]) {
+        let class = rng.below(CLASSES as u64) as usize;
+        let half = rng.uniform(3.0, 6.0);
+        let cx = rng.uniform(half, SIZE as f32 - half);
+        let cy = rng.uniform(half, SIZE as f32 - half);
+        let color = [
+            rng.uniform(0.5, 1.0),
+            rng.uniform(0.5, 1.0),
+            rng.uniform(0.5, 1.0),
+        ];
+        // Noisy background.
+        for v in x.iter_mut() {
+            *v = 0.2 + rng.normal() * 0.05;
+        }
+        for i in 0..SIZE {
+            for j in 0..SIZE {
+                let (di, dj) = (i as f32 - cy, j as f32 - cx);
+                let inside = match class {
+                    0 => di.abs() <= half && dj.abs() <= half, // filled square
+                    1 => {
+                        // hollow square (ring)
+                        let (a, b) = (di.abs().max(dj.abs()), half);
+                        a <= b && a >= b - 2.0
+                    }
+                    2 => (di * di + dj * dj).sqrt() <= half, // disc
+                    _ => di.abs() <= 1.2 || dj.abs() <= 1.2, // cross arms
+                };
+                let in_extent = di.abs() <= half && dj.abs() <= half;
+                if inside && in_extent {
+                    for c in 0..3 {
+                        x[(i * SIZE + j) * 3 + c] = color[c];
+                    }
+                }
+            }
+        }
+        y[0] = class as f32;
+        y[1] = cx / SIZE as f32;
+        y[2] = cy / SIZE as f32;
+        y[3] = 2.0 * half / SIZE as f32;
+        y[4] = 2.0 * half / SIZE as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boxes_normalized() {
+        let ds = Scenes;
+        let b = ds.batch(&mut Pcg64::seeded(3), 64);
+        for row in 0..64 {
+            let y = &b.y.data()[row * 5..(row + 1) * 5];
+            assert!(y[0] >= 0.0 && y[0] < CLASSES as f32);
+            for &v in &y[1..] {
+                assert!((0.0..=1.0).contains(&v), "{y:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn object_brighter_than_background() {
+        let ds = Scenes;
+        let b = ds.batch(&mut Pcg64::seeded(4), 8);
+        // Mean pixel should exceed pure-background level.
+        assert!(b.x.mean() > 0.2);
+    }
+}

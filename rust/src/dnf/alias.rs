@@ -1,0 +1,127 @@
+//! Walker's alias method: O(1) categorical sampling.
+//!
+//! DNF samples a noise value per output element per step — millions of
+//! draws per finetuning run — so the sampler is the DNF hot path the
+//! paper discusses ("the key overhead during finetuning is the time
+//! taken to sample from a histogram"). The alias method makes each draw
+//! two uniforms and one table lookup regardless of bin count.
+
+use crate::rng::Pcg64;
+
+/// Precomputed alias table over `n` categories.
+#[derive(Debug, Clone)]
+pub struct AliasSampler {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasSampler {
+    /// Build from (not necessarily normalized) non-negative weights.
+    pub fn new(weights: &[f64]) -> AliasSampler {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        let mut scaled: Vec<f64> = weights
+            .iter()
+            .map(|&w| if total > 0.0 { w * n as f64 / total } else { 1.0 })
+            .collect();
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l as u32;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &l in &large {
+            prob[l] = 1.0;
+        }
+        for &s in &small {
+            prob[s] = 1.0; // numerical residue
+        }
+        AliasSampler { prob, alias }
+    }
+
+    /// Draw one category index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let n = self.prob.len();
+        let i = rng.below(n as u64) as usize;
+        if rng.next_f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(weights: &[f64], draws: usize) -> Vec<f64> {
+        let s = AliasSampler::new(weights);
+        let mut rng = Pcg64::seeded(42);
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..draws {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn matches_weights() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let emp = empirical(&w, 100_000);
+        let total: f64 = w.iter().sum();
+        for (e, &wi) in emp.iter().zip(&w) {
+            assert!((e - wi / total).abs() < 0.01, "{emp:?}");
+        }
+    }
+
+    #[test]
+    fn handles_zeros_and_spikes() {
+        let w = [0.0, 0.0, 1.0, 0.0];
+        let emp = empirical(&w, 10_000);
+        assert!(emp[2] > 0.999);
+        let spiky = [1e-12, 1.0, 1e-12];
+        let emp = empirical(&spiky, 10_000);
+        assert!(emp[1] > 0.99);
+    }
+
+    #[test]
+    fn uniform_all_equal() {
+        let emp = empirical(&[1.0; 7], 70_000);
+        for e in emp {
+            assert!((e - 1.0 / 7.0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn single_category() {
+        let s = AliasSampler::new(&[3.0]);
+        let mut rng = Pcg64::seeded(1);
+        assert_eq!(s.sample(&mut rng), 0);
+    }
+}

@@ -1,0 +1,99 @@
+//! The DNF noise histogram: 100 bins over the observed range, +0.5
+//! smoothing, uniform sampling within a bin.
+
+use crate::rng::Pcg64;
+use crate::stats::Histogram;
+
+/// A fitted, smoothed differential-noise histogram.
+#[derive(Debug, Clone)]
+pub struct NoiseHistogram {
+    hist: Histogram,
+}
+
+impl NoiseHistogram {
+    /// Fit over the sample range (symmetric-padded so a degenerate
+    /// all-equal sample still yields a usable distribution).
+    pub fn fit(samples: &[f32], bins: usize, smooth: f64) -> NoiseHistogram {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in samples {
+            lo = lo.min(v as f64);
+            hi = hi.max(v as f64);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            lo = -1e-6;
+            hi = 1e-6;
+        }
+        if hi - lo < 1e-12 {
+            let pad = lo.abs().max(1e-6) * 1e-3;
+            lo -= pad;
+            hi += pad;
+        }
+        let mut hist = Histogram::new(lo, hi, bins);
+        for &v in samples {
+            hist.push(v as f64);
+        }
+        hist.smooth(smooth);
+        NoiseHistogram { hist }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.hist.bins()
+    }
+
+    /// Normalized bin probabilities.
+    pub fn probs(&self) -> Vec<f64> {
+        let total = self.hist.total();
+        self.hist.counts.iter().map(|&c| c / total).collect()
+    }
+
+    /// Uniform draw within bin `i` (piecewise-constant density).
+    pub fn sample_in_bin(&self, i: usize, rng: &mut Pcg64) -> f32 {
+        let w = self.hist.bin_width();
+        (self.hist.lo + (i as f64 + rng.next_f64()) * w) as f32
+    }
+
+    pub fn range(&self) -> (f64, f64) {
+        (self.hist.lo, self.hist.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probs_sum_to_one_and_are_smoothed() {
+        let h = NoiseHistogram::fit(&[0.0, 0.1, 0.1, 0.2], 10, 0.5);
+        let p = h.probs();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // Smoothing: no zero-probability bins (paper footnote 3).
+        assert!(p.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn degenerate_sample_still_samples() {
+        let h = NoiseHistogram::fit(&[2.0; 50], 10, 0.5);
+        let mut rng = Pcg64::seeded(1);
+        let v = h.sample_in_bin(5, &mut rng);
+        assert!(v.is_finite());
+        let (lo, hi) = h.range();
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn empty_sample_is_safe() {
+        let h = NoiseHistogram::fit(&[], 10, 0.5);
+        assert!((h.probs().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_stay_in_range() {
+        let h = NoiseHistogram::fit(&[-3.0, 5.0], 20, 0.5);
+        let mut rng = Pcg64::seeded(2);
+        for i in 0..20 {
+            let v = h.sample_in_bin(i, &mut rng) as f64;
+            assert!(v >= -3.0 - 1e-6 && v <= 5.0 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Differential Noise Finetuning (paper section IV-B, Fig. 3).
+//!
+//! Rust owns the DNF machinery end to end:
+//!
+//! 1. **Calibrate**: run the `<model>_calib_t<n>` artifact once on one
+//!    batch; it returns, per weight-bearing layer, the differential noise
+//!    `dy^l = abfp_layer(x^l) - f32_layer(x^l)` with both layers fed the
+//!    *same* FLOAT32 input.
+//! 2. **Model**: build one 100-bin histogram per layer, smoothed by
+//!    adding 0.5 to every bin (the paper's footnote 3), and normalize it
+//!    into a sampling distribution (alias method for O(1) draws).
+//! 3. **Sample**: during finetuning, draw a noise tensor `xi^l` per tap
+//!    and feed it into the `<model>_train_dnf` artifact (Eq. 9).
+//!
+//! The per-layer statistics (mean / std of `dy^l`) are exactly what
+//! Fig. 5 plots; [`LayerNoise`] carries them.
+
+mod alias;
+mod histogram;
+
+pub use alias::AliasSampler;
+pub use histogram::NoiseHistogram;
+
+use anyhow::Result;
+
+use crate::models;
+use crate::rng::Pcg64;
+use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine};
+use crate::stats::Running;
+use crate::tensor::Tensor;
+
+/// The paper's histogram resolution (section V-B).
+pub const BINS: usize = 100;
+/// The paper's smoothing constant (footnote 3).
+pub const SMOOTH: f64 = 0.5;
+
+/// Differential-noise statistics of one layer (the Fig. 5 quantity).
+#[derive(Debug, Clone)]
+pub struct LayerNoise {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub mean: f64,
+    pub std: f64,
+    pub hist: NoiseHistogram,
+}
+
+/// Per-layer noise model for one (model, device-config) pair.
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    pub model: String,
+    pub layers: Vec<LayerNoise>,
+}
+
+/// Run the calibration artifact once and build the per-layer noise model.
+///
+/// `gain`, `bits`, `noise_lsb` select the simulated device; `seed` both
+/// the device noise and the calibration batch are derived from it.
+pub fn calibrate(
+    engine: &Engine,
+    model: &str,
+    params: &[Tensor],
+    batch_x: &Tensor,
+    gain: f32,
+    bits: (u32, u32, u32),
+    noise_lsb: f32,
+    seed: u64,
+) -> Result<NoiseModel> {
+    let tile = engine.manifest.finetune_tile;
+    let exe = engine.executable(&models::art_calib(model, tile))?;
+    let mut args: Vec<xla::Literal> =
+        params.iter().map(lit_f32).collect::<Result<_>>()?;
+    args.push(lit_f32(batch_x)?);
+    args.push(lit_key(seed));
+    args.push(lit_scalars(gain, bits.0, bits.1, bits.2));
+    args.push(xla::Literal::scalar(noise_lsb));
+    let outs = exe.run(&args)?;
+
+    let info = engine.manifest.model(model)?;
+    let mut layers = Vec::with_capacity(outs.len());
+    for (i, out) in outs.iter().enumerate() {
+        let diff = to_tensor(out)?;
+        let name = info
+            .taps
+            .get(i)
+            .map(|t| t.name.clone())
+            .unwrap_or_else(|| format!("tap{i}"));
+        layers.push(layer_noise(name, &diff));
+    }
+    Ok(NoiseModel {
+        model: model.to_string(),
+        layers,
+    })
+}
+
+/// Build one layer's noise description from its differential samples.
+pub fn layer_noise(name: String, diff: &Tensor) -> LayerNoise {
+    let mut run = Running::new();
+    for &v in diff.data() {
+        run.push(v as f64);
+    }
+    let hist = NoiseHistogram::fit(diff.data(), BINS, SMOOTH);
+    LayerNoise {
+        name,
+        shape: diff.shape().to_vec(),
+        mean: run.mean(),
+        std: run.std(),
+        hist,
+    }
+}
+
+impl NoiseModel {
+    /// Sample one xi tensor per tap, shaped for the train batch.
+    ///
+    /// `scale` multiplies sampled noise (1.0 = the paper's DNF; other
+    /// values support the ablation benches).
+    pub fn sample_taps(
+        &self,
+        tap_shapes: &[Vec<usize>],
+        rng: &mut Pcg64,
+        scale: f32,
+        only_layers: Option<&[String]>,
+    ) -> Vec<Tensor> {
+        self.layers
+            .iter()
+            .zip(tap_shapes)
+            .map(|(layer, shape)| {
+                let len: usize = shape.iter().product();
+                let active = only_layers
+                    .map(|names| names.iter().any(|n| n == &layer.name))
+                    .unwrap_or(true);
+                if !active || scale == 0.0 {
+                    return Tensor::zeros(shape);
+                }
+                let sampler = AliasSampler::new(&layer.hist.probs());
+                let mut data = Vec::with_capacity(len);
+                for _ in 0..len {
+                    let bin = sampler.sample(rng);
+                    data.push(layer.hist.sample_in_bin(bin, rng) * scale);
+                }
+                Tensor::new(shape, data).unwrap()
+            })
+            .collect()
+    }
+
+    /// Layer names ranked by descending noise std (the paper selects the
+    /// highest-variance layers of SSD for targeted DNF).
+    pub fn layers_by_std(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> = self
+            .layers
+            .iter()
+            .map(|l| (l.name.clone(), l.std))
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_noise_stats() {
+        let diff = Tensor::from_vec(vec![0.0, 1.0, -1.0, 0.5, -0.5]);
+        let ln = layer_noise("l0".into(), &diff);
+        assert!(ln.mean.abs() < 1e-9);
+        assert!(ln.std > 0.5 && ln.std < 1.0);
+        assert_eq!(ln.hist.bins(), BINS);
+    }
+
+    #[test]
+    fn sampling_matches_source_distribution() {
+        // Fit on a bimodal sample; sampled moments must track source.
+        let mut rng = Pcg64::seeded(3);
+        let mut src = Vec::new();
+        for _ in 0..5000 {
+            src.push(rng.normal() * 0.1 + if rng.next_f32() < 0.5 { -1.0 } else { 1.0 });
+        }
+        let t = Tensor::from_vec(src.clone());
+        let model = NoiseModel {
+            model: "test".into(),
+            layers: vec![layer_noise("l0".into(), &t)],
+        };
+        let shapes = vec![vec![20_000usize]];
+        let out = &model.sample_taps(&shapes, &mut rng, 1.0, None)[0];
+        let mean = out.mean();
+        let var: f64 = out
+            .data()
+            .iter()
+            .map(|&v| (v as f64 - mean).powi(2))
+            .sum::<f64>()
+            / out.len() as f64;
+        let src_mean: f64 = src.iter().map(|&v| v as f64).sum::<f64>() / src.len() as f64;
+        let src_var: f64 = src
+            .iter()
+            .map(|&v| (v as f64 - src_mean).powi(2))
+            .sum::<f64>()
+            / src.len() as f64;
+        assert!((mean - src_mean).abs() < 0.05, "{mean} vs {src_mean}");
+        assert!((var - src_var).abs() / src_var < 0.1, "{var} vs {src_var}");
+    }
+
+    #[test]
+    fn selective_layers_zero_inactive() {
+        let t = Tensor::from_vec(vec![1.0; 100]);
+        let model = NoiseModel {
+            model: "test".into(),
+            layers: vec![
+                layer_noise("a".into(), &t),
+                layer_noise("b".into(), &t),
+            ],
+        };
+        let shapes = vec![vec![8usize], vec![8usize]];
+        let mut rng = Pcg64::seeded(4);
+        let only = vec!["b".to_string()];
+        let xs = model.sample_taps(&shapes, &mut rng, 1.0, Some(&only));
+        assert!(xs[0].data().iter().all(|&v| v == 0.0));
+        assert!(xs[1].data().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn ranking_by_std() {
+        let small = Tensor::from_vec(vec![0.01, -0.01, 0.02, -0.02]);
+        let big = Tensor::from_vec(vec![1.0, -1.0, 2.0, -2.0]);
+        let model = NoiseModel {
+            model: "test".into(),
+            layers: vec![
+                layer_noise("small".into(), &small),
+                layer_noise("big".into(), &big),
+            ],
+        };
+        let ranked = model.layers_by_std();
+        assert_eq!(ranked[0].0, "big");
+    }
+}

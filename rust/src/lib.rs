@@ -1,0 +1,42 @@
+//! # ABFP — Adaptive Block Floating-Point for Analog Deep Learning Hardware
+//!
+//! A production-grade reproduction of Basumallik et al. (2022) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2 (build time)**: the ABFP Pallas kernel and the six
+//!   MLPerf-archetype models live in `python/compile/` and are AOT-lowered
+//!   to HLO-text artifacts (`make artifacts`).
+//! * **Layer 3 (this crate)**: everything at run time — the PJRT
+//!   [`runtime`], the serving [`coordinator`], the bit-exact [`abfp`]
+//!   device simulator, the [`dnf`] finetuning machinery, the [`energy`]
+//!   model, synthetic [`data`] generators, task [`metrics`], and the
+//!   [`sweep`] drivers that regenerate every table and figure of the
+//!   paper. Python never runs on the request path.
+//!
+//! Only the `xla` crate (and `anyhow`) is available as a dependency in
+//! this build environment, so the classic support crates are implemented
+//! in-repo: [`rng`] (PCG64 + distributions), [`json`], [`cli`],
+//! [`benchkit`] (criterion-lite), and [`stats`].
+
+pub mod abfp;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dnf;
+pub mod energy;
+pub mod json;
+pub mod metrics;
+pub mod models;
+pub mod numerics;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod sweep;
+pub mod tensor;
+pub mod train;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

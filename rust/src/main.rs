@@ -1,0 +1,259 @@
+//! `abfp` — the launcher. One subcommand per paper experiment plus
+//! pretraining and serving. Run `abfp help` for usage.
+
+use anyhow::{bail, Result};
+
+use abfp::abfp::DeviceConfig;
+use abfp::cli::Args;
+use abfp::config::SweepGrid;
+use abfp::coordinator::{BatchPolicy, Router, WorkerConfig};
+use abfp::data::dataset_for;
+use abfp::models;
+use abfp::rng::Pcg64;
+use abfp::runtime::Engine;
+use abfp::sweep::{bits, energy, fig5, figs1, table2, table3};
+use abfp::train::{Schedule, StepKind, Trainer};
+
+const USAGE: &str = "\
+abfp — Adaptive Block Floating-Point reproduction (Basumallik et al. 2022)
+
+USAGE: abfp <command> [flags]
+
+  pretrain      train FLOAT32 baselines for all six archetypes
+                  --models a,b  --steps N  --ckpt DIR  --seed N
+  sweep-table2  Table II / Fig 4 / Table S2 quality grids
+                  --models a,b  --repeats N  --samples N  --fast  --out DIR
+  fig5          per-layer differential-noise stds (Fig 5 / S2)
+                  --models cnn,ssd  --out DIR
+  finetune      Table III / S3: QAT vs DNF at tile 128, gain 8
+                  --models cnn,ssd  --steps N  --bits 8 (or 6)  --out DIR
+  figs1         Fig S1 numeric error distributions + Appendix A
+                  --repeats N  --rows N  --out DIR
+  bits          Fig 2 captured-bit windows             --out DIR
+  energy        section VI ADC energy analysis         --out DIR
+  serve         start the router and print latency stats
+                  --models a,b  --requests N  --tile N  --gain G  --f32
+  help          this text
+
+Common flags: --artifacts DIR (default artifacts), --ckpt DIR (default
+checkpoints), --out DIR (default reports).";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "sweep-table2" => cmd_table2(&args),
+        "fig5" => cmd_fig5(&args),
+        "finetune" => cmd_finetune(&args),
+        "figs1" => cmd_figs1(&args),
+        "bits" => cmd_bits(&args),
+        "energy" => cmd_energy(&args),
+        "serve" => cmd_serve(&args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn engine(args: &Args) -> Result<Engine> {
+    Engine::load(&args.str_or("artifacts", "artifacts"))
+}
+
+fn model_list(args: &Args) -> Vec<String> {
+    args.list("models")
+        .unwrap_or_else(|| models::MODEL_NAMES.iter().map(|s| s.to_string()).collect())
+}
+
+/// Per-model FLOAT32 pretraining budget (steps) — enough for each mini
+/// archetype to reach a strong baseline on its synthetic task.
+fn pretrain_steps(model: &str, flag: usize) -> usize {
+    if flag > 0 {
+        return flag;
+    }
+    match model {
+        "cnn" => 500,
+        "ssd" => 600,
+        "unet" => 300,
+        "gru" => 500,
+        "bert" => 700,
+        "dlrm" => 400,
+        _ => 400,
+    }
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let ckpt = args.str_or("ckpt", "checkpoints");
+    let steps_flag = args.usize_or("steps", 0)?;
+    let seed = args.u64_or("seed", 1)?;
+    for model in model_list(args) {
+        let steps = pretrain_steps(&model, steps_flag);
+        eprintln!("[pretrain] {model}: {steps} steps");
+        let mut tr = Trainer::new(&eng, &model, seed)?;
+        let ds = dataset_for(&model)?;
+        let sched = Schedule::step_decay(1e-3, 0.3, steps.div_ceil(3));
+        let logs = tr.run(
+            StepKind::F32,
+            ds.as_ref(),
+            &mut Pcg64::seeded(0xdada + seed),
+            steps,
+            &sched,
+            None,
+            (steps / 10).max(1),
+        )?;
+        for l in &logs {
+            eprintln!("  step {:>4}  loss {:.4}  lr {:.2e}", l.step, l.loss, l.lr);
+        }
+        let m = abfp::sweep::eval::eval_f32(&eng, &model, &tr.params, 256)?;
+        eprintln!("  {model}: FLOAT32 metric = {m:.4}");
+        tr.save_checkpoint(&format!("{ckpt}/{model}.ckpt"))?;
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let ckpt = args.str_or("ckpt", "checkpoints");
+    let out = args.str_or("out", "reports");
+    let mut grid = if args.bool("fast") {
+        SweepGrid::fast()
+    } else {
+        SweepGrid::default()
+    };
+    grid.repeats = args.usize_or("repeats", grid.repeats)?;
+    grid.eval_samples = args.usize_or("samples", grid.eval_samples)?;
+    let mut sweeps = Vec::new();
+    for model in model_list(args) {
+        eprintln!("[table2] {model}");
+        let params = abfp::sweep::eval::load_pretrained(&eng, &model, &ckpt)?;
+        sweeps.push(table2::sweep_model(&eng, &model, &params, &grid, true)?);
+    }
+    table2::write_reports(&out, &sweeps, &grid)?;
+    println!("{}", table2::render_table2(&sweeps, &grid));
+    eprintln!("reports written to {out}/table2.md, table_s2.md, fig4.txt");
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let ckpt = args.str_or("ckpt", "checkpoints");
+    let out = args.str_or("out", "reports");
+    let sel = args
+        .list("models")
+        .unwrap_or_else(|| vec!["cnn".into(), "ssd".into()]);
+    let gains = [1.0, 8.0, 16.0];
+    let bits_list = [(8, 8, 8), (6, 6, 8)];
+    let rows = fig5::run(&eng, &ckpt, &sel, &gains, &bits_list, 0.5)?;
+    fig5::write_reports(&out, &rows, eng.manifest.finetune_tile)?;
+    println!("{}", fig5::render(&rows, eng.manifest.finetune_tile));
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let ckpt = args.str_or("ckpt", "checkpoints");
+    let out = args.str_or("out", "reports");
+    let sel = args
+        .list("models")
+        .unwrap_or_else(|| vec!["cnn".into(), "ssd".into()]);
+    let steps = args.usize_or("steps", 150)?;
+    let bsel = args.usize_or("bits", 8)? as u32;
+    let mut results = Vec::new();
+    for model in sel {
+        let mut cfg = table3::FinetuneCfg::paper((bsel, bsel, 8), steps);
+        if model == "ssd" {
+            cfg.dnf_top_k = Some(3); // paper: noise only on noisiest layers
+        }
+        eprintln!("[finetune] {model} bits {bsel}/{bsel}/8 steps {steps}");
+        results.push(table3::finetune_model(&eng, &model, &ckpt, &cfg, true)?);
+    }
+    table3::write_reports(&out, &results)?;
+    println!("{}", table3::render(&results));
+    Ok(())
+}
+
+fn cmd_figs1(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "reports");
+    let repeats = args.usize_or("repeats", 3)?;
+    let rows = args.usize_or("rows", figs1::ROWS)?;
+    let cells = figs1::run(
+        &[8, 32, 128],
+        &[1.0, 2.0, 4.0, 8.0, 16.0],
+        &[0.0, 0.5],
+        repeats,
+        rows,
+    )?;
+    figs1::write_reports(&out, &cells, true, rows)?;
+    println!("{}", figs1::render(&cells));
+    Ok(())
+}
+
+fn cmd_bits(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "reports");
+    bits::write_reports(&out)?;
+    println!("{}", bits::render(8, 8, 8, 128, &[0, 1, 2, 3, 4]));
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "reports");
+    energy::write_reports(&out)?;
+    println!("{}", energy::render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let ckpt = args.str_or("ckpt", "checkpoints");
+    let sel = args
+        .list("models")
+        .unwrap_or_else(|| vec!["bert".into(), "dlrm".into()]);
+    let n_requests = args.usize_or("requests", 256)?;
+    let device = if args.bool("f32") {
+        None
+    } else {
+        Some(DeviceConfig::new(
+            args.usize_or("tile", 128)?,
+            (8, 8, 8),
+            args.f32_or("gain", 8.0)?,
+            0.5,
+        ))
+    };
+    let cfg = WorkerConfig {
+        device,
+        policy: BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?),
+    };
+    eprintln!("[serve] starting workers for {sel:?} (device: {device:?})");
+    let router = Router::start(&artifacts, &ckpt, &sel, cfg)?;
+
+    // Drive a closed-loop load: round-robin the served models.
+    let t0 = std::time::Instant::now();
+    let mut rng = Pcg64::seeded(0x5e12);
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let model = &sel[i % sel.len()];
+        let ds = dataset_for(model)?;
+        let batch = ds.batch(&mut rng, 1);
+        let example_shape: Vec<usize> = batch.x.shape()[1..].to_vec();
+        let x = batch.x.clone().reshape(&example_shape).unwrap();
+        pending.push(router.submit(model, x)?);
+    }
+    for rx in pending {
+        rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n_requests} requests in {wall:.2}s = {:.1} req/s",
+        n_requests as f64 / wall
+    );
+    for model in router.served_models() {
+        let s = router.stats(&model)?;
+        println!(
+            "  {model}: {} reqs, {} batches (mean {:.1}), exec {:.1} ms, p50 {:.1} ms, p95 {:.1} ms",
+            s.requests, s.batches, s.mean_batch, s.mean_exec_ms, s.p50_ms, s.p95_ms
+        );
+    }
+    Ok(())
+}

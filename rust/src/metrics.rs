@@ -1,0 +1,252 @@
+//! Task-quality metrics for the six archetypes — the "Model metrics" of
+//! Table II, computed by the coordinator from raw model outputs.
+//!
+//!   top1       — classification accuracy (ResNet50, RNN-T analogue)
+//!   detection  — mean(correct-class x IoU) (the one-object mAP analogue)
+//!   dice       — mean Dice over classes (3D U-Net's "mean accuracy")
+//!   span_f1    — SQuAD-style token-overlap F1 (BERT)
+//!   auc        — ROC AUC (DLRM)
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Compute the metric named in the manifest from model outputs + targets.
+pub fn compute(metric: &str, outputs: &[Tensor], y: &Tensor) -> Result<f64> {
+    match metric {
+        "top1" => top1(&outputs[0], y),
+        "detection" => detection(&outputs[0], &outputs[1], y),
+        "dice" => dice(&outputs[0], y),
+        "span_f1" => span_f1(&outputs[0], &outputs[1], y),
+        "auc" => auc(&outputs[0], y),
+        other => bail!("unknown metric {other:?}"),
+    }
+}
+
+/// Argmax over the last axis of a (B, C) tensor.
+fn argmax_rows(t: &Tensor) -> Vec<usize> {
+    let c = *t.shape().last().unwrap();
+    t.data()
+        .chunks(c)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+/// Top-1 accuracy: logits (B, C) vs labels (B,).
+pub fn top1(logits: &Tensor, y: &Tensor) -> Result<f64> {
+    let preds = argmax_rows(logits);
+    let correct = preds
+        .iter()
+        .zip(y.data())
+        .filter(|(&p, &t)| p == t as usize)
+        .count();
+    Ok(correct as f64 / preds.len() as f64)
+}
+
+/// Intersection-over-union of two (cx, cy, w, h) boxes.
+pub fn iou(a: &[f32], b: &[f32]) -> f64 {
+    let half = |v: &[f32]| {
+        let (cx, cy, w, h) = (v[0] as f64, v[1] as f64, v[2] as f64, v[3] as f64);
+        (cx - w / 2.0, cx + w / 2.0, cy - h / 2.0, cy + h / 2.0)
+    };
+    let (ax0, ax1, ay0, ay1) = half(a);
+    let (bx0, bx1, by0, by1) = half(b);
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let area_a = (ax1 - ax0) * (ay1 - ay0);
+    let area_b = (bx1 - bx0) * (by1 - by0);
+    let union = area_a + area_b - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// Detection score: mean over examples of (class correct ? IoU : 0) —
+/// the single-object analogue of mAP.
+pub fn detection(conf: &Tensor, boxes: &Tensor, y: &Tensor) -> Result<f64> {
+    let preds = argmax_rows(conf);
+    let b = preds.len();
+    let mut total = 0.0f64;
+    for i in 0..b {
+        let target = &y.data()[i * 5..(i + 1) * 5];
+        let pred_box = &boxes.data()[i * 4..(i + 1) * 4];
+        if preds[i] == target[0] as usize {
+            total += iou(pred_box, &target[1..5]);
+        }
+    }
+    Ok(total / b as f64)
+}
+
+/// Mean Dice over {background, foreground}: logits (B, H, W, 2) vs mask
+/// (B, H, W). This is the "mean accuracy" style metric of the 3D U-Net
+/// row in Table II.
+pub fn dice(logits: &Tensor, y: &Tensor) -> Result<f64> {
+    let px = y.len();
+    let mut inter = [0.0f64; 2];
+    let mut pred_n = [0.0f64; 2];
+    let mut true_n = [0.0f64; 2];
+    for i in 0..px {
+        let fg = logits.data()[i * 2 + 1] > logits.data()[i * 2];
+        let p = usize::from(fg);
+        let t = y.data()[i] as usize;
+        pred_n[p] += 1.0;
+        true_n[t] += 1.0;
+        if p == t {
+            inter[p] += 1.0;
+        }
+    }
+    let mut total = 0.0;
+    for c in 0..2 {
+        let denom = pred_n[c] + true_n[c];
+        total += if denom == 0.0 {
+            1.0
+        } else {
+            2.0 * inter[c] / denom
+        };
+    }
+    Ok(total / 2.0)
+}
+
+/// SQuAD-style span F1: predicted span = (argmax start, argmax end),
+/// token-overlap F1 against the gold span, averaged over examples.
+pub fn span_f1(start_logits: &Tensor, end_logits: &Tensor, y: &Tensor) -> Result<f64> {
+    let s_pred = argmax_rows(start_logits);
+    let e_pred = argmax_rows(end_logits);
+    let b = s_pred.len();
+    let mut total = 0.0f64;
+    for i in 0..b {
+        let (ps, pe) = (s_pred[i], e_pred[i].max(s_pred[i]));
+        let (ts, te) = (y.data()[i * 2] as usize, y.data()[i * 2 + 1] as usize);
+        let inter = (pe.min(te) + 1).saturating_sub(ps.max(ts)) as f64;
+        if inter > 0.0 {
+            let p = inter / (pe - ps + 1) as f64;
+            let r = inter / (te - ts + 1) as f64;
+            total += 2.0 * p * r / (p + r);
+        }
+    }
+    Ok(total / b as f64)
+}
+
+/// ROC AUC via the rank statistic (ties get midranks).
+pub fn auc(scores: &Tensor, y: &Tensor) -> Result<f64> {
+    let n = scores.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores.data()[a].partial_cmp(&scores.data()[b]).unwrap());
+    // Midrank assignment.
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores.data()[idx[j + 1]] == scores.data()[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let pos: f64 = y.data().iter().map(|&v| v as f64).sum();
+    let neg = n as f64 - pos;
+    if pos == 0.0 || neg == 0.0 {
+        return Ok(0.5);
+    }
+    let rank_sum: f64 = (0..n)
+        .filter(|&i| y.data()[i] == 1.0)
+        .map(|i| ranks[i])
+        .sum();
+    Ok((rank_sum - pos * (pos + 1.0) / 2.0) / (pos * neg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn top1_counts_matches() {
+        let logits = t(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 2.0, 1.0]);
+        let y = t(&[3], vec![0.0, 1.0, 1.0]);
+        assert!((top1(&logits, &y).unwrap() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iou_identical_and_disjoint() {
+        let a = [0.5, 0.5, 0.2, 0.2];
+        assert!((iou(&a, &a) - 1.0).abs() < 1e-9);
+        let b = [0.9, 0.9, 0.1, 0.1];
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = [0.25, 0.5, 0.5, 1.0];
+        let b = [0.5, 0.5, 0.5, 1.0];
+        // Overlap width 0.25 of two 0.5-wide boxes: 0.25/(0.5+0.5-0.25).
+        assert!((iou(&a, &b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detection_requires_class_match() {
+        let conf = t(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let boxes = t(&[2, 4], vec![0.5, 0.5, 0.2, 0.2, 0.5, 0.5, 0.2, 0.2]);
+        let y = t(
+            &[2, 5],
+            vec![0.0, 0.5, 0.5, 0.2, 0.2, 0.0, 0.5, 0.5, 0.2, 0.2],
+        );
+        // Example 0: class correct, perfect IoU; example 1: wrong class.
+        assert!((detection(&conf, &boxes, &y).unwrap() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dice_perfect_and_inverted() {
+        let logits = t(&[1, 2, 1, 2], vec![0.0, 1.0, 1.0, 0.0]);
+        let y = t(&[1, 2, 1], vec![1.0, 0.0]);
+        assert!((dice(&logits, &y).unwrap() - 1.0).abs() < 1e-12);
+        let y_bad = t(&[1, 2, 1], vec![0.0, 1.0]);
+        assert!(dice(&logits, &y_bad).unwrap() < 0.01);
+    }
+
+    #[test]
+    fn span_f1_exact_and_partial() {
+        // SEQ=4; gold span [1, 2].
+        let s = t(&[1, 4], vec![0.0, 9.0, 0.0, 0.0]);
+        let e = t(&[1, 4], vec![0.0, 0.0, 9.0, 0.0]);
+        let y = t(&[1, 2], vec![1.0, 2.0]);
+        assert!((span_f1(&s, &e, &y).unwrap() - 1.0).abs() < 1e-12);
+        // Predicted [2, 3] overlaps 1 token: p = 1/2, r = 1/2 -> F1 = 1/2.
+        let s2 = t(&[1, 4], vec![0.0, 0.0, 9.0, 0.0]);
+        let e2 = t(&[1, 4], vec![0.0, 0.0, 0.0, 9.0]);
+        assert!((span_f1(&s2, &e2, &y).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_perfect_random_inverted() {
+        let y = t(&[4], vec![0.0, 0.0, 1.0, 1.0]);
+        let perfect = t(&[4], vec![0.1, 0.2, 0.8, 0.9]);
+        assert!((auc(&perfect, &y).unwrap() - 1.0).abs() < 1e-12);
+        let inverted = t(&[4], vec![0.9, 0.8, 0.2, 0.1]);
+        assert!(auc(&inverted, &y).unwrap() < 1e-12);
+        let ties = t(&[4], vec![0.5, 0.5, 0.5, 0.5]);
+        assert!((auc(&ties, &y).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_labels() {
+        let y = t(&[3], vec![1.0, 1.0, 1.0]);
+        let s = t(&[3], vec![0.1, 0.5, 0.9]);
+        assert_eq!(auc(&s, &y).unwrap(), 0.5);
+    }
+}

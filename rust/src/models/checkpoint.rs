@@ -1,0 +1,116 @@
+//! Checkpoint I/O: trained parameters as a simple binary format.
+//!
+//! Layout: magic `ABFPCKPT`, u32 version, u32 tensor count, then per
+//! tensor: u32 name length, name bytes, u32 rank, u64 dims, f32 data
+//! (little endian throughout). The paper's "pre-trained checkpoints"
+//! (Table S1) are produced in-repo by `abfp pretrain` and consumed by
+//! every sweep.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"ABFPCKPT";
+const VERSION: u32 = 1;
+
+pub fn save_checkpoint(
+    path: impl AsRef<Path>,
+    named: &[(String, Tensor)],
+) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(named.len() as u32).to_le_bytes())?;
+    for (name, t) in named {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(&path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{:?}: not an ABFP checkpoint", path.as_ref());
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let rank = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let elems: usize = shape.iter().product();
+        let mut data = vec![0.0f32; elems];
+        let mut buf = vec![0u8; elems * 4];
+        f.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        out.push((String::from_utf8(name)?, Tensor::new(&shape, data)?));
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("abfp_ckpt_test");
+        let path = dir.join("m.ckpt");
+        let named = vec![
+            ("w".to_string(), Tensor::new(&[2, 3], vec![1.0; 6]).unwrap()),
+            ("b".to_string(), Tensor::scalar(-2.5)),
+        ];
+        save_checkpoint(&path, &named).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "w");
+        assert_eq!(back[0].1, named[0].1);
+        assert_eq!(back[1].1.data(), &[-2.5]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("abfp_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

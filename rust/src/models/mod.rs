@@ -1,0 +1,83 @@
+//! Model registry: binds a manifest [`crate::runtime::ModelInfo`] to its
+//! artifact names, dataset, and checkpoint I/O.
+
+mod checkpoint;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, ModelInfo};
+use crate::tensor::Tensor;
+
+/// All six archetypes, in the paper's Table I order.
+pub const MODEL_NAMES: [&str; 6] = ["cnn", "ssd", "unet", "gru", "bert", "dlrm"];
+
+/// Human-readable labels mapping archetypes to the paper's DNNs.
+pub fn paper_name(model: &str) -> &'static str {
+    match model {
+        "cnn" => "ResNet50 (MiniCNN)",
+        "ssd" => "SSD-ResNet34 (MiniSSD)",
+        "unet" => "3D U-Net (MiniUNet)",
+        "gru" => "RNN-T (MiniGRU)",
+        "bert" => "BERT-Large (MiniBERT)",
+        "dlrm" => "DLRM (MiniDLRM)",
+        _ => "?",
+    }
+}
+
+/// Artifact-name helpers (must match `python/compile/aot.py`).
+pub fn art_init(model: &str) -> String {
+    format!("{model}_init")
+}
+
+pub fn art_fwd_f32(model: &str) -> String {
+    format!("{model}_fwd_f32")
+}
+
+pub fn art_fwd_abfp(model: &str, tile: usize) -> String {
+    format!("{model}_fwd_abfp_t{tile}")
+}
+
+pub fn art_train_f32(model: &str) -> String {
+    format!("{model}_train_f32")
+}
+
+pub fn art_train_qat(model: &str, tile: usize) -> String {
+    format!("{model}_train_qat_t{tile}")
+}
+
+pub fn art_train_dnf(model: &str) -> String {
+    format!("{model}_train_dnf")
+}
+
+pub fn art_calib(model: &str, tile: usize) -> String {
+    format!("{model}_calib_t{tile}")
+}
+
+/// Initialize model parameters by running the `<model>_init` artifact.
+pub fn init_params(engine: &Engine, model: &ModelInfo, seed: u64) -> Result<Vec<Tensor>> {
+    let exe = engine.executable(&art_init(&model.name))?;
+    let outs = exe.run(&[crate::runtime::lit_key(seed)])?;
+    outs.iter().map(crate::runtime::to_tensor).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        assert_eq!(art_fwd_abfp("cnn", 128), "cnn_fwd_abfp_t128");
+        assert_eq!(art_train_qat("ssd", 128), "ssd_train_qat_t128");
+        assert_eq!(art_calib("cnn", 128), "cnn_calib_t128");
+        assert_eq!(art_init("dlrm"), "dlrm_init");
+    }
+
+    #[test]
+    fn paper_names_cover_all() {
+        for m in MODEL_NAMES {
+            assert_ne!(paper_name(m), "?");
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Scalar numerics shared by the ABFP device simulator: software
+//! BFLOAT16 (round-to-nearest-even), round-half-to-even, the symmetric
+//! fixed-point quantizer `Q` of Eq. (1), and the captured-bit-window
+//! analysis behind Fig. 2.
+//!
+//! The contract (DESIGN.md section 6) is that these functions match the
+//! jnp oracle bit-for-bit on f32 inputs; `rust/tests/golden.rs` checks
+//! that end-to-end through the PJRT artifacts.
+
+/// Round an f32 to the nearest BFLOAT16 value (RNE), returned as f32.
+///
+/// BFLOAT16 is the top 16 bits of IEEE-754 binary32; rounding adds
+/// `0x7FFF + lsb` before truncation, the standard RNE trick.
+pub fn bf16_round(v: f32) -> f32 {
+    if v.is_nan() {
+        return v;
+    }
+    let bits = v.to_bits();
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb) & 0xFFFF_0000;
+    f32::from_bits(rounded)
+}
+
+/// Round-half-to-even on f32 (matches `jnp.round` / IEEE roundTiesToEven).
+pub fn round_half_even(v: f32) -> f32 {
+    let floor = v.floor();
+    let diff = v - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
+    }
+}
+
+/// Discretization bin for symmetric signed quantization with `bits` bits:
+/// `delta_b = 1 / (2^(b-1) - 1)` (Eq. 1).
+pub fn delta(bits: u32) -> f32 {
+    1.0 / ((1u64 << (bits - 1)) - 1) as f32
+}
+
+/// Eq. (1): `Q(v; d, tau) = clamp(rne(v/d) * d, -tau, +tau)`.
+pub fn quantize(v: f32, d: f32, tau: f32) -> f32 {
+    (round_half_even(v / d) * d).clamp(-tau, tau)
+}
+
+/// Number of length-`n` tiles covering a reduction dim of `k`.
+pub fn num_tiles(k: usize, n: usize) -> usize {
+    k.div_ceil(n)
+}
+
+/// The captured-bit window of Fig. 2.
+///
+/// For an analog dot product with operand bitwidths `b_w`/`b_x`, tile
+/// width `n` and ADC output bitwidth `b_y`, the full product needs about
+/// `b_w + b_x + log2(n) - 1` bits. With gain `G = 2^g` the ADC captures
+/// the window `[msb_dropped, lsb_captured)` counted from the most
+/// significant product bit: each doubling of gain trades one captured
+/// most-significant bit for one recovered less-significant bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitWindow {
+    /// Total bits needed to represent the full dot-product output.
+    pub total_bits: u32,
+    /// Bits above the window lost to saturation (clamped).
+    pub saturated_msbs: u32,
+    /// First captured bit index (0 = the product MSB).
+    pub window_start: u32,
+    /// One-past-last captured bit index.
+    pub window_end: u32,
+}
+
+impl BitWindow {
+    /// Compute the window for gain `2^log2_gain` (Fig. 2 geometry).
+    pub fn new(b_w: u32, b_x: u32, b_y: u32, n: usize, log2_gain: u32) -> Self {
+        let total_bits = b_w + b_x + (n as f64).log2().ceil() as u32 - 1;
+        let saturated = log2_gain.min(total_bits);
+        let start = saturated;
+        let end = (start + b_y).min(total_bits);
+        BitWindow {
+            total_bits,
+            saturated_msbs: saturated,
+            window_start: start,
+            window_end: end,
+        }
+    }
+
+    /// Number of less-significant bits still lost below the window.
+    pub fn lost_lsbs(&self) -> u32 {
+        self.total_bits - self.window_end
+    }
+
+    /// Bits actually captured by the ADC.
+    pub fn captured(&self) -> u32 {
+        self.window_end - self.window_start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_exact_values_pass_through() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 384.0, -0.09375] {
+            assert_eq!(bf16_round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.00390625 = 1 + 2^-8: exactly halfway between bf16 neighbours
+        // 1.0 and 1.0078125; RNE picks the even mantissa (1.0).
+        assert_eq!(bf16_round(1.003_906_25), 1.0);
+        // 1.01171875 = 1 + 3*2^-8: halfway, rounds up to even 1.015625.
+        assert_eq!(bf16_round(1.011_718_75), 1.015_625);
+        // Just above halfway rounds up.
+        assert_eq!(bf16_round(1.004), 1.007_812_5);
+    }
+
+    #[test]
+    fn bf16_handles_signs_and_infinities() {
+        assert_eq!(bf16_round(-1.003_906_25), -1.0);
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert!(bf16_round(f32::NAN).is_nan());
+        // Large finite value overflowing bf16 mantissa rounds, not panics.
+        let v = 3.4e38f32;
+        assert!(bf16_round(v).is_infinite() || bf16_round(v) > 3.0e38);
+    }
+
+    #[test]
+    fn rne_ties() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(3.2), 3.0);
+        assert_eq!(round_half_even(-3.7), -4.0);
+    }
+
+    #[test]
+    fn delta_matches_paper() {
+        assert!((delta(8) - 1.0 / 127.0).abs() < 1e-9);
+        assert!((delta(6) - 1.0 / 31.0).abs() < 1e-9);
+        assert_eq!(delta(2), 1.0);
+    }
+
+    #[test]
+    fn quantize_clamp_and_grid() {
+        assert_eq!(quantize(5.0, 0.5, 1.0), 1.0);
+        assert_eq!(quantize(-5.0, 0.5, 1.0), -1.0);
+        assert_eq!(quantize(0.26, 0.5, 1.0), 0.5);
+        // Tie at 0.25/0.5 = 0.5 -> RNE -> 0.
+        assert_eq!(quantize(0.25, 0.5, 1.0), 0.0);
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let d = delta(6);
+        for i in -31..=31 {
+            let v = i as f32 * d;
+            assert_eq!(quantize(v, d, 1.0), v);
+        }
+    }
+
+    #[test]
+    fn bit_window_paper_example() {
+        // Paper section III-B: b_w = b_x = 8, n = 128 -> ~22 bits total.
+        let w = BitWindow::new(8, 8, 8, 128, 0);
+        assert_eq!(w.total_bits, 22);
+        assert_eq!(w.captured(), 8);
+        assert_eq!(w.lost_lsbs(), 14);
+        // Each gain doubling recovers one LSB and saturates one MSB.
+        let w4 = BitWindow::new(8, 8, 8, 128, 2);
+        assert_eq!(w4.saturated_msbs, 2);
+        assert_eq!(w4.lost_lsbs(), 12);
+        assert_eq!(w4.captured(), 8);
+    }
+
+    #[test]
+    fn bit_window_gain_cannot_exceed_total() {
+        let w = BitWindow::new(4, 4, 8, 8, 30);
+        assert!(w.window_end <= w.total_bits);
+        assert_eq!(w.saturated_msbs, w.total_bits);
+        assert_eq!(w.captured(), 0);
+    }
+
+    #[test]
+    fn num_tiles_ceil() {
+        assert_eq!(num_tiles(256, 128), 2);
+        assert_eq!(num_tiles(257, 128), 3);
+        assert_eq!(num_tiles(7, 8), 1);
+    }
+}

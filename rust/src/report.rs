@@ -1,0 +1,180 @@
+//! Report writers: markdown tables, CSV, and ASCII charts for the
+//! regenerated paper tables/figures under `reports/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple column-aligned markdown table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                let _ = write!(line, " {:w$} |", c, w = widths[i]);
+            }
+            line
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// Horizontal ASCII bar chart (for Fig. 4 / Fig. 5 style series).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    let max = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let filled = ((v / max) * width as f64).round().max(0.0) as usize;
+        let _ = writeln!(
+            out,
+            "{:lw$} | {:bar$} {:.4}",
+            l,
+            "#".repeat(filled.min(width)),
+            v,
+            lw = lw,
+            bar = width
+        );
+    }
+    out
+}
+
+/// ASCII histogram of a sample (for Fig. S1 error distributions).
+pub fn ascii_histogram(title: &str, samples: &[f64], bins: usize, width: usize) -> String {
+    if samples.is_empty() {
+        return format!("{title}\n(no samples)\n");
+    }
+    let lo = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    for &s in samples {
+        let i = (((s - lo) / span) * bins as f64) as usize;
+        counts[i.min(bins - 1)] += 1;
+    }
+    let max = *counts.iter().max().unwrap() as f64;
+    let mut out = format!("{title}  [{lo:+.3e}, {hi:+.3e}]\n");
+    for (i, &c) in counts.iter().enumerate() {
+        let center = lo + (i as f64 + 0.5) / bins as f64 * span;
+        let filled = ((c as f64 / max) * width as f64).round() as usize;
+        let _ = writeln!(out, "{center:+10.3e} | {}", "#".repeat(filled));
+    }
+    out
+}
+
+/// Write a string to `dir/name`, creating directories.
+pub fn write_report(dir: &str, name: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(Path::new(dir).join(name), content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = Table::new("T", &["model", "metric"]);
+        t.row(vec!["cnn".into(), "0.95".into()]);
+        t.row(vec!["bert-long-name".into(), "0.9".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.contains("| bert-long-name | 0.9"));
+        let lines: Vec<&str> = md.lines().filter(|l| l.starts_with('|')).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{md}");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn chart_scales() {
+        let s = bar_chart(
+            "chart",
+            &["a".into(), "bb".into()],
+            &[1.0, 2.0],
+            10,
+        );
+        assert!(s.contains("##########"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn histogram_runs() {
+        let s = ascii_histogram("h", &[0.0, 0.1, 0.1, 0.9], 4, 20);
+        assert!(s.lines().count() == 5);
+    }
+}

@@ -1,0 +1,220 @@
+//! Deterministic pseudo-random numbers: PCG64 plus the distributions the
+//! reproduction needs (uniform, normal, Laplace, categorical), and
+//! Fisher–Yates shuffling.
+//!
+//! Substrate note: no `rand` crate is available offline, and determinism
+//! across runs matters for EXPERIMENTS.md, so this is implemented from
+//! scratch. PCG-XSL-RR 128/64 follows O'Neill (2014).
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id (must be odd-ized).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    /// Convenience constructor on stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift.
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// deterministic across platforms).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Standard Laplace (b = 1) via inverse CDF.
+    pub fn laplace(&mut self) -> f32 {
+        let u = self.next_f64() - 0.5;
+        (-u.signum() * (1.0 - 2.0 * u.abs()).ln()) as f32
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut target = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.normal()).collect()
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn uniform_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.uniform(lo, hi)).collect()
+    }
+
+    /// Derive an independent generator (for per-worker streams).
+    pub fn split(&mut self) -> Pcg64 {
+        Pcg64::new(self.next_u64(), self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg64::seeded(7);
+        let v = rng.uniform_vec(20_000, -1.0, 1.0);
+        assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(11);
+        let v = rng.normal_vec(50_000);
+        let mean: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let var: f64 =
+            v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn laplace_moments() {
+        // Standard Laplace: mean 0, variance 2b^2 = 2.
+        let mut rng = Pcg64::seeded(13);
+        let v: Vec<f64> = (0..50_000).map(|_| rng.laplace() as f64).collect();
+        let mean: f64 = v.iter().sum::<f64>() / v.len() as f64;
+        let var: f64 = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 2.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut rng = Pcg64::seeded(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(v, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn categorical_distribution() {
+        let mut rng = Pcg64::seeded(9);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        let f2 = counts[2] as f64 / 30_000.0;
+        assert!((f2 - 0.7).abs() < 0.02, "{counts:?}");
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut base = Pcg64::seeded(21);
+        let mut a = base.split();
+        let mut b = base.split();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+}

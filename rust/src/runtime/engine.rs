@@ -1,0 +1,184 @@
+//! The PJRT engine: compile-once, execute-many for HLO-text artifacts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+use crate::tensor::Tensor;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwraps the 1-tuple convention
+    /// (`aot.py` lowers with `return_tuple=True`) into output literals.
+    /// Accepts owned or borrowed literals so callers can reuse
+    /// pre-marshalled inputs (e.g. the serving worker's weights).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                args.len()
+            );
+        }
+        let buffers = self.exe.execute::<L>(args)?;
+        let result = buffers[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (training loop hot path:
+    /// params never round-trip through the host between steps).
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let buffers = self.exe.execute_b(args)?;
+        Ok(buffers.into_iter().next().unwrap())
+    }
+
+    /// Number of outputs per the manifest.
+    pub fn num_outputs(&self) -> usize {
+        self.info.outputs.len()
+    }
+}
+
+/// A PJRT CPU client plus a compile cache over the manifest's artifacts.
+///
+/// Not `Send`: confine to the creating thread (DESIGN.md section 4; the
+/// coordinator gives each device worker its own Engine).
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        Ok(Engine {
+            manifest,
+            client: xla::PjRtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn load(artifacts_dir: &str) -> Result<Engine> {
+        Self::new(Manifest::load(artifacts_dir)?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.artifact(name)?.clone();
+        let path = info
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("bad path {:?}", info.file))?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(Executable {
+            exe: self.client.compile(&comp)?,
+            info,
+        });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a literal to the device (for `run_b` buffer chains).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// ---------------------------------------------------------- marshalling ---
+
+/// f32 tensor -> literal.
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+/// f32 scalar -> rank-0 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// PRNG key -> uint32[2] literal.
+pub fn lit_key(seed: u64) -> xla::Literal {
+    let hi = (seed >> 32) as u32;
+    let lo = seed as u32;
+    xla::Literal::vec1(&[hi, lo])
+}
+
+/// `[gain, delta_w, delta_x, delta_y]` runtime scalar pack — must match
+/// `compile/kernels/abfp.py::make_scalars`.
+pub fn lit_scalars(gain: f32, bw: u32, bx: u32, by: u32) -> xla::Literal {
+    let d = crate::numerics::delta;
+    xla::Literal::vec1(&[gain, d(bw), d(bx), d(by)])
+}
+
+/// Literal -> f32 tensor (reads the literal's own shape).
+pub fn to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Tensor::new(&dims, data)
+}
+
+/// Literal -> f32 scalar.
+pub fn to_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(Into::into)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = lit_f32(&t).unwrap();
+        let back = to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let lit = lit_scalar(2.5);
+        assert_eq!(to_scalar(&lit).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn key_literal_packs_seed() {
+        let lit = lit_key(0x0000_0001_0000_0002);
+        let v = lit.to_vec::<u32>().unwrap();
+        assert_eq!(v, vec![1, 2]);
+    }
+
+    #[test]
+    fn scalars_literal_matches_python_pack() {
+        let lit = lit_scalars(8.0, 8, 8, 8);
+        let v = lit.to_vec::<f32>().unwrap();
+        assert_eq!(v[0], 8.0);
+        assert!((v[1] - 1.0 / 127.0).abs() < 1e-9);
+    }
+}

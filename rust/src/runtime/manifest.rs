@@ -1,0 +1,236 @@
+//! The artifact manifest: signatures of every AOT-compiled computation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::json::{self, Value};
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v
+                .opt("name")
+                .map(|n| n.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            shape: v.get("shape")?.as_shape()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT artifact (an HLO-text file plus its signature).
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub model: Option<String>,
+    pub tile: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Calibration artifacts: tap names in output order.
+    pub taps: Vec<String>,
+}
+
+/// Per-model metadata (parameters, DNF taps, metric, batch sizes).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub params: Vec<TensorSpec>,
+    pub taps: Vec<TensorSpec>,
+    pub metric: String,
+    pub optimizer: String,
+    pub batch_eval: usize,
+    pub batch_train: usize,
+    pub input_shape: Vec<usize>,
+    pub target_shape: Vec<usize>,
+    pub tiles: Vec<usize>,
+    pub finetuned: bool,
+    pub num_outputs: usize,
+}
+
+impl ModelInfo {
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub finetune_tile: usize,
+    pub figs1_rows: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow!("cannot read manifest in {dir:?}: {e}; run `make artifacts`"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, mv) in v.get("models")?.as_obj()? {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                mv.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        Ok(TensorSpec {
+                            name: p.get("name")?.as_str()?.to_string(),
+                            shape: p.get("shape")?.as_shape()?,
+                            dtype: "float32".to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    params: specs("params")?,
+                    taps: specs("taps")?,
+                    metric: mv.get("metric")?.as_str()?.to_string(),
+                    optimizer: mv.get("optimizer")?.as_str()?.to_string(),
+                    batch_eval: mv.get("batch_eval")?.as_usize()?,
+                    batch_train: mv.get("batch_train")?.as_usize()?,
+                    input_shape: mv.get("input_shape")?.as_shape()?,
+                    target_shape: mv.get("target_shape")?.as_shape()?,
+                    tiles: mv.get("tiles")?.as_shape()?,
+                    finetuned: mv.get("finetuned")?.as_bool()?,
+                    num_outputs: mv.get("num_outputs")?.as_usize()?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for av in v.get("artifacts")?.as_arr()? {
+            let name = av.get("name")?.as_str()?.to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    file: dir.join(av.get("file")?.as_str()?),
+                    kind: av
+                        .opt("kind")
+                        .map(|k| k.as_str().map(str::to_string))
+                        .transpose()?
+                        .unwrap_or_default(),
+                    model: av
+                        .opt("model")
+                        .map(|m| m.as_str().map(str::to_string))
+                        .transpose()?,
+                    tile: av.opt("tile").map(|t| t.as_usize()).transpose()?,
+                    inputs: av
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: av
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    taps: av
+                        .opt("taps")
+                        .map(|t| -> Result<Vec<String>> {
+                            t.as_arr()?
+                                .iter()
+                                .map(|s| Ok(s.as_str()?.to_string()))
+                                .collect()
+                        })
+                        .transpose()?
+                        .unwrap_or_default(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            finetune_tile: v.get("finetune_tile")?.as_usize()?,
+            figs1_rows: v.get("figs1_rows")?.as_usize()?,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "finetune_tile": 128, "figs1_rows": 100,
+      "models": {"cnn": {
+        "params": [{"name": "c1.w", "shape": [3,3,3,16]}],
+        "taps": [{"name": "c1", "shape": [8192, 16]}],
+        "metric": "top1", "optimizer": "adamw",
+        "batch_eval": 32, "batch_train": 32,
+        "input_shape": [16,16,3], "target_shape": [],
+        "tiles": [8,32,128], "finetuned": true, "num_outputs": 1}},
+      "artifacts": [{
+        "name": "cnn_init", "file": "cnn_init.hlo.txt", "kind": "init",
+        "model": "cnn",
+        "inputs": [{"name": "key", "shape": [2], "dtype": "uint32"}],
+        "outputs": [{"shape": [3,3,3,16], "dtype": "float32"}]}]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.finetune_tile, 128);
+        let cnn = m.model("cnn").unwrap();
+        assert_eq!(cnn.params[0].shape, vec![3, 3, 3, 16]);
+        assert_eq!(cnn.metric, "top1");
+        assert!(cnn.finetuned);
+        let a = m.artifact("cnn_init").unwrap();
+        assert_eq!(a.inputs[0].dtype, "uint32");
+        assert_eq!(a.file, PathBuf::from("/tmp/a/cnn_init.hlo.txt"));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn param_elements() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.model("cnn").unwrap().param_elements(), 3 * 3 * 3 * 16);
+    }
+}

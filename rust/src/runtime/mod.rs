@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Threading model: `PjRtClient` is `Rc`-based and not `Send`, so an
+//! [`Engine`] is confined to the thread that created it. The serving
+//! [`crate::coordinator`] runs Engines on dedicated device threads and
+//! communicates through channels — the same discipline as a real
+//! accelerator stream.
+
+mod engine;
+mod manifest;
+
+pub use engine::{
+    lit_f32, lit_key, lit_scalar, lit_scalars, to_scalar, to_tensor, Engine,
+    Executable,
+};
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TensorSpec};

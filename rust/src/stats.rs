@@ -1,0 +1,251 @@
+//! Streaming statistics: Welford mean/variance, fixed-range histograms,
+//! and latency percentile sketches for the coordinator.
+
+/// Welford online mean / variance / extrema.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.n += 1;
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn extend(&mut self, vs: impl IntoIterator<Item = f64>) {
+        for v in vs {
+            self.push(v);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Sample standard deviation (n-1), the paper's Table S2 convention.
+    pub fn sample_std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-range equal-width histogram over [lo, hi].
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<f64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0.0; bins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.counts.len() as f64
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if v < self.lo {
+            self.underflow += 1;
+            self.counts[0] += 1.0; // clamp into the edge bins
+        } else if v >= self.hi {
+            self.overflow += 1;
+            let last = self.counts.len() - 1;
+            self.counts[last] += 1.0;
+        } else {
+            let idx = ((v - self.lo) / self.bin_width()) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[idx.min(last)] += 1.0;
+        }
+    }
+
+    /// Bin center for index i.
+    pub fn center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) * self.bin_width()
+    }
+
+    /// Additive smoothing (the paper's DNF adds 0.5 to every bin).
+    pub fn smooth(&mut self, add: f64) {
+        for c in &mut self.counts {
+            *c += add;
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// Reservoir of latency samples with exact percentiles (sufficient at
+/// serving-bench scale; switches to sampling above `cap`).
+#[derive(Debug, Clone)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    cap: usize,
+    seen: u64,
+}
+
+impl Percentiles {
+    pub fn new(cap: usize) -> Self {
+        Percentiles {
+            samples: Vec::new(),
+            cap,
+            seen: 0,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Reservoir sampling keeps the sketch unbiased.
+            let idx = (self.seen as usize * 2654435761) % self.seen as usize;
+            if idx < self.cap {
+                self.samples[idx] = v;
+            }
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[((q * (s.len() - 1) as f64).round()) as usize]
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let mut r = Running::new();
+        r.extend([1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(r.count(), 5);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert!((r.variance() - 2.0).abs() < 1e-12);
+        assert!((r.sample_std() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 5.0);
+    }
+
+    #[test]
+    fn welford_single_sample() {
+        let mut r = Running::new();
+        r.push(7.0);
+        assert_eq!(r.sample_std(), 0.0);
+        assert_eq!(r.mean(), 7.0);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        assert!(h.counts.iter().all(|&c| c == 1.0));
+        h.push(-1.0);
+        h.push(100.0);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts[0], 2.0);
+        assert_eq!(h.counts[9], 2.0);
+    }
+
+    #[test]
+    fn histogram_smoothing() {
+        let mut h = Histogram::new(-1.0, 1.0, 4);
+        h.push(0.0);
+        h.smooth(0.5);
+        assert_eq!(h.total(), 1.0 + 4.0 * 0.5);
+    }
+
+    #[test]
+    fn histogram_centers() {
+        let h = Histogram::new(-1.0, 1.0, 4);
+        assert!((h.center(0) + 0.75).abs() < 1e-12);
+        assert!((h.center(3) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_exact_small() {
+        let mut p = Percentiles::new(1000);
+        for i in 1..=100 {
+            p.push(i as f64);
+        }
+        assert_eq!(p.quantile(0.0), 1.0);
+        assert_eq!(p.quantile(1.0), 100.0);
+        assert!((p.quantile(0.5) - 50.0).abs() <= 1.0);
+        assert!((p.quantile(0.99) - 99.0).abs() <= 1.0);
+    }
+}

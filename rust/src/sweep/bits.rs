@@ -1,0 +1,68 @@
+//! Fig. 2: the captured-bit window as gain doubles.
+
+use anyhow::Result;
+
+use crate::numerics::BitWindow;
+use crate::report::{write_report, Table};
+
+/// Render the Fig. 2 diagram textually: for each gain, which bits of the
+/// full-precision dot-product output the ADC captures.
+pub fn render(b_w: u32, b_x: u32, b_y: u32, n: usize, gains: &[u32]) -> String {
+    let total = BitWindow::new(b_w, b_x, b_y, n, 0).total_bits;
+    let mut out = format!(
+        "## Fig. 2 — captured bits vs gain (b_W={b_w}, b_X={b_x}, b_Y={b_y}, n={n})\n\n\
+         Full output needs {total} bits (b_W + b_X + log2(n) - 1).\n\
+         `#` = captured by the ADC, `s` = saturated MSB, `.` = lost LSB.\n\n```\n"
+    );
+    for &log2_g in gains {
+        let w = BitWindow::new(b_w, b_x, b_y, n, log2_g);
+        let mut bar = String::new();
+        for bit in 0..total {
+            bar.push(if bit < w.window_start {
+                's'
+            } else if bit < w.window_end {
+                '#'
+            } else {
+                '.'
+            });
+        }
+        out.push_str(&format!("G = {:>4}  [{}]\n", 1u64 << log2_g, bar));
+    }
+    out.push_str("```\n\n");
+
+    let mut t = Table::new(
+        "window geometry",
+        &["gain", "saturated MSBs", "captured", "lost LSBs"],
+    );
+    for &log2_g in gains {
+        let w = BitWindow::new(b_w, b_x, b_y, n, log2_g);
+        t.row(vec![
+            (1u64 << log2_g).to_string(),
+            w.saturated_msbs.to_string(),
+            w.captured().to_string(),
+            w.lost_lsbs().to_string(),
+        ]);
+    }
+    out.push_str(&t.to_markdown());
+    out
+}
+
+pub fn write_reports(dir: &str) -> Result<()> {
+    // The paper's Fig. 2 setting: 8/8 operand bits, n = 128, 8 ADC bits.
+    write_report(dir, "fig2.md", &render(8, 8, 8, 128, &[0, 1, 2, 3, 4]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_geometry() {
+        let s = render(8, 8, 8, 128, &[0, 1, 2]);
+        assert!(s.contains("22 bits"));
+        // G=1: 8 captured at the top, 14 lost.
+        assert!(s.contains("G =    1  [########..............]"), "{s}");
+        // G=2: one MSB saturates, one extra LSB captured.
+        assert!(s.contains("G =    2  [s########.............]"), "{s}");
+    }
+}

@@ -1,0 +1,93 @@
+//! E1: the section VI energy analysis, regenerated as a report.
+
+use anyhow::Result;
+
+use crate::energy::{compare, full_precision_bits, DesignPoint};
+use crate::report::{write_report, Table};
+
+pub fn render() -> String {
+    let abfp = DesignPoint::abfp_resnet50();
+    let rekhi = DesignPoint::rekhi_optimal();
+    let cmp = compare(abfp, rekhi);
+    let mut out = String::from(
+        "## Section VI — ADC energy analysis (Rekhi et al. model)\n\n\
+         Claim to reproduce: ABFP at (n=128, G=8, 8 ADC bits) vs the\n\
+         optimal fixed-point design (n=8, 12.5 bits): ~23x bit saving,\n\
+         8x gain cost, ~2.8x net energy saving, 16x more MACs/cycle per\n\
+         MVM row.\n\n",
+    );
+    let mut t = Table::new("design comparison", &["quantity", "value", "paper"]);
+    t.row(vec![
+        "ADC bit-energy saving 2^(12.5-8)".into(),
+        format!("{:.2}x", cmp.bit_saving),
+        "~23x".into(),
+    ]);
+    t.row(vec![
+        "gain energy cost".into(),
+        format!("{:.0}x", cmp.gain_cost),
+        "8x".into(),
+    ]);
+    t.row(vec![
+        "net conversion energy saving".into(),
+        format!("{:.2}x", cmp.net_conversion_saving),
+        "~2.8x".into(),
+    ]);
+    t.row(vec![
+        "MACs/cycle (row factor)".into(),
+        format!("{:.0}x", (abfp.n / rekhi.n) as f64),
+        "16x".into(),
+    ]);
+    t.row(vec![
+        "ADC energy per MAC saving".into(),
+        format!("{:.1}x", cmp.per_mac_saving),
+        "(derived)".into(),
+    ]);
+    out.push_str(&t.to_markdown());
+
+    out.push_str("\n### Full-precision ADC requirement vs tile width\n\n");
+    let mut t2 = Table::new("", &["n", "bits needed (8/8 operands)"]);
+    for n in [8usize, 32, 128, 512] {
+        t2.row(vec![
+            n.to_string(),
+            format!("{:.1}", full_precision_bits(8, 8, n)),
+        ]);
+    }
+    out.push_str(&t2.to_markdown());
+
+    out.push_str("\n### Energy-per-conversion landscape (relative)\n\n");
+    let mut t3 = Table::new("", &["n", "adc_bits", "gain", "E/conv", "E/MAC"]);
+    for (n, bits, gain) in [
+        (8usize, 12.5f64, 1.0f64),
+        (8, 8.0, 1.0),
+        (32, 8.0, 4.0),
+        (128, 8.0, 8.0),
+        (128, 8.0, 16.0),
+        (128, 22.0, 1.0), // full precision, no gain: the 2^22 wall
+    ] {
+        let p = DesignPoint { n, adc_bits: bits, gain };
+        t3.row(vec![
+            n.to_string(),
+            format!("{bits}"),
+            format!("{gain}"),
+            format!("{:.3e}", p.adc_energy_per_conversion()),
+            format!("{:.3e}", p.adc_energy_per_mac()),
+        ]);
+    }
+    out.push_str(&t3.to_markdown());
+    out
+}
+
+pub fn write_reports(dir: &str) -> Result<()> {
+    write_report(dir, "energy.md", &render())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn render_contains_headline() {
+        let s = super::render();
+        assert!(s.contains("2.83x"), "{s}");
+        assert!(s.contains("22.63x"), "{s}");
+        assert!(s.contains("16x"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Shared evaluation: run a model (FLOAT32 twin or ABFP device) over a
+//! synthetic eval set and compute its task metric.
+
+use anyhow::Result;
+
+use crate::abfp::DeviceConfig;
+use crate::data::dataset_for;
+use crate::metrics;
+use crate::models;
+use crate::rng::Pcg64;
+use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine};
+use crate::tensor::Tensor;
+
+/// Evaluation seed base: the eval set is fixed across configs so Table II
+/// cells are comparable (paper evaluates a fixed validation set).
+pub const EVAL_DATA_SEED: u64 = 0xe7a1;
+
+/// Evaluate the FLOAT32 twin.
+pub fn eval_f32(
+    engine: &Engine,
+    model: &str,
+    params: &[Tensor],
+    samples: usize,
+) -> Result<f64> {
+    let info = engine.manifest.model(model)?.clone();
+    let exe = engine.executable(&models::art_fwd_f32(model))?;
+    let ds = dataset_for(model)?;
+    let mut rng = Pcg64::seeded(EVAL_DATA_SEED);
+    let b = info.batch_eval;
+    let batches = samples.div_ceil(b);
+    let mut metric_num = 0.0f64;
+    for _ in 0..batches {
+        let batch = ds.batch(&mut rng, b);
+        let mut args: Vec<xla::Literal> =
+            params.iter().map(lit_f32).collect::<Result<_>>()?;
+        args.push(lit_f32(&batch.x)?);
+        let outs = exe.run(&args)?;
+        let tensors: Vec<Tensor> =
+            outs.iter().map(to_tensor).collect::<Result<_>>()?;
+        metric_num += metrics::compute(&info.metric, &tensors, &batch.y)?;
+    }
+    Ok(metric_num / batches as f64)
+}
+
+/// Evaluate under the ABFP device model; `noise_seed` perturbs the
+/// simulated ADC noise (repeat with different seeds for Table S2).
+pub fn eval_abfp(
+    engine: &Engine,
+    model: &str,
+    params: &[Tensor],
+    cfg: DeviceConfig,
+    noise_seed: u64,
+    samples: usize,
+) -> Result<f64> {
+    let info = engine.manifest.model(model)?.clone();
+    let exe = engine.executable(&models::art_fwd_abfp(model, cfg.n))?;
+    let ds = dataset_for(model)?;
+    let mut rng = Pcg64::seeded(EVAL_DATA_SEED);
+    let b = info.batch_eval;
+    let batches = samples.div_ceil(b);
+    let mut metric_num = 0.0f64;
+    for bi in 0..batches {
+        let batch = ds.batch(&mut rng, b);
+        let mut args: Vec<xla::Literal> =
+            params.iter().map(lit_f32).collect::<Result<_>>()?;
+        args.push(lit_f32(&batch.x)?);
+        args.push(lit_key(noise_seed.wrapping_mul(1000).wrapping_add(bi as u64)));
+        args.push(lit_scalars(cfg.gain, cfg.bits_w, cfg.bits_x, cfg.bits_y));
+        args.push(xla::Literal::scalar(cfg.noise_lsb));
+        let outs = exe.run(&args)?;
+        let tensors: Vec<Tensor> =
+            outs.iter().map(to_tensor).collect::<Result<_>>()?;
+        metric_num += metrics::compute(&info.metric, &tensors, &batch.y)?;
+    }
+    Ok(metric_num / batches as f64)
+}
+
+/// Load the pretrained checkpoint for a model (produced by `abfp
+/// pretrain`), or fail with a actionable message.
+pub fn load_pretrained(
+    engine: &Engine,
+    model: &str,
+    ckpt_dir: &str,
+) -> Result<Vec<Tensor>> {
+    let path = format!("{ckpt_dir}/{model}.ckpt");
+    let named = models::load_checkpoint(&path).map_err(|e| {
+        anyhow::anyhow!("{e}; run `abfp pretrain --models {model}` first")
+    })?;
+    let info = engine.manifest.model(model)?;
+    anyhow::ensure!(
+        named.len() == info.params.len(),
+        "checkpoint/manifest mismatch for {model}"
+    );
+    Ok(named.into_iter().map(|(_, t)| t).collect())
+}

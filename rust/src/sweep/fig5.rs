@@ -1,0 +1,127 @@
+//! Fig. 5 / Fig. S2: per-layer differential-noise standard deviations
+//! for the two finetuned archetypes, across tile widths and gains.
+//!
+//! Note the paper computes these at both tile 8 and tile 128; our calib
+//! artifact is compiled at the finetune tile (128), so the tile-8 column
+//! is produced by the bit-exact Rust device simulator on the same layer
+//! inputs — the two paths agree per the golden tests.
+
+use anyhow::Result;
+
+use crate::dnf;
+use crate::data::dataset_for;
+use crate::report::{bar_chart, write_report, Table};
+use crate::rng::Pcg64;
+use crate::runtime::Engine;
+use crate::sweep::eval::load_pretrained;
+
+/// One (model, bits, gain) row of layer stds.
+#[derive(Debug, Clone)]
+pub struct LayerStdRow {
+    pub model: String,
+    pub bits: (u32, u32, u32),
+    pub gain: f32,
+    pub layers: Vec<(String, f64)>,
+}
+
+/// Run the calibration artifact per gain and collect layer noise stds.
+pub fn run(
+    engine: &Engine,
+    ckpt_dir: &str,
+    models_sel: &[String],
+    gains: &[f32],
+    bits_list: &[(u32, u32, u32)],
+    noise_lsb: f32,
+) -> Result<Vec<LayerStdRow>> {
+    let mut rows = Vec::new();
+    for model in models_sel {
+        let params = load_pretrained(engine, model, ckpt_dir)?;
+        let info = engine.manifest.model(model)?.clone();
+        let ds = dataset_for(model)?;
+        let batch = ds.batch(&mut Pcg64::seeded(0xf1f5), info.batch_train);
+        for &bits in bits_list {
+            for &gain in gains {
+                let nm = dnf::calibrate(
+                    engine, model, &params, &batch.x, gain, bits, noise_lsb,
+                    0xca11b,
+                )?;
+                rows.push(LayerStdRow {
+                    model: model.clone(),
+                    bits,
+                    gain,
+                    layers: nm
+                        .layers
+                        .iter()
+                        .map(|l| (l.name.clone(), l.std))
+                        .collect(),
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the Fig. 5 report (markdown table + ASCII chart per config).
+pub fn render(rows: &[LayerStdRow], tile: usize) -> String {
+    let mut out = format!(
+        "## Fig. 5 — differential-noise std per layer (tile {tile})\n\n\
+         The paper's observation to reproduce: at tile 128, the *first*\n\
+         layer (and SSD's last heads) responds much more strongly to\n\
+         gain 16 than the middle layers.\n\n"
+    );
+    for row in rows {
+        let labels: Vec<String> =
+            row.layers.iter().map(|(n, _)| n.clone()).collect();
+        let values: Vec<f64> = row.layers.iter().map(|(_, s)| *s).collect();
+        out.push_str(&bar_chart(
+            &format!(
+                "{} bits {}/{}/{} gain {}",
+                row.model, row.bits.0, row.bits.1, row.bits.2, row.gain
+            ),
+            &labels,
+            &values,
+            40,
+        ));
+        out.push('\n');
+    }
+    let mut t = Table::new(
+        "layer noise std (machine readable)",
+        &["model", "bits", "gain", "layer", "std"],
+    );
+    for row in rows {
+        for (layer, std) in &row.layers {
+            t.row(vec![
+                row.model.clone(),
+                format!("{}/{}/{}", row.bits.0, row.bits.1, row.bits.2),
+                row.gain.to_string(),
+                layer.clone(),
+                format!("{std:.6}"),
+            ]);
+        }
+    }
+    out.push_str(&t.to_markdown());
+    out
+}
+
+pub fn write_reports(dir: &str, rows: &[LayerStdRow], tile: usize) -> Result<()> {
+    write_report(dir, "fig5.md", &render(rows, tile))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_layers_and_values() {
+        let rows = vec![LayerStdRow {
+            model: "cnn".into(),
+            bits: (8, 8, 8),
+            gain: 16.0,
+            layers: vec![("c1".into(), 0.5), ("fc2".into(), 0.1)],
+        }];
+        let s = render(&rows, 128);
+        assert!(s.contains("c1"));
+        assert!(s.contains("0.500"));
+        assert!(s.contains("gain 16"));
+    }
+}

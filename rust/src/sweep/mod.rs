@@ -1,0 +1,17 @@
+//! Experiment drivers: one module per paper table/figure (DESIGN.md §5).
+//!
+//!   [`eval`]    — shared ABFP/FLOAT32 evaluation over a dataset
+//!   [`table2`]  — Table II + Fig. 4 + Table S2 quality grids
+//!   [`fig5`]    — per-layer differential-noise std (Fig. 5 / Fig. S2)
+//!   [`table3`]  — QAT vs DNF finetuning recovery (Table III / S3)
+//!   [`figs1`]   — numeric error distributions (Fig. S1, Appendix A)
+//!   [`bits`]    — captured-bit windows (Fig. 2)
+//!   [`energy`]  — section VI energy analysis (E1)
+
+pub mod bits;
+pub mod energy;
+pub mod eval;
+pub mod fig5;
+pub mod figs1;
+pub mod table2;
+pub mod table3;

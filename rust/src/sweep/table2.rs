@@ -1,0 +1,263 @@
+//! Table II (+ Fig. 4, Table S2): model quality across tile width x
+//! gain x bitwidth, with repeated noise seeds for standard deviations.
+
+use anyhow::Result;
+
+use crate::abfp::DeviceConfig;
+use crate::config::SweepGrid;
+use crate::report::{bar_chart, write_report, Table};
+use crate::runtime::Engine;
+use crate::stats::Running;
+use crate::sweep::eval;
+use crate::tensor::Tensor;
+
+/// One grid cell's aggregated quality.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub model: String,
+    pub cfg: DeviceConfig,
+    pub mean: f64,
+    pub std: f64,
+    pub repeats: usize,
+}
+
+/// Full sweep result for one model.
+#[derive(Debug, Clone)]
+pub struct ModelSweep {
+    pub model: String,
+    pub float32: f64,
+    pub cells: Vec<Cell>,
+}
+
+/// Run the Table II grid for one model with pretrained `params`.
+pub fn sweep_model(
+    engine: &Engine,
+    model: &str,
+    params: &[Tensor],
+    grid: &SweepGrid,
+    progress: bool,
+) -> Result<ModelSweep> {
+    let float32 = eval::eval_f32(engine, model, params, grid.eval_samples)?;
+    let mut cells = Vec::new();
+    for cfg in grid.configs() {
+        let mut run = Running::new();
+        for rep in 0..grid.repeats {
+            let m = eval::eval_abfp(
+                engine,
+                model,
+                params,
+                cfg,
+                noise_seed(rep),
+                grid.eval_samples,
+            )?;
+            run.push(m);
+        }
+        if progress {
+            eprintln!(
+                "  {model} n={:<3} bits={}/{}/{} G={:<4} -> {:.4} (f32 {:.4})",
+                cfg.n, cfg.bits_w, cfg.bits_x, cfg.bits_y, cfg.gain,
+                run.mean(), float32
+            );
+        }
+        cells.push(Cell {
+            model: model.to_string(),
+            cfg,
+            mean: run.mean(),
+            std: run.sample_std(),
+            repeats: grid.repeats,
+        });
+    }
+    Ok(ModelSweep {
+        model: model.to_string(),
+        float32,
+        cells,
+    })
+}
+
+/// Per-repeat ADC noise seed (the paper repeats each cell 10x / 3x).
+fn noise_seed(rep: usize) -> u64 {
+    0x5eed_0000 + rep as u64
+}
+
+/// Render the Table II block for a set of model sweeps (markdown).
+pub fn render_table2(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
+    let mut out = String::new();
+    for sw in sweeps {
+        out.push_str(&format!(
+            "\n#### {} — FLOAT32: {:.4}\n\n",
+            crate::models::paper_name(&sw.model),
+            sw.float32
+        ));
+        for &bits in &grid.bitwidths {
+            let mut t = Table::new(
+                &format!(
+                    "{} b_W/b_X/b_Y = {}/{}/{}",
+                    sw.model, bits.0, bits.1, bits.2
+                ),
+                &std::iter::once("tile \\ gain".to_string())
+                    .chain(grid.gains.iter().map(|g| format!("G={g}")))
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|s| s.as_str())
+                    .collect::<Vec<_>>(),
+            );
+            for &n in &grid.tiles {
+                let mut row = vec![format!("n={n}")];
+                for &g in &grid.gains {
+                    let cell = sw.cells.iter().find(|c| {
+                        c.cfg.n == n
+                            && c.cfg.gain == g
+                            && (c.cfg.bits_w, c.cfg.bits_x, c.cfg.bits_y) == bits
+                    });
+                    row.push(match cell {
+                        Some(c) => {
+                            let above = c.mean >= 0.99 * sw.float32;
+                            format!("{}{:.4}{}", if above { "**" } else { "" },
+                                    c.mean, if above { "**" } else { "" })
+                        }
+                        None => "-".to_string(),
+                    });
+                }
+                t.row(row);
+            }
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Render Table S2 (standard deviations across repeats).
+pub fn render_table_s2(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
+    let mut out = String::from("\n## Table S2 — standard deviations\n");
+    for sw in sweeps {
+        let mut t = Table::new(
+            &format!("{} (n={} repeats)", sw.model, grid.repeats),
+            &["tile", "bits", "gain", "std"],
+        );
+        for c in &sw.cells {
+            t.row(vec![
+                c.cfg.n.to_string(),
+                format!("{}/{}/{}", c.cfg.bits_w, c.cfg.bits_x, c.cfg.bits_y),
+                c.cfg.gain.to_string(),
+                format!("{:.5}", c.std),
+            ]);
+        }
+        out.push_str(&t.to_markdown());
+    }
+    out
+}
+
+/// Render Fig. 4: quality as % of FLOAT32 vs gain, per tile width.
+pub fn render_fig4(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
+    let mut out = String::from("\n## Fig. 4 — % of FLOAT32 quality vs gain (8/8/8)\n\n");
+    for sw in sweeps {
+        for &n in &grid.tiles {
+            let labels: Vec<String> =
+                grid.gains.iter().map(|g| format!("G={g}")).collect();
+            let values: Vec<f64> = grid
+                .gains
+                .iter()
+                .map(|&g| {
+                    sw.cells
+                        .iter()
+                        .find(|c| {
+                            c.cfg.n == n
+                                && c.cfg.gain == g
+                                && c.cfg.bits_w == 8
+                        })
+                        .map(|c| 100.0 * c.mean / sw.float32.max(1e-12))
+                        .unwrap_or(0.0)
+                })
+                .collect();
+            out.push_str(&bar_chart(
+                &format!("{} n={n} (% of FLOAT32; 99% line is the paper's bar)", sw.model),
+                &labels,
+                &values,
+                40,
+            ));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Write all Table-II-family reports.
+pub fn write_reports(
+    dir: &str,
+    sweeps: &[ModelSweep],
+    grid: &SweepGrid,
+) -> Result<()> {
+    write_report(dir, "table2.md", &render_table2(sweeps, grid))?;
+    write_report(dir, "table_s2.md", &render_table_s2(sweeps, grid))?;
+    write_report(dir, "fig4.txt", &render_fig4(sweeps, grid))?;
+    // Machine-readable CSV for downstream analysis.
+    let mut t = Table::new(
+        "",
+        &["model", "float32", "tile", "bw", "bx", "by", "gain", "mean", "std"],
+    );
+    for sw in sweeps {
+        for c in &sw.cells {
+            t.row(vec![
+                sw.model.clone(),
+                format!("{:.6}", sw.float32),
+                c.cfg.n.to_string(),
+                c.cfg.bits_w.to_string(),
+                c.cfg.bits_x.to_string(),
+                c.cfg.bits_y.to_string(),
+                c.cfg.gain.to_string(),
+                format!("{:.6}", c.mean),
+                format!("{:.6}", c.std),
+            ]);
+        }
+    }
+    write_report(dir, "table2.csv", &t.to_csv())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_sweep() -> ModelSweep {
+        let grid = SweepGrid::fast();
+        let mut cells = Vec::new();
+        for cfg in grid.configs() {
+            cells.push(Cell {
+                model: "cnn".into(),
+                cfg,
+                mean: if cfg.n == 8 { 0.95 } else { 0.80 },
+                std: 0.01,
+                repeats: 1,
+            });
+        }
+        ModelSweep {
+            model: "cnn".into(),
+            float32: 0.953,
+            cells,
+        }
+    }
+
+    #[test]
+    fn renders_bold_above_99pct() {
+        let grid = SweepGrid::fast();
+        let md = render_table2(&[fake_sweep()], &grid);
+        assert!(md.contains("**0.9500**"), "{md}");
+        assert!(md.contains("0.8000"));
+        assert!(!md.contains("**0.8000**"));
+    }
+
+    #[test]
+    fn fig4_normalizes_to_percent() {
+        let grid = SweepGrid::fast();
+        let txt = render_fig4(&[fake_sweep()], &grid);
+        assert!(txt.contains("99.6"), "{txt}"); // 0.95/0.953
+    }
+
+    #[test]
+    fn s2_lists_all_cells() {
+        let grid = SweepGrid::fast();
+        let md = render_table_s2(&[fake_sweep()], &grid);
+        assert_eq!(md.matches("0.01000").count(), grid.configs().len());
+    }
+}

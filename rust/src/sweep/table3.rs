@@ -1,0 +1,280 @@
+//! Table III (+ Table S3): finetuning recovery with QAT vs DNF at the
+//! paper's operating point (tile 128, gain 8) for the two models that
+//! fall below 99% of FLOAT32 there.
+
+use anyhow::Result;
+
+use crate::abfp::DeviceConfig;
+use crate::data::dataset_for;
+use crate::dnf;
+use crate::report::{write_report, Table};
+use crate::rng::Pcg64;
+use crate::runtime::Engine;
+use crate::stats::Running;
+use crate::sweep::eval;
+use crate::train::{Schedule, StepKind, Trainer};
+
+/// Finetuning hyperparameters (paper section V-B, scaled to the mini
+/// models: same optimizers/schedules, steps in place of epochs).
+#[derive(Debug, Clone, Copy)]
+pub struct FinetuneCfg {
+    pub gain: f32,
+    pub bits: (u32, u32, u32),
+    pub noise_lsb: f32,
+    pub steps: usize,
+    pub eval_samples: usize,
+    pub eval_repeats: usize,
+    /// DNF: add noise only to the top-k highest-variance layers
+    /// (paper's SSD recipe); None = all layers (paper's ResNet recipe).
+    pub dnf_top_k: Option<usize>,
+}
+
+impl FinetuneCfg {
+    pub fn paper(bits: (u32, u32, u32), steps: usize) -> FinetuneCfg {
+        FinetuneCfg {
+            gain: 8.0,
+            bits,
+            noise_lsb: 0.5,
+            steps,
+            eval_samples: 256,
+            eval_repeats: 3,
+            dnf_top_k: None,
+        }
+    }
+}
+
+/// One Table III row.
+#[derive(Debug, Clone)]
+pub struct FinetuneResult {
+    pub model: String,
+    pub bits: (u32, u32, u32),
+    pub float32: f64,
+    pub before: f64,
+    pub qat: f64,
+    pub qat_std: f64,
+    pub dnf: f64,
+    pub dnf_std: f64,
+    pub qat_step_ms: f64,
+    pub dnf_step_ms: f64,
+}
+
+/// Evaluate a parameter set under the Table III device config.
+fn eval_at(
+    engine: &Engine,
+    model: &str,
+    params: &[crate::tensor::Tensor],
+    cfg: &FinetuneCfg,
+) -> Result<(f64, f64)> {
+    let dev = DeviceConfig::new(
+        engine.manifest.finetune_tile,
+        cfg.bits,
+        cfg.gain,
+        cfg.noise_lsb,
+    );
+    let mut run = Running::new();
+    for rep in 0..cfg.eval_repeats {
+        run.push(eval::eval_abfp(
+            engine,
+            model,
+            params,
+            dev,
+            0xeea1 + rep as u64,
+            cfg.eval_samples,
+        )?);
+    }
+    Ok((run.mean(), run.sample_std()))
+}
+
+/// Run the full QAT-vs-DNF comparison for one model.
+pub fn finetune_model(
+    engine: &Engine,
+    model: &str,
+    ckpt_dir: &str,
+    cfg: &FinetuneCfg,
+    progress: bool,
+) -> Result<FinetuneResult> {
+    let params0 = eval::load_pretrained(engine, model, ckpt_dir)?;
+    let info = engine.manifest.model(model)?.clone();
+    let float32 = eval::eval_f32(engine, model, &params0, cfg.eval_samples)?;
+    let (before, _) = eval_at(engine, model, &params0, cfg)?;
+    if progress {
+        eprintln!("  {model}: FLOAT32 {float32:.4}, before finetune {before:.4}");
+    }
+
+    // Paper's recipes: ResNet50 QAT lr 1e-6 AdamW step-decay x0.3/epoch;
+    // SSD SGD lr 1e-6 (QAT) / 2.169e-5 (DNF) one-cycle cosine. Base lrs
+    // are scaled up for the mini models (they see far fewer steps).
+    let (qat_sched, dnf_sched) = if info.optimizer == "sgd" {
+        (
+            Schedule::one_cycle(3e-4),
+            Schedule::one_cycle(1e-3),
+        )
+    } else {
+        (
+            Schedule::step_decay(3e-4, 0.3, cfg.steps.div_ceil(3).max(1)),
+            Schedule::step_decay(5e-4, 0.3, cfg.steps.div_ceil(3).max(1)),
+        )
+    };
+
+    let ds = dataset_for(model)?;
+
+    // ---------------- QAT ----------------
+    let mut qat_tr = Trainer::from_params(engine, info.clone(), params0.clone());
+    let kind = StepKind::Qat {
+        gain: cfg.gain,
+        bits: cfg.bits,
+        noise_lsb: cfg.noise_lsb,
+    };
+    let t0 = std::time::Instant::now();
+    qat_tr.run(
+        kind,
+        ds.as_ref(),
+        &mut Pcg64::seeded(0x7e57_0001),
+        cfg.steps,
+        &qat_sched,
+        None,
+        cfg.steps.div_ceil(8),
+    )?;
+    let qat_step_ms = t0.elapsed().as_secs_f64() * 1e3 / cfg.steps as f64;
+    let (qat, qat_std) = eval_at(engine, model, &qat_tr.params, cfg)?;
+    if progress {
+        eprintln!("  {model}: QAT {qat:.4} ({qat_step_ms:.1} ms/step)");
+    }
+
+    // ---------------- DNF ----------------
+    // Step 1: calibrate the differential-noise histograms (one batch).
+    let calib_batch = ds.batch(&mut Pcg64::seeded(0xca11), info.batch_train);
+    let noise_model = dnf::calibrate(
+        engine,
+        model,
+        &params0,
+        &calib_batch.x,
+        cfg.gain,
+        cfg.bits,
+        cfg.noise_lsb,
+        0xd00f,
+    )?;
+    // Paper: for SSD add noise only to the highest-variance layers.
+    let only: Option<Vec<String>> = cfg.dnf_top_k.map(|k| {
+        noise_model
+            .layers_by_std()
+            .into_iter()
+            .take(k)
+            .map(|(n, _)| n)
+            .collect()
+    });
+    let tap_shapes: Vec<Vec<usize>> =
+        info.taps.iter().map(|t| t.shape.clone()).collect();
+
+    let mut dnf_tr = Trainer::from_params(engine, info.clone(), params0.clone());
+    let mut xi_rng = Pcg64::seeded(0xd0f5);
+    let nm = noise_model.clone();
+    let shapes = tap_shapes.clone();
+    let only_ref = only.clone();
+    let mut sampler = move || -> Result<Vec<crate::tensor::Tensor>> {
+        Ok(nm.sample_taps(&shapes, &mut xi_rng, 1.0, only_ref.as_deref()))
+    };
+    let t0 = std::time::Instant::now();
+    dnf_tr.run(
+        StepKind::Dnf,
+        ds.as_ref(),
+        &mut Pcg64::seeded(0x7e57_0002),
+        cfg.steps,
+        &dnf_sched,
+        Some(&mut sampler),
+        cfg.steps.div_ceil(8),
+    )?;
+    let dnf_step_ms = t0.elapsed().as_secs_f64() * 1e3 / cfg.steps as f64;
+    let (dnf_m, dnf_std) = eval_at(engine, model, &dnf_tr.params, cfg)?;
+    if progress {
+        eprintln!("  {model}: DNF {dnf_m:.4} ({dnf_step_ms:.1} ms/step)");
+    }
+
+    Ok(FinetuneResult {
+        model: model.to_string(),
+        bits: cfg.bits,
+        float32,
+        before,
+        qat,
+        qat_std,
+        dnf: dnf_m,
+        dnf_std,
+        qat_step_ms,
+        dnf_step_ms,
+    })
+}
+
+pub fn render(results: &[FinetuneResult]) -> String {
+    let mut out = String::from(
+        "## Table III — QAT vs DNF at tile 128, gain 8\n\n\
+         Paper shapes to reproduce: both methods lift quality toward the\n\
+         FLOAT32 line; DNF >= QAT on the SSD archetype; DNF's wall-clock\n\
+         per step is lower than QAT's (the paper reports ~4x on A100).\n\n",
+    );
+    let mut t = Table::new(
+        "",
+        &["model", "bits", "FLOAT32", "no finetune", "QAT", "DNF",
+          "QAT ms/step", "DNF ms/step"],
+    );
+    for r in results {
+        let mark = |v: f64| {
+            if v >= 0.99 * r.float32 {
+                format!("**{v:.4}**")
+            } else {
+                format!("{v:.4}")
+            }
+        };
+        t.row(vec![
+            r.model.clone(),
+            format!("{}/{}/{}", r.bits.0, r.bits.1, r.bits.2),
+            format!("{:.4}", r.float32),
+            mark(r.before),
+            mark(r.qat),
+            mark(r.dnf),
+            format!("{:.1}", r.qat_step_ms),
+            format!("{:.1}", r.dnf_step_ms),
+        ]);
+    }
+    out.push_str(&t.to_markdown());
+    out.push_str("\n### Table S3 — std across eval repeats\n\n");
+    let mut s3 = Table::new("", &["model", "bits", "QAT std", "DNF std"]);
+    for r in results {
+        s3.row(vec![
+            r.model.clone(),
+            format!("{}/{}/{}", r.bits.0, r.bits.1, r.bits.2),
+            format!("{:.4}", r.qat_std),
+            format!("{:.4}", r.dnf_std),
+        ]);
+    }
+    out.push_str(&s3.to_markdown());
+    out
+}
+
+pub fn write_reports(dir: &str, results: &[FinetuneResult]) -> Result<()> {
+    write_report(dir, "table3.md", &render(results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_marks_recovered() {
+        let r = FinetuneResult {
+            model: "cnn".into(),
+            bits: (8, 8, 8),
+            float32: 1.0,
+            before: 0.9,
+            qat: 0.995,
+            qat_std: 0.01,
+            dnf: 0.97,
+            dnf_std: 0.01,
+            qat_step_ms: 100.0,
+            dnf_step_ms: 25.0,
+        };
+        let s = render(&[r]);
+        assert!(s.contains("**0.9950**"));
+        assert!(!s.contains("**0.9000**"));
+        assert!(s.contains("Table S3"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Minimal dense f32 tensor: the ndarray-lite substrate used by the data
+//! generators, metrics, the device simulator, and literal marshalling.
+//!
+//! Row-major, contiguous, owned storage. Deliberately small: matmul,
+//! im2col, elementwise maps, reductions — exactly what the reproduction
+//! needs, nothing speculative.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!("shape {shape:?} wants {want} elements, got {}", data.len());
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor {
+            shape: vec![data.len()],
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if want != self.data.len() {
+            bail!("cannot reshape {:?} -> {shape:?}", self.shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// 2-D accessor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let cols = self.shape[self.shape.len() - 1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Number of rows when viewed as (rows, last-dim).
+    pub fn rows(&self) -> usize {
+        let cols = self.shape[self.shape.len() - 1];
+        self.data.len() / cols.max(1)
+    }
+
+    /// Elementwise map (returns a new tensor).
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Elementwise binary op.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// FLOAT32 matmul `self (M,K) @ other^T (N,K) -> (M,N)` —
+    /// weights output-features-major, matching the device layout.
+    pub fn matmul_nt(&self, w: &Tensor) -> Result<Tensor> {
+        if self.shape.len() != 2 || w.shape.len() != 2 {
+            bail!("matmul_nt wants 2-D operands");
+        }
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, kw) = (w.shape[0], w.shape[1]);
+        if k != kw {
+            bail!("reduction mismatch {k} vs {kw}");
+        }
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let xrow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let wrow = &w.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += xrow[t] * wrow[t];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let x = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::new(&[2, 2], vec![1.0, 1.0, 0.0, 1.0]).unwrap();
+        // x @ w^T: [[1*1+2*1, 1*0+2*1], [3+4, 4]]
+        let y = x.matmul_nt(&w).unwrap();
+        assert_eq!(y.data(), &[3.0, 2.0, 7.0, 4.0]);
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        let x = Tensor::zeros(&[2, 3]);
+        let w = Tensor::zeros(&[4, 2]);
+        assert!(x.matmul_nt(&w).is_err());
+    }
+
+    #[test]
+    fn map_zip_reductions() {
+        let a = Tensor::from_vec(vec![1.0, -2.0, 3.0]);
+        let b = a.map(|v| v * 2.0);
+        assert_eq!(b.data(), &[2.0, -4.0, 6.0]);
+        let c = a.zip(&b, |x, y| x + y).unwrap();
+        assert_eq!(c.data(), &[3.0, -6.0, 9.0]);
+        assert_eq!(a.max_abs(), 3.0);
+        assert!((a.mean() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reshape_and_rows() {
+        let t = Tensor::from_vec((0..12).map(|i| i as f32).collect())
+            .reshape(&[3, 4])
+            .unwrap();
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(t.rows(), 3);
+        assert!(t.clone().reshape(&[5, 2]).is_err());
+    }
+}

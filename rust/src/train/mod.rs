@@ -1,0 +1,225 @@
+//! Rust-driven training over AOT train-step artifacts.
+//!
+//! The Trainer owns model parameters and optimizer state as host tensors
+//! and drives the `<model>_train_{f32,qat,dnf}` artifacts: one PJRT
+//! execution per step, with data batching, learning-rate schedules and
+//! loss-curve logging on the Rust side. This realizes the paper's whole
+//! pipeline without Python: FLOAT32 pretraining ("the checkpoint"),
+//! QAT (section IV-A) and DNF (section IV-B) finetuning.
+
+mod schedule;
+
+pub use schedule::{LrSchedule, Schedule};
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::models;
+use crate::rng::Pcg64;
+use crate::runtime::{
+    lit_f32, lit_key, lit_scalar, lit_scalars, to_scalar, to_tensor, Engine,
+    ModelInfo,
+};
+use crate::tensor::Tensor;
+
+/// Which train-step artifact to drive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepKind {
+    /// FLOAT32 pretraining / baseline finetuning.
+    F32,
+    /// Quantization-aware training at the manifest's finetune tile:
+    /// (gain, bits, noise_lsb) select the simulated device.
+    Qat {
+        gain: f32,
+        bits: (u32, u32, u32),
+        noise_lsb: f32,
+    },
+    /// Differential noise finetuning; noise tensors come from
+    /// [`crate::dnf::NoiseModel::sample_taps`].
+    Dnf,
+}
+
+/// Training state: parameters + optimizer moments + step counter.
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub info: ModelInfo,
+    pub params: Vec<Tensor>,
+    opt_m: Vec<Tensor>,
+    opt_v: Vec<Tensor>,
+    step: f32,
+    noise_seed: u64,
+}
+
+/// One recorded training step for EXPERIMENTS.md loss curves.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f32,
+}
+
+impl<'e> Trainer<'e> {
+    /// Fresh model (runs the init artifact with `seed`).
+    pub fn new(engine: &'e Engine, model: &str, seed: u64) -> Result<Trainer<'e>> {
+        let info = engine.manifest.model(model)?.clone();
+        let params = models::init_params(engine, &info, seed)?;
+        Ok(Self::from_params(engine, info, params))
+    }
+
+    /// Resume from existing parameters.
+    pub fn from_params(
+        engine: &'e Engine,
+        info: ModelInfo,
+        params: Vec<Tensor>,
+    ) -> Trainer<'e> {
+        let zeros: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::zeros(p.shape()))
+            .collect();
+        Trainer {
+            engine,
+            info,
+            opt_m: zeros.clone(),
+            opt_v: zeros,
+            params,
+            step: 0.0,
+            noise_seed: 0x7261_696e,
+        }
+    }
+
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let named = models::load_checkpoint(path)?;
+        if named.len() != self.params.len() {
+            bail!(
+                "checkpoint has {} tensors, model wants {}",
+                named.len(),
+                self.params.len()
+            );
+        }
+        for (i, spec) in self.info.params.iter().enumerate() {
+            if named[i].0 != spec.name || named[i].1.shape() != &spec.shape[..] {
+                bail!("checkpoint tensor {i} mismatch: {:?}", named[i].0);
+            }
+        }
+        self.params = named.into_iter().map(|(_, t)| t).collect();
+        self.reset_opt();
+        Ok(())
+    }
+
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let named: Vec<(String, Tensor)> = self
+            .info
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|(s, t)| (s.name.clone(), t.clone()))
+            .collect();
+        models::save_checkpoint(path, &named)
+    }
+
+    /// Zero optimizer moments and the step counter (fresh finetune run).
+    pub fn reset_opt(&mut self) {
+        for t in self.opt_m.iter_mut().chain(self.opt_v.iter_mut()) {
+            t.data_mut().fill(0.0);
+        }
+        self.step = 0.0;
+    }
+
+    fn artifact_name(&self, kind: StepKind) -> String {
+        match kind {
+            StepKind::F32 => models::art_train_f32(&self.info.name),
+            StepKind::Qat { .. } => models::art_train_qat(
+                &self.info.name,
+                self.engine.manifest.finetune_tile,
+            ),
+            StepKind::Dnf => models::art_train_dnf(&self.info.name),
+        }
+    }
+
+    /// Run one training step; `xi` supplies DNF noise tensors (tap order).
+    pub fn step(
+        &mut self,
+        kind: StepKind,
+        batch_x: &Tensor,
+        batch_y: &Tensor,
+        lr: f32,
+        xi: Option<&[Tensor]>,
+    ) -> Result<f64> {
+        let exe = self.engine.executable(&self.artifact_name(kind))?;
+        let p = self.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * p + 8);
+        for t in self.params.iter().chain(&self.opt_m).chain(&self.opt_v) {
+            args.push(lit_f32(t)?);
+        }
+        args.push(lit_scalar(self.step));
+        args.push(lit_f32(batch_x)?);
+        args.push(lit_f32(batch_y)?);
+        args.push(lit_scalar(lr));
+        match kind {
+            StepKind::F32 => {}
+            StepKind::Qat {
+                gain,
+                bits,
+                noise_lsb,
+            } => {
+                self.noise_seed = self.noise_seed.wrapping_add(1);
+                args.push(lit_key(self.noise_seed));
+                args.push(lit_scalars(gain, bits.0, bits.1, bits.2));
+                args.push(lit_scalar(noise_lsb));
+            }
+            StepKind::Dnf => {
+                let xi = xi.ok_or_else(|| anyhow::anyhow!("DNF needs xi"))?;
+                if xi.len() != self.info.taps.len() {
+                    bail!(
+                        "expected {} xi tensors, got {}",
+                        self.info.taps.len(),
+                        xi.len()
+                    );
+                }
+                for t in xi {
+                    args.push(lit_f32(t)?);
+                }
+            }
+        }
+        let outs = exe.run(&args)?;
+        // Output layout: params, m, v, step, loss.
+        debug_assert_eq!(outs.len(), 3 * p + 2);
+        for i in 0..p {
+            self.params[i] = to_tensor(&outs[i])?;
+            self.opt_m[i] = to_tensor(&outs[p + i])?;
+            self.opt_v[i] = to_tensor(&outs[2 * p + i])?;
+        }
+        self.step = to_scalar(&outs[3 * p])?;
+        Ok(to_scalar(&outs[3 * p + 1])? as f64)
+    }
+
+    /// Drive `steps` training steps over a dataset, returning the loss
+    /// curve. DNF callers pass a sampler producing fresh xi per step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &mut self,
+        kind: StepKind,
+        ds: &dyn Dataset,
+        data_rng: &mut Pcg64,
+        steps: usize,
+        schedule: &Schedule,
+        mut xi_sampler: Option<&mut dyn FnMut() -> Result<Vec<Tensor>>>,
+        log_every: usize,
+    ) -> Result<Vec<StepLog>> {
+        let b = self.info.batch_train;
+        let mut logs = Vec::new();
+        for s in 0..steps {
+            let batch = ds.batch(data_rng, b);
+            let lr = schedule.lr(s, steps);
+            let xi = match &mut xi_sampler {
+                Some(f) => Some(f()?),
+                None => None,
+            };
+            let loss = self.step(kind, &batch.x, &batch.y, lr, xi.as_deref())?;
+            if s % log_every.max(1) == 0 || s + 1 == steps {
+                logs.push(StepLog { step: s, loss, lr });
+            }
+        }
+        Ok(logs)
+    }
+}

@@ -1,0 +1,98 @@
+//! Learning-rate schedules (section V-B of the paper).
+
+/// Schedule shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LrSchedule {
+    /// Constant learning rate.
+    Constant,
+    /// Multiplicative decay by `factor` every `every` steps (the paper's
+    /// ResNet50 recipe: x0.3 per epoch).
+    StepDecay { factor: f32, every: usize },
+    /// One-cycle cosine annealing (the paper's SSD recipe): warm up for
+    /// 10% of steps to `base`, cosine down to `base * floor_frac`.
+    OneCycleCosine { floor_frac: f32 },
+}
+
+/// A base learning rate plus a shape.
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub base: f32,
+    pub shape: LrSchedule,
+}
+
+impl Schedule {
+    pub fn constant(base: f32) -> Schedule {
+        Schedule {
+            base,
+            shape: LrSchedule::Constant,
+        }
+    }
+
+    pub fn step_decay(base: f32, factor: f32, every: usize) -> Schedule {
+        Schedule {
+            base,
+            shape: LrSchedule::StepDecay { factor, every },
+        }
+    }
+
+    pub fn one_cycle(base: f32) -> Schedule {
+        Schedule {
+            base,
+            shape: LrSchedule::OneCycleCosine { floor_frac: 0.01 },
+        }
+    }
+
+    /// Learning rate at step `s` of `total`.
+    pub fn lr(&self, s: usize, total: usize) -> f32 {
+        match self.shape {
+            LrSchedule::Constant => self.base,
+            LrSchedule::StepDecay { factor, every } => {
+                self.base * factor.powi((s / every.max(1)) as i32)
+            }
+            LrSchedule::OneCycleCosine { floor_frac } => {
+                let warm = (total / 10).max(1);
+                if s < warm {
+                    self.base * (s + 1) as f32 / warm as f32
+                } else {
+                    let t = (s - warm) as f32 / (total - warm).max(1) as f32;
+                    let floor = self.base * floor_frac;
+                    floor
+                        + 0.5
+                            * (self.base - floor)
+                            * (1.0 + (std::f32::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::constant(1e-3);
+        assert_eq!(s.lr(0, 100), 1e-3);
+        assert_eq!(s.lr(99, 100), 1e-3);
+    }
+
+    #[test]
+    fn step_decay_steps() {
+        let s = Schedule::step_decay(1.0, 0.3, 10);
+        assert_eq!(s.lr(0, 100), 1.0);
+        assert!((s.lr(10, 100) - 0.3).abs() < 1e-7);
+        assert!((s.lr(25, 100) - 0.09).abs() < 1e-7);
+    }
+
+    #[test]
+    fn one_cycle_warms_then_anneals() {
+        let s = Schedule::one_cycle(1.0);
+        assert!(s.lr(0, 100) < 0.2);
+        let peak = s.lr(10, 100);
+        assert!((peak - 1.0).abs() < 0.05, "peak {peak}");
+        assert!(s.lr(99, 100) < 0.1);
+        // Monotone decay after warmup.
+        assert!(s.lr(50, 100) > s.lr(80, 100));
+    }
+}

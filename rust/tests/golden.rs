@@ -1,0 +1,140 @@
+//! Golden tests: the three ABFP implementations must agree.
+//!
+//!   1. Pallas kernel (L1, inside the AOT artifacts)  — via PJRT
+//!   2. jnp oracle (L2 ref.py, checked by pytest against 1)
+//!   3. Rust device simulator (L3, `abfp::Device`)    — this file vs 1
+//!
+//! The contract is DESIGN.md section 6: identical scale/quantize/gain/
+//! accumulate semantics. The PJRT artifact samples device noise
+//! internally from a jax PRNG and the Rust simulator from PCG64, so the
+//! bit-exact comparison runs with noise_amp = 0; noise statistics are
+//! compared distributionally instead.
+//!
+//! Requires `make artifacts` (skips, loudly, when missing).
+
+use abfp::abfp::{Device, DeviceConfig};
+use abfp::rng::Pcg64;
+use abfp::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine};
+use abfp::tensor::Tensor;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("engine"))
+}
+
+fn rand_tensor(rng: &mut Pcg64, shape: &[usize], laplace: bool) -> Tensor {
+    let len: usize = shape.iter().product();
+    let data: Vec<f32> = (0..len)
+        .map(|_| {
+            let v = if laplace { rng.laplace() } else { rng.normal() };
+            abfp::numerics::bf16_round(v)
+        })
+        .collect();
+    Tensor::new(shape, data).unwrap()
+}
+
+/// max |a-b| tolerated: two bf16 ULPs at the output magnitude.
+fn assert_close_bf16(a: &Tensor, b: &Tensor, label: &str) {
+    assert_eq!(a.shape(), b.shape(), "{label}: shapes");
+    let mut flips = 0usize;
+    for (i, (&x, &y)) in a.data().iter().zip(b.data()).enumerate() {
+        let ulp = 2.0 * (x.abs().max(1e-30)).log2().floor().exp2() / 128.0;
+        if (x - y).abs() > 2.0 * ulp {
+            flips += 1;
+            assert!(
+                (x - y).abs() < 0.5 * x.abs().max(0.25),
+                "{label}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+    // Rounding-boundary flips must stay rare (see python/tests contract).
+    let allowed = (a.len() / 50).max(2);
+    assert!(flips <= allowed, "{label}: {flips} flips of {}", a.len());
+}
+
+#[test]
+fn quickstart_artifact_matches_rust_simulator_noiseless() {
+    let Some(engine) = engine() else { return };
+    let exe = engine.executable("quickstart").expect("compile");
+    let mut rng = Pcg64::seeded(99);
+    let x = rand_tensor(&mut rng, &[4, 64], false);
+    let w = rand_tensor(&mut rng, &[8, 64], true);
+
+    for gain in [1.0f32, 2.0, 8.0] {
+        let outs = exe
+            .run(&[
+                lit_f32(&x).unwrap(),
+                lit_f32(&w).unwrap(),
+                lit_key(7),
+                lit_scalars(gain, 8, 8, 8),
+                xla::Literal::scalar(0.0f32), // noiseless
+            ])
+            .expect("run");
+        let kernel_out = to_tensor(&outs[0]).unwrap();
+        let f32_out = to_tensor(&outs[1]).unwrap();
+
+        let cfg = DeviceConfig::new(8, (8, 8, 8), gain, 0.0);
+        let sim_out = Device::new(cfg, 1).matmul(&x, &w).unwrap();
+        assert_close_bf16(&kernel_out, &sim_out, &format!("gain {gain}"));
+
+        // And the f32 side of the artifact matches our tensor matmul.
+        let host_f32 = x.matmul_nt(&w).unwrap();
+        for (a, b) in f32_out.data().iter().zip(host_f32.data()) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn figs1_artifact_matches_simulator_error_profile() {
+    // Distributional agreement under noise: error std of kernel-vs-f32
+    // must match simulator-vs-f32 within 15% at several operating points.
+    let Some(engine) = engine() else { return };
+    let rows = engine.manifest.figs1_rows;
+    let mut rng = Pcg64::seeded(2022);
+    let x = rand_tensor(&mut rng, &[rows, 768], false);
+    let w = rand_tensor(&mut rng, &[768, 768], true);
+
+    for (tile, gain) in [(32usize, 4.0f32), (128, 8.0)] {
+        let exe = engine
+            .executable(&format!("figs1_t{tile}"))
+            .expect("compile");
+        let outs = exe
+            .run(&[
+                lit_f32(&x).unwrap(),
+                lit_f32(&w).unwrap(),
+                lit_key(5),
+                lit_scalars(gain, 8, 8, 8),
+                xla::Literal::scalar(0.5f32),
+            ])
+            .expect("run");
+        let kernel_out = to_tensor(&outs[0]).unwrap();
+        let f32_out = to_tensor(&outs[1]).unwrap();
+        let kstd = err_std(&kernel_out, &f32_out);
+
+        let cfg = DeviceConfig::new(tile, (8, 8, 8), gain, 0.5);
+        let sim = Device::new(cfg, 3).matmul(&x, &w).unwrap();
+        let host = x.matmul_nt(&w).unwrap();
+        let sstd = err_std(&sim, &host);
+
+        let rel = (kstd - sstd).abs() / sstd.max(1e-12);
+        assert!(
+            rel < 0.15,
+            "tile {tile} gain {gain}: kernel std {kstd} vs sim std {sstd}"
+        );
+    }
+}
+
+fn err_std(a: &Tensor, b: &Tensor) -> f64 {
+    let errs: Vec<f64> = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (*x - *y) as f64)
+        .collect();
+    let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+    (errs.iter().map(|e| (e - mean).powi(2)).sum::<f64>() / errs.len() as f64).sqrt()
+}

@@ -1,0 +1,143 @@
+//! Runtime integration: manifest loading, artifact execution across all
+//! six models, init determinism, and end-to-end metric plumbing.
+//!
+//! Requires `make artifacts` (skips, loudly, when missing).
+
+use abfp::data::dataset_for;
+use abfp::models;
+use abfp::rng::Pcg64;
+use abfp::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("engine"))
+}
+
+#[test]
+fn manifest_lists_all_models_and_artifacts() {
+    let Some(engine) = engine() else { return };
+    for name in models::MODEL_NAMES {
+        let info = engine.manifest.model(name).expect(name);
+        assert!(!info.params.is_empty());
+        assert!(info.num_outputs >= 1);
+        for tile in [8usize, 32, 128] {
+            engine
+                .manifest
+                .artifact(&models::art_fwd_abfp(name, tile))
+                .expect("abfp artifact");
+        }
+        engine
+            .manifest
+            .artifact(&models::art_train_f32(name))
+            .expect("train artifact");
+    }
+    // The two finetuned models carry QAT/DNF/calib artifacts.
+    for name in ["cnn", "ssd"] {
+        let tile = engine.manifest.finetune_tile;
+        engine
+            .manifest
+            .artifact(&models::art_train_qat(name, tile))
+            .unwrap();
+        engine
+            .manifest
+            .artifact(&models::art_train_dnf(name))
+            .unwrap();
+        engine
+            .manifest
+            .artifact(&models::art_calib(name, tile))
+            .unwrap();
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_matches_manifest_shapes() {
+    let Some(engine) = engine() else { return };
+    let info = engine.manifest.model("dlrm").unwrap();
+    let a = models::init_params(&engine, info, 42).unwrap();
+    let b = models::init_params(&engine, info, 42).unwrap();
+    let c = models::init_params(&engine, info, 43).unwrap();
+    assert_eq!(a.len(), info.params.len());
+    for (i, spec) in info.params.iter().enumerate() {
+        assert_eq!(a[i].shape(), &spec.shape[..], "{}", spec.name);
+        assert_eq!(a[i], b[i], "init not deterministic: {}", spec.name);
+    }
+    assert!(a.iter().zip(&c).any(|(x, y)| x != y), "seed ignored");
+}
+
+#[test]
+fn all_models_forward_f32_and_abfp() {
+    let Some(engine) = engine() else { return };
+    for name in models::MODEL_NAMES {
+        let info = engine.manifest.model(name).unwrap().clone();
+        let params = models::init_params(&engine, &info, 7).unwrap();
+        let ds = dataset_for(name).unwrap();
+        let batch = ds.batch(&mut Pcg64::seeded(1), info.batch_eval);
+
+        // FLOAT32 twin.
+        let exe = engine.executable(&models::art_fwd_f32(name)).unwrap();
+        let mut args: Vec<xla::Literal> =
+            params.iter().map(|p| lit_f32(p).unwrap()).collect();
+        args.push(lit_f32(&batch.x).unwrap());
+        let outs = exe.run(&args).unwrap();
+        assert_eq!(outs.len(), info.num_outputs, "{name} f32 outputs");
+
+        // ABFP device at tile 8, paper default.
+        let exe = engine.executable(&models::art_fwd_abfp(name, 8)).unwrap();
+        let mut args: Vec<xla::Literal> =
+            params.iter().map(|p| lit_f32(p).unwrap()).collect();
+        args.push(lit_f32(&batch.x).unwrap());
+        args.push(lit_key(3));
+        args.push(lit_scalars(1.0, 8, 8, 8));
+        args.push(xla::Literal::scalar(0.5f32));
+        let outs = exe.run(&args).unwrap();
+        assert_eq!(outs.len(), info.num_outputs, "{name} abfp outputs");
+        for o in &outs {
+            let t = to_tensor(o).unwrap();
+            assert!(
+                t.data().iter().all(|v| v.is_finite()),
+                "{name}: non-finite abfp output"
+            );
+        }
+
+        // Metric plumbing accepts the outputs.
+        let tensors: Vec<_> = outs.iter().map(|o| to_tensor(o).unwrap()).collect();
+        let m = abfp::metrics::compute(&info.metric, &tensors, &batch.y).unwrap();
+        assert!((0.0..=1.0).contains(&m), "{name}: metric {m}");
+    }
+}
+
+#[test]
+fn abfp_noise_changes_outputs_but_seed_reproduces() {
+    let Some(engine) = engine() else { return };
+    let info = engine.manifest.model("cnn").unwrap().clone();
+    let params = models::init_params(&engine, &info, 7).unwrap();
+    let ds = dataset_for("cnn").unwrap();
+    let batch = ds.batch(&mut Pcg64::seeded(2), info.batch_eval);
+    let exe = engine.executable(&models::art_fwd_abfp("cnn", 32)).unwrap();
+    let run = |seed: u64| {
+        let mut args: Vec<xla::Literal> =
+            params.iter().map(|p| lit_f32(p).unwrap()).collect();
+        args.push(lit_f32(&batch.x).unwrap());
+        args.push(lit_key(seed));
+        args.push(lit_scalars(2.0, 8, 8, 8));
+        args.push(xla::Literal::scalar(0.5f32));
+        to_tensor(&exe.run(&args).unwrap()[0]).unwrap()
+    };
+    let a = run(1);
+    let b = run(1);
+    let c = run(2);
+    assert_eq!(a, b, "same seed must reproduce");
+    assert_ne!(a, c, "different seed must perturb outputs");
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(engine) = engine() else { return };
+    let before = engine.compiled_count();
+    let _a = engine.executable("quickstart").unwrap();
+    let _b = engine.executable("quickstart").unwrap();
+    assert_eq!(engine.compiled_count(), before + 1);
+}

@@ -1,0 +1,274 @@
+//! Property-based tests on the ABFP numeric format (proptest-lite:
+//! seeded random case generation with explicit shrink-free reporting —
+//! every failure message carries the case seed).
+//!
+//! Invariants covered (DESIGN.md section 6):
+//!   P1  quantization idempotence and grid membership
+//!   P2  clamp bounds: |Q(v)| <= tau always
+//!   P3  power-of-two scale equivariance of the device matmul
+//!   P4  zero padding exactness for ragged K
+//!   P5  permutation equivariance: permuting tile-interior columns of
+//!       both operands together leaves the result unchanged
+//!   P6  gain is divided out exactly in the noiseless, saturation-free
+//!       high-precision regime
+//!   P7  monotonicity: more output bits never increase total error
+//!   P8  noise model: empirical ADC-noise variance matches (n d_Y)^2/12
+//!   P9  bf16 round is idempotent and monotone
+//!   P10 simulator determinism across identical seeds
+
+use abfp::abfp::{Device, DeviceConfig};
+use abfp::numerics::{bf16_round, delta, quantize};
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
+
+const CASES: u64 = 30;
+
+fn rand_t(rng: &mut Pcg64, m: usize, k: usize, scale: f32) -> Tensor {
+    Tensor::new(
+        &[m, k],
+        (0..m * k).map(|_| bf16_round(rng.normal() * scale)).collect(),
+    )
+    .unwrap()
+}
+
+fn rand_dims(rng: &mut Pcg64) -> (usize, usize, usize, usize) {
+    let m = 1 + rng.below(6) as usize;
+    let k = 1 + rng.below(200) as usize;
+    let n = 1 + rng.below(6) as usize;
+    let tile = [8usize, 32, 128][rng.below(3) as usize];
+    (m, k, n, tile)
+}
+
+#[test]
+fn p1_quantize_idempotent_and_on_grid() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::seeded(1000 + case);
+        let bits = 2 + rng.below(10) as u32;
+        let d = delta(bits);
+        for _ in 0..100 {
+            let v = rng.normal() * 3.0;
+            let q = quantize(v, d, 1.0);
+            assert_eq!(quantize(q, d, 1.0), q, "case {case}: idempotence");
+            let steps = q / d;
+            assert!(
+                (steps - steps.round()).abs() < 1e-4,
+                "case {case}: {q} not on grid {d}"
+            );
+        }
+    }
+}
+
+#[test]
+fn p2_clamp_bounds_hold() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::seeded(2000 + case);
+        let tau = rng.uniform(0.5, 100.0);
+        let d = rng.uniform(1e-4, 1.0);
+        for _ in 0..100 {
+            let v = rng.normal() * 1000.0;
+            assert!(quantize(v, d, tau).abs() <= tau + 1e-6, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn p3_pow2_scale_equivariance() {
+    for case in 0..CASES {
+        let mut rng = Pcg64::seeded(3000 + case);
+        let (m, k, n, tile) = rand_dims(&mut rng);
+        let x = rand_t(&mut rng, m, k, 1.0);
+        let w = rand_t(&mut rng, n, k, 0.7);
+        let pow = rng.below(9) as i32 - 4;
+        let s = (2.0f32).powi(pow);
+        let cfg = DeviceConfig::new(tile, (8, 8, 8), 2.0, 0.0);
+        let a = Device::new(cfg, 1).matmul(&x.map(|v| v * s), &w).unwrap();
+        let base = Device::new(cfg, 1).matmul(&x, &w).unwrap();
+        for (ai, bi) in a.data().iter().zip(base.data()) {
+            assert!(
+                (ai - s * bi).abs() <= 1e-5 * (s * bi).abs().max(1e-20),
+                "case {case} (scale 2^{pow}): {ai} vs {}",
+                s * bi
+            );
+        }
+    }
+}
+
+#[test]
+fn p4_zero_padding_exact() {
+    // Appending explicit zero columns to K must not change the result
+    // (the device's internal padding is exactly the same computation).
+    for case in 0..CASES {
+        let mut rng = Pcg64::seeded(4000 + case);
+        let (m, k, n, tile) = rand_dims(&mut rng);
+        let x = rand_t(&mut rng, m, k, 1.0);
+        let w = rand_t(&mut rng, n, k, 1.0);
+        let pad = rng.below(1 + tile as u64) as usize;
+        let xp = pad_cols(&x, pad);
+        let wp = pad_cols(&w, pad);
+        let cfg = DeviceConfig::new(tile, (8, 8, 8), 4.0, 0.0);
+        let a = Device::new(cfg, 1).matmul(&x, &w).unwrap();
+        let b = Device::new(cfg, 1).matmul(&xp, &wp).unwrap();
+        // Padding may change tiling boundaries, so compare against the
+        // same-tiling case only when pad keeps the tile count: otherwise
+        // just require finiteness. Exactness case:
+        if (k + pad).div_ceil(tile) == k.div_ceil(tile) {
+            assert_eq!(a, b, "case {case}: pad {pad} cols changed result");
+        } else {
+            assert!(b.data().iter().all(|v| v.is_finite()));
+        }
+    }
+}
+
+fn pad_cols(t: &Tensor, pad: usize) -> Tensor {
+    let (r, c) = (t.shape()[0], t.shape()[1]);
+    let mut out = vec![0.0f32; r * (c + pad)];
+    for i in 0..r {
+        out[i * (c + pad)..i * (c + pad) + c].copy_from_slice(t.row(i));
+    }
+    Tensor::new(&[r, c + pad], out).unwrap()
+}
+
+#[test]
+fn p5_within_tile_permutation_equivariance() {
+    // Permuting columns *within one tile* of both operands leaves every
+    // per-tile scale, quantized dot and hence the output unchanged.
+    for case in 0..CASES {
+        let mut rng = Pcg64::seeded(5000 + case);
+        let tile = 32usize;
+        let (m, n) = (3usize, 3usize);
+        let k = tile * (1 + rng.below(3) as usize);
+        let x = rand_t(&mut rng, m, k, 1.0);
+        let w = rand_t(&mut rng, n, k, 1.0);
+        // Swap two columns inside the same tile.
+        let t_idx = rng.below((k / tile) as u64) as usize;
+        let c1 = t_idx * tile + rng.below(tile as u64) as usize;
+        let c2 = t_idx * tile + rng.below(tile as u64) as usize;
+        let xs = swap_cols(&x, c1, c2);
+        let ws = swap_cols(&w, c1, c2);
+        let cfg = DeviceConfig::new(tile, (6, 6, 8), 2.0, 0.0);
+        let a = Device::new(cfg, 1).matmul(&x, &w).unwrap();
+        let b = Device::new(cfg, 1).matmul(&xs, &ws).unwrap();
+        assert_eq!(a, b, "case {case}: swap ({c1},{c2})");
+    }
+}
+
+fn swap_cols(t: &Tensor, a: usize, b: usize) -> Tensor {
+    let mut out = t.clone();
+    let c = t.shape()[1];
+    for i in 0..t.shape()[0] {
+        out.data_mut().swap(i * c + a, i * c + b);
+    }
+    out
+}
+
+#[test]
+fn p6_gain_recovers_lsbs_scalar_property() {
+    // The crisp Fig. 2 property at the ADC level: for any analog value d
+    // with |G*d| <= tau, the dequantized output ADC(G*d)/G is within
+    // half an output bin *divided by G* of d — i.e. each gain doubling
+    // halves the effective quantization error of unsaturated outputs.
+    for case in 0..CASES {
+        let mut rng = Pcg64::seeded(6000 + case);
+        let n = 128usize;
+        let bin = n as f32 * delta(8);
+        let tau = n as f32;
+        for g_pow in 0..5u32 {
+            let g = (1u64 << g_pow) as f32;
+            for _ in 0..50 {
+                let d = rng.uniform(-tau / g, tau / g) * 0.999;
+                let deq = quantize(g * d, bin, tau) / g;
+                assert!(
+                    (deq - d).abs() <= bin / (2.0 * g) + 1e-5,
+                    "case {case}: G={g} d={d} deq={deq}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn p7_more_output_bits_never_worse() {
+    for case in 0..10 {
+        let mut rng = Pcg64::seeded(7000 + case);
+        let x = rand_t(&mut rng, 8, 128, 1.0);
+        let w = rand_t(&mut rng, 8, 128, 1.0);
+        let f = x.matmul_nt(&w).unwrap();
+        let mut last = f64::INFINITY;
+        for by in [6u32, 8, 12, 16] {
+            let cfg = DeviceConfig::new(32, (8, 8, by), 1.0, 0.0);
+            let y = Device::new(cfg, 1).matmul(&x, &w).unwrap();
+            let err: f64 = y
+                .data()
+                .iter()
+                .zip(f.data())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum();
+            assert!(
+                err <= last * 1.05 + 1e-9,
+                "case {case}: error rose {last} -> {err} at by={by}"
+            );
+            last = err;
+        }
+    }
+}
+
+#[test]
+fn p8_adc_noise_variance_matches_model() {
+    // Var(eps) = (n*delta_y)^2/12 at 0.5 LSB (paper section III-C).
+    // At exactly +-0.5 LSB on a *zero* signal the ADC rounds every
+    // sample back to 0 (|eps| <= bin/2 and RNE) — itself a meaningful
+    // check. To observe the pre-quantization variance we widen the
+    // noise to +-2 LSB: the quantized output then takes values on the
+    // grid with variance close to the uniform model (4*bin)^2-width.
+    let tile = 32usize;
+    let x = Tensor::zeros(&[64, 32]);
+    let w = Tensor::zeros(&[64, 32]);
+
+    // (a) paper noise on zero signal quantizes to exactly zero.
+    let cfg05 = DeviceConfig::new(tile, (8, 8, 8), 1.0, 0.5);
+    let y05 = Device::new(cfg05, 9).matmul(&x, &w).unwrap();
+    assert!(y05.data().iter().all(|&v| v == 0.0), "0.5 LSB must round away");
+
+    // (b) 2-LSB noise survives quantization with the model's variance.
+    let cfg2 = DeviceConfig::new(tile, (8, 8, 8), 1.0, 2.0);
+    let y2 = Device::new(cfg2, 9).matmul(&x, &w).unwrap();
+    let bin = cfg2.output_bin() as f64;
+    let var: f64 = y2.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>()
+        / y2.len() as f64;
+    // Uniform(-2bin, 2bin) has var (4bin)^2/12; RNE quantization adds
+    // at most bin^2/12-ish; accept a [0.5x, 1.5x] band.
+    let model = (4.0 * bin) * (4.0 * bin) / 12.0;
+    assert!(var > 0.5 * model && var < 1.5 * model, "var {var} vs model {model}");
+}
+
+#[test]
+fn p9_bf16_idempotent_and_monotone() {
+    let mut rng = Pcg64::seeded(9000);
+    let mut prev_in = f32::NEG_INFINITY;
+    let mut prev_out = f32::NEG_INFINITY;
+    let mut vals: Vec<f32> = (0..1000).map(|_| rng.normal() * 100.0).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for v in vals {
+        let r = bf16_round(v);
+        assert_eq!(bf16_round(r), r, "idempotence at {v}");
+        if v > prev_in {
+            assert!(r >= prev_out, "monotonicity: f({v})={r} < f({prev_in})={prev_out}");
+        }
+        prev_in = v;
+        prev_out = r;
+    }
+}
+
+#[test]
+fn p10_simulator_deterministic() {
+    for case in 0..10 {
+        let mut rng = Pcg64::seeded(10_000 + case);
+        let (m, k, n, tile) = rand_dims(&mut rng);
+        let x = rand_t(&mut rng, m, k, 1.0);
+        let w = rand_t(&mut rng, n, k, 1.0);
+        let cfg = DeviceConfig::new(tile, (8, 8, 8), 8.0, 0.5);
+        let a = Device::new(cfg, 42).matmul(&x, &w).unwrap();
+        let b = Device::new(cfg, 42).matmul(&x, &w).unwrap();
+        assert_eq!(a, b, "case {case}");
+    }
+}
