@@ -17,10 +17,10 @@ use abfp::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     let models = vec!["bert".to_string(), "dlrm".to_string()];
-    let cfg = WorkerConfig {
-        device: Some(DeviceConfig::new(128, (8, 8, 8), 8.0, 0.5)),
-        policy: BatchPolicy::new(32, 4),
-    };
+    let cfg = WorkerConfig::abfp(
+        DeviceConfig::new(128, (8, 8, 8), 8.0, 0.5),
+        BatchPolicy::new(32, 4),
+    );
     println!("starting router: models {models:?}, ABFP tile 128 gain 8");
     let router = Arc::new(Router::start("artifacts", "checkpoints", &models, cfg)?);
 

@@ -36,6 +36,28 @@ fn main() {
         );
     }
 
+    // Staged-weight reuse vs per-call staging: the serving hot path
+    // stages once at worker startup, so the delta here is pure win
+    // (O(rows*K) quantization + bf16 rounding skipped per call).
+    let cfg = DeviceConfig::new(128, (8, 8, 8), 8.0, 0.5);
+    let staged = Device::new(cfg, 7).stage_weights(&w).unwrap();
+    let r_reuse = b
+        .run("matmul_staged_reuse_t128", 1, || {
+            let mut dev = Device::new(cfg, 7);
+            black_box(dev.matmul_staged(&x, &staged).unwrap());
+        })
+        .clone();
+    let r_restage = b
+        .run("matmul_restage_per_call_t128", 1, || {
+            let mut dev = Device::new(cfg, 7);
+            black_box(dev.matmul(&x, &w).unwrap());
+        })
+        .clone();
+    println!(
+        "    -> staged reuse speedup over per-call staging: {:.2}x",
+        r_restage.median_ns / r_reuse.median_ns
+    );
+
     // The FLOAT32 reference for the simulator's overhead factor.
     b.run("float32_matmul", 1, || {
         black_box(x.matmul_nt(&w).unwrap());

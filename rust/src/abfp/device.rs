@@ -2,7 +2,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::numerics::{bf16_round, delta, num_tiles, quantize};
+use crate::backend::StagedTiles;
+use crate::json::{self, Value};
+use crate::numerics::{bf16_round, delta, quantize};
 use crate::rng::Pcg64;
 use crate::tensor::Tensor;
 
@@ -56,6 +58,31 @@ impl DeviceConfig {
     pub fn output_bin(&self) -> f32 {
         self.n as f32 * self.delta_y()
     }
+
+    /// Machine-readable form — recorded by sweep reports and the serve
+    /// startup log so every result names its exact device.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("n", json::num(self.n as f64)),
+            ("bits_w", json::num(self.bits_w as f64)),
+            ("bits_x", json::num(self.bits_x as f64)),
+            ("bits_y", json::num(self.bits_y as f64)),
+            ("gain", json::num(self.gain as f64)),
+            ("noise_lsb", json::num(self.noise_lsb as f64)),
+        ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(v: &Value) -> Result<DeviceConfig> {
+        Ok(DeviceConfig {
+            n: v.get("n")?.as_usize()?,
+            bits_w: v.get("bits_w")?.as_f64()? as u32,
+            bits_x: v.get("bits_x")?.as_f64()? as u32,
+            bits_y: v.get("bits_y")?.as_f64()? as u32,
+            gain: v.get("gain")?.as_f64()? as f32,
+            noise_lsb: v.get("noise_lsb")?.as_f64()? as f32,
+        })
+    }
 }
 
 /// Error / saturation statistics accumulated during a matmul.
@@ -63,6 +90,8 @@ impl DeviceConfig {
 pub struct AbfpError {
     /// Fraction of ADC conversions that clamped (saturation).
     pub sat_frac: f64,
+    /// Number of ADC conversions that clamped.
+    pub sat_count: u64,
     /// Total ADC conversions performed.
     pub conversions: u64,
 }
@@ -76,24 +105,6 @@ pub struct Device {
     conv_count: u64,
 }
 
-/// All tiles of one operand staged for the analog array: per-tile
-/// BFLOAT16 scales plus the DAC-quantized normalized values, stored
-/// flat (rows x tiles x n) — one allocation instead of rows*tiles
-/// (perf pass iteration 1, see EXPERIMENTS.md §Perf).
-#[derive(Debug, Clone)]
-struct Staged {
-    n: usize,
-    scales: Vec<f32>, // rows * tiles
-    q: Vec<f32>,      // rows * tiles * n, zero-padded
-}
-
-impl Staged {
-    #[inline]
-    fn tile(&self, row_tile: usize) -> &[f32] {
-        &self.q[row_tile * self.n..(row_tile + 1) * self.n]
-    }
-}
-
 impl Device {
     pub fn new(cfg: DeviceConfig, seed: u64) -> Self {
         Device {
@@ -104,7 +115,7 @@ impl Device {
         }
     }
 
-    /// Saturation statistics since construction.
+    /// Saturation statistics since construction (or the last reset).
     pub fn error_stats(&self) -> AbfpError {
         AbfpError {
             sat_frac: if self.conv_count == 0 {
@@ -112,8 +123,15 @@ impl Device {
             } else {
                 self.sat_count as f64 / self.conv_count as f64
             },
+            sat_count: self.sat_count,
             conversions: self.conv_count,
         }
+    }
+
+    /// Zero the saturation counters (the noise stream is untouched).
+    pub fn reset_stats(&mut self) {
+        self.sat_count = 0;
+        self.conv_count = 0;
     }
 
     /// Prepare one length-`n` vector tile into the staging buffers:
@@ -151,27 +169,43 @@ impl Device {
         quantize(pre, bin, tau)
     }
 
-    /// ABFP matmul `x (M,K) @ w^T (N,K) -> (M,N)` with per-vector scales,
-    /// gain, ADC quantization and noise; FLOAT32 accumulation over tiles
-    /// and BFLOAT16 output rounding (Eq. 1–7 end to end).
-    pub fn matmul(&mut self, x: &Tensor, w: &Tensor) -> Result<Tensor> {
-        if x.shape().len() != 2 || w.shape().len() != 2 {
+    /// Convert a (N, K) weight matrix to ABFP **once** (the paper:
+    /// weights are converted and stored on the analog array; only
+    /// activations are converted per call). Staging draws no noise, so
+    /// stage-then-multiply is bit-identical to the one-shot
+    /// [`matmul`](Self::matmul).
+    pub fn stage_weights(&self, w: &Tensor) -> Result<StagedTiles> {
+        if w.shape().len() != 2 {
+            bail!("abfp matmul wants 2-D operands");
+        }
+        Ok(self.stage(w, w.shape()[0], w.shape()[1], self.cfg.delta_w()))
+    }
+
+    /// ABFP matmul against pre-staged weights:
+    /// `x (M,K) @ w^T (N,K) -> (M,N)` with per-vector scales, gain, ADC
+    /// quantization and noise; FLOAT32 accumulation over tiles and
+    /// BFLOAT16 output rounding (Eq. 1–7 end to end). Activations are
+    /// staged here, per call.
+    pub fn matmul_staged(&mut self, x: &Tensor, ws: &StagedTiles) -> Result<Tensor> {
+        if x.shape().len() != 2 {
             bail!("abfp matmul wants 2-D operands");
         }
         let (m, k) = (x.shape()[0], x.shape()[1]);
-        let (nn, kw) = (w.shape()[0], w.shape()[1]);
-        if k != kw {
-            bail!("reduction mismatch {k} vs {kw}");
+        if k != ws.k {
+            bail!("reduction mismatch {k} vs {}", ws.k);
+        }
+        if ws.n != self.cfg.n {
+            bail!(
+                "staged tile width {} does not match device tile {}",
+                ws.n,
+                self.cfg.n
+            );
         }
         let n = self.cfg.n;
-        let t = num_tiles(k, n);
-        let dx = self.cfg.delta_x();
-        let dw = self.cfg.delta_w();
+        let t = ws.tiles;
+        let nn = ws.rows;
 
-        // Stage operands once (the paper: weights are converted to ABFP
-        // once and stored; activations are converted per call).
-        let xs = self.stage(x, m, k, t, dx);
-        let ws = self.stage(w, nn, k, t, dw);
+        let xs = self.stage(x, m, k, self.cfg.delta_x());
 
         let mut out = vec![0.0f32; m * nn];
         let gain = self.cfg.gain;
@@ -195,14 +229,22 @@ impl Device {
         Tensor::new(&[m, nn], out)
     }
 
+    /// One-shot ABFP matmul: stage both operands, then multiply. Staging
+    /// is noise-free, so this equals `stage_weights` + `matmul_staged`
+    /// bit for bit — hot paths should stage once and reuse.
+    pub fn matmul(&mut self, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        if x.shape().len() != 2 || w.shape().len() != 2 {
+            bail!("abfp matmul wants 2-D operands");
+        }
+        let ws = self.stage_weights(w)?;
+        self.matmul_staged(x, &ws)
+    }
+
     /// Stage all tiles of a (rows, K) operand into flat buffers.
-    fn stage(&self, v: &Tensor, rows: usize, k: usize, t: usize, d: f32) -> Staged {
+    fn stage(&self, v: &Tensor, rows: usize, k: usize, d: f32) -> StagedTiles {
         let n = self.cfg.n;
-        let mut staged = Staged {
-            n,
-            scales: Vec::with_capacity(rows * t),
-            q: vec![0.0f32; rows * t * n],
-        };
+        let mut staged = StagedTiles::with_capacity(rows, k, n);
+        let t = staged.tiles;
         for r in 0..rows {
             let row = v.row(r);
             for ti in 0..t {
@@ -334,6 +376,12 @@ mod tests {
         let stats = dev.error_stats();
         assert!(stats.sat_frac > 0.1, "{stats:?}");
         assert_eq!(stats.conversions, (4 * 4 * 4) as u64);
+        assert_eq!(
+            stats.sat_count,
+            (stats.sat_frac * stats.conversions as f64).round() as u64
+        );
+        dev.reset_stats();
+        assert_eq!(dev.error_stats().conversions, 0);
     }
 
     #[test]
@@ -375,5 +423,43 @@ mod tests {
         let y = Device::new(cfg, 1).matmul(&x, &w).unwrap();
         assert_eq!(y.shape(), &[3, 5]);
         assert!(y.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn staged_split_equals_one_shot() {
+        // The refactor contract: stage once + matmul_staged == matmul,
+        // bit for bit, including under ADC noise (same seed, same
+        // draw order — staging consumes no randomness).
+        let mut rng = Pcg64::seeded(19);
+        let x = rand_t(&mut rng, &[5, 100], false);
+        let w = rand_t(&mut rng, &[7, 100], true);
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5);
+        let one_shot = Device::new(cfg, 77).matmul(&x, &w).unwrap();
+        let mut dev = Device::new(cfg, 77);
+        let staged = dev.stage_weights(&w).unwrap();
+        let split = dev.matmul_staged(&x, &staged).unwrap();
+        assert_eq!(one_shot, split);
+    }
+
+    #[test]
+    fn staged_tile_width_mismatch_rejected() {
+        let mut rng = Pcg64::seeded(21);
+        let x = rand_t(&mut rng, &[2, 32], false);
+        let w = rand_t(&mut rng, &[2, 32], false);
+        let staged = Device::new(DeviceConfig::paper_default(8), 1)
+            .stage_weights(&w)
+            .unwrap();
+        let mut other = Device::new(DeviceConfig::paper_default(16), 1);
+        assert!(other.matmul_staged(&x, &staged).is_err());
+    }
+
+    #[test]
+    fn device_config_json_roundtrip() {
+        let cfg = DeviceConfig::new(128, (6, 8, 10), 8.0, 0.5);
+        let v = cfg.to_json();
+        let text = v.to_string();
+        let back = DeviceConfig::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(text.contains("\"gain\":8"));
     }
 }

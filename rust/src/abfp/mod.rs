@@ -10,9 +10,15 @@
 //!    saturation analysis) run without artifacts;
 //! 2. property tests on the numeric format run at `cargo test` speed;
 //! 3. the criterion-lite benches profile the L3 hot path in isolation.
+//!
+//! Weights are staged **once** ([`Device::stage_weights`]) and reused
+//! across calls ([`Device::matmul_staged`]) — the paper's
+//! weights-live-on-the-array model; [`crate::backend::AbfpBackend`]
+//! exposes the same split through the pluggable [`crate::backend`]
+//! interface.
 
 mod device;
 mod stats;
 
 pub use device::{AbfpError, Device, DeviceConfig};
-pub use stats::{matmul_error_stats, ErrorStats};
+pub use stats::{backend_error_stats, matmul_error_stats, ErrorStats};

@@ -1,12 +1,14 @@
-//! Error statistics of the ABFP representation vs FLOAT32 — the numeric
-//! experiment behind Fig. S1 and the Appendix A saturation analysis.
+//! Error statistics of a numeric representation vs FLOAT32 — the
+//! experiment behind Fig. S1, the Appendix A saturation analysis, and
+//! the backend-comparison report.
 
 use anyhow::Result;
 
-use super::device::{Device, DeviceConfig};
+use super::device::DeviceConfig;
+use crate::backend::{AbfpBackend, NumericBackend};
 use crate::tensor::Tensor;
 
-/// Summary statistics of the elementwise error `abfp - float32`.
+/// Summary statistics of the elementwise error `backend - float32`.
 #[derive(Debug, Clone, Copy)]
 pub struct ErrorStats {
     pub mean: f64,
@@ -17,20 +19,22 @@ pub struct ErrorStats {
     pub p01: f64,
     pub p50: f64,
     pub p99: f64,
-    /// Fraction of ADC conversions that clamped.
+    /// Fraction of output conversions that clamped (ADC saturation for
+    /// ABFP; zero for the digital backends).
     pub sat_frac: f64,
 }
 
-/// Run one ABFP-vs-FLOAT32 matmul and summarize the error distribution.
-pub fn matmul_error_stats(
-    cfg: DeviceConfig,
-    seed: u64,
+/// Run one backend-vs-FLOAT32 matmul and summarize the error
+/// distribution. Works for any [`NumericBackend`]; stats counters are
+/// reset so `sat_frac` reflects this matmul only.
+pub fn backend_error_stats(
+    backend: &mut dyn NumericBackend,
     x: &Tensor,
     w: &Tensor,
 ) -> Result<ErrorStats> {
-    let mut dev = Device::new(cfg, seed);
-    let y = dev.matmul(x, w)?;
-    let f = Device::float_matmul(x, w)?;
+    backend.reset_stats();
+    let y = backend.matmul_dense(x, w)?;
+    let f = x.matmul_nt(w)?;
     let mut errs: Vec<f64> = y
         .data()
         .iter()
@@ -50,13 +54,25 @@ pub fn matmul_error_stats(
         p01: pct(0.01),
         p50: pct(0.50),
         p99: pct(0.99),
-        sat_frac: dev.error_stats().sat_frac,
+        sat_frac: backend.stats().sat_frac(),
     })
+}
+
+/// ABFP-specific convenience: one device matmul vs FLOAT32 (the
+/// historical entry point; identical numbers to the pre-backend code).
+pub fn matmul_error_stats(
+    cfg: DeviceConfig,
+    seed: u64,
+    x: &Tensor,
+    w: &Tensor,
+) -> Result<ErrorStats> {
+    backend_error_stats(&mut AbfpBackend::new(cfg, seed), x, w)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{BackendKind, Float32Backend};
     use crate::rng::Pcg64;
 
     fn figs1_inputs(rows: usize, k: usize) -> (Tensor, Tensor) {
@@ -139,5 +155,37 @@ mod tests {
             .std
         };
         assert!(e(16.0) > e(1.0), "e1={} e16={}", e(1.0), e(16.0));
+    }
+
+    #[test]
+    fn float32_backend_error_is_zero() {
+        let (x, w) = figs1_inputs(8, 64);
+        let s = backend_error_stats(&mut Float32Backend::new(), &x, &w).unwrap();
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 0.0);
+        assert_eq!(s.sat_frac, 0.0);
+    }
+
+    #[test]
+    fn backends_rank_sanely_on_the_protocol() {
+        // float32 < abfp is trivial; the interesting order (fixed worst
+        // at 8 bits on Laplace weights) is pinned in
+        // tests/backend_parity.rs on the full-size protocol.
+        let (x, w) = figs1_inputs(16, 128);
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 8.0, 0.0);
+        let abfp = backend_error_stats(
+            BackendKind::Abfp.build(cfg, 1).as_mut(),
+            &x,
+            &w,
+        )
+        .unwrap();
+        let f32s = backend_error_stats(
+            BackendKind::Float32.build(cfg, 1).as_mut(),
+            &x,
+            &w,
+        )
+        .unwrap();
+        assert!(abfp.std > f32s.std);
     }
 }

@@ -1,0 +1,194 @@
+//! Static block floating-point (HBFP-style, Drumond et al. 2018):
+//! tiles of width `n` share one **power-of-two** exponent; mantissas
+//! are quantized to `b` bits; accumulation is exact digital FLOAT32.
+//!
+//! The two deltas against ABFP isolate what "adaptive" buys:
+//!
+//! * the shared scale is the next power of two at or above the tile
+//!   absmax (a pure exponent, as in hardware BFP) instead of ABFP's
+//!   BFLOAT16 absmax — up to one full bit of mantissa range is idle;
+//! * there is no analog path: no gain, no ADC quantization, no noise.
+
+use anyhow::Result;
+
+use super::{
+    check_matmul, check_weights, BackendStats, NumericBackend, StagedTiles, StagedWeights,
+};
+use crate::json::{self, Value};
+use crate::numerics::{delta, quantize};
+use crate::tensor::Tensor;
+
+/// Static per-tile power-of-two BFP simulation.
+#[derive(Debug, Clone)]
+pub struct BfpStaticBackend {
+    /// Tile width (elements sharing one exponent).
+    pub n: usize,
+    /// Weight mantissa bits.
+    pub bits_w: u32,
+    /// Activation mantissa bits.
+    pub bits_x: u32,
+    stats: BackendStats,
+}
+
+impl BfpStaticBackend {
+    pub fn new(n: usize, bits_w: u32, bits_x: u32) -> BfpStaticBackend {
+        BfpStaticBackend {
+            n,
+            bits_w,
+            bits_x,
+            stats: BackendStats::default(),
+        }
+    }
+
+    /// Stage a (rows, K) operand into power-of-two-scaled tiles.
+    fn stage(&self, v: &Tensor, bits: u32) -> Result<StagedTiles> {
+        let (rows, k) = check_weights(self.name(), v)?;
+        let d = delta(bits);
+        let n = self.n;
+        let mut staged = StagedTiles::with_capacity(rows, k, n);
+        let tiles = staged.tiles;
+        for r in 0..rows {
+            let row = v.row(r);
+            for ti in 0..tiles {
+                let lo = ti * n;
+                let hi = ((ti + 1) * n).min(k);
+                let tile = &row[lo..hi];
+                let scale = pow2_scale(tile.iter().fold(0.0f32, |m, &x| m.max(x.abs())));
+                let dst = &mut staged.q[(r * tiles + ti) * n..(r * tiles + ti + 1) * n];
+                for (o, &x) in dst.iter_mut().zip(tile) {
+                    *o = quantize(x / scale, d, 1.0);
+                }
+                staged.scales.push(scale);
+            }
+        }
+        Ok(staged)
+    }
+}
+
+/// Smallest power of two >= m (1.0 for a zero tile), computed on the
+/// exponent so the mantissa grid is a clean binary fraction.
+fn pow2_scale(m: f32) -> f32 {
+    if m == 0.0 {
+        1.0
+    } else {
+        (2.0f32).powi(m.log2().ceil() as i32)
+    }
+}
+
+impl NumericBackend for BfpStaticBackend {
+    fn name(&self) -> &'static str {
+        "bfp"
+    }
+
+    fn config_json(&self) -> Value {
+        json::obj(vec![
+            ("backend", json::s("bfp")),
+            ("n", json::num(self.n as f64)),
+            ("bits_w", json::num(self.bits_w as f64)),
+            ("bits_x", json::num(self.bits_x as f64)),
+            ("scale", json::s("per-tile-pow2")),
+        ])
+    }
+
+    fn stage_weights(&self, w: &Tensor) -> Result<StagedWeights> {
+        Ok(StagedWeights::tiled(self.name(), self.stage(w, self.bits_w)?))
+    }
+
+    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+        let (m, n_out) = check_matmul(self.name(), x, w)?;
+        let ws = w.expect_tiled(self.name())?;
+        if ws.n != self.n {
+            anyhow::bail!(
+                "bfp matmul: staged tile width {} vs backend {}",
+                ws.n,
+                self.n
+            );
+        }
+        let xs = self.stage(x, self.bits_x)?;
+        let t = ws.tiles;
+
+        let mut out = vec![0.0f32; m * n_out];
+        for i in 0..m {
+            for j in 0..n_out {
+                let mut acc = 0.0f32;
+                for ti in 0..t {
+                    let xt = xs.tile(i * t + ti);
+                    let wt = ws.tile(j * t + ti);
+                    let mut dot = 0.0f32;
+                    for e in 0..self.n {
+                        dot += xt[e] * wt[e];
+                    }
+                    acc += dot * xs.scales[i * t + ti] * ws.scales[j * t + ti];
+                }
+                out[i * n_out + j] = acc;
+            }
+        }
+        self.stats.matmuls += 1;
+        self.stats.macs += (m * x.shape()[1] * n_out) as u64;
+        self.stats.conversions += (m * n_out) as u64;
+        Tensor::new(&[m, n_out], out)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = BackendStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn scales_are_powers_of_two() {
+        let mut rng = Pcg64::seeded(3);
+        let w = Tensor::new(&[4, 70], rng.normal_vec(4 * 70)).unwrap();
+        let b = BfpStaticBackend::new(32, 8, 8);
+        let staged = b.stage(&w, 8).unwrap();
+        for &s in &staged.scales {
+            let l = s.log2();
+            assert_eq!(l, l.round(), "scale {s} is not a power of two");
+        }
+    }
+
+    #[test]
+    fn pow2_scale_covers_the_tile() {
+        for m in [0.3f32, 0.5, 1.0, 1.7, 4.0, 100.0] {
+            let s = pow2_scale(m);
+            assert!(s >= m, "scale {s} < max {m}");
+            assert!(s < 2.0 * m, "scale {s} wastes more than one bit at {m}");
+        }
+        assert_eq!(pow2_scale(0.0), 1.0);
+    }
+
+    #[test]
+    fn close_to_float_at_high_bits() {
+        let mut rng = Pcg64::seeded(5);
+        let x = Tensor::new(&[4, 96], rng.normal_vec(4 * 96)).unwrap();
+        let w = Tensor::new(&[4, 96], rng.normal_vec(4 * 96)).unwrap();
+        let f = x.matmul_nt(&w).unwrap();
+        let mut b = BfpStaticBackend::new(32, 16, 16);
+        let y = b.matmul_dense(&x, &w).unwrap();
+        for (a, bb) in y.data().iter().zip(f.data()) {
+            assert!((a - bb).abs() < 0.01 + 0.005 * bb.abs(), "{a} vs {bb}");
+        }
+    }
+
+    #[test]
+    fn ragged_k_and_determinism() {
+        let mut rng = Pcg64::seeded(7);
+        let x = Tensor::new(&[3, 41], rng.normal_vec(3 * 41)).unwrap();
+        let w = Tensor::new(&[5, 41], rng.normal_vec(5 * 41)).unwrap();
+        let mut b = BfpStaticBackend::new(16, 8, 8);
+        let staged = b.stage_weights(&w).unwrap();
+        let y1 = b.matmul(&x, &staged).unwrap();
+        let y2 = b.matmul(&x, &staged).unwrap();
+        assert_eq!(y1.shape(), &[3, 5]);
+        assert_eq!(y1, y2);
+        assert!(y1.data().iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,170 @@
+//! Global-scale fixed-point INT-b: the paper's digital straw man.
+//!
+//! One FLOAT32 absmax scale per tensor, symmetric `b`-bit quantization
+//! of both operands (Eq. 1's quantizer), exact FLOAT32 accumulation —
+//! i.e. ideal INT-b digital hardware with per-tensor dynamic range. The
+//! contrast with ABFP: a single scale must cover the whole tensor, so
+//! heavy-tailed (Laplace-like) weight distributions waste most of the
+//! integer grid on rare outliers; ABFP's per-tile adaptive scales do
+//! not. `tests/backend_parity.rs` checks that qualitative claim.
+
+use anyhow::Result;
+
+use super::{check_matmul, check_weights, BackendStats, NumericBackend, StagedWeights};
+use crate::json::{self, Value};
+use crate::numerics::{delta, quantize};
+use crate::tensor::Tensor;
+
+/// Fixed-point INT-b simulation with one global scale per tensor.
+#[derive(Debug, Clone)]
+pub struct FixedPointBackend {
+    /// Weight quantization bits.
+    pub bits_w: u32,
+    /// Activation quantization bits.
+    pub bits_x: u32,
+    stats: BackendStats,
+}
+
+impl FixedPointBackend {
+    pub fn new(bits_w: u32, bits_x: u32) -> FixedPointBackend {
+        FixedPointBackend {
+            bits_w,
+            bits_x,
+            stats: BackendStats::default(),
+        }
+    }
+}
+
+/// Absmax of a slice; 1.0 for an all-zero tensor (keeps 0/0 out of the
+/// grid like the ABFP zero-tile rule).
+fn global_scale(data: &[f32]) -> f32 {
+    let m = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if m == 0.0 {
+        1.0
+    } else {
+        m
+    }
+}
+
+impl NumericBackend for FixedPointBackend {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn config_json(&self) -> Value {
+        json::obj(vec![
+            ("backend", json::s("fixed")),
+            ("bits_w", json::num(self.bits_w as f64)),
+            ("bits_x", json::num(self.bits_x as f64)),
+            ("scale", json::s("global-absmax")),
+        ])
+    }
+
+    fn stage_weights(&self, w: &Tensor) -> Result<StagedWeights> {
+        let (rows, k) = check_weights(self.name(), w)?;
+        let scale = global_scale(w.data());
+        let d = delta(self.bits_w);
+        let q: Vec<f32> = w.data().iter().map(|&v| quantize(v / scale, d, 1.0)).collect();
+        Ok(StagedWeights::global(self.name(), rows, k, scale, q))
+    }
+
+    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+        let (m, n) = check_matmul(self.name(), x, w)?;
+        let (sw, qw) = w.expect_global(self.name())?;
+        let k = x.shape()[1];
+
+        // Activations are converted per call, like a DAC feeding the
+        // integer datapath.
+        let sx = global_scale(x.data());
+        let dx = delta(self.bits_x);
+        let qx: Vec<f32> = x.data().iter().map(|&v| quantize(v / sx, dx, 1.0)).collect();
+
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let xrow = &qx[i * k..(i + 1) * k];
+            for j in 0..n {
+                let wrow = &qw[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += xrow[t] * wrow[t];
+                }
+                out[i * n + j] = acc * sx * sw;
+            }
+        }
+        self.stats.matmuls += 1;
+        self.stats.macs += (m * k * n) as u64;
+        // Digital outputs: one exact conversion per element, no clamping
+        // (the accumulator is wide enough by construction).
+        self.stats.conversions += (m * n) as u64;
+        Tensor::new(&[m, n], out)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = BackendStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn zero_weights_stage_cleanly() {
+        let b = FixedPointBackend::new(8, 8);
+        let staged = b.stage_weights(&Tensor::zeros(&[3, 9])).unwrap();
+        assert!(staged.dequantize().data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn values_land_on_the_global_grid() {
+        let mut rng = Pcg64::seeded(5);
+        let w = Tensor::new(&[4, 16], rng.normal_vec(64)).unwrap();
+        let b = FixedPointBackend::new(8, 8);
+        let deq = b.stage_weights(&w).unwrap().dequantize();
+        let scale = w.max_abs();
+        let step = scale * delta(8);
+        for &v in deq.data() {
+            let steps = v / step;
+            assert!((steps - steps.round()).abs() < 1e-3, "{v} not on grid {step}");
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let mut rng = Pcg64::seeded(7);
+        let x = Tensor::new(&[6, 64], rng.normal_vec(6 * 64)).unwrap();
+        let w = Tensor::new(&[6, 64], (0..6 * 64).map(|_| rng.laplace()).collect()).unwrap();
+        let f = x.matmul_nt(&w).unwrap();
+        let err_at = |bits: u32| {
+            let mut b = FixedPointBackend::new(bits, bits);
+            let y = b.matmul_dense(&x, &w).unwrap();
+            y.data()
+                .iter()
+                .zip(f.data())
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+        };
+        assert!(err_at(12) < err_at(8));
+        assert!(err_at(8) < err_at(4));
+    }
+
+    #[test]
+    fn deterministic_and_counts() {
+        let mut rng = Pcg64::seeded(9);
+        let x = Tensor::new(&[3, 20], rng.normal_vec(60)).unwrap();
+        let w = Tensor::new(&[5, 20], rng.normal_vec(100)).unwrap();
+        let mut b = FixedPointBackend::new(8, 8);
+        let staged = b.stage_weights(&w).unwrap();
+        let y1 = b.matmul(&x, &staged).unwrap();
+        let y2 = b.matmul(&x, &staged).unwrap();
+        assert_eq!(y1, y2);
+        assert_eq!(b.stats().matmuls, 2);
+        assert_eq!(b.stats().conversions, 2 * 3 * 5);
+        assert_eq!(b.stats().sat_frac(), 0.0);
+    }
+}

@@ -1,0 +1,83 @@
+//! The FLOAT32 twin: an exact backend, the quality ceiling every other
+//! format is measured against.
+
+use anyhow::Result;
+
+use super::{check_matmul, check_weights, BackendStats, NumericBackend, StagedWeights};
+use crate::json::{self, Value};
+use crate::tensor::Tensor;
+
+/// Exact FLOAT32 matmul behind the [`NumericBackend`] interface.
+///
+/// `matmul` is bit-identical to [`Tensor::matmul_nt`] — staging is a
+/// pass-through — so workloads can swap precision without touching
+/// call sites.
+#[derive(Debug, Clone, Default)]
+pub struct Float32Backend {
+    stats: BackendStats,
+}
+
+impl Float32Backend {
+    pub fn new() -> Float32Backend {
+        Float32Backend::default()
+    }
+}
+
+impl NumericBackend for Float32Backend {
+    fn name(&self) -> &'static str {
+        "float32"
+    }
+
+    fn config_json(&self) -> Value {
+        json::obj(vec![("backend", json::s("float32"))])
+    }
+
+    fn stage_weights(&self, w: &Tensor) -> Result<StagedWeights> {
+        check_weights(self.name(), w)?;
+        Ok(StagedWeights::dense(self.name(), w.clone()))
+    }
+
+    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+        let (m, n) = check_matmul(self.name(), x, w)?;
+        let dense = w.expect_dense(self.name())?;
+        let y = x.matmul_nt(dense)?;
+        self.stats.matmuls += 1;
+        self.stats.macs += (m * x.shape()[1] * n) as u64;
+        Ok(y)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats
+    }
+
+    fn reset_stats(&mut self) {
+        self.stats = BackendStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn exactly_matmul_nt() {
+        let mut rng = Pcg64::seeded(1);
+        let x = Tensor::new(&[5, 33], rng.normal_vec(5 * 33)).unwrap();
+        let w = Tensor::new(&[7, 33], rng.normal_vec(7 * 33)).unwrap();
+        let mut b = Float32Backend::new();
+        let staged = b.stage_weights(&w).unwrap();
+        let y = b.matmul(&x, &staged).unwrap();
+        assert_eq!(y, x.matmul_nt(&w).unwrap());
+        assert_eq!(b.stats().matmuls, 1);
+        assert_eq!(b.stats().macs, 5 * 33 * 7);
+        assert_eq!(b.stats().conversions, 0);
+    }
+
+    #[test]
+    fn dequantize_is_identity() {
+        let w = Tensor::new(&[2, 3], vec![1.0, -2.0, 3.0, 4.0, -5.0, 6.0]).unwrap();
+        let staged = Float32Backend::new().stage_weights(&w).unwrap();
+        assert_eq!(staged.dequantize(), w);
+    }
+}

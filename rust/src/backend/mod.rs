@@ -1,0 +1,512 @@
+//! Pluggable number-format backends: the seam between workloads
+//! (sweeps, serving, finetuning) and numeric simulations.
+//!
+//! The paper's central comparison is ABFP *versus other number
+//! representations* on the same workloads. [`NumericBackend`] makes that
+//! comparison a first-class API:
+//!
+//! * [`NumericBackend::stage_weights`] converts a weight matrix into the
+//!   backend's native representation **once** — the paper's "weights are
+//!   converted to ABFP once and stored on the analog array". Staged
+//!   weights are shareable and cacheable (the serving coordinator stages
+//!   at worker startup, not per batch).
+//! * [`NumericBackend::matmul`] multiplies a FLOAT32 activation batch
+//!   against pre-staged weights, simulating the backend's full numeric
+//!   pipeline (DAC/ADC quantization, scales, gain, noise — whatever the
+//!   format defines).
+//! * [`NumericBackend::stats`] reports saturation/conversion accounting
+//!   uniformly across formats.
+//!
+//! Four implementations ship in-tree:
+//!
+//! | backend   | scale granularity      | scale type       | output path |
+//! |-----------|------------------------|------------------|-------------|
+//! | `float32` | —                      | —                | exact       |
+//! | `abfp`    | per vector-tile (n)    | BFLOAT16 absmax  | analog ADC  |
+//! | `fixed`   | one global per tensor  | FLOAT32 absmax   | digital     |
+//! | `bfp`     | per vector-tile (n)    | power of two     | digital     |
+//!
+//! `fixed` is the paper's INT-b straw man; `bfp` is static block
+//! floating-point à la Drumond et al. (HBFP). Adding a backend = one
+//! file implementing the trait plus a [`BackendKind`] arm; every sweep,
+//! the CLI `--backend` flag and the coordinator pick it up from there.
+
+pub mod abfp;
+pub mod bfp;
+pub mod fixed;
+pub mod float32;
+
+pub use abfp::AbfpBackend;
+pub use bfp::BfpStaticBackend;
+pub use fixed::FixedPointBackend;
+pub use float32::Float32Backend;
+
+use anyhow::{bail, Result};
+
+use crate::abfp::DeviceConfig;
+use crate::json::{self, Value};
+use crate::numerics::num_tiles;
+use crate::tensor::Tensor;
+
+/// Error / utilization accounting shared by every backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BackendStats {
+    /// Matmuls executed since construction / last reset.
+    pub matmuls: u64,
+    /// Multiply-accumulates performed.
+    pub macs: u64,
+    /// Quantized output conversions (ADC samples for ABFP; quantized
+    /// digital outputs otherwise; zero for the FLOAT32 twin).
+    pub conversions: u64,
+    /// Conversions that clamped at the representable range.
+    pub saturated: u64,
+}
+
+impl BackendStats {
+    /// Fraction of conversions that saturated.
+    pub fn sat_frac(&self) -> f64 {
+        if self.conversions == 0 {
+            0.0
+        } else {
+            self.saturated as f64 / self.conversions as f64
+        }
+    }
+}
+
+/// All row-tiles of one (rows, K) operand staged flat: per-tile scales
+/// plus quantized normalized values, zero-padded to the tile width `n`
+/// — one allocation instead of rows*tiles (perf pass iteration 1).
+///
+/// Shared representation for the tiled formats (ABFP's BFLOAT16-scaled
+/// tiles and static BFP's power-of-two tiles).
+#[derive(Debug, Clone)]
+pub struct StagedTiles {
+    pub rows: usize,
+    /// Unpadded reduction length.
+    pub k: usize,
+    /// Tile width.
+    pub n: usize,
+    /// Tiles per row.
+    pub tiles: usize,
+    /// Per-tile scales, rows * tiles.
+    pub scales: Vec<f32>,
+    /// Quantized normalized values, rows * tiles * n (zero-padded).
+    pub q: Vec<f32>,
+}
+
+impl StagedTiles {
+    /// Empty staging buffers for a (rows, k) operand at tile width n.
+    pub fn with_capacity(rows: usize, k: usize, n: usize) -> StagedTiles {
+        let tiles = num_tiles(k, n);
+        StagedTiles {
+            rows,
+            k,
+            n,
+            tiles,
+            scales: Vec::with_capacity(rows * tiles),
+            q: vec![0.0f32; rows * tiles * n],
+        }
+    }
+
+    /// The `row_tile`-th length-n quantized tile.
+    #[inline]
+    pub fn tile(&self, row_tile: usize) -> &[f32] {
+        &self.q[row_tile * self.n..(row_tile + 1) * self.n]
+    }
+
+    /// Project back to FLOAT32: `scale * q` per tile, padding dropped.
+    pub fn dequantize(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.k];
+        for r in 0..self.rows {
+            for ti in 0..self.tiles {
+                let scale = self.scales[r * self.tiles + ti];
+                let tile = self.tile(r * self.tiles + ti);
+                let lo = ti * self.n;
+                let hi = ((ti + 1) * self.n).min(self.k);
+                for (c, &qv) in (lo..hi).zip(tile.iter()) {
+                    out[r * self.k + c] = qv * scale;
+                }
+            }
+        }
+        Tensor::new(&[self.rows, self.k], out).expect("staged dims")
+    }
+}
+
+/// Weights staged once into a backend's native representation.
+///
+/// Opaque to callers: produced by [`NumericBackend::stage_weights`],
+/// consumed by the *same* backend's [`NumericBackend::matmul`] (a
+/// mismatch is an error, not a silent misread). [`dequantize`]
+/// (`StagedWeights::dequantize`) projects the staged values back onto
+/// FLOAT32 for weight-residency evaluations.
+#[derive(Debug, Clone)]
+pub struct StagedWeights {
+    backend: &'static str,
+    rows: usize,
+    k: usize,
+    repr: Repr,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    /// FLOAT32 twin: weights pass through unchanged.
+    Dense(Tensor),
+    /// Per-tile scale + normalized quantized values (ABFP, static BFP).
+    Tiled(StagedTiles),
+    /// One global scale over the whole tensor (fixed point).
+    Global { scale: f32, q: Vec<f32> },
+}
+
+impl StagedWeights {
+    pub(crate) fn dense(backend: &'static str, w: Tensor) -> StagedWeights {
+        let (rows, k) = (w.shape()[0], w.shape()[1]);
+        StagedWeights {
+            backend,
+            rows,
+            k,
+            repr: Repr::Dense(w),
+        }
+    }
+
+    pub(crate) fn tiled(backend: &'static str, t: StagedTiles) -> StagedWeights {
+        StagedWeights {
+            backend,
+            rows: t.rows,
+            k: t.k,
+            repr: Repr::Tiled(t),
+        }
+    }
+
+    pub(crate) fn global(
+        backend: &'static str,
+        rows: usize,
+        k: usize,
+        scale: f32,
+        q: Vec<f32>,
+    ) -> StagedWeights {
+        StagedWeights {
+            backend,
+            rows,
+            k,
+            repr: Repr::Global { scale, q },
+        }
+    }
+
+    /// Name of the backend that staged these weights.
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Output features (N).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Reduction length (K).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Project the staged representation back onto FLOAT32 (rows, K) —
+    /// the weight matrix as the device actually stores it.
+    pub fn dequantize(&self) -> Tensor {
+        match &self.repr {
+            Repr::Dense(w) => w.clone(),
+            Repr::Tiled(t) => t.dequantize(),
+            Repr::Global { scale, q } => {
+                Tensor::new(&[self.rows, self.k], q.iter().map(|v| v * scale).collect())
+                    .expect("staged dims")
+            }
+        }
+    }
+
+    fn expect_backend(&self, who: &str) -> Result<()> {
+        if self.backend != who {
+            bail!(
+                "staged weights belong to backend {:?}, not {who:?}; restage with the right backend",
+                self.backend
+            );
+        }
+        Ok(())
+    }
+
+    pub(crate) fn expect_dense(&self, who: &str) -> Result<&Tensor> {
+        self.expect_backend(who)?;
+        match &self.repr {
+            Repr::Dense(w) => Ok(w),
+            _ => bail!("{who}: staged representation is not dense"),
+        }
+    }
+
+    pub(crate) fn expect_tiled(&self, who: &str) -> Result<&StagedTiles> {
+        self.expect_backend(who)?;
+        match &self.repr {
+            Repr::Tiled(t) => Ok(t),
+            _ => bail!("{who}: staged representation is not tiled"),
+        }
+    }
+
+    pub(crate) fn expect_global(&self, who: &str) -> Result<(f32, &[f32])> {
+        self.expect_backend(who)?;
+        match &self.repr {
+            Repr::Global { scale, q } => Ok((*scale, q)),
+            _ => bail!("{who}: staged representation is not global-scale"),
+        }
+    }
+}
+
+/// A pluggable number-format simulation.
+///
+/// Contract: `matmul` computes `x (M,K) @ w^T (N,K) -> (M,N)` where `w`
+/// was staged by **this** backend's `stage_weights`. Activations are
+/// converted per call (the device's DAC path); weights are staged once.
+pub trait NumericBackend {
+    /// Short stable identifier (`float32`, `abfp`, `fixed`, `bfp`).
+    fn name(&self) -> &'static str;
+
+    /// The exact configuration, machine-readable — recorded in sweep
+    /// reports and the serve startup log so results are reproducible.
+    fn config_json(&self) -> Value;
+
+    /// Convert a 2-D (N, K) weight matrix into the backend's native
+    /// representation. Done once per weight matrix; the result is
+    /// shareable across calls and threads (it is plain data).
+    fn stage_weights(&self, w: &Tensor) -> Result<StagedWeights>;
+
+    /// `x (M,K) @ staged^T -> (M,N)` under the backend's numerics.
+    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor>;
+
+    /// Accumulated accounting since construction / last reset.
+    fn stats(&self) -> BackendStats;
+
+    /// Zero the accounting counters.
+    fn reset_stats(&mut self);
+
+    /// Convenience one-shot: stage + multiply. Prefer pre-staging on
+    /// hot paths — this restages the weights every call.
+    fn matmul_dense(&mut self, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        let staged = self.stage_weights(w)?;
+        self.matmul(x, &staged)
+    }
+}
+
+/// Validate the common matmul operand contract; returns (M, N).
+pub(crate) fn check_matmul(
+    who: &str,
+    x: &Tensor,
+    w: &StagedWeights,
+) -> Result<(usize, usize)> {
+    if x.shape().len() != 2 {
+        bail!("{who} matmul wants a 2-D activation, got {:?}", x.shape());
+    }
+    if x.shape()[1] != w.k() {
+        bail!(
+            "{who} matmul: reduction mismatch {} vs staged {}",
+            x.shape()[1],
+            w.k()
+        );
+    }
+    Ok((x.shape()[0], w.rows()))
+}
+
+/// Validate a 2-D weight operand; returns (N, K).
+pub(crate) fn check_weights(who: &str, w: &Tensor) -> Result<(usize, usize)> {
+    if w.shape().len() != 2 {
+        bail!("{who} stage_weights wants a 2-D matrix, got {:?}", w.shape());
+    }
+    Ok((w.shape()[0], w.shape()[1]))
+}
+
+/// Selector for the shipped backends (CLI `--backend`, sweep grids,
+/// worker configs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Float32,
+    Abfp,
+    Fixed,
+    Bfp,
+}
+
+impl BackendKind {
+    /// Every shipped backend, in report order.
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::Float32,
+        BackendKind::Abfp,
+        BackendKind::Fixed,
+        BackendKind::Bfp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Float32 => "float32",
+            BackendKind::Abfp => "abfp",
+            BackendKind::Fixed => "fixed",
+            BackendKind::Bfp => "bfp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "float32" | "f32" | "float" => Ok(BackendKind::Float32),
+            "abfp" => Ok(BackendKind::Abfp),
+            "fixed" | "int" | "int8" => Ok(BackendKind::Fixed),
+            "bfp" | "bfp-static" | "hbfp" => Ok(BackendKind::Bfp),
+            other => bail!("unknown backend {other:?}; expected float32|abfp|fixed|bfp"),
+        }
+    }
+
+    /// Parse a comma-separated selector; `all` expands to every backend.
+    pub fn parse_list(s: &str) -> Result<Vec<BackendKind>> {
+        if s.trim().eq_ignore_ascii_case("all") {
+            return Ok(Self::ALL.to_vec());
+        }
+        s.split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(Self::parse)
+            .collect()
+    }
+
+    /// Build a simulator instance. `cfg` supplies the device geometry:
+    /// ABFP uses all of it, `bfp` uses tile width + operand bits,
+    /// `fixed` uses operand bits only, `float32` ignores it. `seed`
+    /// drives the ABFP ADC noise stream (unused elsewhere).
+    pub fn build(self, cfg: DeviceConfig, seed: u64) -> Box<dyn NumericBackend> {
+        match self {
+            BackendKind::Float32 => Box::new(Float32Backend::new()),
+            BackendKind::Abfp => Box::new(AbfpBackend::new(cfg, seed)),
+            BackendKind::Fixed => Box::new(FixedPointBackend::new(cfg.bits_w, cfg.bits_x)),
+            BackendKind::Bfp => Box::new(BfpStaticBackend::new(cfg.n, cfg.bits_w, cfg.bits_x)),
+        }
+    }
+
+    /// True when the tile width in [`DeviceConfig`] affects this
+    /// backend's numerics (used to prune degenerate sweep cells).
+    pub fn uses_tiles(self) -> bool {
+        matches!(self, BackendKind::Abfp | BackendKind::Bfp)
+    }
+
+    /// True when the analog gain in [`DeviceConfig`] affects this
+    /// backend's numerics (only the ABFP analog path has gain).
+    pub fn uses_gain(self) -> bool {
+        matches!(self, BackendKind::Abfp)
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendKind> {
+        Self::parse(s)
+    }
+}
+
+/// Project parameter tensors onto a backend's representable grid: stage
+/// once, dequantize back to FLOAT32. Rank >= 2 tensors are viewed as
+/// (rows, last-dim) matrices — the device layout; rank-0/1 tensors
+/// (biases, scalars) pass through unchanged. This is the
+/// weight-residency approximation used when a backend has no dedicated
+/// AOT artifact: weights live on the device in the backend's format,
+/// activations stay FLOAT32.
+pub fn project_params(backend: &dyn NumericBackend, params: &[Tensor]) -> Result<Vec<Tensor>> {
+    params.iter().map(|p| project_tensor(backend, p)).collect()
+}
+
+/// Project one tensor (see [`project_params`]).
+pub fn project_tensor(backend: &dyn NumericBackend, p: &Tensor) -> Result<Tensor> {
+    if p.shape().len() < 2 {
+        return Ok(p.clone());
+    }
+    let cols = p.shape()[p.shape().len() - 1];
+    let rows = p.len() / cols.max(1);
+    let flat = p.clone().reshape(&[rows, cols])?;
+    let staged = backend.stage_weights(&flat)?;
+    staged.dequantize().reshape(p.shape())
+}
+
+/// Build the backend roster description (name + exact config) for
+/// reports and manifests.
+pub fn roster_json(kinds: &[BackendKind], cfg: DeviceConfig, seed: u64) -> Value {
+    json::arr(
+        kinds
+            .iter()
+            .map(|k| k.build(cfg, seed).config_json())
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(kind.name()).unwrap(), kind);
+            assert_eq!(kind.name().parse::<BackendKind>().unwrap(), kind);
+        }
+        assert!(BackendKind::parse("mystery").is_err());
+        assert_eq!(
+            BackendKind::parse_list("all").unwrap(),
+            BackendKind::ALL.to_vec()
+        );
+        assert_eq!(
+            BackendKind::parse_list("float32,abfp").unwrap(),
+            vec![BackendKind::Float32, BackendKind::Abfp]
+        );
+    }
+
+    #[test]
+    fn build_names_match_kinds() {
+        let cfg = DeviceConfig::paper_default(32);
+        for kind in BackendKind::ALL {
+            let b = kind.build(cfg, 1);
+            assert_eq!(b.name(), kind.name());
+            // Every backend records its identity in the config json.
+            assert!(b.config_json().to_string().contains(kind.name()));
+        }
+    }
+
+    #[test]
+    fn staged_backend_mismatch_rejected() {
+        let cfg = DeviceConfig::paper_default(8);
+        let w = Tensor::full(&[4, 16], 0.5);
+        let staged = Float32Backend::new().stage_weights(&w).unwrap();
+        let mut abfp = AbfpBackend::new(cfg, 1);
+        let x = Tensor::full(&[2, 16], 1.0);
+        assert!(abfp.matmul(&x, &staged).is_err());
+    }
+
+    #[test]
+    fn staged_tiles_dequantize_drops_padding() {
+        // K = 5 at n = 4: second tile holds 1 real + 3 padded columns.
+        let mut st = StagedTiles::with_capacity(1, 5, 4);
+        st.scales.extend([2.0, 4.0]);
+        st.q = vec![0.5, -0.25, 0.0, 1.0, 0.5, 0.0, 0.0, 0.0];
+        let w = st.dequantize();
+        assert_eq!(w.shape(), &[1, 5]);
+        assert_eq!(w.data(), &[1.0, -0.5, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn project_params_preserves_shape_and_small_tensors() {
+        let cfg = DeviceConfig::paper_default(8);
+        let backend = BackendKind::Fixed.build(cfg, 1);
+        let mut rng = Pcg64::seeded(3);
+        let p3 = Tensor::new(&[2, 3, 8], rng.normal_vec(48)).unwrap();
+        let bias = Tensor::from_vec(vec![0.1, 0.2, 0.3]);
+        let out = project_params(backend.as_ref(), &[p3.clone(), bias.clone()]).unwrap();
+        assert_eq!(out[0].shape(), p3.shape());
+        assert_eq!(out[1], bias); // rank-1 passthrough
+        // Projection moves values onto the grid but keeps them close.
+        for (a, b) in out[0].data().iter().zip(p3.data()) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+    }
+}

@@ -10,6 +10,7 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::{collect_batch, BatchPolicy};
 use crate::abfp::DeviceConfig;
+use crate::backend::{project_params, BackendKind};
 use crate::models;
 use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine, Manifest};
 use crate::stats::{Percentiles, Running};
@@ -32,12 +33,48 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// Worker configuration: which executable variant serves the model.
+/// Worker configuration: which numeric backend serves the model.
+///
+/// `float32` and `abfp` run their dedicated executables; `fixed` and
+/// `bfp` pre-stage the model's parameters onto the backend's grid at
+/// worker startup (stage once, serve forever — never per batch) and run
+/// the FLOAT32 executable on the projected weights.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerConfig {
-    /// None = FLOAT32 twin; Some(cfg) = ABFP device simulation.
+    /// Number-format backend serving this worker.
+    pub backend: BackendKind,
+    /// Device geometry/bits. Required for `abfp`; supplies bits + tile
+    /// width for `fixed`/`bfp`; ignored by `float32`. `None` falls back
+    /// to the paper default (tile 128).
     pub device: Option<DeviceConfig>,
     pub policy: BatchPolicy,
+}
+
+impl WorkerConfig {
+    /// The FLOAT32 twin (the old `device: None` behaviour).
+    pub fn float32(policy: BatchPolicy) -> WorkerConfig {
+        WorkerConfig {
+            backend: BackendKind::Float32,
+            device: None,
+            policy,
+        }
+    }
+
+    /// ABFP serving at the given device point (the old `Some(cfg)`).
+    pub fn abfp(device: DeviceConfig, policy: BatchPolicy) -> WorkerConfig {
+        WorkerConfig {
+            backend: BackendKind::Abfp,
+            device: Some(device),
+            policy,
+        }
+    }
+
+    /// The device config this worker simulates (paper default when
+    /// unset).
+    pub fn device_or_default(&self) -> DeviceConfig {
+        self.device
+            .unwrap_or_else(|| DeviceConfig::paper_default(128))
+    }
 }
 
 /// Aggregated serving statistics (read via [`Router::stats`]).
@@ -205,13 +242,30 @@ fn worker_main(
                 Err(_) => models::init_params(&engine, &info, 7)?,
             }
         };
-        let art = match cfg.device {
-            Some(d) => models::art_fwd_abfp(model, d.n),
-            None => models::art_fwd_f32(model),
+        let dev = cfg.device_or_default();
+        // Pick the executable and stage the weights for the serving
+        // backend — once, at startup, never on the request path (the
+        // paper: weights converted to the device format once and
+        // stored on the array).
+        let (art, params) = match cfg.backend {
+            BackendKind::Float32 => (models::art_fwd_f32(model), params),
+            BackendKind::Abfp => (models::art_fwd_abfp(model, dev.n), params),
+            BackendKind::Fixed | BackendKind::Bfp => {
+                let backend = cfg.backend.build(dev, 0);
+                eprintln!(
+                    "worker {model}: pre-staging {} params onto backend {}",
+                    params.len(),
+                    backend.config_json().to_string()
+                );
+                (
+                    models::art_fwd_f32(model),
+                    project_params(backend.as_ref(), &params)?,
+                )
+            }
         };
         let exe = engine.executable(&art)?;
         // Pre-marshal parameter literals once; they are identical for
-        // every request (the paper: weights converted to ABFP once).
+        // every request.
         let param_lits: Vec<xla::Literal> =
             params.iter().map(lit_f32).collect::<Result<_>>()?;
         Ok((engine, info, param_lits, exe))
@@ -250,7 +304,8 @@ fn worker_main(
         // inputs are created per batch (zero-copy via borrowed args).
         let x_lit = lit_f32(&x).unwrap();
         let mut dyn_lits: Vec<xla::Literal> = vec![x_lit];
-        if let Some(d) = cfg.device {
+        if cfg.backend == BackendKind::Abfp {
+            let d = cfg.device_or_default();
             noise_seed = noise_seed.wrapping_add(1);
             dyn_lits.push(lit_key(noise_seed));
             dyn_lits.push(lit_scalars(d.gain, d.bits_w, d.bits_x, d.bits_y));

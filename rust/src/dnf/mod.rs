@@ -23,6 +23,7 @@ pub use histogram::NoiseHistogram;
 
 use anyhow::Result;
 
+use crate::backend::NumericBackend;
 use crate::models;
 use crate::rng::Pcg64;
 use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine};
@@ -90,6 +91,25 @@ pub fn calibrate(
         model: model.to_string(),
         layers,
     })
+}
+
+/// Host-side calibration of a single matmul layer against any numeric
+/// backend: `dy = backend(x, w) - float32(x, w)` with both paths fed
+/// the same FLOAT32 input — Eq. 8's differential noise, computed by the
+/// Rust simulators instead of the calib artifact. This is how the DNF
+/// noise model is built for backends that have no AOT calibration
+/// artifact (fixed, bfp), and how the Fig. 5 tile-8 column is produced.
+pub fn calibrate_matmul(
+    backend: &mut dyn NumericBackend,
+    name: &str,
+    x: &Tensor,
+    w: &Tensor,
+) -> Result<LayerNoise> {
+    let staged = backend.stage_weights(w)?;
+    let y = backend.matmul(x, &staged)?;
+    let f = x.matmul_nt(w)?;
+    let diff = y.zip(&f, |a, b| a - b)?;
+    Ok(layer_noise(name.to_string(), &diff))
 }
 
 /// Build one layer's noise description from its differential samples.
@@ -216,6 +236,39 @@ mod tests {
         let xs = model.sample_taps(&shapes, &mut rng, 1.0, Some(&only));
         assert!(xs[0].data().iter().all(|&v| v == 0.0));
         assert!(xs[1].data().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn host_calibration_tracks_backend_error() {
+        use crate::abfp::DeviceConfig;
+        use crate::backend::BackendKind;
+
+        let mut rng = Pcg64::seeded(0xca11b);
+        let x = Tensor::new(&[16, 64], rng.normal_vec(16 * 64)).unwrap();
+        let w = Tensor::new(
+            &[8, 64],
+            (0..8 * 64).map(|_| rng.laplace()).collect(),
+        )
+        .unwrap();
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 2.0, 0.5);
+
+        // The exact backend produces a zero noise model...
+        let mut f32b = BackendKind::Float32.build(cfg, 1);
+        let ln = calibrate_matmul(f32b.as_mut(), "fc", &x, &w).unwrap();
+        assert_eq!(ln.std, 0.0);
+        assert_eq!(ln.name, "fc");
+
+        // ...the device backends a non-trivial, samplable one.
+        let mut abfp = BackendKind::Abfp.build(cfg, 1);
+        let ln = calibrate_matmul(abfp.as_mut(), "fc", &x, &w).unwrap();
+        assert!(ln.std > 0.0);
+        assert_eq!(ln.hist.bins(), BINS);
+        let model = NoiseModel {
+            model: "test".into(),
+            layers: vec![ln],
+        };
+        let xs = model.sample_taps(&[vec![64usize]], &mut rng, 1.0, None);
+        assert!(xs[0].data().iter().any(|&v| v != 0.0));
     }
 
     #[test]

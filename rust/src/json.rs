@@ -82,6 +82,7 @@ impl Value {
     }
 
     /// Serialize compactly.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

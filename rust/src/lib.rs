@@ -7,18 +7,40 @@
 //!   MLPerf-archetype models live in `python/compile/` and are AOT-lowered
 //!   to HLO-text artifacts (`make artifacts`).
 //! * **Layer 3 (this crate)**: everything at run time — the PJRT
-//!   [`runtime`], the serving [`coordinator`], the bit-exact [`abfp`]
-//!   device simulator, the [`dnf`] finetuning machinery, the [`energy`]
-//!   model, synthetic [`data`] generators, task [`metrics`], and the
-//!   [`sweep`] drivers that regenerate every table and figure of the
-//!   paper. Python never runs on the request path.
+//!   [`runtime`], the serving [`coordinator`], the pluggable
+//!   number-format [`backend`]s, the bit-exact [`abfp`] device
+//!   simulator, the [`dnf`] finetuning machinery, the [`energy`] model,
+//!   synthetic [`data`] generators, task [`metrics`], and the [`sweep`]
+//!   drivers that regenerate every table and figure of the paper.
+//!   Python never runs on the request path.
 //!
-//! Only the `xla` crate (and `anyhow`) is available as a dependency in
-//! this build environment, so the classic support crates are implemented
-//! in-repo: [`rng`] (PCG64 + distributions), [`json`], [`cli`],
-//! [`benchkit`] (criterion-lite), and [`stats`].
+//! ## Numeric backends
+//!
+//! The paper's central comparison — ABFP against other number
+//! representations on the same workloads — is a first-class API seam:
+//! [`backend::NumericBackend`] with four shipped implementations
+//! (`float32`, `abfp`, `fixed`, `bfp`). The contract mirrors the
+//! hardware: [`backend::NumericBackend::stage_weights`] converts a
+//! weight matrix into the backend's native form **once** (weights live
+//! on the analog array); [`backend::NumericBackend::matmul`] runs the
+//! full numeric pipeline against the pre-staged weights, converting
+//! activations per call. Every sweep driver, the serving coordinator
+//! and the CLI (`--backend {float32,abfp,fixed,bfp}`) select backends
+//! through [`backend::BackendKind`]; adding a representation (RNS,
+//! AdaptivFloat, …) is one file plus one enum arm.
+//!
+//! ## Offline substrate
+//!
+//! No crates.io registry is available in the build environment, so the
+//! two external dependencies are vendored under `rust/vendor/`
+//! (`anyhow` as anyhow-lite; `xla` as a host-side stub whose PJRT entry
+//! points are gated behind clear errors until the real bindings are
+//! swapped in). The classic support crates are implemented in-repo:
+//! [`rng`] (PCG64 + distributions), [`json`], [`cli`], [`benchkit`]
+//! (criterion-lite), and [`stats`].
 
 pub mod abfp;
+pub mod backend;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

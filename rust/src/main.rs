@@ -4,6 +4,7 @@
 use anyhow::{bail, Result};
 
 use abfp::abfp::DeviceConfig;
+use abfp::backend::BackendKind;
 use abfp::cli::Args;
 use abfp::config::SweepGrid;
 use abfp::coordinator::{BatchPolicy, Router, WorkerConfig};
@@ -22,18 +23,27 @@ USAGE: abfp <command> [flags]
   pretrain      train FLOAT32 baselines for all six archetypes
                   --models a,b  --steps N  --ckpt DIR  --seed N
   sweep-table2  Table II / Fig 4 / Table S2 quality grids
-                  --models a,b  --repeats N  --samples N  --fast  --out DIR
+                  --models a,b  --backend LIST  --repeats N  --samples N
+                  --fast  --out DIR
   fig5          per-layer differential-noise stds (Fig 5 / S2)
                   --models cnn,ssd  --out DIR
+                  --host [--backends LIST --tile N]  artifact-free
+                  variant: one projection layer per numeric backend
   finetune      Table III / S3: QAT vs DNF at tile 128, gain 8
                   --models cnn,ssd  --steps N  --bits 8 (or 6)  --out DIR
   figs1         Fig S1 numeric error distributions + Appendix A
-                  --repeats N  --rows N  --out DIR
-  bits          Fig 2 captured-bit windows             --out DIR
+                  --repeats N  --rows N  --backends LIST  --out DIR
+  bits          Fig 2 captured-bit windows + format roster  --out DIR
   energy        section VI ADC energy analysis         --out DIR
   serve         start the router and print latency stats
-                  --models a,b  --requests N  --tile N  --gain G  --f32
+                  --models a,b  --requests N  --tile N  --gain G
+                  --backend NAME  (--f32 = --backend float32)
   help          this text
+
+Backends: float32 | abfp | fixed | bfp (comma lists and `all` accepted
+where LIST is expected; --backend and --backends are interchangeable).
+fixed = global-scale INT-b straw man; bfp = static per-tile
+power-of-two block floating point (HBFP-like).
 
 Common flags: --artifacts DIR (default artifacts), --ckpt DIR (default
 checkpoints), --out DIR (default reports).";
@@ -59,6 +69,15 @@ fn main() -> Result<()> {
 
 fn engine(args: &Args) -> Result<Engine> {
     Engine::load(&args.str_or("artifacts", "artifacts"))
+}
+
+/// `--backend` and `--backends` are interchangeable on every command;
+/// a typo'd selector errors instead of silently running the default.
+fn backend_flag(args: &Args, default: &str) -> String {
+    args.get("backend")
+        .or_else(|| args.get("backends"))
+        .unwrap_or(default)
+        .to_string()
 }
 
 fn model_list(args: &Args) -> Vec<String> {
@@ -124,11 +143,21 @@ fn cmd_table2(args: &Args) -> Result<()> {
     };
     grid.repeats = args.usize_or("repeats", grid.repeats)?;
     grid.eval_samples = args.usize_or("samples", grid.eval_samples)?;
+    let backends = BackendKind::parse_list(&backend_flag(args, "abfp"))?;
     let mut sweeps = Vec::new();
     for model in model_list(args) {
-        eprintln!("[table2] {model}");
+        eprintln!(
+            "[table2] {model} (backends: {})",
+            backends
+                .iter()
+                .map(|b| b.name())
+                .collect::<Vec<_>>()
+                .join(",")
+        );
         let params = abfp::sweep::eval::load_pretrained(&eng, &model, &ckpt)?;
-        sweeps.push(table2::sweep_model(&eng, &model, &params, &grid, true)?);
+        sweeps.push(table2::sweep_model(
+            &eng, &model, &params, &grid, &backends, true,
+        )?);
     }
     table2::write_reports(&out, &sweeps, &grid)?;
     println!("{}", table2::render_table2(&sweeps, &grid));
@@ -137,13 +166,23 @@ fn cmd_table2(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig5(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "reports");
+    let gains = [1.0, 8.0, 16.0];
+    if args.bool("host") {
+        // Artifact-free variant: one projection layer per backend on
+        // the Rust simulators (--backends selects, default all).
+        let backends = BackendKind::parse_list(&backend_flag(args, "all"))?;
+        let tile = args.usize_or("tile", 128)?;
+        let rows = fig5::run_host(&backends, &gains, (8, 8, 8), tile, 0.5, 64)?;
+        fig5::write_reports(&out, &rows, tile)?;
+        println!("{}", fig5::render(&rows, tile));
+        return Ok(());
+    }
     let eng = engine(args)?;
     let ckpt = args.str_or("ckpt", "checkpoints");
-    let out = args.str_or("out", "reports");
     let sel = args
         .list("models")
         .unwrap_or_else(|| vec!["cnn".into(), "ssd".into()]);
-    let gains = [1.0, 8.0, 16.0];
     let bits_list = [(8, 8, 8), (6, 6, 8)];
     let rows = fig5::run(&eng, &ckpt, &sel, &gains, &bits_list, 0.5)?;
     fig5::write_reports(&out, &rows, eng.manifest.finetune_tile)?;
@@ -178,6 +217,7 @@ fn cmd_figs1(args: &Args) -> Result<()> {
     let out = args.str_or("out", "reports");
     let repeats = args.usize_or("repeats", 3)?;
     let rows = args.usize_or("rows", figs1::ROWS)?;
+    let backends = BackendKind::parse_list(&backend_flag(args, "all"))?;
     let cells = figs1::run(
         &[8, 32, 128],
         &[1.0, 2.0, 4.0, 8.0, 16.0],
@@ -185,8 +225,10 @@ fn cmd_figs1(args: &Args) -> Result<()> {
         repeats,
         rows,
     )?;
-    figs1::write_reports(&out, &cells, true, rows)?;
+    let backend_cells = figs1::run_backends(&backends, &[8, 32, 128], repeats, rows)?;
+    figs1::write_reports(&out, &cells, &backend_cells, true, rows)?;
     println!("{}", figs1::render(&cells));
+    println!("{}", figs1::render_backends(&backend_cells));
     Ok(())
 }
 
@@ -211,21 +253,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .list("models")
         .unwrap_or_else(|| vec!["bert".into(), "dlrm".into()]);
     let n_requests = args.usize_or("requests", 256)?;
-    let device = if args.bool("f32") {
-        None
+    let backend = if args.bool("f32") {
+        BackendKind::Float32
     } else {
-        Some(DeviceConfig::new(
-            args.usize_or("tile", 128)?,
-            (8, 8, 8),
-            args.f32_or("gain", 8.0)?,
-            0.5,
-        ))
+        BackendKind::parse(&backend_flag(args, "abfp"))?
     };
+    let device = DeviceConfig::new(
+        args.usize_or("tile", 128)?,
+        (8, 8, 8),
+        args.f32_or("gain", 8.0)?,
+        0.5,
+    );
     let cfg = WorkerConfig {
-        device,
+        backend,
+        device: Some(device),
         policy: BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?),
     };
-    eprintln!("[serve] starting workers for {sel:?} (device: {device:?})");
+    // The serve manifest line: exact backend configuration, machine
+    // readable, so a served deployment is reproducible from its log.
+    eprintln!(
+        "[serve] starting workers for {sel:?} backend-config {}",
+        backend.build(device, 0).config_json().to_string()
+    );
     let router = Router::start(&artifacts, &ckpt, &sel, cfg)?;
 
     // Drive a closed-loop load: round-robin the served models.

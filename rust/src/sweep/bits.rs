@@ -1,7 +1,10 @@
-//! Fig. 2: the captured-bit window as gain doubles.
+//! Fig. 2: the captured-bit window as gain doubles, plus the
+//! number-format roster the backends implement.
 
 use anyhow::Result;
 
+use crate::abfp::DeviceConfig;
+use crate::backend::BackendKind;
 use crate::numerics::BitWindow;
 use crate::report::{write_report, Table};
 
@@ -47,9 +50,31 @@ pub fn render(b_w: u32, b_x: u32, b_y: u32, n: usize, gains: &[u32]) -> String {
     out
 }
 
+/// Render the number-format roster: every backend's exact
+/// configuration at the given device geometry — the formats the bit
+/// windows above are compared against.
+pub fn render_formats(cfg: DeviceConfig) -> String {
+    let mut out = String::from(
+        "\n## Number formats under comparison\n\n\
+         Exact backend configurations (machine readable; the same JSON\n\
+         is recorded by sweep reports and the serve startup log):\n\n",
+    );
+    let mut t = Table::new("backends", &["backend", "config"]);
+    for kind in BackendKind::ALL {
+        t.row(vec![
+            kind.name().to_string(),
+            format!("`{}`", kind.build(cfg, 0).config_json().to_string()),
+        ]);
+    }
+    out.push_str(&t.to_markdown());
+    out
+}
+
 pub fn write_reports(dir: &str) -> Result<()> {
     // The paper's Fig. 2 setting: 8/8 operand bits, n = 128, 8 ADC bits.
-    write_report(dir, "fig2.md", &render(8, 8, 8, 128, &[0, 1, 2, 3, 4]))
+    let mut body = render(8, 8, 8, 128, &[0, 1, 2, 3, 4]);
+    body.push_str(&render_formats(DeviceConfig::paper_default(128)));
+    write_report(dir, "fig2.md", &body)
 }
 
 #[cfg(test)]
@@ -64,5 +89,15 @@ mod tests {
         assert!(s.contains("G =    1  [########..............]"), "{s}");
         // G=2: one MSB saturates, one extra LSB captured.
         assert!(s.contains("G =    2  [s########.............]"), "{s}");
+    }
+
+    #[test]
+    fn formats_roster_lists_every_backend() {
+        let s = render_formats(DeviceConfig::paper_default(128));
+        for kind in BackendKind::ALL {
+            assert!(s.contains(&format!("| {} ", kind.name())), "{s}");
+        }
+        assert!(s.contains("per-tile-pow2"), "{s}");
+        assert!(s.contains("global-absmax"), "{s}");
     }
 }

@@ -1,9 +1,19 @@
-//! Shared evaluation: run a model (FLOAT32 twin or ABFP device) over a
-//! synthetic eval set and compute its task metric.
+//! Shared evaluation: run a model over a synthetic eval set under any
+//! numeric backend and compute its task metric.
+//!
+//! FLOAT32 and ABFP have dedicated AOT artifacts and run end to end.
+//! The digital baselines (`fixed`, `bfp`) have no artifact of their
+//! own: they evaluate under the **weight-residency approximation** —
+//! parameters are staged once onto the backend's grid
+//! ([`crate::backend::project_params`]) and the FLOAT32 artifact runs
+//! on the projected weights. That matches how those formats deploy
+//! (weights resident in the device format, activations FLOAT32 at the
+//! interface) and keeps every backend comparable on every model.
 
 use anyhow::Result;
 
 use crate::abfp::DeviceConfig;
+use crate::backend::{project_params, BackendKind};
 use crate::data::dataset_for;
 use crate::metrics;
 use crate::models;
@@ -73,6 +83,29 @@ pub fn eval_abfp(
         metric_num += metrics::compute(&info.metric, &tensors, &batch.y)?;
     }
     Ok(metric_num / batches as f64)
+}
+
+/// Evaluate a model under any numeric backend (see the module docs for
+/// the per-backend execution strategy). `cfg` supplies the device
+/// geometry; `noise_seed` only affects the ABFP noise stream.
+pub fn eval_backend(
+    engine: &Engine,
+    model: &str,
+    params: &[Tensor],
+    kind: BackendKind,
+    cfg: DeviceConfig,
+    noise_seed: u64,
+    samples: usize,
+) -> Result<f64> {
+    match kind {
+        BackendKind::Float32 => eval_f32(engine, model, params, samples),
+        BackendKind::Abfp => eval_abfp(engine, model, params, cfg, noise_seed, samples),
+        BackendKind::Fixed | BackendKind::Bfp => {
+            let backend = kind.build(cfg, noise_seed);
+            let projected = project_params(backend.as_ref(), params)?;
+            eval_f32(engine, model, &projected, samples)
+        }
+    }
 }
 
 /// Load the pretrained checkpoint for a model (produced by `abfp

@@ -8,12 +8,16 @@
 
 use anyhow::Result;
 
+use crate::abfp::DeviceConfig;
+use crate::backend::BackendKind;
 use crate::dnf;
 use crate::data::dataset_for;
 use crate::report::{bar_chart, write_report, Table};
 use crate::rng::Pcg64;
 use crate::runtime::Engine;
 use crate::sweep::eval::load_pretrained;
+use crate::sweep::figs1::protocol_inputs;
+use crate::tensor::Tensor;
 
 /// One (model, bits, gain) row of layer stds.
 #[derive(Debug, Clone)]
@@ -59,6 +63,57 @@ pub fn run(
         }
     }
     Ok(rows)
+}
+
+/// Host-side Fig. 5 variant: differential-noise std of a single
+/// projection layer (the Fig. S1 protocol operands, truncated to
+/// `dim` columns) per numeric backend x gain — no artifacts needed.
+/// The rows slot into the same rendering as the artifact-calibrated
+/// ones, with the backend name standing in for the layer name.
+pub fn run_host(
+    kinds: &[BackendKind],
+    gains: &[f32],
+    bits: (u32, u32, u32),
+    tile: usize,
+    noise_lsb: f32,
+    rows: usize,
+) -> Result<Vec<LayerStdRow>> {
+    let (x, w) = protocol_inputs(2022, rows);
+    let dim = 256usize.min(x.shape()[1]);
+    let x = shrink(&x, dim);
+    let w = shrink(&w, dim);
+    let mut out = Vec::new();
+    for &gain in gains {
+        let cfg = DeviceConfig::new(tile, bits, gain, noise_lsb);
+        let mut layers = Vec::new();
+        for &kind in kinds {
+            // Gain is an ABFP knob: run the other backends once.
+            if kind != BackendKind::Abfp && gain != gains[0] {
+                continue;
+            }
+            let mut backend = kind.build(cfg, 0xf1f5);
+            let ln = dnf::calibrate_matmul(backend.as_mut(), kind.name(), &x, &w)?;
+            layers.push((ln.name, ln.std));
+        }
+        out.push(LayerStdRow {
+            model: "matmul-host".to_string(),
+            bits,
+            gain,
+            layers,
+        });
+    }
+    Ok(out)
+}
+
+/// First `dim` columns of a 2-D tensor (keeps the protocol shapes
+/// manageable for the host sweep).
+fn shrink(t: &Tensor, dim: usize) -> Tensor {
+    let rows = t.shape()[0];
+    let mut data = Vec::with_capacity(rows * dim);
+    for r in 0..rows {
+        data.extend_from_slice(&t.row(r)[..dim]);
+    }
+    Tensor::new(&[rows, dim], data).expect("shrink dims")
 }
 
 /// Render the Fig. 5 report (markdown table + ASCII chart per config).
@@ -123,5 +178,34 @@ mod tests {
         assert!(s.contains("c1"));
         assert!(s.contains("0.500"));
         assert!(s.contains("gain 16"));
+    }
+
+    #[test]
+    fn host_variant_covers_backends_without_artifacts() {
+        let rows = run_host(
+            &BackendKind::ALL,
+            &[1.0, 8.0],
+            (8, 8, 8),
+            32,
+            0.0,
+            8,
+        )
+        .unwrap();
+        // Gain 1 row carries all four backends; gain 8 only ABFP.
+        assert_eq!(rows[0].layers.len(), 4);
+        assert_eq!(rows[1].layers.len(), 1);
+        let std_of = |name: &str| {
+            rows[0]
+                .layers
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap()
+                .1
+        };
+        assert_eq!(std_of("float32"), 0.0);
+        assert!(std_of("abfp") > 0.0);
+        assert!(std_of("fixed") > 0.0);
+        let s = render(&rows, 32);
+        assert!(s.contains("matmul-host"), "{s}");
     }
 }

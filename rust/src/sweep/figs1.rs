@@ -11,7 +11,8 @@
 
 use anyhow::Result;
 
-use crate::abfp::{matmul_error_stats, DeviceConfig, ErrorStats};
+use crate::abfp::{backend_error_stats, matmul_error_stats, DeviceConfig, ErrorStats};
+use crate::backend::BackendKind;
 use crate::numerics::bf16_round;
 use crate::report::{ascii_histogram, write_report, Table};
 use crate::rng::Pcg64;
@@ -45,6 +46,35 @@ pub struct FigS1Cell {
     pub stats: ErrorStats,
 }
 
+/// One backend-comparison cell (same protocol, one row per backend).
+#[derive(Debug, Clone)]
+pub struct BackendCell {
+    pub backend: String,
+    pub tile: usize,
+    pub stats: ErrorStats,
+}
+
+/// Fold `s` into the running aggregate `agg`: extrema widen; the
+/// point statistics are pairwise-averaged, i.e. an exponentially
+/// weighted blend that favors later repeats (the seed behaviour of
+/// this report, kept for continuity — repeats only smooth noise here,
+/// they are not an unbiased estimator).
+fn merge_stats(agg: Option<ErrorStats>, s: ErrorStats) -> ErrorStats {
+    match agg {
+        None => s,
+        Some(a) => ErrorStats {
+            mean: (a.mean + s.mean) / 2.0,
+            std: (a.std + s.std) / 2.0,
+            min: a.min.min(s.min),
+            max: a.max.max(s.max),
+            p01: (a.p01 + s.p01) / 2.0,
+            p50: (a.p50 + s.p50) / 2.0,
+            p99: (a.p99 + s.p99) / 2.0,
+            sat_frac: (a.sat_frac + s.sat_frac) / 2.0,
+        },
+    }
+}
+
 /// Run the full grid on the Rust simulator.
 pub fn run(
     tiles: &[usize],
@@ -64,19 +94,7 @@ pub fn run(
                     let (x, w) = protocol_inputs(2022 + rep as u64, rows);
                     let cfg = DeviceConfig::new(tile, (8, 8, 8), gain, noise);
                     let s = matmul_error_stats(cfg, 7 + rep as u64, &x, &w)?;
-                    agg = Some(match agg {
-                        None => s,
-                        Some(a) => ErrorStats {
-                            mean: (a.mean + s.mean) / 2.0,
-                            std: (a.std + s.std) / 2.0,
-                            min: a.min.min(s.min),
-                            max: a.max.max(s.max),
-                            p01: (a.p01 + s.p01) / 2.0,
-                            p50: (a.p50 + s.p50) / 2.0,
-                            p99: (a.p99 + s.p99) / 2.0,
-                            sat_frac: (a.sat_frac + s.sat_frac) / 2.0,
-                        },
-                    });
+                    agg = Some(merge_stats(agg, s));
                 }
                 cells.push(FigS1Cell {
                     tile,
@@ -88,6 +106,71 @@ pub fn run(
         }
     }
     Ok(cells)
+}
+
+/// Backend comparison on the Fig. S1 protocol: every requested backend
+/// at 8-bit operands; ABFP runs at the paper's preferred operating
+/// point (gain 8, 0.5 LSB ADC noise). Backends whose numerics ignore
+/// the tile width report one row instead of one per tile.
+pub fn run_backends(
+    kinds: &[BackendKind],
+    tiles: &[usize],
+    repeats: usize,
+    rows: usize,
+) -> Result<Vec<BackendCell>> {
+    let mut cells = Vec::new();
+    for &kind in kinds {
+        let tiles_for = if kind.uses_tiles() { tiles } else { &tiles[..1] };
+        for &tile in tiles_for {
+            let cfg = DeviceConfig::new(tile, (8, 8, 8), 8.0, 0.5);
+            let mut agg: Option<ErrorStats> = None;
+            for rep in 0..repeats {
+                let (x, w) = protocol_inputs(2022 + rep as u64, rows);
+                let mut backend = kind.build(cfg, 7 + rep as u64);
+                let s = backend_error_stats(backend.as_mut(), &x, &w)?;
+                agg = Some(merge_stats(agg, s));
+            }
+            cells.push(BackendCell {
+                backend: kind.name().to_string(),
+                tile,
+                stats: agg.unwrap(),
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Render the backend-comparison table.
+pub fn render_backends(cells: &[BackendCell]) -> String {
+    let mut out = String::from(
+        "\n## Backend comparison — error vs FLOAT32, Fig. S1 protocol\n\n\
+         8-bit operands everywhere; ABFP at gain 8, 0.5 LSB ADC noise.\n\
+         The paper's qualitative claim: global-scale fixed point (the\n\
+         straw man) loses to ABFP's per-tile adaptive scales on\n\
+         heavy-tailed weights; static power-of-two BFP sits between.\n\n",
+    );
+    let mut t = Table::new(
+        "backend error statistics",
+        &["backend", "tile", "mean", "std", "min", "max", "p99", "sat%"],
+    );
+    for c in cells {
+        t.row(vec![
+            c.backend.clone(),
+            if c.backend == "abfp" || c.backend == "bfp" {
+                c.tile.to_string()
+            } else {
+                "-".to_string()
+            },
+            format!("{:+.2e}", c.stats.mean),
+            format!("{:.3e}", c.stats.std),
+            format!("{:+.2e}", c.stats.min),
+            format!("{:+.2e}", c.stats.max),
+            format!("{:+.2e}", c.stats.p99),
+            format!("{:.3}", 100.0 * c.stats.sat_frac),
+        ]);
+    }
+    out.push_str(&t.to_markdown());
+    out
 }
 
 /// Error histogram for one operating point (the Fig. S1 violin analogue).
@@ -141,8 +224,17 @@ pub fn render(cells: &[FigS1Cell]) -> String {
     out
 }
 
-pub fn write_reports(dir: &str, cells: &[FigS1Cell], with_hists: bool, rows: usize) -> Result<()> {
+pub fn write_reports(
+    dir: &str,
+    cells: &[FigS1Cell],
+    backend_cells: &[BackendCell],
+    with_hists: bool,
+    rows: usize,
+) -> Result<()> {
     let mut body = render(cells);
+    if !backend_cells.is_empty() {
+        body.push_str(&render_backends(backend_cells));
+    }
     if with_hists {
         body.push_str("\n## Error histograms (selected cells)\n\n```\n");
         for (tile, gain) in [(8usize, 1.0f32), (8, 16.0), (128, 1.0), (128, 8.0)] {
@@ -180,5 +272,29 @@ mod tests {
         let cells = run(&[8], &[1.0, 2.0], &[0.0], 1, 16).unwrap();
         let s = render(&cells);
         assert_eq!(s.matches("| 8 ").count(), 2, "{s}");
+    }
+
+    #[test]
+    fn backend_comparison_covers_all_and_orders_sanely() {
+        // Small protocol to keep cargo test fast: all four backends on
+        // one tile; float32 is exact, everything else errs.
+        let cells = run_backends(&BackendKind::ALL, &[32], 1, 32).unwrap();
+        let get = |name: &str| {
+            cells
+                .iter()
+                .find(|c| c.backend == name)
+                .unwrap_or_else(|| panic!("{name} missing"))
+                .stats
+                .std
+        };
+        assert_eq!(cells.len(), 4);
+        assert_eq!(get("float32"), 0.0);
+        assert!(get("abfp") > 0.0);
+        assert!(get("fixed") > 0.0);
+        assert!(get("bfp") > 0.0);
+        let s = render_backends(&cells);
+        for kind in BackendKind::ALL {
+            assert!(s.contains(kind.name()), "{s}");
+        }
     }
 }

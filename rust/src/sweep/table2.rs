@@ -1,10 +1,20 @@
-//! Table II (+ Fig. 4, Table S2): model quality across tile width x
-//! gain x bitwidth, with repeated noise seeds for standard deviations.
+//! Table II (+ Fig. 4, Table S2): model quality across backend x tile
+//! width x gain x bitwidth, with repeated noise seeds for standard
+//! deviations.
+//!
+//! The backend dimension is the paper's headline comparison: ABFP
+//! against FLOAT32 and the digital baselines (global-scale fixed point,
+//! static BFP) on identical checkpoints and eval sets. Noiseless
+//! backends collapse the repeat axis automatically; config-independent
+//! backends (FLOAT32) and tile-independent backends (fixed) prune the
+//! degenerate grid cells.
 
 use anyhow::Result;
 
 use crate::abfp::DeviceConfig;
+use crate::backend::{roster_json, BackendKind};
 use crate::config::SweepGrid;
+use crate::json;
 use crate::report::{bar_chart, write_report, Table};
 use crate::runtime::Engine;
 use crate::stats::Running;
@@ -15,6 +25,7 @@ use crate::tensor::Tensor;
 #[derive(Debug, Clone)]
 pub struct Cell {
     pub model: String,
+    pub backend: String,
     pub cfg: DeviceConfig,
     pub mean: f64,
     pub std: f64,
@@ -29,43 +40,86 @@ pub struct ModelSweep {
     pub cells: Vec<Cell>,
 }
 
-/// Run the Table II grid for one model with pretrained `params`.
+impl ModelSweep {
+    /// Backend names present, in first-appearance order.
+    pub fn backends(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for c in &self.cells {
+            if !seen.contains(&c.backend) {
+                seen.push(c.backend.clone());
+            }
+        }
+        seen
+    }
+}
+
+/// Run the Table II grid for one model with pretrained `params`, once
+/// per requested backend.
 pub fn sweep_model(
     engine: &Engine,
     model: &str,
     params: &[Tensor],
     grid: &SweepGrid,
+    backends: &[BackendKind],
     progress: bool,
 ) -> Result<ModelSweep> {
     let float32 = eval::eval_f32(engine, model, params, grid.eval_samples)?;
+    let first_cfg = grid.configs()[0];
     let mut cells = Vec::new();
-    for cfg in grid.configs() {
-        let mut run = Running::new();
-        for rep in 0..grid.repeats {
-            let m = eval::eval_abfp(
-                engine,
-                model,
-                params,
+    for &kind in backends {
+        for cfg in grid.configs() {
+            // Prune degenerate cells: tile width and analog gain only
+            // matter where the backend's numerics use them; FLOAT32
+            // ignores the config entirely.
+            if !kind.uses_tiles() && cfg.n != grid.tiles[0] {
+                continue;
+            }
+            if !kind.uses_gain() && cfg.gain != grid.gains[0] {
+                continue;
+            }
+            if kind == BackendKind::Float32 && cfg != first_cfg {
+                continue;
+            }
+            // Only the ABFP ADC is stochastic; everything else is
+            // deterministic, so one repeat suffices.
+            let repeats = if kind == BackendKind::Abfp {
+                grid.repeats
+            } else {
+                1
+            };
+            let mut run = Running::new();
+            for rep in 0..repeats {
+                let m = if kind == BackendKind::Float32 {
+                    float32 // already evaluated for the baseline header
+                } else {
+                    eval::eval_backend(
+                        engine,
+                        model,
+                        params,
+                        kind,
+                        cfg,
+                        noise_seed(rep),
+                        grid.eval_samples,
+                    )?
+                };
+                run.push(m);
+            }
+            if progress {
+                eprintln!(
+                    "  {model} [{}] n={:<3} bits={}/{}/{} G={:<4} -> {:.4} (f32 {:.4})",
+                    kind.name(), cfg.n, cfg.bits_w, cfg.bits_x, cfg.bits_y, cfg.gain,
+                    run.mean(), float32
+                );
+            }
+            cells.push(Cell {
+                model: model.to_string(),
+                backend: kind.name().to_string(),
                 cfg,
-                noise_seed(rep),
-                grid.eval_samples,
-            )?;
-            run.push(m);
+                mean: run.mean(),
+                std: run.sample_std(),
+                repeats,
+            });
         }
-        if progress {
-            eprintln!(
-                "  {model} n={:<3} bits={}/{}/{} G={:<4} -> {:.4} (f32 {:.4})",
-                cfg.n, cfg.bits_w, cfg.bits_x, cfg.bits_y, cfg.gain,
-                run.mean(), float32
-            );
-        }
-        cells.push(Cell {
-            model: model.to_string(),
-            cfg,
-            mean: run.mean(),
-            std: run.sample_std(),
-            repeats: grid.repeats,
-        });
     }
     Ok(ModelSweep {
         model: model.to_string(),
@@ -88,40 +142,52 @@ pub fn render_table2(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
             crate::models::paper_name(&sw.model),
             sw.float32
         ));
-        for &bits in &grid.bitwidths {
-            let mut t = Table::new(
-                &format!(
-                    "{} b_W/b_X/b_Y = {}/{}/{}",
-                    sw.model, bits.0, bits.1, bits.2
-                ),
-                &std::iter::once("tile \\ gain".to_string())
-                    .chain(grid.gains.iter().map(|g| format!("G={g}")))
-                    .collect::<Vec<_>>()
-                    .iter()
-                    .map(|s| s.as_str())
-                    .collect::<Vec<_>>(),
-            );
-            for &n in &grid.tiles {
-                let mut row = vec![format!("n={n}")];
-                for &g in &grid.gains {
-                    let cell = sw.cells.iter().find(|c| {
-                        c.cfg.n == n
-                            && c.cfg.gain == g
-                            && (c.cfg.bits_w, c.cfg.bits_x, c.cfg.bits_y) == bits
-                    });
-                    row.push(match cell {
-                        Some(c) => {
-                            let above = c.mean >= 0.99 * sw.float32;
-                            format!("{}{:.4}{}", if above { "**" } else { "" },
-                                    c.mean, if above { "**" } else { "" })
-                        }
-                        None => "-".to_string(),
-                    });
-                }
-                t.row(row);
+        for backend in sw.backends() {
+            if backend == "float32" {
+                continue; // the header line is the float32 row
             }
-            out.push_str(&t.to_markdown());
-            out.push('\n');
+            let cells: Vec<&Cell> =
+                sw.cells.iter().filter(|c| c.backend == backend).collect();
+            for &bits in &grid.bitwidths {
+                let mut t = Table::new(
+                    &format!(
+                        "{} [{}] b_W/b_X/b_Y = {}/{}/{}",
+                        sw.model, backend, bits.0, bits.1, bits.2
+                    ),
+                    &std::iter::once("tile \\ gain".to_string())
+                        .chain(grid.gains.iter().map(|g| format!("G={g}")))
+                        .collect::<Vec<_>>()
+                        .iter()
+                        .map(|s| s.as_str())
+                        .collect::<Vec<_>>(),
+                );
+                // Unknown backend names (future formats) get the
+                // conservative treatment: every axis must match.
+                let (tiled, gained) = BackendKind::parse(&backend)
+                    .map(|k| (k.uses_tiles(), k.uses_gain()))
+                    .unwrap_or((true, true));
+                for &n in &grid.tiles {
+                    let mut row = vec![format!("n={n}")];
+                    for &g in &grid.gains {
+                        let cell = cells.iter().find(|c| {
+                            (c.cfg.n == n || !tiled)
+                                && (c.cfg.gain == g || !gained)
+                                && (c.cfg.bits_w, c.cfg.bits_x, c.cfg.bits_y) == bits
+                        });
+                        row.push(match cell {
+                            Some(c) => {
+                                let above = c.mean >= 0.99 * sw.float32;
+                                format!("{}{:.4}{}", if above { "**" } else { "" },
+                                        c.mean, if above { "**" } else { "" })
+                            }
+                            None => "-".to_string(),
+                        });
+                    }
+                    t.row(row);
+                }
+                out.push_str(&t.to_markdown());
+                out.push('\n');
+            }
         }
     }
     out
@@ -133,10 +199,11 @@ pub fn render_table_s2(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
     for sw in sweeps {
         let mut t = Table::new(
             &format!("{} (n={} repeats)", sw.model, grid.repeats),
-            &["tile", "bits", "gain", "std"],
+            &["backend", "tile", "bits", "gain", "std"],
         );
         for c in &sw.cells {
             t.row(vec![
+                c.backend.clone(),
                 c.cfg.n.to_string(),
                 format!("{}/{}/{}", c.cfg.bits_w, c.cfg.bits_x, c.cfg.bits_y),
                 c.cfg.gain.to_string(),
@@ -148,7 +215,7 @@ pub fn render_table_s2(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
     out
 }
 
-/// Render Fig. 4: quality as % of FLOAT32 vs gain, per tile width.
+/// Render Fig. 4: ABFP quality as % of FLOAT32 vs gain, per tile width.
 pub fn render_fig4(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
     let mut out = String::from("\n## Fig. 4 — % of FLOAT32 quality vs gain (8/8/8)\n\n");
     for sw in sweeps {
@@ -162,7 +229,8 @@ pub fn render_fig4(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
                     sw.cells
                         .iter()
                         .find(|c| {
-                            c.cfg.n == n
+                            c.backend == "abfp"
+                                && c.cfg.n == n
                                 && c.cfg.gain == g
                                 && c.cfg.bits_w == 8
                         })
@@ -182,6 +250,48 @@ pub fn render_fig4(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
     out
 }
 
+/// Machine-readable sweep record: every cell with its **exact** backend
+/// + device configuration, plus the backend roster (config_json per
+/// backend) so runs are reproducible from the report alone.
+pub fn render_json(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
+    let kinds: Vec<BackendKind> = sweeps
+        .first()
+        .map(|sw| {
+            sw.backends()
+                .iter()
+                .filter_map(|b| BackendKind::parse(b).ok())
+                .collect()
+        })
+        .unwrap_or_default();
+    let roster = roster_json(
+        &kinds,
+        DeviceConfig::new(grid.tiles[0], grid.bitwidths[0], grid.gains[0], grid.noise_lsb),
+        0,
+    );
+    let cells: Vec<json::Value> = sweeps
+        .iter()
+        .flat_map(|sw| {
+            sw.cells.iter().map(move |c| {
+                json::obj(vec![
+                    ("model", json::s(&c.model)),
+                    ("backend", json::s(&c.backend)),
+                    ("device", c.cfg.to_json()),
+                    ("float32", json::num(sw.float32)),
+                    ("mean", json::num(c.mean)),
+                    ("std", json::num(c.std)),
+                    ("repeats", json::num(c.repeats as f64)),
+                ])
+            })
+        })
+        .collect();
+    json::obj(vec![
+        ("backends", roster),
+        ("eval_samples", json::num(grid.eval_samples as f64)),
+        ("cells", json::arr(cells)),
+    ])
+    .to_string()
+}
+
 /// Write all Table-II-family reports.
 pub fn write_reports(
     dir: &str,
@@ -191,15 +301,17 @@ pub fn write_reports(
     write_report(dir, "table2.md", &render_table2(sweeps, grid))?;
     write_report(dir, "table_s2.md", &render_table_s2(sweeps, grid))?;
     write_report(dir, "fig4.txt", &render_fig4(sweeps, grid))?;
+    write_report(dir, "table2.json", &render_json(sweeps, grid))?;
     // Machine-readable CSV for downstream analysis.
     let mut t = Table::new(
         "",
-        &["model", "float32", "tile", "bw", "bx", "by", "gain", "mean", "std"],
+        &["model", "backend", "float32", "tile", "bw", "bx", "by", "gain", "mean", "std"],
     );
     for sw in sweeps {
         for c in &sw.cells {
             t.row(vec![
                 sw.model.clone(),
+                c.backend.clone(),
                 format!("{:.6}", sw.float32),
                 c.cfg.n.to_string(),
                 c.cfg.bits_w.to_string(),
@@ -225,12 +337,34 @@ mod tests {
         for cfg in grid.configs() {
             cells.push(Cell {
                 model: "cnn".into(),
+                backend: "abfp".into(),
                 cfg,
                 mean: if cfg.n == 8 { 0.95 } else { 0.80 },
                 std: 0.01,
                 repeats: 1,
             });
         }
+        ModelSweep {
+            model: "cnn".into(),
+            float32: 0.953,
+            cells,
+        }
+    }
+
+    fn four_backend_sweep() -> ModelSweep {
+        let grid = SweepGrid::fast();
+        let cfg = grid.configs()[0];
+        let cells = BackendKind::ALL
+            .iter()
+            .map(|k| Cell {
+                model: "cnn".into(),
+                backend: k.name().into(),
+                cfg,
+                mean: 0.9,
+                std: 0.0,
+                repeats: 1,
+            })
+            .collect();
         ModelSweep {
             model: "cnn".into(),
             float32: 0.953,
@@ -259,5 +393,20 @@ mod tests {
         let grid = SweepGrid::fast();
         let md = render_table_s2(&[fake_sweep()], &grid);
         assert_eq!(md.matches("0.01000").count(), grid.configs().len());
+    }
+
+    #[test]
+    fn csv_and_json_carry_all_four_backends() {
+        let grid = SweepGrid::fast();
+        let sw = four_backend_sweep();
+        assert_eq!(sw.backends().len(), 4);
+        let js = render_json(&[sw], &grid);
+        for kind in BackendKind::ALL {
+            assert!(js.contains(kind.name()), "{kind} missing from {js}");
+        }
+        // Exact device config rides along with every cell.
+        assert!(js.contains("\"noise_lsb\":0.5"), "{js}");
+        let parsed = crate::json::parse(&js).unwrap();
+        assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 4);
     }
 }

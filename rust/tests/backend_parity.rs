@@ -1,0 +1,264 @@
+//! Backend parity: the contracts the `NumericBackend` redesign must
+//! honor.
+//!
+//!   B1  `AbfpBackend` (and the refactored `Device::matmul`) is
+//!       **bit-identical** to the pre-refactor `Device::matmul` — a
+//!       frozen copy of the original algorithm lives in this file as
+//!       the reference, including the device's RNG stream constant, so
+//!       any drift in staging order, quantization, or noise draws fails
+//!       the suite.
+//!   B2  Staged-weight reuse is bit-identical to restaging per call.
+//!   B3  `Float32Backend` matches `Tensor::matmul_nt` exactly.
+//!   B4  At 8 bits on Laplace-distributed weights (the paper's weight
+//!       model), global-scale fixed point errs strictly more than ABFP
+//!       at its preferred operating point — the qualitative claim the
+//!       straw-man baseline exists to show.
+//!   B5  Static power-of-two BFP sits strictly between fixed point and
+//!       FLOAT32 on the same protocol.
+
+use abfp::abfp::{Device, DeviceConfig};
+use abfp::backend::{AbfpBackend, BackendKind, Float32Backend, NumericBackend};
+use abfp::numerics::{bf16_round, delta, num_tiles, quantize};
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
+
+// ------------------------------------------------------------------
+// Frozen pre-refactor reference (rust/src/abfp/device.rs at the seed
+// commit): monolithic stage-both-operands-then-multiply. Do not edit
+// except to track *intentional* numeric changes.
+// ------------------------------------------------------------------
+
+struct RefStaged {
+    n: usize,
+    scales: Vec<f32>,
+    q: Vec<f32>,
+}
+
+impl RefStaged {
+    fn tile(&self, row_tile: usize) -> &[f32] {
+        &self.q[row_tile * self.n..(row_tile + 1) * self.n]
+    }
+}
+
+struct RefDevice {
+    cfg: DeviceConfig,
+    rng: Pcg64,
+}
+
+impl RefDevice {
+    fn new(cfg: DeviceConfig, seed: u64) -> RefDevice {
+        // The device's private stream constant, frozen here on purpose.
+        RefDevice {
+            cfg,
+            rng: Pcg64::new(seed, 0x0abf_9000),
+        }
+    }
+
+    fn scale_tile_into(&self, tile: &[f32], d: f32, out: &mut [f32]) -> f32 {
+        let mut m = 0.0f32;
+        for &v in tile {
+            m = m.max(bf16_round(v).abs());
+        }
+        let scale = if bf16_round(m) == 0.0 { 1.0 } else { bf16_round(m) };
+        for (o, &v) in out.iter_mut().zip(tile) {
+            *o = quantize(bf16_round(v) / scale, d, 1.0);
+        }
+        for o in out.iter_mut().skip(tile.len()) {
+            *o = 0.0;
+        }
+        scale
+    }
+
+    fn adc(&mut self, analog_dot: f32) -> f32 {
+        let bin = self.cfg.output_bin();
+        let tau = self.cfg.n as f32;
+        let mut pre = self.cfg.gain * analog_dot;
+        if self.cfg.noise_lsb > 0.0 {
+            let eps = self.rng.uniform(-1.0, 1.0) * self.cfg.noise_lsb * bin;
+            pre += eps;
+        }
+        quantize(pre, bin, tau)
+    }
+
+    fn stage(&self, v: &Tensor, rows: usize, k: usize, t: usize, d: f32) -> RefStaged {
+        let n = self.cfg.n;
+        let mut staged = RefStaged {
+            n,
+            scales: Vec::with_capacity(rows * t),
+            q: vec![0.0f32; rows * t * n],
+        };
+        for r in 0..rows {
+            let row = v.row(r);
+            for ti in 0..t {
+                let lo = ti * n;
+                let hi = ((ti + 1) * n).min(k);
+                let dst = &mut staged.q[(r * t + ti) * n..(r * t + ti + 1) * n];
+                let scale = self.scale_tile_into(&row[lo..hi], d, dst);
+                staged.scales.push(scale);
+            }
+        }
+        staged
+    }
+
+    fn matmul(&mut self, x: &Tensor, w: &Tensor) -> Tensor {
+        let (m, k) = (x.shape()[0], x.shape()[1]);
+        let (nn, kw) = (w.shape()[0], w.shape()[1]);
+        assert_eq!(k, kw);
+        let n = self.cfg.n;
+        let t = num_tiles(k, n);
+        let xs = self.stage(x, m, k, t, delta(self.cfg.bits_x));
+        let ws = self.stage(w, nn, k, t, delta(self.cfg.bits_w));
+
+        let mut out = vec![0.0f32; m * nn];
+        let gain = self.cfg.gain;
+        for i in 0..m {
+            for j in 0..nn {
+                let mut acc = 0.0f32;
+                for ti in 0..t {
+                    let xt = xs.tile(i * t + ti);
+                    let wt = ws.tile(j * t + ti);
+                    let mut dot = 0.0f32;
+                    for e in 0..n {
+                        dot += xt[e] * wt[e];
+                    }
+                    let yq = self.adc(dot);
+                    acc += yq * xs.scales[i * t + ti] * ws.scales[j * t + ti] / gain;
+                }
+                out[i * nn + j] = bf16_round(acc);
+            }
+        }
+        Tensor::new(&[m, nn], out).unwrap()
+    }
+}
+
+// ------------------------------------------------------------------ //
+
+fn rand_t(rng: &mut Pcg64, shape: &[usize], laplace: bool) -> Tensor {
+    let len = shape.iter().product();
+    let data = (0..len)
+        .map(|_| {
+            let v = if laplace { rng.laplace() } else { rng.normal() };
+            bf16_round(v)
+        })
+        .collect();
+    Tensor::new(shape, data).unwrap()
+}
+
+#[test]
+fn b1_abfp_backend_bit_identical_to_pre_refactor_device() {
+    // Cases sweep tile widths (including ragged K), gain, and both the
+    // noiseless and the noisy ADC (same seed => same draw order).
+    let cases = [
+        (4usize, 64usize, 6usize, 8usize, 1.0f32, 0.0f32),
+        (5, 100, 7, 32, 4.0, 0.5),
+        (3, 70, 5, 32, 8.0, 0.5),
+        (8, 256, 4, 128, 8.0, 0.5),
+        (2, 17, 3, 8, 2.0, 0.0),
+    ];
+    for (case, &(m, k, nn, tile, gain, noise)) in cases.iter().enumerate() {
+        let mut rng = Pcg64::seeded(9000 + case as u64);
+        let x = rand_t(&mut rng, &[m, k], false);
+        let w = rand_t(&mut rng, &[nn, k], true);
+        let cfg = DeviceConfig::new(tile, (8, 8, 8), gain, noise);
+        let seed = 41 + case as u64;
+
+        let reference = RefDevice::new(cfg, seed).matmul(&x, &w);
+        let via_device = Device::new(cfg, seed).matmul(&x, &w).unwrap();
+        let via_backend = AbfpBackend::new(cfg, seed).matmul_dense(&x, &w).unwrap();
+
+        assert_eq!(reference, via_device, "case {case}: Device::matmul drifted");
+        assert_eq!(reference, via_backend, "case {case}: AbfpBackend drifted");
+    }
+}
+
+#[test]
+fn b2_staged_reuse_bit_identical_to_restaging() {
+    let mut rng = Pcg64::seeded(777);
+    let x = rand_t(&mut rng, &[6, 96], false);
+    let w = rand_t(&mut rng, &[9, 96], true);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.0);
+
+    // Noiseless: one staged copy served across calls never drifts.
+    let mut backend = AbfpBackend::new(cfg, 1);
+    let staged = backend.stage_weights(&w).unwrap();
+    let y1 = backend.matmul(&x, &staged).unwrap();
+    let y2 = backend.matmul(&x, &staged).unwrap();
+    let restaged = AbfpBackend::new(cfg, 1).matmul_dense(&x, &w).unwrap();
+    assert_eq!(y1, y2);
+    assert_eq!(y1, restaged);
+
+    // Noisy: the *first* call still matches one-shot exactly (same
+    // seed, same draw order — staging consumes no randomness).
+    let cfg_n = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5);
+    let mut noisy = AbfpBackend::new(cfg_n, 5);
+    let staged = noisy.stage_weights(&w).unwrap();
+    let first = noisy.matmul(&x, &staged).unwrap();
+    let one_shot = AbfpBackend::new(cfg_n, 5).matmul_dense(&x, &w).unwrap();
+    assert_eq!(first, one_shot);
+}
+
+#[test]
+fn b3_float32_backend_matches_matmul_nt_exactly() {
+    for case in 0..10u64 {
+        let mut rng = Pcg64::seeded(3000 + case);
+        let m = 1 + rng.below(8) as usize;
+        let k = 1 + rng.below(200) as usize;
+        let n = 1 + rng.below(8) as usize;
+        let x = Tensor::new(&[m, k], rng.normal_vec(m * k)).unwrap();
+        let w = Tensor::new(&[n, k], rng.normal_vec(n * k)).unwrap();
+        let mut backend = Float32Backend::new();
+        let y = backend.matmul_dense(&x, &w).unwrap();
+        assert_eq!(y, x.matmul_nt(&w).unwrap(), "case {case}");
+    }
+}
+
+/// Summed |backend - float32| on the Fig. S1-style protocol.
+fn total_err(backend: &mut dyn NumericBackend, x: &Tensor, w: &Tensor) -> f64 {
+    let y = backend.matmul_dense(x, w).unwrap();
+    let f = x.matmul_nt(w).unwrap();
+    y.data()
+        .iter()
+        .zip(f.data())
+        .map(|(a, b)| (a - b).abs() as f64)
+        .sum()
+}
+
+/// The protocol operands for B4/B5: Normal activations, Laplace
+/// (heavy-tailed) weights at BERT-ish K.
+fn protocol(seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Pcg64::seeded(seed);
+    let x = rand_t(&mut rng, &[64, 768], false);
+    let w = rand_t(&mut rng, &[128, 768], true);
+    (x, w)
+}
+
+#[test]
+fn b4_fixed_point_errs_more_than_abfp_at_8_bits_on_laplace_weights() {
+    // ABFP at its preferred operating point (tile 32, gain 8, noiseless
+    // for a deterministic comparison) vs the INT8 global-scale straw
+    // man: the single absmax scale burns the integer grid on Laplace
+    // outliers, the per-tile adaptive scales do not.
+    let (x, w) = protocol(0xb4);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 8.0, 0.0);
+    let abfp_err = total_err(&mut AbfpBackend::new(cfg, 1), &x, &w);
+    let fixed_err = total_err(BackendKind::Fixed.build(cfg, 1).as_mut(), &x, &w);
+    assert!(
+        fixed_err > abfp_err,
+        "paper claim violated: fixed {fixed_err} <= abfp {abfp_err}"
+    );
+}
+
+#[test]
+fn b5_static_bfp_sits_between_fixed_and_float32() {
+    let (x, w) = protocol(0xb5);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 8.0, 0.0);
+    let bfp_err = total_err(BackendKind::Bfp.build(cfg, 1).as_mut(), &x, &w);
+    let fixed_err = total_err(BackendKind::Fixed.build(cfg, 1).as_mut(), &x, &w);
+    let f32_err = total_err(BackendKind::Float32.build(cfg, 1).as_mut(), &x, &w);
+    assert_eq!(f32_err, 0.0);
+    assert!(bfp_err > 0.0);
+    assert!(
+        bfp_err < fixed_err,
+        "per-tile pow2 scales should beat one global scale: bfp {bfp_err} vs fixed {fixed_err}"
+    );
+}

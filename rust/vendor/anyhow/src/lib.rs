@@ -1,0 +1,151 @@
+//! anyhow-lite: the subset of the `anyhow` API this workspace uses,
+//! implemented from scratch because no crates.io registry is available
+//! in the build environment.
+//!
+//! Provided: [`Error`], [`Result`], the `anyhow!` / `bail!` / `ensure!`
+//! macros, `?`-conversion from any `std::error::Error`, and
+//! [`Error::context`]. The message-only error model (no backtraces, no
+//! downcasting) is all the repo needs; swapping the real crate back in
+//! is a one-line Cargo change.
+
+use std::fmt;
+
+/// A message-carrying error. Deliberately *not* `std::error::Error`, so
+/// the blanket `From<E: std::error::Error>` impl below stays coherent —
+/// the same trick the real anyhow uses.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prefix the error with higher-level context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait: attach context to a `Result`'s error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        let x = 7;
+        let e = anyhow!("inline {x}");
+        assert_eq!(e.to_string(), "inline 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<i32> {
+            Ok("abc".parse::<i32>()?)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn ensure_and_context() {
+        fn check(v: i32) -> Result<i32> {
+            ensure!(v > 0, "need positive, got {v}");
+            Ok(v)
+        }
+        assert!(check(1).is_ok());
+        let e = check(-1).unwrap_err().context("validating input");
+        assert_eq!(e.to_string(), "validating input: need positive, got -1");
+    }
+}

@@ -1,0 +1,276 @@
+//! Host-side stand-in for the `xla` (PJRT) bindings used by the
+//! runtime layer.
+//!
+//! The build environment has no crates.io registry and no
+//! `xla_extension` shared library, so this crate vendors the exact API
+//! surface `abfp::runtime` consumes:
+//!
+//! * [`Literal`] marshalling (vec1/scalar/reshape/to_vec/array_shape)
+//!   is **fully implemented** in pure Rust — everything host-side,
+//!   including the engine unit tests, works.
+//! * PJRT entry points ([`PjRtClient::cpu`],
+//!   [`HloModuleProto::from_text_file`], executions) return a clear
+//!   [`Error`] — artifact-dependent paths are *gated*, not broken.
+//!   Swapping in the real bindings is a one-line path change in
+//!   `rust/Cargo.toml`; no call site changes.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (message-only, like `xla::Error`'s Display).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (offline `xla` stub, \
+         rust/vendor/xla). Host-side Literal marshalling and the pure-Rust \
+         numeric backends work; executing AOT artifacts requires the real \
+         xla crate — swap the path dependency in rust/Cargo.toml."
+    ))
+}
+
+mod sealed {
+    /// Element storage for the two dtypes the repo marshals.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Elems {
+        F32(Vec<f32>),
+        U32(Vec<u32>),
+    }
+
+    pub trait Native: Copy + std::fmt::Debug + 'static {
+        fn wrap(v: Vec<Self>) -> Elems
+        where
+            Self: Sized;
+        fn unwrap(e: &Elems) -> Option<Vec<Self>>
+        where
+            Self: Sized;
+    }
+
+    impl Native for f32 {
+        fn wrap(v: Vec<f32>) -> Elems {
+            Elems::F32(v)
+        }
+        fn unwrap(e: &Elems) -> Option<Vec<f32>> {
+            match e {
+                Elems::F32(v) => Some(v.clone()),
+                Elems::U32(_) => None,
+            }
+        }
+    }
+
+    impl Native for u32 {
+        fn wrap(v: Vec<u32>) -> Elems {
+            Elems::U32(v)
+        }
+        fn unwrap(e: &Elems) -> Option<Vec<u32>> {
+            match e {
+                Elems::U32(v) => Some(v.clone()),
+                Elems::F32(_) => None,
+            }
+        }
+    }
+}
+
+use sealed::{Elems, Native};
+
+/// Element types a [`Literal`] can hold (sealed: f32, u32).
+pub trait NativeType: Native {}
+impl NativeType for f32 {}
+impl NativeType for u32 {}
+
+/// A host-resident typed, shaped array — the marshalling currency
+/// between [`crate::Literal`] producers and the runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    elems: Elems,
+}
+
+/// Array shape view returned by [`Literal::array_shape`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            elems: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            dims: vec![],
+            elems: T::wrap(vec![v]),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match &self.elems {
+            Elems::F32(v) => v.len(),
+            Elems::U32(v) => v.len(),
+        }
+    }
+
+    /// Same elements, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            elems: self.elems.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.elems)
+            .ok_or_else(|| Error(format!("dtype mismatch reading {:?}", self.dims)))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".to_string()))
+    }
+
+    /// Unwrap the 1-tuple convention; a non-tuple literal is its own
+    /// single element.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Ok(vec![self])
+    }
+}
+
+/// PJRT client stub: construction reports the missing runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+/// Compiled-executable stub.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Device-buffer stub.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// HLO-text module stub.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({:?})",
+            path.as_ref()
+        )))
+    }
+}
+
+/// Computation wrapper stub.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0])
+            .reshape(&[2, 3])
+            .unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.to_vec::<u32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_first_element() {
+        let lit = Literal::scalar(2.5f32);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+        assert_eq!(lit.array_shape().unwrap().dims().len(), 0);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        assert!(Literal::vec1(&[1u32, 2]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn pjrt_is_gated_not_panicking() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT is unavailable"));
+    }
+}
