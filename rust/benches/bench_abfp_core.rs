@@ -7,6 +7,7 @@
 use abfp::abfp::{Device, DeviceConfig};
 use abfp::benchkit::{black_box, Bench};
 use abfp::numerics::bf16_round;
+use abfp::parallel;
 use abfp::rng::Pcg64;
 use abfp::tensor::Tensor;
 
@@ -57,6 +58,34 @@ fn main() {
         "    -> staged reuse speedup over per-call staging: {:.2}x",
         r_restage.median_ns / r_reuse.median_ns
     );
+
+    // Multi-thread scaling at the paper's preferred tile (same cfg +
+    // staged weights as the reuse case above). Coordinate-keyed ADC
+    // noise makes every schedule bit-exact (the invariant is pinned by
+    // tests/determinism.rs), so the thread count is a pure throughput
+    // knob — the speedup here is the tentpole number for the parallel
+    // execution engine.
+    let mut thread_cases = vec![1usize, 2, 4, parallel::available()];
+    thread_cases.sort_unstable();
+    thread_cases.dedup();
+    let mut medians = Vec::new();
+    for &threads in &thread_cases {
+        let r = b
+            .run(&format!("matmul_staged_t128_threads{threads}"), 1, || {
+                let mut dev = Device::new(cfg, 7);
+                dev.set_threads(threads);
+                black_box(dev.matmul_staged(&x, &staged).unwrap());
+            })
+            .clone();
+        medians.push((threads, r.median_ns));
+    }
+    let single = medians[0].1;
+    for &(threads, median) in &medians[1..] {
+        println!(
+            "    -> {threads} threads: {:.2}x over single-thread",
+            single / median
+        );
+    }
 
     // The FLOAT32 reference for the simulator's overhead factor.
     b.run("float32_matmul", 1, || {

@@ -1,11 +1,29 @@
 //! The ABFP analog device model (Eq. 1–7).
+//!
+//! ## Determinism contract
+//!
+//! ADC noise (Eq. 5) is **coordinate-keyed**: the draw injected at
+//! output row `r`, output column `j`, tile `ti` is a pure function of
+//! `(seed, r, j, ti)` via [`CounterRng`], where `r` is a monotone
+//! global row index (each `matmul_staged` call claims the next `M`
+//! rows). The paper models noise as a per-conversion device property
+//! (Eq. 5–7), not a sequence, so nothing is lost — and two invariants
+//! are gained, pinned by `tests/determinism.rs`:
+//!
+//! * **thread-count independence** — outputs are bit-identical for any
+//!   thread count and any row schedule, so [`Device::matmul_staged`]
+//!   parallelizes freely (row-chunked via [`crate::parallel`]);
+//! * **batch-split invariance** — splitting a batch across several
+//!   `matmul_staged` calls produces exactly the rows of the single big
+//!   call (the serving batcher can split however it likes).
 
 use anyhow::{bail, Result};
 
 use crate::backend::StagedTiles;
 use crate::json::{self, Value};
 use crate::numerics::{bf16_round, delta, quantize};
-use crate::rng::Pcg64;
+use crate::parallel;
+use crate::rng::CounterRng;
 use crate::tensor::Tensor;
 
 /// Static + runtime configuration of the simulated analog device.
@@ -72,16 +90,45 @@ impl DeviceConfig {
         ])
     }
 
-    /// Inverse of [`to_json`](Self::to_json).
+    /// Inverse of [`to_json`](Self::to_json). Rejects configurations
+    /// the quantizer cannot represent (see [`validate`](Self::validate)).
     pub fn from_json(v: &Value) -> Result<DeviceConfig> {
-        Ok(DeviceConfig {
+        let cfg = DeviceConfig {
             n: v.get("n")?.as_usize()?,
             bits_w: v.get("bits_w")?.as_f64()? as u32,
             bits_x: v.get("bits_x")?.as_f64()? as u32,
             bits_y: v.get("bits_y")?.as_f64()? as u32,
             gain: v.get("gain")?.as_f64()? as f32,
             noise_lsb: v.get("noise_lsb")?.as_f64()? as f32,
-        })
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject degenerate device points. Symmetric `b`-bit quantization
+    /// has `2^(b-1) - 1` positive levels (Eq. 1), so `b = 1` means zero
+    /// levels and `delta(1)` divides by zero — every output would be
+    /// inf/NaN; widths above 24 exceed f32 mantissa precision (and
+    /// `delta`'s shift overflows at 65). Checked here (and by the CLI
+    /// bit parser `Args::bits_or`, same [2, 24] range) instead of deep
+    /// in the hot path.
+    pub fn validate(&self) -> Result<()> {
+        for bits in [self.bits_w, self.bits_x, self.bits_y] {
+            if !(2..=24).contains(&bits) {
+                bail!(
+                    "device bits must be in [2, 24] (got w={}/x={}/y={}): 1-bit \
+                     symmetric quantization has zero levels (delta = \
+                     1/(2^(b-1)-1) is undefined) and >24 bits exceed f32 precision",
+                    self.bits_w,
+                    self.bits_x,
+                    self.bits_y
+                );
+            }
+        }
+        if self.n == 0 {
+            bail!("tile width n must be >= 1");
+        }
+        Ok(())
     }
 }
 
@@ -96,11 +143,19 @@ pub struct AbfpError {
     pub conversions: u64,
 }
 
-/// The simulated device: configuration plus its private noise source.
+/// The simulated device: configuration plus its private noise field.
+///
+/// `noise` is coordinate-keyed (see the module docs): `row_base` is the
+/// global row cursor that makes successive calls draw fresh noise while
+/// keeping any batch split bit-identical to the unsplit call. `threads`
+/// is the matmul worker count (0 = the process default,
+/// [`parallel::default_threads`]); it never affects results.
 #[derive(Debug, Clone)]
 pub struct Device {
     pub cfg: DeviceConfig,
-    rng: Pcg64,
+    noise: CounterRng,
+    row_base: u64,
+    threads: usize,
     sat_count: u64,
     conv_count: u64,
 }
@@ -109,10 +164,25 @@ impl Device {
     pub fn new(cfg: DeviceConfig, seed: u64) -> Self {
         Device {
             cfg,
-            rng: Pcg64::new(seed, 0x0abf_9000),
+            // The device's private stream constant (frozen in
+            // tests/backend_parity.rs).
+            noise: CounterRng::new(seed, 0x0abf_9000),
+            row_base: 0,
+            threads: 0,
             sat_count: 0,
             conv_count: 0,
         }
+    }
+
+    /// Set the matmul worker-thread count (0 = process default). Purely
+    /// a scheduling knob: outputs are bit-identical for every value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    /// The configured worker-thread count (0 = process default).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Saturation statistics since construction (or the last reset).
@@ -152,21 +222,22 @@ impl Device {
         scale
     }
 
-    /// One analog dot product + ADC conversion (Eq. 5/7), returning the
-    /// post-ADC quantized value (still in normalized units).
-    fn adc(&mut self, analog_dot: f32) -> f32 {
+    /// One analog dot product + ADC conversion (Eq. 5/7) at output
+    /// coordinates `(row, col)`, tile `tile`, returning the post-ADC
+    /// quantized value (still in normalized units) and whether the
+    /// conversion clamped. Pure: the noise draw is keyed by the
+    /// coordinates, not by how many conversions ran before this one.
+    #[inline]
+    fn adc_at(&self, row: u64, col: u64, tile: u64, analog_dot: f32) -> (f32, bool) {
         let bin = self.cfg.output_bin();
         let tau = self.cfg.n as f32;
         let mut pre = self.cfg.gain * analog_dot;
         if self.cfg.noise_lsb > 0.0 {
-            let eps = self.rng.uniform(-1.0, 1.0) * self.cfg.noise_lsb * bin;
+            let eps =
+                self.noise.uniform_at(row, col, tile, -1.0, 1.0) * self.cfg.noise_lsb * bin;
             pre += eps;
         }
-        self.conv_count += 1;
-        if pre.abs() > tau {
-            self.sat_count += 1;
-        }
-        quantize(pre, bin, tau)
+        (quantize(pre, bin, tau), pre.abs() > tau)
     }
 
     /// Convert a (N, K) weight matrix to ABFP **once** (the paper:
@@ -186,6 +257,12 @@ impl Device {
     /// quantization and noise; FLOAT32 accumulation over tiles and
     /// BFLOAT16 output rounding (Eq. 1–7 end to end). Activations are
     /// staged here, per call.
+    ///
+    /// Executes row-chunked across [`Device::set_threads`] workers.
+    /// Because noise is coordinate-keyed, the output is bit-identical
+    /// for every thread count, and splitting a batch across calls
+    /// yields exactly the rows of the unsplit call (each call claims
+    /// the next `M` global row indices).
     pub fn matmul_staged(&mut self, x: &Tensor, ws: &StagedTiles) -> Result<Tensor> {
         if x.shape().len() != 2 {
             bail!("abfp matmul wants 2-D operands");
@@ -207,25 +284,47 @@ impl Device {
 
         let xs = self.stage(x, m, k, self.cfg.delta_x());
 
-        let mut out = vec![0.0f32; m * nn];
+        let row_base = self.row_base;
+        self.row_base += m as u64;
+        let threads = self.threads;
         let gain = self.cfg.gain;
-        for i in 0..m {
-            for j in 0..nn {
-                let mut acc = 0.0f32; // FLOAT32 tile accumulator (Eq. 6)
-                for ti in 0..t {
-                    let xt = xs.tile(i * t + ti);
-                    let wt = ws.tile(j * t + ti);
-                    let mut dot = 0.0f32;
-                    for e in 0..n {
-                        dot += xt[e] * wt[e];
+
+        let mut out = vec![0.0f32; m * nn];
+        let dev = &*self;
+        let saturated: u64 =
+            parallel::par_row_chunks(threads, m, nn, &mut out, |rows, chunk| {
+                let mut sat = 0u64;
+                for (ci, i) in rows.enumerate() {
+                    for j in 0..nn {
+                        let mut acc = 0.0f32; // FLOAT32 tile accumulator (Eq. 6)
+                        for ti in 0..t {
+                            let xt = xs.tile(i * t + ti);
+                            let wt = ws.tile(j * t + ti);
+                            let mut dot = 0.0f32;
+                            for e in 0..n {
+                                dot += xt[e] * wt[e];
+                            }
+                            let (yq, clipped) = dev.adc_at(
+                                row_base + i as u64,
+                                j as u64,
+                                ti as u64,
+                                dot,
+                            );
+                            if clipped {
+                                sat += 1;
+                            }
+                            acc += yq * xs.scales[i * t + ti] * ws.scales[j * t + ti]
+                                / gain;
+                        }
+                        chunk[ci * nn + j] = bf16_round(acc);
                     }
-                    let yq = self.adc(dot);
-                    acc += yq * xs.scales[i * t + ti] * ws.scales[j * t + ti]
-                        / gain;
                 }
-                out[i * nn + j] = bf16_round(acc);
-            }
-        }
+                sat
+            })
+            .into_iter()
+            .sum();
+        self.sat_count += saturated;
+        self.conv_count += (m * nn * t) as u64;
         Tensor::new(&[m, nn], out)
     }
 
@@ -461,5 +560,61 @@ mod tests {
         let back = DeviceConfig::from_json(&json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, cfg);
         assert!(text.contains("\"gain\":8"));
+    }
+
+    #[test]
+    fn device_config_rejects_degenerate_bits() {
+        // Regression: bits = 1 means delta(1) = 1/(2^0 - 1) = 1/0 —
+        // inf scales, NaN outputs; bits = 65 overflows delta's shift
+        // (debug panic / masked-shift garbage in release). from_json
+        // must reject both ends, not serve NaN.
+        for (w, x, y) in [(1, 8, 8), (8, 1, 8), (8, 8, 1), (0, 8, 8), (65, 8, 8), (8, 8, 70)] {
+            let cfg = DeviceConfig::new(32, (w, x, y), 1.0, 0.0);
+            let text = cfg.to_json().to_string();
+            let err = DeviceConfig::from_json(&json::parse(&text).unwrap());
+            assert!(err.is_err(), "bits {w}/{x}/{y} must be rejected");
+            assert!(err.unwrap_err().to_string().contains("[2, 24]"));
+        }
+        // The minimum legal point still round-trips.
+        let cfg = DeviceConfig::new(32, (2, 2, 2), 1.0, 0.0);
+        let text = cfg.to_json().to_string();
+        assert!(DeviceConfig::from_json(&json::parse(&text).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn noisy_calls_draw_fresh_noise_but_replay_identically() {
+        // Successive noisy matmuls on one device must differ (the row
+        // cursor advances), while a fresh device with the same seed
+        // replays the same sequence — the serving reproducibility story.
+        let mut rng = Pcg64::seeded(23);
+        let x = rand_t(&mut rng, &[4, 64], false);
+        let w = rand_t(&mut rng, &[4, 64], false);
+        let cfg = DeviceConfig::new(16, (8, 8, 8), 2.0, 0.5);
+        let mut dev_a = Device::new(cfg, 9);
+        let first_a = dev_a.matmul(&x, &w).unwrap();
+        let second_a = dev_a.matmul(&x, &w).unwrap();
+        assert_ne!(first_a, second_a, "row cursor must refresh the noise");
+        let mut dev_b = Device::new(cfg, 9);
+        assert_eq!(first_a, dev_b.matmul(&x, &w).unwrap());
+        assert_eq!(second_a, dev_b.matmul(&x, &w).unwrap());
+    }
+
+    #[test]
+    fn thread_count_never_changes_output() {
+        // Output 64x96 = 6144 elements: large enough that the chunk
+        // helper really fans out instead of running inline.
+        let mut rng = Pcg64::seeded(29);
+        let x = rand_t(&mut rng, &[64, 96], false);
+        let w = rand_t(&mut rng, &[96, 96], true);
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5);
+        let run = |threads: usize| {
+            let mut dev = Device::new(cfg, 3);
+            dev.set_threads(threads);
+            dev.matmul(&x, &w).unwrap()
+        };
+        let base = run(1);
+        for threads in [2, 3, 8] {
+            assert_eq!(base, run(threads), "threads={threads}");
+        }
     }
 }

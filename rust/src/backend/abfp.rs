@@ -78,6 +78,14 @@ impl NumericBackend for AbfpBackend {
         self.matmuls = 0;
         self.macs = 0;
     }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.dev.set_threads(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.dev.threads()
+    }
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@ use super::{
 };
 use crate::json::{self, Value};
 use crate::numerics::{delta, quantize};
+use crate::parallel;
 use crate::tensor::Tensor;
 
 /// Static per-tile power-of-two BFP simulation.
@@ -28,6 +29,7 @@ pub struct BfpStaticBackend {
     /// Activation mantissa bits.
     pub bits_x: u32,
     stats: BackendStats,
+    threads: usize,
 }
 
 impl BfpStaticBackend {
@@ -37,6 +39,7 @@ impl BfpStaticBackend {
             bits_w,
             bits_x,
             stats: BackendStats::default(),
+            threads: 0,
         }
     }
 
@@ -107,22 +110,27 @@ impl NumericBackend for BfpStaticBackend {
         let xs = self.stage(x, self.bits_x)?;
         let t = ws.tiles;
 
+        let n = self.n;
         let mut out = vec![0.0f32; m * n_out];
-        for i in 0..m {
-            for j in 0..n_out {
-                let mut acc = 0.0f32;
-                for ti in 0..t {
-                    let xt = xs.tile(i * t + ti);
-                    let wt = ws.tile(j * t + ti);
-                    let mut dot = 0.0f32;
-                    for e in 0..self.n {
-                        dot += xt[e] * wt[e];
+        // Row-chunked across workers: the digital path is a pure
+        // function of its operands, so any schedule is bit-exact.
+        parallel::par_row_chunks(self.threads, m, n_out, &mut out, |rows, chunk| {
+            for (ci, i) in rows.enumerate() {
+                for j in 0..n_out {
+                    let mut acc = 0.0f32;
+                    for ti in 0..t {
+                        let xt = xs.tile(i * t + ti);
+                        let wt = ws.tile(j * t + ti);
+                        let mut dot = 0.0f32;
+                        for e in 0..n {
+                            dot += xt[e] * wt[e];
+                        }
+                        acc += dot * xs.scales[i * t + ti] * ws.scales[j * t + ti];
                     }
-                    acc += dot * xs.scales[i * t + ti] * ws.scales[j * t + ti];
+                    chunk[ci * n_out + j] = acc;
                 }
-                out[i * n_out + j] = acc;
             }
-        }
+        });
         self.stats.matmuls += 1;
         self.stats.macs += (m * x.shape()[1] * n_out) as u64;
         self.stats.conversions += (m * n_out) as u64;
@@ -135,6 +143,14 @@ impl NumericBackend for BfpStaticBackend {
 
     fn reset_stats(&mut self) {
         self.stats = BackendStats::default();
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 }
 

@@ -13,6 +13,7 @@ use anyhow::Result;
 use super::{check_matmul, check_weights, BackendStats, NumericBackend, StagedWeights};
 use crate::json::{self, Value};
 use crate::numerics::{delta, quantize};
+use crate::parallel;
 use crate::tensor::Tensor;
 
 /// Fixed-point INT-b simulation with one global scale per tensor.
@@ -23,6 +24,7 @@ pub struct FixedPointBackend {
     /// Activation quantization bits.
     pub bits_x: u32,
     stats: BackendStats,
+    threads: usize,
 }
 
 impl FixedPointBackend {
@@ -31,6 +33,7 @@ impl FixedPointBackend {
             bits_w,
             bits_x,
             stats: BackendStats::default(),
+            threads: 0,
         }
     }
 }
@@ -80,17 +83,21 @@ impl NumericBackend for FixedPointBackend {
         let qx: Vec<f32> = x.data().iter().map(|&v| quantize(v / sx, dx, 1.0)).collect();
 
         let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            let xrow = &qx[i * k..(i + 1) * k];
-            for j in 0..n {
-                let wrow = &qw[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for t in 0..k {
-                    acc += xrow[t] * wrow[t];
+        // Row-chunked across workers: the digital path is a pure
+        // function of its operands, so any schedule is bit-exact.
+        parallel::par_row_chunks(self.threads, m, n, &mut out, |rows, chunk| {
+            for (ci, i) in rows.enumerate() {
+                let xrow = &qx[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let wrow = &qw[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for t in 0..k {
+                        acc += xrow[t] * wrow[t];
+                    }
+                    chunk[ci * n + j] = acc * sx * sw;
                 }
-                out[i * n + j] = acc * sx * sw;
             }
-        }
+        });
         self.stats.matmuls += 1;
         self.stats.macs += (m * k * n) as u64;
         // Digital outputs: one exact conversion per element, no clamping
@@ -105,6 +112,14 @@ impl NumericBackend for FixedPointBackend {
 
     fn reset_stats(&mut self) {
         self.stats = BackendStats::default();
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 }
 

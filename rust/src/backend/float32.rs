@@ -5,16 +5,20 @@ use anyhow::Result;
 
 use super::{check_matmul, check_weights, BackendStats, NumericBackend, StagedWeights};
 use crate::json::{self, Value};
+use crate::parallel;
 use crate::tensor::Tensor;
 
 /// Exact FLOAT32 matmul behind the [`NumericBackend`] interface.
 ///
 /// `matmul` is bit-identical to [`Tensor::matmul_nt`] — staging is a
 /// pass-through — so workloads can swap precision without touching
-/// call sites.
+/// call sites. Executes row-chunked across worker threads; the per-row
+/// accumulation order is exactly `matmul_nt`'s, so the identity holds
+/// for every thread count.
 #[derive(Debug, Clone, Default)]
 pub struct Float32Backend {
     stats: BackendStats,
+    threads: usize,
 }
 
 impl Float32Backend {
@@ -40,10 +44,26 @@ impl NumericBackend for Float32Backend {
     fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
         let (m, n) = check_matmul(self.name(), x, w)?;
         let dense = w.expect_dense(self.name())?;
-        let y = x.matmul_nt(dense)?;
+        let k = x.shape()[1];
+        let xd = x.data();
+        let wd = dense.data();
+        let mut out = vec![0.0f32; m * n];
+        parallel::par_row_chunks(self.threads, m, n, &mut out, |rows, chunk| {
+            for (ci, i) in rows.enumerate() {
+                let xrow = &xd[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let wrow = &wd[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for t in 0..k {
+                        acc += xrow[t] * wrow[t];
+                    }
+                    chunk[ci * n + j] = acc;
+                }
+            }
+        });
         self.stats.matmuls += 1;
-        self.stats.macs += (m * x.shape()[1] * n) as u64;
-        Ok(y)
+        self.stats.macs += (m * k * n) as u64;
+        Tensor::new(&[m, n], out)
     }
 
     fn stats(&self) -> BackendStats {
@@ -52,6 +72,14 @@ impl NumericBackend for Float32Backend {
 
     fn reset_stats(&mut self) {
         self.stats = BackendStats::default();
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
     }
 }
 
@@ -72,6 +100,21 @@ mod tests {
         assert_eq!(b.stats().matmuls, 1);
         assert_eq!(b.stats().macs, 5 * 33 * 7);
         assert_eq!(b.stats().conversions, 0);
+    }
+
+    #[test]
+    fn parallel_matmul_still_exactly_matmul_nt() {
+        // Output 80x80 = 6400 elements: over the inline threshold, so
+        // the row chunks genuinely run on worker threads.
+        let mut rng = Pcg64::seeded(2);
+        let x = Tensor::new(&[80, 33], rng.normal_vec(80 * 33)).unwrap();
+        let w = Tensor::new(&[80, 33], rng.normal_vec(80 * 33)).unwrap();
+        let reference = x.matmul_nt(&w).unwrap();
+        for threads in [1usize, 2, 8] {
+            let mut b = Float32Backend::new();
+            b.set_threads(threads);
+            assert_eq!(b.matmul_dense(&x, &w).unwrap(), reference, "threads={threads}");
+        }
     }
 
     #[test]

@@ -260,7 +260,15 @@ impl StagedWeights {
 /// Contract: `matmul` computes `x (M,K) @ w^T (N,K) -> (M,N)` where `w`
 /// was staged by **this** backend's `stage_weights`. Activations are
 /// converted per call (the device's DAC path); weights are staged once.
-pub trait NumericBackend {
+///
+/// Determinism contract: `matmul` output must be a pure function of
+/// `(backend state, x, staged weights)` — independent of thread count
+/// and of how a batch is split across calls (ABFP's ADC noise is
+/// coordinate-keyed to guarantee this; see `crate::abfp`). Backends are
+/// `Send + Sync` plain data so staged weights and the simulators
+/// themselves can be shared across the worker threads that
+/// `crate::parallel` spawns.
+pub trait NumericBackend: Send + Sync {
     /// Short stable identifier (`float32`, `abfp`, `fixed`, `bfp`).
     fn name(&self) -> &'static str;
 
@@ -281,6 +289,20 @@ pub trait NumericBackend {
 
     /// Zero the accounting counters.
     fn reset_stats(&mut self);
+
+    /// Set the matmul worker-thread count (0 = process default,
+    /// [`crate::parallel::default_threads`]). Purely a scheduling knob:
+    /// results are bit-identical for every value. The default impl is a
+    /// no-op for backends with nothing to parallelize.
+    fn set_threads(&mut self, _threads: usize) {}
+
+    /// The configured worker-thread count (0 = process default) —
+    /// what [`set_threads`](Self::set_threads) last stored. Helpers
+    /// that parallelize *around* a backend ([`project_params`]) honor
+    /// this bound too.
+    fn threads(&self) -> usize {
+        0
+    }
 
     /// Convenience one-shot: stage + multiply. Prefer pre-staging on
     /// hot paths — this restages the weights every call.
@@ -413,8 +435,15 @@ impl std::str::FromStr for BackendKind {
 /// weight-residency approximation used when a backend has no dedicated
 /// AOT artifact: weights live on the device in the backend's format,
 /// activations stay FLOAT32.
+///
+/// Projection is noise-free staging, so it is a pure per-tensor
+/// function — the tensors are projected in parallel with
+/// deterministic, order-preserving results, bounded by the backend's
+/// configured thread count (`set_threads`; 0 = process default).
 pub fn project_params(backend: &dyn NumericBackend, params: &[Tensor]) -> Result<Vec<Tensor>> {
-    params.iter().map(|p| project_tensor(backend, p)).collect()
+    crate::parallel::par_map(backend.threads(), params, |p| project_tensor(backend, p))
+        .into_iter()
+        .collect()
 }
 
 /// Project one tensor (see [`project_params`]).
@@ -470,6 +499,19 @@ mod tests {
             assert_eq!(b.name(), kind.name());
             // Every backend records its identity in the config json.
             assert!(b.config_json().to_string().contains(kind.name()));
+        }
+    }
+
+    #[test]
+    fn set_threads_roundtrip_on_every_backend() {
+        // project_params bounds its fan-out by backend.threads(), so
+        // the setter/getter pair must round-trip on every kind.
+        let cfg = DeviceConfig::paper_default(8);
+        for kind in BackendKind::ALL {
+            let mut b = kind.build(cfg, 1);
+            assert_eq!(b.threads(), 0, "{}", kind.name());
+            b.set_threads(3);
+            assert_eq!(b.threads(), 3, "{}", kind.name());
         }
     }
 

@@ -81,6 +81,27 @@ impl Args {
         }
     }
 
+    /// Quantizer bit width: like [`u64_or`](Self::u64_or) but rejects
+    /// degenerate widths. `bits = 1` makes `delta(1) = 1/(2^0 - 1)`
+    /// divide by zero (inf scales, NaN outputs), and widths above 24
+    /// exceed f32 mantissa precision — both are config errors, not
+    /// device points.
+    pub fn bits_or(&self, key: &str, default: u32) -> Result<u32> {
+        let v: u32 = match self.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {s:?}"))?,
+        };
+        if !(2..=24).contains(&v) {
+            bail!(
+                "--{key}: bit width must be in [2, 24], got {v} \
+                 (1-bit symmetric quantization has zero levels)"
+            );
+        }
+        Ok(v)
+    }
+
     pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
         match self.get(key) {
             None => Ok(default),
@@ -153,6 +174,22 @@ mod tests {
         let a = parse("x --n abc");
         assert!(a.usize_or("n", 1).is_err());
         assert!(a.f32_or("n", 1.0).is_err());
+    }
+
+    #[test]
+    fn bits_parser_rejects_degenerate_widths() {
+        // Regression: `--bits 1` used to flow straight into delta(1) =
+        // 1/(2^0 - 1) — a division by zero producing inf scales and NaN
+        // outputs deep in the simulator.
+        assert!(parse("x --bits 1").bits_or("bits", 8).is_err());
+        assert!(parse("x --bits 0").bits_or("bits", 8).is_err());
+        assert!(parse("x --bits 25").bits_or("bits", 8).is_err());
+        assert!(parse("x --bits abc").bits_or("bits", 8).is_err());
+        assert_eq!(parse("x --bits 2").bits_or("bits", 8).unwrap(), 2);
+        assert_eq!(parse("x --bits 6").bits_or("bits", 8).unwrap(), 6);
+        assert_eq!(parse("x").bits_or("bits", 8).unwrap(), 8);
+        let err = parse("x --bits 1").bits_or("bits", 8).unwrap_err();
+        assert!(err.to_string().contains("zero levels"), "{err}");
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::batcher::{collect_batch, BatchPolicy};
 use crate::abfp::DeviceConfig;
@@ -48,6 +48,12 @@ pub struct WorkerConfig {
     /// to the paper default (tile 128).
     pub device: Option<DeviceConfig>,
     pub policy: BatchPolicy,
+    /// Host-side simulator threads for this worker's startup staging
+    /// (the `fixed`/`bfp` parameter projection; 0 = process default,
+    /// `parallel::default_threads`). The PJRT-artifact execution path
+    /// (`float32`/`abfp` serving) is unaffected by this knob.
+    /// Scheduling only — results are bit-identical for every value.
+    pub threads: usize,
 }
 
 impl WorkerConfig {
@@ -57,6 +63,7 @@ impl WorkerConfig {
             backend: BackendKind::Float32,
             device: None,
             policy,
+            threads: 0,
         }
     }
 
@@ -66,6 +73,7 @@ impl WorkerConfig {
             backend: BackendKind::Abfp,
             device: Some(device),
             policy,
+            threads: 0,
         }
     }
 
@@ -127,6 +135,10 @@ pub struct Router {
 struct WorkerHandle {
     tx: SyncSender<Request>,
     stats: Arc<Mutex<WorkerStats>>,
+    /// Flat input size the model expects per example — requests are
+    /// validated against it in [`Router::submit`] so a malformed shape
+    /// is an error to the caller, never a panic inside the worker.
+    in_elems: usize,
     join: Option<JoinHandle<()>>,
 }
 
@@ -145,7 +157,7 @@ impl Router {
             let (tx, rx) = mpsc::sync_channel::<Request>(1024);
             let stats = Arc::new(Mutex::new(WorkerStats::new()));
             let stats_c = stats.clone();
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
             let name_c = name.clone();
             let dir = artifacts_dir.to_string();
             let ckpt = ckpt_dir.to_string();
@@ -154,7 +166,7 @@ impl Router {
                 .spawn(move || {
                     worker_main(&dir, &ckpt, &name_c, cfg, rx, stats_c, ready_tx)
                 })?;
-            ready_rx
+            let in_elems = ready_rx
                 .recv()
                 .map_err(|_| anyhow!("worker {name} died during startup"))??;
             workers.insert(
@@ -162,6 +174,7 @@ impl Router {
                 WorkerHandle {
                     tx,
                     stats,
+                    in_elems,
                     join: Some(join),
                 },
             );
@@ -170,11 +183,24 @@ impl Router {
     }
 
     /// Submit one example; returns a receiver for the response.
+    ///
+    /// The input shape is validated here: a wrong-sized example is an
+    /// `Err` to this caller. (It used to reach the worker's batch
+    /// assembly, panic `copy_from_slice` there, and kill the worker —
+    /// wedging every later submit for that model.)
     pub fn submit(&self, model: &str, x: Tensor) -> Result<Receiver<Response>> {
         let worker = self
             .workers
             .get(model)
             .ok_or_else(|| anyhow!("model {model:?} is not served"))?;
+        if x.len() != worker.in_elems {
+            bail!(
+                "model {model:?} expects {} input elements per example, got {} (shape {:?})",
+                worker.in_elems,
+                x.len(),
+                x.shape()
+            );
+        }
         let (tx, rx) = mpsc::channel();
         worker
             .tx
@@ -230,7 +256,7 @@ fn worker_main(
     cfg: WorkerConfig,
     rx: Receiver<Request>,
     stats: Arc<Mutex<WorkerStats>>,
-    ready: Sender<Result<()>>,
+    ready: Sender<Result<usize>>,
 ) {
     let setup = || -> Result<_> {
         let engine = Engine::new(Manifest::load(artifacts_dir)?)?;
@@ -251,7 +277,8 @@ fn worker_main(
             BackendKind::Float32 => (models::art_fwd_f32(model), params),
             BackendKind::Abfp => (models::art_fwd_abfp(model, dev.n), params),
             BackendKind::Fixed | BackendKind::Bfp => {
-                let backend = cfg.backend.build(dev, 0);
+                let mut backend = cfg.backend.build(dev, 0);
+                backend.set_threads(cfg.threads);
                 eprintln!(
                     "worker {model}: pre-staging {} params onto backend {}",
                     params.len(),
@@ -271,10 +298,7 @@ fn worker_main(
         Ok((engine, info, param_lits, exe))
     };
     let (_engine, info, param_lits, exe) = match setup() {
-        Ok(v) => {
-            ready.send(Ok(())).ok();
-            v
-        }
+        Ok(v) => v,
         Err(e) => {
             ready.send(Err(e)).ok();
             return;
@@ -283,6 +307,9 @@ fn worker_main(
 
     let b = info.batch_eval;
     let in_elems: usize = info.input_shape.iter().product();
+    // The router validates request shapes against this before they can
+    // reach the batch assembly below.
+    ready.send(Ok(in_elems)).ok();
     let policy = BatchPolicy {
         max_batch: cfg.policy.max_batch.min(b),
         ..cfg.policy
@@ -325,35 +352,52 @@ fn worker_main(
             .map(|o| to_tensor(o).unwrap())
             .collect();
         let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+        finish_batch(batch, &out_tensors, b, exec_ms, &stats);
+    }
+}
 
-        // Fan results back out, slicing each example's rows.
-        let bsz = batch.len();
-        for (i, req) in batch.into_iter().enumerate() {
-            let outputs: Vec<Tensor> = out_tensors
-                .iter()
-                .map(|t| slice_example(t, i, b))
-                .collect();
-            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let queue_ms = (total_ms - exec_ms).max(0.0);
-            req.respond
-                .send(Response {
-                    outputs,
-                    queue_ms,
-                    total_ms,
-                    batch_size: bsz,
-                })
-                .ok();
-        }
+/// Fan a batch's results back out to the waiting clients and record the
+/// serving statistics.
+///
+/// Latency is recorded as each request's **total** time (queue + batch
+/// wait + execution), measured from its `enqueued` stamp. Recording
+/// `exec_ms` here — the old bug — made queue time invisible in the
+/// reported p50/p95, underselling tail latency exactly when batching
+/// backs up.
+fn finish_batch(
+    batch: Vec<Request>,
+    out_tensors: &[Tensor],
+    padded_batch: usize,
+    exec_ms: f64,
+    stats: &Mutex<WorkerStats>,
+) {
+    let bsz = batch.len();
+    let mut totals = Vec::with_capacity(bsz);
+    for (i, req) in batch.into_iter().enumerate() {
+        let outputs: Vec<Tensor> = out_tensors
+            .iter()
+            .map(|t| slice_example(t, i, padded_batch))
+            .collect();
+        let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+        let queue_ms = (total_ms - exec_ms).max(0.0);
+        totals.push(total_ms);
+        req.respond
+            .send(Response {
+                outputs,
+                queue_ms,
+                total_ms,
+                batch_size: bsz,
+            })
+            .ok();
+    }
 
-        let mut s = stats.lock().unwrap();
-        s.requests += bsz as u64;
-        s.batches += 1;
-        s.batch_sizes.push(bsz as f64);
-        s.exec_ms.push(exec_ms);
-        // Record per-request total latency (approximate: same for all).
-        for _ in 0..bsz {
-            s.latency.push(exec_ms);
-        }
+    let mut s = stats.lock().unwrap();
+    s.requests += bsz as u64;
+    s.batches += 1;
+    s.batch_sizes.push(bsz as f64);
+    s.exec_ms.push(exec_ms);
+    for total_ms in totals {
+        s.latency.push(total_ms);
     }
 }
 
@@ -371,6 +415,105 @@ fn slice_example(t: &Tensor, i: usize, batch: usize) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
+
+    /// A router over one hand-built echo worker (no PJRT/artifacts):
+    /// exercises the submit/validate/respond path in isolation.
+    fn echo_router(in_elems: usize) -> Router {
+        let (tx, rx) = mpsc::sync_channel::<Request>(16);
+        let stats = Arc::new(Mutex::new(WorkerStats::new()));
+        let join = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                req.respond
+                    .send(Response {
+                        outputs: vec![req.x],
+                        queue_ms: 0.0,
+                        total_ms,
+                        batch_size: 1,
+                    })
+                    .ok();
+            }
+        });
+        let mut workers = BTreeMap::new();
+        workers.insert(
+            "echo".to_string(),
+            WorkerHandle {
+                tx,
+                stats,
+                in_elems,
+                join: Some(join),
+            },
+        );
+        Router { workers }
+    }
+
+    #[test]
+    fn submit_rejects_bad_shape_without_wedging_the_worker() {
+        // Regression: a wrong-shaped request used to reach the worker's
+        // batch assembly and panic `copy_from_slice` there, killing the
+        // worker thread so every later submit hung or errored. The
+        // router must reject it up front and keep serving.
+        let router = echo_router(6);
+        let err = router.submit("echo", Tensor::zeros(&[4])).unwrap_err();
+        assert!(err.to_string().contains("6 input elements"), "{err}");
+        // Rank is irrelevant; element count is what the batcher packs.
+        assert!(router.submit("echo", Tensor::zeros(&[2, 3])).is_ok());
+        // The worker is still alive and answering after the rejection.
+        let resp = router.infer("echo", Tensor::zeros(&[6])).unwrap();
+        assert_eq!(resp.outputs[0].len(), 6);
+        assert!(router.submit("echo", Tensor::zeros(&[7])).is_err());
+        let resp = router.infer("echo", Tensor::zeros(&[6])).unwrap();
+        assert_eq!(resp.batch_size, 1);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let router = echo_router(4);
+        assert!(router.submit("nope", Tensor::zeros(&[4])).is_err());
+    }
+
+    #[test]
+    fn latency_stats_include_queue_time() {
+        // Regression: worker stats used to push `exec_ms` per request,
+        // so queue time was invisible in p50/p95. Requests that waited
+        // ~25 ms before a 1 ms execution must report p50/p95 >= the
+        // wait, not ~1 ms.
+        let stats = Mutex::new(WorkerStats::new());
+        let mut batch = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..4 {
+            let (tx, rx) = mpsc::channel();
+            batch.push(Request {
+                model: "m".into(),
+                x: Tensor::zeros(&[2]),
+                enqueued: Instant::now(),
+                respond: tx,
+            });
+            receivers.push(rx);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+        let outs = vec![Tensor::zeros(&[8, 2])]; // padded batch of 8
+        finish_batch(batch, &outs, 8, 1.0, &stats);
+
+        let snap = stats.lock().unwrap().snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.batches, 1);
+        assert!((snap.mean_exec_ms - 1.0).abs() < 1e-9);
+        assert!(
+            snap.p50_ms >= 20.0 && snap.p95_ms >= 20.0,
+            "queue time invisible: p50 {} p95 {}",
+            snap.p50_ms,
+            snap.p95_ms
+        );
+        for rx in receivers {
+            let resp = rx.recv().unwrap();
+            assert!(resp.total_ms >= 20.0);
+            assert!(resp.queue_ms >= resp.total_ms - 1.0 - 1e-9);
+            assert_eq!(resp.batch_size, 4);
+            assert_eq!(resp.outputs[0].shape(), &[2]);
+        }
+    }
 
     #[test]
     fn slice_example_rows() {

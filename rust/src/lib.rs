@@ -29,6 +29,20 @@
 //! through [`backend::BackendKind`]; adding a representation (RNS,
 //! AdaptivFloat, …) is one file plus one enum arm.
 //!
+//! ## Determinism & parallel execution
+//!
+//! Every simulator-backend matmul is **bit-exact across thread counts
+//! and batch splits**. The one stochastic component — the ABFP ADC
+//! noise of Eq. 5 — is *coordinate-keyed*: the draw at output
+//! `(row, col)`, tile `ti` is a pure function of
+//! `(seed, global_row, col, ti)` ([`rng::CounterRng`], a SplitMix64
+//! counter RNG), never of evaluation order. Matmuls therefore run
+//! row-chunked on a dependency-free scoped thread pool ([`parallel`],
+//! `std::thread` only); the CLI `--threads` flag (default: all cores)
+//! sets the process-wide worker count, and `tests/determinism.rs` pins
+//! the invariance. (The ABFP *PJRT-artifact* serving path keys its
+//! noise per executed batch inside the kernel, outside this contract.)
+//!
 //! ## Offline substrate
 //!
 //! No crates.io registry is available in the build environment, so the
@@ -52,6 +66,7 @@ pub mod json;
 pub mod metrics;
 pub mod models;
 pub mod numerics;
+pub mod parallel;
 pub mod report;
 pub mod rng;
 pub mod runtime;

@@ -46,10 +46,20 @@ fixed = global-scale INT-b straw man; bfp = static per-tile
 power-of-two block floating point (HBFP-like).
 
 Common flags: --artifacts DIR (default artifacts), --ckpt DIR (default
-checkpoints), --out DIR (default reports).";
+checkpoints), --out DIR (default reports), --threads N (simulator
+worker threads on serve and every sweep; default all cores — ADC noise
+is coordinate-keyed, so results are bit-identical for any N).";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
+    // `--threads N` caps the simulator worker pool everywhere (serve
+    // workers, sweep matmuls, param staging). Absent/0 = all cores.
+    // Purely a scheduling knob: outputs are bit-identical for any value
+    // (coordinate-keyed ADC noise; see tests/determinism.rs).
+    let threads = args.usize_or("threads", 0)?;
+    if threads > 0 {
+        abfp::parallel::set_default_threads(threads);
+    }
     match args.command.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "sweep-table2" => cmd_table2(&args),
@@ -198,7 +208,8 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         .list("models")
         .unwrap_or_else(|| vec!["cnn".into(), "ssd".into()]);
     let steps = args.usize_or("steps", 150)?;
-    let bsel = args.usize_or("bits", 8)? as u32;
+    // Validated parse: bits < 2 would divide by zero in delta().
+    let bsel = args.bits_or("bits", 8)?;
     let mut results = Vec::new();
     for model in sel {
         let mut cfg = table3::FinetuneCfg::paper((bsel, bsel, 8), steps);
@@ -268,6 +279,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         backend,
         device: Some(device),
         policy: BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?),
+        threads: args.usize_or("threads", 0)?,
     };
     // The serve manifest line: exact backend configuration, machine
     // readable, so a served deployment is reproducible from its log.

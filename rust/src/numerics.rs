@@ -38,7 +38,13 @@ pub fn round_half_even(v: f32) -> f32 {
 
 /// Discretization bin for symmetric signed quantization with `bits` bits:
 /// `delta_b = 1 / (2^(b-1) - 1)` (Eq. 1).
+///
+/// Precondition: `bits >= 2`. One bit means zero positive levels and a
+/// division by zero (`2^0 - 1 = 0` → inf scales, NaN outputs); the
+/// boundary validations (`DeviceConfig::validate`, `Args::bits_or`)
+/// reject such configs before they can reach this hot path.
 pub fn delta(bits: u32) -> f32 {
+    debug_assert!(bits >= 2, "delta({bits}): bit widths below 2 are degenerate");
     1.0 / ((1u64 << (bits - 1)) - 1) as f32
 }
 

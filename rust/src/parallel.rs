@@ -1,0 +1,228 @@
+//! Dependency-free scoped data parallelism for the numeric backends.
+//!
+//! Every matmul in this crate writes a row-major (rows, row_width)
+//! output whose elements are independent — the ADC noise engine is
+//! coordinate-keyed ([`crate::rng::CounterRng`]), so no draw depends on
+//! evaluation order. That makes row-chunked parallelism **bit-exact by
+//! construction**: the same output is produced for any thread count and
+//! any chunk schedule (`tests/determinism.rs` pins this invariant).
+//!
+//! Built on `std::thread::scope` only (no rayon, no crates.io): workers
+//! borrow the operands, each owns a disjoint `&mut` window of the output
+//! obtained via `split_at_mut`, and per-chunk results (saturation
+//! counters, …) come back in chunk order for deterministic reduction.
+//!
+//! Thread-count resolution: every call site takes a `threads` argument
+//! where `0` means "use the process default", which is itself
+//! `available_parallelism` unless overridden by the CLI `--threads`
+//! flag via [`set_default_threads`].
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default thread count; 0 = `available_parallelism`.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Tiny outputs are not worth a thread spawn: below this many output
+/// elements the chunk helpers run inline on the caller's thread. This
+/// is a pure scheduling decision — results are identical either way.
+const MIN_PAR_ELEMS: usize = 4096;
+
+/// Number of hardware threads (1 when the query fails).
+pub fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Override the process-wide default thread count (0 restores the
+/// `available_parallelism` default). Wired to the CLI `--threads` flag.
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The process-wide default thread count (>= 1).
+pub fn default_threads() -> usize {
+    match DEFAULT_THREADS.load(Ordering::Relaxed) {
+        0 => available(),
+        n => n,
+    }
+}
+
+/// Resolve a per-call thread request: 0 means the process default.
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+}
+
+/// Run `work` over contiguous row chunks of a (rows, row_width) output.
+///
+/// The output slice is partitioned with `split_at_mut` so every worker
+/// writes a disjoint window; `work(rows_range, chunk)` receives the
+/// global row range it owns and the matching window (whose row 0 is
+/// `rows_range.start`). Per-chunk return values come back ordered by
+/// `rows_range.start`, so reductions over them are deterministic.
+///
+/// Scheduling never changes results: callers must ensure `work` is a
+/// pure function of the row range (true for every backend matmul —
+/// noise is coordinate-keyed, accumulation stays within a row).
+pub fn par_row_chunks<S, F>(
+    threads: usize,
+    rows: usize,
+    row_width: usize,
+    out: &mut [f32],
+    work: F,
+) -> Vec<S>
+where
+    S: Send,
+    F: Fn(Range<usize>, &mut [f32]) -> S + Sync,
+{
+    assert_eq!(
+        out.len(),
+        rows * row_width,
+        "output buffer does not match rows * row_width"
+    );
+    let mut threads = resolve(threads).min(rows).max(1);
+    if rows * row_width < MIN_PAR_ELEMS {
+        threads = 1;
+    }
+    if threads == 1 {
+        return vec![work(0..rows, out)];
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let work = &work;
+        let mut handles = Vec::with_capacity(threads);
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let take = chunk_rows.min(rows - row0);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_width);
+            rest = tail;
+            let range = row0..row0 + take;
+            handles.push(scope.spawn(move || work(range, head)));
+            row0 += take;
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    })
+}
+
+/// Map `f` over `items` on up to `threads` workers, preserving order.
+///
+/// Used for embarrassingly parallel per-tensor work (staging a model's
+/// parameter list in `backend::project_params`). `f` must be a pure
+/// function of its item for results to be schedule-independent.
+pub fn par_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = resolve(threads).min(items.len()).max(1);
+    if threads == 1 {
+        return items.iter().map(|item| f(item)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| scope.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_positive() {
+        assert!(available() >= 1);
+        assert!(default_threads() >= 1);
+        assert_eq!(resolve(3), 3);
+        assert!(resolve(0) >= 1);
+    }
+
+    /// Reference: fill each cell with a function of its coordinates.
+    fn fill(threads: usize, rows: usize, cols: usize) -> (Vec<f32>, Vec<u64>) {
+        let mut out = vec![0.0f32; rows * cols];
+        let sums = par_row_chunks(threads, rows, cols, &mut out, |range, chunk| {
+            let mut sum = 0u64;
+            for (ci, i) in range.enumerate() {
+                for j in 0..cols {
+                    chunk[ci * cols + j] = (i * cols + j) as f32;
+                    sum += (i * cols + j) as u64;
+                }
+            }
+            sum
+        });
+        (out, sums)
+    }
+
+    #[test]
+    fn chunks_cover_every_row_exactly_once() {
+        // Large enough to clear MIN_PAR_ELEMS so threads really fan out.
+        let (out, _) = fill(4, 100, 64);
+        for (idx, &v) in out.iter().enumerate() {
+            assert_eq!(v, idx as f32);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_output_or_reduction() {
+        let (base_out, base_sums) = fill(1, 97, 64);
+        for threads in [2usize, 3, 8, 64] {
+            let (out, sums) = fill(threads, 97, 64);
+            assert_eq!(out, base_out, "threads={threads}");
+            assert_eq!(
+                sums.iter().sum::<u64>(),
+                base_sums.iter().sum::<u64>(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_outputs_run_inline() {
+        // Below MIN_PAR_ELEMS the helper returns exactly one chunk.
+        let mut out = vec![0.0f32; 4];
+        let res = par_row_chunks(8, 2, 2, &mut out, |range, _| range.len());
+        assert_eq!(res, vec![2]);
+    }
+
+    #[test]
+    fn rows_fewer_than_threads() {
+        let (out, _) = fill(64, 3, 2048);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[3 * 2048 - 1], (3.0 * 2048.0) - 1.0);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let mut out = Vec::new();
+        let res = par_row_chunks(4, 0, 8, &mut out, |range, _| range.len());
+        assert_eq!(res, vec![0]);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let serial: Vec<u64> = items.iter().map(|v| v * v).collect();
+        for threads in [1usize, 2, 7] {
+            assert_eq!(par_map(threads, &items, |v| v * v), serial);
+        }
+        let empty: Vec<u64> = Vec::new();
+        assert!(par_map(4, &empty, |v| *v).is_empty());
+    }
+}

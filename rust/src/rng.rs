@@ -1,10 +1,13 @@
 //! Deterministic pseudo-random numbers: PCG64 plus the distributions the
-//! reproduction needs (uniform, normal, Laplace, categorical), and
-//! Fisher–Yates shuffling.
+//! reproduction needs (uniform, normal, Laplace, categorical),
+//! Fisher–Yates shuffling, and the counter-based [`CounterRng`] used by
+//! the ADC noise engine.
 //!
 //! Substrate note: no `rand` crate is available offline, and determinism
 //! across runs matters for EXPERIMENTS.md, so this is implemented from
-//! scratch. PCG-XSL-RR 128/64 follows O'Neill (2014).
+//! scratch. PCG-XSL-RR 128/64 follows O'Neill (2014); the counter-based
+//! generator chains SplitMix64 finalizers (Steele et al. 2014), the same
+//! construction family as Philox/Threefry counter RNGs.
 
 /// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
 #[derive(Clone, Debug)]
@@ -122,6 +125,72 @@ impl Pcg64 {
     }
 }
 
+const GOLDEN: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// One SplitMix64 step: add the golden-gamma increment, then the
+/// xor-shift-multiply finalizer (Steele, Lea & Flood 2014).
+#[inline]
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Counter-based (stateless) RNG: a pure hash from `(seed, stream,
+/// coordinates)` to a uniform draw.
+///
+/// Unlike [`Pcg64`], which yields a *sequence* (each draw depends on how
+/// many came before it), `CounterRng` yields a *field*: the draw at
+/// coordinates `(a, b, c)` is a pure function of the key and the
+/// coordinates. That is what makes the ABFP device's ADC noise
+/// schedule-independent — the noise injected at output `(row, col)`,
+/// tile `ti` is the same whether the matmul runs on 1 thread or 64, in
+/// one batch or split across calls (`tests/determinism.rs`).
+///
+/// Construction: chained SplitMix64 finalizers over the coordinates,
+/// each coordinate pre-whitened by a golden-ratio multiply so that
+/// permuted coordinates land on different draws. Statistical quality is
+/// checked by the moment/uniformity tests below.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterRng {
+    key: u64,
+}
+
+impl CounterRng {
+    /// Key the field from a seed and a stream id (stream separates
+    /// independent consumers with the same user seed).
+    pub fn new(seed: u64, stream: u64) -> CounterRng {
+        CounterRng {
+            key: splitmix(splitmix(stream) ^ seed),
+        }
+    }
+
+    /// Raw 64-bit hash at coordinates `(a, b, c)`.
+    #[inline]
+    pub fn at(&self, a: u64, b: u64, c: u64) -> u64 {
+        let mut h = self.key;
+        h = splitmix(h ^ a.wrapping_mul(GOLDEN));
+        h = splitmix(h ^ b.wrapping_mul(GOLDEN));
+        h = splitmix(h ^ c.wrapping_mul(GOLDEN));
+        h
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution at `(a, b, c)` (same
+    /// float mapping as [`Pcg64::next_f64`]).
+    #[inline]
+    pub fn f64_at(&self, a: u64, b: u64, c: u64) -> f64 {
+        (self.at(a, b, c) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi) at `(a, b, c)` (same mapping as
+    /// [`Pcg64::uniform`]).
+    #[inline]
+    pub fn uniform_at(&self, a: u64, b: u64, c: u64, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f64_at(a, b, c) as f32
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,5 +285,65 @@ mod tests {
         let mut a = base.split();
         let mut b = base.split();
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn counter_rng_is_a_pure_function_of_coordinates() {
+        let f = CounterRng::new(42, 7);
+        let g = CounterRng::new(42, 7);
+        // Same key + coordinates -> same draw, in any query order.
+        assert_eq!(f.at(1, 2, 3), g.at(1, 2, 3));
+        let forward: Vec<u64> = (0..100).map(|i| f.at(i, 0, 0)).collect();
+        let backward: Vec<u64> = (0..100).rev().map(|i| f.at(i, 0, 0)).collect();
+        assert_eq!(forward, backward.into_iter().rev().collect::<Vec<_>>());
+        // Different seed or stream -> different field.
+        assert_ne!(CounterRng::new(43, 7).at(1, 2, 3), f.at(1, 2, 3));
+        assert_ne!(CounterRng::new(42, 8).at(1, 2, 3), f.at(1, 2, 3));
+    }
+
+    #[test]
+    fn counter_rng_coordinates_are_not_interchangeable() {
+        let f = CounterRng::new(9, 9);
+        assert_ne!(f.at(1, 0, 0), f.at(0, 1, 0));
+        assert_ne!(f.at(0, 1, 0), f.at(0, 0, 1));
+        assert_ne!(f.at(5, 7, 0), f.at(7, 5, 0));
+    }
+
+    #[test]
+    fn counter_rng_uniform_moments() {
+        // Draws over a (row, col, tile) lattice — exactly the access
+        // pattern of the ADC noise engine — must look iid uniform.
+        let f = CounterRng::new(0xadc, 0x0abf_9000);
+        let mut vals = Vec::new();
+        for r in 0..40u64 {
+            for c in 0..40u64 {
+                for t in 0..4u64 {
+                    vals.push(f.f64_at(r, c, t));
+                }
+            }
+        }
+        let n = vals.len() as f64;
+        let mean: f64 = vals.iter().sum::<f64>() / n;
+        let var: f64 = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+        assert!(vals.iter().all(|v| (0.0..1.0).contains(v)));
+        // Lag-1 correlation along the row axis (the axis parallel
+        // workers split on) must vanish.
+        let lag: f64 = vals
+            .windows(2)
+            .map(|w| (w[0] - mean) * (w[1] - mean))
+            .sum::<f64>()
+            / (n - 1.0);
+        assert!(lag.abs() / var < 0.05, "lag-1 corr {}", lag / var);
+    }
+
+    #[test]
+    fn counter_rng_uniform_at_range() {
+        let f = CounterRng::new(3, 4);
+        for i in 0..1000u64 {
+            let v = f.uniform_at(i, 1, 2, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&v));
+        }
     }
 }

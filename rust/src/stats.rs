@@ -1,6 +1,8 @@
 //! Streaming statistics: Welford mean/variance, fixed-range histograms,
 //! and latency percentile sketches for the coordinator.
 
+use crate::rng::Pcg64;
+
 /// Welford online mean / variance / extrema.
 #[derive(Debug, Clone, Default)]
 pub struct Running {
@@ -145,6 +147,7 @@ pub struct Percentiles {
     samples: Vec<f64>,
     cap: usize,
     seen: u64,
+    rng: Pcg64,
 }
 
 impl Percentiles {
@@ -153,6 +156,9 @@ impl Percentiles {
             samples: Vec::new(),
             cap,
             seen: 0,
+            // Deterministic private stream: sketches reproduce run over
+            // run for the same push sequence.
+            rng: Pcg64::new(cap as u64, 0x9e7c_e9e1),
         }
     }
 
@@ -161,8 +167,13 @@ impl Percentiles {
         if self.samples.len() < self.cap {
             self.samples.push(v);
         } else {
-            // Reservoir sampling keeps the sketch unbiased.
-            let idx = (self.seen as usize * 2654435761) % self.seen as usize;
+            // Algorithm R: element `seen` replaces a uniform slot in
+            // [0, seen); it survives with probability cap/seen, which
+            // keeps the reservoir an unbiased sample of the stream.
+            // (The previous `(seen * 2654435761) % seen` draw was
+            // identically zero — only samples[0] ever updated — and
+            // the multiply overflowed in debug builds.)
+            let idx = self.rng.below(self.seen) as usize;
             if idx < self.cap {
                 self.samples[idx] = v;
             }
@@ -247,5 +258,59 @@ mod tests {
         assert_eq!(p.quantile(1.0), 100.0);
         assert!((p.quantile(0.5) - 50.0).abs() <= 1.0);
         assert!((p.quantile(0.99) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn reservoir_tracks_the_whole_stream_past_cap() {
+        // Regression for the broken reservoir draw: `(seen * K) % seen`
+        // is always 0, so after the reservoir filled only samples[0]
+        // was ever replaced and the sketch stayed frozen on the first
+        // `cap` values. Push 1..=10_000 through a cap-64 sketch: an
+        // unbiased reservoir's median must sit near 5_000, not near
+        // the cap (the frozen sketch reported ~32).
+        let mut p = Percentiles::new(64);
+        for i in 1..=10_000 {
+            p.push(i as f64);
+        }
+        assert_eq!(p.count(), 10_000);
+        let p50 = p.quantile(0.5);
+        assert!(
+            (2_000.0..=8_000.0).contains(&p50),
+            "median {p50} not tracking the stream"
+        );
+        // Late values must be able to enter the reservoir at all.
+        assert!(p.quantile(1.0) > 64.0, "max {} frozen at the cap", p.quantile(1.0));
+    }
+
+    #[test]
+    fn reservoir_keeps_roughly_cap_over_seen_of_late_values() {
+        // Sharper distribution sanity: with cap 128 over 4096 pushes,
+        // ~half the kept samples should come from the second half of
+        // the stream (binomial(128, 1/2): far outside [32, 96] would
+        // flag a biased draw).
+        let mut p = Percentiles::new(128);
+        for i in 0..4096 {
+            p.push(i as f64);
+        }
+        let late = (0..=100)
+            .map(|q| p.quantile(q as f64 / 100.0))
+            .filter(|&v| v >= 2048.0)
+            .count();
+        assert!((25..=75).contains(&late), "late-quantile share {late}/101");
+    }
+
+    #[test]
+    fn reservoir_panics_nowhere_in_debug_at_large_seen() {
+        // The old draw multiplied `seen as usize * 2654435761`, which
+        // overflows (and panics in debug builds) for large streams.
+        let mut p = Percentiles::new(4);
+        for _ in 0..4 {
+            p.push(1.0);
+        }
+        p.seen = 1 << 40; // simulate a very long-lived worker
+        for i in 0..16 {
+            p.push(i as f64);
+        }
+        assert!(p.quantile(0.5).is_finite());
     }
 }

@@ -1,0 +1,130 @@
+//! The determinism contract of the parallel execution engine.
+//!
+//!   D1  Thread-count independence: every backend's matmul output is
+//!       bit-identical for 1, 2 and 8 worker threads (ADC noise is
+//!       coordinate-keyed, so no draw depends on the schedule).
+//!   D2  Batch-split invariance: splitting an activation batch across
+//!       several `matmul_staged` calls yields exactly the rows of the
+//!       single unsplit call — for *any* split — because each call
+//!       claims the next M global row indices of the noise field.
+//!   D3  Seed reproducibility survives parallelism: fresh devices with
+//!       the same seed agree at any thread count; different seeds
+//!       still perturb noisy outputs.
+//!   D4  `project_params` (parallel per-tensor staging) is identical
+//!       to serial per-tensor projection.
+//!
+//! Operand sizes sit above the inline threshold of
+//! `parallel::par_row_chunks` (4096 output elements) so the chunk
+//! helpers genuinely fan out instead of degenerating to one thread.
+
+use abfp::abfp::{Device, DeviceConfig};
+use abfp::backend::{project_params, project_tensor, BackendKind, NumericBackend};
+use abfp::numerics::bf16_round;
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
+
+fn rand_t(rng: &mut Pcg64, shape: &[usize], laplace: bool) -> Tensor {
+    let len = shape.iter().product();
+    let data = (0..len)
+        .map(|_| {
+            let v = if laplace { rng.laplace() } else { rng.normal() };
+            bf16_round(v)
+        })
+        .collect();
+    Tensor::new(shape, data).unwrap()
+}
+
+#[test]
+fn d1_thread_count_independence_all_backends() {
+    // 72x80 = 5760 output elements: the row chunks really run on
+    // worker threads for the multi-thread cases.
+    let mut rng = Pcg64::seeded(0xd1);
+    let x = rand_t(&mut rng, &[72, 100], false);
+    let w = rand_t(&mut rng, &[80, 100], true);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 8.0, 0.5);
+    for kind in BackendKind::ALL {
+        let run = |threads: usize| {
+            let mut backend = kind.build(cfg, 7);
+            backend.set_threads(threads);
+            backend.matmul_dense(&x, &w).unwrap()
+        };
+        let base = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                base,
+                run(threads),
+                "{}: output changed at {threads} threads",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn d2_batch_split_invariance() {
+    let mut rng = Pcg64::seeded(0xd2);
+    let x = rand_t(&mut rng, &[64, 96], false);
+    let w = rand_t(&mut rng, &[96, 96], true);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5);
+
+    let mut whole_dev = Device::new(cfg, 11);
+    let staged = whole_dev.stage_weights(&w).unwrap();
+    let whole = whole_dev.matmul_staged(&x, &staged).unwrap();
+
+    // Any way of splitting the 64 rows across sequential calls must
+    // reproduce the unsplit rows bit for bit.
+    for splits in [vec![32usize, 32], vec![1, 63], vec![10, 20, 34], vec![64]] {
+        let mut dev = Device::new(cfg, 11);
+        let staged = dev.stage_weights(&w).unwrap();
+        let mut rows_done = 0usize;
+        let mut parts: Vec<f32> = Vec::new();
+        for take in &splits {
+            let sub = Tensor::new(
+                &[*take, 96],
+                x.data()[rows_done * 96..(rows_done + take) * 96].to_vec(),
+            )
+            .unwrap();
+            parts.extend_from_slice(dev.matmul_staged(&sub, &staged).unwrap().data());
+            rows_done += take;
+        }
+        assert_eq!(rows_done, 64);
+        assert_eq!(
+            whole.data(),
+            &parts[..],
+            "split {splits:?} drifted from the unsplit batch"
+        );
+    }
+}
+
+#[test]
+fn d3_seed_reproducibility_at_any_thread_count() {
+    let mut rng = Pcg64::seeded(0xd3);
+    let x = rand_t(&mut rng, &[48, 128], false);
+    let w = rand_t(&mut rng, &[128, 128], true);
+    let cfg = DeviceConfig::new(128, (8, 8, 8), 8.0, 0.5);
+    let run = |seed: u64, threads: usize| {
+        let mut dev = Device::new(cfg, seed);
+        dev.set_threads(threads);
+        dev.matmul(&x, &w).unwrap()
+    };
+    assert_eq!(run(5, 1), run(5, 8), "same seed must agree across threads");
+    assert_ne!(run(5, 8), run(6, 8), "different seed must perturb outputs");
+}
+
+#[test]
+fn d4_parallel_param_projection_matches_serial() {
+    let mut rng = Pcg64::seeded(0xd4);
+    let params: Vec<Tensor> = (0..6)
+        .map(|i| rand_t(&mut rng, &[8 + i, 4, 32], false))
+        .collect();
+    let cfg = DeviceConfig::paper_default(32);
+    for kind in BackendKind::ALL {
+        let backend = kind.build(cfg, 1);
+        let parallel_out = project_params(backend.as_ref(), &params).unwrap();
+        let serial_out: Vec<Tensor> = params
+            .iter()
+            .map(|p| project_tensor(backend.as_ref(), p).unwrap())
+            .collect();
+        assert_eq!(parallel_out, serial_out, "{}", kind.name());
+    }
+}
