@@ -102,6 +102,18 @@ impl Args {
         Ok(v)
     }
 
+    /// TCP port: u16-ranged parse with a port-specific error (65536+
+    /// silently truncating into some other service's port would be a
+    /// deployment footgun).
+    pub fn port_or(&self, key: &str, default: u16) -> Result<u16> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow!("--{key} expects a TCP port (0-65535), got {v:?}")
+            }),
+        }
+    }
+
     pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
         match self.get(key) {
             None => Ok(default),
@@ -190,6 +202,15 @@ mod tests {
         assert_eq!(parse("x").bits_or("bits", 8).unwrap(), 8);
         let err = parse("x --bits 1").bits_or("bits", 8).unwrap_err();
         assert!(err.to_string().contains("zero levels"), "{err}");
+    }
+
+    #[test]
+    fn port_parser_rejects_out_of_range() {
+        assert_eq!(parse("x --http 8080").port_or("http", 0).unwrap(), 8080);
+        assert_eq!(parse("x").port_or("http", 9000).unwrap(), 9000);
+        assert!(parse("x --http 70000").port_or("http", 0).is_err());
+        assert!(parse("x --http -1").port_or("http", 0).is_err());
+        assert!(parse("x --http abc").port_or("http", 0).is_err());
     }
 
     #[test]

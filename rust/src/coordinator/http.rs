@@ -1,0 +1,763 @@
+//! The HTTP/1.1 front door: a dependency-free (`std::net` only) server
+//! that exposes the in-process [`Router`] to the network — the MLPerf
+//! datacenter-inference "server scenario" boundary.
+//!
+//! Routes:
+//!
+//! * `POST /v1/models/{model}:predict` — JSON body
+//!   `{"data": [...], "shape": [...]?}` (one example; `shape` defaults
+//!   to flat). 200 answers carry per-example `outputs`, `queue_ms`,
+//!   `total_ms`, `batch_size`.
+//! * `GET /v1/models` — the served-model roster.
+//! * `GET /healthz` — liveness (`ok`).
+//! * `GET /metrics` — Prometheus text format from [`ServerStats`].
+//!
+//! Error-status contract (pinned by `tests/http.rs`):
+//!
+//! | condition                               | status |
+//! |-----------------------------------------|--------|
+//! | malformed HTTP / bad JSON / bad shape   | 400    |
+//! | unknown model or route                  | 404    |
+//! | unsupported method / transfer encoding  | 405 / 400 |
+//! | idle / trickled request past [`CONN_DEADLINE`] | close / 408 |
+//! | body over [`MAX_BODY`]                  | 413    |
+//! | worker queue full ([`SubmitError::Busy`]) | 429 (+ `retry-after: 1`) |
+//! | executor failure / worker dropped       | 500    |
+//! | worker gone                             | 503    |
+//!
+//! Backpressure: connection threads submit through
+//! [`Router::try_submit`], so a saturated model queue answers 429
+//! immediately instead of parking the connection thread — the accept
+//! loop never blocks behind a slow model. Keep-alive is honoured
+//! (HTTP/1.1 default; `connection: close` respected); each connection
+//! gets its own thread, reading with a short poll timeout so graceful
+//! [`HttpServer::shutdown`] completes in-flight requests and then
+//! closes every socket within ~2 poll intervals.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::server::{Response, Router, ServerStats, SubmitError};
+use crate::json;
+use crate::tensor::Tensor;
+
+/// Header-section cap (request line + headers).
+const MAX_HEAD: usize = 64 * 1024;
+/// Request-body cap (a 1M-element f32 example in JSON is ~12 MB).
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+/// Socket poll interval: how often idle connection threads notice the
+/// shutdown flag.
+const POLL: Duration = Duration::from_millis(200);
+/// Write timeout: a client that stops reading (full kernel send buffer,
+/// no progress for this long) errors the write instead of wedging its
+/// connection thread — which would otherwise make the thread-joining
+/// graceful shutdown hang forever. This also bounds shutdown latency
+/// behind stalled writers.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Per-request read deadline: a keep-alive connection may sit idle (or
+/// trickle a partial request) for at most this long before the thread
+/// closes it — otherwise slow-loris clients pin one thread + fd each
+/// forever (idle costs a thread in the per-connection model).
+const CONN_DEADLINE: Duration = Duration::from_secs(60);
+
+const CT_JSON: &str = "application/json";
+const CT_TEXT: &str = "text/plain; charset=utf-8";
+/// Prometheus exposition format version.
+const CT_PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// The listening server. Dropping it (or calling
+/// [`HttpServer::shutdown`]) stops the accept loop, joins every
+/// connection thread (in-flight requests complete), and releases the
+/// port.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving `router` on `addr` (e.g. `"0.0.0.0:8080"`;
+    /// port 0 picks an ephemeral port — read it back with
+    /// [`HttpServer::addr`]).
+    pub fn bind(router: Arc<Router>, addr: &str) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let (sd, cn) = (shutdown.clone(), conns.clone());
+        let accept = std::thread::Builder::new()
+            .name("abfp-http-accept".to_string())
+            .spawn(move || accept_loop(listener, router, sd, cn))?;
+        Ok(HttpServer {
+            addr: local,
+            shutdown,
+            accept: Some(accept),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting, let in-flight requests finish,
+    /// join every thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            // Nudge the accept loop out of its blocking accept().
+            TcpStream::connect(self.addr).ok();
+        }
+        if let Some(j) = self.accept.take() {
+            j.join().ok();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    router: Arc<Router>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for stream in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // Persistent accept errors (EMFILE when fds are
+                // exhausted by the per-connection model) would
+                // otherwise busy-spin this loop at 100% CPU, starving
+                // the very connections that could release descriptors.
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        let (r, sd) = (router.clone(), shutdown.clone());
+        match std::thread::Builder::new()
+            .name("abfp-http-conn".to_string())
+            .spawn(move || handle_conn(stream, &r, &sd))
+        {
+            Ok(join) => {
+                let mut c = conns.lock().unwrap();
+                c.retain(|h| !h.is_finished()); // prune completed threads
+                c.push(join);
+            }
+            Err(e) => eprintln!("http: could not spawn connection thread: {e}"),
+        }
+    }
+}
+
+/// One parsed request.
+struct HttpRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+/// A protocol-level failure mapped to a status for the client.
+struct HttpError {
+    status: u16,
+    msg: String,
+}
+
+impl HttpError {
+    fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError {
+            status,
+            msg: msg.into(),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, router: &Router, shutdown: &AtomicBool) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(POLL)).ok();
+    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let req = match read_request(&mut stream, &mut buf, shutdown) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean close, or shutdown while idle
+            Err(e) => {
+                write_response(
+                    &mut stream,
+                    e.status,
+                    CT_JSON,
+                    error_body(&e.msg).as_bytes(),
+                    false,
+                    false,
+                )
+                .ok();
+                // The client may still be mid-upload (413 from the head
+                // alone): drain briefly so close-with-unread-data RST
+                // can't destroy the error response before it is read.
+                linger_close(&mut stream);
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive && !shutdown.load(Ordering::SeqCst);
+        let (status, ctype, body) = route(router, &req);
+        // HEAD gets GET's status and headers (content-length included)
+        // with the body elided, per HTTP/1.1 — so a `HEAD /healthz`
+        // liveness probe sees the same 200 a GET would.
+        let head_only = req.method == "HEAD";
+        if write_response(
+            &mut stream,
+            status,
+            ctype,
+            body.as_bytes(),
+            keep_alive,
+            head_only,
+        )
+        .is_err()
+            || !keep_alive
+        {
+            return;
+        }
+    }
+}
+
+/// Read one full request (head + `content-length` body) from the
+/// connection. `buf` carries bytes across calls (keep-alive
+/// pipelining). `Ok(None)` means the peer closed between requests or
+/// the server is shutting down with no request in flight.
+fn read_request(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    shutdown: &AtomicBool,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let t0 = Instant::now();
+    let mut continued = false;
+    // The head is scanned and parsed exactly once: `scanned` resumes the
+    // terminator search where the last read left off, and `parsed`
+    // caches the head fields while the body streams in. (Rescanning
+    // from offset 0 per 8 KB read made a streamed B-byte body cost
+    // O(B^2 / chunk) — pathological at the 64 MB cap.)
+    let mut scanned = 0usize;
+    let mut parsed: Option<(usize, HttpRequest, usize, bool)> = None;
+    loop {
+        if parsed.is_none() {
+            if let Some(head_end) = find_head_end_from(buf, scanned) {
+                let head = std::str::from_utf8(&buf[..head_end])
+                    .map_err(|_| HttpError::new(400, "non-UTF-8 request head"))?;
+                let (method, path, keep_alive, content_length, expect_continue) =
+                    parse_head(head)?;
+                if content_length > MAX_BODY {
+                    return Err(HttpError::new(
+                        413,
+                        format!("body of {content_length} bytes exceeds {MAX_BODY}"),
+                    ));
+                }
+                let req = HttpRequest {
+                    method,
+                    path,
+                    keep_alive,
+                    body: Vec::new(),
+                };
+                parsed = Some((head_end, req, content_length, expect_continue));
+            } else if buf.len() > MAX_HEAD {
+                return Err(HttpError::new(413, "request head too large"));
+            } else {
+                // Resume the \r\n\r\n search just before the tail (the
+                // terminator may straddle a chunk boundary).
+                scanned = buf.len().saturating_sub(3);
+            }
+        }
+        let head_scalars = parsed
+            .as_ref()
+            .map(|(head_end, _, content_length, expect_continue)| {
+                (*head_end, *content_length, *expect_continue)
+            });
+        if let Some((head_end, content_length, expect_continue)) = head_scalars {
+            let total = head_end + 4 + content_length;
+            if buf.len() >= total {
+                let (_, mut req, _, _) = parsed.take().unwrap();
+                req.body = buf[head_end + 4..total].to_vec();
+                buf.drain(..total);
+                return Ok(Some(req));
+            }
+            // Body still in flight: honour `expect: 100-continue` once so
+            // clients like curl start sending it.
+            if expect_continue && !continued {
+                continued = true;
+                stream
+                    .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                    .map_err(|e| HttpError::new(400, format!("write failed: {e}")))?;
+            }
+        }
+        let mut chunk = [0u8; 8192];
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::new(400, "connection closed mid-request"));
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    if buf.is_empty() {
+                        return Ok(None);
+                    }
+                    // Half-received request at shutdown: drop it rather
+                    // than stall the join.
+                    return Err(HttpError::new(503, "server shutting down"));
+                }
+                if t0.elapsed() > CONN_DEADLINE {
+                    if buf.is_empty() {
+                        return Ok(None); // idle keep-alive: close quietly
+                    }
+                    return Err(HttpError::new(408, "request timed out"));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::new(400, format!("read failed: {e}"))),
+        }
+    }
+}
+
+/// Find `\r\n\r\n` searching only from `from` (resumable scan).
+fn find_head_end_from(buf: &[u8], from: usize) -> Option<usize> {
+    if buf.len() < 4 {
+        return None;
+    }
+    buf[from.min(buf.len())..]
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|i| i + from)
+}
+
+/// Parse request line + headers. Returns
+/// `(method, path, keep_alive, content_length, expect_continue)`.
+#[allow(clippy::type_complexity)]
+fn parse_head(head: &str) -> Result<(String, String, bool, usize, bool), HttpError> {
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut it = request_line.split_whitespace();
+    let (method, path, version) = match (it.next(), it.next(), it.next()) {
+        (Some(m), Some(p), Some(v)) => (m.to_string(), p.to_string(), v),
+        _ => {
+            return Err(HttpError::new(
+                400,
+                format!("malformed request line {request_line:?}"),
+            ))
+        }
+    };
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value.parse().map_err(|_| {
+                    HttpError::new(400, format!("bad content-length {value:?}"))
+                })?;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(HttpError::new(
+                    400,
+                    "transfer-encoding is not supported; send content-length",
+                ));
+            }
+            "expect" => {
+                expect_continue = value.eq_ignore_ascii_case("100-continue");
+            }
+            _ => {}
+        }
+    }
+    Ok((method, path, keep_alive, content_length, expect_continue))
+}
+
+/// Dispatch a parsed request: `(status, content-type, body)`. HEAD
+/// routes exactly like GET (the caller elides the body when writing).
+fn route(router: &Router, req: &HttpRequest) -> (u16, &'static str, String) {
+    let method = match req.method.as_str() {
+        "HEAD" => "GET",
+        m => m,
+    };
+    match (method, req.path.as_str()) {
+        ("GET", "/healthz") => (200, CT_TEXT, "ok\n".to_string()),
+        ("GET", "/v1/models") => (200, CT_JSON, models_body(router)),
+        ("GET", "/metrics") => (200, CT_PROM, metrics_body(router)),
+        ("POST", path) => {
+            match path
+                .strip_prefix("/v1/models/")
+                .and_then(|rest| rest.strip_suffix(":predict"))
+            {
+                Some(model) if !model.is_empty() => {
+                    predict(router, model, &req.body)
+                }
+                _ => (404, CT_JSON, error_body("no such route")),
+            }
+        }
+        ("GET", _) => (404, CT_JSON, error_body("no such route")),
+        _ => (405, CT_JSON, error_body("method not allowed")),
+    }
+}
+
+/// `POST /v1/models/{model}:predict`.
+fn predict(router: &Router, model: &str, body: &[u8]) -> (u16, &'static str, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, CT_JSON, error_body("body is not UTF-8")),
+    };
+    let value = match json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return (400, CT_JSON, error_body(&format!("invalid JSON: {e}"))),
+    };
+    let x = match parse_tensor(&value) {
+        Ok(x) => x,
+        Err(e) => return (400, CT_JSON, error_body(&e.to_string())),
+    };
+    let rx = match router.try_submit(model, x) {
+        Ok(rx) => rx,
+        Err(e) => {
+            let status = match &e {
+                SubmitError::UnknownModel(_) => 404,
+                SubmitError::BadShape(_) => 400,
+                SubmitError::Busy(_) => 429,
+                SubmitError::Gone(_) => 503,
+            };
+            return (status, CT_JSON, error_body(&e.to_string()));
+        }
+    };
+    match rx.recv() {
+        Err(_) => (500, CT_JSON, error_body("worker dropped the request")),
+        Ok(Err(e)) => (500, CT_JSON, error_body(&e.to_string())),
+        Ok(Ok(resp)) => (200, CT_JSON, response_body(model, &resp)),
+    }
+}
+
+/// Request tensor: `{"data": [...], "shape": [...]?}`.
+fn parse_tensor(v: &json::Value) -> Result<Tensor> {
+    let data_v = v
+        .get("data")
+        .map_err(|_| anyhow!(r#"body must be {{"data": [...], "shape": [...]?}}"#))?;
+    let data: Vec<f32> = data_v
+        .as_arr()?
+        .iter()
+        .map(|n| n.as_f64().map(|f| f as f32))
+        .collect::<Result<_>>()?;
+    let shape = match v.opt("shape") {
+        Some(s) => s.as_shape()?,
+        None => vec![data.len()],
+    };
+    Tensor::new(&shape, data)
+}
+
+fn tensor_json(t: &Tensor) -> json::Value {
+    json::obj(vec![
+        (
+            "shape",
+            json::arr(t.shape().iter().map(|&d| json::num(d as f64)).collect()),
+        ),
+        (
+            "data",
+            json::arr(t.data().iter().map(|&v| json::num(v as f64)).collect()),
+        ),
+    ])
+}
+
+fn response_body(model: &str, r: &Response) -> String {
+    json::obj(vec![
+        ("model", json::s(model)),
+        ("outputs", json::arr(r.outputs.iter().map(tensor_json).collect())),
+        ("queue_ms", json::num(r.queue_ms)),
+        ("total_ms", json::num(r.total_ms)),
+        ("batch_size", json::num(r.batch_size as f64)),
+    ])
+    .to_string()
+}
+
+fn error_body(msg: &str) -> String {
+    json::obj(vec![("error", json::s(msg))]).to_string()
+}
+
+fn models_body(router: &Router) -> String {
+    json::obj(vec![(
+        "models",
+        json::arr(
+            router
+                .served_models()
+                .iter()
+                .map(|m| json::s(m))
+                .collect(),
+        ),
+    )])
+    .to_string()
+}
+
+/// Prometheus exposition of every worker's [`ServerStats`].
+fn metrics_body(router: &Router) -> String {
+    use std::fmt::Write as _;
+
+    let mut rows: Vec<(String, ServerStats)> = Vec::new();
+    for m in router.served_models() {
+        if let Ok(s) = router.stats(&m) {
+            rows.push((m, s));
+        }
+    }
+    let mut out = String::new();
+    emit(
+        &mut out,
+        "abfp_requests_total",
+        "counter",
+        "Requests served successfully.",
+        &rows,
+        |s| s.requests as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_failed_requests_total",
+        "counter",
+        "Requests answered with an execution error.",
+        &rows,
+        |s| s.failed_requests as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_batches_total",
+        "counter",
+        "Device batches executed successfully.",
+        &rows,
+        |s| s.batches as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_failed_batches_total",
+        "counter",
+        "Device batches that failed to execute.",
+        &rows,
+        |s| s.failed_batches as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_batch_size_mean",
+        "gauge",
+        "Mean requests per executed batch.",
+        &rows,
+        |s| s.mean_batch,
+    );
+    emit(
+        &mut out,
+        "abfp_exec_ms_mean",
+        "gauge",
+        "Mean device execution time per batch (ms).",
+        &rows,
+        |s| s.mean_exec_ms,
+    );
+    let _ = writeln!(
+        out,
+        "# HELP abfp_latency_ms Request latency (queue + batch wait + execution)."
+    );
+    let _ = writeln!(out, "# TYPE abfp_latency_ms gauge");
+    for (m, s) in &rows {
+        let _ = writeln!(
+            out,
+            "abfp_latency_ms{{model=\"{m}\",quantile=\"0.5\"}} {}",
+            fmt_prom(s.p50_ms)
+        );
+        let _ = writeln!(
+            out,
+            "abfp_latency_ms{{model=\"{m}\",quantile=\"0.95\"}} {}",
+            fmt_prom(s.p95_ms)
+        );
+    }
+    out
+}
+
+fn emit(
+    out: &mut String,
+    name: &str,
+    kind: &str,
+    help: &str,
+    rows: &[(String, ServerStats)],
+    get: impl Fn(&ServerStats) -> f64,
+) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (m, s) in rows {
+        let _ = writeln!(out, "{name}{{model=\"{m}\"}} {}", fmt_prom(get(s)));
+    }
+}
+
+/// Prometheus float spelling (`NaN` / `+Inf` / `-Inf`, not Rust's
+/// `inf`). Stats are finite by construction, but the scrape must never
+/// be the thing that breaks.
+fn fmt_prom(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Half-close the send side and briefly drain the receive side before
+/// dropping the socket. Closing with unread request bytes still queued
+/// makes Linux send RST, which can destroy a just-written error
+/// response before the client reads it — they would see "connection
+/// reset by peer" instead of the 413/400/408 we sent.
+fn linger_close(stream: &mut TcpStream) {
+    use std::net::Shutdown;
+    stream.shutdown(Shutdown::Write).ok();
+    let deadline = Instant::now() + Duration::from_millis(500);
+    let mut sink = [0u8; 8192];
+    while Instant::now() < deadline {
+        match stream.read(&mut sink) {
+            Ok(0) => break, // client saw the close and finished
+            Ok(_) => {}     // discard the rest of the upload
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+    }
+}
+
+/// Write one response. `head_only` (HEAD requests) sends the status
+/// line and headers — including the content-length the body would have
+/// had — without the body itself.
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    ctype: &str,
+    body: &[u8],
+    keep_alive: bool,
+    head_only: bool,
+) -> std::io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let retry = if status == 429 { "retry-after: 1\r\n" } else { "" };
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: {ctype}\r\ncontent-length: {}\r\nconnection: {conn}\r\n{retry}\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    if !head_only {
+        stream.write_all(body)?;
+    }
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_parsing() {
+        let head = "POST /v1/models/cnn:predict HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\nConnection: close";
+        let (m, p, ka, cl, ec) = parse_head(head).unwrap();
+        assert_eq!(m, "POST");
+        assert_eq!(p, "/v1/models/cnn:predict");
+        assert!(!ka);
+        assert_eq!(cl, 12);
+        assert!(!ec);
+        // HTTP/1.1 defaults to keep-alive; header names are
+        // case-insensitive; expect is honoured.
+        let (_, _, ka, _, ec) =
+            parse_head("GET / HTTP/1.1\r\ncOnTeNt-LeNgTh: 3\r\nExpect: 100-continue")
+                .unwrap();
+        assert!(ka);
+        assert!(ec);
+        let (_, _, ka, _, _) = parse_head("GET / HTTP/1.0").unwrap();
+        assert!(!ka);
+        assert!(parse_head("garbage").is_err());
+        assert!(parse_head("GET / HTTP/1.1\r\ncontent-length: x").is_err());
+        assert!(parse_head("GET / HTTP/1.1\r\ntransfer-encoding: chunked").is_err());
+    }
+
+    #[test]
+    fn tensor_body_parsing() {
+        let v = json::parse(r#"{"data": [1, 2, 3, 4], "shape": [2, 2]}"#).unwrap();
+        let t = parse_tensor(&v).unwrap();
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+        // Shape defaults to flat.
+        let v = json::parse(r#"{"data": [1, 2]}"#).unwrap();
+        assert_eq!(parse_tensor(&v).unwrap().shape(), &[2]);
+        // Mismatched shape, missing data, non-numeric data: errors.
+        assert!(parse_tensor(&json::parse(r#"{"data":[1],"shape":[3]}"#).unwrap())
+            .is_err());
+        assert!(parse_tensor(&json::parse(r#"{"shape":[1]}"#).unwrap()).is_err());
+        assert!(parse_tensor(&json::parse(r#"{"data":[null]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(find_head_end_from(b"GET / HTTP/1.1\r\n\r\nrest", 0), Some(14));
+        assert_eq!(find_head_end_from(b"partial\r\n", 0), None);
+        // Resumable scan: the terminator is found even when the search
+        // resumes 3 bytes before a chunk boundary that splits it.
+        let buf = b"GET / HTTP/1.1\r\n\r\n";
+        assert_eq!(find_head_end_from(buf, buf.len() - 4), Some(14));
+        assert_eq!(find_head_end_from(buf, 14), Some(14));
+        assert_eq!(find_head_end_from(buf, 15), None);
+        assert_eq!(find_head_end_from(b"ab", 0), None);
+    }
+
+    #[test]
+    fn prometheus_float_spelling() {
+        assert_eq!(fmt_prom(1.5), "1.5");
+        assert_eq!(fmt_prom(f64::NAN), "NaN");
+        assert_eq!(fmt_prom(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_prom(f64::NEG_INFINITY), "-Inf");
+    }
+}

@@ -1,0 +1,322 @@
+//! HTTP load generator: drives the [`super::HttpServer`] front door
+//! over loopback (or any address) with closed-loop or rate-paced
+//! open-loop clients, and reports achieved QPS and latency quantiles —
+//! the MLPerf server-scenario harness shape, std-only like the server.
+//!
+//! Closed loop (`target_qps == 0`): each of `concurrency` clients fires
+//! its next request the moment the previous answer lands — measures
+//! saturation throughput. Open loop (`target_qps > 0`): request *i* is
+//! due at `t0 + i/qps` on a global schedule regardless of completions,
+//! so a server that can't keep up shows ballooning latency instead of a
+//! flattering slowdown of the offered load. (With a finite client pool
+//! the offered rate degrades once all clients are stuck waiting — a
+//! paced approximation of a true open loop; raise `concurrency` until
+//! achieved QPS reaches the target.)
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json;
+use crate::stats::quantile_sorted;
+
+/// What to drive, how hard.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Server address, e.g. `"127.0.0.1:8080"`.
+    pub addr: String,
+    /// Model to hit (`POST /v1/models/{model}:predict`).
+    pub model: String,
+    /// Elements per example (the model's flat input size).
+    pub in_elems: usize,
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Concurrent client connections (each a thread + keep-alive socket).
+    pub concurrency: usize,
+    /// Open-loop target rate; `0.0` = closed loop.
+    pub target_qps: f64,
+}
+
+/// The outcome: status-class counts and latency quantiles over the
+/// completed (HTTP 200) requests.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub ok: usize,
+    /// 429s — the server's backpressure answer, counted apart from
+    /// other 4xx so a saturation run is legible at a glance.
+    pub throttled: usize,
+    pub client_errors: usize,
+    pub server_errors: usize,
+    pub transport_errors: usize,
+    pub wall_s: f64,
+    /// Completed-request throughput (`ok / wall_s`).
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LoadReport {
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "{} ok / {} sent in {:.2}s = {:.1} req/s  (429 {}, 4xx {}, 5xx {}, io {})  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
+            self.ok,
+            self.sent,
+            self.wall_s,
+            self.qps,
+            self.throttled,
+            self.client_errors,
+            self.server_errors,
+            self.transport_errors,
+            self.p50_ms,
+            self.p95_ms,
+            self.max_ms,
+        )
+    }
+}
+
+/// One keep-alive HTTP/1.1 client connection with its read-ahead
+/// buffer. This is the crate's one minimal HTTP client — the load
+/// generator's workers and `tests/http.rs` both drive the server
+/// through it, so there is a single copy of the response-framing logic.
+pub struct Conn {
+    addr: String,
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    pub fn open(addr: &str) -> Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .ok();
+        Ok(Conn {
+            addr: addr.to_string(),
+            stream,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Send one request on the persistent connection and read the full
+    /// response: `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> Result<(u16, String)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()?;
+        // Read the response head.
+        let head_end = loop {
+            if let Some(i) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i;
+            }
+            let mut chunk = [0u8; 8192];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                bail!("server closed the connection mid-response");
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head_text = std::str::from_utf8(&self.buf[..head_end])?.to_string();
+        let status: u16 = head_text
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("malformed status line in {head_text:?}"))?;
+        let content_length: usize = head_text
+            .lines()
+            .filter_map(|l| l.split_once(':'))
+            .find(|(name, _)| name.trim().eq_ignore_ascii_case("content-length"))
+            .and_then(|(_, v)| v.trim().parse().ok())
+            .unwrap_or(0);
+        let total = head_end + 4 + content_length;
+        while self.buf.len() < total {
+            let mut chunk = [0u8; 8192];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                bail!("server closed the connection mid-body");
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let resp_body =
+            String::from_utf8(self.buf[head_end + 4..total].to_vec())?;
+        self.buf.drain(..total);
+        Ok((status, resp_body))
+    }
+}
+
+/// Per-worker tally, merged after the run.
+#[derive(Default)]
+struct Tally {
+    sent: usize,
+    ok: usize,
+    throttled: usize,
+    client_errors: usize,
+    server_errors: usize,
+    transport_errors: usize,
+    latencies_ms: Vec<f64>,
+}
+
+/// Run the load. Blocks until all `spec.requests` have been attempted.
+pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
+    if spec.requests == 0 || spec.concurrency == 0 || spec.in_elems == 0 {
+        bail!("loadgen: requests, concurrency and in_elems must all be >= 1");
+    }
+    let path = format!("/v1/models/{}:predict", spec.model);
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let tallies: Vec<Tally> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for _ in 0..spec.concurrency {
+            let next = next.clone();
+            let (spec, path) = (spec.clone(), path.clone());
+            joins.push(s.spawn(move || client_main(&spec, &path, &next, t0)));
+        }
+        joins
+            .into_iter()
+            // Propagate a client-thread panic instead of silently
+            // replacing that worker's tally with zeros — an
+            // under-reported bench is worse than a loud failure.
+            .map(|j| j.join().expect("loadgen client thread panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut report = LoadReport {
+        wall_s,
+        ..LoadReport::default()
+    };
+    let mut lat: Vec<f64> = Vec::new();
+    for t in tallies {
+        report.sent += t.sent;
+        report.ok += t.ok;
+        report.throttled += t.throttled;
+        report.client_errors += t.client_errors;
+        report.server_errors += t.server_errors;
+        report.transport_errors += t.transport_errors;
+        lat.extend(t.latencies_ms);
+    }
+    lat.sort_by(f64::total_cmp);
+    report.qps = report.ok as f64 / wall_s.max(1e-9);
+    report.p50_ms = quantile_sorted(&lat, 0.5);
+    report.p95_ms = quantile_sorted(&lat, 0.95);
+    report.max_ms = lat.last().copied().unwrap_or(0.0);
+    Ok(report)
+}
+
+fn client_main(
+    spec: &LoadSpec,
+    path: &str,
+    next: &AtomicUsize,
+    t0: Instant,
+) -> Tally {
+    let mut tally = Tally::default();
+    let mut conn: Option<Conn> = None;
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= spec.requests {
+            return tally;
+        }
+        if spec.target_qps > 0.0 {
+            // Open loop: request i is due at t0 + i/qps.
+            let due = Duration::from_secs_f64(i as f64 / spec.target_qps);
+            let elapsed = t0.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+        }
+        let body = body_for(i, spec.in_elems);
+        tally.sent += 1;
+        let t_req = Instant::now();
+        // One transparent reconnect: a keep-alive socket the server has
+        // since closed (idle timeout, restart) fails the first write or
+        // read — retry once on a fresh connection before counting an
+        // error.
+        let mut status = None;
+        for attempt in 0..2 {
+            if conn.is_none() {
+                match Conn::open(&spec.addr) {
+                    Ok(c) => conn = Some(c),
+                    Err(_) => break,
+                }
+            }
+            let c = conn.as_mut().unwrap();
+            match c.request("POST", path, &body) {
+                Ok((code, _)) => {
+                    status = Some(code);
+                    break;
+                }
+                Err(_) => {
+                    conn = None;
+                    if attempt == 1 {
+                        break;
+                    }
+                }
+            }
+        }
+        match status {
+            None => tally.transport_errors += 1,
+            Some(200) => {
+                tally.ok += 1;
+                tally
+                    .latencies_ms
+                    .push(t_req.elapsed().as_secs_f64() * 1e3);
+            }
+            Some(429) => tally.throttled += 1,
+            Some(c) if (400..500).contains(&c) => tally.client_errors += 1,
+            Some(_) => tally.server_errors += 1,
+        }
+    }
+}
+
+/// Deterministic per-request example (varies by index so batches are
+/// not degenerate).
+fn body_for(i: usize, in_elems: usize) -> String {
+    let v = (i % 13) as f64 * 0.125;
+    let data: Vec<json::Value> = (0..in_elems)
+        .map(|j| json::num(v + (j % 7) as f64 * 0.03125))
+        .collect();
+    json::obj(vec![("data", json::arr(data))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bodies_are_valid_json_and_deterministic() {
+        let b = body_for(3, 8);
+        assert_eq!(b, body_for(3, 8));
+        let v = json::parse(&b).unwrap();
+        assert_eq!(v.get("data").unwrap().as_arr().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn empty_spec_is_rejected() {
+        let spec = LoadSpec {
+            addr: "127.0.0.1:1".into(),
+            model: "x".into(),
+            in_elems: 0,
+            requests: 1,
+            concurrency: 1,
+            target_qps: 0.0,
+        };
+        assert!(run(&spec).is_err());
+    }
+}

@@ -1,13 +1,17 @@
 //! The serving coordinator: request router + dynamic batcher + device
-//! workers (the vLLM-router-shaped component of the stack).
+//! workers, fronted by a std-only HTTP/1.1 server (the
+//! vLLM-router-shaped component of the stack).
 //!
 //! Architecture (one box per thread):
 //!
 //! ```text
-//!   clients ----> Router ----> [ModelWorker "cnn"]  (device thread:
-//!      |            |             Engine + batcher +  PJRT executable)
-//!      |            +--------> [ModelWorker "bert"]
-//!      +--- submit(Request) -> oneshot Response
+//!   TCP clients -> HttpServer accept loop -> per-connection threads
+//!      |                                          |  try_submit (429 on
+//!      |                                          v   a full queue)
+//!      |                                       Router ----> [ModelWorker "cnn"]
+//!      |                                          |            (device thread:
+//!   in-process clients --- submit(Request) ------+             Engine + batcher
+//!                           -> oneshot Result<Response>        + PJRT executable)
 //! ```
 //!
 //! `PjRtClient` is thread-confined (Rc internals), so each ModelWorker
@@ -15,10 +19,24 @@
 //! accelerator stream per model replica. The batcher groups requests up
 //! to the artifact's compiled batch size or a deadline, pads the tail,
 //! executes once, and fans results back out; padding rows cost nothing
-//! extra because the artifact batch is fixed either way.
+//! extra because the artifact batch is fixed either way. An executor
+//! failure fails the batch, not the worker: every waiting client gets an
+//! error response and the failure is counted in [`ServerStats`].
+//!
+//! [`HttpServer`] speaks dependency-free HTTP/1.1 over
+//! `std::net::TcpListener` (`POST /v1/models/{m}:predict`,
+//! `GET /v1/models`, `GET /healthz`, Prometheus `GET /metrics`) with
+//! keep-alive and graceful shutdown; [`loadgen`] drives it open- or
+//! closed-loop over loopback and reports QPS / p50 / p95.
 
 mod batcher;
+mod http;
+pub mod loadgen;
 mod server;
 
 pub use batcher::{collect_batch, BatchPolicy};
-pub use server::{Request, Response, Router, ServerStats, WorkerConfig};
+pub use http::HttpServer;
+pub use server::{
+    Request, Response, Router, ServerStats, SubmitError, WorkerConfig,
+    ECHO_FAIL_SENTINEL,
+};

@@ -1,10 +1,11 @@
 //! The router and per-model device workers.
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::fmt;
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -13,15 +14,18 @@ use crate::abfp::DeviceConfig;
 use crate::backend::{project_params, BackendKind};
 use crate::models;
 use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine, Manifest};
-use crate::stats::{Percentiles, Running};
+use crate::stats::{quantile_sorted, Percentiles, Running};
 use crate::tensor::Tensor;
 
-/// One inference request: a single example for a named model.
+/// One inference request: a single example for a named model. The
+/// response channel carries a `Result`: an executor failure reaches the
+/// waiting client as a real error (it used to see only a bare
+/// channel-closed when the worker dropped the batch).
 pub struct Request {
     pub model: String,
     pub x: Tensor,
     pub enqueued: Instant,
-    pub respond: Sender<Response>,
+    pub respond: Sender<Result<Response>>,
 }
 
 /// The response: per-output tensors for this example plus timing.
@@ -86,10 +90,16 @@ impl WorkerConfig {
 }
 
 /// Aggregated serving statistics (read via [`Router::stats`]).
+///
+/// `requests`/`batches` count successful completions; failures are
+/// tallied separately so an executor that starts erroring is visible in
+/// `/metrics` instead of the failed batches silently vanishing.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub requests: u64,
     pub batches: u64,
+    pub failed_requests: u64,
+    pub failed_batches: u64,
     pub mean_batch: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -102,6 +112,8 @@ struct WorkerStats {
     batch_sizes: Running,
     requests: u64,
     batches: u64,
+    failed_requests: u64,
+    failed_batches: u64,
 }
 
 impl WorkerStats {
@@ -112,20 +124,60 @@ impl WorkerStats {
             batch_sizes: Running::new(),
             requests: 0,
             batches: 0,
+            failed_requests: 0,
+            failed_batches: 0,
         }
     }
 
     fn snapshot(&self) -> ServerStats {
+        // One reservoir clone + sort serves both quantiles (the old
+        // `quantile()` pair cloned and sorted twice while the caller
+        // held this worker's stats mutex), and `total_cmp` inside
+        // `sorted_clone` means a NaN latency can't poison the mutex.
+        let sorted = self.latency.sorted_clone();
         ServerStats {
             requests: self.requests,
             batches: self.batches,
+            failed_requests: self.failed_requests,
+            failed_batches: self.failed_batches,
             mean_batch: self.batch_sizes.mean(),
-            p50_ms: self.latency.quantile(0.5),
-            p95_ms: self.latency.quantile(0.95),
+            p50_ms: quantile_sorted(&sorted, 0.5),
+            p95_ms: quantile_sorted(&sorted, 0.95),
             mean_exec_ms: self.exec_ms.mean(),
         }
     }
 }
+
+/// Why a submit was refused — carries enough structure for the HTTP
+/// front door to pick a status code (404 / 400 / 429 / 503) without
+/// string-matching error text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No worker serves this model (HTTP 404).
+    UnknownModel(String),
+    /// Example element count does not match the model (HTTP 400).
+    BadShape(String),
+    /// The worker's bounded queue is full right now (HTTP 429). Only
+    /// [`Router::try_submit`] returns this; [`Router::submit`] blocks.
+    Busy(String),
+    /// The worker thread has exited (HTTP 503).
+    Gone(String),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownModel(m) => write!(f, "model {m:?} is not served"),
+            SubmitError::BadShape(msg) => f.write_str(msg),
+            SubmitError::Busy(m) => {
+                write!(f, "model {m:?} queue is full, retry later")
+            }
+            SubmitError::Gone(m) => write!(f, "worker {m} is gone"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// The request router: owns one worker thread per served model.
 pub struct Router {
@@ -182,25 +234,31 @@ impl Router {
         Ok(Router { workers })
     }
 
-    /// Submit one example; returns a receiver for the response.
-    ///
-    /// The input shape is validated here: a wrong-sized example is an
-    /// `Err` to this caller. (It used to reach the worker's batch
-    /// assembly, panic `copy_from_slice` there, and kill the worker —
-    /// wedging every later submit for that model.)
-    pub fn submit(&self, model: &str, x: Tensor) -> Result<Receiver<Response>> {
+    /// Look up the worker and validate the example shape. A wrong-sized
+    /// example is an error to the caller. (It used to reach the
+    /// worker's batch assembly, panic `copy_from_slice` there, and kill
+    /// the worker — wedging every later submit for that model.)
+    fn validated(&self, model: &str, x: &Tensor) -> Result<&WorkerHandle, SubmitError> {
         let worker = self
             .workers
             .get(model)
-            .ok_or_else(|| anyhow!("model {model:?} is not served"))?;
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?;
         if x.len() != worker.in_elems {
-            bail!(
+            return Err(SubmitError::BadShape(format!(
                 "model {model:?} expects {} input elements per example, got {} (shape {:?})",
                 worker.in_elems,
                 x.len(),
                 x.shape()
-            );
+            )));
         }
+        Ok(worker)
+    }
+
+    /// Submit one example; returns a receiver for the response. Blocks
+    /// while the worker queue is full (in-process callers; the HTTP
+    /// front door uses [`Router::try_submit`] instead).
+    pub fn submit(&self, model: &str, x: Tensor) -> Result<Receiver<Result<Response>>> {
+        let worker = self.validated(model, &x)?;
         let (tx, rx) = mpsc::channel();
         worker
             .tx
@@ -214,9 +272,37 @@ impl Router {
         Ok(rx)
     }
 
+    /// Non-blocking submit: a full worker queue is [`SubmitError::Busy`]
+    /// to the caller *now*, instead of stalling the calling thread. This
+    /// is the backpressure point of the HTTP front door — a saturated
+    /// model answers 429 from the connection thread rather than tying it
+    /// up (and, transitively, wedging the accept loop's thread budget).
+    pub fn try_submit(
+        &self,
+        model: &str,
+        x: Tensor,
+    ) -> Result<Receiver<Result<Response>>, SubmitError> {
+        let worker = self.validated(model, &x)?;
+        let (tx, rx) = mpsc::channel();
+        match worker.tx.try_send(Request {
+            model: model.to_string(),
+            x,
+            enqueued: Instant::now(),
+            respond: tx,
+        }) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => Err(SubmitError::Busy(model.to_string())),
+            Err(TrySendError::Disconnected(_)) => {
+                Err(SubmitError::Gone(model.to_string()))
+            }
+        }
+    }
+
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, model: &str, x: Tensor) -> Result<Response> {
-        Ok(self.submit(model, x)?.recv()?)
+        self.submit(model, x)?
+            .recv()
+            .map_err(|_| anyhow!("worker {model} dropped the request"))?
     }
 
     pub fn stats(&self, model: &str) -> Result<ServerStats> {
@@ -229,6 +315,81 @@ impl Router {
 
     pub fn served_models(&self) -> Vec<String> {
         self.workers.keys().cloned().collect()
+    }
+
+    /// Artifact-free router for integration tests and `bench-serve`:
+    /// each `(name, in_elems)` pair is served by a host-side *echo*
+    /// worker that runs the real batcher / stats / failure machinery
+    /// but computes outputs on the host — output 0 of each example is
+    /// the example itself, so clients can verify per-example routing
+    /// through the batch assembly. `queue` bounds the request channel
+    /// (the backpressure point [`Router::try_submit`] trips on) and
+    /// `exec_delay` simulates per-batch device time. An example whose
+    /// first element is ≥ [`ECHO_FAIL_SENTINEL`] makes its whole batch
+    /// fail "on device", exercising the executor-failure path.
+    pub fn start_echo(
+        models: &[(String, usize)],
+        policy: BatchPolicy,
+        queue: usize,
+        exec_delay: Duration,
+    ) -> Result<Router> {
+        let mut workers = BTreeMap::new();
+        for (name, in_elems) in models {
+            if *in_elems == 0 {
+                bail!("echo model {name:?}: in_elems must be >= 1");
+            }
+            let (tx, rx) = mpsc::sync_channel::<Request>(queue.max(1));
+            let stats = Arc::new(Mutex::new(WorkerStats::new()));
+            let stats_c = stats.clone();
+            let (elems, pol) = (*in_elems, policy);
+            let join = std::thread::Builder::new()
+                .name(format!("abfp-echo-{name}"))
+                .spawn(move || echo_worker_main(elems, pol, exec_delay, rx, stats_c))?;
+            workers.insert(
+                name.clone(),
+                WorkerHandle {
+                    tx,
+                    stats,
+                    in_elems: *in_elems,
+                    join: Some(join),
+                },
+            );
+        }
+        Ok(Router { workers })
+    }
+}
+
+/// Fault-injection sentinel for [`Router::start_echo`] workers: an
+/// example whose first element is at or above this value simulates an
+/// executor failure for its whole batch.
+pub const ECHO_FAIL_SENTINEL: f32 = 1e30;
+
+/// The echo worker: the serving loop of [`worker_main`] minus PJRT —
+/// same batcher, same stats, same failure fan-out.
+fn echo_worker_main(
+    in_elems: usize,
+    policy: BatchPolicy,
+    exec_delay: Duration,
+    rx: Receiver<Request>,
+    stats: Arc<Mutex<WorkerStats>>,
+) {
+    while let Some(batch) = collect_batch(&rx, policy) {
+        let t_exec = Instant::now();
+        if !exec_delay.is_zero() {
+            std::thread::sleep(exec_delay);
+        }
+        if batch.iter().any(|r| r.x.data()[0] >= ECHO_FAIL_SENTINEL) {
+            fail_batch(batch, "simulated device failure (echo sentinel)", &stats);
+            continue;
+        }
+        let b = batch.len();
+        let mut data = vec![0.0f32; b * in_elems];
+        for (i, req) in batch.iter().enumerate() {
+            data[i * in_elems..(i + 1) * in_elems].copy_from_slice(req.x.data());
+        }
+        let outs = vec![Tensor::new(&[b, in_elems], data).unwrap()];
+        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+        finish_batch(batch, &outs, b, exec_ms, &stats);
     }
 }
 
@@ -340,19 +501,49 @@ fn worker_main(
         }
         let args: Vec<&xla::Literal> =
             param_lits.iter().chain(dyn_lits.iter()).collect();
+        // An executor failure fails the *batch*, never the worker: every
+        // waiting client gets an error response and the stats record it.
+        // (The old `continue` dropped the whole batch — clients saw only
+        // a bare channel-closed error and the requests vanished from the
+        // serving stats.)
         let outs = match exe.run(&args) {
             Ok(o) => o,
             Err(e) => {
                 eprintln!("worker {model}: execute failed: {e}");
+                fail_batch(batch, &format!("execute failed: {e}"), &stats);
                 continue;
             }
         };
-        let out_tensors: Vec<Tensor> = outs
-            .iter()
-            .map(|o| to_tensor(o).unwrap())
-            .collect();
+        let out_tensors: Result<Vec<Tensor>> = outs.iter().map(to_tensor).collect();
+        let out_tensors = match out_tensors {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("worker {model}: output unmarshal failed: {e}");
+                fail_batch(batch, &format!("output unmarshal failed: {e}"), &stats);
+                continue;
+            }
+        };
         let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
         finish_batch(batch, &out_tensors, b, exec_ms, &stats);
+    }
+}
+
+/// Fan an execution failure back out: each waiting client receives an
+/// error carrying the cause, and the failure lands in
+/// [`ServerStats::failed_requests`] / [`ServerStats::failed_batches`].
+fn fail_batch(batch: Vec<Request>, err: &str, stats: &Mutex<WorkerStats>) {
+    // Counters move BEFORE the error responses go out: by the time a
+    // client can observe its answer, /metrics already reflects it
+    // (sending first left a window where a scrape under-counted).
+    {
+        let mut s = stats.lock().unwrap();
+        s.failed_requests += batch.len() as u64;
+        s.failed_batches += 1;
+    }
+    for req in batch {
+        req.respond
+            .send(Err(anyhow!("model {:?}: {err}", req.model)))
+            .ok();
     }
 }
 
@@ -372,7 +563,12 @@ fn finish_batch(
     stats: &Mutex<WorkerStats>,
 ) {
     let bsz = batch.len();
-    let mut totals = Vec::with_capacity(bsz);
+    // Assemble every response first, record the stats, THEN fan out:
+    // by the time a client can observe its answer, /metrics already
+    // reflects the completed request (sending first left a window
+    // where a scrape read counters missing requests whose responses
+    // had already been delivered).
+    let mut ready = Vec::with_capacity(bsz);
     for (i, req) in batch.into_iter().enumerate() {
         let outputs: Vec<Tensor> = out_tensors
             .iter()
@@ -380,24 +576,29 @@ fn finish_batch(
             .collect();
         let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
         let queue_ms = (total_ms - exec_ms).max(0.0);
-        totals.push(total_ms);
+        ready.push((req, outputs, total_ms, queue_ms));
+    }
+
+    {
+        let mut s = stats.lock().unwrap();
+        s.requests += bsz as u64;
+        s.batches += 1;
+        s.batch_sizes.push(bsz as f64);
+        s.exec_ms.push(exec_ms);
+        for (_, _, total_ms, _) in &ready {
+            s.latency.push(*total_ms);
+        }
+    }
+
+    for (req, outputs, total_ms, queue_ms) in ready {
         req.respond
-            .send(Response {
+            .send(Ok(Response {
                 outputs,
                 queue_ms,
                 total_ms,
                 batch_size: bsz,
-            })
+            }))
             .ok();
-    }
-
-    let mut s = stats.lock().unwrap();
-    s.requests += bsz as u64;
-    s.batches += 1;
-    s.batch_sizes.push(bsz as f64);
-    s.exec_ms.push(exec_ms);
-    for total_ms in totals {
-        s.latency.push(total_ms);
     }
 }
 
@@ -415,37 +616,17 @@ fn slice_example(t: &Tensor, i: usize, batch: usize) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
 
-    /// A router over one hand-built echo worker (no PJRT/artifacts):
-    /// exercises the submit/validate/respond path in isolation.
+    /// A router over one echo worker (no PJRT/artifacts): exercises the
+    /// submit/validate/batch/respond path in isolation.
     fn echo_router(in_elems: usize) -> Router {
-        let (tx, rx) = mpsc::sync_channel::<Request>(16);
-        let stats = Arc::new(Mutex::new(WorkerStats::new()));
-        let join = std::thread::spawn(move || {
-            while let Ok(req) = rx.recv() {
-                let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-                req.respond
-                    .send(Response {
-                        outputs: vec![req.x],
-                        queue_ms: 0.0,
-                        total_ms,
-                        batch_size: 1,
-                    })
-                    .ok();
-            }
-        });
-        let mut workers = BTreeMap::new();
-        workers.insert(
-            "echo".to_string(),
-            WorkerHandle {
-                tx,
-                stats,
-                in_elems,
-                join: Some(join),
-            },
-        );
-        Router { workers }
+        Router::start_echo(
+            &[("echo".to_string(), in_elems)],
+            BatchPolicy::new(4, 1),
+            16,
+            Duration::ZERO,
+        )
+        .unwrap()
     }
 
     #[test]
@@ -471,6 +652,95 @@ mod tests {
     fn unknown_model_is_an_error() {
         let router = echo_router(4);
         assert!(router.submit("nope", Tensor::zeros(&[4])).is_err());
+        assert_eq!(
+            router.try_submit("nope", Tensor::zeros(&[4])).unwrap_err(),
+            SubmitError::UnknownModel("nope".to_string())
+        );
+        assert!(matches!(
+            router.try_submit("echo", Tensor::zeros(&[7])).unwrap_err(),
+            SubmitError::BadShape(_)
+        ));
+    }
+
+    #[test]
+    fn try_submit_reports_busy_on_a_full_queue() {
+        // A slow worker (50 ms per batch of 1) over a 2-slot queue: the
+        // burst below must overflow into Busy instead of blocking the
+        // submitting thread — the 429 backpressure contract.
+        let router = Router::start_echo(
+            &[("echo".to_string(), 2)],
+            BatchPolicy::new(1, 0),
+            2,
+            Duration::from_millis(50),
+        )
+        .unwrap();
+        let mut accepted = Vec::new();
+        let mut busy = 0;
+        for _ in 0..16 {
+            match router.try_submit("echo", Tensor::zeros(&[2])) {
+                Ok(rx) => accepted.push(rx),
+                Err(SubmitError::Busy(_)) => busy += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(busy > 0, "16 instant submits never saw a full 2-slot queue");
+        assert!(!accepted.is_empty());
+        // Accepted requests still complete normally.
+        for rx in accepted {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.outputs[0].len(), 2);
+        }
+    }
+
+    #[test]
+    fn executor_failure_answers_every_request_and_is_counted() {
+        // Regression: on exe.run failure the worker `continue`d — the
+        // whole batch vanished, waiting clients got a bare
+        // channel-closed error, and the stats never recorded it. Every
+        // request must receive an error response and the failure must
+        // land in failed_requests/failed_batches.
+        let stats = Mutex::new(WorkerStats::new());
+        let mut batch = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = mpsc::channel();
+            batch.push(Request {
+                model: "m".into(),
+                x: Tensor::zeros(&[2]),
+                enqueued: Instant::now(),
+                respond: tx,
+            });
+            receivers.push(rx);
+        }
+        fail_batch(batch, "execute failed: device on fire", &stats);
+        for rx in receivers {
+            let err = rx.recv().expect("a response must arrive").unwrap_err();
+            assert!(err.to_string().contains("device on fire"), "{err}");
+        }
+        let snap = stats.lock().unwrap().snapshot();
+        assert_eq!(snap.failed_requests, 3);
+        assert_eq!(snap.failed_batches, 1);
+        assert_eq!(snap.requests, 0);
+        assert_eq!(snap.batches, 0);
+    }
+
+    #[test]
+    fn echo_sentinel_fails_the_batch_end_to_end() {
+        // The injectable failure travels the full router path: the
+        // client gets Err through its receiver, the worker stays alive,
+        // and the counters move.
+        let router = echo_router(3);
+        let mut bad = Tensor::zeros(&[3]);
+        bad.data_mut()[0] = ECHO_FAIL_SENTINEL;
+        let err = router.infer("echo", bad).unwrap_err();
+        assert!(err.to_string().contains("simulated device failure"), "{err}");
+        // Worker is still serving after the failed batch.
+        let resp = router.infer("echo", Tensor::zeros(&[3])).unwrap();
+        assert_eq!(resp.outputs[0].len(), 3);
+        let s = router.stats("echo").unwrap();
+        assert_eq!(s.failed_requests, 1);
+        assert_eq!(s.failed_batches, 1);
+        assert_eq!(s.requests, 1);
     }
 
     #[test]
@@ -507,7 +777,7 @@ mod tests {
             snap.p95_ms
         );
         for rx in receivers {
-            let resp = rx.recv().unwrap();
+            let resp = rx.recv().unwrap().unwrap();
             assert!(resp.total_ms >= 20.0);
             assert!(resp.queue_ms >= resp.total_ms - 1.0 - 1e-9);
             assert_eq!(resp.batch_size, 4);

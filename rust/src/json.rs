@@ -3,7 +3,8 @@
 //! Used for the artifact manifest produced by `python/compile/aot.py` and
 //! for machine-readable experiment reports. Supports the full JSON value
 //! model; numbers are kept as f64 (the manifest only contains shapes and
-//! names, well within f64's exact-integer range).
+//! names, well within f64's exact-integer range). Non-finite numbers
+//! serialize as `null` (JSON has no NaN/Infinity literals).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -94,7 +95,15 @@ impl Value {
             Value::Null => out.push_str("null"),
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals: emitting `{n}`
+                    // here used to produce documents (table2.json, every
+                    // machine-readable report) that no parser — not even
+                    // this crate's own — would accept. `null` is the
+                    // interchange convention (Python's json module,
+                    // serde_json's default float behaviour).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -415,6 +424,30 @@ mod tests {
     fn shape_helper() {
         let v = parse("[3, 224, 224]").unwrap();
         assert_eq!(v.as_shape().unwrap(), vec![3, 224, 224]);
+    }
+
+    #[test]
+    fn writer_nonfinite_roundtrips_as_null() {
+        // Regression: `write!(out, "{n}")` emitted the literals `NaN` /
+        // `inf` for non-finite f64, which no JSON parser accepts — every
+        // report carrying a DNF'd metric became unreadable. They must
+        // serialize as null and survive a writer -> parser round trip.
+        let v = obj(vec![
+            ("nan", num(f64::NAN)),
+            ("pinf", num(f64::INFINITY)),
+            ("ninf", num(f64::NEG_INFINITY)),
+            ("ok", num(1.5)),
+        ]);
+        let text = v.to_string();
+        let back = parse(&text).expect("writer output must be valid JSON");
+        assert_eq!(back.get("nan").unwrap(), &Value::Null);
+        assert_eq!(back.get("pinf").unwrap(), &Value::Null);
+        assert_eq!(back.get("ninf").unwrap(), &Value::Null);
+        assert_eq!(back.get("ok").unwrap().as_f64().unwrap(), 1.5);
+        // Nested positions too (array elements inside reports).
+        let a = arr(vec![num(f64::NAN), num(2.0)]);
+        let back = parse(&a.to_string()).unwrap();
+        assert_eq!(back.as_arr().unwrap()[0], Value::Null);
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //!   MLPerf-archetype models live in `python/compile/` and are AOT-lowered
 //!   to HLO-text artifacts (`make artifacts`).
 //! * **Layer 3 (this crate)**: everything at run time — the PJRT
-//!   [`runtime`], the serving [`coordinator`], the pluggable
-//!   number-format [`backend`]s, the bit-exact [`abfp`] device
-//!   simulator, the [`dnf`] finetuning machinery, the [`energy`] model,
-//!   synthetic [`data`] generators, task [`metrics`], and the [`sweep`]
-//!   drivers that regenerate every table and figure of the paper.
-//!   Python never runs on the request path.
+//!   [`runtime`], the serving [`coordinator`] (router + dynamic batcher
+//!   + a std-only HTTP/1.1 front door and load generator — the MLPerf
+//!   server-scenario boundary), the pluggable number-format
+//!   [`backend`]s, the bit-exact [`abfp`] device simulator, the [`dnf`]
+//!   finetuning machinery, the [`energy`] model, synthetic [`data`]
+//!   generators, task [`metrics`], and the [`sweep`] drivers that
+//!   regenerate every table and figure of the paper. Python never runs
+//!   on the request path.
 //!
 //! ## Numeric backends
 //!

@@ -1,13 +1,15 @@
 //! `abfp` — the launcher. One subcommand per paper experiment plus
 //! pretraining and serving. Run `abfp help` for usage.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use abfp::abfp::DeviceConfig;
 use abfp::backend::BackendKind;
 use abfp::cli::Args;
 use abfp::config::SweepGrid;
-use abfp::coordinator::{BatchPolicy, Router, WorkerConfig};
+use abfp::coordinator::{loadgen, BatchPolicy, HttpServer, Router, WorkerConfig};
 use abfp::data::dataset_for;
 use abfp::models;
 use abfp::rng::Pcg64;
@@ -35,9 +37,22 @@ USAGE: abfp <command> [flags]
                   --repeats N  --rows N  --backends LIST  --out DIR
   bits          Fig 2 captured-bit windows + format roster  --out DIR
   energy        section VI ADC energy analysis         --out DIR
-  serve         start the router and print latency stats
+  serve         start the router; --http PORT exposes the HTTP/1.1
+                  front door (POST /v1/models/{m}:predict, GET
+                  /v1/models, /healthz, Prometheus /metrics; ctrl-d =
+                  graceful shutdown). Without --http: in-process
+                  closed-loop latency bench.
                   --models a,b  --requests N  --tile N  --gain G
                   --backend NAME  (--f32 = --backend float32)
+                  --bind ADDR (default 0.0.0.0)  --batch N  --wait-ms MS
+  bench-serve   serving benchmark: start the HTTP server over loopback
+                  and drive it with the built-in load generator; report
+                  achieved QPS + p50/p95 and per-model worker stats.
+                  Default worker is the artifact-free echo harness
+                  (--elems N  --delay-ms MS  --queue N); --models a,b
+                  benches real artifact-backed workers instead.
+                  --concurrency N  --requests N  --qps Q (0 = closed
+                  loop)  --port P  --batch N  --wait-ms MS
   help          this text
 
 Backends: float32 | abfp | fixed | bfp (comma lists and `all` accepted
@@ -69,6 +84,7 @@ fn main() -> Result<()> {
         "bits" => cmd_bits(&args),
         "energy" => cmd_energy(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -289,7 +305,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let router = Router::start(&artifacts, &ckpt, &sel, cfg)?;
 
-    // Drive a closed-loop load: round-robin the served models.
+    // `--http PORT` (bare `--http` = 8080): serve network traffic until
+    // stdin closes, then shut down gracefully and print the stats.
+    let http_port = match args.get("http") {
+        None => None,
+        Some("true") => Some(8080),
+        Some(_) => Some(args.port_or("http", 8080)?),
+    };
+    if let Some(port) = http_port {
+        use std::io::IsTerminal;
+        let bind = args.str_or("bind", "0.0.0.0");
+        let router = Arc::new(router);
+        let mut server = HttpServer::bind(router.clone(), &bind_addr(&bind, port))?;
+        println!("listening on http://{}", server.addr());
+        println!("  POST /v1/models/{{model}}:predict   GET /v1/models /healthz /metrics");
+        if std::io::stdin().is_terminal() {
+            // Interactive: ctrl-d drains gracefully. (Only when stdin is
+            // a terminal — under systemd/docker/nohup stdin is /dev/null
+            // and an unconditional read would return EOF immediately,
+            // shutting the server down milliseconds after startup.)
+            println!("ctrl-d (stdin EOF) shuts down gracefully");
+            let mut sink = String::new();
+            while std::io::stdin().read_line(&mut sink).unwrap_or(0) > 0 {
+                sink.clear();
+            }
+            eprintln!("[serve] draining connections");
+            server.shutdown();
+            print_server_stats(&router)?;
+        } else {
+            println!("stdin is not a terminal: serving until the process is killed");
+            loop {
+                std::thread::park();
+            }
+        }
+        return Ok(());
+    }
+
+    // No HTTP: drive a closed-loop in-process load, round-robin over
+    // the served models.
     let t0 = std::time::Instant::now();
     let mut rng = Pcg64::seeded(0x5e12);
     let mut pending = Vec::new();
@@ -302,19 +355,131 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pending.push(router.submit(model, x)?);
     }
     for rx in pending {
-        rx.recv()?;
+        rx.recv()??;
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "served {n_requests} requests in {wall:.2}s = {:.1} req/s",
         n_requests as f64 / wall
     );
+    print_server_stats(&router)?;
+    Ok(())
+}
+
+/// Join a bind address and port; IPv6 literals need bracket syntax
+/// (`[::1]:8080` — a bare `::1:8080` does not parse).
+fn bind_addr(bind: &str, port: u16) -> String {
+    if bind.contains(':') && !bind.starts_with('[') {
+        format!("[{bind}]:{port}")
+    } else {
+        format!("{bind}:{port}")
+    }
+}
+
+fn print_server_stats(router: &Router) -> Result<()> {
     for model in router.served_models() {
         let s = router.stats(&model)?;
         println!(
-            "  {model}: {} reqs, {} batches (mean {:.1}), exec {:.1} ms, p50 {:.1} ms, p95 {:.1} ms",
-            s.requests, s.batches, s.mean_batch, s.mean_exec_ms, s.p50_ms, s.p95_ms
+            "  {model}: {} reqs ({} failed), {} batches ({} failed, mean {:.1}), exec {:.1} ms, p50 {:.1} ms, p95 {:.1} ms",
+            s.requests,
+            s.failed_requests,
+            s.batches,
+            s.failed_batches,
+            s.mean_batch,
+            s.mean_exec_ms,
+            s.p50_ms,
+            s.p95_ms
         );
     }
+    Ok(())
+}
+
+/// `bench-serve`: the serving benchmark — HTTP server + load generator
+/// over loopback, one process. The default worker is the artifact-free
+/// echo harness so the serving stack itself (HTTP parse, router, dynamic
+/// batcher, stats) is measurable on any checkout; `--models` swaps in
+/// real artifact-backed workers.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let requests = args.usize_or("requests", 256)?;
+    let concurrency = args.usize_or("concurrency", 8)?;
+    let qps = args.f32_or("qps", 0.0)? as f64;
+    let policy =
+        BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?);
+    let bind = args.str_or("bind", "127.0.0.1");
+    let port = args.port_or("port", 0)?;
+
+    // `targets` is every (model, in_elems) the load generator will
+    // drive — all served models, not just the first, so nobody pays
+    // worker startup for a model the bench then ignores.
+    let (router, targets) = if let Some(sel) = args.list("models") {
+        // Real artifact-backed workers (needs `make artifacts`).
+        let backend = BackendKind::parse(&backend_flag(args, "abfp"))?;
+        let device = DeviceConfig::new(
+            args.usize_or("tile", 128)?,
+            (8, 8, 8),
+            args.f32_or("gain", 8.0)?,
+            0.5,
+        );
+        let cfg = WorkerConfig {
+            backend,
+            device: Some(device),
+            policy,
+            threads: args.usize_or("threads", 0)?,
+        };
+        let router = Router::start(
+            &args.str_or("artifacts", "artifacts"),
+            &args.str_or("ckpt", "checkpoints"),
+            &sel,
+            cfg,
+        )?;
+        let mut targets = Vec::new();
+        for model in sel {
+            let ds = dataset_for(&model)?;
+            let in_elems = ds.batch(&mut Pcg64::seeded(1), 1).x.len();
+            targets.push((model, in_elems));
+        }
+        (router, targets)
+    } else {
+        // Echo harness: real batcher/stats/backpressure, host compute.
+        let in_elems = args.usize_or("elems", 64)?;
+        let queue = args.usize_or("queue", 64)?;
+        let delay = std::time::Duration::from_millis(args.u64_or("delay-ms", 2)?);
+        let router = Router::start_echo(
+            &[("echo".to_string(), in_elems)],
+            policy,
+            queue,
+            delay,
+        )?;
+        (router, vec![("echo".to_string(), in_elems)])
+    };
+
+    let router = Arc::new(router);
+    let mut server = HttpServer::bind(router.clone(), &bind_addr(&bind, port))?;
+    for (model, in_elems) in &targets {
+        let spec = loadgen::LoadSpec {
+            addr: server.addr().to_string(),
+            model: model.clone(),
+            in_elems: *in_elems,
+            requests,
+            concurrency,
+            target_qps: qps,
+        };
+        eprintln!(
+            "[bench-serve] {} x{} -> http://{}/v1/models/{}:predict ({})",
+            requests,
+            concurrency,
+            server.addr(),
+            model,
+            if qps > 0.0 {
+                format!("open loop @ {qps} qps")
+            } else {
+                "closed loop".to_string()
+            }
+        );
+        let report = loadgen::run(&spec)?;
+        println!("{model}: {}", report.render());
+    }
+    print_server_stats(&router)?;
+    server.shutdown();
     Ok(())
 }

@@ -12,18 +12,37 @@ use anyhow::{bail, Result};
 use crate::tensor::Tensor;
 
 /// Compute the metric named in the manifest from model outputs + targets.
+///
+/// Output arity and batch emptiness are validated here with `bail!`
+/// rather than indexed unchecked: the serving path maps metric errors to
+/// HTTP 500s, so a model returning fewer outputs than its metric needs
+/// (or an empty evaluation batch) must surface as an `Err`, never a
+/// panic in the worker thread.
 pub fn compute(metric: &str, outputs: &[Tensor], y: &Tensor) -> Result<f64> {
+    let need = match metric {
+        "detection" | "span_f1" => 2,
+        "top1" | "dice" | "auc" => 1,
+        other => bail!("unknown metric {other:?}"),
+    };
+    if outputs.len() < need {
+        bail!(
+            "metric {metric:?} needs {need} model output(s), got {}",
+            outputs.len()
+        );
+    }
     match metric {
         "top1" => top1(&outputs[0], y),
         "detection" => detection(&outputs[0], &outputs[1], y),
         "dice" => dice(&outputs[0], y),
         "span_f1" => span_f1(&outputs[0], &outputs[1], y),
         "auc" => auc(&outputs[0], y),
-        other => bail!("unknown metric {other:?}"),
+        _ => unreachable!(),
     }
 }
 
-/// Argmax over the last axis of a (B, C) tensor.
+/// Argmax over the last axis of a (B, C) tensor. `total_cmp` keeps a
+/// NaN logit from panicking the comparator (NaN compares greatest, so a
+/// fully-NaN row deterministically picks its last column).
 fn argmax_rows(t: &Tensor) -> Vec<usize> {
     let c = *t.shape().last().unwrap();
     t.data()
@@ -31,7 +50,7 @@ fn argmax_rows(t: &Tensor) -> Vec<usize> {
         .map(|row| {
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0
         })
@@ -40,6 +59,16 @@ fn argmax_rows(t: &Tensor) -> Vec<usize> {
 
 /// Top-1 accuracy: logits (B, C) vs labels (B,).
 pub fn top1(logits: &Tensor, y: &Tensor) -> Result<f64> {
+    if logits.is_empty() {
+        bail!("top1: empty batch (no logits)");
+    }
+    if y.len() * logits.shape().last().copied().unwrap_or(0) != logits.len() {
+        bail!(
+            "top1: {} labels do not match logits shape {:?}",
+            y.len(),
+            logits.shape()
+        );
+    }
     let preds = argmax_rows(logits);
     let correct = preds
         .iter()
@@ -73,8 +102,19 @@ pub fn iou(a: &[f32], b: &[f32]) -> f64 {
 /// Detection score: mean over examples of (class correct ? IoU : 0) —
 /// the single-object analogue of mAP.
 pub fn detection(conf: &Tensor, boxes: &Tensor, y: &Tensor) -> Result<f64> {
+    if conf.is_empty() {
+        bail!("detection: empty batch (no confidences)");
+    }
     let preds = argmax_rows(conf);
     let b = preds.len();
+    if boxes.len() != b * 4 || y.len() != b * 5 {
+        bail!(
+            "detection: batch {b} wants boxes (B,4) and targets (B,5), \
+             got {} and {} elements",
+            boxes.len(),
+            y.len()
+        );
+    }
     let mut total = 0.0f64;
     for i in 0..b {
         let target = &y.data()[i * 5..(i + 1) * 5];
@@ -91,13 +131,31 @@ pub fn detection(conf: &Tensor, boxes: &Tensor, y: &Tensor) -> Result<f64> {
 /// row in Table II.
 pub fn dice(logits: &Tensor, y: &Tensor) -> Result<f64> {
     let px = y.len();
+    if px == 0 {
+        bail!("dice: empty batch (no mask pixels)");
+    }
+    if logits.len() != px * 2 {
+        bail!(
+            "dice: {} mask pixels want {} logits (2 classes), got {}",
+            px,
+            px * 2,
+            logits.len()
+        );
+    }
     let mut inter = [0.0f64; 2];
     let mut pred_n = [0.0f64; 2];
     let mut true_n = [0.0f64; 2];
     for i in 0..px {
         let fg = logits.data()[i * 2 + 1] > logits.data()[i * 2];
         let p = usize::from(fg);
-        let t = y.data()[i] as usize;
+        let t = y.data()[i];
+        // A mask value outside {0, 1} would index true_n out of bounds —
+        // the same worker-thread panic class the arity checks above
+        // close off.
+        if t != 0.0 && t != 1.0 {
+            bail!("dice: mask value {t} at pixel {i} is not a binary label");
+        }
+        let t = t as usize;
         pred_n[p] += 1.0;
         true_n[t] += 1.0;
         if p == t {
@@ -119,9 +177,20 @@ pub fn dice(logits: &Tensor, y: &Tensor) -> Result<f64> {
 /// SQuAD-style span F1: predicted span = (argmax start, argmax end),
 /// token-overlap F1 against the gold span, averaged over examples.
 pub fn span_f1(start_logits: &Tensor, end_logits: &Tensor, y: &Tensor) -> Result<f64> {
+    if start_logits.is_empty() || end_logits.is_empty() {
+        bail!("span_f1: empty batch (no logits)");
+    }
     let s_pred = argmax_rows(start_logits);
     let e_pred = argmax_rows(end_logits);
     let b = s_pred.len();
+    if e_pred.len() != b || y.len() != b * 2 {
+        bail!(
+            "span_f1: batch {b} wants matching end logits and gold spans \
+             (B,2), got {} rows and {} target elements",
+            e_pred.len(),
+            y.len()
+        );
+    }
     let mut total = 0.0f64;
     for i in 0..b {
         let (ps, pe) = (s_pred[i], e_pred[i].max(s_pred[i]));
@@ -139,8 +208,11 @@ pub fn span_f1(start_logits: &Tensor, end_logits: &Tensor, y: &Tensor) -> Result
 /// ROC AUC via the rank statistic (ties get midranks).
 pub fn auc(scores: &Tensor, y: &Tensor) -> Result<f64> {
     let n = scores.len();
+    if y.len() != n {
+        bail!("auc: {} labels for {n} scores", y.len());
+    }
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| scores.data()[a].partial_cmp(&scores.data()[b]).unwrap());
+    idx.sort_by(|&a, &b| scores.data()[a].total_cmp(&scores.data()[b]));
     // Midrank assignment.
     let mut ranks = vec![0.0f64; n];
     let mut i = 0;
@@ -248,5 +320,60 @@ mod tests {
         let y = t(&[3], vec![1.0, 1.0, 1.0]);
         let s = t(&[3], vec![0.1, 0.5, 0.9]);
         assert_eq!(auc(&s, &y).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn compute_rejects_missing_outputs() {
+        // Regression: `compute` indexed outputs[0]/outputs[1] unchecked
+        // and panicked on a model with fewer outputs — the HTTP 500
+        // path needs an Err, never a worker-thread panic.
+        let y = t(&[1], vec![0.0]);
+        let err = compute("top1", &[], &y).unwrap_err();
+        assert!(err.to_string().contains("needs 1"), "{err}");
+        let one = t(&[1, 4], vec![0.0; 4]);
+        let err = compute("span_f1", &[one.clone()], &y).unwrap_err();
+        assert!(err.to_string().contains("needs 2"), "{err}");
+        let err = compute("detection", &[one], &y).unwrap_err();
+        assert!(err.to_string().contains("needs 2"), "{err}");
+        assert!(compute("nope", &[], &y).is_err());
+    }
+
+    #[test]
+    fn empty_batches_error_instead_of_nan() {
+        // Regression: top1/detection/span_f1 divided by a zero batch
+        // size and returned NaN (now invalid JSON-adjacent garbage in
+        // reports); they must bail.
+        let empty = t(&[0, 4], vec![]);
+        let y0 = t(&[0], vec![]);
+        assert!(top1(&empty, &y0).is_err());
+        assert!(detection(&empty, &t(&[0, 4], vec![]), &y0).is_err());
+        assert!(span_f1(&empty, &empty, &y0).is_err());
+    }
+
+    #[test]
+    fn shape_mismatches_error_instead_of_panicking() {
+        let conf = t(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let boxes = t(&[2, 4], vec![0.5; 8]);
+        let y_short = t(&[5], vec![0.0; 5]); // wants 2*5 = 10
+        assert!(detection(&conf, &boxes, &y_short).is_err());
+        let logits = t(&[3, 2], vec![0.0; 6]);
+        let y_bad = t(&[2], vec![0.0, 1.0]); // wants 3 labels
+        assert!(top1(&logits, &y_bad).is_err());
+        assert!(dice(&logits, &t(&[5], vec![0.0; 5])).is_err());
+        // Non-binary mask values and empty masks error instead of
+        // indexing out of bounds / reporting a perfect empty score.
+        assert!(dice(&logits, &t(&[3], vec![0.0, 2.0, 1.0])).is_err());
+        assert!(dice(&t(&[0, 2], vec![]), &t(&[0], vec![])).is_err());
+        assert!(auc(&t(&[4], vec![0.0; 4]), &t(&[3], vec![0.0; 3])).is_err());
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic() {
+        // total_cmp in argmax: a NaN logit is an answer (NaN sorts
+        // greatest), not a comparator panic inside the serving worker.
+        let logits = t(&[2, 3], vec![f32::NAN, 0.0, 1.0, 0.0, f32::NAN, 2.0]);
+        let y = t(&[2], vec![0.0, 1.0]);
+        let acc = top1(&logits, &y).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
     }
 }

@@ -86,6 +86,11 @@ pub struct Histogram {
     pub counts: Vec<f64>,
     pub underflow: u64,
     pub overflow: u64,
+    /// NaN inputs: counted here, never binned. (NaN fails both range
+    /// checks, so it used to fall through to the in-range arm where
+    /// `(NaN / w) as usize == 0` silently inflated `counts[0]` —
+    /// corrupting DNF noise histograms whose fit range is NaN-blind.)
+    pub nan: u64,
 }
 
 impl Histogram {
@@ -97,6 +102,7 @@ impl Histogram {
             counts: vec![0.0; bins],
             underflow: 0,
             overflow: 0,
+            nan: 0,
         }
     }
 
@@ -109,7 +115,9 @@ impl Histogram {
     }
 
     pub fn push(&mut self, v: f64) {
-        if v < self.lo {
+        if v.is_nan() {
+            self.nan += 1;
+        } else if v < self.lo {
             self.underflow += 1;
             self.counts[0] += 1.0; // clamp into the edge bins
         } else if v >= self.hi {
@@ -180,18 +188,36 @@ impl Percentiles {
         }
     }
 
-    pub fn quantile(&self, q: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
+    /// Sorted copy of the reservoir. Callers that need several
+    /// quantiles (p50 + p95 per stats snapshot) should sort once here
+    /// and read them with [`quantile_sorted`] — [`Self::quantile`]
+    /// re-sorts on every call. Uses `total_cmp`, so a NaN in the sketch
+    /// sorts last instead of panicking the comparator (the old
+    /// `partial_cmp().unwrap()` took down whatever thread held the
+    /// stats mutex).
+    pub fn sorted_clone(&self) -> Vec<f64> {
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        s[((q * (s.len() - 1) as f64).round()) as usize]
+        s.sort_by(f64::total_cmp);
+        s
+    }
+
+    /// One-off quantile (clones + sorts; see [`Self::sorted_clone`]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_sorted(&self.sorted_clone(), q)
     }
 
     pub fn count(&self) -> u64 {
         self.seen
     }
+}
+
+/// Nearest-rank quantile over pre-sorted samples (0.0 when empty, so
+/// downstream reports stay finite before traffic arrives).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((q * (sorted.len() - 1) as f64).round()) as usize]
 }
 
 #[cfg(test)]
@@ -234,6 +260,22 @@ mod tests {
     }
 
     #[test]
+    fn histogram_nan_counted_not_binned() {
+        // Regression: NaN fails both range checks, so it used to fall
+        // through to `((v - lo)/w) as usize == 0` and silently land in
+        // counts[0]. It must be counted apart and stay out of the bins.
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(f64::NAN);
+        h.push(f64::NAN);
+        h.push(0.5);
+        assert_eq!(h.nan, 2);
+        assert_eq!(h.counts[0], 1.0);
+        assert_eq!(h.total(), 1.0);
+        assert_eq!(h.underflow, 0);
+        assert_eq!(h.overflow, 0);
+    }
+
+    #[test]
     fn histogram_smoothing() {
         let mut h = Histogram::new(-1.0, 1.0, 4);
         h.push(0.0);
@@ -258,6 +300,29 @@ mod tests {
         assert_eq!(p.quantile(1.0), 100.0);
         assert!((p.quantile(0.5) - 50.0).abs() <= 1.0);
         assert!((p.quantile(0.99) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn quantile_survives_nan_in_the_sketch() {
+        // Regression: `partial_cmp().unwrap()` panicked the sort if a
+        // NaN ever entered the reservoir (poisoning the stats mutex in
+        // the server). total_cmp sorts NaN last; finite quantiles stay
+        // readable.
+        let mut p = Percentiles::new(16);
+        p.push(3.0);
+        p.push(f64::NAN);
+        p.push(1.0);
+        p.push(2.0);
+        assert_eq!(p.quantile(0.0), 1.0);
+        assert!(p.quantile(1.0).is_nan()); // sorted last, visible at q=1
+        let sorted = p.sorted_clone();
+        assert_eq!(&sorted[..3], &[1.0, 2.0, 3.0]);
+        assert!((quantile_sorted(&sorted[..3], 0.5) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_sorted_empty_is_finite() {
+        assert_eq!(quantile_sorted(&[], 0.5), 0.0);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Loopback integration tests for the HTTP front door: a real
+//! `HttpServer` over a real `Router` (artifact-free echo workers — the
+//! full batcher/stats/failure machinery, host-side compute), driven
+//! over 127.0.0.1 by hand-rolled requests and by the load generator.
+//! Everything here is std-only and runs on a fresh checkout.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use abfp::coordinator::loadgen::{self, Conn};
+use abfp::coordinator::{BatchPolicy, HttpServer, Router, ECHO_FAIL_SENTINEL};
+use abfp::json;
+
+/// Keep-alive client (the crate's own minimal HTTP client — the same
+/// framing code the load generator uses).
+fn connect(addr: SocketAddr) -> Conn {
+    Conn::open(&addr.to_string()).expect("connect")
+}
+
+fn echo_server(
+    in_elems: usize,
+    policy: BatchPolicy,
+    queue: usize,
+    delay: Duration,
+) -> (HttpServer, Arc<Router>) {
+    let router = Arc::new(
+        Router::start_echo(&[("echo".to_string(), in_elems)], policy, queue, delay)
+            .unwrap(),
+    );
+    let server = HttpServer::bind(router.clone(), "127.0.0.1:0").unwrap();
+    (server, router)
+}
+
+fn prom_value(metrics: &str, line_prefix: &str) -> f64 {
+    metrics
+        .lines()
+        .find(|l| l.starts_with(line_prefix))
+        .unwrap_or_else(|| panic!("no metric line starts with {line_prefix:?}"))
+        .rsplit(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .expect("metric value parses as f64")
+}
+
+#[test]
+fn loopback_end_to_end() {
+    let (mut server, _router) =
+        echo_server(8, BatchPolicy::new(4, 2), 256, Duration::ZERO);
+    let addr = server.addr();
+    let mut c = connect(addr);
+
+    // Liveness + roster (same keep-alive connection throughout).
+    let (status, body) = c.request("GET", "/healthz", "").unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+    let (status, body) = c.request("GET", "/v1/models", "").unwrap();
+    assert_eq!(status, 200);
+    let models = json::parse(&body).unwrap();
+    assert_eq!(
+        models.get("models").unwrap().as_arr().unwrap()[0]
+            .as_str()
+            .unwrap(),
+        "echo"
+    );
+
+    // Well-formed predict: the echo worker answers with the example
+    // itself, proving per-example routing through the batch assembly.
+    let input: Vec<f64> = (0..8).map(|i| i as f64 * 0.5).collect();
+    let req = format!(
+        r#"{{"data": [{}]}}"#,
+        input
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let (status, body) = c.request("POST", "/v1/models/echo:predict", &req).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = json::parse(&body).unwrap();
+    let out = &resp.get("outputs").unwrap().as_arr().unwrap()[0];
+    let data: Vec<f64> = out
+        .get("data")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(data, input);
+    assert!(resp.get("total_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(resp.get("batch_size").unwrap().as_f64().unwrap() >= 1.0);
+
+    // Malformed JSON -> 400 with an error body.
+    let (status, body) = c.request("POST", "/v1/models/echo:predict", "{oops").unwrap();
+    assert_eq!(status, 400);
+    assert!(json::parse(&body).unwrap().get("error").is_ok());
+
+    // Wrong-shaped tensor -> 400, and the worker is NOT wedged.
+    let (status, body) =
+        c.request("POST", "/v1/models/echo:predict", r#"{"data": [1, 2, 3]}"#).unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("input elements"), "{body}");
+    let (status, _) = c.request("POST", "/v1/models/echo:predict", &req).unwrap();
+    assert_eq!(status, 200, "worker wedged after a bad-shape request");
+
+    // Unknown model / route / method.
+    let (status, _) = c.request("POST", "/v1/models/nope:predict", &req).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = c.request("GET", "/bogus", "").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = c.request("PUT", "/v1/models/echo:predict", &req).unwrap();
+    assert_eq!(status, 405);
+
+    // Load generator: closed loop, concurrency 8, all well-formed
+    // requests must come back 200 with a generous queue.
+    let report = loadgen::run(&loadgen::LoadSpec {
+        addr: addr.to_string(),
+        model: "echo".to_string(),
+        in_elems: 8,
+        requests: 64,
+        concurrency: 8,
+        target_qps: 0.0,
+    })
+    .unwrap();
+    assert_eq!(report.sent, 64);
+    assert_eq!(report.ok, 64, "{}", report.render());
+    assert_eq!(report.transport_errors, 0);
+    assert!(report.qps > 0.0);
+    assert!(report.p50_ms.is_finite() && report.p95_ms.is_finite());
+    assert!(report.p95_ms >= report.p50_ms);
+
+    // /metrics: non-zero request counts, finite latency quantiles.
+    let (status, metrics) = c.request("GET", "/metrics", "").unwrap();
+    assert_eq!(status, 200);
+    let served = prom_value(&metrics, "abfp_requests_total{model=\"echo\"}");
+    assert!(served >= 66.0, "requests_total {served} < 66\n{metrics}");
+    let p50 = prom_value(&metrics, "abfp_latency_ms{model=\"echo\",quantile=\"0.5\"}");
+    let p95 =
+        prom_value(&metrics, "abfp_latency_ms{model=\"echo\",quantile=\"0.95\"}");
+    assert!(p50.is_finite() && p95.is_finite() && p50 >= 0.0 && p95 >= p50);
+    assert_eq!(
+        prom_value(&metrics, "abfp_failed_batches_total{model=\"echo\"}"),
+        0.0
+    );
+
+    // Graceful shutdown is idempotent and releases the port.
+    server.shutdown();
+    server.shutdown();
+}
+
+#[test]
+fn executor_failure_maps_to_500_and_worker_survives() {
+    let (_server, router) =
+        echo_server(4, BatchPolicy::new(4, 1), 64, Duration::ZERO);
+    let mut c = connect(_server.addr());
+
+    let poison = format!(
+        r#"{{"data": [{}, 0, 0, 0]}}"#,
+        (ECHO_FAIL_SENTINEL as f64) * 2.0
+    );
+    let (status, body) = c.request("POST", "/v1/models/echo:predict", &poison).unwrap();
+    assert_eq!(status, 500, "{body}");
+    assert!(body.contains("simulated device failure"), "{body}");
+
+    // The failure fails the batch, not the worker: the next request is
+    // served and the stats carry the failure.
+    let (status, _) =
+        c.request("POST", "/v1/models/echo:predict", r#"{"data": [1, 2, 3, 4]}"#).unwrap();
+    assert_eq!(status, 200);
+    let s = router.stats("echo").unwrap();
+    assert_eq!(s.failed_requests, 1);
+    assert_eq!(s.failed_batches, 1);
+    assert!(s.requests >= 1);
+}
+
+#[test]
+fn saturated_queue_answers_429_not_hangs() {
+    // Slow worker (40 ms per 1-request batch) over a 2-slot queue: a
+    // 24-request burst must split into 200s and 429s — every request
+    // gets an answer *now*, nothing blocks, and the server keeps
+    // serving afterwards.
+    let (_server, _router) = echo_server(
+        2,
+        BatchPolicy::new(1, 0),
+        2,
+        Duration::from_millis(40),
+    );
+    let report = loadgen::run(&loadgen::LoadSpec {
+        addr: _server.addr().to_string(),
+        model: "echo".to_string(),
+        in_elems: 2,
+        requests: 24,
+        concurrency: 24,
+        target_qps: 0.0,
+    })
+    .unwrap();
+    assert_eq!(report.sent, 24);
+    assert_eq!(
+        report.ok + report.throttled + report.client_errors + report.server_errors,
+        24 - report.transport_errors,
+        "{}",
+        report.render()
+    );
+    assert_eq!(report.transport_errors, 0, "{}", report.render());
+    assert!(report.ok >= 1, "{}", report.render());
+    assert!(report.throttled >= 1, "no 429 under saturation: {}", report.render());
+
+    // Still serving after the burst.
+    let mut c = connect(_server.addr());
+    let (status, _) =
+        c.request("POST", "/v1/models/echo:predict", r#"{"data": [0.5, 0.5]}"#).unwrap();
+    assert_eq!(status, 200);
+}
+
+#[test]
+fn open_loop_reports_target_pacing() {
+    // 20 requests at 200 qps should take ~100 ms of schedule; the
+    // report must count them all and produce ordered quantiles.
+    let (_server, _router) =
+        echo_server(4, BatchPolicy::new(8, 1), 128, Duration::ZERO);
+    let report = loadgen::run(&loadgen::LoadSpec {
+        addr: _server.addr().to_string(),
+        model: "echo".to_string(),
+        in_elems: 4,
+        requests: 20,
+        concurrency: 4,
+        target_qps: 200.0,
+    })
+    .unwrap();
+    assert_eq!(report.ok, 20, "{}", report.render());
+    assert!(report.wall_s >= 0.09, "open loop ran faster than its schedule");
+    assert!(report.qps <= 250.0, "pacing ignored: {}", report.render());
+}
