@@ -1,28 +1,47 @@
-//! Serving demo: the L3 coordinator under load.
+//! Serving demo: the L3 coordinator under load — artifact-free.
 //!
-//! Starts the router with two model workers (BERT + DLRM archetypes) on
-//! the simulated ABFP device, drives an open-loop request stream from
-//! multiple client threads, and reports throughput and latency
-//! percentiles — the serving-paper-style validation of the stack.
+//! Starts the router with two graph workers (BERT + DLRM archetypes)
+//! under a mixed per-layer numeric plan — FLOAT32 first/last layers,
+//! ABFP interior at gain 4 (the paper-shaped deployment) — drives an
+//! open-loop request stream from multiple client threads, and reports
+//! throughput and latency percentiles. Everything runs on a fresh
+//! checkout: the graphs are built by deterministic seeded builders and
+//! executed by the pure-Rust `GraphExecutor`, so no `make artifacts`
+//! step is needed.
 //!
-//!   make artifacts && cargo run --release --example serve_demo
+//!   cargo run --release --example serve_demo
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use abfp::abfp::DeviceConfig;
-use abfp::coordinator::{BatchPolicy, Router, WorkerConfig};
+use abfp::backend::BackendKind;
+use abfp::coordinator::{BatchPolicy, Router};
 use abfp::data::dataset_for;
+use abfp::graph::{GraphPlan, LayerPlan};
 use abfp::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     let models = vec!["bert".to_string(), "dlrm".to_string()];
-    let cfg = WorkerConfig::abfp(
-        DeviceConfig::new(128, (8, 8, 8), 8.0, 0.5),
-        BatchPolicy::new(32, 4),
-    );
-    println!("starting router: models {models:?}, ABFP tile 128 gain 8");
-    let router = Arc::new(Router::start("artifacts", "checkpoints", &models, cfg)?);
+    // FLOAT32 edges, ABFP interior (tile 128, gain 4) — the per-layer
+    // freedom that used to take a recompiled artifact is one value here.
+    let plan = GraphPlan::edges_float32(LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(128, (8, 8, 8), 4.0, 0.5),
+    ));
+    println!("starting graph router: models {models:?}");
+    println!("  plan: {}", plan.summary());
+    let router = Arc::new(Router::start_graph(
+        &models,
+        &plan,
+        BatchPolicy::new(32, 4)?,
+        1024,
+        0x5eed,
+        0,
+    )?);
+    for m in router.served_models() {
+        println!("  {m}: {}", router.model_meta(&m)?.to_string());
+    }
 
     const CLIENTS: usize = 4;
     const REQS_PER_CLIENT: usize = 64;

@@ -25,11 +25,15 @@ impl Args {
                 if let Some((k, v)) = body.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
                 } else {
-                    // `--key value` unless the next token is another flag
-                    // (then it's a boolean).
+                    // `--key value` unless the next token is another
+                    // flag (then `--key` is a boolean). A leading `-`
+                    // only makes the next token a flag when it is not a
+                    // negative number: `--gain -2` must parse as
+                    // `gain = -2`, never as `gain = true` plus a stray
+                    // positional `-2`.
                     let is_val = it
                         .peek()
-                        .map(|next| !next.starts_with("--"))
+                        .map(|next| !next.starts_with('-') || numeric_like(next))
                         .unwrap_or(false);
                     if is_val {
                         args.flags
@@ -137,15 +141,48 @@ impl Args {
         &self.positional
     }
 
-    /// Reject unknown flags (typo guard); `known` lists accepted keys.
+    /// Reject unknown flags and stray positionals (typo guard); `known`
+    /// lists accepted keys. A misspelled flag used to be ignored
+    /// silently — `--repeat 10` would run the default repeats without a
+    /// word — so every subcommand now checks its roster up front and
+    /// answers with the accepted flags and a usage hint. No subcommand
+    /// takes positional arguments, so any leftover token (e.g. the
+    /// `-tmp` of a mistyped `--out -tmp`, which is not a negative
+    /// number and therefore not a flag value) is an error too, never a
+    /// silent drop.
     pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        let cmd = if self.command.is_empty() {
+            "help".to_string()
+        } else {
+            self.command.clone()
+        };
         for k in self.flags.keys() {
             if !known.contains(&k.as_str()) {
-                bail!("unknown flag --{k}; accepted: {known:?}");
+                bail!(
+                    "unknown flag --{k} for {cmd:?}; accepted: {}\n(run `abfp help` for usage)",
+                    known
+                        .iter()
+                        .map(|f| format!("--{f}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
             }
+        }
+        if let Some(p) = self.positional.first() {
+            bail!(
+                "unexpected positional argument {p:?} for {cmd:?} \
+                 (a non-numeric value starting with '-' must be written --key=value)"
+            );
         }
         Ok(())
     }
+}
+
+/// Does a `-`-prefixed token look like a negative number (`-2`, `-.5`,
+/// `-1e-3`) rather than a flag? Exactly the values the typed accessors
+/// can parse.
+fn numeric_like(tok: &str) -> bool {
+    tok.len() > 1 && tok.starts_with('-') && tok[1..].parse::<f64>().is_ok()
 }
 
 #[cfg(test)]
@@ -214,10 +251,53 @@ mod tests {
     }
 
     #[test]
+    fn negative_numbers_are_values_not_flags() {
+        // Regression: a negative value after a flag must bind to the
+        // flag (`gain = -2`), not turn it into a boolean with a stray
+        // positional.
+        let a = parse("serve --gain -2 --batch 4");
+        assert_eq!(a.f32_or("gain", 8.0).unwrap(), -2.0);
+        assert_eq!(a.usize_or("batch", 0).unwrap(), 4);
+        assert!(a.positional().is_empty());
+        // Fractions and exponents too.
+        let a = parse("x --lo -.5 --eps -1e-3");
+        assert_eq!(a.f32_or("lo", 0.0).unwrap(), -0.5);
+        assert_eq!(a.f32_or("eps", 0.0).unwrap(), -1e-3);
+        // `--key=-2` keeps working through the `=` form.
+        assert_eq!(parse("x --gain=-2").f32_or("gain", 0.0).unwrap(), -2.0);
+        // A following single-dash non-number is NOT swallowed as a
+        // value: the flag stays boolean.
+        let a = parse("x --verbose -y");
+        assert!(a.bool("verbose"));
+        // And a following `--flag` still means boolean.
+        let a = parse("x --fast --gain 2");
+        assert!(a.bool("fast"));
+        assert_eq!(a.f32_or("gain", 0.0).unwrap(), 2.0);
+    }
+
+    #[test]
     fn unknown_flag_guard() {
         let a = parse("x --good 1 --bad 2");
-        assert!(a.check_known(&["good"]).is_err());
+        let err = a.check_known(&["good"]).unwrap_err();
+        assert!(err.to_string().contains("--bad"), "{err}");
+        assert!(err.to_string().contains("--good"), "{err}");
+        assert!(err.to_string().contains("abfp help"), "{err}");
         assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn stray_positionals_are_rejected() {
+        // `--out -tmp`: "-tmp" is not a negative number, so it becomes
+        // a positional — which must be an error, not a silent drop that
+        // leaves `out` set to the boolean "true".
+        let a = parse("sweep --out -tmp");
+        assert!(a.bool("out"));
+        let err = a.check_known(&["out"]).unwrap_err();
+        assert!(err.to_string().contains("-tmp"), "{err}");
+        assert!(err.to_string().contains("--key=value"), "{err}");
+        // Plain stray words are caught too.
+        let err = parse("serve extra").check_known(&[]).unwrap_err();
+        assert!(err.to_string().contains("extra"), "{err}");
     }
 
     #[test]

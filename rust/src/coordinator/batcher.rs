@@ -3,6 +3,8 @@
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
+use anyhow::{bail, Result};
+
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
@@ -13,11 +15,20 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
-    pub fn new(max_batch: usize, max_wait_ms: u64) -> BatchPolicy {
-        BatchPolicy {
+    /// Validated constructor: `max_batch == 0` is a config error, not a
+    /// policy. (It used to slip through and silently degrade the worker
+    /// to single-item "batches" — `collect_batch` always holds the
+    /// first request, so the cap never engaged and every device
+    /// execution ran at batch 1 while the caller believed it had
+    /// disabled batching entirely.)
+    pub fn new(max_batch: usize, max_wait_ms: u64) -> Result<BatchPolicy> {
+        if max_batch == 0 {
+            bail!("batch policy: max_batch must be >= 1 (got 0)");
+        }
+        Ok(BatchPolicy {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
-        }
+        })
     }
 }
 
@@ -55,9 +66,9 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let b = collect_batch(&rx, BatchPolicy::new(4, 50)).unwrap();
+        let b = collect_batch(&rx, BatchPolicy::new(4, 50).unwrap()).unwrap();
         assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = collect_batch(&rx, BatchPolicy::new(4, 50)).unwrap();
+        let b = collect_batch(&rx, BatchPolicy::new(4, 50).unwrap()).unwrap();
         assert_eq!(b, vec![4, 5, 6, 7]);
     }
 
@@ -66,7 +77,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(1).unwrap();
         let t0 = Instant::now();
-        let b = collect_batch(&rx, BatchPolicy::new(8, 30)).unwrap();
+        let b = collect_batch(&rx, BatchPolicy::new(8, 30).unwrap()).unwrap();
         assert_eq!(b, vec![1]);
         assert!(t0.elapsed() >= Duration::from_millis(25));
         drop(tx);
@@ -76,7 +87,17 @@ mod tests {
     fn none_on_shutdown() {
         let (tx, rx) = mpsc::channel::<u32>();
         drop(tx);
-        assert!(collect_batch(&rx, BatchPolicy::new(4, 10)).is_none());
+        assert!(collect_batch(&rx, BatchPolicy::new(4, 10).unwrap()).is_none());
+    }
+
+    #[test]
+    fn zero_max_batch_is_rejected_at_construction() {
+        // Regression: BatchPolicy::new(0, _) used to construct fine and
+        // quietly serve degenerate single-item batches (collect_batch
+        // always holds the first request). A 0 cap is a config error.
+        let err = BatchPolicy::new(0, 10).unwrap_err();
+        assert!(err.to_string().contains("max_batch"), "{err}");
+        assert!(BatchPolicy::new(1, 0).is_ok());
     }
 
     #[test]
@@ -89,7 +110,7 @@ mod tests {
             thread::sleep(Duration::from_millis(5));
             tx.send(2).unwrap();
         });
-        let b = collect_batch(&rx, BatchPolicy::new(3, 200)).unwrap();
+        let b = collect_batch(&rx, BatchPolicy::new(3, 200).unwrap()).unwrap();
         assert_eq!(b, vec![0, 1, 2]);
         sender.join().unwrap();
     }

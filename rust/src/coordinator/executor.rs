@@ -1,0 +1,312 @@
+//! [`ModelExecutor`]: the serving-side twin of
+//! [`NumericBackend`](crate::backend::NumericBackend).
+//!
+//! A worker thread owns exactly one executor: the router/batcher stack
+//! packs queued requests into a `(batch, in_elems)` activation, the
+//! executor turns it into model outputs, and the worker fans results
+//! back out. Three implementations ship in-tree:
+//!
+//! | executor                                  | compute                      | needs artifacts |
+//! |-------------------------------------------|------------------------------|-----------------|
+//! | [`EchoExecutor`]                          | identity (host)              | no              |
+//! | [`GraphExecutor`](crate::graph::GraphExecutor) | layer graph over numeric backends | no        |
+//! | [`PjrtExecutor`]                          | AOT artifact on PJRT         | yes             |
+//!
+//! Executors are **constructed on the worker thread** (the factory
+//! closure passed to the router is `Send`; the executor itself need
+//! not be — `PjrtExecutor` owns a thread-confined PJRT client). All
+//! startup cost (engine load, checkpoint read, weight staging) happens
+//! in the factory, before the worker reports ready; `execute` is the
+//! request hot path and stages nothing.
+
+use std::rc::Rc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::server::WorkerConfig;
+use crate::backend::{project_params, BackendKind};
+use crate::json::{self, Value};
+use crate::models;
+use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine, Executable, Manifest};
+use crate::tensor::Tensor;
+
+/// One executed batch: batched outputs (leading dim = `padded_batch`)
+/// plus the padding the caller must slice away. Artifact executors run
+/// a fixed compiled batch and zero-pad the tail; host executors return
+/// the request batch unpadded.
+pub struct Executed {
+    pub outputs: Vec<Tensor>,
+    pub padded_batch: usize,
+}
+
+/// A model execution engine behind the serving worker loop.
+///
+/// Contract: the worker packs `b` requests (`1 <= b <= max_batch()`)
+/// into a `(pack_rows(b), in_elems)` FLOAT32 tensor — rows `b..` are
+/// zero padding, so executors that need a fixed device batch get it
+/// without repacking — and hands it to `execute` by value. `execute`
+/// returns every model output batched over the leading dimension
+/// (`Executed::padded_batch` rows; scalar/global outputs may omit the
+/// batch dimension — the worker shares those across the batch). An
+/// `Err` fails the *batch*, never the worker: the loop answers every
+/// waiting client with the cause and keeps serving.
+pub trait ModelExecutor {
+    /// Short execution-engine identifier (`echo`, `graph`, `pjrt`).
+    fn kind(&self) -> &'static str;
+
+    /// Flat input elements per example — the router validates request
+    /// shapes against this before they can reach the batcher.
+    fn in_elems(&self) -> usize;
+
+    /// Largest request count per executed batch (the worker clamps its
+    /// batch policy to this). Artifact executors are bounded by their
+    /// compiled batch size.
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Rows the worker allocates when packing a `b`-request batch
+    /// (>= `b`; artifact executors return their compiled batch so the
+    /// padding is packed once, directly into the device layout).
+    fn pack_rows(&self, b: usize) -> usize {
+        b
+    }
+
+    /// Run one packed batch of `b` real examples.
+    fn execute(&mut self, b: usize, x: Tensor) -> Result<Executed>;
+
+    /// Machine-readable metadata for `GET /v1/models` and the serve
+    /// startup log (executor kind, shapes, numeric plan, ...).
+    fn describe(&self) -> Value;
+}
+
+/// Fault-injection sentinel for [`EchoExecutor`] workers: an example
+/// whose first element is at or above this value simulates an executor
+/// failure for its whole batch.
+pub const ECHO_FAIL_SENTINEL: f32 = 1e30;
+
+/// The artifact-free echo executor: output 0 of each example is the
+/// example itself, so clients can verify per-example routing through
+/// the batch assembly. `delay` simulates per-batch device time; the
+/// [`ECHO_FAIL_SENTINEL`] exercises the executor-failure path.
+pub struct EchoExecutor {
+    in_elems: usize,
+    delay: Duration,
+}
+
+impl EchoExecutor {
+    pub fn new(in_elems: usize, delay: Duration) -> Result<EchoExecutor> {
+        if in_elems == 0 {
+            bail!("echo executor: in_elems must be >= 1");
+        }
+        Ok(EchoExecutor { in_elems, delay })
+    }
+}
+
+impl ModelExecutor for EchoExecutor {
+    fn kind(&self) -> &'static str {
+        "echo"
+    }
+
+    fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    fn execute(&mut self, b: usize, x: Tensor) -> Result<Executed> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        for i in 0..b {
+            if x.data()[i * self.in_elems] >= ECHO_FAIL_SENTINEL {
+                bail!("simulated device failure (echo sentinel)");
+            }
+        }
+        Ok(Executed {
+            outputs: vec![x],
+            padded_batch: b,
+        })
+    }
+
+    fn describe(&self) -> Value {
+        json::obj(vec![
+            ("executor", json::s("echo")),
+            ("in_elems", json::num(self.in_elems as f64)),
+        ])
+    }
+}
+
+/// The PJRT-artifact executor: compiles the model's serving artifact
+/// once, pre-marshals the (possibly backend-projected) parameters, and
+/// runs fixed-batch executions, padding the tail.
+pub struct PjrtExecutor {
+    model: String,
+    cfg: WorkerConfig,
+    // Owns the thread-confined PJRT client the executable runs on.
+    _engine: Engine,
+    exe: Rc<Executable>,
+    param_lits: Vec<xla::Literal>,
+    input_shape: Vec<usize>,
+    in_elems: usize,
+    /// The artifact's compiled batch size.
+    batch: usize,
+    noise_seed: u64,
+}
+
+impl PjrtExecutor {
+    /// Engine + compile + checkpoint + weight staging — everything that
+    /// used to live at the top of the worker loop. Must run on the
+    /// thread that will call `execute` (`PjRtClient` is `Rc`-based).
+    pub fn new(
+        artifacts_dir: &str,
+        ckpt_dir: &str,
+        model: &str,
+        cfg: WorkerConfig,
+    ) -> Result<PjrtExecutor> {
+        let engine = Engine::new(Manifest::load(artifacts_dir)?)?;
+        let info = engine.manifest.model(model)?.clone();
+        let params: Vec<Tensor> = {
+            let path = format!("{ckpt_dir}/{model}.ckpt");
+            match models::load_checkpoint(&path) {
+                Ok(named) => named.into_iter().map(|(_, t)| t).collect(),
+                Err(_) => models::init_params(&engine, &info, 7)?,
+            }
+        };
+        let dev = cfg.device_or_default();
+        // Pick the executable and stage the weights for the serving
+        // backend — once, at startup, never on the request path (the
+        // paper: weights converted to the device format once and stored
+        // on the array).
+        let (art, params) = match cfg.backend {
+            BackendKind::Float32 => (models::art_fwd_f32(model), params),
+            BackendKind::Abfp => (models::art_fwd_abfp(model, dev.n), params),
+            BackendKind::Fixed | BackendKind::Bfp => {
+                let mut backend = cfg.backend.build(dev, 0);
+                backend.set_threads(cfg.threads);
+                eprintln!(
+                    "worker {model}: pre-staging {} params onto backend {}",
+                    params.len(),
+                    backend.config_json().to_string()
+                );
+                (
+                    models::art_fwd_f32(model),
+                    project_params(backend.as_ref(), &params)?,
+                )
+            }
+        };
+        let exe = engine.executable(&art)?;
+        // Pre-marshal parameter literals once; they are identical for
+        // every request.
+        let param_lits: Vec<xla::Literal> =
+            params.iter().map(lit_f32).collect::<Result<_>>()?;
+        Ok(PjrtExecutor {
+            model: model.to_string(),
+            cfg,
+            _engine: engine,
+            exe,
+            param_lits,
+            in_elems: info.input_shape.iter().product(),
+            input_shape: info.input_shape,
+            batch: info.batch_eval,
+            noise_seed: 0x5e12_7e00,
+        })
+    }
+}
+
+impl ModelExecutor for PjrtExecutor {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn in_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn pack_rows(&self, _b: usize) -> usize {
+        // The worker packs straight into the compiled device batch
+        // (zero-padded tail) — no repack on the request path.
+        self.batch
+    }
+
+    fn execute(&mut self, _b: usize, x: Tensor) -> Result<Executed> {
+        // (self.batch, in_elems) -> (self.batch, *input_shape): a
+        // reshape of the already-padded pack, no copy.
+        let mut xshape = vec![self.batch];
+        xshape.extend(&self.input_shape);
+        let xp = x.reshape(&xshape)?;
+
+        // Weights were marshalled once at startup; only the dynamic
+        // inputs are created per batch (zero-copy via borrowed args).
+        let mut dyn_lits: Vec<xla::Literal> = vec![lit_f32(&xp)?];
+        if self.cfg.backend == BackendKind::Abfp {
+            let d = self.cfg.device_or_default();
+            self.noise_seed = self.noise_seed.wrapping_add(1);
+            dyn_lits.push(lit_key(self.noise_seed));
+            dyn_lits.push(lit_scalars(d.gain, d.bits_w, d.bits_x, d.bits_y));
+            dyn_lits.push(xla::Literal::scalar(d.noise_lsb));
+        }
+        let args: Vec<&xla::Literal> =
+            self.param_lits.iter().chain(dyn_lits.iter()).collect();
+        let outs = self.exe.run(&args)?;
+        let outputs: Vec<Tensor> = outs
+            .iter()
+            .map(to_tensor)
+            .collect::<Result<_>>()
+            .map_err(|e| anyhow::anyhow!("output unmarshal failed: {e}"))?;
+        Ok(Executed {
+            outputs,
+            padded_batch: self.batch,
+        })
+    }
+
+    fn describe(&self) -> Value {
+        json::obj(vec![
+            ("executor", json::s("pjrt")),
+            ("model", json::s(&self.model)),
+            ("in_elems", json::num(self.in_elems as f64)),
+            ("compiled_batch", json::num(self.batch as f64)),
+            (
+                "backend",
+                self.cfg
+                    .backend
+                    .build(self.cfg.device_or_default(), 0)
+                    .config_json(),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn echo_roundtrips_and_reports() {
+        let mut e = EchoExecutor::new(3, Duration::ZERO).unwrap();
+        assert_eq!(e.kind(), "echo");
+        assert_eq!(e.in_elems(), 3);
+        assert_eq!(e.max_batch(), usize::MAX);
+        assert_eq!(e.pack_rows(2), 2);
+        let x = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let out = e.execute(2, x.clone()).unwrap();
+        assert_eq!(out.padded_batch, 2);
+        assert_eq!(out.outputs[0], x);
+        assert!(e.describe().to_string().contains("echo"));
+        assert!(EchoExecutor::new(0, Duration::ZERO).is_err());
+    }
+
+    #[test]
+    fn echo_sentinel_fails_the_batch() {
+        let mut e = EchoExecutor::new(2, Duration::ZERO).unwrap();
+        // The sentinel only triggers on element 0 of an example.
+        let ok = Tensor::new(&[1, 2], vec![0.0, ECHO_FAIL_SENTINEL]).unwrap();
+        assert!(e.execute(1, ok).is_ok());
+        let bad = Tensor::new(&[2, 2], vec![0.0, 0.0, ECHO_FAIL_SENTINEL, 0.0]).unwrap();
+        let err = e.execute(2, bad).unwrap_err();
+        assert!(err.to_string().contains("simulated device failure"), "{err}");
+    }
+}

@@ -8,7 +8,10 @@
 //!   `{"data": [...], "shape": [...]?}` (one example; `shape` defaults
 //!   to flat). 200 answers carry per-example `outputs`, `queue_ms`,
 //!   `total_ms`, `batch_size`.
-//! * `GET /v1/models` — the served-model roster.
+//! * `GET /v1/models` — the served-model roster (`models`, a name
+//!   array) plus per-model executor metadata (`detail`: executor kind,
+//!   shapes; graph workers add layer count and the per-layer numeric
+//!   plan).
 //! * `GET /healthz` — liveness (`ok`).
 //! * `GET /metrics` — Prometheus text format from [`ServerStats`].
 //!
@@ -512,16 +515,24 @@ fn error_body(msg: &str) -> String {
 }
 
 fn models_body(router: &Router) -> String {
-    json::obj(vec![(
-        "models",
-        json::arr(
-            router
-                .served_models()
-                .iter()
-                .map(|m| json::s(m))
-                .collect(),
+    let names = router.served_models();
+    // `models` stays a plain name array (the stable roster contract
+    // pinned by tests/http.rs); `detail` carries each worker executor's
+    // self-description — kind, shapes, and for graph workers the layer
+    // count and per-layer numeric plan.
+    let mut detail = std::collections::BTreeMap::new();
+    for m in &names {
+        if let Ok(meta) = router.model_meta(m) {
+            detail.insert(m.clone(), meta);
+        }
+    }
+    json::obj(vec![
+        (
+            "models",
+            json::arr(names.iter().map(|m| json::s(m)).collect()),
         ),
-    )])
+        ("detail", json::Value::Obj(detail)),
+    ])
     .to_string()
 }
 

@@ -14,14 +14,22 @@
 //!                           -> oneshot Result<Response>        + PJRT executable)
 //! ```
 //!
-//! `PjRtClient` is thread-confined (Rc internals), so each ModelWorker
-//! owns its Engine on a dedicated thread — the same discipline as one
-//! accelerator stream per model replica. The batcher groups requests up
-//! to the artifact's compiled batch size or a deadline, pads the tail,
-//! executes once, and fans results back out; padding rows cost nothing
-//! extra because the artifact batch is fixed either way. An executor
-//! failure fails the batch, not the worker: every waiting client gets an
-//! error response and the failure is counted in [`ServerStats`].
+//! Every worker runs one loop (`worker_main`) generic over
+//! [`ModelExecutor`] — the serving-side twin of
+//! [`NumericBackend`](crate::backend::NumericBackend). Three engines
+//! plug in: [`EchoExecutor`] (identity compute, fault injection),
+//! [`GraphExecutor`](crate::graph::GraphExecutor) (artifact-free
+//! pure-Rust layer-graph inference with per-layer numeric plans —
+//! [`Router::start_graph`]), and [`PjrtExecutor`] (AOT artifacts).
+//! `PjRtClient` is thread-confined (Rc internals), so executors are
+//! constructed by a factory *on* their dedicated worker thread — the
+//! same discipline as one accelerator stream per model replica. The
+//! batcher groups requests up to the executor's batch capacity or a
+//! deadline, executes once, and fans results back out (the PJRT
+//! executor pads to its compiled batch; padding rows cost nothing extra
+//! because the artifact batch is fixed either way). An executor failure
+//! fails the batch, not the worker: every waiting client gets an error
+//! response and the failure is counted in [`ServerStats`].
 //!
 //! [`HttpServer`] speaks dependency-free HTTP/1.1 over
 //! `std::net::TcpListener` (`POST /v1/models/{m}:predict`,
@@ -30,13 +38,16 @@
 //! closed-loop over loopback and reports QPS / p50 / p95.
 
 mod batcher;
+mod executor;
 mod http;
 pub mod loadgen;
 mod server;
 
 pub use batcher::{collect_batch, BatchPolicy};
+pub use executor::{
+    EchoExecutor, Executed, ModelExecutor, PjrtExecutor, ECHO_FAIL_SENTINEL,
+};
 pub use http::HttpServer;
 pub use server::{
     Request, Response, Router, ServerStats, SubmitError, WorkerConfig,
-    ECHO_FAIL_SENTINEL,
 };

@@ -7,15 +7,20 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 use super::batcher::{collect_batch, BatchPolicy};
+use super::executor::{EchoExecutor, ModelExecutor, PjrtExecutor};
 use crate::abfp::DeviceConfig;
-use crate::backend::{project_params, BackendKind};
-use crate::models;
-use crate::runtime::{lit_f32, lit_key, lit_scalars, to_tensor, Engine, Manifest};
+use crate::backend::BackendKind;
+use crate::graph::{builders, GraphExecutor, GraphPlan};
+use crate::json::Value;
 use crate::stats::{quantile_sorted, Percentiles, Running};
 use crate::tensor::Tensor;
+
+/// Request queue depth for artifact-backed and graph workers (the
+/// bound [`Router::try_submit`]'s backpressure trips on).
+const DEFAULT_QUEUE: usize = 1024;
 
 /// One inference request: a single example for a named model. The
 /// response channel carries a `Result`: an executor failure reaches the
@@ -37,12 +42,14 @@ pub struct Response {
     pub batch_size: usize,
 }
 
-/// Worker configuration: which numeric backend serves the model.
+/// PJRT worker configuration: which numeric backend serves the model.
 ///
 /// `float32` and `abfp` run their dedicated executables; `fixed` and
 /// `bfp` pre-stage the model's parameters onto the backend's grid at
 /// worker startup (stage once, serve forever — never per batch) and run
-/// the FLOAT32 executable on the projected weights.
+/// the FLOAT32 executable on the projected weights. (The artifact-free
+/// twin is [`Router::start_graph`], whose per-layer assignments come
+/// from a [`GraphPlan`] instead of one process-wide backend.)
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerConfig {
     /// Number-format backend serving this worker.
@@ -179,6 +186,14 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// What a worker reports once its executor is constructed: the
+/// validated input width plus the executor's self-description (served
+/// through `GET /v1/models`).
+struct WorkerReady {
+    in_elems: usize,
+    meta: Value,
+}
+
 /// The request router: owns one worker thread per served model.
 pub struct Router {
     workers: BTreeMap<String, WorkerHandle>,
@@ -191,13 +206,49 @@ struct WorkerHandle {
     /// validated against it in [`Router::submit`] so a malformed shape
     /// is an error to the caller, never a panic inside the worker.
     in_elems: usize,
+    /// The executor's startup self-description (kind, shapes, plan).
+    meta: Value,
     join: Option<JoinHandle<()>>,
 }
 
+/// Spawn one worker thread around an executor factory. The factory runs
+/// **on the worker thread** (PJRT clients are thread-confined) and its
+/// result is reported through the ready channel before any request can
+/// be routed.
+fn spawn_worker<E, F>(
+    name: &str,
+    queue: usize,
+    policy: BatchPolicy,
+    factory: F,
+) -> Result<WorkerHandle>
+where
+    E: ModelExecutor + 'static,
+    F: FnOnce() -> Result<E> + Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<Request>(queue.max(1));
+    let stats = Arc::new(Mutex::new(WorkerStats::new()));
+    let stats_c = stats.clone();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<WorkerReady>>();
+    let name_c = name.to_string();
+    let join = std::thread::Builder::new()
+        .name(format!("abfp-worker-{name}"))
+        .spawn(move || worker_main(&name_c, factory, policy, rx, stats_c, ready_tx))?;
+    let ready = ready_rx
+        .recv()
+        .map_err(|_| anyhow!("worker {name} died during startup"))??;
+    Ok(WorkerHandle {
+        tx,
+        stats,
+        in_elems: ready.in_elems,
+        meta: ready.meta,
+        join: Some(join),
+    })
+}
+
 impl Router {
-    /// Start a router serving `model_names` from `artifacts_dir`, using
-    /// pretrained checkpoints in `ckpt_dir` when present (init params
-    /// otherwise — useful for latency benches).
+    /// Start a router serving `model_names` from `artifacts_dir` on the
+    /// PJRT executor, using pretrained checkpoints in `ckpt_dir` when
+    /// present (init params otherwise — useful for latency benches).
     pub fn start(
         artifacts_dir: &str,
         ckpt_dir: &str,
@@ -206,30 +257,39 @@ impl Router {
     ) -> Result<Router> {
         let mut workers = BTreeMap::new();
         for name in model_names {
-            let (tx, rx) = mpsc::sync_channel::<Request>(1024);
-            let stats = Arc::new(Mutex::new(WorkerStats::new()));
-            let stats_c = stats.clone();
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
-            let name_c = name.clone();
-            let dir = artifacts_dir.to_string();
-            let ckpt = ckpt_dir.to_string();
-            let join = std::thread::Builder::new()
-                .name(format!("abfp-worker-{name}"))
-                .spawn(move || {
-                    worker_main(&dir, &ckpt, &name_c, cfg, rx, stats_c, ready_tx)
-                })?;
-            let in_elems = ready_rx
-                .recv()
-                .map_err(|_| anyhow!("worker {name} died during startup"))??;
-            workers.insert(
-                name.clone(),
-                WorkerHandle {
-                    tx,
-                    stats,
-                    in_elems,
-                    join: Some(join),
-                },
-            );
+            let (dir, ckpt, model) =
+                (artifacts_dir.to_string(), ckpt_dir.to_string(), name.clone());
+            let handle = spawn_worker(name, DEFAULT_QUEUE, cfg.policy, move || {
+                PjrtExecutor::new(&dir, &ckpt, &model, cfg)
+            })?;
+            workers.insert(name.clone(), handle);
+        }
+        Ok(Router { workers })
+    }
+
+    /// Artifact-free router over the pure-Rust [`GraphExecutor`]: each
+    /// model is built by its deterministic seeded graph builder and
+    /// served under `plan`'s per-layer numeric assignments — real
+    /// multi-layer inference on a fresh checkout, no `ARTIFACTS_DIR`.
+    /// `seed` keys the ABFP ADC noise streams; `threads` bounds each
+    /// worker's simulator pool (0 = process default; scheduling only,
+    /// results are bit-identical for every value).
+    pub fn start_graph(
+        model_names: &[String],
+        plan: &GraphPlan,
+        policy: BatchPolicy,
+        queue: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<Router> {
+        let mut workers = BTreeMap::new();
+        for name in model_names {
+            let (model, plan_c) = (name.clone(), plan.clone());
+            let handle = spawn_worker(name, queue, policy, move || {
+                let graph = crate::graph::build(&model, builders::GRAPH_SEED)?;
+                GraphExecutor::new(graph, &plan_c, seed, threads)
+            })?;
+            workers.insert(name.clone(), handle);
         }
         Ok(Router { workers })
     }
@@ -313,20 +373,31 @@ impl Router {
         Ok(worker.stats.lock().unwrap().snapshot())
     }
 
+    /// The worker executor's startup self-description (kind, shapes,
+    /// layer count, numeric plan — whatever the executor reports).
+    pub fn model_meta(&self, model: &str) -> Result<Value> {
+        let worker = self
+            .workers
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model:?} is not served"))?;
+        Ok(worker.meta.clone())
+    }
+
     pub fn served_models(&self) -> Vec<String> {
         self.workers.keys().cloned().collect()
     }
 
     /// Artifact-free router for integration tests and `bench-serve`:
-    /// each `(name, in_elems)` pair is served by a host-side *echo*
-    /// worker that runs the real batcher / stats / failure machinery
-    /// but computes outputs on the host — output 0 of each example is
-    /// the example itself, so clients can verify per-example routing
+    /// each `(name, in_elems)` pair is served by a host-side
+    /// [`EchoExecutor`] — the real batcher / stats / failure machinery
+    /// with identity compute, so output 0 of each example is the
+    /// example itself and clients can verify per-example routing
     /// through the batch assembly. `queue` bounds the request channel
     /// (the backpressure point [`Router::try_submit`] trips on) and
     /// `exec_delay` simulates per-batch device time. An example whose
-    /// first element is ≥ [`ECHO_FAIL_SENTINEL`] makes its whole batch
-    /// fail "on device", exercising the executor-failure path.
+    /// first element is >= [`super::ECHO_FAIL_SENTINEL`] makes its
+    /// whole batch fail "on device", exercising the executor-failure
+    /// path.
     pub fn start_echo(
         models: &[(String, usize)],
         policy: BatchPolicy,
@@ -335,61 +406,13 @@ impl Router {
     ) -> Result<Router> {
         let mut workers = BTreeMap::new();
         for (name, in_elems) in models {
-            if *in_elems == 0 {
-                bail!("echo model {name:?}: in_elems must be >= 1");
-            }
-            let (tx, rx) = mpsc::sync_channel::<Request>(queue.max(1));
-            let stats = Arc::new(Mutex::new(WorkerStats::new()));
-            let stats_c = stats.clone();
-            let (elems, pol) = (*in_elems, policy);
-            let join = std::thread::Builder::new()
-                .name(format!("abfp-echo-{name}"))
-                .spawn(move || echo_worker_main(elems, pol, exec_delay, rx, stats_c))?;
-            workers.insert(
-                name.clone(),
-                WorkerHandle {
-                    tx,
-                    stats,
-                    in_elems: *in_elems,
-                    join: Some(join),
-                },
-            );
+            let elems = *in_elems;
+            let handle = spawn_worker(name, queue, policy, move || {
+                EchoExecutor::new(elems, exec_delay)
+            })?;
+            workers.insert(name.clone(), handle);
         }
         Ok(Router { workers })
-    }
-}
-
-/// Fault-injection sentinel for [`Router::start_echo`] workers: an
-/// example whose first element is at or above this value simulates an
-/// executor failure for its whole batch.
-pub const ECHO_FAIL_SENTINEL: f32 = 1e30;
-
-/// The echo worker: the serving loop of [`worker_main`] minus PJRT —
-/// same batcher, same stats, same failure fan-out.
-fn echo_worker_main(
-    in_elems: usize,
-    policy: BatchPolicy,
-    exec_delay: Duration,
-    rx: Receiver<Request>,
-    stats: Arc<Mutex<WorkerStats>>,
-) {
-    while let Some(batch) = collect_batch(&rx, policy) {
-        let t_exec = Instant::now();
-        if !exec_delay.is_zero() {
-            std::thread::sleep(exec_delay);
-        }
-        if batch.iter().any(|r| r.x.data()[0] >= ECHO_FAIL_SENTINEL) {
-            fail_batch(batch, "simulated device failure (echo sentinel)", &stats);
-            continue;
-        }
-        let b = batch.len();
-        let mut data = vec![0.0f32; b * in_elems];
-        for (i, req) in batch.iter().enumerate() {
-            data[i * in_elems..(i + 1) * in_elems].copy_from_slice(req.x.data());
-        }
-        let outs = vec![Tensor::new(&[b, in_elems], data).unwrap()];
-        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-        finish_batch(batch, &outs, b, exec_ms, &stats);
     }
 }
 
@@ -408,123 +431,71 @@ impl Drop for Router {
     }
 }
 
-/// The device thread: engine + compile + batch loop.
-#[allow(clippy::too_many_arguments)]
-fn worker_main(
-    artifacts_dir: &str,
-    ckpt_dir: &str,
+/// The worker loop, generic over the execution engine: construct the
+/// executor (factory runs here, on the worker thread), report ready,
+/// then batch -> pack -> execute -> fan out until the channel closes.
+/// Echo, graph, and PJRT serving all flow through this one loop — same
+/// batcher, same stats, same failure fan-out.
+fn worker_main<E: ModelExecutor>(
     model: &str,
-    cfg: WorkerConfig,
+    factory: impl FnOnce() -> Result<E>,
+    policy: BatchPolicy,
     rx: Receiver<Request>,
     stats: Arc<Mutex<WorkerStats>>,
-    ready: Sender<Result<usize>>,
+    ready: Sender<Result<WorkerReady>>,
 ) {
-    let setup = || -> Result<_> {
-        let engine = Engine::new(Manifest::load(artifacts_dir)?)?;
-        let info = engine.manifest.model(model)?.clone();
-        let params: Vec<Tensor> = {
-            let path = format!("{ckpt_dir}/{model}.ckpt");
-            match models::load_checkpoint(&path) {
-                Ok(named) => named.into_iter().map(|(_, t)| t).collect(),
-                Err(_) => models::init_params(&engine, &info, 7)?,
-            }
-        };
-        let dev = cfg.device_or_default();
-        // Pick the executable and stage the weights for the serving
-        // backend — once, at startup, never on the request path (the
-        // paper: weights converted to the device format once and
-        // stored on the array).
-        let (art, params) = match cfg.backend {
-            BackendKind::Float32 => (models::art_fwd_f32(model), params),
-            BackendKind::Abfp => (models::art_fwd_abfp(model, dev.n), params),
-            BackendKind::Fixed | BackendKind::Bfp => {
-                let mut backend = cfg.backend.build(dev, 0);
-                backend.set_threads(cfg.threads);
-                eprintln!(
-                    "worker {model}: pre-staging {} params onto backend {}",
-                    params.len(),
-                    backend.config_json().to_string()
-                );
-                (
-                    models::art_fwd_f32(model),
-                    project_params(backend.as_ref(), &params)?,
-                )
-            }
-        };
-        let exe = engine.executable(&art)?;
-        // Pre-marshal parameter literals once; they are identical for
-        // every request.
-        let param_lits: Vec<xla::Literal> =
-            params.iter().map(lit_f32).collect::<Result<_>>()?;
-        Ok((engine, info, param_lits, exe))
-    };
-    let (_engine, info, param_lits, exe) = match setup() {
-        Ok(v) => v,
+    let mut exec = match factory() {
+        Ok(e) => e,
         Err(e) => {
             ready.send(Err(e)).ok();
             return;
         }
     };
-
-    let b = info.batch_eval;
-    let in_elems: usize = info.input_shape.iter().product();
+    let in_elems = exec.in_elems();
     // The router validates request shapes against this before they can
     // reach the batch assembly below.
-    ready.send(Ok(in_elems)).ok();
+    ready
+        .send(Ok(WorkerReady {
+            in_elems,
+            meta: exec.describe(),
+        }))
+        .ok();
+    // Never assemble more requests than the executor can take at once
+    // (PJRT artifacts compile a fixed batch).
     let policy = BatchPolicy {
-        max_batch: cfg.policy.max_batch.min(b),
-        ..cfg.policy
+        max_batch: policy.max_batch.min(exec.max_batch()),
+        ..policy
     };
-    let mut noise_seed = 0x5e12_7e00u64;
 
     while let Some(batch) = collect_batch(&rx, policy) {
         let t_exec = Instant::now();
-        // Assemble the padded device batch.
-        let mut xshape = vec![b];
-        xshape.extend(&info.input_shape);
-        let mut xdata = vec![0.0f32; b * in_elems];
+        // Pack the request batch once, directly into the executor's
+        // target layout: (pack_rows(b), in_elems), one row per example,
+        // zero-padded tail (PJRT pads to its compiled batch here, so
+        // nothing repacks downstream).
+        let b = batch.len();
+        let rows = exec.pack_rows(b).max(b);
+        let mut xdata = vec![0.0f32; rows * in_elems];
         for (i, req) in batch.iter().enumerate() {
             xdata[i * in_elems..(i + 1) * in_elems].copy_from_slice(req.x.data());
         }
-        let x = Tensor::new(&xshape, xdata).unwrap();
+        let x = Tensor::new(&[rows, in_elems], xdata).unwrap();
 
-        // Weights were marshalled once at startup; only the dynamic
-        // inputs are created per batch (zero-copy via borrowed args).
-        let x_lit = lit_f32(&x).unwrap();
-        let mut dyn_lits: Vec<xla::Literal> = vec![x_lit];
-        if cfg.backend == BackendKind::Abfp {
-            let d = cfg.device_or_default();
-            noise_seed = noise_seed.wrapping_add(1);
-            dyn_lits.push(lit_key(noise_seed));
-            dyn_lits.push(lit_scalars(d.gain, d.bits_w, d.bits_x, d.bits_y));
-            dyn_lits.push(xla::Literal::scalar(d.noise_lsb));
-        }
-        let args: Vec<&xla::Literal> =
-            param_lits.iter().chain(dyn_lits.iter()).collect();
         // An executor failure fails the *batch*, never the worker: every
         // waiting client gets an error response and the stats record it.
         // (The old `continue` dropped the whole batch — clients saw only
         // a bare channel-closed error and the requests vanished from the
         // serving stats.)
-        let outs = match exe.run(&args) {
-            Ok(o) => o,
+        match exec.execute(b, x) {
+            Ok(executed) => {
+                let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+                finish_batch(batch, &executed.outputs, executed.padded_batch, exec_ms, &stats);
+            }
             Err(e) => {
                 eprintln!("worker {model}: execute failed: {e}");
                 fail_batch(batch, &format!("execute failed: {e}"), &stats);
-                continue;
             }
-        };
-        let out_tensors: Result<Vec<Tensor>> = outs.iter().map(to_tensor).collect();
-        let out_tensors = match out_tensors {
-            Ok(t) => t,
-            Err(e) => {
-                eprintln!("worker {model}: output unmarshal failed: {e}");
-                fail_batch(batch, &format!("output unmarshal failed: {e}"), &stats);
-                continue;
-            }
-        };
-        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-        finish_batch(batch, &out_tensors, b, exec_ms, &stats);
+        }
     }
 }
 
@@ -616,13 +587,14 @@ fn slice_example(t: &Tensor, i: usize, batch: usize) -> Tensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::ECHO_FAIL_SENTINEL;
 
     /// A router over one echo worker (no PJRT/artifacts): exercises the
     /// submit/validate/batch/respond path in isolation.
     fn echo_router(in_elems: usize) -> Router {
         Router::start_echo(
             &[("echo".to_string(), in_elems)],
-            BatchPolicy::new(4, 1),
+            BatchPolicy::new(4, 1).unwrap(),
             16,
             Duration::ZERO,
         )
@@ -652,6 +624,7 @@ mod tests {
     fn unknown_model_is_an_error() {
         let router = echo_router(4);
         assert!(router.submit("nope", Tensor::zeros(&[4])).is_err());
+        assert!(router.model_meta("nope").is_err());
         assert_eq!(
             router.try_submit("nope", Tensor::zeros(&[4])).unwrap_err(),
             SubmitError::UnknownModel("nope".to_string())
@@ -663,13 +636,21 @@ mod tests {
     }
 
     #[test]
+    fn worker_meta_reports_the_executor() {
+        let router = echo_router(4);
+        let meta = router.model_meta("echo").unwrap().to_string();
+        assert!(meta.contains("\"executor\":\"echo\""), "{meta}");
+        assert!(meta.contains("\"in_elems\":4"), "{meta}");
+    }
+
+    #[test]
     fn try_submit_reports_busy_on_a_full_queue() {
         // A slow worker (50 ms per batch of 1) over a 2-slot queue: the
         // burst below must overflow into Busy instead of blocking the
         // submitting thread — the 429 backpressure contract.
         let router = Router::start_echo(
             &[("echo".to_string(), 2)],
-            BatchPolicy::new(1, 0),
+            BatchPolicy::new(1, 0).unwrap(),
             2,
             Duration::from_millis(50),
         )
@@ -694,7 +675,7 @@ mod tests {
 
     #[test]
     fn executor_failure_answers_every_request_and_is_counted() {
-        // Regression: on exe.run failure the worker `continue`d — the
+        // Regression: on executor failure the worker `continue`d — the
         // whole batch vanished, waiting clients got a bare
         // channel-closed error, and the stats never recorded it. Every
         // request must receive an error response and the failure must
@@ -740,6 +721,38 @@ mod tests {
         let s = router.stats("echo").unwrap();
         assert_eq!(s.failed_requests, 1);
         assert_eq!(s.failed_batches, 1);
+        assert_eq!(s.requests, 1);
+    }
+
+    #[test]
+    fn graph_router_serves_real_inference_without_artifacts() {
+        // The tentpole end to end at router level: a mixed per-layer
+        // plan (FLOAT32 edges + ABFP interior) serves a real multi-layer
+        // model on a fresh checkout — no ARTIFACTS_DIR anywhere.
+        use crate::graph::{build, builders::GRAPH_SEED, LayerPlan};
+        let plan = GraphPlan::edges_float32(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+        ));
+        let router = Router::start_graph(
+            &["dlrm".to_string()],
+            &plan,
+            BatchPolicy::new(8, 1).unwrap(),
+            64,
+            7,
+            1,
+        )
+        .unwrap();
+        let meta = router.model_meta("dlrm").unwrap().to_string();
+        assert!(meta.contains("\"executor\":\"graph\""), "{meta}");
+        assert!(meta.contains("plan"), "{meta}");
+
+        let graph = build("dlrm", GRAPH_SEED).unwrap();
+        let x = Tensor::full(&[graph.in_elems()], 0.25);
+        let resp = router.infer("dlrm", x).unwrap();
+        assert_eq!(resp.outputs[0].len(), graph.out_elems());
+        assert!(resp.outputs[0].data().iter().all(|v| v.is_finite()));
+        let s = router.stats("dlrm").unwrap();
         assert_eq!(s.requests, 1);
     }
 

@@ -1,0 +1,202 @@
+//! Deterministic seeded graph builders for the six Mini archetypes.
+//!
+//! Each builder produces a small MLP-shaped [`ModelGraph`] whose
+//! interface (input shape, head width) comes from the [`registry`] and
+//! whose weights are drawn from a per-model PCG64 stream — the same
+//! `(model, seed)` pair always yields the same graph, bit for bit, on
+//! every machine. The archetypes deliberately cover the whole IR
+//! between them: ReLU + residual (cnn/unet/dlrm), standalone bias heads
+//! (ssd/dlrm), tanh + sigmoid gates (gru), GELU + residual (bert).
+//!
+//! These are *structure* stand-ins, like the synthetic datasets in
+//! [`crate::data`]: what the per-layer numeric experiments stress is
+//! layer count, fan-in spread, and skip connections — not parameter
+//! counts.
+
+use anyhow::Result;
+
+use super::registry;
+use super::{Layer, ModelGraph};
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+
+/// The weight seed for graph serving and `eval-graph` — deliberately
+/// **fixed** (not a CLI knob) so every checkout and every run serves
+/// bit-identical model weights; the CLI `--seed` flag keys only the
+/// ABFP ADC noise streams. Tests may build graphs at other seeds
+/// through [`build`] directly.
+pub const GRAPH_SEED: u64 = 0x6a11;
+
+/// Build the seeded graph for a registered model.
+pub fn build(model: &str, seed: u64) -> Result<ModelGraph> {
+    let meta = registry::meta(model)?;
+    let idx = registry::MODEL_NAMES
+        .iter()
+        .position(|n| *n == model)
+        .expect("registered model has an index");
+    let mut b = Builder::new(meta.in_elems(), seed, idx as u64);
+    let out = meta.out_elems;
+    match model {
+        "cnn" => {
+            b.flatten();
+            b.linear(256, true);
+            let skip = b.push(Layer::Relu);
+            b.linear(256, true);
+            b.push(Layer::Relu);
+            b.push(Layer::Residual { from: skip });
+            b.linear(128, true);
+            b.push(Layer::Relu);
+            b.linear(out, true);
+        }
+        "ssd" => {
+            b.flatten();
+            b.linear(256, true);
+            b.push(Layer::Relu);
+            b.linear(128, true);
+            b.push(Layer::Relu);
+            b.linear(out, false);
+            b.head_bias();
+        }
+        "unet" => {
+            let skip = b.flatten();
+            b.linear(256, true);
+            b.push(Layer::Relu);
+            b.linear(256, true);
+            b.push(Layer::Residual { from: skip });
+            b.push(Layer::Relu);
+            b.linear(out, true);
+        }
+        "gru" => {
+            b.flatten();
+            b.linear(96, true);
+            b.push(Layer::Tanh);
+            b.linear(96, true);
+            b.push(Layer::Sigmoid);
+            b.linear(out, true);
+        }
+        "bert" => {
+            b.flatten();
+            b.linear(192, true);
+            let skip = b.push(Layer::Gelu);
+            b.linear(192, true);
+            b.push(Layer::Gelu);
+            b.push(Layer::Residual { from: skip });
+            b.linear(128, true);
+            b.push(Layer::Gelu);
+            b.linear(out, true);
+        }
+        "dlrm" => {
+            b.flatten();
+            b.linear(64, true);
+            let skip = b.push(Layer::Relu);
+            b.linear(64, true);
+            b.push(Layer::Relu);
+            b.push(Layer::Residual { from: skip });
+            b.linear(out, false);
+            b.head_bias();
+        }
+        other => unreachable!("registry accepted unknown model {other:?}"),
+    }
+    ModelGraph::new(model, meta.input_shape, b.layers)
+}
+
+/// Layer-stack builder: tracks the activation width and owns the
+/// model's weight RNG stream.
+struct Builder {
+    rng: Pcg64,
+    layers: Vec<Layer>,
+    width: usize,
+}
+
+impl Builder {
+    fn new(in_elems: usize, seed: u64, model_idx: u64) -> Builder {
+        Builder {
+            // One stream per model: graphs stay decorrelated even under
+            // the same user seed.
+            rng: Pcg64::new(seed, 0x6a00_0000 + model_idx),
+            layers: Vec::new(),
+            width: in_elems,
+        }
+    }
+
+    /// Push a layer; returns its index (for `Residual { from }`).
+    fn push(&mut self, layer: Layer) -> usize {
+        self.layers.push(layer);
+        self.layers.len() - 1
+    }
+
+    fn flatten(&mut self) -> usize {
+        self.push(Layer::Flatten)
+    }
+
+    /// He-style init: N(0, 1/fan_in) weights, small uniform bias.
+    fn linear(&mut self, out: usize, bias: bool) -> usize {
+        let fan_in = self.width;
+        let scale = 1.0 / (fan_in as f32).sqrt();
+        let w = Tensor::new(
+            &[out, fan_in],
+            (0..out * fan_in).map(|_| self.rng.normal() * scale).collect(),
+        )
+        .expect("builder weight dims");
+        let b = bias.then(|| Tensor::from_vec(self.rng.uniform_vec(out, -0.05, 0.05)));
+        self.width = out;
+        self.push(Layer::Linear { w, b })
+    }
+
+    /// Standalone bias over the current width (exercises [`Layer::Bias`]).
+    fn head_bias(&mut self) -> usize {
+        let b = Tensor::from_vec(self.rng.uniform_vec(self.width, -0.05, 0.05));
+        self.push(Layer::Bias(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::registry::{meta, MODEL_NAMES};
+
+    #[test]
+    fn every_archetype_builds_and_matches_the_registry() {
+        for name in MODEL_NAMES {
+            let g = build(name, GRAPH_SEED).unwrap();
+            let m = meta(name).unwrap();
+            assert_eq!(g.in_elems(), m.in_elems(), "{name}");
+            assert_eq!(g.out_elems(), m.out_elems, "{name}");
+            assert!(g.linear_count() >= 3, "{name}");
+            // The graph actually runs on the host.
+            let x = crate::tensor::Tensor::full(&[2, m.in_elems()], 0.1);
+            let y = g.host_forward(&x).unwrap();
+            assert_eq!(y.shape(), &[2, m.out_elems]);
+            assert!(y.data().iter().all(|v| v.is_finite()), "{name}");
+        }
+        assert!(build("nope", 1).is_err());
+    }
+
+    #[test]
+    fn builders_are_deterministic_and_seed_sensitive() {
+        let a = build("gru", 7).unwrap();
+        let b = build("gru", 7).unwrap();
+        let c = build("gru", 8).unwrap();
+        let (wa, wb, wc) = (
+            a.linear_weight(0).unwrap(),
+            b.linear_weight(0).unwrap(),
+            c.linear_weight(0).unwrap(),
+        );
+        assert_eq!(wa, wb, "same seed must rebuild the same graph");
+        assert_ne!(wa, wc, "different seeds must differ");
+    }
+
+    #[test]
+    fn archetypes_cover_the_whole_ir() {
+        use std::collections::BTreeSet;
+        let mut seen: BTreeSet<&'static str> = BTreeSet::new();
+        for name in MODEL_NAMES {
+            for l in build(name, GRAPH_SEED).unwrap().layers() {
+                seen.insert(l.name());
+            }
+        }
+        for op in ["flatten", "linear", "bias", "relu", "gelu", "tanh", "sigmoid", "residual"] {
+            assert!(seen.contains(op), "no archetype exercises {op}");
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! [`GraphExecutor`]: native multi-layer inference over the numeric
+//! backends — the artifact-free implementation of
+//! [`ModelExecutor`](crate::coordinator::ModelExecutor).
+//!
+//! At construction, every `Linear` layer's weights are staged **once**
+//! onto the backend its [`GraphPlan`] assigns
+//! (`NumericBackend::stage_weights` — the paper's weights-live-on-the-
+//! array model); `execute` then runs batches layer by layer, converting
+//! activations per call through each layer's full numeric pipeline.
+//! The ABFP layers draw their ADC noise from the coordinate-keyed
+//! stream, so outputs are bit-identical across worker thread counts
+//! and the noise sequence replays exactly from `(plan, seed)`
+//! (`tests/graph.rs`).
+
+use anyhow::Result;
+
+use super::plan::GraphPlan;
+use super::{registry, ModelGraph};
+use crate::backend::{BackendStats, NumericBackend, StagedWeights};
+use crate::coordinator::{Executed, ModelExecutor};
+use crate::json::{self, Value};
+use crate::tensor::Tensor;
+
+/// One `Linear` layer's staged numeric state.
+struct Stage {
+    backend: Box<dyn NumericBackend>,
+    staged: StagedWeights,
+}
+
+/// Accumulated per-layer accounting (the `eval-graph` sweep rows and
+/// `/v1/models` metadata source).
+#[derive(Debug, Clone)]
+pub struct GraphLayerStats {
+    /// `Linear` ordinal within the graph.
+    pub layer: usize,
+    /// Output features of the layer.
+    pub out_features: usize,
+    /// Backend name serving the layer.
+    pub backend: &'static str,
+    /// The exact backend configuration.
+    pub config: Value,
+    pub stats: BackendStats,
+}
+
+/// Pure-Rust layer-graph executor with a per-layer numeric plan.
+pub struct GraphExecutor {
+    graph: ModelGraph,
+    plan: GraphPlan,
+    stages: Vec<Stage>,
+}
+
+impl GraphExecutor {
+    /// Stage every `Linear` layer onto its planned backend. `seed`
+    /// keys the ABFP noise streams (one decorrelated stream per
+    /// layer); `threads` bounds each backend's matmul worker pool
+    /// (0 = process default) — scheduling only, results are
+    /// bit-identical for every value.
+    pub fn new(
+        graph: ModelGraph,
+        plan: &GraphPlan,
+        seed: u64,
+        threads: usize,
+    ) -> Result<GraphExecutor> {
+        let count = graph.linear_count();
+        // FNV-1a over the model name: two models served under one user
+        // seed must not share noise streams (their layer i draws would
+        // otherwise be bit-identical at overlapping coordinates).
+        let model_h = graph
+            .model()
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+                (h ^ b as u64).wrapping_mul(0x0100_0000_01b3)
+            });
+        // Tile width 0 in a layer plan means "this model's registry
+        // default" (gru/dlrm run narrower arrays than the image
+        // archetypes); hand-built graphs outside the registry fall back
+        // to the paper tile.
+        let default_tile = registry::meta(graph.model())
+            .map(|m| m.default_tile)
+            .unwrap_or(128);
+        let mut stages = Vec::with_capacity(count);
+        for i in 0..count {
+            let mut lp = plan.resolve(i, count);
+            if lp.device.n == 0 {
+                lp.device.n = default_tile;
+            }
+            // Decorrelate per-layer noise streams under one user seed
+            // (golden-gamma multiply, the SplitMix64 whitening step).
+            let layer_seed =
+                seed ^ model_h ^ (i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let mut backend = lp.backend.build(lp.device, layer_seed);
+            backend.set_threads(threads);
+            let w = graph
+                .linear_weight(i)
+                .expect("linear_count bounds the index");
+            let staged = backend.stage_weights(w)?;
+            stages.push(Stage { backend, staged });
+        }
+        Ok(GraphExecutor {
+            graph,
+            plan: plan.clone(),
+            stages,
+        })
+    }
+
+    pub fn graph(&self) -> &ModelGraph {
+        &self.graph
+    }
+
+    pub fn plan(&self) -> &GraphPlan {
+        &self.plan
+    }
+
+    /// Per-`Linear`-layer backend accounting since construction (or the
+    /// last [`reset_stats`](Self::reset_stats)).
+    pub fn layer_stats(&self) -> Vec<GraphLayerStats> {
+        self.stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| GraphLayerStats {
+                layer: i,
+                out_features: s.staged.rows(),
+                backend: s.backend.name(),
+                config: s.backend.config_json(),
+                stats: s.backend.stats(),
+            })
+            .collect()
+    }
+
+    pub fn reset_stats(&mut self) {
+        for s in &mut self.stages {
+            s.backend.reset_stats();
+        }
+    }
+
+    /// Run one packed `(b, in_elems)` batch through the graph and
+    /// return the `(b, out_elems)` head output. Takes the batch by
+    /// value: the first layer consumes it without a copy.
+    pub fn forward(&mut self, x: Tensor) -> Result<Tensor> {
+        let stages = &mut self.stages;
+        self.graph.forward_with(x, |i, input| {
+            let s = &mut stages[i];
+            s.backend.matmul(input, &s.staged)
+        })
+    }
+}
+
+impl ModelExecutor for GraphExecutor {
+    fn kind(&self) -> &'static str {
+        "graph"
+    }
+
+    fn in_elems(&self) -> usize {
+        self.graph.in_elems()
+    }
+
+    fn execute(&mut self, b: usize, x: Tensor) -> Result<Executed> {
+        let y = self.forward(x)?;
+        Ok(Executed {
+            outputs: vec![y],
+            padded_batch: b,
+        })
+    }
+
+    fn describe(&self) -> Value {
+        json::obj(vec![
+            ("executor", json::s("graph")),
+            ("model", json::s(self.graph.model())),
+            ("in_elems", json::num(self.graph.in_elems() as f64)),
+            ("out_elems", json::num(self.graph.out_elems() as f64)),
+            ("layers", json::num(self.graph.layers().len() as f64)),
+            ("linear_layers", json::num(self.stages.len() as f64)),
+            ("plan", json::s(&self.plan.summary())),
+            (
+                "layer_backends",
+                json::arr(
+                    self.stages
+                        .iter()
+                        .map(|s| json::s(s.backend.name()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abfp::DeviceConfig;
+    use crate::backend::BackendKind;
+    use crate::graph::plan::LayerPlan;
+    use crate::graph::{build, builders::GRAPH_SEED};
+    use crate::rng::Pcg64;
+
+    fn batch(in_elems: usize, b: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        Tensor::new(&[b, in_elems], rng.normal_vec(b * in_elems)).unwrap()
+    }
+
+    #[test]
+    fn float32_plan_is_the_host_reference() {
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let x = batch(graph.in_elems(), 4, 3);
+        let want = graph.host_forward(&x).unwrap();
+        let mut exec =
+            GraphExecutor::new(graph, &GraphPlan::float32(), 1, 0).unwrap();
+        let got = exec.execute(4, x).unwrap();
+        assert_eq!(got.padded_batch, 4);
+        assert_eq!(got.outputs[0], want);
+    }
+
+    #[test]
+    fn mixed_plan_resolves_per_layer_and_counts_stats() {
+        let interior = LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+        );
+        let graph = build("dlrm", GRAPH_SEED).unwrap();
+        let n = graph.linear_count();
+        let x = batch(graph.in_elems(), 8, 5);
+        let mut exec =
+            GraphExecutor::new(graph, &GraphPlan::edges_float32(interior), 9, 0)
+                .unwrap();
+        exec.execute(8, x).unwrap();
+        let stats = exec.layer_stats();
+        assert_eq!(stats.len(), n);
+        assert_eq!(stats[0].backend, "float32");
+        assert_eq!(stats[n - 1].backend, "float32");
+        for s in &stats[1..n - 1] {
+            assert_eq!(s.backend, "abfp");
+            // The analog layers actually converted through the ADC.
+            assert!(s.stats.conversions > 0, "layer {}", s.layer);
+        }
+        // FLOAT32 edges never convert.
+        assert_eq!(stats[0].stats.conversions, 0);
+        assert!(stats[0].stats.matmuls == 1 && stats[0].stats.macs > 0);
+        exec.reset_stats();
+        assert_eq!(exec.layer_stats()[0].stats.matmuls, 0);
+    }
+
+    #[test]
+    fn tile_zero_takes_the_model_registry_default() {
+        // Tile 0 in a plan = "this model's registry default_tile":
+        // gru runs its narrower 32-wide array, cnn the paper's 128.
+        let plan = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 4.0, 0.5),
+        ));
+        for (model, want_tile) in [("gru", 32), ("cnn", 128)] {
+            let exec =
+                GraphExecutor::new(build(model, GRAPH_SEED).unwrap(), &plan, 1, 0)
+                    .unwrap();
+            let cfg = exec.layer_stats()[0].config.to_string();
+            assert!(cfg.contains(&format!("\"n\":{want_tile}")), "{model}: {cfg}");
+        }
+        assert!(plan.summary().contains("n=auto"), "{}", plan.summary());
+    }
+
+    #[test]
+    fn describe_carries_the_plan() {
+        let graph = build("cnn", GRAPH_SEED).unwrap();
+        let exec = GraphExecutor::new(graph, &GraphPlan::float32(), 1, 0).unwrap();
+        let d = exec.describe().to_string();
+        assert!(d.contains("\"executor\":\"graph\""), "{d}");
+        assert!(d.contains("\"linear_layers\":4"), "{d}");
+        assert!(d.contains("float32"), "{d}");
+    }
+
+    #[test]
+    fn same_seed_replays_noisy_inference_exactly() {
+        let plan = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+        ));
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let x = batch(graph.in_elems(), 4, 11);
+        let run = |seed: u64| {
+            let mut e = GraphExecutor::new(graph.clone(), &plan, seed, 0).unwrap();
+            // Two batches: the second draws fresh noise rows.
+            let a = e.forward(x.clone()).unwrap();
+            let b = e.forward(x.clone()).unwrap();
+            (a, b)
+        };
+        let (a1, b1) = run(7);
+        let (a2, b2) = run(7);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        assert_ne!(a1, b1, "successive noisy batches must draw fresh noise");
+        let (a3, _) = run(8);
+        assert_ne!(a1, a3, "different seeds must differ");
+    }
+}

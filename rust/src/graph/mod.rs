@@ -1,0 +1,406 @@
+//! Pure-Rust layer-graph inference: the `ModelGraph` IR, per-layer
+//! numeric plans, and the serving executor over them.
+//!
+//! The paper evaluates ABFP end to end on whole DNNs — every layer's
+//! dot products run through DAC/ADC quantization with per-layer gain.
+//! This subsystem makes that evaluable (and servable) without any AOT
+//! artifacts:
+//!
+//! * [`ModelGraph`] — a small layer IR (`Linear`, `Bias`, activations,
+//!   `Residual`, `Flatten`) with shape validation and a FLOAT32 host
+//!   reference forward.
+//! * [`registry`] — the single source of truth for model metadata
+//!   (paper name, shapes, default tile); [`builders::build`] constructs
+//!   a deterministic seeded graph for each of the six Mini archetypes.
+//! * [`GraphPlan`] — a **per-layer** assignment of
+//!   [`BackendKind`](crate::backend::BackendKind) +
+//!   [`DeviceConfig`](crate::abfp::DeviceConfig), JSON round-trippable,
+//!   so "first/last layer FLOAT32, middle layers ABFP at gain 4" is a
+//!   config file, not a code change (the per-layer format freedom of
+//!   AdaptivFloat / hybrid-BFP lines of work).
+//! * [`GraphExecutor`] — the
+//!   [`ModelExecutor`](crate::coordinator::ModelExecutor)
+//!   implementation: stages every `Linear` layer's weights once at
+//!   startup through `NumericBackend::stage_weights`, then runs batches
+//!   through the coordinate-keyed noise path, so serving results are
+//!   bit-identical across thread counts (`tests/graph.rs`).
+
+pub mod builders;
+pub mod executor;
+pub mod plan;
+pub mod registry;
+
+pub use builders::build;
+pub use executor::{GraphExecutor, GraphLayerStats};
+pub use plan::{GraphPlan, LayerPlan};
+pub use registry::{meta, ModelMeta, MODEL_NAMES, REGISTRY};
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// One layer of the graph IR. Activations flow through the graph as
+/// 2-D `(batch, width)` tensors; `Linear` weights are `(out, in)` in
+/// the device layout (`x @ w^T`, matching [`Tensor::matmul_nt`] and
+/// every `NumericBackend`).
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// Collapse the per-example input shape to 1-D. A shape marker:
+    /// batches are already packed flat, so it is a runtime no-op, but
+    /// every builder starts with it to record the interface.
+    Flatten,
+    /// `y = x @ w^T (+ b)` — the only layer a numeric plan applies to.
+    Linear { w: Tensor, b: Option<Tensor> },
+    /// Standalone bias add (for heads staged apart from their matmul).
+    Bias(Tensor),
+    Relu,
+    Gelu,
+    Tanh,
+    Sigmoid,
+    /// Add the output of layer `from` (skip connection). Widths must
+    /// match; validated at graph construction.
+    Residual { from: usize },
+}
+
+impl Layer {
+    /// Short IR mnemonic (reports, `GET /v1/models` metadata).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layer::Flatten => "flatten",
+            Layer::Linear { .. } => "linear",
+            Layer::Bias(_) => "bias",
+            Layer::Relu => "relu",
+            Layer::Gelu => "gelu",
+            Layer::Tanh => "tanh",
+            Layer::Sigmoid => "sigmoid",
+            Layer::Residual { .. } => "residual",
+        }
+    }
+}
+
+/// A validated layer graph for one model.
+///
+/// Construction ([`ModelGraph::new`]) runs shape inference over the
+/// layer list and rejects mismatched `Linear` fan-ins, bias widths, and
+/// `Residual` skips, so a graph that exists can always be executed.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    model: String,
+    input_shape: Vec<usize>,
+    layers: Vec<Layer>,
+    out_elems: usize,
+}
+
+impl ModelGraph {
+    /// Validate and freeze a graph. `input_shape` is per example.
+    pub fn new(model: &str, input_shape: &[usize], layers: Vec<Layer>) -> Result<ModelGraph> {
+        let in_elems: usize = input_shape.iter().product();
+        if in_elems == 0 {
+            bail!("graph {model:?}: empty input shape");
+        }
+        if layers.is_empty() {
+            bail!("graph {model:?}: no layers");
+        }
+        // Shape inference: track the activation width after every layer.
+        let mut width = in_elems;
+        let mut widths: Vec<usize> = Vec::with_capacity(layers.len());
+        for (idx, layer) in layers.iter().enumerate() {
+            match layer {
+                Layer::Flatten => {}
+                Layer::Linear { w, b } => {
+                    if w.shape().len() != 2 {
+                        bail!(
+                            "graph {model:?} layer {idx}: linear weight must be \
+                             2-D (out, in), got {:?}",
+                            w.shape()
+                        );
+                    }
+                    if w.shape()[1] != width {
+                        bail!(
+                            "graph {model:?} layer {idx}: linear wants {} inputs, \
+                             activation width is {width}",
+                            w.shape()[1]
+                        );
+                    }
+                    width = w.shape()[0];
+                    if let Some(b) = b {
+                        if b.len() != width {
+                            bail!(
+                                "graph {model:?} layer {idx}: bias has {} \
+                                 elements for {width} outputs",
+                                b.len()
+                            );
+                        }
+                    }
+                }
+                Layer::Bias(b) => {
+                    if b.len() != width {
+                        bail!(
+                            "graph {model:?} layer {idx}: bias has {} elements \
+                             for width {width}",
+                            b.len()
+                        );
+                    }
+                }
+                Layer::Relu | Layer::Gelu | Layer::Tanh | Layer::Sigmoid => {}
+                Layer::Residual { from } => {
+                    if *from >= idx {
+                        bail!(
+                            "graph {model:?} layer {idx}: residual from {from} \
+                             is not an earlier layer"
+                        );
+                    }
+                    if widths[*from] != width {
+                        bail!(
+                            "graph {model:?} layer {idx}: residual from layer \
+                             {from} (width {}) onto width {width}",
+                            widths[*from]
+                        );
+                    }
+                }
+            }
+            widths.push(width);
+        }
+        Ok(ModelGraph {
+            model: model.to_string(),
+            input_shape: input_shape.to_vec(),
+            layers,
+            out_elems: width,
+        })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    /// Flat input elements per example.
+    pub fn in_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Output features per example.
+    pub fn out_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    /// Number of `Linear` layers — the layers a [`GraphPlan`] governs.
+    pub fn linear_count(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Linear { .. }))
+            .count()
+    }
+
+    /// The `(out, in)` weight of the `i`-th `Linear` layer.
+    pub fn linear_weight(&self, i: usize) -> Option<&Tensor> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Linear { w, .. } => Some(w),
+                _ => None,
+            })
+            .nth(i)
+    }
+
+    /// Run the graph over a packed `(batch, in_elems)` activation
+    /// (taken by value — the serving path hands its pack over without a
+    /// copy), delegating each `Linear` matmul (pre-bias) to
+    /// `linear(i, x)` where `i` counts `Linear` layers in graph order.
+    /// Everything else (bias adds, activations, residuals) runs on the
+    /// host in FLOAT32.
+    pub fn forward_with<F>(&self, x: Tensor, mut linear: F) -> Result<Tensor>
+    where
+        F: FnMut(usize, &Tensor) -> Result<Tensor>,
+    {
+        if x.shape().len() != 2 || x.shape()[1] != self.in_elems() {
+            bail!(
+                "graph {:?} wants a (batch, {}) activation, got {:?}",
+                self.model,
+                self.in_elems(),
+                x.shape()
+            );
+        }
+        // Only layers a Residual reads back need their activation kept;
+        // cloning every intermediate would dominate the serving hot
+        // path's allocations for nothing.
+        let mut kept = vec![false; self.layers.len()];
+        for layer in &self.layers {
+            if let Layer::Residual { from } = layer {
+                kept[*from] = true;
+            }
+        }
+        let mut cur = x;
+        let mut acts: Vec<Option<Tensor>> = Vec::with_capacity(self.layers.len());
+        let mut li = 0usize;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            cur = match layer {
+                Layer::Flatten => cur,
+                Layer::Linear { w: _, b } => {
+                    let mut y = linear(li, &cur)?;
+                    li += 1;
+                    if let Some(b) = b {
+                        add_bias(&mut y, b)?;
+                    }
+                    y
+                }
+                Layer::Bias(b) => {
+                    let mut y = cur;
+                    add_bias(&mut y, b)?;
+                    y
+                }
+                Layer::Relu => cur.map(relu),
+                Layer::Gelu => cur.map(gelu),
+                Layer::Tanh => cur.map(|v| v.tanh()),
+                Layer::Sigmoid => cur.map(sigmoid),
+                Layer::Residual { from } => {
+                    let src = acts[*from]
+                        .as_ref()
+                        .expect("validated residual source is kept");
+                    cur.zip(src, |a, b| a + b)?
+                }
+            };
+            acts.push(kept[idx].then(|| cur.clone()));
+        }
+        Ok(cur)
+    }
+
+    /// FLOAT32 host reference: every `Linear` runs [`Tensor::matmul_nt`]
+    /// exactly. A float32 [`GraphPlan`] must reproduce this bit for bit
+    /// (`Float32Backend::matmul` is bit-identical to `matmul_nt`;
+    /// pinned in `tests/graph.rs`).
+    pub fn host_forward(&self, x: &Tensor) -> Result<Tensor> {
+        let ws: Vec<&Tensor> = self
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Linear { w, .. } => Some(w),
+                _ => None,
+            })
+            .collect();
+        self.forward_with(x.clone(), |i, input| input.matmul_nt(ws[i]))
+    }
+}
+
+/// Broadcast-add a length-`width` bias over a `(batch, width)` tensor.
+fn add_bias(y: &mut Tensor, b: &Tensor) -> Result<()> {
+    let width = b.len();
+    if y.shape().len() != 2 || y.shape()[1] != width {
+        bail!("bias of {width} elements over activation {:?}", y.shape());
+    }
+    let bd = b.data();
+    for row in y.data_mut().chunks_mut(width) {
+        for (v, bv) in row.iter_mut().zip(bd) {
+            *v += bv;
+        }
+    }
+    Ok(())
+}
+
+fn relu(v: f32) -> f32 {
+    v.max(0.0)
+}
+
+fn sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// GELU, tanh approximation (Hendrycks & Gimpel 2016) — the form DNN
+/// runtimes ship.
+fn gelu(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lin(out: usize, inp: usize, fill: f32, bias: Option<f32>) -> Layer {
+        Layer::Linear {
+            w: Tensor::full(&[out, inp], fill),
+            b: bias.map(|bv| Tensor::full(&[out], bv)),
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_graphs() {
+        // Fan-in mismatch.
+        assert!(ModelGraph::new("t", &[4], vec![lin(3, 5, 0.1, None)]).is_err());
+        // Bias width mismatch.
+        let bad_bias = Layer::Linear {
+            w: Tensor::full(&[3, 4], 0.1),
+            b: Some(Tensor::full(&[2], 0.0)),
+        };
+        assert!(ModelGraph::new("t", &[4], vec![bad_bias]).is_err());
+        // Residual onto a different width.
+        let layers = vec![lin(3, 4, 0.1, None), Layer::Residual { from: 0 }];
+        assert!(ModelGraph::new("t", &[4], layers).is_ok());
+        let layers = vec![
+            lin(3, 4, 0.1, None),
+            lin(2, 3, 0.1, None),
+            Layer::Residual { from: 0 },
+        ];
+        assert!(ModelGraph::new("t", &[4], layers).is_err());
+        // Residual must reference an earlier layer.
+        let layers = vec![lin(3, 4, 0.1, None), Layer::Residual { from: 1 }];
+        assert!(ModelGraph::new("t", &[4], layers).is_err());
+        // Empty graphs are rejected.
+        assert!(ModelGraph::new("t", &[4], vec![]).is_err());
+    }
+
+    #[test]
+    fn host_forward_known_values() {
+        // x (1,2) = [1, 2]; w (2,2) all 1 -> [3, 3]; bias +1 -> [4, 4];
+        // relu passthrough; residual adds the post-bias activation.
+        let layers = vec![
+            Layer::Flatten,
+            lin(2, 2, 1.0, Some(1.0)),
+            Layer::Relu,
+            Layer::Residual { from: 1 },
+        ];
+        let g = ModelGraph::new("t", &[2], layers).unwrap();
+        assert_eq!(g.out_elems(), 2);
+        assert_eq!(g.linear_count(), 1);
+        let x = Tensor::new(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let y = g.host_forward(&x).unwrap();
+        assert_eq!(y.data(), &[8.0, 8.0]);
+    }
+
+    #[test]
+    fn activations_behave() {
+        let layers = vec![lin(2, 2, 1.0, None), Layer::Sigmoid];
+        let g = ModelGraph::new("t", &[2], layers).unwrap();
+        let x = Tensor::new(&[1, 2], vec![0.0, 0.0]).unwrap();
+        let y = g.host_forward(&x).unwrap();
+        assert!((y.data()[0] - 0.5).abs() < 1e-6);
+        // Gelu: ~0 at 0, ~v for large v, small negative dip below 0.
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-3);
+        assert!(gelu(-1.0) < 0.0 && gelu(-1.0) > -0.2);
+        assert_eq!(relu(-3.0), 0.0);
+    }
+
+    #[test]
+    fn forward_rejects_wrong_width() {
+        let g = ModelGraph::new("t", &[4], vec![lin(2, 4, 0.5, None)]).unwrap();
+        assert!(g.host_forward(&Tensor::zeros(&[1, 3])).is_err());
+        assert!(g.host_forward(&Tensor::zeros(&[4])).is_err());
+    }
+
+    #[test]
+    fn standalone_bias_layer() {
+        let layers = vec![lin(2, 2, 1.0, None), Layer::Bias(Tensor::full(&[2], 0.5))];
+        let g = ModelGraph::new("t", &[2], layers).unwrap();
+        let x = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let y = g.host_forward(&x).unwrap();
+        assert_eq!(y.data(), &[1.5, 1.5, 1.5, 1.5]);
+    }
+}

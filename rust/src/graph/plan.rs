@@ -1,0 +1,349 @@
+//! Per-layer numeric plans: which backend + device point each `Linear`
+//! layer of a [`ModelGraph`](super::ModelGraph) runs on.
+//!
+//! The paper (and the AdaptivFloat / hybrid-BFP lines of work) treats
+//! number-format choice as a **per-layer** decision — first and last
+//! layers are precision-critical, interior layers tolerate aggressive
+//! formats. [`GraphPlan`] makes that a config file: a default
+//! [`LayerPlan`], optional `first` / `last` overrides, and explicit
+//! per-index overrides, all JSON round-trippable (manifest-style, same
+//! discipline as [`DeviceConfig::to_json`]).
+//!
+//! ```json
+//! {
+//!   "default": {"backend": "abfp",
+//!               "device": {"n": 128, "bits_w": 8, "bits_x": 8,
+//!                          "bits_y": 8, "gain": 4, "noise_lsb": 0.5}},
+//!   "first": {"backend": "float32"},
+//!   "last":  {"backend": "float32"},
+//!   "layers": {"2": {"backend": "bfp"}}
+//! }
+//! ```
+//!
+//! Resolution precedence for `Linear` layer `i` of `n`:
+//! explicit `layers[i]` > `first` (i = 0) > `last` (i = n-1) > `default`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::abfp::DeviceConfig;
+use crate::backend::BackendKind;
+use crate::json::{self, Value};
+
+/// The numeric assignment for one `Linear` layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerPlan {
+    pub backend: BackendKind,
+    /// Device geometry for the backend (`float32` ignores it). A tile
+    /// width of 0 means "the served model's registry `default_tile`" —
+    /// the executor substitutes it per model. The sentinel round-trips
+    /// through plan JSON (`"n": 0`); every other field still validates
+    /// as a concrete device point.
+    pub device: DeviceConfig,
+}
+
+impl LayerPlan {
+    pub fn new(backend: BackendKind, device: DeviceConfig) -> LayerPlan {
+        LayerPlan { backend, device }
+    }
+
+    /// Exact FLOAT32 at the paper-default geometry (geometry unused).
+    pub fn float32() -> LayerPlan {
+        LayerPlan::new(BackendKind::Float32, DeviceConfig::paper_default(128))
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("backend", json::s(self.backend.name())),
+            ("device", self.device.to_json()),
+        ])
+    }
+
+    /// `device` may be omitted (paper default, tile 128). Validation
+    /// matches [`DeviceConfig::from_json`], except that `"n": 0` — the
+    /// per-model auto-tile sentinel — is accepted, so a plan the CLI
+    /// builds without `--tile` (and writes into `graph.json`) loads
+    /// back as the same plan.
+    pub fn from_json(v: &Value) -> Result<LayerPlan> {
+        let backend = BackendKind::parse(v.get("backend")?.as_str()?)?;
+        let device = match v.opt("device") {
+            Some(d) => {
+                let cfg = DeviceConfig::from_json(d);
+                match cfg {
+                    Ok(cfg) => cfg,
+                    // Re-parse once with the sentinel masked: the bits
+                    // ranges must still hold even for an auto tile.
+                    Err(_) if d.get("n")?.as_usize()? == 0 => {
+                        let probe = json::obj(
+                            d.as_obj()?
+                                .iter()
+                                .map(|(k, v)| {
+                                    if k == "n" {
+                                        ("n", json::num(1.0))
+                                    } else {
+                                        (k.as_str(), v.clone())
+                                    }
+                                })
+                                .collect(),
+                        );
+                        DeviceConfig {
+                            n: 0,
+                            ..DeviceConfig::from_json(&probe)?
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            None => DeviceConfig::paper_default(128),
+        };
+        Ok(LayerPlan { backend, device })
+    }
+
+    /// Compact human form, e.g. `abfp(n=128,g=4)` / `float32` (tile 0
+    /// renders as `n=auto`: the per-model registry default).
+    pub fn summary(&self) -> String {
+        let n = if self.device.n == 0 {
+            "auto".to_string()
+        } else {
+            self.device.n.to_string()
+        };
+        match self.backend {
+            BackendKind::Float32 => "float32".to_string(),
+            k if k.uses_gain() => {
+                format!("{}(n={n},g={})", k.name(), self.device.gain)
+            }
+            k if k.uses_tiles() => format!("{}(n={n})", k.name()),
+            k => format!("{}(b={})", k.name(), self.device.bits_w),
+        }
+    }
+}
+
+/// A whole-model per-layer numeric plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphPlan {
+    pub default: LayerPlan,
+    /// Override for the first `Linear` layer (wins over `last` when the
+    /// graph has a single `Linear`).
+    pub first: Option<LayerPlan>,
+    /// Override for the last `Linear` layer.
+    pub last: Option<LayerPlan>,
+    /// Explicit per-`Linear`-index overrides (strongest).
+    pub layers: BTreeMap<usize, LayerPlan>,
+}
+
+impl GraphPlan {
+    /// Every layer on the same assignment.
+    pub fn uniform(plan: LayerPlan) -> GraphPlan {
+        GraphPlan {
+            default: plan,
+            first: None,
+            last: None,
+            layers: BTreeMap::new(),
+        }
+    }
+
+    /// The exact-arithmetic plan (parity baseline).
+    pub fn float32() -> GraphPlan {
+        Self::uniform(LayerPlan::float32())
+    }
+
+    /// The paper-shaped mixed plan: FLOAT32 edges, `interior` inside.
+    pub fn edges_float32(interior: LayerPlan) -> GraphPlan {
+        GraphPlan {
+            default: interior,
+            first: Some(LayerPlan::float32()),
+            last: Some(LayerPlan::float32()),
+            layers: BTreeMap::new(),
+        }
+    }
+
+    /// Resolve the plan for `Linear` layer `idx` of `linear_count`.
+    pub fn resolve(&self, idx: usize, linear_count: usize) -> LayerPlan {
+        if let Some(p) = self.layers.get(&idx) {
+            return *p;
+        }
+        if idx == 0 {
+            if let Some(p) = self.first {
+                return p;
+            }
+        }
+        if linear_count > 0 && idx == linear_count - 1 {
+            if let Some(p) = self.last {
+                return p;
+            }
+        }
+        self.default
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut obj: BTreeMap<String, Value> = BTreeMap::new();
+        obj.insert("default".to_string(), self.default.to_json());
+        if let Some(p) = &self.first {
+            obj.insert("first".to_string(), p.to_json());
+        }
+        if let Some(p) = &self.last {
+            obj.insert("last".to_string(), p.to_json());
+        }
+        if !self.layers.is_empty() {
+            let m: BTreeMap<String, Value> = self
+                .layers
+                .iter()
+                .map(|(i, p)| (i.to_string(), p.to_json()))
+                .collect();
+            obj.insert("layers".to_string(), Value::Obj(m));
+        }
+        Value::Obj(obj)
+    }
+
+    pub fn from_json(v: &Value) -> Result<GraphPlan> {
+        let default = LayerPlan::from_json(v.get("default").map_err(|_| {
+            anyhow!(r#"a graph plan needs at least {{"default": {{"backend": ...}}}}"#)
+        })?)?;
+        let opt = |key: &str| -> Result<Option<LayerPlan>> {
+            v.opt(key).map(LayerPlan::from_json).transpose()
+        };
+        let mut layers = BTreeMap::new();
+        if let Some(lv) = v.opt("layers") {
+            for (k, p) in lv.as_obj()? {
+                let idx: usize = k
+                    .parse()
+                    .map_err(|_| anyhow!("plan layer key {k:?} is not a layer index"))?;
+                layers.insert(idx, LayerPlan::from_json(p)?);
+            }
+        }
+        Ok(GraphPlan {
+            default,
+            first: opt("first")?,
+            last: opt("last")?,
+            layers,
+        })
+    }
+
+    /// Parse a plan from JSON text.
+    pub fn parse(text: &str) -> Result<GraphPlan> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    /// Load a plan file (the `serve --plan FILE` path).
+    pub fn load(path: &str) -> Result<GraphPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read graph plan {path:?}: {e}"))?;
+        Self::parse(&text).map_err(|e| anyhow!("graph plan {path:?}: {e}"))
+    }
+
+    /// Compact human summary, e.g.
+    /// `default=abfp(n=128,g=4) first=float32 last=float32`.
+    pub fn summary(&self) -> String {
+        let mut s = format!("default={}", self.default.summary());
+        if let Some(p) = &self.first {
+            s.push_str(&format!(" first={}", p.summary()));
+        }
+        if let Some(p) = &self.last {
+            s.push_str(&format!(" last={}", p.summary()));
+        }
+        for (i, p) in &self.layers {
+            s.push_str(&format!(" [{i}]={}", p.summary()));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn abfp4() -> LayerPlan {
+        LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(128, (8, 8, 8), 4.0, 0.5),
+        )
+    }
+
+    #[test]
+    fn resolve_precedence() {
+        let mut plan = GraphPlan::edges_float32(abfp4());
+        plan.layers.insert(
+            2,
+            LayerPlan::new(BackendKind::Bfp, DeviceConfig::paper_default(32)),
+        );
+        let n = 4;
+        assert_eq!(plan.resolve(0, n).backend, BackendKind::Float32);
+        assert_eq!(plan.resolve(1, n).backend, BackendKind::Abfp);
+        assert_eq!(plan.resolve(2, n).backend, BackendKind::Bfp);
+        assert_eq!(plan.resolve(3, n).backend, BackendKind::Float32);
+        // Explicit index beats first/last.
+        plan.layers.insert(0, abfp4());
+        assert_eq!(plan.resolve(0, n).backend, BackendKind::Abfp);
+        // Single-linear graph: first wins over last.
+        let plan = GraphPlan::edges_float32(abfp4());
+        assert_eq!(plan.resolve(0, 1), LayerPlan::float32());
+    }
+
+    #[test]
+    fn json_roundtrip_uniform_and_mixed() {
+        for plan in [
+            GraphPlan::float32(),
+            GraphPlan::uniform(abfp4()),
+            {
+                let mut p = GraphPlan::edges_float32(abfp4());
+                p.layers.insert(
+                    1,
+                    LayerPlan::new(
+                        BackendKind::Fixed,
+                        DeviceConfig::new(32, (6, 6, 8), 1.0, 0.0),
+                    ),
+                );
+                p
+            },
+        ] {
+            let text = plan.to_json().to_string();
+            let back = GraphPlan::parse(&text).unwrap();
+            assert_eq!(back, plan, "{text}");
+        }
+    }
+
+    #[test]
+    fn auto_tile_sentinel_roundtrips() {
+        // A CLI-built plan without --tile carries n = 0 ("model
+        // default"); the JSON the tools write must load back as the
+        // same plan — while garbage bits are still rejected even when
+        // the tile is auto.
+        let auto = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 4.0, 0.5),
+        ));
+        let back = GraphPlan::parse(&auto.to_json().to_string()).unwrap();
+        assert_eq!(back, auto);
+        let bad = r#"{"default": {"backend": "abfp",
+            "device": {"n": 0, "bits_w": 1, "bits_x": 8, "bits_y": 8,
+                       "gain": 1, "noise_lsb": 0}}}"#;
+        assert!(GraphPlan::parse(bad).is_err());
+    }
+
+    #[test]
+    fn parse_accepts_omitted_device_and_rejects_garbage() {
+        let p = GraphPlan::parse(r#"{"default": {"backend": "float32"}}"#).unwrap();
+        assert_eq!(p.default, LayerPlan::float32());
+        // Missing default.
+        assert!(GraphPlan::parse(r#"{"first": {"backend": "abfp"}}"#).is_err());
+        // Unknown backend name.
+        assert!(GraphPlan::parse(r#"{"default": {"backend": "fp4"}}"#).is_err());
+        // Degenerate device bits rejected by DeviceConfig validation.
+        let bad = r#"{"default": {"backend": "abfp",
+            "device": {"n": 8, "bits_w": 1, "bits_x": 8, "bits_y": 8,
+                       "gain": 1, "noise_lsb": 0}}}"#;
+        assert!(GraphPlan::parse(bad).is_err());
+        // Non-numeric layer key.
+        let bad = r#"{"default": {"backend": "float32"},
+                      "layers": {"two": {"backend": "abfp"}}}"#;
+        assert!(GraphPlan::parse(bad).is_err());
+    }
+
+    #[test]
+    fn summary_is_compact() {
+        let s = GraphPlan::edges_float32(abfp4()).summary();
+        assert!(s.contains("default=abfp(n=128,g=4)"), "{s}");
+        assert!(s.contains("first=float32") && s.contains("last=float32"), "{s}");
+    }
+}

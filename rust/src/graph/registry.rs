@@ -1,0 +1,133 @@
+//! The model registry: one static record per Mini archetype.
+//!
+//! Single source of truth for model metadata that used to be scattered
+//! across `models::paper_name`, the per-model matches in `main.rs`, and
+//! the dataset encoding table in `data/`: paper name, per-example
+//! input/target shapes, the graph head width, and the default device
+//! tile. `crate::models` and the graph builders both read from here;
+//! lookups return `Result` so a typo'd model name is an error with the
+//! accepted roster, never a silent `"?"`.
+
+use anyhow::{anyhow, Result};
+
+/// Static metadata for one Mini archetype.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelMeta {
+    /// Short archetype name (the CLI / manifest / dataset key).
+    pub name: &'static str,
+    /// The paper DNN this archetype stands in for (Table I).
+    pub paper_name: &'static str,
+    /// Per-example input shape (matches `data::Dataset::input_shape`).
+    pub input_shape: &'static [usize],
+    /// Per-example target shape (matches `data::Dataset::target_shape`).
+    pub target_shape: &'static [usize],
+    /// Output features of the model's graph head.
+    pub out_elems: usize,
+    /// Default analog tile width for this model's device plans.
+    pub default_tile: usize,
+}
+
+impl ModelMeta {
+    /// Flat input elements per example.
+    pub fn in_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// All six archetypes, in the paper's Table I order.
+pub const REGISTRY: [ModelMeta; 6] = [
+    ModelMeta {
+        name: "cnn",
+        paper_name: "ResNet50 (MiniCNN)",
+        input_shape: &[16, 16, 3],
+        target_shape: &[],
+        out_elems: 10,
+        default_tile: 128,
+    },
+    ModelMeta {
+        name: "ssd",
+        paper_name: "SSD-ResNet34 (MiniSSD)",
+        input_shape: &[24, 24, 3],
+        target_shape: &[5],
+        out_elems: 5,
+        default_tile: 128,
+    },
+    ModelMeta {
+        name: "unet",
+        paper_name: "3D U-Net (MiniUNet)",
+        input_shape: &[16, 16, 1],
+        target_shape: &[16, 16],
+        out_elems: 256,
+        default_tile: 128,
+    },
+    ModelMeta {
+        name: "gru",
+        paper_name: "RNN-T (MiniGRU)",
+        input_shape: &[24],
+        target_shape: &[],
+        out_elems: 12,
+        default_tile: 32,
+    },
+    ModelMeta {
+        name: "bert",
+        paper_name: "BERT-Large (MiniBERT)",
+        input_shape: &[32],
+        target_shape: &[2],
+        out_elems: 64,
+        default_tile: 128,
+    },
+    ModelMeta {
+        name: "dlrm",
+        paper_name: "DLRM (MiniDLRM)",
+        input_shape: &[12],
+        target_shape: &[],
+        out_elems: 1,
+        default_tile: 32,
+    },
+];
+
+/// The archetype names in registry (paper Table I) order — derived
+/// from [`REGISTRY`] at compile time, so the roster cannot drift.
+pub const MODEL_NAMES: [&str; 6] = [
+    REGISTRY[0].name,
+    REGISTRY[1].name,
+    REGISTRY[2].name,
+    REGISTRY[3].name,
+    REGISTRY[4].name,
+    REGISTRY[5].name,
+];
+
+/// Look a model up by name; unknown names are an error carrying the
+/// accepted roster (the old `paper_name` returned `"?"` silently).
+pub fn meta(model: &str) -> Result<&'static ModelMeta> {
+    REGISTRY
+        .iter()
+        .find(|m| m.name == model)
+        .ok_or_else(|| anyhow!("unknown model {model:?}; expected one of {MODEL_NAMES:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset_for;
+
+    #[test]
+    fn lookup_and_unknown() {
+        assert_eq!(meta("cnn").unwrap().paper_name, "ResNet50 (MiniCNN)");
+        let err = meta("nope").unwrap_err();
+        assert!(err.to_string().contains("cnn"), "{err}");
+    }
+
+    #[test]
+    fn registry_shapes_match_the_datasets() {
+        // The registry is the single source of truth, so it must agree
+        // with what the data generators actually emit per example.
+        for m in &REGISTRY {
+            let ds = dataset_for(m.name).unwrap();
+            assert_eq!(ds.input_shape(), m.input_shape.to_vec(), "{}", m.name);
+            assert_eq!(ds.target_shape(), m.target_shape.to_vec(), "{}", m.name);
+            assert!(m.in_elems() > 0 && m.out_elems > 0);
+            assert!(m.default_tile >= 1);
+        }
+    }
+}

@@ -31,6 +31,20 @@
 //! through [`backend::BackendKind`]; adding a representation (RNS,
 //! AdaptivFloat, …) is one file plus one enum arm.
 //!
+//! ## Model executors & graph serving
+//!
+//! The serving-side twin of that seam is
+//! [`coordinator::ModelExecutor`]: one worker loop, three pluggable
+//! execution engines (echo / graph / PJRT). The [`graph`] subsystem
+//! makes whole-model inference native Rust — a [`graph::ModelGraph`]
+//! layer IR with deterministic seeded builders for all six archetypes,
+//! executed under a [`graph::GraphPlan`]: a **per-layer** assignment of
+//! backend + device point (JSON round-trippable), so "FLOAT32 edges,
+//! ABFP interior at gain 4" is a config file. `serve --graph` /
+//! `bench-serve --graph` serve real multi-layer traffic on a fresh
+//! checkout with no artifacts; `eval-graph` reports per-layer
+//! saturation/conversion accounting.
+//!
 //! ## Determinism & parallel execution
 //!
 //! Every simulator-backend matmul is **bit-exact across thread counts
@@ -64,6 +78,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dnf;
 pub mod energy;
+pub mod graph;
 pub mod json;
 pub mod metrics;
 pub mod models;

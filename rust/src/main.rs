@@ -11,6 +11,7 @@ use abfp::cli::Args;
 use abfp::config::SweepGrid;
 use abfp::coordinator::{loadgen, BatchPolicy, HttpServer, Router, WorkerConfig};
 use abfp::data::dataset_for;
+use abfp::graph::{self, GraphPlan, LayerPlan};
 use abfp::models;
 use abfp::rng::Pcg64;
 use abfp::runtime::Engine;
@@ -31,6 +32,13 @@ USAGE: abfp <command> [flags]
                   --models cnn,ssd  --out DIR
                   --host [--backends LIST --tile N]  artifact-free
                   variant: one projection layer per numeric backend
+  eval-graph    per-layer backend accounting for the pure-Rust layer
+                  graphs (artifact-free): run each model's seeded graph
+                  under a numeric plan and report, per Linear layer,
+                  matmuls / MACs / ADC conversions / saturation.
+                  --models a,b  --plan FILE  --samples N  --batch N
+                  --seed N  --out DIR  (without --plan: uniform
+                  --backend at --tile/--gain)
   finetune      Table III / S3: QAT vs DNF at tile 128, gain 8
                   --models cnn,ssd  --steps N  --bits 8 (or 6)  --out DIR
   figs1         Fig S1 numeric error distributions + Appendix A
@@ -41,16 +49,23 @@ USAGE: abfp <command> [flags]
                   front door (POST /v1/models/{m}:predict, GET
                   /v1/models, /healthz, Prometheus /metrics; ctrl-d =
                   graceful shutdown). Without --http: in-process
-                  closed-loop latency bench.
+                  closed-loop latency bench. --graph serves the
+                  pure-Rust layer graphs (no artifacts needed); --plan
+                  FILE loads a per-layer numeric plan (JSON), e.g.
+                  FLOAT32 edges + ABFP interior.
                   --models a,b  --requests N  --tile N  --gain G
                   --backend NAME  (--f32 = --backend float32)
                   --bind ADDR (default 0.0.0.0)  --batch N  --wait-ms MS
+                  --graph  --plan FILE  --queue N  --seed N (ADC noise
+                  only; graph weights are fixed for reproducibility)
   bench-serve   serving benchmark: start the HTTP server over loopback
                   and drive it with the built-in load generator; report
                   achieved QPS + p50/p95 and per-model worker stats.
                   Default worker is the artifact-free echo harness
-                  (--elems N  --delay-ms MS  --queue N); --models a,b
-                  benches real artifact-backed workers instead.
+                  (--elems N  --delay-ms MS  --queue N); --graph benches
+                  the pure-Rust layer graphs (real multi-layer compute,
+                  still artifact-free; --plan FILE as on serve);
+                  --models a,b benches real artifact-backed workers.
                   --concurrency N  --requests N  --qps Q (0 = closed
                   loop)  --port P  --batch N  --wait-ms MS
   help          this text
@@ -63,7 +78,9 @@ power-of-two block floating point (HBFP-like).
 Common flags: --artifacts DIR (default artifacts), --ckpt DIR (default
 checkpoints), --out DIR (default reports), --threads N (simulator
 worker threads on serve and every sweep; default all cores — ADC noise
-is coordinate-keyed, so results are bit-identical for any N).";
+is coordinate-keyed, so results are bit-identical for any N).
+Misspelled flags are an error (each command checks its roster), and
+negative values parse: --gain -2.";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -79,6 +96,7 @@ fn main() -> Result<()> {
         "pretrain" => cmd_pretrain(&args),
         "sweep-table2" => cmd_table2(&args),
         "fig5" => cmd_fig5(&args),
+        "eval-graph" => cmd_eval_graph(&args),
         "finetune" => cmd_finetune(&args),
         "figs1" => cmd_figs1(&args),
         "bits" => cmd_bits(&args),
@@ -111,6 +129,50 @@ fn model_list(args: &Args) -> Vec<String> {
         .unwrap_or_else(|| models::MODEL_NAMES.iter().map(|s| s.to_string()).collect())
 }
 
+/// The serving backend selector (`--f32` is an alias for
+/// `--backend float32`), shared by the PJRT and graph paths.
+fn serving_backend_from_args(args: &Args) -> Result<BackendKind> {
+    if args.bool("f32") {
+        Ok(BackendKind::Float32)
+    } else {
+        BackendKind::parse(&backend_flag(args, "abfp"))
+    }
+}
+
+/// The serve/bench-serve/eval-graph device point (paper bits 8/8/8,
+/// noise 0.5 LSB). `default_tile` is the `--tile` fallback: 128 on the
+/// PJRT path, 0 ("per-model registry default") on the graph path.
+fn device_from_args(args: &Args, default_tile: usize) -> Result<DeviceConfig> {
+    Ok(DeviceConfig::new(
+        args.usize_or("tile", default_tile)?,
+        (8, 8, 8),
+        args.f32_or("gain", 8.0)?,
+        0.5,
+    ))
+}
+
+/// The per-layer numeric plan for graph serving/eval: `--plan FILE`
+/// loads a JSON plan; otherwise every layer runs the `--backend`
+/// selector uniformly at the `--tile`/`--gain` device point. Without
+/// `--tile`, tile 0 is passed through — the executor substitutes each
+/// model's registry `default_tile`.
+fn graph_plan_from_args(args: &Args) -> Result<GraphPlan> {
+    if let Some(path) = args.get("plan") {
+        // A plan file is the complete per-layer assignment: uniform
+        // device/backend flags alongside it would be silently ignored.
+        for flag in ["backend", "backends", "tile", "gain", "f32"] {
+            if args.has(flag) {
+                bail!("--plan supplies the full per-layer plan; drop --{flag}");
+            }
+        }
+        return GraphPlan::load(path);
+    }
+    Ok(GraphPlan::uniform(LayerPlan::new(
+        serving_backend_from_args(args)?,
+        device_from_args(args, 0)?,
+    )))
+}
+
 /// Per-model FLOAT32 pretraining budget (steps) — enough for each mini
 /// archetype to reach a strong baseline on its synthetic task.
 fn pretrain_steps(model: &str, flag: usize) -> usize {
@@ -129,6 +191,7 @@ fn pretrain_steps(model: &str, flag: usize) -> usize {
 }
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
+    args.check_known(&["artifacts", "ckpt", "models", "steps", "seed", "threads"])?;
     let eng = engine(args)?;
     let ckpt = args.str_or("ckpt", "checkpoints");
     let steps_flag = args.usize_or("steps", 0)?;
@@ -159,6 +222,10 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 }
 
 fn cmd_table2(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "ckpt", "out", "models", "backend", "backends", "repeats",
+        "samples", "fast", "threads",
+    ])?;
     let eng = engine(args)?;
     let ckpt = args.str_or("ckpt", "checkpoints");
     let out = args.str_or("out", "reports");
@@ -192,6 +259,10 @@ fn cmd_table2(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig5(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "ckpt", "out", "models", "host", "backend", "backends",
+        "tile", "threads",
+    ])?;
     let out = args.str_or("out", "reports");
     let gains = [1.0, 8.0, 16.0];
     if args.bool("host") {
@@ -216,7 +287,38 @@ fn cmd_fig5(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `eval-graph`: whole-network per-layer accounting on the pure-Rust
+/// layer graphs — no artifacts anywhere on the path.
+fn cmd_eval_graph(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "models", "plan", "samples", "batch", "seed", "out", "backend",
+        "backends", "f32", "tile", "gain", "threads",
+    ])?;
+    let out = args.str_or("out", "reports");
+    let plan = graph_plan_from_args(args)?;
+    let sel = model_list(args);
+    let samples = args.usize_or("samples", 64)?;
+    let batch = args.usize_or("batch", 32)?;
+    let seed = args.u64_or("seed", 0x5eed)?;
+    eprintln!("[eval-graph] {sel:?} plan: {}", plan.summary());
+    let rows = abfp::sweep::graph::run(
+        &sel,
+        &plan,
+        samples,
+        batch,
+        seed,
+        args.usize_or("threads", 0)?,
+    )?;
+    abfp::sweep::graph::write_reports(&out, &rows, &plan)?;
+    println!("{}", abfp::sweep::graph::render(&rows, &plan));
+    eprintln!("reports written to {out}/graph.{{md,csv,json}}");
+    Ok(())
+}
+
 fn cmd_finetune(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifacts", "ckpt", "out", "models", "steps", "bits", "threads",
+    ])?;
     let eng = engine(args)?;
     let ckpt = args.str_or("ckpt", "checkpoints");
     let out = args.str_or("out", "reports");
@@ -241,6 +343,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
 }
 
 fn cmd_figs1(args: &Args) -> Result<()> {
+    args.check_known(&["out", "repeats", "rows", "backend", "backends", "threads"])?;
     let out = args.str_or("out", "reports");
     let repeats = args.usize_or("repeats", 3)?;
     let rows = args.usize_or("rows", figs1::ROWS)?;
@@ -260,6 +363,7 @@ fn cmd_figs1(args: &Args) -> Result<()> {
 }
 
 fn cmd_bits(args: &Args) -> Result<()> {
+    args.check_known(&["out", "threads"])?;
     let out = args.str_or("out", "reports");
     bits::write_reports(&out)?;
     println!("{}", bits::render(8, 8, 8, 128, &[0, 1, 2, 3, 4]));
@@ -267,6 +371,7 @@ fn cmd_bits(args: &Args) -> Result<()> {
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {
+    args.check_known(&["out", "threads"])?;
     let out = args.str_or("out", "reports");
     energy::write_reports(&out)?;
     println!("{}", energy::render());
@@ -274,36 +379,70 @@ fn cmd_energy(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let artifacts = args.str_or("artifacts", "artifacts");
-    let ckpt = args.str_or("ckpt", "checkpoints");
+    args.check_known(&[
+        "artifacts", "ckpt", "models", "requests", "tile", "gain", "backend",
+        "backends", "f32", "bind", "batch", "wait-ms", "http", "threads",
+        "graph", "plan", "queue", "seed",
+    ])?;
+    // Flags must never be silently ignored across the two worker
+    // paths: `serve --plan mixed.json` without `--graph` would start
+    // PJRT workers and never load the plan; `serve --graph --artifacts
+    // DIR` would serve the seeded graphs while claiming a directory.
+    if args.bool("graph") {
+        for flag in ["artifacts", "ckpt"] {
+            if args.has(flag) {
+                bail!("--{flag} does not apply to graph serving (seeded graphs, no artifacts)");
+            }
+        }
+    } else {
+        for flag in ["plan", "queue", "seed"] {
+            if args.has(flag) {
+                bail!("--{flag} only applies to graph serving; add --graph");
+            }
+        }
+    }
     let sel = args
         .list("models")
         .unwrap_or_else(|| vec!["bert".into(), "dlrm".into()]);
     let n_requests = args.usize_or("requests", 256)?;
-    let backend = if args.bool("f32") {
-        BackendKind::Float32
+    let policy =
+        BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?)?;
+
+    let router = if args.bool("graph") {
+        // Artifact-free: the pure-Rust layer graphs under a per-layer
+        // numeric plan. Runs on a fresh checkout.
+        let plan = graph_plan_from_args(args)?;
+        eprintln!(
+            "[serve] starting graph workers for {sel:?} plan {{{}}}",
+            plan.summary()
+        );
+        Router::start_graph(
+            &sel,
+            &plan,
+            policy,
+            args.usize_or("queue", 1024)?,
+            args.u64_or("seed", 0x5eed)?,
+            args.usize_or("threads", 0)?,
+        )?
     } else {
-        BackendKind::parse(&backend_flag(args, "abfp"))?
+        let artifacts = args.str_or("artifacts", "artifacts");
+        let ckpt = args.str_or("ckpt", "checkpoints");
+        let backend = serving_backend_from_args(args)?;
+        let device = device_from_args(args, 128)?;
+        let cfg = WorkerConfig {
+            backend,
+            device: Some(device),
+            policy,
+            threads: args.usize_or("threads", 0)?,
+        };
+        // The serve manifest line: exact backend configuration, machine
+        // readable, so a served deployment is reproducible from its log.
+        eprintln!(
+            "[serve] starting workers for {sel:?} backend-config {}",
+            backend.build(device, 0).config_json().to_string()
+        );
+        Router::start(&artifacts, &ckpt, &sel, cfg)?
     };
-    let device = DeviceConfig::new(
-        args.usize_or("tile", 128)?,
-        (8, 8, 8),
-        args.f32_or("gain", 8.0)?,
-        0.5,
-    );
-    let cfg = WorkerConfig {
-        backend,
-        device: Some(device),
-        policy: BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?),
-        threads: args.usize_or("threads", 0)?,
-    };
-    // The serve manifest line: exact backend configuration, machine
-    // readable, so a served deployment is reproducible from its log.
-    eprintln!(
-        "[serve] starting workers for {sel:?} backend-config {}",
-        backend.build(device, 0).config_json().to_string()
-    );
-    let router = Router::start(&artifacts, &ckpt, &sel, cfg)?;
 
     // `--http PORT` (bare `--http` = 8080): serve network traffic until
     // stdin closes, then shut down gracefully and print the stats.
@@ -397,29 +536,89 @@ fn print_server_stats(router: &Router) -> Result<()> {
 /// `bench-serve`: the serving benchmark — HTTP server + load generator
 /// over loopback, one process. The default worker is the artifact-free
 /// echo harness so the serving stack itself (HTTP parse, router, dynamic
-/// batcher, stats) is measurable on any checkout; `--models` swaps in
-/// real artifact-backed workers.
+/// batcher, stats) is measurable on any checkout; `--graph` swaps in the
+/// pure-Rust layer-graph workers (real multi-layer compute, still
+/// artifact-free); `--models` without `--graph` benches real
+/// artifact-backed workers.
 fn cmd_bench_serve(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "requests", "concurrency", "qps", "batch", "wait-ms", "bind", "port",
+        "models", "backend", "backends", "f32", "tile", "gain", "artifacts",
+        "ckpt", "elems", "queue", "delay-ms", "threads", "graph", "plan", "seed",
+    ])?;
+    // Refuse flag combinations that would silently bench a different
+    // worker configuration than the one named: graph-only flags without
+    // --graph, echo-only flags when echo is not the harness, --queue on
+    // the artifact path (which uses its fixed internal queue).
+    if args.bool("graph") {
+        for flag in ["artifacts", "ckpt"] {
+            if args.has(flag) {
+                bail!("--{flag} does not apply to graph serving (seeded graphs, no artifacts)");
+            }
+        }
+    } else {
+        for flag in ["plan", "seed"] {
+            if args.has(flag) {
+                bail!("--{flag} only applies to graph serving; add --graph");
+            }
+        }
+    }
+    if args.bool("graph") || args.has("models") {
+        for flag in ["elems", "delay-ms"] {
+            if args.has(flag) {
+                bail!("--{flag} only applies to the echo harness (drop --graph/--models)");
+            }
+        }
+    }
+    if args.has("models") && !args.bool("graph") && args.has("queue") {
+        bail!("--queue is not configurable for artifact-backed workers");
+    }
+    if !args.bool("graph") && !args.has("models") {
+        // Echo computes identity: numeric/device flags would produce a
+        // report that looks like a backend measurement but isn't.
+        for flag in ["backend", "backends", "tile", "gain", "f32", "artifacts", "ckpt"] {
+            if args.has(flag) {
+                bail!(
+                    "--{flag} has no effect on the echo harness; \
+                     add --graph or --models to bench real compute"
+                );
+            }
+        }
+    }
     let requests = args.usize_or("requests", 256)?;
     let concurrency = args.usize_or("concurrency", 8)?;
     let qps = args.f32_or("qps", 0.0)? as f64;
     let policy =
-        BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?);
+        BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?)?;
     let bind = args.str_or("bind", "127.0.0.1");
     let port = args.port_or("port", 0)?;
 
     // `targets` is every (model, in_elems) the load generator will
     // drive — all served models, not just the first, so nobody pays
     // worker startup for a model the bench then ignores.
-    let (router, targets) = if let Some(sel) = args.list("models") {
+    let (router, targets) = if args.bool("graph") {
+        // Pure-Rust layer-graph workers: real multi-layer inference on
+        // a fresh checkout, no artifacts.
+        let sel = model_list(args);
+        let plan = graph_plan_from_args(args)?;
+        eprintln!("[bench-serve] graph workers for {sel:?} plan {{{}}}", plan.summary());
+        let router = Router::start_graph(
+            &sel,
+            &plan,
+            policy,
+            args.usize_or("queue", 1024)?,
+            args.u64_or("seed", 0x5eed)?,
+            args.usize_or("threads", 0)?,
+        )?;
+        let mut targets = Vec::new();
+        for model in sel {
+            targets.push((model.clone(), graph::meta(&model)?.in_elems()));
+        }
+        (router, targets)
+    } else if let Some(sel) = args.list("models") {
         // Real artifact-backed workers (needs `make artifacts`).
-        let backend = BackendKind::parse(&backend_flag(args, "abfp"))?;
-        let device = DeviceConfig::new(
-            args.usize_or("tile", 128)?,
-            (8, 8, 8),
-            args.f32_or("gain", 8.0)?,
-            0.5,
-        );
+        let backend = serving_backend_from_args(args)?;
+        let device = device_from_args(args, 128)?;
         let cfg = WorkerConfig {
             backend,
             device: Some(device),

@@ -1,5 +1,10 @@
-//! Model registry: binds a manifest [`crate::runtime::ModelInfo`] to its
-//! artifact names, dataset, and checkpoint I/O.
+//! Model helpers: artifact-name conventions, parameter init, and
+//! checkpoint I/O for the six archetypes.
+//!
+//! Model *metadata* (paper name, input/target shapes, default device
+//! tile) lives in one place — [`crate::graph::registry`] — and is
+//! re-exported here; this module keeps only what binds a model to its
+//! AOT artifacts and checkpoints.
 
 mod checkpoint;
 
@@ -10,20 +15,15 @@ use anyhow::Result;
 use crate::runtime::{Engine, ModelInfo};
 use crate::tensor::Tensor;
 
-/// All six archetypes, in the paper's Table I order.
-pub const MODEL_NAMES: [&str; 6] = ["cnn", "ssd", "unet", "gru", "bert", "dlrm"];
+/// All six archetypes, in the paper's Table I order (from the graph
+/// registry — the single source of truth for model metadata).
+pub use crate::graph::registry::MODEL_NAMES;
 
-/// Human-readable labels mapping archetypes to the paper's DNNs.
-pub fn paper_name(model: &str) -> &'static str {
-    match model {
-        "cnn" => "ResNet50 (MiniCNN)",
-        "ssd" => "SSD-ResNet34 (MiniSSD)",
-        "unet" => "3D U-Net (MiniUNet)",
-        "gru" => "RNN-T (MiniGRU)",
-        "bert" => "BERT-Large (MiniBERT)",
-        "dlrm" => "DLRM (MiniDLRM)",
-        _ => "?",
-    }
+/// Human-readable label mapping an archetype to the paper's DNN.
+/// Unknown names are an error carrying the accepted roster (this used
+/// to return a silent `"?"`).
+pub fn paper_name(model: &str) -> Result<&'static str> {
+    Ok(crate::graph::registry::meta(model)?.paper_name)
 }
 
 /// Artifact-name helpers (must match `python/compile/aot.py`).
@@ -77,7 +77,9 @@ mod tests {
     #[test]
     fn paper_names_cover_all() {
         for m in MODEL_NAMES {
-            assert_ne!(paper_name(m), "?");
+            assert!(!paper_name(m).unwrap().is_empty());
         }
+        let err = paper_name("resnet").unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
     }
 }

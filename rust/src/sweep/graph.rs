@@ -1,0 +1,202 @@
+//! `eval-graph`: per-layer numeric accounting for graph-served models.
+//!
+//! Runs each selected archetype's seeded
+//! [`ModelGraph`](crate::graph::ModelGraph) under a [`GraphPlan`] on
+//! the pure-Rust executor and reports, **per `Linear` layer**, the
+//! backend it ran on and that backend's
+//! [`BackendStats`](crate::backend::BackendStats) — matmuls, MACs, ADC
+//! conversions and the saturated fraction. This is the whole-network
+//! view the paper's per-layer analysis (Fig. 5) implies but the
+//! artifact sweeps cannot give without a compiled artifact: which
+//! layers clip under an aggressive plan, and where the conversions
+//! concentrate. Artifact-free; runs on a fresh checkout.
+
+use anyhow::Result;
+
+use crate::data::dataset_for;
+use crate::graph::{build, builders::GRAPH_SEED, GraphExecutor, GraphPlan};
+use crate::json::{self, Value};
+use crate::report::{write_report, Table};
+use crate::rng::Pcg64;
+use crate::sweep::eval::EVAL_DATA_SEED;
+
+/// One `Linear` layer's accounting after the eval run.
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    pub model: String,
+    pub layer: usize,
+    pub out_features: usize,
+    pub backend: String,
+    /// The exact backend configuration serving this layer.
+    pub config: Value,
+    pub matmuls: u64,
+    pub macs: u64,
+    pub conversions: u64,
+    pub saturated: u64,
+    pub sat_frac: f64,
+}
+
+/// Evaluate `samples` dataset examples per model (batched) under
+/// `plan` and collect the per-layer stats. `seed` keys the ABFP noise
+/// streams; `threads` bounds the simulator pool (0 = process default).
+pub fn run(
+    models: &[String],
+    plan: &GraphPlan,
+    samples: usize,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<Vec<LayerRow>> {
+    let batch = batch.max(1);
+    let samples = samples.max(1);
+    let mut rows = Vec::new();
+    for model in models {
+        let graph = build(model, GRAPH_SEED)?;
+        let in_elems = graph.in_elems();
+        let mut exec = GraphExecutor::new(graph, plan, seed, threads)?;
+        let ds = dataset_for(model)?;
+        // Fixed eval stream: rows are comparable across plans.
+        let mut rng = Pcg64::seeded(EVAL_DATA_SEED);
+        // The tail batch is truncated, never rounded up: the reported
+        // per-layer counts cover exactly `samples` examples.
+        let mut remaining = samples;
+        while remaining > 0 {
+            let bn = batch.min(remaining);
+            remaining -= bn;
+            let b = ds.batch(&mut rng, bn);
+            exec.forward(b.x.reshape(&[bn, in_elems])?)?;
+        }
+        for ls in exec.layer_stats() {
+            rows.push(LayerRow {
+                model: model.clone(),
+                layer: ls.layer,
+                out_features: ls.out_features,
+                backend: ls.backend.to_string(),
+                config: ls.config,
+                matmuls: ls.stats.matmuls,
+                macs: ls.stats.macs,
+                conversions: ls.stats.conversions,
+                saturated: ls.stats.saturated,
+                sat_frac: ls.stats.sat_frac(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+fn table(rows: &[LayerRow]) -> Table {
+    let mut t = Table::new(
+        "eval-graph — per-layer backend accounting",
+        &[
+            "model", "layer", "out", "backend", "matmuls", "macs", "conversions",
+            "saturated", "sat%",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.layer.to_string(),
+            r.out_features.to_string(),
+            r.backend.clone(),
+            r.matmuls.to_string(),
+            r.macs.to_string(),
+            r.conversions.to_string(),
+            r.saturated.to_string(),
+            format!("{:.3}", 100.0 * r.sat_frac),
+        ]);
+    }
+    t
+}
+
+/// Render the markdown table plus the plan summary line.
+pub fn render(rows: &[LayerRow], plan: &GraphPlan) -> String {
+    format!("plan: {}\n\n{}", plan.summary(), table(rows).to_markdown())
+}
+
+fn rows_json(rows: &[LayerRow], plan: &GraphPlan) -> Value {
+    json::obj(vec![
+        ("plan", plan.to_json()),
+        (
+            "rows",
+            json::arr(
+                rows.iter()
+                    .map(|r| {
+                        json::obj(vec![
+                            ("model", json::s(&r.model)),
+                            ("layer", json::num(r.layer as f64)),
+                            ("out_features", json::num(r.out_features as f64)),
+                            ("backend", json::s(&r.backend)),
+                            ("config", r.config.clone()),
+                            ("matmuls", json::num(r.matmuls as f64)),
+                            ("macs", json::num(r.macs as f64)),
+                            ("conversions", json::num(r.conversions as f64)),
+                            ("saturated", json::num(r.saturated as f64)),
+                            ("sat_frac", json::num(r.sat_frac)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write `graph.md` / `graph.csv` / `graph.json` under `out_dir`. The
+/// JSON carries the full plan and each layer's exact backend config, so
+/// every row traces back to its device point.
+pub fn write_reports(out_dir: &str, rows: &[LayerRow], plan: &GraphPlan) -> Result<()> {
+    write_report(out_dir, "graph.md", &render(rows, plan))?;
+    write_report(out_dir, "graph.csv", &table(rows).to_csv())?;
+    write_report(out_dir, "graph.json", &rows_json(rows, plan).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abfp::DeviceConfig;
+    use crate::backend::BackendKind;
+    use crate::graph::LayerPlan;
+
+    fn mixed_plan() -> GraphPlan {
+        GraphPlan::edges_float32(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+        ))
+    }
+
+    #[test]
+    fn mixed_plan_rows_report_per_layer_backends() {
+        let rows = run(&["dlrm".to_string()], &mixed_plan(), 8, 4, 1, 1).unwrap();
+        assert_eq!(rows.len(), 3, "dlrm has 3 linear layers");
+        assert_eq!(rows[0].backend, "float32");
+        assert_eq!(rows[1].backend, "abfp");
+        assert_eq!(rows[2].backend, "float32");
+        // The FLOAT32 edges never convert; the analog interior does.
+        assert_eq!(rows[0].conversions, 0);
+        assert!(rows[1].conversions > 0);
+        assert!(rows.iter().all(|r| r.matmuls == 2 && r.macs > 0));
+        // Two batches of 4 through a (64, 64) interior layer.
+        assert_eq!(rows[1].macs, 2 * 4 * 64 * 64);
+        // Samples are honoured exactly: 6 examples at batch 4 = 4 + 2,
+        // never rounded up to 8 (the old div_ceil overcount).
+        let rows = run(&["dlrm".to_string()], &mixed_plan(), 6, 4, 1, 1).unwrap();
+        assert_eq!(rows[1].macs, 6 * 64 * 64);
+
+        let text = render(&rows, &mixed_plan());
+        assert!(text.contains("plan: default=abfp"), "{text}");
+        assert!(text.contains("| dlrm"), "{text}");
+        let j = rows_json(&rows, &mixed_plan()).to_string();
+        assert!(j.contains("\"backend\":\"abfp\""), "{j}");
+        assert!(j.contains("\"plan\""), "{j}");
+    }
+
+    #[test]
+    fn rows_are_deterministic_for_a_seed() {
+        let a = run(&["gru".to_string()], &mixed_plan(), 8, 4, 3, 1).unwrap();
+        let b = run(&["gru".to_string()], &mixed_plan(), 8, 4, 3, 1).unwrap();
+        let key = |rows: &[LayerRow]| -> Vec<(u64, u64)> {
+            rows.iter().map(|r| (r.conversions, r.saturated)).collect()
+        };
+        assert_eq!(key(&a), key(&b));
+    }
+}

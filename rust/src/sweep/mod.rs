@@ -3,6 +3,8 @@
 //!   [`eval`]    — shared ABFP/FLOAT32 evaluation over a dataset
 //!   [`table2`]  — Table II + Fig. 4 + Table S2 quality grids
 //!   [`fig5`]    — per-layer differential-noise std (Fig. 5 / Fig. S2)
+//!   [`graph`]   — per-layer backend accounting for graph-plan serving
+//!                 (artifact-free whole-network view; `eval-graph`)
 //!   [`table3`]  — QAT vs DNF finetuning recovery (Table III / S3)
 //!   [`figs1`]   — numeric error distributions (Fig. S1, Appendix A)
 //!   [`bits`]    — captured-bit windows (Fig. 2)
@@ -13,5 +15,6 @@ pub mod energy;
 pub mod eval;
 pub mod fig5;
 pub mod figs1;
+pub mod graph;
 pub mod table2;
 pub mod table3;

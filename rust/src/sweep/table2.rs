@@ -137,9 +137,11 @@ fn noise_seed(rep: usize) -> u64 {
 pub fn render_table2(sweeps: &[ModelSweep], grid: &SweepGrid) -> String {
     let mut out = String::new();
     for sw in sweeps {
+        // Rendering must not fail a finished sweep over a label, but an
+        // unregistered name degrades to itself — visibly — not to "?".
         out.push_str(&format!(
             "\n#### {} — FLOAT32: {:.4}\n\n",
-            crate::models::paper_name(&sw.model),
+            crate::models::paper_name(&sw.model).unwrap_or(&sw.model),
             sw.float32
         ));
         for backend in sw.backends() {

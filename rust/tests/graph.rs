@@ -1,0 +1,214 @@
+//! Integration tests for the pure-Rust layer-graph serving path:
+//! FLOAT32-plan parity against the host reference, bit-exact
+//! determinism across thread counts, plan-file round-trips, and the
+//! full mixed-plan HTTP serving loop. Everything here runs on a fresh
+//! checkout — no artifacts anywhere.
+
+use std::sync::Arc;
+
+use abfp::abfp::DeviceConfig;
+use abfp::backend::BackendKind;
+use abfp::coordinator::{BatchPolicy, HttpServer, ModelExecutor, Router};
+use abfp::graph::{
+    build, builders::GRAPH_SEED, GraphExecutor, GraphPlan, LayerPlan, MODEL_NAMES,
+};
+use abfp::json;
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
+
+fn batch_for(model: &str, b: usize, seed: u64) -> Tensor {
+    let g = build(model, GRAPH_SEED).unwrap();
+    let mut rng = Pcg64::seeded(seed);
+    Tensor::new(&[b, g.in_elems()], rng.normal_vec(b * g.in_elems())).unwrap()
+}
+
+fn mixed_plan() -> GraphPlan {
+    GraphPlan::edges_float32(LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+    ))
+}
+
+#[test]
+fn float32_plan_matches_the_host_reference_on_every_archetype() {
+    // The FLOAT32 backend is bit-identical to Tensor::matmul_nt
+    // (tests/backend_parity.rs), so a float32 plan through the executor
+    // must equal the graph's host reference forward exactly — not
+    // approximately — on all six archetypes.
+    for model in MODEL_NAMES {
+        let graph = build(model, GRAPH_SEED).unwrap();
+        let x = batch_for(model, 3, 0xf10a + graph.in_elems() as u64);
+        let want = graph.host_forward(&x).unwrap();
+        let mut exec =
+            GraphExecutor::new(graph, &GraphPlan::float32(), 1, 0).unwrap();
+        let got = exec.execute(3, x).unwrap();
+        assert_eq!(got.outputs.len(), 1, "{model}");
+        assert_eq!(got.outputs[0], want, "{model}: float32 plan diverged");
+    }
+}
+
+#[test]
+fn noisy_graph_inference_is_bit_exact_across_thread_counts() {
+    // The serving determinism contract extended to whole models: a
+    // mixed plan with ABFP ADC noise must produce bit-identical outputs
+    // for 1, 2, and 8 simulator threads (coordinate-keyed noise — the
+    // schedule can never leak into results).
+    let plan = mixed_plan();
+    for model in ["cnn", "bert"] {
+        let graph = build(model, GRAPH_SEED).unwrap();
+        let x = batch_for(model, 16, 0xd17e);
+        let run = |threads: usize| {
+            let mut exec =
+                GraphExecutor::new(graph.clone(), &plan, 42, threads).unwrap();
+            exec.execute(16, x.clone()).unwrap().outputs.remove(0)
+        };
+        let base = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(base, run(threads), "{model} diverged at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn plan_file_roundtrip_drives_the_executor() {
+    // A mixed-backend plan survives to_json -> disk -> load, and the
+    // loaded plan resolves exactly like the original.
+    let mut plan = mixed_plan();
+    plan.layers.insert(
+        1,
+        LayerPlan::new(BackendKind::Bfp, DeviceConfig::new(16, (6, 6, 8), 1.0, 0.0)),
+    );
+    let path = std::env::temp_dir()
+        .join(format!("abfp_graph_plan_{}.json", std::process::id()));
+    std::fs::write(&path, plan.to_json().to_string()).unwrap();
+    let loaded = GraphPlan::load(path.to_str().unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, plan);
+
+    // The loaded plan actually assigns per-layer backends in a running
+    // executor. cnn has 4 Linear layers, so every resolution rule fires
+    // at once: float32 first/last edges, the explicit bfp override at
+    // 1, and the abfp default for the remaining interior layer.
+    let graph = build("cnn", GRAPH_SEED).unwrap();
+    let x = batch_for("cnn", 2, 7);
+    let mut exec = GraphExecutor::new(graph, &loaded, 5, 1).unwrap();
+    exec.execute(2, x).unwrap();
+    let stats = exec.layer_stats();
+    assert_eq!(stats.len(), 4);
+    assert_eq!(stats[0].backend, "float32");
+    assert_eq!(stats[1].backend, "bfp");
+    assert_eq!(stats[2].backend, "abfp");
+    assert_eq!(stats[3].backend, "float32");
+    assert!(GraphPlan::load("/nonexistent/plan.json").is_err());
+}
+
+#[test]
+fn mixed_plan_serves_over_http_with_layer_metadata() {
+    // The acceptance path end to end: a mixed per-layer plan loads from
+    // JSON text, serves real multi-layer inference over HTTP on a fresh
+    // checkout, exposes layer count + plan summary in GET /v1/models,
+    // and reports per-layer backend stats after traffic.
+    let text = r#"{
+      "default": {"backend": "abfp",
+                  "device": {"n": 32, "bits_w": 8, "bits_x": 8,
+                             "bits_y": 8, "gain": 4, "noise_lsb": 0.5}},
+      "first": {"backend": "float32"},
+      "last":  {"backend": "float32"}
+    }"#;
+    let plan = GraphPlan::parse(text).unwrap();
+    let router = Arc::new(
+        Router::start_graph(
+            &["dlrm".to_string(), "gru".to_string()],
+            &plan,
+            BatchPolicy::new(8, 1).unwrap(),
+            64,
+            0x5eed,
+            1,
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let mut c = abfp::coordinator::loadgen::Conn::open(&server.addr().to_string())
+        .unwrap();
+
+    // Roster + per-model executor metadata.
+    let (status, body) = c.request("GET", "/v1/models", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    let names: Vec<&str> = v
+        .get("models")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.as_str().unwrap())
+        .collect();
+    assert_eq!(names, vec!["dlrm", "gru"]);
+    let detail = v.get("detail").unwrap().get("dlrm").unwrap();
+    assert_eq!(detail.get("executor").unwrap().as_str().unwrap(), "graph");
+    assert!(detail.get("layers").unwrap().as_f64().unwrap() >= 5.0);
+    assert_eq!(detail.get("linear_layers").unwrap().as_usize().unwrap(), 3);
+    let summary = detail.get("plan").unwrap().as_str().unwrap();
+    assert!(summary.contains("first=float32"), "{summary}");
+    assert!(summary.contains("abfp"), "{summary}");
+
+    // Real inference through the mixed plan: dlrm wants 12 elements.
+    let req = format!(
+        r#"{{"data": [{}]}}"#,
+        (0..12).map(|i| format!("0.{i}")).collect::<Vec<_>>().join(", ")
+    );
+    let (status, body) = c.request("POST", "/v1/models/dlrm:predict", &req).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = json::parse(&body).unwrap();
+    let out = &resp.get("outputs").unwrap().as_arr().unwrap()[0];
+    assert_eq!(out.get("shape").unwrap().as_shape().unwrap(), vec![1]);
+    let y = out.get("data").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+    assert!(y.is_finite(), "{body}");
+
+    // Wrong width still 400s without wedging the graph worker.
+    let (status, _) =
+        c.request("POST", "/v1/models/dlrm:predict", r#"{"data": [1, 2]}"#).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = c.request("POST", "/v1/models/dlrm:predict", &req).unwrap();
+    assert_eq!(status, 200);
+
+    let s = router.stats("dlrm").unwrap();
+    assert_eq!(s.requests, 2);
+    assert_eq!(s.failed_requests, 0);
+    drop(server);
+}
+
+#[test]
+fn graph_and_pjrt_flow_through_one_worker_loop() {
+    // The redesign's API claim: echo, graph, and PJRT all implement
+    // ModelExecutor, so the trait surface (in_elems/max_batch/describe)
+    // is uniform. Echo + graph are constructible on a fresh checkout;
+    // verify the metadata they report through the shared trait object.
+    let mut execs: Vec<Box<dyn ModelExecutor>> = vec![
+        Box::new(
+            abfp::coordinator::EchoExecutor::new(4, std::time::Duration::ZERO)
+                .unwrap(),
+        ),
+        Box::new(
+            GraphExecutor::new(
+                build("gru", GRAPH_SEED).unwrap(),
+                &GraphPlan::float32(),
+                1,
+                1,
+            )
+            .unwrap(),
+        ),
+    ];
+    let kinds: Vec<&str> = execs.iter().map(|e| e.kind()).collect();
+    assert_eq!(kinds, vec!["echo", "graph"]);
+    for e in &mut execs {
+        let n = e.in_elems();
+        assert!(n > 0);
+        assert!(e.max_batch() >= 1);
+        let rows = e.pack_rows(2).max(2);
+        let out = e.execute(2, Tensor::zeros(&[rows, n])).unwrap();
+        assert!(!out.outputs.is_empty());
+        assert!(out.padded_batch >= 2);
+        assert!(e.describe().to_string().contains("executor"));
+    }
+}

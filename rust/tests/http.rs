@@ -47,7 +47,7 @@ fn prom_value(metrics: &str, line_prefix: &str) -> f64 {
 #[test]
 fn loopback_end_to_end() {
     let (mut server, _router) =
-        echo_server(8, BatchPolicy::new(4, 2), 256, Duration::ZERO);
+        echo_server(8, BatchPolicy::new(4, 2).unwrap(), 256, Duration::ZERO);
     let addr = server.addr();
     let mut c = connect(addr);
 
@@ -152,7 +152,7 @@ fn loopback_end_to_end() {
 #[test]
 fn executor_failure_maps_to_500_and_worker_survives() {
     let (_server, router) =
-        echo_server(4, BatchPolicy::new(4, 1), 64, Duration::ZERO);
+        echo_server(4, BatchPolicy::new(4, 1).unwrap(), 64, Duration::ZERO);
     let mut c = connect(_server.addr());
 
     let poison = format!(
@@ -182,7 +182,7 @@ fn saturated_queue_answers_429_not_hangs() {
     // serving afterwards.
     let (_server, _router) = echo_server(
         2,
-        BatchPolicy::new(1, 0),
+        BatchPolicy::new(1, 0).unwrap(),
         2,
         Duration::from_millis(40),
     );
@@ -218,7 +218,7 @@ fn open_loop_reports_target_pacing() {
     // 20 requests at 200 qps should take ~100 ms of schedule; the
     // report must count them all and produce ordered quantiles.
     let (_server, _router) =
-        echo_server(4, BatchPolicy::new(8, 1), 128, Duration::ZERO);
+        echo_server(4, BatchPolicy::new(8, 1).unwrap(), 128, Duration::ZERO);
     let report = loadgen::run(&loadgen::LoadSpec {
         addr: _server.addr().to_string(),
         model: "echo".to_string(),
