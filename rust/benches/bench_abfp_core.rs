@@ -5,6 +5,7 @@
 //! device geometry).
 
 use abfp::abfp::{Device, DeviceConfig};
+use abfp::backend::StagedTiles;
 use abfp::benchkit::{black_box, Bench};
 use abfp::numerics::bf16_round;
 use abfp::parallel;
@@ -54,10 +55,9 @@ fn main() {
             black_box(dev.matmul(&x, &w).unwrap());
         })
         .clone();
-    println!(
-        "    -> staged reuse speedup over per-call staging: {:.2}x",
-        r_restage.median_ns / r_reuse.median_ns
-    );
+    let reuse_speedup = r_restage.median_ns / r_reuse.median_ns;
+    println!("    -> staged reuse speedup over per-call staging: {reuse_speedup:.2}x");
+    b.note("staged_reuse_speedup_t128", reuse_speedup);
 
     // Multi-thread scaling at the paper's preferred tile (same cfg +
     // staged weights as the reuse case above). Coordinate-keyed ADC
@@ -81,11 +81,64 @@ fn main() {
     }
     let single = medians[0].1;
     for &(threads, median) in &medians[1..] {
-        println!(
-            "    -> {threads} threads: {:.2}x over single-thread",
-            single / median
-        );
+        let speedup = single / median;
+        println!("    -> {threads} threads: {speedup:.2}x over single-thread");
+        b.note(&format!("staged_t128_speedup_t{threads}"), speedup);
     }
+
+    // Batch-1 wide layer: the serving shape that motivated the 2-D
+    // cell partition. One request row against a (4096, 1024) staged
+    // weight — row chunking would pin this to a single core; the
+    // row × column-block cells fan it out. The acceptance number for
+    // the kernel rewrite is the >= 2x median speedup at 4+ threads,
+    // recorded in the JSON as b1_w4096_speedup_t{N}.
+    let x1 = rand_t(&mut rng, &[1, 1024]);
+    let w1 = rand_t(&mut rng, &[4096, 1024]);
+    let cfg1 = DeviceConfig::new(128, (8, 8, 8), 8.0, 0.5);
+    let staged1 = Device::new(cfg1, 7).stage_weights(&w1).unwrap();
+    let mut b1_medians = Vec::new();
+    for &threads in &thread_cases {
+        let r = b
+            .run(&format!("matmul_staged_b1_w4096_threads{threads}"), 1, || {
+                let mut dev = Device::new(cfg1, 7);
+                dev.set_threads(threads);
+                black_box(dev.matmul_staged(&x1, &staged1).unwrap());
+            })
+            .clone();
+        b1_medians.push((threads, r.median_ns));
+    }
+    let b1_single = b1_medians[0].1;
+    for &(threads, median) in &b1_medians[1..] {
+        let speedup = b1_single / median;
+        println!("    -> batch-1 wide, {threads} threads: {speedup:.2}x over single-thread");
+        b.note(&format!("b1_w4096_speedup_t{threads}"), speedup);
+    }
+
+    // Zero-allocation steady state: the same batch-1 case through the
+    // matmul_staged_into seam with warm reusable buffers, vs the
+    // allocating wrapper. Both sides reuse one device (the row cursor
+    // only re-keys noise, cost-identical), so the delta is exactly the
+    // per-request allocation cost a warm serving worker no longer pays.
+    let mut dev_alloc = Device::new(cfg1, 7);
+    let r_alloc = b
+        .run("matmul_staged_b1_w4096_alloc", 1, || {
+            black_box(dev_alloc.matmul_staged(&x1, &staged1).unwrap());
+        })
+        .clone();
+    let mut dev_scratch = Device::new(cfg1, 7);
+    let mut xs_scratch = StagedTiles::default();
+    let mut out_scratch = Tensor::from_vec(Vec::new());
+    let r_scratch = b
+        .run("matmul_staged_b1_w4096_scratch_reuse", 1, || {
+            dev_scratch
+                .matmul_staged_into(&x1, &staged1, &mut xs_scratch, &mut out_scratch)
+                .unwrap();
+            black_box(out_scratch.data().len());
+        })
+        .clone();
+    let scratch_speedup = r_alloc.median_ns / r_scratch.median_ns;
+    println!("    -> scratch reuse over per-call allocation: {scratch_speedup:.2}x");
+    b.note("b1_w4096_scratch_reuse_speedup", scratch_speedup);
 
     // The FLOAT32 reference for the simulator's overhead factor.
     b.run("float32_matmul", 1, || {
@@ -98,4 +151,10 @@ fn main() {
         let mut dev = Device::new(cfg, 7);
         black_box(dev.matmul(&x, &w).unwrap());
     });
+
+    // The machine-readable perf trajectory (BENCHKIT_OUT overrides the
+    // path; CI prints this file after its smoke leg).
+    let out_path = std::env::var("BENCHKIT_OUT")
+        .unwrap_or_else(|_| "reports/bench_core.json".to_string());
+    b.save(&out_path).expect("write bench report");
 }

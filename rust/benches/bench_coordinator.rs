@@ -5,8 +5,13 @@
 use std::sync::mpsc;
 use std::time::Duration;
 
+use abfp::abfp::DeviceConfig;
+use abfp::backend::BackendKind;
 use abfp::benchkit::{black_box, Bench};
 use abfp::coordinator::{collect_batch, BatchPolicy};
+use abfp::graph::{build, builders::GRAPH_SEED, GraphExecutor, GraphPlan, LayerPlan};
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
 
 fn main() {
     let mut b = Bench::new("coordinator");
@@ -55,4 +60,35 @@ fn main() {
         }
         black_box(&xdata);
     });
+
+    // Whole-graph forward on the serving executor: bert under the
+    // mixed plan a deployment would run (FLOAT32 edges, ABFP interior
+    // at the registry tile). Exercises the full per-request path the
+    // worker hot loop drives — staging scratch, cell-parallel kernels,
+    // pooled activations — end to end.
+    let plan = GraphPlan::edges_float32(LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(0, (8, 8, 8), 8.0, 0.5),
+    ));
+    let graph = build("bert", GRAPH_SEED).expect("bert graph");
+    let in_elems = graph.in_elems();
+    let mut exec = GraphExecutor::new(graph, &plan, 7, 0).expect("graph executor");
+    let mut rng = Pcg64::seeded(0xbe27);
+    let x8 = Tensor::new(&[8, in_elems], rng.normal_vec(8 * in_elems)).unwrap();
+    b.run("graph_forward_bert_b8_mixed_plan", 1, || {
+        let y = exec.forward(x8.clone()).unwrap();
+        black_box(y.data().len());
+        exec.recycle_outputs(vec![y]);
+    });
+    // Batch-1 serving latency through the same executor.
+    let x1 = Tensor::new(&[1, in_elems], rng.normal_vec(in_elems)).unwrap();
+    b.run("graph_forward_bert_b1_mixed_plan", 1, || {
+        let y = exec.forward(x1.clone()).unwrap();
+        black_box(y.data().len());
+        exec.recycle_outputs(vec![y]);
+    });
+
+    let out_path = std::env::var("BENCHKIT_OUT")
+        .unwrap_or_else(|_| "reports/bench_coordinator.json".to_string());
+    b.save(&out_path).expect("write bench report");
 }

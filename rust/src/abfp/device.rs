@@ -11,8 +11,10 @@
 //! are gained, pinned by `tests/determinism.rs`:
 //!
 //! * **thread-count independence** — outputs are bit-identical for any
-//!   thread count and any row schedule, so [`Device::matmul_staged`]
-//!   parallelizes freely (row-chunked via [`crate::parallel`]);
+//!   thread count and any work schedule, so [`Device::matmul_staged`]
+//!   parallelizes freely (2-D row × column-block cells via
+//!   [`crate::parallel::par_cell_chunks`] — a batch-1 request against a
+//!   wide layer still fans out across every core);
 //! * **batch-split invariance** — splitting a batch across several
 //!   `matmul_staged` calls produces exactly the rows of the single big
 //!   call (the serving batcher can split however it likes).
@@ -143,6 +145,43 @@ pub struct AbfpError {
     pub conversions: u64,
 }
 
+/// Per-matmul ADC constants, hoisted out of the per-conversion path by
+/// [`Device::adc_consts`] (plain copies of `DeviceConfig`-derived
+/// values; hoisting changes nothing numerically).
+#[derive(Debug, Clone, Copy)]
+struct AdcConsts {
+    /// One output ADC bin, `n * delta_y`.
+    bin: f32,
+    /// ADC clamp range (`n` in normalized units).
+    tau: f32,
+    gain: f32,
+    noise_lsb: f32,
+}
+
+/// One analog dot product + ADC conversion (Eq. 5/7) at output
+/// coordinates `(row, col)`, tile `tile`, returning the post-ADC
+/// quantized value (still in normalized units) and whether the
+/// conversion clamped. Pure: the noise draw is keyed by the
+/// coordinates, not by how many conversions ran before this one, and
+/// the multiplication order of the noise amplitude matches the frozen
+/// reference in `tests/backend_parity.rs` exactly.
+#[inline]
+fn adc_at(
+    noise: &CounterRng,
+    c: AdcConsts,
+    row: u64,
+    col: u64,
+    tile: u64,
+    analog_dot: f32,
+) -> (f32, bool) {
+    let mut pre = c.gain * analog_dot;
+    if c.noise_lsb > 0.0 {
+        let eps = noise.uniform_at(row, col, tile, -1.0, 1.0) * c.noise_lsb * c.bin;
+        pre += eps;
+    }
+    (quantize(pre, c.bin, c.tau), pre.abs() > c.tau)
+}
+
 /// The simulated device: configuration plus its private noise field.
 ///
 /// `noise` is coordinate-keyed (see the module docs): `row_base` is the
@@ -207,14 +246,25 @@ impl Device {
     /// Prepare one length-`n` vector tile into the staging buffers:
     /// BFLOAT16 scale (zero tile -> 1) and symmetric quantization of the
     /// normalized values (Eq. 2). `out` is the flat n-wide destination.
+    ///
+    /// Single pass over the source: the BFLOAT16 rounding lands in
+    /// `out` while the absmax accumulates, then the rounded values are
+    /// quantized in place — `bf16_round` runs once per element, not
+    /// twice (max pass + quantize pass, the pre-perf-pass shape). Bit-
+    /// identical: `bf16_round` is idempotent and the max of rounded
+    /// magnitudes is unchanged (`single_pass_staging_matches_two_pass_
+    /// reference` pins this, and `tests/backend_parity.rs` carries the
+    /// frozen two-pass reference end to end).
     fn scale_tile_into(&self, tile: &[f32], d: f32, out: &mut [f32]) -> f32 {
         let mut m = 0.0f32;
-        for &v in tile {
-            m = m.max(bf16_round(v).abs());
+        for (o, &v) in out.iter_mut().zip(tile) {
+            let r = bf16_round(v);
+            *o = r;
+            m = m.max(r.abs());
         }
         let scale = if bf16_round(m) == 0.0 { 1.0 } else { bf16_round(m) };
-        for (o, &v) in out.iter_mut().zip(tile) {
-            *o = quantize(bf16_round(v) / scale, d, 1.0);
+        for o in out.iter_mut().take(tile.len()) {
+            *o = quantize(*o / scale, d, 1.0);
         }
         for o in out.iter_mut().skip(tile.len()) {
             *o = 0.0;
@@ -222,22 +272,17 @@ impl Device {
         scale
     }
 
-    /// One analog dot product + ADC conversion (Eq. 5/7) at output
-    /// coordinates `(row, col)`, tile `tile`, returning the post-ADC
-    /// quantized value (still in normalized units) and whether the
-    /// conversion clamped. Pure: the noise draw is keyed by the
-    /// coordinates, not by how many conversions ran before this one.
-    #[inline]
-    fn adc_at(&self, row: u64, col: u64, tile: u64, analog_dot: f32) -> (f32, bool) {
-        let bin = self.cfg.output_bin();
-        let tau = self.cfg.n as f32;
-        let mut pre = self.cfg.gain * analog_dot;
-        if self.cfg.noise_lsb > 0.0 {
-            let eps =
-                self.noise.uniform_at(row, col, tile, -1.0, 1.0) * self.cfg.noise_lsb * bin;
-            pre += eps;
+    /// The per-conversion ADC constants, computed once per matmul
+    /// instead of once per conversion (`output_bin` hides a `delta`
+    /// shift + divide that used to run for every tile of every output).
+    /// Values are bit-identical to the per-call computation.
+    fn adc_consts(&self) -> AdcConsts {
+        AdcConsts {
+            bin: self.cfg.output_bin(),
+            tau: self.cfg.n as f32,
+            gain: self.cfg.gain,
+            noise_lsb: self.cfg.noise_lsb,
         }
-        (quantize(pre, bin, tau), pre.abs() > tau)
     }
 
     /// Convert a (N, K) weight matrix to ABFP **once** (the paper:
@@ -256,14 +301,37 @@ impl Device {
     /// `x (M,K) @ w^T (N,K) -> (M,N)` with per-vector scales, gain, ADC
     /// quantization and noise; FLOAT32 accumulation over tiles and
     /// BFLOAT16 output rounding (Eq. 1–7 end to end). Activations are
-    /// staged here, per call.
-    ///
-    /// Executes row-chunked across [`Device::set_threads`] workers.
-    /// Because noise is coordinate-keyed, the output is bit-identical
-    /// for every thread count, and splitting a batch across calls
-    /// yields exactly the rows of the unsplit call (each call claims
-    /// the next `M` global row indices).
+    /// staged here, per call. Allocating convenience over
+    /// [`matmul_staged_into`](Self::matmul_staged_into) — hot paths
+    /// should hold a scratch [`StagedTiles`] + output tensor and call
+    /// the `_into` form.
     pub fn matmul_staged(&mut self, x: &Tensor, ws: &StagedTiles) -> Result<Tensor> {
+        let mut xs = StagedTiles::default();
+        let mut out = Tensor::from_vec(Vec::new());
+        self.matmul_staged_into(x, ws, &mut xs, &mut out)?;
+        Ok(out)
+    }
+
+    /// The zero-allocation hot path: stage the activations into the
+    /// caller's reusable `xs` buffers and write the product into `out`
+    /// (both reuse their allocations across calls — a warm serving
+    /// worker allocates nothing here).
+    ///
+    /// Executes 2-D cell-chunked (row × column-block,
+    /// [`parallel::par_cell_chunks`]) across [`Device::set_threads`]
+    /// workers, so even a batch-1 request against a wide layer fans out
+    /// over every core. Each output element's FLOAT32 accumulation runs
+    /// tile-ordered inside one cell and the noise is coordinate-keyed,
+    /// so the output is bit-identical for every thread count, column-
+    /// block width and batch split (each call claims the next `M`
+    /// global row indices).
+    pub fn matmul_staged_into(
+        &mut self,
+        x: &Tensor,
+        ws: &StagedTiles,
+        xs: &mut StagedTiles,
+        out: &mut Tensor,
+    ) -> Result<()> {
         if x.shape().len() != 2 {
             bail!("abfp matmul wants 2-D operands");
         }
@@ -282,20 +350,29 @@ impl Device {
         let t = ws.tiles;
         let nn = ws.rows;
 
-        let xs = self.stage(x, m, k, self.cfg.delta_x());
+        self.stage_into(x, m, k, self.cfg.delta_x(), xs);
 
         let row_base = self.row_base;
         self.row_base += m as u64;
         let threads = self.threads;
-        let gain = self.cfg.gain;
+        // Per-conversion constants and the noise key are plain copies:
+        // the workers capture no reference to the device itself.
+        let adc = self.adc_consts();
+        let noise = self.noise;
 
-        let mut out = vec![0.0f32; m * nn];
-        let dev = &*self;
+        let xs = &*xs;
+        let buf = out.reset_matrix(m, nn);
+        let grid = parallel::CellGrid::new(m, nn, parallel::KERNEL_COL_BLOCK);
         let saturated: u64 =
-            parallel::par_row_chunks(threads, m, nn, &mut out, |rows, chunk| {
+            parallel::par_cell_chunks(threads, &grid, buf, |cells, chunk| {
                 let mut sat = 0u64;
-                for (ci, i) in rows.enumerate() {
-                    for j in 0..nn {
+                let mut off = 0usize;
+                for c in cells {
+                    let (i, js) = grid.cell(c);
+                    // One activation row's staged tiles stay hot across
+                    // the whole column block (the cache-locality half of
+                    // the 2-D restructure).
+                    for j in js {
                         let mut acc = 0.0f32; // FLOAT32 tile accumulator (Eq. 6)
                         for ti in 0..t {
                             let xt = xs.tile(i * t + ti);
@@ -304,7 +381,9 @@ impl Device {
                             for e in 0..n {
                                 dot += xt[e] * wt[e];
                             }
-                            let (yq, clipped) = dev.adc_at(
+                            let (yq, clipped) = adc_at(
+                                &noise,
+                                adc,
                                 row_base + i as u64,
                                 j as u64,
                                 ti as u64,
@@ -314,9 +393,10 @@ impl Device {
                                 sat += 1;
                             }
                             acc += yq * xs.scales[i * t + ti] * ws.scales[j * t + ti]
-                                / gain;
+                                / adc.gain;
                         }
-                        chunk[ci * nn + j] = bf16_round(acc);
+                        chunk[off] = bf16_round(acc);
+                        off += 1;
                     }
                 }
                 sat
@@ -325,7 +405,7 @@ impl Device {
             .sum();
         self.sat_count += saturated;
         self.conv_count += (m * nn * t) as u64;
-        Tensor::new(&[m, nn], out)
+        Ok(())
     }
 
     /// One-shot ABFP matmul: stage both operands, then multiply. Staging
@@ -341,8 +421,17 @@ impl Device {
 
     /// Stage all tiles of a (rows, K) operand into flat buffers.
     fn stage(&self, v: &Tensor, rows: usize, k: usize, d: f32) -> StagedTiles {
+        let mut staged = StagedTiles::default();
+        self.stage_into(v, rows, k, d, &mut staged);
+        staged
+    }
+
+    /// Stage all tiles of a (rows, K) operand into `staged`, reusing
+    /// its buffers (no allocation once warm; every slot of `staged.q`
+    /// is overwritten, so stale contents never leak through).
+    fn stage_into(&self, v: &Tensor, rows: usize, k: usize, d: f32, staged: &mut StagedTiles) {
         let n = self.cfg.n;
-        let mut staged = StagedTiles::with_capacity(rows, k, n);
+        staged.reset(rows, k, n);
         let t = staged.tiles;
         for r in 0..rows {
             let row = v.row(r);
@@ -355,7 +444,6 @@ impl Device {
                 staged.scales.push(scale);
             }
         }
-        staged
     }
 
     /// FLOAT32 reference matmul for error analysis.
@@ -597,6 +685,111 @@ mod tests {
         let mut dev_b = Device::new(cfg, 9);
         assert_eq!(first_a, dev_b.matmul(&x, &w).unwrap());
         assert_eq!(second_a, dev_b.matmul(&x, &w).unwrap());
+    }
+
+    #[test]
+    fn single_pass_staging_matches_two_pass_reference() {
+        // Satellite regression: `scale_tile_into` used to run
+        // `bf16_round` twice per element (max pass over the source,
+        // then a quantize pass over the source again). The single-pass
+        // rewrite must stage bit-identically — checked against an
+        // inline copy of the old two-pass algorithm over normal,
+        // Laplace, zero, subnormal-ish and ragged tiles.
+        let two_pass = |tile: &[f32], d: f32, out: &mut [f32]| -> f32 {
+            let mut m = 0.0f32;
+            for &v in tile {
+                m = m.max(bf16_round(v).abs());
+            }
+            let scale = if bf16_round(m) == 0.0 { 1.0 } else { bf16_round(m) };
+            for (o, &v) in out.iter_mut().zip(tile) {
+                *o = quantize(bf16_round(v) / scale, d, 1.0);
+            }
+            for o in out.iter_mut().skip(tile.len()) {
+                *o = 0.0;
+            }
+            scale
+        };
+        let dev = Device::new(DeviceConfig::new(8, (8, 8, 8), 1.0, 0.0), 1);
+        let mut rng = Pcg64::seeded(0x57a6e);
+        let mut tiles: Vec<Vec<f32>> = (0..64)
+            .map(|i| {
+                let len = 1 + (i % 8);
+                (0..len)
+                    .map(|_| {
+                        if i % 3 == 0 { rng.laplace() } else { rng.normal() }
+                    })
+                    .collect()
+            })
+            .collect();
+        tiles.push(vec![0.0; 8]);
+        tiles.push(vec![1e-38, -1e-38, 0.0]);
+        for (ti, tile) in tiles.iter().enumerate() {
+            for d in [delta(8), delta(4)] {
+                // Stale destination contents must not leak through.
+                let mut got = vec![7.0f32; 8];
+                let mut want = vec![-7.0f32; 8];
+                let s_got = dev.scale_tile_into(tile, d, &mut got);
+                let s_want = two_pass(tile, d, &mut want);
+                assert_eq!(s_got.to_bits(), s_want.to_bits(), "tile {ti}");
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "tile {ti}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_and_allocation_free() {
+        // The zero-allocation seam: matmul_staged_into with reused
+        // scratch buffers must (a) reproduce the allocating path's
+        // exact noisy sequence and (b) stop allocating once warm —
+        // pinned by pointer stability of every reused buffer.
+        let mut rng = Pcg64::seeded(31);
+        let x1 = rand_t(&mut rng, &[4, 70], false);
+        let x2 = rand_t(&mut rng, &[4, 70], true);
+        let w = rand_t(&mut rng, &[6, 70], true);
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5);
+
+        let mut plain = Device::new(cfg, 9);
+        let ws = plain.stage_weights(&w).unwrap();
+        let want1 = plain.matmul_staged(&x1, &ws).unwrap();
+        let want2 = plain.matmul_staged(&x2, &ws).unwrap();
+
+        let mut dev = Device::new(cfg, 9);
+        let ws = dev.stage_weights(&w).unwrap();
+        let mut xs = StagedTiles::default();
+        let mut out = Tensor::from_vec(Vec::new());
+        dev.matmul_staged_into(&x1, &ws, &mut xs, &mut out).unwrap();
+        assert_eq!(out, want1);
+        let (q_ptr, s_ptr, o_ptr) =
+            (xs.q.as_ptr(), xs.scales.as_ptr(), out.data().as_ptr());
+        dev.matmul_staged_into(&x2, &ws, &mut xs, &mut out).unwrap();
+        assert_eq!(out, want2);
+        assert_eq!(xs.q.as_ptr(), q_ptr, "activation staging reallocated");
+        assert_eq!(xs.scales.as_ptr(), s_ptr, "scales reallocated");
+        assert_eq!(out.data().as_ptr(), o_ptr, "output buffer reallocated");
+    }
+
+    #[test]
+    fn batch_one_wide_layer_is_thread_independent() {
+        // The tentpole case: one request row against a wide layer. Row
+        // chunking alone would pin this to a single worker; the 2-D
+        // cell partition fans it out — and must not change a bit.
+        let mut rng = Pcg64::seeded(37);
+        let x = rand_t(&mut rng, &[1, 96], false);
+        let w = rand_t(&mut rng, &[4096, 96], true);
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 8.0, 0.5);
+        let staged = Device::new(cfg, 5).stage_weights(&w).unwrap();
+        let run = |threads: usize| {
+            let mut dev = Device::new(cfg, 5);
+            dev.set_threads(threads);
+            dev.matmul_staged(&x, &staged).unwrap()
+        };
+        let base = run(1);
+        assert_eq!(base.shape(), &[1, 4096]);
+        for threads in [2, 4, 8, 64] {
+            assert_eq!(base, run(threads), "threads={threads}");
+        }
     }
 
     #[test]

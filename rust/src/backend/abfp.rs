@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use super::{BackendStats, NumericBackend, StagedWeights};
+use super::{BackendStats, NumericBackend, Scratch, StagedWeights};
 use crate::abfp::{Device, DeviceConfig};
 use crate::json::{self, Value};
 use crate::tensor::Tensor;
@@ -55,12 +55,19 @@ impl NumericBackend for AbfpBackend {
         Ok(StagedWeights::tiled(self.name(), self.dev.stage_weights(w)?))
     }
 
-    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+    fn matmul_into(
+        &mut self,
+        x: &Tensor,
+        w: &StagedWeights,
+        scratch: &mut Scratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let tiles = w.expect_tiled(self.name())?;
-        let y = self.dev.matmul_staged(x, tiles)?;
+        self.dev
+            .matmul_staged_into(x, tiles, &mut scratch.tiles, out)?;
         self.matmuls += 1;
         self.macs += (x.shape()[0] * x.shape()[1] * tiles.rows) as u64;
-        Ok(y)
+        Ok(())
     }
 
     fn stats(&self) -> BackendStats {

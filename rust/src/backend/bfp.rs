@@ -12,7 +12,8 @@
 use anyhow::Result;
 
 use super::{
-    check_matmul, check_weights, BackendStats, NumericBackend, StagedTiles, StagedWeights,
+    check_matmul, check_weights, BackendStats, NumericBackend, Scratch, StagedTiles,
+    StagedWeights,
 };
 use crate::json::{self, Value};
 use crate::numerics::{delta, quantize};
@@ -45,10 +46,19 @@ impl BfpStaticBackend {
 
     /// Stage a (rows, K) operand into power-of-two-scaled tiles.
     fn stage(&self, v: &Tensor, bits: u32) -> Result<StagedTiles> {
+        let mut staged = StagedTiles::default();
+        self.stage_into(v, bits, &mut staged)?;
+        Ok(staged)
+    }
+
+    /// Stage into `staged`, reusing its buffers (no allocation once
+    /// warm; every covered `q` slot is overwritten — real values plus
+    /// an explicit zero tail for the ragged last tile).
+    fn stage_into(&self, v: &Tensor, bits: u32, staged: &mut StagedTiles) -> Result<()> {
         let (rows, k) = check_weights(self.name(), v)?;
         let d = delta(bits);
         let n = self.n;
-        let mut staged = StagedTiles::with_capacity(rows, k, n);
+        staged.reset(rows, k, n);
         let tiles = staged.tiles;
         for r in 0..rows {
             let row = v.row(r);
@@ -61,10 +71,13 @@ impl BfpStaticBackend {
                 for (o, &x) in dst.iter_mut().zip(tile) {
                     *o = quantize(x / scale, d, 1.0);
                 }
+                for o in dst.iter_mut().skip(tile.len()) {
+                    *o = 0.0;
+                }
                 staged.scales.push(scale);
             }
         }
-        Ok(staged)
+        Ok(())
     }
 }
 
@@ -97,7 +110,13 @@ impl NumericBackend for BfpStaticBackend {
         Ok(StagedWeights::tiled(self.name(), self.stage(w, self.bits_w)?))
     }
 
-    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+    fn matmul_into(
+        &mut self,
+        x: &Tensor,
+        w: &StagedWeights,
+        scratch: &mut Scratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let (m, n_out) = check_matmul(self.name(), x, w)?;
         let ws = w.expect_tiled(self.name())?;
         if ws.n != self.n {
@@ -107,16 +126,20 @@ impl NumericBackend for BfpStaticBackend {
                 self.n
             );
         }
-        let xs = self.stage(x, self.bits_x)?;
+        self.stage_into(x, self.bits_x, &mut scratch.tiles)?;
+        let xs = &scratch.tiles;
         let t = ws.tiles;
 
         let n = self.n;
-        let mut out = vec![0.0f32; m * n_out];
-        // Row-chunked across workers: the digital path is a pure
+        let buf = out.reset_matrix(m, n_out);
+        // 2-D cell-chunked across workers: the digital path is a pure
         // function of its operands, so any schedule is bit-exact.
-        parallel::par_row_chunks(self.threads, m, n_out, &mut out, |rows, chunk| {
-            for (ci, i) in rows.enumerate() {
-                for j in 0..n_out {
+        let grid = parallel::CellGrid::new(m, n_out, parallel::KERNEL_COL_BLOCK);
+        parallel::par_cell_chunks(self.threads, &grid, buf, |cells, chunk| {
+            let mut off = 0usize;
+            for c in cells {
+                let (i, js) = grid.cell(c);
+                for j in js {
                     let mut acc = 0.0f32;
                     for ti in 0..t {
                         let xt = xs.tile(i * t + ti);
@@ -127,14 +150,15 @@ impl NumericBackend for BfpStaticBackend {
                         }
                         acc += dot * xs.scales[i * t + ti] * ws.scales[j * t + ti];
                     }
-                    chunk[ci * n_out + j] = acc;
+                    chunk[off] = acc;
+                    off += 1;
                 }
             }
         });
         self.stats.matmuls += 1;
         self.stats.macs += (m * x.shape()[1] * n_out) as u64;
         self.stats.conversions += (m * n_out) as u64;
-        Tensor::new(&[m, n_out], out)
+        Ok(())
     }
 
     fn stats(&self) -> BackendStats {

@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use super::{check_matmul, check_weights, BackendStats, NumericBackend, StagedWeights};
+use super::{check_matmul, check_weights, BackendStats, NumericBackend, Scratch, StagedWeights};
 use crate::json::{self, Value};
 use crate::numerics::{delta, quantize};
 use crate::parallel;
@@ -71,30 +71,44 @@ impl NumericBackend for FixedPointBackend {
         Ok(StagedWeights::global(self.name(), rows, k, scale, q))
     }
 
-    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+    fn matmul_into(
+        &mut self,
+        x: &Tensor,
+        w: &StagedWeights,
+        scratch: &mut Scratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let (m, n) = check_matmul(self.name(), x, w)?;
         let (sw, qw) = w.expect_global(self.name())?;
         let k = x.shape()[1];
 
         // Activations are converted per call, like a DAC feeding the
-        // integer datapath.
+        // integer datapath — into the reusable scratch buffer.
         let sx = global_scale(x.data());
         let dx = delta(self.bits_x);
-        let qx: Vec<f32> = x.data().iter().map(|&v| quantize(v / sx, dx, 1.0)).collect();
+        scratch.qx.clear();
+        scratch
+            .qx
+            .extend(x.data().iter().map(|&v| quantize(v / sx, dx, 1.0)));
+        let qx = &scratch.qx;
 
-        let mut out = vec![0.0f32; m * n];
-        // Row-chunked across workers: the digital path is a pure
+        let buf = out.reset_matrix(m, n);
+        // 2-D cell-chunked across workers: the digital path is a pure
         // function of its operands, so any schedule is bit-exact.
-        parallel::par_row_chunks(self.threads, m, n, &mut out, |rows, chunk| {
-            for (ci, i) in rows.enumerate() {
+        let grid = parallel::CellGrid::new(m, n, parallel::KERNEL_COL_BLOCK);
+        parallel::par_cell_chunks(self.threads, &grid, buf, |cells, chunk| {
+            let mut off = 0usize;
+            for c in cells {
+                let (i, js) = grid.cell(c);
                 let xrow = &qx[i * k..(i + 1) * k];
-                for j in 0..n {
+                for j in js {
                     let wrow = &qw[j * k..(j + 1) * k];
                     let mut acc = 0.0f32;
                     for t in 0..k {
                         acc += xrow[t] * wrow[t];
                     }
-                    chunk[ci * n + j] = acc * sx * sw;
+                    chunk[off] = acc * sx * sw;
+                    off += 1;
                 }
             }
         });
@@ -103,7 +117,7 @@ impl NumericBackend for FixedPointBackend {
         // Digital outputs: one exact conversion per element, no clamping
         // (the accumulator is wide enough by construction).
         self.stats.conversions += (m * n) as u64;
-        Tensor::new(&[m, n], out)
+        Ok(())
     }
 
     fn stats(&self) -> BackendStats {

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use super::{check_matmul, check_weights, BackendStats, NumericBackend, StagedWeights};
+use super::{check_matmul, check_weights, BackendStats, NumericBackend, Scratch, StagedWeights};
 use crate::json::{self, Value};
 use crate::parallel;
 use crate::tensor::Tensor;
@@ -12,9 +12,10 @@ use crate::tensor::Tensor;
 ///
 /// `matmul` is bit-identical to [`Tensor::matmul_nt`] — staging is a
 /// pass-through — so workloads can swap precision without touching
-/// call sites. Executes row-chunked across worker threads; the per-row
-/// accumulation order is exactly `matmul_nt`'s, so the identity holds
-/// for every thread count.
+/// call sites. Executes 2-D cell-chunked (row × column-block) across
+/// worker threads; the per-element accumulation order is exactly
+/// `matmul_nt`'s, so the identity holds for every thread count and
+/// block width.
 #[derive(Debug, Clone, Default)]
 pub struct Float32Backend {
     stats: BackendStats,
@@ -41,29 +42,39 @@ impl NumericBackend for Float32Backend {
         Ok(StagedWeights::dense(self.name(), w.clone()))
     }
 
-    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+    fn matmul_into(
+        &mut self,
+        x: &Tensor,
+        w: &StagedWeights,
+        _scratch: &mut Scratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
         let (m, n) = check_matmul(self.name(), x, w)?;
         let dense = w.expect_dense(self.name())?;
         let k = x.shape()[1];
         let xd = x.data();
         let wd = dense.data();
-        let mut out = vec![0.0f32; m * n];
-        parallel::par_row_chunks(self.threads, m, n, &mut out, |rows, chunk| {
-            for (ci, i) in rows.enumerate() {
+        let buf = out.reset_matrix(m, n);
+        let grid = parallel::CellGrid::new(m, n, parallel::KERNEL_COL_BLOCK);
+        parallel::par_cell_chunks(self.threads, &grid, buf, |cells, chunk| {
+            let mut off = 0usize;
+            for c in cells {
+                let (i, js) = grid.cell(c);
                 let xrow = &xd[i * k..(i + 1) * k];
-                for j in 0..n {
+                for j in js {
                     let wrow = &wd[j * k..(j + 1) * k];
                     let mut acc = 0.0f32;
                     for t in 0..k {
                         acc += xrow[t] * wrow[t];
                     }
-                    chunk[ci * n + j] = acc;
+                    chunk[off] = acc;
+                    off += 1;
                 }
             }
         });
         self.stats.matmuls += 1;
         self.stats.macs += (m * k * n) as u64;
-        Tensor::new(&[m, n], out)
+        Ok(())
     }
 
     fn stats(&self) -> BackendStats {

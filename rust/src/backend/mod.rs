@@ -79,7 +79,7 @@ impl BackendStats {
 ///
 /// Shared representation for the tiled formats (ABFP's BFLOAT16-scaled
 /// tiles and static BFP's power-of-two tiles).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StagedTiles {
     pub rows: usize,
     /// Unpadded reduction length.
@@ -97,15 +97,24 @@ pub struct StagedTiles {
 impl StagedTiles {
     /// Empty staging buffers for a (rows, k) operand at tile width n.
     pub fn with_capacity(rows: usize, k: usize, n: usize) -> StagedTiles {
-        let tiles = num_tiles(k, n);
-        StagedTiles {
-            rows,
-            k,
-            n,
-            tiles,
-            scales: Vec::with_capacity(rows * tiles),
-            q: vec![0.0f32; rows * tiles * n],
-        }
+        let mut staged = StagedTiles::default();
+        staged.reset(rows, k, n);
+        staged
+    }
+
+    /// Re-dimension for a (rows, k) operand at tile width n, reusing
+    /// the existing allocations (the zero-allocation staging contract:
+    /// no growth once warm at a fixed geometry). Stagers overwrite
+    /// every `q` slot they cover, so grown space is zero-filled but a
+    /// reused prefix is left to the writer.
+    pub fn reset(&mut self, rows: usize, k: usize, n: usize) {
+        self.rows = rows;
+        self.k = k;
+        self.n = n;
+        self.tiles = num_tiles(k, n);
+        self.scales.clear();
+        self.scales.reserve(rows * self.tiles);
+        self.q.resize(rows * self.tiles * n, 0.0);
     }
 
     /// The `row_tile`-th length-n quantized tile.
@@ -255,6 +264,27 @@ impl StagedWeights {
     }
 }
 
+/// Reusable per-call buffers for [`NumericBackend::matmul_into`]: the
+/// activation-side staging a backend performs per matmul (the weight
+/// side is staged once into [`StagedWeights`]). Hold one `Scratch` per
+/// (backend, call-site) pairing and the backend stops allocating on
+/// the request path once the buffers are warm. Contents are opaque —
+/// backends fully overwrite whatever they use, so one scratch can be
+/// shared across differently-shaped calls (at the cost of regrowth).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Tiled activation staging (the abfp / bfp kernels).
+    pub(crate) tiles: StagedTiles,
+    /// Globally-scaled quantized activations (the fixed-point kernel).
+    pub(crate) qx: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
 /// A pluggable number-format simulation.
 ///
 /// Contract: `matmul` computes `x (M,K) @ w^T (N,K) -> (M,N)` where `w`
@@ -281,8 +311,27 @@ pub trait NumericBackend: Send + Sync {
     /// shareable across calls and threads (it is plain data).
     fn stage_weights(&self, w: &Tensor) -> Result<StagedWeights>;
 
+    /// The hot-path seam: `x (M,K) @ staged^T -> (M,N)` under the
+    /// backend's numerics, staging activations into `scratch` and
+    /// writing the product into `out` — both reuse their allocations
+    /// across calls, so a warm serving worker performs no heap
+    /// allocation here. Bit-identical to [`matmul`](Self::matmul).
+    fn matmul_into(
+        &mut self,
+        x: &Tensor,
+        w: &StagedWeights,
+        scratch: &mut Scratch,
+        out: &mut Tensor,
+    ) -> Result<()>;
+
     /// `x (M,K) @ staged^T -> (M,N)` under the backend's numerics.
-    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor>;
+    /// Allocating convenience over [`matmul_into`](Self::matmul_into).
+    fn matmul(&mut self, x: &Tensor, w: &StagedWeights) -> Result<Tensor> {
+        let mut scratch = Scratch::default();
+        let mut out = Tensor::from_vec(Vec::new());
+        self.matmul_into(x, w, &mut scratch, &mut out)?;
+        Ok(out)
+    }
 
     /// Accumulated accounting since construction / last reset.
     fn stats(&self) -> BackendStats;

@@ -6,8 +6,23 @@
 //! median / p95 / mean and derived throughput. Deterministic iteration
 //! counts keep runs comparable across the perf-pass iterations recorded
 //! in EXPERIMENTS.md §Perf.
+//!
+//! Two extras make the perf trajectory durable instead of scrollback:
+//!
+//! * **JSON emission** — [`Bench::save`] writes every result plus any
+//!   [`Bench::note`]d derived metric (speedups, ratios) as a JSON
+//!   report (`reports/bench_core.json` for the core suite), so CI and
+//!   later sessions can diff numbers machine-readably.
+//! * **Smoke mode** — `BENCHKIT_SMOKE=1` drops to 1 warmup / 3 samples
+//!   so `cargo bench` can run as a cheap CI leg that keeps the benches
+//!   compiling and the JSON schema honest without burning minutes. The
+//!   JSON records which mode produced it.
 
 use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::json::{self, Value};
 
 /// One benchmark's timing summary (nanoseconds).
 #[derive(Debug, Clone)]
@@ -55,11 +70,23 @@ pub struct Bench {
     pub results: Vec<BenchResult>,
     warmup: usize,
     samples: usize,
+    smoke: bool,
+    /// Derived metrics ([`Bench::note`]): speedups, ratios, counts.
+    notes: Vec<(String, f64)>,
+}
+
+/// True when `BENCHKIT_SMOKE` requests the reduced CI sampling.
+pub fn smoke_requested() -> bool {
+    matches!(
+        std::env::var("BENCHKIT_SMOKE").as_deref(),
+        Ok("1") | Ok("true") | Ok("yes")
+    )
 }
 
 impl Bench {
     pub fn new(suite: &str) -> Bench {
-        println!("\n== bench suite: {suite} ==");
+        let smoke = smoke_requested();
+        println!("\n== bench suite: {suite}{} ==", if smoke { " (smoke)" } else { "" });
         println!(
             "{:<42} {:>10} {:>10} {:>10}",
             "case", "min", "median", "p95"
@@ -69,23 +96,36 @@ impl Bench {
             results: Vec::new(),
             warmup: 3,
             samples: 12,
+            smoke,
+            notes: Vec::new(),
         }
     }
 
     /// Override sampling (slow end-to-end cases use fewer samples).
+    /// Smoke mode caps whatever is requested.
     pub fn with_samples(mut self, warmup: usize, samples: usize) -> Bench {
         self.warmup = warmup;
         self.samples = samples;
         self
     }
 
+    /// The (warmup, samples) pair actually used this run.
+    fn effective_samples(&self) -> (usize, usize) {
+        if self.smoke {
+            (self.warmup.min(1), self.samples.min(3).max(1))
+        } else {
+            (self.warmup, self.samples.max(1))
+        }
+    }
+
     /// Time `f`, which performs `iters` internal iterations per sample.
     pub fn run<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) -> &BenchResult {
-        for _ in 0..self.warmup {
+        let (warmup, samples) = self.effective_samples();
+        for _ in 0..warmup {
             f();
         }
-        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
-        for _ in 0..self.samples {
+        let mut times: Vec<f64> = Vec::with_capacity(samples);
+        for _ in 0..samples {
             let t0 = Instant::now();
             f();
             times.push(t0.elapsed().as_nanos() as f64 / iters.max(1) as f64);
@@ -93,7 +133,7 @@ impl Bench {
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let result = BenchResult {
             name: format!("{}/{}", self.suite, name),
-            samples: self.samples,
+            samples,
             min_ns: times[0],
             median_ns: times[times.len() / 2],
             p95_ns: times[((times.len() - 1) as f64 * 0.95) as usize],
@@ -102,6 +142,60 @@ impl Bench {
         println!("{}", result.report());
         self.results.push(result);
         self.results.last().unwrap()
+    }
+
+    /// Record a derived metric (a speedup, a ratio) into the JSON
+    /// report next to the raw timings.
+    pub fn note(&mut self, key: &str, value: f64) {
+        self.notes.push((key.to_string(), value));
+    }
+
+    /// The machine-readable report: suite, sampling mode, every case's
+    /// timing summary, and the derived metrics.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("suite", json::s(&self.suite)),
+            ("smoke", Value::Bool(self.smoke)),
+            (
+                "results",
+                json::arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("name", json::s(&r.name)),
+                                ("samples", json::num(r.samples as f64)),
+                                ("min_ns", json::num(r.min_ns)),
+                                ("median_ns", json::num(r.median_ns)),
+                                ("p95_ns", json::num(r.p95_ns)),
+                                ("mean_ns", json::num(r.mean_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "derived",
+                Value::Obj(
+                    self.notes
+                        .iter()
+                        .map(|(k, v)| (k.clone(), json::num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the JSON report to `path`, creating parent directories.
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        println!("bench report written to {path}");
+        Ok(())
     }
 }
 
@@ -137,6 +231,39 @@ mod tests {
         assert_eq!(fmt_ns(2_500.0), "2.50us");
         assert_eq!(fmt_ns(3_000_000.0), "3.00ms");
         assert_eq!(fmt_ns(2e9), "2.000s");
+    }
+
+    #[test]
+    fn json_report_carries_results_and_notes() {
+        let mut b = Bench::new("jsuite").with_samples(1, 3);
+        b.run("case_a", 10, || {
+            black_box(0u64);
+        });
+        b.note("speedup_t4", 2.5);
+        let j = b.to_json().to_string();
+        assert!(j.contains("\"suite\":\"jsuite\""), "{j}");
+        assert!(j.contains("\"name\":\"jsuite/case_a\""), "{j}");
+        assert!(j.contains("\"median_ns\""), "{j}");
+        assert!(j.contains("\"speedup_t4\":2.5"), "{j}");
+        assert!(j.contains("\"smoke\""), "{j}");
+        // Round-trips through the crate parser.
+        let v = crate::json::parse(&j).unwrap();
+        assert_eq!(v.get("suite").unwrap().as_str().unwrap(), "jsuite");
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn save_writes_the_report() {
+        let mut b = Bench::new("fsuite").with_samples(1, 2);
+        b.run("c", 1, || {
+            black_box(1u64);
+        });
+        let path = std::env::temp_dir().join("abfp_benchkit_save_test.json");
+        let path = path.to_str().unwrap().to_string();
+        b.save(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("fsuite/c"), "{text}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -76,6 +76,19 @@ pub trait ModelExecutor {
     /// Run one packed batch of `b` real examples.
     fn execute(&mut self, b: usize, x: Tensor) -> Result<Executed>;
 
+    /// A reusable backing buffer for the worker's batch pack (the
+    /// worker clears/resizes it before filling). Executors with a
+    /// buffer pool ([`GraphExecutor`](crate::graph::GraphExecutor))
+    /// hand one back so the warm request path stops allocating; the
+    /// default allocates fresh.
+    fn take_pack_buffer(&mut self) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Hand executed output tensors back once their contents have been
+    /// fanned out, closing the buffer-pool loop. Default: drop them.
+    fn recycle(&mut self, _outputs: Vec<Tensor>) {}
+
     /// Machine-readable metadata for `GET /v1/models` and the serve
     /// startup log (executor kind, shapes, numeric plan, ...).
     fn describe(&self) -> Value;

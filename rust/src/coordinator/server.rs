@@ -472,10 +472,15 @@ fn worker_main<E: ModelExecutor>(
         // Pack the request batch once, directly into the executor's
         // target layout: (pack_rows(b), in_elems), one row per example,
         // zero-padded tail (PJRT pads to its compiled batch here, so
-        // nothing repacks downstream).
+        // nothing repacks downstream). The backing buffer comes from
+        // the executor's pool when it has one (clear + resize zero-fill
+        // the pad rows without reallocating once warm), so a warm graph
+        // worker packs without touching the heap.
         let b = batch.len();
         let rows = exec.pack_rows(b).max(b);
-        let mut xdata = vec![0.0f32; rows * in_elems];
+        let mut xdata = exec.take_pack_buffer();
+        xdata.clear();
+        xdata.resize(rows * in_elems, 0.0);
         for (i, req) in batch.iter().enumerate() {
             xdata[i * in_elems..(i + 1) * in_elems].copy_from_slice(req.x.data());
         }
@@ -490,6 +495,9 @@ fn worker_main<E: ModelExecutor>(
             Ok(executed) => {
                 let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
                 finish_batch(batch, &executed.outputs, executed.padded_batch, exec_ms, &stats);
+                // Fan-out copied per-client slices; the batched output
+                // buffers go back to the executor's pool.
+                exec.recycle(executed.outputs);
             }
             Err(e) => {
                 eprintln!("worker {model}: execute failed: {e}");

@@ -15,8 +15,8 @@
 use anyhow::Result;
 
 use super::plan::GraphPlan;
-use super::{registry, ModelGraph};
-use crate::backend::{BackendStats, NumericBackend, StagedWeights};
+use super::{registry, FlowScratch, ModelGraph};
+use crate::backend::{BackendStats, NumericBackend, Scratch, StagedWeights};
 use crate::coordinator::{Executed, ModelExecutor};
 use crate::json::{self, Value};
 use crate::tensor::Tensor;
@@ -43,10 +43,20 @@ pub struct GraphLayerStats {
 }
 
 /// Pure-Rust layer-graph executor with a per-layer numeric plan.
+///
+/// Owns the serving scratch state: per-layer activation-staging buffers
+/// plus a pooled set of activation tensors, so a warm `forward` makes
+/// no data-sized heap allocation (the zero-allocation hot path; the
+/// worker loop closes the loop through
+/// [`ModelExecutor::take_pack_buffer`] / [`ModelExecutor::recycle`]).
 pub struct GraphExecutor {
     graph: ModelGraph,
     plan: GraphPlan,
     stages: Vec<Stage>,
+    /// Pooled activation buffers for the graph walk.
+    flow: FlowScratch,
+    /// Per-`Linear`-layer backend scratch (activation staging).
+    scratch: Vec<Scratch>,
 }
 
 impl GraphExecutor {
@@ -96,10 +106,13 @@ impl GraphExecutor {
             let staged = backend.stage_weights(w)?;
             stages.push(Stage { backend, staged });
         }
+        let scratch = (0..count).map(|_| Scratch::new()).collect();
         Ok(GraphExecutor {
             graph,
             plan: plan.clone(),
             stages,
+            flow: FlowScratch::new(),
+            scratch,
         })
     }
 
@@ -135,13 +148,30 @@ impl GraphExecutor {
 
     /// Run one packed `(b, in_elems)` batch through the graph and
     /// return the `(b, out_elems)` head output. Takes the batch by
-    /// value: the first layer consumes it without a copy.
+    /// value: the first layer consumes it without a copy and its
+    /// storage joins the executor's buffer pool. Warm steady state
+    /// allocates no data-sized buffer — activations cycle through the
+    /// pool and each layer stages into its reusable [`Scratch`].
     pub fn forward(&mut self, x: Tensor) -> Result<Tensor> {
-        let stages = &mut self.stages;
-        self.graph.forward_with(x, |i, input| {
+        let GraphExecutor {
+            graph,
+            stages,
+            flow,
+            scratch,
+            ..
+        } = self;
+        graph.forward_with(x, flow, |i, input, out| {
             let s = &mut stages[i];
-            s.backend.matmul(input, &s.staged)
+            s.backend.matmul_into(input, &s.staged, &mut scratch[i], out)
         })
+    }
+
+    /// Return output tensors (or any same-width activation buffers) to
+    /// the executor's pool once their contents have been delivered.
+    pub fn recycle_outputs(&mut self, outputs: Vec<Tensor>) {
+        for t in outputs {
+            self.flow.recycle_tensor(t);
+        }
     }
 }
 
@@ -160,6 +190,14 @@ impl ModelExecutor for GraphExecutor {
             outputs: vec![y],
             padded_batch: b,
         })
+    }
+
+    fn take_pack_buffer(&mut self) -> Vec<f32> {
+        self.flow.take()
+    }
+
+    fn recycle(&mut self, outputs: Vec<Tensor>) {
+        self.recycle_outputs(outputs);
     }
 
     fn describe(&self) -> Value {

@@ -89,6 +89,45 @@ pub struct ModelGraph {
     input_shape: Vec<usize>,
     layers: Vec<Layer>,
     out_elems: usize,
+    /// Which layers' activations a later `Residual` reads back —
+    /// precomputed at construction so the forward walker neither scans
+    /// nor allocates per call.
+    kept: Vec<bool>,
+}
+
+/// Reusable activation buffers for repeated [`ModelGraph::forward_with`]
+/// calls: a pool of free data vectors (layer outputs are drawn from and
+/// returned to it) plus per-layer residual-source copies. Hold one per
+/// executor and the graph walk performs no data-sized heap allocation
+/// once warm.
+#[derive(Debug, Default)]
+pub struct FlowScratch {
+    pool: Vec<Vec<f32>>,
+    kept: Vec<Vec<f32>>,
+}
+
+impl FlowScratch {
+    pub fn new() -> FlowScratch {
+        FlowScratch::default()
+    }
+
+    /// A free buffer (empty `Vec` when the pool is dry — the caller
+    /// grows it once and it stays in circulation from then on).
+    pub fn take(&mut self) -> Vec<f32> {
+        self.pool.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.pool.push(buf);
+        }
+    }
+
+    /// Return a tensor's storage to the pool (the shape is dropped).
+    pub fn recycle_tensor(&mut self, t: Tensor) {
+        self.recycle(t.into_vec());
+    }
 }
 
 impl ModelGraph {
@@ -161,11 +200,18 @@ impl ModelGraph {
             }
             widths.push(width);
         }
+        let mut kept = vec![false; layers.len()];
+        for layer in &layers {
+            if let Layer::Residual { from } = layer {
+                kept[*from] = true;
+            }
+        }
         Ok(ModelGraph {
             model: model.to_string(),
             input_shape: input_shape.to_vec(),
             layers,
             out_elems: width,
+            kept,
         })
     }
 
@@ -213,12 +259,26 @@ impl ModelGraph {
     /// Run the graph over a packed `(batch, in_elems)` activation
     /// (taken by value — the serving path hands its pack over without a
     /// copy), delegating each `Linear` matmul (pre-bias) to
-    /// `linear(i, x)` where `i` counts `Linear` layers in graph order.
+    /// `linear(i, input, out)` where `i` counts `Linear` layers in
+    /// graph order and `out` is a pooled tensor the closure fills
+    /// ([`Tensor::reset_matrix`] / a backend's `matmul_into`).
     /// Everything else (bias adds, activations, residuals) runs on the
-    /// host in FLOAT32.
-    pub fn forward_with<F>(&self, x: Tensor, mut linear: F) -> Result<Tensor>
+    /// host in FLOAT32, **in place**.
+    ///
+    /// The zero-allocation contract: every intermediate activation is
+    /// drawn from and returned to `scratch`'s pool (the consumed input
+    /// joins it too), residual sources are copied into reusable slots
+    /// instead of cloned, so a warm walker allocates no data-sized
+    /// buffer. Only the returned output leaves the pool — recycle it
+    /// via [`FlowScratch::recycle_tensor`] to close the loop.
+    pub fn forward_with<F>(
+        &self,
+        x: Tensor,
+        scratch: &mut FlowScratch,
+        mut linear: F,
+    ) -> Result<Tensor>
     where
-        F: FnMut(usize, &Tensor) -> Result<Tensor>,
+        F: FnMut(usize, &Tensor, &mut Tensor) -> Result<()>,
     {
         if x.shape().len() != 2 || x.shape()[1] != self.in_elems() {
             bail!(
@@ -228,46 +288,40 @@ impl ModelGraph {
                 x.shape()
             );
         }
-        // Only layers a Residual reads back need their activation kept;
-        // cloning every intermediate would dominate the serving hot
-        // path's allocations for nothing.
-        let mut kept = vec![false; self.layers.len()];
-        for layer in &self.layers {
-            if let Layer::Residual { from } = layer {
-                kept[*from] = true;
-            }
+        if scratch.kept.len() < self.layers.len() {
+            scratch.kept.resize(self.layers.len(), Vec::new());
         }
         let mut cur = x;
-        let mut acts: Vec<Option<Tensor>> = Vec::with_capacity(self.layers.len());
         let mut li = 0usize;
         for (idx, layer) in self.layers.iter().enumerate() {
-            cur = match layer {
-                Layer::Flatten => cur,
+            match layer {
+                Layer::Flatten => {}
                 Layer::Linear { w: _, b } => {
-                    let mut y = linear(li, &cur)?;
+                    let mut out = Tensor::from_vec(scratch.take());
+                    linear(li, &cur, &mut out)?;
                     li += 1;
                     if let Some(b) = b {
-                        add_bias(&mut y, b)?;
+                        add_bias(&mut out, b)?;
                     }
-                    y
+                    let consumed = std::mem::replace(&mut cur, out);
+                    scratch.recycle_tensor(consumed);
                 }
-                Layer::Bias(b) => {
-                    let mut y = cur;
-                    add_bias(&mut y, b)?;
-                    y
-                }
-                Layer::Relu => cur.map(relu),
-                Layer::Gelu => cur.map(gelu),
-                Layer::Tanh => cur.map(|v| v.tanh()),
-                Layer::Sigmoid => cur.map(sigmoid),
+                Layer::Bias(b) => add_bias(&mut cur, b)?,
+                Layer::Relu => cur.map_inplace(relu),
+                Layer::Gelu => cur.map_inplace(gelu),
+                Layer::Tanh => cur.map_inplace(|v| v.tanh()),
+                Layer::Sigmoid => cur.map_inplace(sigmoid),
                 Layer::Residual { from } => {
-                    let src = acts[*from]
-                        .as_ref()
-                        .expect("validated residual source is kept");
-                    cur.zip(src, |a, b| a + b)?
+                    add_slice(&mut cur, &scratch.kept[*from])?;
                 }
-            };
-            acts.push(kept[idx].then(|| cur.clone()));
+            }
+            // Only layers a Residual reads back are copied out (into a
+            // reusable slot, not a fresh clone).
+            if self.kept[idx] {
+                let slot = &mut scratch.kept[idx];
+                slot.clear();
+                slot.extend_from_slice(cur.data());
+            }
         }
         Ok(cur)
     }
@@ -285,7 +339,10 @@ impl ModelGraph {
                 _ => None,
             })
             .collect();
-        self.forward_with(x.clone(), |i, input| input.matmul_nt(ws[i]))
+        let mut scratch = FlowScratch::new();
+        self.forward_with(x.clone(), &mut scratch, |i, input, out| {
+            input.matmul_nt_into(ws[i], out)
+        })
     }
 }
 
@@ -300,6 +357,22 @@ fn add_bias(y: &mut Tensor, b: &Tensor) -> Result<()> {
         for (v, bv) in row.iter_mut().zip(bd) {
             *v += bv;
         }
+    }
+    Ok(())
+}
+
+/// In-place elementwise add of a residual source (same length by graph
+/// validation; the copy in [`FlowScratch`] preserves it).
+fn add_slice(y: &mut Tensor, src: &[f32]) -> Result<()> {
+    if y.len() != src.len() {
+        bail!(
+            "residual source of {} elements onto activation of {}",
+            src.len(),
+            y.len()
+        );
+    }
+    for (v, s) in y.data_mut().iter_mut().zip(src) {
+        *v += s;
     }
     Ok(())
 }

@@ -52,12 +52,20 @@
 //! noise of Eq. 5 — is *coordinate-keyed*: the draw at output
 //! `(row, col)`, tile `ti` is a pure function of
 //! `(seed, global_row, col, ti)` ([`rng::CounterRng`], a SplitMix64
-//! counter RNG), never of evaluation order. Matmuls therefore run
-//! row-chunked on a dependency-free scoped thread pool ([`parallel`],
-//! `std::thread` only); the CLI `--threads` flag (default: all cores)
-//! sets the process-wide worker count, and `tests/determinism.rs` pins
-//! the invariance. (The ABFP *PJRT-artifact* serving path keys its
-//! noise per executed batch inside the kernel, outside this contract.)
+//! counter RNG), never of evaluation order. Matmuls therefore run 2-D
+//! cell-chunked — row × column-block cells, so even a batch-1 request
+//! against a wide layer fans out across every core — on a
+//! dependency-free scoped thread pool ([`parallel`], `std::thread`
+//! only); the CLI `--threads` flag (default: all cores) sets the
+//! process-wide worker count, and `tests/determinism.rs` pins the
+//! invariance for every thread count and block width. The request hot
+//! path is allocation-free once warm:
+//! [`backend::NumericBackend::matmul_into`] stages into a reusable
+//! [`backend::Scratch`] and writes into a reusable output tensor, and
+//! [`graph::GraphExecutor`] pools its activations (see
+//! `rust/README.md` §Performance). (The ABFP *PJRT-artifact* serving
+//! path keys its noise per executed batch inside the kernel, outside
+//! this contract.)
 //!
 //! ## Offline substrate
 //!

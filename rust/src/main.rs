@@ -84,13 +84,22 @@ negative values parse: --gain -2.";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
-    // `--threads N` caps the simulator worker pool everywhere (serve
-    // workers, sweep matmuls, param staging). Absent/0 = all cores.
-    // Purely a scheduling knob: outputs are bit-identical for any value
+    // `--threads N` caps the simulator worker pool everywhere — serve
+    // workers, every sweep's matmuls (table2/figs1/fig5/bits cells,
+    // eval-graph, DNF calibration), and param staging all resolve their
+    // per-call `threads: 0` through this process default, audited in
+    // rust/README.md §Performance. Absent/0 = all cores. Purely a
+    // scheduling knob: outputs are bit-identical for any value
     // (coordinate-keyed ADC noise; see tests/determinism.rs).
     let threads = args.usize_or("threads", 0)?;
-    if threads > 0 {
-        abfp::parallel::set_default_threads(threads);
+    abfp::parallel::set_default_threads(threads);
+    if !matches!(args.command.as_str(), "" | "help" | "--help") {
+        // Echo the resolved pool so every sweep/serve log records the
+        // parallelism its numbers were produced under — flag or not.
+        eprintln!(
+            "[abfp] simulator worker pool: {} thread(s)",
+            abfp::parallel::default_threads()
+        );
     }
     match args.command.as_str() {
         "pretrain" => cmd_pretrain(&args),

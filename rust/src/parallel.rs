@@ -3,9 +3,21 @@
 //! Every matmul in this crate writes a row-major (rows, row_width)
 //! output whose elements are independent — the ADC noise engine is
 //! coordinate-keyed ([`crate::rng::CounterRng`]), so no draw depends on
-//! evaluation order. That makes row-chunked parallelism **bit-exact by
+//! evaluation order. That makes chunked parallelism **bit-exact by
 //! construction**: the same output is produced for any thread count and
 //! any chunk schedule (`tests/determinism.rs` pins this invariant).
+//!
+//! The kernels' partitioning helper is [`par_cell_chunks`]: 2-D
+//! (row × column-block) cells described by a [`CellGrid`]. Workers take
+//! contiguous *cell* runs, so a batch-1 matmul against a 4096-wide
+//! layer still fans out across every core. Because the cells of a
+//! row-major output tile its flat storage contiguously in cell order,
+//! each worker owns one disjoint `&mut` window obtained via
+//! `split_at_mut` — no locks, no unsafe. (A 1-D row-chunk helper used
+//! to live here; it capped workers at the row count — one core for
+//! batch-1 serving — and was removed when the kernels moved to cells.
+//! Don't reintroduce it for kernel work.) [`par_map`] covers
+//! embarrassingly parallel per-item work.
 //!
 //! Built on `std::thread::scope` only (no rayon, no crates.io): workers
 //! borrow the operands, each owns a disjoint `&mut` window of the output
@@ -58,21 +70,89 @@ pub fn resolve(threads: usize) -> usize {
     }
 }
 
-/// Run `work` over contiguous row chunks of a (rows, row_width) output.
+/// Column-block width the numeric kernels hand to [`CellGrid`]: 64
+/// output columns per cell keeps a worker streaming 64 consecutive
+/// weight rows against one cached activation row, and yields enough
+/// cells for full fan-out even at batch 1 (4096-wide layer / 64 = 64
+/// cells). Purely a scheduling/locality knob — kernel outputs are
+/// bit-identical for every block width (each output element is
+/// accumulated entirely inside one cell).
+pub const KERNEL_COL_BLOCK: usize = 64;
+
+/// Geometry of a 2-D (row × column-block) partition of a row-major
+/// (rows, row_width) output.
 ///
-/// The output slice is partitioned with `split_at_mut` so every worker
-/// writes a disjoint window; `work(rows_range, chunk)` receives the
-/// global row range it owns and the matching window (whose row 0 is
-/// `rows_range.start`). Per-chunk return values come back ordered by
-/// `rows_range.start`, so reductions over them are deterministic.
+/// Cell `c` covers row `c / col_blocks`, columns
+/// `[cb * col_block, min((cb+1) * col_block, row_width))` with
+/// `cb = c % col_blocks`. In cell-index order the cells tile the flat
+/// output contiguously (the last block of a row is simply shorter), so
+/// any split at cell boundaries is a split of the flat storage —
+/// exactly what [`par_cell_chunks`] exploits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellGrid {
+    pub rows: usize,
+    pub row_width: usize,
+    pub col_block: usize,
+    /// Column blocks per row: `ceil(row_width / col_block)`.
+    pub col_blocks: usize,
+}
+
+impl CellGrid {
+    /// Partition a (rows, row_width) output into cells of at most
+    /// `col_block` columns (clamped to at least 1).
+    pub fn new(rows: usize, row_width: usize, col_block: usize) -> CellGrid {
+        let col_block = col_block.max(1);
+        CellGrid {
+            rows,
+            row_width,
+            col_block,
+            col_blocks: row_width.div_ceil(col_block),
+        }
+    }
+
+    /// Total number of cells.
+    pub fn cells(&self) -> usize {
+        self.rows * self.col_blocks
+    }
+
+    /// Decode cell `c` into its (row, column range).
+    #[inline]
+    pub fn cell(&self, c: usize) -> (usize, Range<usize>) {
+        let row = c / self.col_blocks;
+        let cb = c % self.col_blocks;
+        let lo = cb * self.col_block;
+        let hi = ((cb + 1) * self.col_block).min(self.row_width);
+        (row, lo..hi)
+    }
+
+    /// Flat storage offset of cell `c`'s first element (also valid at
+    /// `c == cells()`, where it is the total element count).
+    #[inline]
+    pub fn offset(&self, c: usize) -> usize {
+        let row = c / self.col_blocks;
+        let cb = c % self.col_blocks;
+        row * self.row_width + cb * self.col_block
+    }
+}
+
+/// Run `work` over contiguous cell runs of a [`CellGrid`]-partitioned
+/// row-major output.
 ///
-/// Scheduling never changes results: callers must ensure `work` is a
-/// pure function of the row range (true for every backend matmul —
-/// noise is coordinate-keyed, accumulation stays within a row).
-pub fn par_row_chunks<S, F>(
+/// `work(cells, chunk)` receives a global cell-index range and the
+/// matching flat window of `out` (the concatenation of those cells in
+/// index order — decode positions with [`CellGrid::cell`] and advance a
+/// running offset). Per-chunk return values come back ordered by
+/// `cells.start`, so reductions over them are deterministic.
+///
+/// Unlike a plain row-chunk split, the worker count is capped by the
+/// cell count, not the row count: a batch-1 output still fans out
+/// across `row_width / col_block` cells. Scheduling never changes results:
+/// callers must compute each output element entirely within its cell
+/// (true for every backend kernel — per-element FLOAT32 accumulation
+/// runs tile-ordered inside one cell; noise is coordinate-keyed).
+pub fn par_cell_chunks<S, F>(
     threads: usize,
-    rows: usize,
-    row_width: usize,
+    grid: &CellGrid,
     out: &mut [f32],
     work: F,
 ) -> Vec<S>
@@ -82,29 +162,31 @@ where
 {
     assert_eq!(
         out.len(),
-        rows * row_width,
-        "output buffer does not match rows * row_width"
+        grid.rows * grid.row_width,
+        "output buffer does not match the cell grid"
     );
-    let mut threads = resolve(threads).min(rows).max(1);
-    if rows * row_width < MIN_PAR_ELEMS {
+    let cells = grid.cells();
+    let mut threads = resolve(threads).min(cells).max(1);
+    if out.len() < MIN_PAR_ELEMS {
         threads = 1;
     }
     if threads == 1 {
-        return vec![work(0..rows, out)];
+        return vec![work(0..cells, out)];
     }
-    let chunk_rows = rows.div_ceil(threads);
+    let per = cells.div_ceil(threads);
     std::thread::scope(|scope| {
         let work = &work;
         let mut handles = Vec::with_capacity(threads);
         let mut rest = out;
-        let mut row0 = 0usize;
-        while row0 < rows {
-            let take = chunk_rows.min(rows - row0);
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * row_width);
+        let mut c0 = 0usize;
+        while c0 < cells {
+            let c1 = (c0 + per).min(cells);
+            let take = grid.offset(c1) - grid.offset(c0);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
             rest = tail;
-            let range = row0..row0 + take;
+            let range = c0..c1;
             handles.push(scope.spawn(move || work(range, head)));
-            row0 += take;
+            c0 = c1;
         }
         handles
             .into_iter()
@@ -154,15 +236,25 @@ mod tests {
         assert!(resolve(0) >= 1);
     }
 
-    /// Reference: fill each cell with a function of its coordinates.
-    fn fill(threads: usize, rows: usize, cols: usize) -> (Vec<f32>, Vec<u64>) {
-        let mut out = vec![0.0f32; rows * cols];
-        let sums = par_row_chunks(threads, rows, cols, &mut out, |range, chunk| {
+    /// Reference: fill each cell element with a function of its
+    /// coordinates via the 2-D helper, returning (output, chunk sums).
+    fn fill_cells(
+        threads: usize,
+        rows: usize,
+        cols: usize,
+        block: usize,
+    ) -> (Vec<f32>, Vec<u64>) {
+        let grid = CellGrid::new(rows, cols, block);
+        let mut out = vec![-1.0f32; rows * cols];
+        let sums = par_cell_chunks(threads, &grid, &mut out, |cells, chunk| {
             let mut sum = 0u64;
-            for (ci, i) in range.enumerate() {
-                for j in 0..cols {
-                    chunk[ci * cols + j] = (i * cols + j) as f32;
+            let mut off = 0usize;
+            for c in cells {
+                let (i, js) = grid.cell(c);
+                for j in js {
+                    chunk[off] = (i * cols + j) as f32;
                     sum += (i * cols + j) as u64;
+                    off += 1;
                 }
             }
             sum
@@ -171,47 +263,82 @@ mod tests {
     }
 
     #[test]
-    fn chunks_cover_every_row_exactly_once() {
-        // Large enough to clear MIN_PAR_ELEMS so threads really fan out.
-        let (out, _) = fill(4, 100, 64);
-        for (idx, &v) in out.iter().enumerate() {
-            assert_eq!(v, idx as f32);
+    fn cell_grid_geometry() {
+        // 3 rows x 10 cols in blocks of 4: blocks are 4, 4, 2 wide.
+        let g = CellGrid::new(3, 10, 4);
+        assert_eq!(g.col_blocks, 3);
+        assert_eq!(g.cells(), 9);
+        assert_eq!(g.cell(0), (0, 0..4));
+        assert_eq!(g.cell(2), (0, 8..10));
+        assert_eq!(g.cell(3), (1, 0..4));
+        assert_eq!(g.cell(8), (2, 8..10));
+        // Offsets tile the flat storage contiguously in cell order.
+        for c in 0..g.cells() {
+            let (row, js) = g.cell(c);
+            assert_eq!(g.offset(c), row * 10 + js.start);
+            assert_eq!(g.offset(c + 1), g.offset(c) + js.len());
+        }
+        assert_eq!(g.offset(g.cells()), 30);
+        // Degenerate widths clamp instead of dividing by zero.
+        assert_eq!(CellGrid::new(4, 6, 0).col_block, 1);
+        assert_eq!(CellGrid::new(4, 0, 8).cells(), 0);
+    }
+
+    #[test]
+    fn cell_chunks_cover_every_element_exactly_once() {
+        // 2 rows x 4096 cols clears MIN_PAR_ELEMS even at batch "2":
+        // the whole point of the 2-D split.
+        for block in [1usize, 7, 64, 100, 4096, 9999] {
+            let (out, _) = fill_cells(8, 2, 4096, block);
+            for (idx, &v) in out.iter().enumerate() {
+                assert_eq!(v, idx as f32, "block={block}");
+            }
         }
     }
 
     #[test]
-    fn thread_count_does_not_change_output_or_reduction() {
-        let (base_out, base_sums) = fill(1, 97, 64);
+    fn cell_chunk_schedule_never_changes_output_or_reduction() {
+        let (base_out, base_sums) = fill_cells(1, 3, 2048, 64);
         for threads in [2usize, 3, 8, 64] {
-            let (out, sums) = fill(threads, 97, 64);
-            assert_eq!(out, base_out, "threads={threads}");
-            assert_eq!(
-                sums.iter().sum::<u64>(),
-                base_sums.iter().sum::<u64>(),
-                "threads={threads}"
-            );
+            for block in [1usize, 32, 64, 100, 2048] {
+                let (out, sums) = fill_cells(threads, 3, 2048, block);
+                assert_eq!(out, base_out, "threads={threads} block={block}");
+                assert_eq!(
+                    sums.iter().sum::<u64>(),
+                    base_sums.iter().sum::<u64>(),
+                    "threads={threads} block={block}"
+                );
+            }
         }
     }
 
     #[test]
-    fn small_outputs_run_inline() {
-        // Below MIN_PAR_ELEMS the helper returns exactly one chunk.
-        let mut out = vec![0.0f32; 4];
-        let res = par_row_chunks(8, 2, 2, &mut out, |range, _| range.len());
-        assert_eq!(res, vec![2]);
+    fn batch_one_fans_out_across_cells() {
+        // 1 row x 4096 cols at block 64 = 64 cells; 8 threads must see
+        // 8 chunks (a row-chunk split would collapse this to 1).
+        let grid = CellGrid::new(1, 4096, 64);
+        let mut out = vec![0.0f32; 4096];
+        let chunks = par_cell_chunks(8, &grid, &mut out, |cells, chunk| {
+            assert_eq!(chunk.len(), grid.offset(cells.end) - grid.offset(cells.start));
+            cells.len()
+        });
+        assert_eq!(chunks.len(), 8);
+        assert_eq!(chunks.iter().sum::<usize>(), 64);
     }
 
     #[test]
-    fn rows_fewer_than_threads() {
-        let (out, _) = fill(64, 3, 2048);
-        assert_eq!(out[0], 0.0);
-        assert_eq!(out[3 * 2048 - 1], (3.0 * 2048.0) - 1.0);
+    fn small_cell_outputs_run_inline() {
+        let grid = CellGrid::new(2, 8, 4);
+        let mut out = vec![0.0f32; 16];
+        let res = par_cell_chunks(8, &grid, &mut out, |cells, _| cells.len());
+        assert_eq!(res, vec![4]);
     }
 
     #[test]
-    fn empty_rows_are_fine() {
+    fn empty_cell_grids_are_fine() {
+        let grid = CellGrid::new(0, 8, 4);
         let mut out = Vec::new();
-        let res = par_row_chunks(4, 0, 8, &mut out, |range, _| range.len());
+        let res = par_cell_chunks(4, &grid, &mut out, |cells, _| cells.len());
         assert_eq!(res, vec![0]);
     }
 

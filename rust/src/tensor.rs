@@ -114,6 +114,27 @@ impl Tensor {
         }
     }
 
+    /// Elementwise map in place (the allocation-free twin of [`map`]
+    /// (Self::map), used by the serving hot path).
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Rebuild this tensor in place as an (m, n) matrix, reusing both
+    /// the shape and data allocations (none occurs once their capacity
+    /// covers the request — the scratch-buffer contract of the
+    /// zero-allocation matmul seam). Returns the zeroed data slice for
+    /// the caller to fill.
+    pub fn reset_matrix(&mut self, m: usize, n: usize) -> &mut [f32] {
+        self.shape.clear();
+        self.shape.extend_from_slice(&[m, n]);
+        self.data.clear();
+        self.data.resize(m * n, 0.0);
+        &mut self.data
+    }
+
     /// Elementwise binary op.
     pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
         if self.shape != other.shape {
@@ -149,6 +170,15 @@ impl Tensor {
     /// FLOAT32 matmul `self (M,K) @ other^T (N,K) -> (M,N)` —
     /// weights output-features-major, matching the device layout.
     pub fn matmul_nt(&self, w: &Tensor) -> Result<Tensor> {
+        let mut out = Tensor::from_vec(Vec::new());
+        self.matmul_nt_into(w, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`matmul_nt`](Self::matmul_nt) into a caller-owned tensor whose
+    /// buffers are reused across calls (bit-identical output — same
+    /// kernel, same accumulation order).
+    pub fn matmul_nt_into(&self, w: &Tensor, out: &mut Tensor) -> Result<()> {
         if self.shape.len() != 2 || w.shape.len() != 2 {
             bail!("matmul_nt wants 2-D operands");
         }
@@ -157,7 +187,7 @@ impl Tensor {
         if k != kw {
             bail!("reduction mismatch {k} vs {kw}");
         }
-        let mut out = vec![0.0f32; m * n];
+        let buf = out.reset_matrix(m, n);
         for i in 0..m {
             let xrow = &self.data[i * k..(i + 1) * k];
             for j in 0..n {
@@ -166,10 +196,10 @@ impl Tensor {
                 for t in 0..k {
                     acc += xrow[t] * wrow[t];
                 }
-                out[i * n + j] = acc;
+                buf[i * n + j] = acc;
             }
         }
-        Tensor::new(&[m, n], out)
+        Ok(())
     }
 }
 
@@ -208,6 +238,42 @@ mod tests {
         assert_eq!(c.data(), &[3.0, -6.0, 9.0]);
         assert_eq!(a.max_abs(), 3.0);
         assert!((a.mean() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn map_inplace_matches_map() {
+        let a = Tensor::from_vec(vec![1.0, -2.0, 3.0]);
+        let mut b = a.clone();
+        b.map_inplace(|v| v * 2.0 - 1.0);
+        assert_eq!(b, a.map(|v| v * 2.0 - 1.0));
+    }
+
+    #[test]
+    fn reset_matrix_reuses_buffers() {
+        let mut t = Tensor::from_vec(vec![9.0; 12]);
+        let cap_ptr = {
+            let buf = t.reset_matrix(3, 4);
+            assert!(buf.iter().all(|&v| v == 0.0));
+            buf.as_ptr()
+        };
+        assert_eq!(t.shape(), &[3, 4]);
+        // Shrinking reuses the same allocation.
+        let ptr2 = t.reset_matrix(2, 2).as_ptr();
+        assert_eq!(ptr2, cap_ptr);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn matmul_nt_into_matches_matmul_nt() {
+        let x = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let w = Tensor::new(&[2, 3], vec![1., 0., 1., 0., 1., 0.]).unwrap();
+        let fresh = x.matmul_nt(&w).unwrap();
+        // Reused output tensor with stale contents and the wrong shape.
+        let mut out = Tensor::from_vec(vec![7.0; 32]);
+        x.matmul_nt_into(&w, &mut out).unwrap();
+        assert_eq!(out, fresh);
+        assert!(x.matmul_nt_into(&Tensor::zeros(&[2, 4]), &mut out).is_err());
     }
 
     #[test]

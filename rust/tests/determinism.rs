@@ -12,15 +12,30 @@
 //!       still perturb noisy outputs.
 //!   D4  `project_params` (parallel per-tensor staging) is identical
 //!       to serial per-tensor projection.
+//!   D5  The 2-D (row × column-block) cell partition is schedule-
+//!       independent: an ADC-style coordinate-keyed kernel produces
+//!       bit-identical output and reductions for every thread count
+//!       and column-block width.
+//!   D6  Batch-1 against a wide layer — the shape the 2-D partition
+//!       exists for — is bit-identical across thread counts on all
+//!       four backends.
+//!   D7  Ragged-K tail tiles with fewer rows than threads stay
+//!       bit-identical across thread counts on all four backends.
+//!   D8  The zero-allocation seam (`matmul_into` with a reused
+//!       `Scratch`) replays the allocating `matmul` exactly, call
+//!       after call, on all four backends.
 //!
-//! Operand sizes sit above the inline threshold of
-//! `parallel::par_row_chunks` (4096 output elements) so the chunk
-//! helpers genuinely fan out instead of degenerating to one thread.
+//! Operand sizes sit above the inline threshold of the `parallel`
+//! chunk helpers (4096 output elements) so they genuinely fan out
+//! instead of degenerating to one thread.
 
 use abfp::abfp::{Device, DeviceConfig};
-use abfp::backend::{project_params, project_tensor, BackendKind, NumericBackend};
+use abfp::backend::{
+    project_params, project_tensor, BackendKind, NumericBackend, Scratch,
+};
 use abfp::numerics::bf16_round;
-use abfp::rng::Pcg64;
+use abfp::parallel::{par_cell_chunks, CellGrid};
+use abfp::rng::{CounterRng, Pcg64};
 use abfp::tensor::Tensor;
 
 fn rand_t(rng: &mut Pcg64, shape: &[usize], laplace: bool) -> Tensor {
@@ -109,6 +124,125 @@ fn d3_seed_reproducibility_at_any_thread_count() {
     };
     assert_eq!(run(5, 1), run(5, 8), "same seed must agree across threads");
     assert_ne!(run(5, 8), run(6, 8), "different seed must perturb outputs");
+}
+
+#[test]
+fn d5_cell_partition_schedule_independent_for_coordinate_keyed_work() {
+    // An ADC-noise-shaped kernel (coordinate-keyed draw per element,
+    // per-chunk saturation-style count) through the 2-D partition:
+    // every (threads, col_block) schedule must produce the same bits
+    // and the same reduction total.
+    let (rows, cols) = (3usize, 2048usize);
+    let noise = CounterRng::new(0xd5, 7);
+    let run = |threads: usize, block: usize| -> (Vec<f32>, u64) {
+        let grid = CellGrid::new(rows, cols, block);
+        let mut out = vec![0.0f32; rows * cols];
+        let counts = par_cell_chunks(threads, &grid, &mut out, |cells, chunk| {
+            let mut count = 0u64;
+            let mut off = 0usize;
+            for c in cells {
+                let (i, js) = grid.cell(c);
+                for j in js {
+                    let v = noise.uniform_at(i as u64, j as u64, 0, -1.0, 1.0);
+                    chunk[off] = v;
+                    off += 1;
+                    if v > 0.5 {
+                        count += 1;
+                    }
+                }
+            }
+            count
+        });
+        (out, counts.into_iter().sum())
+    };
+    let (base_out, base_count) = run(1, 64);
+    assert!(base_count > 0);
+    for threads in [2usize, 3, 8] {
+        for block in [1usize, 17, 64, 512, 4096] {
+            let (out, count) = run(threads, block);
+            assert_eq!(out, base_out, "threads={threads} block={block}");
+            assert_eq!(count, base_count, "threads={threads} block={block}");
+        }
+    }
+}
+
+#[test]
+fn d6_batch_one_wide_layer_thread_independent_all_backends() {
+    // 1 x 4096 output: exactly the batch-1 serving shape. Under row
+    // chunking this ran on one core; under the 2-D cells it fans out —
+    // and must not change a single bit on any backend.
+    let mut rng = Pcg64::seeded(0xd6);
+    let x = rand_t(&mut rng, &[1, 96], false);
+    let w = rand_t(&mut rng, &[4096, 96], true);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 8.0, 0.5);
+    for kind in BackendKind::ALL {
+        let run = |threads: usize| {
+            let mut backend = kind.build(cfg, 11);
+            backend.set_threads(threads);
+            backend.matmul_dense(&x, &w).unwrap()
+        };
+        let base = run(1);
+        assert_eq!(base.shape(), &[1, 4096]);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                base,
+                run(threads),
+                "{}: batch-1 output changed at {threads} threads",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn d7_ragged_k_and_rows_below_threads_all_backends() {
+    // K = 70 over 32-wide tiles leaves a 6-element ragged tail; 3 rows
+    // under 8 threads forces the partition to split columns to keep
+    // every worker busy. Bits must not move.
+    let mut rng = Pcg64::seeded(0xd7);
+    let x = rand_t(&mut rng, &[3, 70], false);
+    let w = rand_t(&mut rng, &[2048, 70], true);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5);
+    for kind in BackendKind::ALL {
+        let run = |threads: usize| {
+            let mut backend = kind.build(cfg, 13);
+            backend.set_threads(threads);
+            backend.matmul_dense(&x, &w).unwrap()
+        };
+        let base = run(1);
+        assert!(base.data().iter().all(|v| v.is_finite()), "{}", kind.name());
+        for threads in [2usize, 8] {
+            assert_eq!(base, run(threads), "{}: threads={threads}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn d8_scratch_reuse_replays_the_allocating_path_all_backends() {
+    // The zero-allocation seam: matmul_into with one reused Scratch +
+    // output tensor across successive differently-shaped calls must
+    // equal the allocating matmul sequence bit for bit (ABFP's row
+    // cursor advances identically on both paths).
+    let mut rng = Pcg64::seeded(0xd8);
+    let xa = rand_t(&mut rng, &[5, 70], false);
+    let xb = rand_t(&mut rng, &[2, 70], true);
+    let w = rand_t(&mut rng, &[9, 70], true);
+    let cfg = DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5);
+    for kind in BackendKind::ALL {
+        let mut plain = kind.build(cfg, 21);
+        let staged = plain.stage_weights(&w).unwrap();
+        let want_a = plain.matmul(&xa, &staged).unwrap();
+        let want_b = plain.matmul(&xb, &staged).unwrap();
+
+        let mut reused = kind.build(cfg, 21);
+        let staged = reused.stage_weights(&w).unwrap();
+        let mut scratch = Scratch::new();
+        let mut out = Tensor::from_vec(Vec::new());
+        reused.matmul_into(&xa, &staged, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, want_a, "{}", kind.name());
+        reused.matmul_into(&xb, &staged, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, want_b, "{}", kind.name());
+    }
 }
 
 #[test]
