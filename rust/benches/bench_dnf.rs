@@ -25,7 +25,7 @@ fn main() {
     let samples: Vec<f32> = (0..10_000).map(|_| rng.normal() * 0.05).collect();
     let ln = layer_noise("l".into(), &Tensor::from_vec(samples));
     let probs = ln.hist.probs();
-    let alias = AliasSampler::new(&probs);
+    let alias = AliasSampler::new(&probs).expect("histogram probs");
 
     let mut b = Bench::new("dnf");
     const DRAWS: usize = 100_000;

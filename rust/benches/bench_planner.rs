@@ -1,0 +1,38 @@
+//! Planner hot-path cost: one divergence scoring pass (the unit the
+//! search loop spends almost all its evaluations on), plan pricing
+//! through the energy model, and a per-layer saturation probe. The
+//! search budget is roughly `evals x score_plan`, so score_plan
+//! throughput bounds how large a candidate roster is practical.
+
+use abfp::abfp::DeviceConfig;
+use abfp::backend::BackendKind;
+use abfp::benchkit::{black_box, Bench};
+use abfp::graph::{build, builders::GRAPH_SEED, GraphPlan, LayerPlan};
+use abfp::planner::{capture_linear_inputs, plan_cost, probe_layer, score_plan, CalibConfig};
+
+fn main() {
+    let plan = GraphPlan::uniform(LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(0, (8, 8, 8), 8.0, 0.5),
+    ));
+    let calib = CalibConfig::smoke();
+    let graph = build("gru", GRAPH_SEED).unwrap();
+
+    let mut b = Bench::new("planner");
+    b.run("score_plan_gru_16_samples", calib.samples, || {
+        black_box(score_plan("gru", &plan, &calib).unwrap());
+    });
+    b.run("plan_cost_gru", 1, || {
+        black_box(plan_cost(&graph, &plan));
+    });
+
+    let inputs = capture_linear_inputs(&graph, &calib).unwrap();
+    let lp = LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(32, (8, 8, 8), 8.0, 0.5),
+    );
+    b.run("probe_layer_gru_l1", 1, || {
+        let w = graph.linear_weight(1).unwrap();
+        black_box(probe_layer("gru", &lp, 1, &inputs[1], w, calib.noise_seed).unwrap());
+    });
+}

@@ -6,6 +6,8 @@
 //! taken to sample from a histogram"). The alias method makes each draw
 //! two uniforms and one table lookup regardless of bin count.
 
+use anyhow::{bail, Result};
+
 use crate::rng::Pcg64;
 
 /// Precomputed alias table over `n` categories.
@@ -17,13 +19,32 @@ pub struct AliasSampler {
 
 impl AliasSampler {
     /// Build from (not necessarily normalized) non-negative weights.
-    pub fn new(weights: &[f64]) -> AliasSampler {
+    ///
+    /// Degenerate inputs are construction errors, not panics or silent
+    /// reinterpretations: an empty vector has nothing to sample, a
+    /// negative or non-finite weight has no categorical meaning, and an
+    /// all-zero vector names no distribution (the old code silently
+    /// substituted a uniform one — masking upstream histogram bugs).
+    pub fn new(weights: &[f64]) -> Result<AliasSampler> {
         let n = weights.len();
-        assert!(n > 0, "empty weight vector");
+        if n == 0 {
+            bail!("alias sampler: empty weight vector");
+        }
+        for (i, &w) in weights.iter().enumerate() {
+            if !w.is_finite() {
+                bail!("alias sampler: weight {i} is not finite ({w})");
+            }
+            if w < 0.0 {
+                bail!("alias sampler: weight {i} is negative ({w})");
+            }
+        }
         let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            bail!("alias sampler: all {n} weights are zero; no distribution to sample");
+        }
         let mut scaled: Vec<f64> = weights
             .iter()
-            .map(|&w| if total > 0.0 { w * n as f64 / total } else { 1.0 })
+            .map(|&w| w * n as f64 / total)
             .collect();
         let mut prob = vec![0.0f64; n];
         let mut alias = vec![0u32; n];
@@ -52,7 +73,7 @@ impl AliasSampler {
         for &s in &small {
             prob[s] = 1.0; // numerical residue
         }
-        AliasSampler { prob, alias }
+        Ok(AliasSampler { prob, alias })
     }
 
     /// Draw one category index.
@@ -81,7 +102,7 @@ mod tests {
     use super::*;
 
     fn empirical(weights: &[f64], draws: usize) -> Vec<f64> {
-        let s = AliasSampler::new(weights);
+        let s = AliasSampler::new(weights).unwrap();
         let mut rng = Pcg64::seeded(42);
         let mut counts = vec![0usize; weights.len()];
         for _ in 0..draws {
@@ -120,8 +141,25 @@ mod tests {
 
     #[test]
     fn single_category() {
-        let s = AliasSampler::new(&[3.0]);
+        let s = AliasSampler::new(&[3.0]).unwrap();
         let mut rng = Pcg64::seeded(1);
         assert_eq!(s.sample(&mut rng), 0);
+    }
+
+    #[test]
+    fn degenerate_weight_vectors_are_errors() {
+        // Regression: empty input used to assert-panic, an all-zero
+        // vector silently became uniform, and negative / non-finite
+        // weights corrupted the table. All four are Err now.
+        let err = AliasSampler::new(&[]).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        let err = AliasSampler::new(&[0.0, 0.0, 0.0]).unwrap_err();
+        assert!(err.to_string().contains("zero"), "{err}");
+        let err = AliasSampler::new(&[1.0, -0.5]).unwrap_err();
+        assert!(err.to_string().contains("negative"), "{err}");
+        assert!(AliasSampler::new(&[1.0, f64::NAN]).is_err());
+        assert!(AliasSampler::new(&[1.0, f64::INFINITY]).is_err());
+        // Valid vectors (including some zero entries) still build.
+        assert!(AliasSampler::new(&[0.0, 1.0]).is_ok());
     }
 }

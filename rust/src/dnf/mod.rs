@@ -151,7 +151,8 @@ impl NoiseModel {
                 if !active || scale == 0.0 {
                     return Tensor::zeros(shape);
                 }
-                let sampler = AliasSampler::new(&layer.hist.probs());
+                let sampler = AliasSampler::new(&layer.hist.probs())
+                    .expect("smoothed histogram probabilities are positive");
                 let mut data = Vec::with_capacity(len);
                 for _ in 0..len {
                     let bin = sampler.sample(rng);

@@ -97,6 +97,119 @@ pub fn full_precision_bits(b_w: u32, b_x: u32, n: usize) -> f64 {
     b_w as f64 + b_x as f64 + (n as f64).log2() - 1.0
 }
 
+use crate::abfp::DeviceConfig;
+use crate::backend::BackendKind;
+use crate::numerics::num_tiles;
+
+/// Relative energy of one analog MAC (the unit everything else is
+/// priced against; arbitrary units, only ratios are meaningful).
+pub const ANALOG_MAC_ENERGY: f64 = 1.0;
+
+/// Relative energy of one FLOAT32 digital MAC: a 32x32-bit multiplier
+/// under the same bits-product scaling as [`digital_mac_energy`].
+pub const FLOAT32_MAC_ENERGY: f64 = 32.0 * 32.0;
+
+/// Relative energy of one digital MAC on `b_w` x `b_x`-bit operands —
+/// multiplier area/energy scales with the product of operand widths.
+pub fn digital_mac_energy(b_w: u32, b_x: u32) -> f64 {
+    b_w as f64 * b_x as f64
+}
+
+/// Relative DAC energy per conversion: `2^bits` (same mixed-signal
+/// converter scaling as the ADC model, without the gain term — the DAC
+/// drives the array input, gain applies on the output side).
+pub fn dac_energy_per_conversion(bits: u32) -> f64 {
+    (bits as f64).exp2()
+}
+
+/// Energy decomposition of one `(out, in)` matmul on one example —
+/// MAC work plus the converter traffic around it. This is what plan
+/// pricing sums per layer: conversion counts make tile width a real
+/// cost lever (more tiles = more ADC samples per output), not just a
+/// numerics knob.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MatmulEnergy {
+    /// Multiply-accumulates (`out * in`).
+    pub macs: u64,
+    /// Total MAC energy (analog or digital per the backend).
+    pub mac_energy: f64,
+    /// Input-side conversions (activation DAC writes; 0 for float32).
+    pub dac_conversions: u64,
+    pub dac_energy: f64,
+    /// Output-side conversions (ADC samples per output per tile for
+    /// ABFP; one quantized output per element for the digital formats).
+    pub adc_conversions: u64,
+    pub adc_energy: f64,
+}
+
+impl MatmulEnergy {
+    /// Total relative energy of the matmul.
+    pub fn total(&self) -> f64 {
+        self.mac_energy + self.dac_energy + self.adc_energy
+    }
+}
+
+/// Price one `(out_features, in_features)` matmul on one example under
+/// `kind` at `device`. The model, per backend:
+///
+/// * `float32` — `out*in` digital MACs at 32x32-bit energy; no
+///   converters on the path.
+/// * `abfp`    — analog MACs at unit energy; `in` DAC conversions at
+///   `2^bits_x`; `out * tiles(in, n)` ADC conversions at
+///   `2^bits_y * gain` (the Rekhi scaling of
+///   [`DesignPoint::adc_energy_per_conversion`]) — tile width enters
+///   the price directly.
+/// * `fixed` / `bfp` — digital MACs at `b_w*b_x`; `in` input
+///   quantizations and `out` output quantizations at `2^bits_x` each
+///   (these formats quantize each output once digitally — no per-tile
+///   ADC, so tiling costs nothing extra).
+pub fn matmul_energy(
+    kind: BackendKind,
+    device: &DeviceConfig,
+    out_features: usize,
+    in_features: usize,
+) -> MatmulEnergy {
+    let macs = (out_features * in_features) as u64;
+    match kind {
+        BackendKind::Float32 => MatmulEnergy {
+            macs,
+            mac_energy: macs as f64 * FLOAT32_MAC_ENERGY,
+            ..MatmulEnergy::default()
+        },
+        BackendKind::Abfp => {
+            let tiles = num_tiles(in_features, device.n.max(1));
+            let dac = in_features as u64;
+            let adc = (out_features * tiles) as u64;
+            let point = DesignPoint {
+                n: device.n.max(1),
+                adc_bits: device.bits_y as f64,
+                gain: device.gain as f64,
+            };
+            MatmulEnergy {
+                macs,
+                mac_energy: macs as f64 * ANALOG_MAC_ENERGY,
+                dac_conversions: dac,
+                dac_energy: dac as f64 * dac_energy_per_conversion(device.bits_x),
+                adc_conversions: adc,
+                adc_energy: adc as f64 * point.adc_energy_per_conversion(),
+            }
+        }
+        BackendKind::Fixed | BackendKind::Bfp => {
+            let dac = in_features as u64;
+            let adc = out_features as u64;
+            let per_conv = dac_energy_per_conversion(device.bits_x);
+            MatmulEnergy {
+                macs,
+                mac_energy: macs as f64 * digital_mac_energy(device.bits_w, device.bits_x),
+                dac_conversions: dac,
+                dac_energy: dac as f64 * per_conv,
+                adc_conversions: adc,
+                adc_energy: adc as f64 * per_conv,
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -145,5 +258,61 @@ mod tests {
     fn full_precision_bits_example() {
         // Paper: b_w = b_x = 8, n = 128 -> ~22 bits.
         assert!((full_precision_bits(8, 8, 128) - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matmul_energy_monotone_in_bits() {
+        // More converter / operand bits never makes a matmul cheaper.
+        let lo = DeviceConfig::new(32, (6, 6, 6), 2.0, 0.5);
+        let hi = DeviceConfig::new(32, (8, 8, 8), 2.0, 0.5);
+        for kind in BackendKind::ALL {
+            let a = matmul_energy(kind, &lo, 96, 96).total();
+            let b = matmul_energy(kind, &hi, 96, 96).total();
+            assert!(b >= a, "{kind:?}: {b} < {a}");
+        }
+        // ...and strictly more for every converter-bearing backend.
+        for kind in [BackendKind::Abfp, BackendKind::Bfp, BackendKind::Fixed] {
+            let a = matmul_energy(kind, &lo, 96, 96).total();
+            let b = matmul_energy(kind, &hi, 96, 96).total();
+            assert!(b > a, "{kind:?}: {b} <= {a}");
+        }
+    }
+
+    #[test]
+    fn matmul_energy_monotone_in_tiles() {
+        // Narrower tiles => more tiles. ABFP pays one ADC sample per
+        // output per tile, so its cost strictly rises; the digital
+        // formats quantize outputs once, so their cost is flat.
+        let wide = DeviceConfig::new(64, (8, 8, 8), 2.0, 0.5);
+        let narrow = DeviceConfig::new(16, (8, 8, 8), 2.0, 0.5);
+        let a = matmul_energy(BackendKind::Abfp, &wide, 96, 96);
+        let b = matmul_energy(BackendKind::Abfp, &narrow, 96, 96);
+        assert!(b.adc_conversions > a.adc_conversions);
+        assert!(b.total() > a.total(), "{} <= {}", b.total(), a.total());
+        for kind in [BackendKind::Float32, BackendKind::Bfp, BackendKind::Fixed] {
+            let a = matmul_energy(kind, &wide, 96, 96).total();
+            let b = matmul_energy(kind, &narrow, 96, 96).total();
+            assert!(b >= a, "{kind:?}: {b} < {a}");
+            assert_eq!(b, a, "{kind:?} should not pay for tiling");
+        }
+    }
+
+    #[test]
+    fn matmul_energy_orders_the_formats() {
+        // gru fc2 shape: float32 is by far the most expensive, the
+        // digital reduced-precision formats next, ABFP cheapest per MAC.
+        let d = DeviceConfig::new(32, (8, 8, 8), 2.0, 0.5);
+        let f = matmul_energy(BackendKind::Float32, &d, 96, 96);
+        let x = matmul_energy(BackendKind::Fixed, &d, 96, 96);
+        let a = matmul_energy(BackendKind::Abfp, &d, 96, 96);
+        assert_eq!(f.macs, 96 * 96);
+        assert_eq!(f.dac_conversions + f.adc_conversions, 0);
+        assert!(f.total() > x.total());
+        assert!(x.total() > a.total());
+        // ABFP decomposition: 96*96 MACs at 1.0, 96 DACs at 2^8,
+        // 96 outputs * 3 tiles ADCs at 2^8 * 2.
+        assert_eq!(a.adc_conversions, 96 * 3);
+        let expect = 96.0 * 96.0 + 96.0 * 256.0 + (96.0 * 3.0) * 256.0 * 2.0;
+        assert!((a.total() - expect).abs() < 1e-6, "{}", a.total());
     }
 }

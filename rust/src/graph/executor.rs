@@ -59,6 +59,19 @@ pub struct GraphExecutor {
     scratch: Vec<Scratch>,
 }
 
+/// The noise-stream seed of `Linear` ordinal `i` of `model` under user
+/// seed `seed`. FNV-1a over the model name decorrelates models served
+/// under one user seed; the golden-gamma multiply (the SplitMix64
+/// whitening step) decorrelates layers within a model. Public so the
+/// planner's single-layer probes draw the *same* noise stream the
+/// executor will serve the layer with.
+pub fn layer_seed(model: &str, seed: u64, i: usize) -> u64 {
+    let model_h = model.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x0100_0000_01b3)
+    });
+    seed ^ model_h ^ (i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
 impl GraphExecutor {
     /// Stage every `Linear` layer onto its planned backend. `seed`
     /// keys the ABFP noise streams (one decorrelated stream per
@@ -72,33 +85,20 @@ impl GraphExecutor {
         threads: usize,
     ) -> Result<GraphExecutor> {
         let count = graph.linear_count();
-        // FNV-1a over the model name: two models served under one user
-        // seed must not share noise streams (their layer i draws would
-        // otherwise be bit-identical at overlapping coordinates).
-        let model_h = graph
-            .model()
-            .bytes()
-            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
-                (h ^ b as u64).wrapping_mul(0x0100_0000_01b3)
-            });
         // Tile width 0 in a layer plan means "this model's registry
         // default" (gru/dlrm run narrower arrays than the image
         // archetypes); hand-built graphs outside the registry fall back
         // to the paper tile.
-        let default_tile = registry::meta(graph.model())
-            .map(|m| m.default_tile)
-            .unwrap_or(128);
+        let default_tile = registry::default_tile(graph.model());
         let mut stages = Vec::with_capacity(count);
         for i in 0..count {
             let mut lp = plan.resolve(i, count);
             if lp.device.n == 0 {
                 lp.device.n = default_tile;
             }
-            // Decorrelate per-layer noise streams under one user seed
-            // (golden-gamma multiply, the SplitMix64 whitening step).
-            let layer_seed =
-                seed ^ model_h ^ (i as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-            let mut backend = lp.backend.build(lp.device, layer_seed);
+            let mut backend = lp
+                .backend
+                .build(lp.device, layer_seed(graph.model(), seed, i));
             backend.set_threads(threads);
             let w = graph
                 .linear_weight(i)

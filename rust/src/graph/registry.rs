@@ -106,6 +106,15 @@ pub fn meta(model: &str) -> Result<&'static ModelMeta> {
         .ok_or_else(|| anyhow!("unknown model {model:?}; expected one of {MODEL_NAMES:?}"))
 }
 
+/// The tile width a plan's `n = 0` ("auto") sentinel resolves to for
+/// `model` — the registry default, or the paper tile (128) for
+/// hand-built graphs outside the registry. The executor and the
+/// planner's probes/cost model must agree on this substitution, so it
+/// lives here once.
+pub fn default_tile(model: &str) -> usize {
+    meta(model).map(|m| m.default_tile).unwrap_or(128)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

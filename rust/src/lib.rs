@@ -92,6 +92,7 @@ pub mod metrics;
 pub mod models;
 pub mod numerics;
 pub mod parallel;
+pub mod planner;
 pub mod report;
 pub mod rng;
 pub mod runtime;

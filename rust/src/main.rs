@@ -13,6 +13,8 @@ use abfp::coordinator::{loadgen, BatchPolicy, HttpServer, Router, WorkerConfig};
 use abfp::data::dataset_for;
 use abfp::graph::{self, GraphPlan, LayerPlan};
 use abfp::models;
+use abfp::planner::{self, DnfGraphConfig, SearchConfig};
+use abfp::report::write_report;
 use abfp::rng::Pcg64;
 use abfp::runtime::Engine;
 use abfp::sweep::{bits, energy, fig5, figs1, table2, table3};
@@ -35,10 +37,34 @@ USAGE: abfp <command> [flags]
   eval-graph    per-layer backend accounting for the pure-Rust layer
                   graphs (artifact-free): run each model's seeded graph
                   under a numeric plan and report, per Linear layer,
-                  matmuls / MACs / ADC conversions / saturation.
+                  matmuls / MACs / ADC conversions / saturation, plus
+                  the end-to-end divergence vs the FLOAT32 reference
+                  (same harness plan-search optimizes).
                   --models a,b  --plan FILE  --samples N  --batch N
                   --seed N  --out DIR  (without --plan: uniform
                   --backend at --tile/--gain)
+  plan-search   adaptive precision planner (artifact-free): greedy beam
+                  descent from uniform FLOAT32 over {backend, bits,
+                  gain, tile} candidates for the cheapest plan (energy
+                  model: MACs + DAC/ADC conversions) whose divergence
+                  stays within --budget percent of the FLOAT32 ref;
+                  saturation probes prune clipping candidates early.
+                  Emits plan_<model>.json (loadable by serve/eval-graph
+                  --plan; reload is self-checked) plus the search
+                  trajectory in plan_search.{md,json}.
+                  --models a,b  --budget PCT (default 1.0)  --beam N
+                  --samples N  --batch N  --seed N  --smoke  --out DIR
+  dnf-graph     graph-level Differential Noise Finetuning
+                  (artifact-free): calibrate a per-layer affine noise
+                  model for the plan (regression gain + residual
+                  histogram through the dnf alias tables), finetune the
+                  graph weights against the FLOAT32 teacher under
+                  sampled noise (Adam, one-cycle), and re-score through
+                  the planner harness — a plan that fails --budget raw
+                  can pass after DNF. Reports dnf_graph.{md,json}.
+                  --models a,b  --plan FILE (or --backend/--tile/--gain)
+                  --steps N  --lr F  --batch N  --samples N
+                  --budget PCT  --seed N  --smoke  --out DIR
   finetune      Table III / S3: QAT vs DNF at tile 128, gain 8
                   --models cnn,ssd  --steps N  --bits 8 (or 6)  --out DIR
   figs1         Fig S1 numeric error distributions + Appendix A
@@ -106,6 +132,8 @@ fn main() -> Result<()> {
         "sweep-table2" => cmd_table2(&args),
         "fig5" => cmd_fig5(&args),
         "eval-graph" => cmd_eval_graph(&args),
+        "plan-search" => cmd_plan_search(&args),
+        "dnf-graph" => cmd_dnf_graph(&args),
         "finetune" => cmd_finetune(&args),
         "figs1" => cmd_figs1(&args),
         "bits" => cmd_bits(&args),
@@ -310,7 +338,7 @@ fn cmd_eval_graph(args: &Args) -> Result<()> {
     let batch = args.usize_or("batch", 32)?;
     let seed = args.u64_or("seed", 0x5eed)?;
     eprintln!("[eval-graph] {sel:?} plan: {}", plan.summary());
-    let rows = abfp::sweep::graph::run(
+    let report = abfp::sweep::graph::run(
         &sel,
         &plan,
         samples,
@@ -318,9 +346,113 @@ fn cmd_eval_graph(args: &Args) -> Result<()> {
         seed,
         args.usize_or("threads", 0)?,
     )?;
-    abfp::sweep::graph::write_reports(&out, &rows, &plan)?;
-    println!("{}", abfp::sweep::graph::render(&rows, &plan));
+    abfp::sweep::graph::write_reports(&out, &report, &plan)?;
+    println!("{}", abfp::sweep::graph::render(&report, &plan));
     eprintln!("reports written to {out}/graph.{{md,csv,json}}");
+    Ok(())
+}
+
+/// `plan-search`: the adaptive precision planner — cheapest per-layer
+/// plan within a divergence budget, emitted ready to serve.
+fn cmd_plan_search(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "models", "budget", "samples", "batch", "seed", "beam", "smoke", "out",
+        "threads",
+    ])?;
+    let out = args.str_or("out", "reports");
+    let budget = args.f32_or("budget", 1.0)? as f64;
+    let mut cfg = if args.bool("smoke") {
+        SearchConfig::smoke(budget)
+    } else {
+        SearchConfig::new(budget)
+    };
+    cfg.beam = args.usize_or("beam", cfg.beam)?;
+    cfg.calib.samples = args.usize_or("samples", cfg.calib.samples)?;
+    cfg.calib.batch = args.usize_or("batch", cfg.calib.batch)?;
+    cfg.calib.noise_seed = args.u64_or("seed", cfg.calib.noise_seed)?;
+    cfg.calib.threads = args.usize_or("threads", 0)?;
+    let mut results = Vec::new();
+    for model in model_list(args) {
+        eprintln!("[plan-search] {model} budget {budget}% ({} candidates/layer)",
+            planner::search::candidates(cfg.smoke).len());
+        let res = planner::search::run(&model, &cfg)?;
+        // Emit the winning plan where serve/eval-graph --plan expect it,
+        // and prove the file round-trips before claiming success.
+        let name = format!("plan_{model}.json");
+        write_report(&out, &name, &res.best.plan.to_json().to_string())?;
+        let path = format!("{out}/{name}");
+        if GraphPlan::load(&path)? != res.best.plan {
+            bail!("emitted plan {path} did not reload identically");
+        }
+        eprintln!(
+            "  best {{{}}} rel err {:.3}% energy {} -> {path}",
+            res.best.plan.summary(),
+            res.best.divergence.rel_err_pct,
+            res.best.cost.display_vs(res.start.cost.total),
+        );
+        results.push(res);
+    }
+    write_report(&out, "plan_search.md", &planner::search::render(&results))?;
+    write_report(
+        &out,
+        "plan_search.json",
+        &planner::search::results_json(&results).to_string(),
+    )?;
+    println!("{}", planner::search::render(&results));
+    eprintln!("reports written to {out}/plan_search.{{md,json}} + {out}/plan_<model>.json");
+    Ok(())
+}
+
+/// `dnf-graph`: finetune a plan's weights under its own sampled noise
+/// and re-score — the budget-rescue half of the planner.
+fn cmd_dnf_graph(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "models", "plan", "backend", "backends", "tile", "gain", "f32", "steps",
+        "lr", "batch", "samples", "budget", "seed", "smoke", "out", "threads",
+    ])?;
+    let out = args.str_or("out", "reports");
+    let plan = graph_plan_from_args(args)?;
+    let mut cfg = if args.bool("smoke") {
+        DnfGraphConfig::smoke()
+    } else {
+        DnfGraphConfig::default()
+    };
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.lr = args.f32_or("lr", cfg.lr)?;
+    cfg.calib.samples = args.usize_or("samples", cfg.calib.samples)?;
+    cfg.calib.noise_seed = args.u64_or("seed", cfg.calib.noise_seed)?;
+    cfg.calib.threads = args.usize_or("threads", 0)?;
+    let budget = if args.has("budget") {
+        Some(args.f32_or("budget", 1.0)? as f64)
+    } else {
+        None
+    };
+    let mut outcomes = Vec::new();
+    for model in model_list(args) {
+        eprintln!(
+            "[dnf-graph] {model} plan {{{}}} steps {} lr {}",
+            plan.summary(),
+            cfg.steps,
+            cfg.lr
+        );
+        let o = planner::dnf_graph::run(&model, &plan, &cfg)?;
+        eprintln!(
+            "  before {:.3}% -> after {:.3}% (ratio {:.3})",
+            o.before.rel_err_pct,
+            o.after.rel_err_pct,
+            o.improvement_ratio()
+        );
+        outcomes.push(o);
+    }
+    write_report(&out, "dnf_graph.md", &planner::dnf_graph::render(&outcomes, budget))?;
+    write_report(
+        &out,
+        "dnf_graph.json",
+        &planner::dnf_graph::outcomes_json(&outcomes, budget).to_string(),
+    )?;
+    println!("{}", planner::dnf_graph::render(&outcomes, budget));
+    eprintln!("reports written to {out}/dnf_graph.{{md,json}}");
     Ok(())
 }
 

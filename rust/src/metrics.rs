@@ -42,8 +42,10 @@ pub fn compute(metric: &str, outputs: &[Tensor], y: &Tensor) -> Result<f64> {
 
 /// Argmax over the last axis of a (B, C) tensor. `total_cmp` keeps a
 /// NaN logit from panicking the comparator (NaN compares greatest, so a
-/// fully-NaN row deterministically picks its last column).
-fn argmax_rows(t: &Tensor) -> Vec<usize> {
+/// fully-NaN row deterministically picks its last column). Public so
+/// the planner's divergence scorer can reuse the exact top-1 decision
+/// rule instead of reimplementing it.
+pub fn argmax_rows(t: &Tensor) -> Vec<usize> {
     let c = *t.shape().last().unwrap();
     t.data()
         .chunks(c)

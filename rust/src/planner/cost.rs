@@ -1,0 +1,179 @@
+//! Plan pricing through the [`energy`](crate::energy) model: one
+//! [`MatmulEnergy`] per `Linear` layer (MACs by operand width, DAC
+//! conversions per input element, ADC conversions per output x tile),
+//! summed into a per-example total. The search minimizes this total
+//! subject to the divergence budget; strictly-cheaper moves are the
+//! only ones it considers, so the emitted plan is cheaper than the
+//! uniform FLOAT32 start by construction.
+
+use crate::energy::{matmul_energy, MatmulEnergy};
+use crate::graph::{registry, GraphPlan, ModelGraph};
+use crate::json::{self, Value};
+use crate::report::fmt_si;
+
+/// One `Linear` layer's resolved assignment and its price.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    /// `Linear` ordinal within the graph.
+    pub layer: usize,
+    /// Backend name the plan resolves this layer to.
+    pub backend: &'static str,
+    /// Compact device summary (`abfp(n=32,g=8)`, `float32`, ...).
+    pub summary: String,
+    pub energy: MatmulEnergy,
+}
+
+/// A fully priced plan: per-layer decomposition plus the per-example
+/// total relative energy.
+#[derive(Debug, Clone)]
+pub struct PlanCost {
+    pub model: String,
+    pub per_layer: Vec<LayerCost>,
+    /// Sum of `energy.total()` over the layers — relative energy per
+    /// example (arbitrary units; ratios against other plans for the
+    /// same model are the meaningful quantity).
+    pub total: f64,
+}
+
+impl PlanCost {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("total", json::num(self.total)),
+            (
+                "layers",
+                json::arr(
+                    self.per_layer
+                        .iter()
+                        .map(|l| {
+                            json::obj(vec![
+                                ("layer", json::num(l.layer as f64)),
+                                ("backend", json::s(l.backend)),
+                                ("plan", json::s(&l.summary)),
+                                ("macs", json::num(l.energy.macs as f64)),
+                                (
+                                    "dac_conversions",
+                                    json::num(l.energy.dac_conversions as f64),
+                                ),
+                                (
+                                    "adc_conversions",
+                                    json::num(l.energy.adc_conversions as f64),
+                                ),
+                                ("energy", json::num(l.energy.total())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// `283.4k (2.2% of float32)`-style display string against a
+    /// reference total.
+    pub fn display_vs(&self, reference_total: f64) -> String {
+        if reference_total > 0.0 {
+            format!(
+                "{} ({:.1}% of start)",
+                fmt_si(self.total),
+                100.0 * self.total / reference_total
+            )
+        } else {
+            fmt_si(self.total)
+        }
+    }
+}
+
+/// Price `plan` over `graph`: resolve every `Linear` layer (including
+/// the auto-tile sentinel, through the same
+/// [`registry::default_tile`] substitution the executor applies) and
+/// sum the energy model.
+pub fn plan_cost(graph: &ModelGraph, plan: &GraphPlan) -> PlanCost {
+    let count = graph.linear_count();
+    let tile = registry::default_tile(graph.model());
+    let mut per_layer = Vec::with_capacity(count);
+    let mut total = 0.0f64;
+    for i in 0..count {
+        let mut lp = plan.resolve(i, count);
+        if lp.device.n == 0 {
+            lp.device.n = tile;
+        }
+        let w = graph.linear_weight(i).expect("index < linear_count");
+        let energy = matmul_energy(lp.backend, &lp.device, w.shape()[0], w.shape()[1]);
+        total += energy.total();
+        per_layer.push(LayerCost {
+            layer: i,
+            backend: lp.backend.name(),
+            summary: lp.summary(),
+            energy,
+        });
+    }
+    PlanCost {
+        model: graph.model().to_string(),
+        per_layer,
+        total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abfp::DeviceConfig;
+    use crate::backend::BackendKind;
+    use crate::graph::{build, builders::GRAPH_SEED, LayerPlan};
+
+    #[test]
+    fn float32_is_the_most_expensive_uniform_plan() {
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let f32_cost = plan_cost(&graph, &GraphPlan::float32());
+        // gru: (96x24 + 96x96 + 12x96) MACs * 1024 per float32 MAC.
+        let macs = (96 * 24 + 96 * 96 + 12 * 96) as f64;
+        assert!((f32_cost.total - macs * 1024.0).abs() < 1e-6, "{}", f32_cost.total);
+        for kind in [BackendKind::Abfp, BackendKind::Bfp, BackendKind::Fixed] {
+            let plan = GraphPlan::uniform(LayerPlan::new(
+                kind,
+                DeviceConfig::new(0, (8, 8, 8), 2.0, 0.5),
+            ));
+            let c = plan_cost(&graph, &plan);
+            assert!(c.total < f32_cost.total, "{kind:?}: {}", c.total);
+        }
+    }
+
+    #[test]
+    fn auto_tile_resolves_through_the_registry() {
+        // gru's registry tile is 32: an auto-tile ABFP plan must price
+        // ceil(96/32) = 3 ADC conversions per output on layer 1, same
+        // as writing n=32 explicitly.
+        let auto = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 8.0, 0.5),
+        ));
+        let explicit = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 8.0, 0.5),
+        ));
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let a = plan_cost(&graph, &auto);
+        let b = plan_cost(&graph, &explicit);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.per_layer[1].energy.adc_conversions, 96 * 3);
+    }
+
+    #[test]
+    fn mixed_plans_price_each_layer_by_its_resolution() {
+        let interior = LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+        );
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let c = plan_cost(&graph, &GraphPlan::edges_float32(interior));
+        assert_eq!(c.per_layer.len(), 3);
+        assert_eq!(c.per_layer[0].backend, "float32");
+        assert_eq!(c.per_layer[1].backend, "abfp");
+        assert_eq!(c.per_layer[2].backend, "float32");
+        assert_eq!(c.per_layer[0].energy.adc_conversions, 0);
+        assert!(c.per_layer[1].energy.adc_conversions > 0);
+        let sum: f64 = c.per_layer.iter().map(|l| l.energy.total()).sum();
+        assert!((c.total - sum).abs() < 1e-9);
+        assert!(c.to_json().to_string().contains("\"backend\":\"abfp\""));
+    }
+}

@@ -1,0 +1,337 @@
+//! The shared divergence harness: score any plan's executor against the
+//! FLOAT32 host reference on seeded calibration batches.
+//!
+//! This is the single metric implementation behind `plan-search`,
+//! `dnf-graph` and `eval-graph`: end-to-end relative RMS error, a
+//! top-1-proxy agreement rate, plus the per-layer saturation /
+//! conversion accounting the search's pruning reads. The calibration
+//! stream replays exactly from `data_seed` (the same
+//! [`EVAL_DATA_SEED`](crate::sweep::eval::EVAL_DATA_SEED) stream and
+//! truncated-tail batching the `eval-graph` sweep uses), so every
+//! consumer scores identical inputs.
+
+use anyhow::{bail, Result};
+
+use crate::data;
+use crate::dnf::{self, LayerNoise};
+use crate::graph::executor::layer_seed;
+use crate::graph::{build, builders::GRAPH_SEED, registry, FlowScratch};
+use crate::graph::{GraphExecutor, GraphLayerStats, GraphPlan, LayerPlan, ModelGraph};
+use crate::json::{self, Value};
+use crate::metrics::argmax_rows;
+use crate::rng::Pcg64;
+use crate::sweep::eval::EVAL_DATA_SEED;
+use crate::tensor::Tensor;
+
+/// Stream id decorrelating the probe-input batch from the scoring
+/// batches (both key off `data_seed`).
+const CALIB_STREAM: u64 = 0xca11b;
+
+/// How a plan is scored: how many calibration examples, in what batch
+/// size, which data stream, and which device-noise seed.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibConfig {
+    /// Calibration examples per model.
+    pub samples: usize,
+    /// Executor batch size (the tail batch truncates).
+    pub batch: usize,
+    /// Calibration data stream seed.
+    pub data_seed: u64,
+    /// Device (ADC) noise seed handed to the executor.
+    pub noise_seed: u64,
+    /// Backend worker threads (0 = process default).
+    pub threads: usize,
+}
+
+impl Default for CalibConfig {
+    fn default() -> CalibConfig {
+        CalibConfig {
+            samples: 64,
+            batch: 32,
+            data_seed: EVAL_DATA_SEED,
+            noise_seed: 0x5eed,
+            threads: 0,
+        }
+    }
+}
+
+impl CalibConfig {
+    /// CI-sized preset: enough samples to rank plans, small enough for
+    /// a debug-profile smoke leg.
+    pub fn smoke() -> CalibConfig {
+        CalibConfig {
+            samples: 16,
+            batch: 8,
+            ..CalibConfig::default()
+        }
+    }
+}
+
+/// End-to-end divergence of one plan from the FLOAT32 reference.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    pub model: String,
+    /// Examples scored.
+    pub samples: usize,
+    /// RMS of the reference outputs (the error normalizer).
+    pub rms_ref: f64,
+    /// RMS of `plan - reference`.
+    pub rms_err: f64,
+    /// `100 * rms_err / rms_ref` — the headline number.
+    pub rel_err_pct: f64,
+    /// Fraction of examples whose argmax (width >= 2) or sign
+    /// (width 1, the DLRM head) agrees with the reference — the
+    /// task-metric proxy ("would top-1 decisions change?").
+    pub top1_agree: f64,
+}
+
+impl Divergence {
+    /// Does this plan meet an accuracy budget of `budget_pct` relative
+    /// RMS error?
+    pub fn within(&self, budget_pct: f64) -> bool {
+        self.rel_err_pct <= budget_pct
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("samples", json::num(self.samples as f64)),
+            ("rms_ref", json::num(self.rms_ref)),
+            ("rms_err", json::num(self.rms_err)),
+            ("rel_err_pct", json::num(self.rel_err_pct)),
+            ("top1_agree", json::num(self.top1_agree)),
+        ])
+    }
+}
+
+/// A scored plan: the end-to-end divergence plus the per-layer backend
+/// accounting accumulated while scoring it.
+#[derive(Debug, Clone)]
+pub struct PlanEval {
+    pub divergence: Divergence,
+    pub layers: Vec<GraphLayerStats>,
+}
+
+/// Score `exec` against `reference`'s FLOAT32 host forward on the
+/// seeded calibration stream. `reference` and the executor's graph
+/// normally coincide; `dnf-graph` passes the *original* graph as
+/// reference while the executor serves finetuned weights, which is
+/// exactly the question DNF answers (how far is the finetuned analog
+/// model from the original FLOAT32 one).
+pub fn score_executor(
+    reference: &ModelGraph,
+    exec: &mut GraphExecutor,
+    calib: &CalibConfig,
+) -> Result<Divergence> {
+    if calib.samples == 0 || calib.batch == 0 {
+        bail!("calibration wants samples >= 1 and batch >= 1");
+    }
+    let model = reference.model().to_string();
+    let ds = data::dataset_for(&model)?;
+    let in_elems = reference.in_elems();
+    let width = reference.out_elems();
+    let mut rng = Pcg64::seeded(calib.data_seed);
+    let mut sum_ref_sq = 0.0f64;
+    let mut sum_err_sq = 0.0f64;
+    let mut agree = 0usize;
+    let mut done = 0usize;
+    while done < calib.samples {
+        let bn = calib.batch.min(calib.samples - done);
+        let b = ds.batch(&mut rng, bn);
+        let x = b.x.reshape(&[bn, in_elems])?;
+        let want = reference.host_forward(&x)?;
+        let got = exec.forward(x)?;
+        if got.shape() != want.shape() {
+            bail!(
+                "executor output {:?} does not match reference {:?}",
+                got.shape(),
+                want.shape()
+            );
+        }
+        for (&g, &w) in got.data().iter().zip(want.data()) {
+            sum_ref_sq += (w as f64) * (w as f64);
+            let e = (g - w) as f64;
+            sum_err_sq += e * e;
+        }
+        if width >= 2 {
+            agree += argmax_rows(&got)
+                .iter()
+                .zip(argmax_rows(&want).iter())
+                .filter(|(a, b)| a == b)
+                .count();
+        } else {
+            // Width-1 heads (DLRM): the binary decision is the sign.
+            agree += got
+                .data()
+                .iter()
+                .zip(want.data().iter())
+                .filter(|&(&g, &w)| (g > 0.0) == (w > 0.0))
+                .count();
+        }
+        exec.recycle_outputs(vec![got]);
+        done += bn;
+    }
+    let n = (done * width) as f64;
+    let rms_ref = (sum_ref_sq / n).sqrt();
+    let rms_err = (sum_err_sq / n).sqrt();
+    if rms_ref <= 0.0 {
+        bail!("degenerate reference (all-zero outputs) for {model:?}");
+    }
+    Ok(Divergence {
+        model,
+        samples: done,
+        rms_ref,
+        rms_err,
+        rel_err_pct: 100.0 * rms_err / rms_ref,
+        top1_agree: agree as f64 / done as f64,
+    })
+}
+
+/// Build `model`'s seeded graph, stage it under `plan`, and score it.
+/// The search loop's inner evaluation.
+pub fn score_plan(model: &str, plan: &GraphPlan, calib: &CalibConfig) -> Result<PlanEval> {
+    let graph = build(model, GRAPH_SEED)?;
+    let mut exec = GraphExecutor::new(graph.clone(), plan, calib.noise_seed, calib.threads)?;
+    let divergence = score_executor(&graph, &mut exec, calib)?;
+    Ok(PlanEval {
+        divergence,
+        layers: exec.layer_stats(),
+    })
+}
+
+/// Capture the FLOAT32 input activation of every `Linear` layer on one
+/// probe batch (a stream decorrelated from the scoring batches). The
+/// search probes candidates per layer against these; `dnf-graph`
+/// calibrates its affine noise model on them.
+pub fn capture_linear_inputs(
+    graph: &ModelGraph,
+    calib: &CalibConfig,
+) -> Result<Vec<Tensor>> {
+    let ds = data::dataset_for(graph.model())?;
+    let mut rng = Pcg64::new(calib.data_seed, CALIB_STREAM);
+    let bn = calib.batch.max(1);
+    let b = ds.batch(&mut rng, bn);
+    let x = b.x.reshape(&[bn, graph.in_elems()])?;
+    let ws: Vec<&Tensor> = (0..graph.linear_count())
+        .map(|i| graph.linear_weight(i).expect("index < linear_count"))
+        .collect();
+    let mut inputs: Vec<Tensor> = Vec::with_capacity(ws.len());
+    let mut scratch = FlowScratch::new();
+    graph.forward_with(x, &mut scratch, |i, input, out| {
+        inputs.push(input.clone());
+        input.matmul_nt_into(ws[i], out)
+    })?;
+    Ok(inputs)
+}
+
+/// One layer's response to one candidate: the differential-noise fit
+/// plus the saturation fraction the probe observed — the search's
+/// pruning signal (a candidate already clipping >25% of its
+/// conversions on the probe batch cannot meet a tight budget).
+#[derive(Debug, Clone)]
+pub struct LayerProbe {
+    pub noise: LayerNoise,
+    pub sat_frac: f64,
+}
+
+/// Run `Linear` ordinal `layer_idx` of `model` once through `lp` on the
+/// captured input `x` against weight `w`. The backend draws the *same*
+/// noise stream the executor would serve the layer with (shared
+/// [`layer_seed`]), so probe statistics transfer.
+pub fn probe_layer(
+    model: &str,
+    lp: &LayerPlan,
+    layer_idx: usize,
+    x: &Tensor,
+    w: &Tensor,
+    noise_seed: u64,
+) -> Result<LayerProbe> {
+    let mut lp = *lp;
+    if lp.device.n == 0 {
+        lp.device.n = registry::default_tile(model);
+    }
+    let mut backend = lp
+        .backend
+        .build(lp.device, layer_seed(model, noise_seed, layer_idx));
+    let noise =
+        dnf::calibrate_matmul(backend.as_mut(), &format!("l{layer_idx}"), x, w)?;
+    Ok(LayerProbe {
+        noise,
+        sat_frac: backend.stats().sat_frac(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abfp::DeviceConfig;
+    use crate::backend::BackendKind;
+
+    #[test]
+    fn float32_plan_scores_exactly_zero() {
+        // Float32Backend is bit-identical to the host reference, so the
+        // harness's floor is a true zero — any budget admits it.
+        let eval =
+            score_plan("gru", &GraphPlan::float32(), &CalibConfig::smoke()).unwrap();
+        let d = &eval.divergence;
+        assert_eq!(d.rel_err_pct, 0.0, "{d:?}");
+        assert_eq!(d.rms_err, 0.0);
+        assert_eq!(d.top1_agree, 1.0);
+        assert_eq!(d.samples, 16);
+        assert!(d.within(0.0) && d.within(1.0));
+        assert_eq!(eval.layers.len(), 3);
+    }
+
+    #[test]
+    fn noisy_plan_scores_positive_and_deterministically() {
+        let plan = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 8.0, 0.5),
+        ));
+        let calib = CalibConfig::smoke();
+        let a = score_plan("gru", &plan, &calib).unwrap().divergence;
+        let b = score_plan("gru", &plan, &calib).unwrap().divergence;
+        assert!(a.rel_err_pct > 0.0);
+        assert!(!a.within(0.0));
+        assert_eq!(a.rel_err_pct, b.rel_err_pct, "scoring must replay exactly");
+        assert_eq!(a.top1_agree, b.top1_agree);
+        // JSON carries every field the reports print.
+        let j = a.to_json().to_string();
+        for key in ["rel_err_pct", "top1_agree", "rms_ref", "samples"] {
+            assert!(j.contains(key), "{j}");
+        }
+    }
+
+    #[test]
+    fn captured_inputs_cover_every_linear_layer() {
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let calib = CalibConfig::smoke();
+        let inputs = capture_linear_inputs(&graph, &calib).unwrap();
+        assert_eq!(inputs.len(), graph.linear_count());
+        for (i, x) in inputs.iter().enumerate() {
+            let w = graph.linear_weight(i).unwrap();
+            assert_eq!(x.shape(), &[calib.batch, w.shape()[1]], "layer {i}");
+        }
+    }
+
+    #[test]
+    fn probes_see_saturation_where_the_device_clips() {
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let calib = CalibConfig::smoke();
+        let inputs = capture_linear_inputs(&graph, &calib).unwrap();
+        let w = graph.linear_weight(0).unwrap();
+        // Exact backend: zero noise, zero saturation.
+        let exact = probe_layer("gru", &LayerPlan::float32(), 0, &inputs[0], w, 1)
+            .unwrap();
+        assert_eq!(exact.noise.std, 0.0);
+        assert_eq!(exact.sat_frac, 0.0);
+        // Extreme gain: the ADC clips hard and the probe reports it.
+        let hot = LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 64.0, 0.5),
+        );
+        let hot = probe_layer("gru", &hot, 0, &inputs[0], w, 1).unwrap();
+        assert!(hot.sat_frac > 0.25, "{}", hot.sat_frac);
+        assert!(hot.noise.std > exact.noise.std);
+    }
+}

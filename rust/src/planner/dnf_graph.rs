@@ -1,0 +1,676 @@
+//! Graph-level Differential Noise Finetuning: rescue a plan that fails
+//! its divergence budget by finetuning the weights against the FLOAT32
+//! teacher under a sampled device-noise surrogate.
+//!
+//! The noise model is **affine**, not purely additive: calibrating each
+//! `Linear` layer through its planned backend on a captured FLOAT32
+//! input batch yields a regression gain
+//! `gamma = sum(y_q * y_f) / sum(y_f^2)` and a residual
+//! `eps = y_q - gamma * y_f`, histogrammed through the
+//! [`dnf`](crate::dnf) machinery (100 bins, +0.5 smoothing, alias-table
+//! draws). The distinction matters on saturating plans: at high analog
+//! gain the ADC clips deterministically and the dominant error is a
+//! multiplicative *shrinkage* (`gamma < 1`), which zero-mean additive
+//! noise cannot represent — but the surrogate forward
+//! `z = gamma * (x @ W'^T) + b + xi` both models it and backpropagates
+//! through it (`dW = gamma * g^T x`), so the finetuned weights learn to
+//! compensate. Plans whose calibration comes back at `gamma ~ 1` have
+//! nothing systematic to compensate and DNF is honestly reported as a
+//! no-op for them.
+//!
+//! Training: Adam over every `Linear` weight/bias (and standalone
+//! `Bias` layers) with the [`train`](crate::train) one-cycle cosine
+//! schedule; teacher targets are the *original* graph's host forward;
+//! loss is MSE. Scoring before and after goes through the same
+//! [`divergence`](super::divergence) harness the planner optimizes,
+//! with the original graph as reference — so "fails raw, passes after
+//! DNF" is measured, not assumed.
+
+use anyhow::{bail, Result};
+
+use super::divergence::{capture_linear_inputs, score_executor, CalibConfig};
+use super::Divergence;
+use crate::data;
+use crate::dnf::{self, AliasSampler, NoiseHistogram};
+use crate::graph::executor::layer_seed;
+use crate::graph::{build, builders::GRAPH_SEED, registry};
+use crate::graph::{GraphExecutor, GraphPlan, Layer, ModelGraph};
+use crate::json::{self, Value};
+use crate::report::Table;
+use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+use crate::train::{Schedule, StepLog};
+
+/// Stream ids under `train_seed` (data batches vs noise draws).
+const DATA_STREAM: u64 = 0x7ea1;
+const NOISE_STREAM: u64 = 0xd4f;
+
+/// Finetuning hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DnfGraphConfig {
+    /// Optimizer steps.
+    pub steps: usize,
+    /// Training batch size.
+    pub batch: usize,
+    /// Peak learning rate (one-cycle cosine).
+    pub lr: f32,
+    /// Seed for training batches and noise draws.
+    pub train_seed: u64,
+    /// Scoring configuration (shared with the planner).
+    pub calib: CalibConfig,
+}
+
+impl Default for DnfGraphConfig {
+    fn default() -> DnfGraphConfig {
+        DnfGraphConfig {
+            steps: 80,
+            batch: 32,
+            lr: 2e-3,
+            train_seed: 0xd4f7,
+            calib: CalibConfig::default(),
+        }
+    }
+}
+
+impl DnfGraphConfig {
+    /// CI preset: a handful of steps, small batches.
+    pub fn smoke() -> DnfGraphConfig {
+        DnfGraphConfig {
+            steps: 10,
+            batch: 8,
+            calib: CalibConfig::smoke(),
+            ..DnfGraphConfig::default()
+        }
+    }
+}
+
+/// Per-layer affine calibration stats (reported; the samplers that go
+/// with them stay internal).
+#[derive(Debug, Clone)]
+pub struct LayerAffine {
+    /// `Linear` ordinal.
+    pub layer: usize,
+    /// Regression gain of the planned backend vs FLOAT32 (1.0 = no
+    /// systematic scaling; < 1 = saturation shrinkage).
+    pub gamma: f64,
+    /// Std of the residual differential noise after removing `gamma`.
+    pub resid_std: f64,
+}
+
+/// The result of one `dnf-graph` run.
+#[derive(Debug, Clone)]
+pub struct DnfOutcome {
+    pub model: String,
+    pub plan_summary: String,
+    /// Divergence of the plan on the original weights.
+    pub before: Divergence,
+    /// Divergence of the plan on the finetuned weights, against the
+    /// *original* FLOAT32 reference.
+    pub after: Divergence,
+    pub layers: Vec<LayerAffine>,
+    pub losses: Vec<StepLog>,
+}
+
+impl DnfOutcome {
+    /// `after / before` relative error — < 1 means DNF helped.
+    pub fn improvement_ratio(&self) -> f64 {
+        if self.before.rel_err_pct > 0.0 {
+            self.after.rel_err_pct / self.before.rel_err_pct
+        } else {
+            1.0
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("plan", json::s(&self.plan_summary)),
+            ("before", self.before.to_json()),
+            ("after", self.after.to_json()),
+            ("improvement_ratio", json::num(self.improvement_ratio())),
+            (
+                "layers",
+                json::arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            json::obj(vec![
+                                ("layer", json::num(l.layer as f64)),
+                                ("gamma", json::num(l.gamma)),
+                                ("resid_std", json::num(l.resid_std)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "loss",
+                json::arr(
+                    self.losses
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("step", json::num(s.step as f64)),
+                                ("loss", json::num(s.loss)),
+                                ("lr", json::num(s.lr as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One layer's sampled-noise channel during training.
+struct NoiseChannel {
+    gamma: f32,
+    sampler: Option<(AliasSampler, NoiseHistogram)>,
+}
+
+/// Adam state for one parameter tensor.
+struct ParamOpt {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl ParamOpt {
+    fn new(len: usize) -> ParamOpt {
+        ParamOpt {
+            m: vec![0.0; len],
+            v: vec![0.0; len],
+        }
+    }
+
+    /// One Adam step (`t` is 1-based).
+    fn apply(&mut self, p: &mut [f32], g: &[f32], lr: f32, t: usize) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let bc1 = 1.0 - B1.powi(t as i32);
+        let bc2 = 1.0 - B2.powi(t as i32);
+        for i in 0..p.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * g[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * g[i] * g[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            p[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+}
+
+/// Column sums of a `(bn, w)` gradient — the bias gradient.
+fn colsum(g: &Tensor) -> Tensor {
+    let w = g.shape()[1];
+    let mut out = vec![0.0f32; w];
+    for row in g.data().chunks(w) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    Tensor::from_vec(out)
+}
+
+/// `dw += gamma * g^T @ x`: the weight gradient of
+/// `z = gamma * (x @ W^T)`.
+fn outer_accum(dw: &mut Tensor, g: &Tensor, x: &Tensor, gamma: f32) {
+    let (bn, out) = (g.shape()[0], g.shape()[1]);
+    let inp = x.shape()[1];
+    let dwd = dw.data_mut();
+    for b in 0..bn {
+        let grow = g.row(b);
+        let xrow = x.row(b);
+        for o in 0..out {
+            let go = gamma * grow[o];
+            if go == 0.0 {
+                continue;
+            }
+            let base = o * inp;
+            for (i, &xv) in xrow.iter().enumerate() {
+                dwd[base + i] += go * xv;
+            }
+        }
+    }
+}
+
+/// `g @ W`: the input gradient (pre-`gamma`) of `z = x @ W^T`.
+fn matmul_nn(g: &Tensor, w: &Tensor) -> Tensor {
+    let (bn, out) = (g.shape()[0], g.shape()[1]);
+    let inp = w.shape()[1];
+    let mut data = vec![0.0f32; bn * inp];
+    for b in 0..bn {
+        let grow = g.row(b);
+        let dst = &mut data[b * inp..(b + 1) * inp];
+        for o in 0..out {
+            let go = grow[o];
+            if go == 0.0 {
+                continue;
+            }
+            for (d, &wv) in dst.iter_mut().zip(w.row(o)) {
+                *d += go * wv;
+            }
+        }
+    }
+    Tensor::new(&[bn, inp], data).expect("shape by construction")
+}
+
+/// Broadcast-add a bias over `(bn, w)`.
+fn add_bias(y: &mut Tensor, b: &Tensor) {
+    let w = b.len();
+    for row in y.data_mut().chunks_mut(w) {
+        for (v, &bv) in row.iter_mut().zip(b.data()) {
+            *v += bv;
+        }
+    }
+}
+
+/// d/dv of the tanh-approximation GELU.
+fn gelu_grad(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    const A: f32 = 0.044_715;
+    let u = C * (v + A * v * v * v);
+    let th = u.tanh();
+    0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * C * (1.0 + 3.0 * A * v * v)
+}
+
+/// Add `src` into `dst[idx]` (set when empty).
+fn accum(dst: &mut [Option<Tensor>], idx: usize, src: Tensor) -> Result<()> {
+    match &mut dst[idx] {
+        Some(t) => {
+            *t = t.zip(&src, |a, b| a + b)?;
+        }
+        slot @ None => *slot = Some(src),
+    }
+    Ok(())
+}
+
+/// Calibrate the affine noise model, finetune, and re-score.
+pub fn run(model: &str, plan: &GraphPlan, cfg: &DnfGraphConfig) -> Result<DnfOutcome> {
+    if cfg.steps == 0 || cfg.batch == 0 {
+        bail!("dnf-graph wants steps >= 1 and batch >= 1");
+    }
+    let graph = build(model, GRAPH_SEED)?;
+    let count = graph.linear_count();
+
+    // Score the raw plan first (original weights).
+    let mut exec =
+        GraphExecutor::new(graph.clone(), plan, cfg.calib.noise_seed, cfg.calib.threads)?;
+    let before = score_executor(&graph, &mut exec, &cfg.calib)?;
+    drop(exec);
+
+    // Affine calibration per Linear layer: gamma + residual histogram,
+    // through the same per-layer noise streams the executor serves.
+    let inputs = capture_linear_inputs(&graph, &cfg.calib)?;
+    let tile = registry::default_tile(model);
+    let mut channels: Vec<NoiseChannel> = Vec::with_capacity(count);
+    let mut layer_stats: Vec<LayerAffine> = Vec::with_capacity(count);
+    for li in 0..count {
+        let mut lp = plan.resolve(li, count);
+        if lp.device.n == 0 {
+            lp.device.n = tile;
+        }
+        let w = graph.linear_weight(li).expect("index < linear_count");
+        if lp.backend == crate::backend::BackendKind::Float32 {
+            channels.push(NoiseChannel {
+                gamma: 1.0,
+                sampler: None,
+            });
+            layer_stats.push(LayerAffine {
+                layer: li,
+                gamma: 1.0,
+                resid_std: 0.0,
+            });
+            continue;
+        }
+        let mut backend = lp
+            .backend
+            .build(lp.device, layer_seed(model, cfg.calib.noise_seed, li));
+        let staged = backend.stage_weights(w)?;
+        let y_q = backend.matmul(&inputs[li], &staged)?;
+        let y_f = inputs[li].matmul_nt(w)?;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&q, &f) in y_q.data().iter().zip(y_f.data()) {
+            num += q as f64 * f as f64;
+            den += f as f64 * f as f64;
+        }
+        let gamma = if den > 0.0 { num / den } else { 1.0 };
+        let resid = y_q.zip(&y_f, |q, f| q - gamma as f32 * f)?;
+        let ln = dnf::layer_noise(format!("l{li}"), &resid);
+        let sampler = AliasSampler::new(&ln.hist.probs())?;
+        layer_stats.push(LayerAffine {
+            layer: li,
+            gamma,
+            resid_std: ln.std,
+        });
+        channels.push(NoiseChannel {
+            gamma: gamma as f32,
+            sampler: Some((sampler, ln.hist)),
+        });
+    }
+
+    // Mutable copy of the layers; the original graph stays the teacher.
+    let mut layers: Vec<Layer> = graph.layers().to_vec();
+    let nlayers = layers.len();
+    let mut wopt: Vec<Option<ParamOpt>> = (0..nlayers).map(|_| None).collect();
+    let mut bopt: Vec<Option<ParamOpt>> = (0..nlayers).map(|_| None).collect();
+    for (idx, layer) in layers.iter().enumerate() {
+        match layer {
+            Layer::Linear { w, b } => {
+                wopt[idx] = Some(ParamOpt::new(w.len()));
+                if let Some(b) = b {
+                    bopt[idx] = Some(ParamOpt::new(b.len()));
+                }
+            }
+            Layer::Bias(b) => bopt[idx] = Some(ParamOpt::new(b.len())),
+            _ => {}
+        }
+    }
+
+    let ds = data::dataset_for(model)?;
+    let in_elems = graph.in_elems();
+    let mut data_rng = Pcg64::new(cfg.train_seed, DATA_STREAM);
+    let mut noise_rng = Pcg64::new(cfg.train_seed, NOISE_STREAM);
+    let sched = Schedule::one_cycle(cfg.lr);
+    let mut losses = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        let bn = cfg.batch;
+        let batch = ds.batch(&mut data_rng, bn);
+        let x = batch.x.reshape(&[bn, in_elems])?;
+        let teacher = graph.host_forward(&x)?;
+
+        // Surrogate forward with full activation caching:
+        // acts[i] = activation *entering* layer i; acts[i+1] leaving it.
+        let mut acts: Vec<Tensor> = Vec::with_capacity(nlayers + 1);
+        acts.push(x);
+        let mut li = 0usize;
+        for layer in &layers {
+            let cur = acts.last().expect("seeded with x");
+            let next = match layer {
+                Layer::Flatten => cur.clone(),
+                Layer::Linear { w, b } => {
+                    let ch = &channels[li];
+                    li += 1;
+                    let mut y = cur.matmul_nt(w)?;
+                    if ch.gamma != 1.0 {
+                        let g = ch.gamma;
+                        y.map_inplace(|v| g * v);
+                    }
+                    if let Some(b) = b {
+                        add_bias(&mut y, b);
+                    }
+                    if let Some((sampler, hist)) = &ch.sampler {
+                        for v in y.data_mut() {
+                            let bin = sampler.sample(&mut noise_rng);
+                            *v += hist.sample_in_bin(bin, &mut noise_rng);
+                        }
+                    }
+                    y
+                }
+                Layer::Bias(b) => {
+                    let mut y = cur.clone();
+                    add_bias(&mut y, b);
+                    y
+                }
+                Layer::Relu => cur.map(|v| v.max(0.0)),
+                Layer::Gelu => cur.map(|v| {
+                    const C: f32 = 0.797_884_6;
+                    0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh())
+                }),
+                Layer::Tanh => cur.map(|v| v.tanh()),
+                Layer::Sigmoid => cur.map(|v| 1.0 / (1.0 + (-v).exp())),
+                Layer::Residual { from } => cur.zip(&acts[from + 1], |a, b| a + b)?,
+            };
+            acts.push(next);
+        }
+
+        // MSE against the FLOAT32 teacher.
+        let y = &acts[nlayers];
+        let n = y.len() as f32;
+        let mut loss = 0.0f64;
+        for (&a, &t) in y.data().iter().zip(teacher.data()) {
+            let e = (a - t) as f64;
+            loss += e * e;
+        }
+        loss /= n as f64;
+        let dl = y.zip(&teacher, |a, t| 2.0 * (a - t) / n)?;
+        let lr = sched.lr(step, cfg.steps);
+        losses.push(StepLog { step, loss, lr });
+
+        // Backward.
+        let mut grad: Vec<Option<Tensor>> = (0..=nlayers).map(|_| None).collect();
+        grad[nlayers] = Some(dl);
+        let mut li_rev = count;
+        for idx in (0..nlayers).rev() {
+            let Some(g) = grad[idx + 1].take() else {
+                continue;
+            };
+            match &mut layers[idx] {
+                Layer::Flatten => accum(&mut grad, idx, g)?,
+                Layer::Linear { w, b } => {
+                    li_rev -= 1;
+                    let gamma = channels[li_rev].gamma;
+                    let x_in = &acts[idx];
+                    let mut dw = Tensor::zeros(w.shape());
+                    outer_accum(&mut dw, &g, x_in, gamma);
+                    if let Some(b) = b {
+                        let db = colsum(&g);
+                        bopt[idx]
+                            .as_mut()
+                            .expect("bias opt allocated")
+                            .apply(b.data_mut(), db.data(), lr, step + 1);
+                    }
+                    let mut g_in = matmul_nn(&g, w);
+                    if gamma != 1.0 {
+                        g_in.map_inplace(|v| gamma * v);
+                    }
+                    wopt[idx]
+                        .as_mut()
+                        .expect("weight opt allocated")
+                        .apply(w.data_mut(), dw.data(), lr, step + 1);
+                    accum(&mut grad, idx, g_in)?;
+                }
+                Layer::Bias(b) => {
+                    let db = colsum(&g);
+                    bopt[idx]
+                        .as_mut()
+                        .expect("bias opt allocated")
+                        .apply(b.data_mut(), db.data(), lr, step + 1);
+                    accum(&mut grad, idx, g)?;
+                }
+                Layer::Relu => {
+                    let mask = &acts[idx];
+                    let g_in = g.zip(mask, |gv, xv| if xv > 0.0 { gv } else { 0.0 })?;
+                    accum(&mut grad, idx, g_in)?;
+                }
+                Layer::Gelu => {
+                    let g_in = g.zip(&acts[idx], |gv, xv| gv * gelu_grad(xv))?;
+                    accum(&mut grad, idx, g_in)?;
+                }
+                Layer::Tanh => {
+                    let g_in = g.zip(&acts[idx + 1], |gv, ov| gv * (1.0 - ov * ov))?;
+                    accum(&mut grad, idx, g_in)?;
+                }
+                Layer::Sigmoid => {
+                    let g_in = g.zip(&acts[idx + 1], |gv, ov| gv * ov * (1.0 - ov))?;
+                    accum(&mut grad, idx, g_in)?;
+                }
+                Layer::Residual { from } => {
+                    let from = *from;
+                    accum(&mut grad, from + 1, g.clone())?;
+                    accum(&mut grad, idx, g)?;
+                }
+            }
+        }
+    }
+
+    // Rebuild (revalidates shapes) and re-score against the ORIGINAL
+    // FLOAT32 reference.
+    let finetuned = ModelGraph::new(graph.model(), graph.input_shape(), layers)?;
+    let mut exec =
+        GraphExecutor::new(finetuned, plan, cfg.calib.noise_seed, cfg.calib.threads)?;
+    let after = score_executor(&graph, &mut exec, &cfg.calib)?;
+
+    Ok(DnfOutcome {
+        model: model.to_string(),
+        plan_summary: plan.summary(),
+        before,
+        after,
+        layers: layer_stats,
+        losses,
+    })
+}
+
+/// Markdown report for a set of runs; `budget_pct` adds the
+/// fails-raw / passes-after verdict column.
+pub fn render(outcomes: &[DnfOutcome], budget_pct: Option<f64>) -> String {
+    let mut t = Table::new(
+        "Graph-level DNF — divergence before/after finetuning",
+        &[
+            "model", "plan", "before %", "after %", "ratio", "gammas", "verdict",
+        ],
+    );
+    for o in outcomes {
+        let gammas = o
+            .layers
+            .iter()
+            .map(|l| format!("{:.3}", l.gamma))
+            .collect::<Vec<_>>()
+            .join("/");
+        let verdict = match budget_pct {
+            Some(b) => {
+                let raw = o.before.within(b);
+                let after = o.after.within(b);
+                match (raw, after) {
+                    (true, _) => "within budget raw".to_string(),
+                    (false, true) => format!("fails {b}% raw, PASSES after DNF"),
+                    (false, false) if o.improvement_ratio() < 1.0 => {
+                        format!("fails {b}% raw, improved but still over")
+                    }
+                    (false, false) => format!("fails {b}% raw, DNF did not help"),
+                }
+            }
+            None => {
+                if o.improvement_ratio() < 1.0 {
+                    "improved".to_string()
+                } else {
+                    "no improvement".to_string()
+                }
+            }
+        };
+        t.row(vec![
+            o.model.clone(),
+            o.plan_summary.clone(),
+            format!("{:.3}", o.before.rel_err_pct),
+            format!("{:.3}", o.after.rel_err_pct),
+            format!("{:.3}", o.improvement_ratio()),
+            gammas,
+            verdict,
+        ]);
+    }
+    t.to_markdown()
+}
+
+/// Machine-readable report (`dnf_graph.json`).
+pub fn outcomes_json(outcomes: &[DnfOutcome], budget_pct: Option<f64>) -> Value {
+    let mut fields = vec![(
+        "results",
+        json::arr(outcomes.iter().map(|o| o.to_json()).collect()),
+    )];
+    if let Some(b) = budget_pct {
+        fields.insert(0, ("budget_pct", json::num(b)));
+    }
+    json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abfp::DeviceConfig;
+    use crate::backend::BackendKind;
+    use crate::graph::LayerPlan;
+
+    #[test]
+    fn float32_plan_is_a_fixed_point() {
+        // Exact plan: gamma 1 everywhere, no noise channels, teacher ==
+        // student at step 0 — divergence stays exactly zero and the
+        // gradient flow leaves the weights untouched (loss 0).
+        let cfg = DnfGraphConfig {
+            steps: 3,
+            batch: 4,
+            ..DnfGraphConfig::smoke()
+        };
+        let out = run("gru", &GraphPlan::float32(), &cfg).unwrap();
+        assert_eq!(out.before.rel_err_pct, 0.0);
+        assert_eq!(out.after.rel_err_pct, 0.0);
+        for l in &out.layers {
+            assert_eq!(l.gamma, 1.0);
+            assert_eq!(l.resid_std, 0.0);
+        }
+        for s in &out.losses {
+            assert_eq!(s.loss, 0.0, "step {}", s.step);
+        }
+    }
+
+    #[test]
+    fn saturating_plan_calibrates_gamma_below_one() {
+        // Gain 16 on gru clips hard; the affine fit must see the
+        // shrinkage (gamma well below 1 on the early layers) — this is
+        // the signal the additive-only model has no way to express.
+        let plan = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 16.0, 0.5),
+        ));
+        let cfg = DnfGraphConfig {
+            steps: 1,
+            ..DnfGraphConfig::smoke()
+        };
+        let out = run("gru", &plan, &cfg).unwrap();
+        assert!(out.before.rel_err_pct > 5.0, "{:?}", out.before);
+        assert!(
+            out.layers[0].gamma < 0.95,
+            "expected shrinkage, got {:?}",
+            out.layers
+        );
+        assert!(out.layers.iter().all(|l| l.gamma > 0.0));
+        assert!(out.layers.iter().any(|l| l.resid_std > 0.0));
+    }
+
+    #[test]
+    fn gradient_helpers_match_hand_values() {
+        // g (2,2) @ W (2,3): g row 0 = [1, 0] picks W row 0.
+        let g = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.5, 1.0]).unwrap();
+        let w = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let gi = matmul_nn(&g, &w);
+        assert_eq!(gi.shape(), &[2, 3]);
+        assert_eq!(&gi.data()[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&gi.data()[3..6], &[0.5 + 4.0, 1.0 + 5.0, 1.5 + 6.0]);
+        // dw = gamma * g^T @ x.
+        let x = Tensor::new(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0]).unwrap();
+        let mut dw = Tensor::zeros(&[2, 3]);
+        outer_accum(&mut dw, &g, &x, 2.0);
+        // out 0: gamma*(g[0,0]*x[0] + g[1,0]*x[1]) = 2*([1,0,0]+0.5*[0,1,0])
+        assert_eq!(&dw.data()[0..3], &[2.0, 1.0, 0.0]);
+        // out 1: 2*(0*x[0] + 1*x[1])
+        assert_eq!(&dw.data()[3..6], &[0.0, 2.0, 0.0]);
+        let cs = colsum(&g);
+        assert_eq!(cs.data(), &[1.5, 1.0]);
+        // gelu_grad sanity: ~0.5 at 0, ~1 for large input, small for
+        // large negative.
+        assert!((gelu_grad(0.0) - 0.5).abs() < 1e-6);
+        assert!((gelu_grad(6.0) - 1.0).abs() < 1e-3);
+        assert!(gelu_grad(-6.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn degenerate_config_is_an_error() {
+        let plan = GraphPlan::float32();
+        let mut cfg = DnfGraphConfig::smoke();
+        cfg.steps = 0;
+        assert!(run("gru", &plan, &cfg).is_err());
+        cfg = DnfGraphConfig::smoke();
+        cfg.batch = 0;
+        assert!(run("gru", &plan, &cfg).is_err());
+    }
+}

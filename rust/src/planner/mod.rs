@@ -1,0 +1,44 @@
+//! Adaptive precision planning: search the per-layer numeric design
+//! space for the cheapest [`GraphPlan`](crate::graph::GraphPlan) that
+//! stays within an accuracy budget, and rescue over-budget plans with
+//! graph-level Differential Noise Finetuning.
+//!
+//! The paper hand-picks one operating point per model (tile 128, gain
+//! 4–16, 8-bit converters) and shows DNF recovers the residual loss.
+//! This subsystem closes the loop programmatically:
+//!
+//! * [`divergence`] — the shared scoring harness: any plan's executor
+//!   against the FLOAT32 host reference on seeded calibration batches
+//!   (relative RMS error end to end, a top-1 proxy agreement rate, and
+//!   per-layer backend accounting). `eval-graph`, `plan-search` and
+//!   `dnf-graph` all report *these* numbers — one metric
+//!   implementation, no drift between what the planner optimizes and
+//!   what the evaluator prints.
+//! * [`cost`] — prices a plan through the [`energy`](crate::energy)
+//!   model: MAC energy by operand bits, DAC energy per input element,
+//!   ADC energy per output x tile conversion, summed per example.
+//! * [`search`] — greedy beam descent from a uniform FLOAT32 plan over
+//!   a candidate roster spanning {backend, bits, gain, tile}, with
+//!   per-layer saturation probes pruning candidates the sweep already
+//!   shows clipping. Emits the "cheapest plan within X% of FLOAT32"
+//!   trajectory (`plan-search`).
+//! * [`dnf_graph`] — graph-level DNF: calibrate a per-layer *affine*
+//!   differential noise model (regression gain + residual histogram,
+//!   sampled through [`dnf`](crate::dnf)'s alias tables), finetune the
+//!   weights against the FLOAT32 teacher under the
+//!   [`train`](crate::train) one-cycle schedule, and re-score through
+//!   the same harness (`dnf-graph`): a plan that fails the budget raw
+//!   can pass after DNF.
+
+pub mod cost;
+pub mod divergence;
+pub mod dnf_graph;
+pub mod search;
+
+pub use cost::{plan_cost, LayerCost, PlanCost};
+pub use divergence::{
+    capture_linear_inputs, probe_layer, score_executor, score_plan, CalibConfig,
+    Divergence, LayerProbe, PlanEval,
+};
+pub use dnf_graph::{DnfGraphConfig, DnfOutcome};
+pub use search::{plan_from_assignments, SearchConfig, SearchResult};

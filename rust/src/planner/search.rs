@@ -1,0 +1,472 @@
+//! Greedy beam descent over per-layer numeric assignments: start from
+//! the uniform FLOAT32 plan (divergence exactly zero — always a valid
+//! incumbent), repeatedly try strictly-cheaper candidates per layer,
+//! keep the moves that stay within the divergence budget, and beam the
+//! cheapest survivors into the next pass. Saturation probes prune
+//! candidates that already clip hard on the probe batch before any
+//! full scoring happens.
+//!
+//! Termination is structural: every move strictly decreases one
+//! layer's energy, the candidate roster is finite, and visited
+//! assignments are memoized — the loop runs out of cheaper moves.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{bail, Result};
+
+use super::cost::{plan_cost, PlanCost};
+use super::divergence::{
+    capture_linear_inputs, probe_layer, score_plan, CalibConfig, Divergence,
+};
+use crate::abfp::DeviceConfig;
+use crate::backend::BackendKind;
+use crate::energy::matmul_energy;
+use crate::graph::{build, builders::GRAPH_SEED, registry, GraphPlan, LayerPlan};
+use crate::json::{self, Value};
+use crate::report::{fmt_si, Table};
+
+/// Search configuration. `smoke` shrinks both the candidate roster and
+/// the calibration batch for CI.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    /// Accuracy budget: max relative RMS error (percent) vs FLOAT32.
+    pub budget_pct: f64,
+    /// Beam width: assignments carried into the next pass.
+    pub beam: usize,
+    /// Small roster + small calibration (CI preset).
+    pub smoke: bool,
+    /// Hard cap on descent passes (the memo terminates long before).
+    pub max_passes: usize,
+    /// Prune a (layer, candidate) whose probe saturates more than this
+    /// fraction of its conversions.
+    pub sat_prune: f64,
+    pub calib: CalibConfig,
+}
+
+impl SearchConfig {
+    pub fn new(budget_pct: f64) -> SearchConfig {
+        SearchConfig {
+            budget_pct,
+            beam: 3,
+            smoke: false,
+            max_passes: 32,
+            sat_prune: 0.25,
+            calib: CalibConfig::default(),
+        }
+    }
+
+    pub fn smoke(budget_pct: f64) -> SearchConfig {
+        SearchConfig {
+            beam: 2,
+            smoke: true,
+            calib: CalibConfig::smoke(),
+            ..SearchConfig::new(budget_pct)
+        }
+    }
+}
+
+/// The candidate roster: per-layer operating points spanning
+/// {backend, bits, gain, tile}. Index 0 is always FLOAT32 (the start
+/// assignment). Tile 0 = the model's registry default; the full roster
+/// adds explicit paper-tile (128) variants so the search can trade
+/// tile width where it pays.
+pub fn candidates(smoke: bool) -> Vec<LayerPlan> {
+    let dev = |n: usize, b: u32, g: f32| DeviceConfig::new(n, (b, b, b), g, 0.5);
+    let mut v = vec![
+        LayerPlan::float32(),
+        LayerPlan::new(BackendKind::Abfp, dev(0, 12, 2.0)),
+        LayerPlan::new(BackendKind::Abfp, dev(0, 8, 2.0)),
+        LayerPlan::new(BackendKind::Abfp, dev(0, 8, 8.0)),
+        LayerPlan::new(BackendKind::Bfp, dev(0, 8, 1.0)),
+        LayerPlan::new(BackendKind::Fixed, dev(0, 8, 1.0)),
+    ];
+    if !smoke {
+        v.extend([
+            LayerPlan::new(BackendKind::Abfp, dev(128, 8, 2.0)),
+            LayerPlan::new(BackendKind::Abfp, dev(0, 6, 2.0)),
+            LayerPlan::new(BackendKind::Abfp, dev(0, 6, 8.0)),
+            LayerPlan::new(BackendKind::Bfp, dev(128, 8, 1.0)),
+            LayerPlan::new(BackendKind::Bfp, dev(0, 6, 1.0)),
+            LayerPlan::new(BackendKind::Fixed, dev(0, 6, 1.0)),
+        ]);
+    }
+    v
+}
+
+/// Fold a per-layer candidate assignment into the most compact
+/// [`GraphPlan`] that resolves back to it: the most frequent
+/// assignment becomes `default`, a differing edge layer becomes
+/// `first`/`last`, differing interior layers get per-index entries.
+/// Round-trip fidelity under [`GraphPlan::resolve`]'s precedence
+/// (per-index > first > last > default) is pinned in
+/// `tests/planner.rs`.
+pub fn plan_from_assignments(cands: &[LayerPlan], assign: &[usize]) -> GraphPlan {
+    assert!(!assign.is_empty(), "no layers to plan");
+    let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+    for &a in assign {
+        *counts.entry(a).or_insert(0) += 1;
+    }
+    // Most frequent candidate; ties break to the lowest index (BTreeMap
+    // iterates ascending, strict > keeps the first maximum).
+    let mut def_idx = assign[0];
+    let mut def_n = 0usize;
+    for (&idx, &n) in &counts {
+        if n > def_n {
+            def_idx = idx;
+            def_n = n;
+        }
+    }
+    let n = assign.len();
+    let mut plan = GraphPlan {
+        default: cands[def_idx],
+        first: None,
+        last: None,
+        layers: BTreeMap::new(),
+    };
+    for (i, &a) in assign.iter().enumerate() {
+        if a == def_idx {
+            continue;
+        }
+        let lp = cands[a];
+        if i == 0 {
+            plan.first = Some(lp);
+        } else if i == n - 1 {
+            plan.last = Some(lp);
+        } else {
+            plan.layers.insert(i, lp);
+        }
+    }
+    plan
+}
+
+/// A plan with both of its scores attached.
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub plan: GraphPlan,
+    pub cost: PlanCost,
+    pub divergence: Divergence,
+}
+
+/// One scored move of the descent (the trajectory report row).
+#[derive(Debug, Clone)]
+pub struct SearchStep {
+    pub pass: usize,
+    pub layer: usize,
+    /// Compact summary of the candidate tried at `layer`.
+    pub candidate: String,
+    /// Total plan energy after the move.
+    pub cost: f64,
+    pub rel_err_pct: f64,
+    /// Within budget (the move survives into the frontier pool).
+    pub accepted: bool,
+}
+
+/// The full search record for one model.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub model: String,
+    pub budget_pct: f64,
+    pub start: PlanOutcome,
+    pub best: PlanOutcome,
+    pub trajectory: Vec<SearchStep>,
+    /// (layer, candidate) pairs the saturation probes ruled out.
+    pub pruned: usize,
+    /// Full plan scorings performed (memoized moves excluded).
+    pub evals: usize,
+}
+
+impl SearchResult {
+    /// Energy saving factor of `best` over `start`.
+    pub fn saving(&self) -> f64 {
+        if self.best.cost.total > 0.0 {
+            self.start.cost.total / self.best.cost.total
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Search `model`'s per-layer assignment space for the cheapest plan
+/// within `cfg.budget_pct` of the FLOAT32 reference.
+pub fn run(model: &str, cfg: &SearchConfig) -> Result<SearchResult> {
+    if cfg.budget_pct.is_nan() || cfg.budget_pct < 0.0 {
+        bail!("budget must be a non-negative percent, got {}", cfg.budget_pct);
+    }
+    let graph = build(model, GRAPH_SEED)?;
+    let count = graph.linear_count();
+    let cands = candidates(cfg.smoke);
+
+    // Saturation probes: one cheap single-layer matmul per (layer,
+    // candidate) on a captured FLOAT32 input batch.
+    let inputs = capture_linear_inputs(&graph, &cfg.calib)?;
+    let mut allowed = vec![vec![true; cands.len()]; count];
+    let mut pruned = 0usize;
+    for l in 0..count {
+        let w = graph.linear_weight(l).expect("index < linear_count");
+        for (c, lp) in cands.iter().enumerate() {
+            if lp.backend == BackendKind::Float32 {
+                continue; // exact: nothing to probe, never pruned
+            }
+            let probe = probe_layer(model, lp, l, &inputs[l], w, cfg.calib.noise_seed)?;
+            if probe.sat_frac > cfg.sat_prune {
+                allowed[l][c] = false;
+                pruned += 1;
+            }
+        }
+    }
+
+    // Per-(layer, candidate) energy — the descent's move ordering.
+    let tile = registry::default_tile(model);
+    let mut lc = vec![vec![0.0f64; cands.len()]; count];
+    for l in 0..count {
+        let w = graph.linear_weight(l).expect("index < linear_count");
+        for (c, lp) in cands.iter().enumerate() {
+            let mut lp = *lp;
+            if lp.device.n == 0 {
+                lp.device.n = tile;
+            }
+            lc[l][c] =
+                matmul_energy(lp.backend, &lp.device, w.shape()[0], w.shape()[1]).total();
+        }
+    }
+    let asg_cost =
+        |a: &[usize]| -> f64 { a.iter().enumerate().map(|(l, &c)| lc[l][c]).sum() };
+
+    let start_assign = vec![0usize; count];
+    let start_plan = plan_from_assignments(&cands, &start_assign);
+    let start_div = score_plan(model, &start_plan, &cfg.calib)?.divergence;
+    let mut evals = 1usize;
+    let start = PlanOutcome {
+        cost: plan_cost(&graph, &start_plan),
+        plan: start_plan,
+        divergence: start_div,
+    };
+
+    let mut best: (Vec<usize>, f64, Divergence) = (
+        start_assign.clone(),
+        start.cost.total,
+        start.divergence.clone(),
+    );
+    let mut frontier = vec![start_assign.clone()];
+    let mut seen: HashMap<Vec<usize>, bool> = HashMap::new();
+    seen.insert(start_assign, true);
+    let mut trajectory = Vec::new();
+
+    for pass in 0..cfg.max_passes {
+        let mut accepted: Vec<(Vec<usize>, f64, Divergence)> = Vec::new();
+        for a in &frontier {
+            for l in 0..count {
+                for c in 0..cands.len() {
+                    // Strictly-cheaper unpruned moves only.
+                    if c == a[l] || !allowed[l][c] || lc[l][c] >= lc[l][a[l]] {
+                        continue;
+                    }
+                    let mut next = a.clone();
+                    next[l] = c;
+                    if seen.contains_key(&next) {
+                        continue;
+                    }
+                    let plan = plan_from_assignments(&cands, &next);
+                    let div = score_plan(model, &plan, &cfg.calib)?.divergence;
+                    evals += 1;
+                    let total = asg_cost(&next);
+                    let within = div.within(cfg.budget_pct);
+                    trajectory.push(SearchStep {
+                        pass,
+                        layer: l,
+                        candidate: cands[c].summary(),
+                        cost: total,
+                        rel_err_pct: div.rel_err_pct,
+                        accepted: within,
+                    });
+                    seen.insert(next.clone(), within);
+                    if within {
+                        accepted.push((next, total, div));
+                    }
+                }
+            }
+        }
+        if accepted.is_empty() {
+            break;
+        }
+        accepted.sort_by(|x, y| x.1.total_cmp(&y.1));
+        if accepted[0].1 < best.1 {
+            best = accepted[0].clone();
+        }
+        frontier = accepted
+            .into_iter()
+            .take(cfg.beam.max(1))
+            .map(|t| t.0)
+            .collect();
+    }
+
+    let best_plan = plan_from_assignments(&cands, &best.0);
+    let best = PlanOutcome {
+        cost: plan_cost(&graph, &best_plan),
+        plan: best_plan,
+        divergence: best.2,
+    };
+    Ok(SearchResult {
+        model: model.to_string(),
+        budget_pct: cfg.budget_pct,
+        start,
+        best,
+        trajectory,
+        pruned,
+        evals,
+    })
+}
+
+/// Markdown report: headline table plus per-model descent trajectories.
+pub fn render(results: &[SearchResult]) -> String {
+    let mut t = Table::new(
+        "Plan search — cheapest per-layer plan within the divergence budget",
+        &[
+            "model", "budget %", "start energy", "best energy", "saving",
+            "rel_err %", "top1 agree", "plan", "evals", "pruned",
+        ],
+    );
+    for r in results {
+        t.row(vec![
+            r.model.clone(),
+            format!("{:.2}", r.budget_pct),
+            fmt_si(r.start.cost.total),
+            fmt_si(r.best.cost.total),
+            format!("{:.1}x", r.saving()),
+            format!("{:.3}", r.best.divergence.rel_err_pct),
+            format!("{:.3}", r.best.divergence.top1_agree),
+            r.best.plan.summary(),
+            r.evals.to_string(),
+            r.pruned.to_string(),
+        ]);
+    }
+    let mut out = t.to_markdown();
+    for r in results {
+        let mut tt = Table::new(
+            &format!("{} trajectory", r.model),
+            &["pass", "layer", "candidate", "energy", "rel_err %", "accepted"],
+        );
+        for s in &r.trajectory {
+            tt.row(vec![
+                s.pass.to_string(),
+                s.layer.to_string(),
+                s.candidate.clone(),
+                fmt_si(s.cost),
+                format!("{:.3}", s.rel_err_pct),
+                if s.accepted { "yes".into() } else { "no".into() },
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&tt.to_markdown());
+    }
+    out
+}
+
+/// Machine-readable report (the `plan_search.json` payload).
+pub fn results_json(results: &[SearchResult]) -> Value {
+    let outcome = |o: &PlanOutcome| {
+        json::obj(vec![
+            ("plan", o.plan.to_json()),
+            ("summary", json::s(&o.plan.summary())),
+            ("cost", o.cost.to_json()),
+            ("divergence", o.divergence.to_json()),
+        ])
+    };
+    json::obj(vec![(
+        "results",
+        json::arr(
+            results
+                .iter()
+                .map(|r| {
+                    json::obj(vec![
+                        ("model", json::s(&r.model)),
+                        ("budget_pct", json::num(r.budget_pct)),
+                        ("start", outcome(&r.start)),
+                        ("best", outcome(&r.best)),
+                        ("saving", json::num(r.saving())),
+                        ("evals", json::num(r.evals as f64)),
+                        ("pruned", json::num(r.pruned as f64)),
+                        (
+                            "trajectory",
+                            json::arr(
+                                r.trajectory
+                                    .iter()
+                                    .map(|s| {
+                                        json::obj(vec![
+                                            ("pass", json::num(s.pass as f64)),
+                                            ("layer", json::num(s.layer as f64)),
+                                            ("candidate", json::s(&s.candidate)),
+                                            ("cost", json::num(s.cost)),
+                                            (
+                                                "rel_err_pct",
+                                                json::num(s.rel_err_pct),
+                                            ),
+                                            (
+                                                "accepted",
+                                                Value::Bool(s.accepted),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_shape() {
+        let smoke = candidates(true);
+        let full = candidates(false);
+        assert_eq!(smoke[0].backend, BackendKind::Float32);
+        assert!(smoke.len() >= 6);
+        assert!(full.len() > smoke.len());
+        // The full roster really spans tile choices: at least one
+        // explicit paper-tile candidate next to the auto-tile ones.
+        assert!(full.iter().any(|c| c.device.n == 128));
+        assert!(full.iter().any(|c| c.device.n == 0));
+        // ...and bit widths below 8.
+        assert!(full.iter().any(|c| c.device.bits_w == 6));
+    }
+
+    #[test]
+    fn assignment_folding_prefers_the_majority() {
+        let cands = candidates(true);
+        // Majority candidate 2, layer 0 differs.
+        let plan = plan_from_assignments(&cands, &[1, 2, 2, 2]);
+        assert_eq!(plan.default, cands[2]);
+        assert_eq!(plan.first, Some(cands[1]));
+        assert!(plan.last.is_none() && plan.layers.is_empty());
+        // Interior + last differences.
+        let plan = plan_from_assignments(&cands, &[2, 3, 2, 4]);
+        assert_eq!(plan.default, cands[2]);
+        assert_eq!(plan.layers.get(&1), Some(&cands[3]));
+        assert_eq!(plan.last, Some(cands[4]));
+        // Uniform assignment folds to a bare default.
+        let plan = plan_from_assignments(&cands, &[0, 0, 0]);
+        assert_eq!(plan.default, cands[0]);
+        assert!(plan.first.is_none() && plan.last.is_none() && plan.layers.is_empty());
+    }
+
+    #[test]
+    fn single_layer_assignment_folds() {
+        let cands = candidates(true);
+        let plan = plan_from_assignments(&cands, &[3]);
+        // One layer: it is the majority, so it is the default.
+        assert_eq!(plan.default, cands[3]);
+        assert_eq!(plan.resolve(0, 1), cands[3]);
+    }
+
+    #[test]
+    fn negative_budget_is_an_error() {
+        assert!(run("gru", &SearchConfig::smoke(-1.0)).is_err());
+        assert!(run("gru", &SearchConfig::smoke(f64::NAN)).is_err());
+    }
+}

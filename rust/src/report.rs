@@ -134,6 +134,21 @@ pub fn write_report(dir: &str, name: &str, content: &str) -> Result<()> {
     Ok(())
 }
 
+/// Format a magnitude with an SI suffix (`12.98M`, `283.4k`) for
+/// energy/MAC columns where raw digits stop being readable.
+pub fn fmt_si(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,5 +191,14 @@ mod tests {
     fn histogram_runs() {
         let s = ascii_histogram("h", &[0.0, 0.1, 0.1, 0.9], 4, 20);
         assert!(s.lines().count() == 5);
+    }
+
+    #[test]
+    fn si_suffixes() {
+        assert_eq!(fmt_si(12_980_000.0), "12.98M");
+        assert_eq!(fmt_si(283_400.0), "283.4k");
+        assert_eq!(fmt_si(3.25e9), "3.25G");
+        assert_eq!(fmt_si(42.0), "42.0");
+        assert_eq!(fmt_si(-1_500.0), "-1.5k");
     }
 }

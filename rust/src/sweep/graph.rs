@@ -5,19 +5,23 @@
 //! the pure-Rust executor and reports, **per `Linear` layer**, the
 //! backend it ran on and that backend's
 //! [`BackendStats`](crate::backend::BackendStats) — matmuls, MACs, ADC
-//! conversions and the saturated fraction. This is the whole-network
-//! view the paper's per-layer analysis (Fig. 5) implies but the
-//! artifact sweeps cannot give without a compiled artifact: which
-//! layers clip under an aggressive plan, and where the conversions
-//! concentrate. Artifact-free; runs on a fresh checkout.
+//! conversions and the saturated fraction — plus the end-to-end
+//! divergence of the plan against the FLOAT32 host reference. The
+//! divergence numbers come from the *same*
+//! [`planner::divergence`](crate::planner::divergence) harness the
+//! precision planner optimizes, so `eval-graph` and `plan-search`
+//! cannot drift apart on what "within budget" means. This is the
+//! whole-network view the paper's per-layer analysis (Fig. 5) implies
+//! but the artifact sweeps cannot give without a compiled artifact:
+//! which layers clip under an aggressive plan, and where the
+//! conversions concentrate. Artifact-free; runs on a fresh checkout.
 
 use anyhow::Result;
 
-use crate::data::dataset_for;
 use crate::graph::{build, builders::GRAPH_SEED, GraphExecutor, GraphPlan};
 use crate::json::{self, Value};
+use crate::planner::{score_executor, CalibConfig, Divergence};
 use crate::report::{write_report, Table};
-use crate::rng::Pcg64;
 use crate::sweep::eval::EVAL_DATA_SEED;
 
 /// One `Linear` layer's accounting after the eval run.
@@ -36,9 +40,18 @@ pub struct LayerRow {
     pub sat_frac: f64,
 }
 
+/// The full eval: per-layer accounting plus one end-to-end divergence
+/// per model, both produced by the same forward passes.
+#[derive(Debug, Clone)]
+pub struct GraphReport {
+    pub rows: Vec<LayerRow>,
+    pub divergence: Vec<Divergence>,
+}
+
 /// Evaluate `samples` dataset examples per model (batched) under
-/// `plan` and collect the per-layer stats. `seed` keys the ABFP noise
-/// streams; `threads` bounds the simulator pool (0 = process default).
+/// `plan` and collect the per-layer stats plus the end-to-end
+/// divergence. `seed` keys the ABFP noise streams; `threads` bounds the
+/// simulator pool (0 = process default).
 pub fn run(
     models: &[String],
     plan: &GraphPlan,
@@ -46,26 +59,23 @@ pub fn run(
     batch: usize,
     seed: u64,
     threads: usize,
-) -> Result<Vec<LayerRow>> {
-    let batch = batch.max(1);
-    let samples = samples.max(1);
+) -> Result<GraphReport> {
+    // Fixed eval stream (EVAL_DATA_SEED): rows and divergences are
+    // comparable across plans. The scorer truncates the tail batch, so
+    // the per-layer counts cover exactly `samples` examples.
+    let calib = CalibConfig {
+        samples: samples.max(1),
+        batch: batch.max(1),
+        data_seed: EVAL_DATA_SEED,
+        noise_seed: seed,
+        threads,
+    };
     let mut rows = Vec::new();
+    let mut divergence = Vec::new();
     for model in models {
         let graph = build(model, GRAPH_SEED)?;
-        let in_elems = graph.in_elems();
-        let mut exec = GraphExecutor::new(graph, plan, seed, threads)?;
-        let ds = dataset_for(model)?;
-        // Fixed eval stream: rows are comparable across plans.
-        let mut rng = Pcg64::seeded(EVAL_DATA_SEED);
-        // The tail batch is truncated, never rounded up: the reported
-        // per-layer counts cover exactly `samples` examples.
-        let mut remaining = samples;
-        while remaining > 0 {
-            let bn = batch.min(remaining);
-            remaining -= bn;
-            let b = ds.batch(&mut rng, bn);
-            exec.forward(b.x.reshape(&[bn, in_elems])?)?;
-        }
+        let mut exec = GraphExecutor::new(graph.clone(), plan, seed, threads)?;
+        divergence.push(score_executor(&graph, &mut exec, &calib)?);
         for ls in exec.layer_stats() {
             rows.push(LayerRow {
                 model: model.clone(),
@@ -81,7 +91,7 @@ pub fn run(
             });
         }
     }
-    Ok(rows)
+    Ok(GraphReport { rows, divergence })
 }
 
 fn table(rows: &[LayerRow]) -> Table {
@@ -108,18 +118,46 @@ fn table(rows: &[LayerRow]) -> Table {
     t
 }
 
-/// Render the markdown table plus the plan summary line.
-pub fn render(rows: &[LayerRow], plan: &GraphPlan) -> String {
-    format!("plan: {}\n\n{}", plan.summary(), table(rows).to_markdown())
+fn divergence_table(divs: &[Divergence]) -> Table {
+    let mut t = Table::new(
+        "eval-graph — divergence vs FLOAT32 host reference",
+        &["model", "samples", "rel err %", "top1 agree"],
+    );
+    for d in divs {
+        t.row(vec![
+            d.model.clone(),
+            d.samples.to_string(),
+            format!("{:.4}", d.rel_err_pct),
+            format!("{:.3}", d.top1_agree),
+        ]);
+    }
+    t
 }
 
-fn rows_json(rows: &[LayerRow], plan: &GraphPlan) -> Value {
+/// Render the plan summary line, the divergence table and the
+/// per-layer table.
+pub fn render(report: &GraphReport, plan: &GraphPlan) -> String {
+    format!(
+        "plan: {}\n\n{}\n{}",
+        plan.summary(),
+        divergence_table(&report.divergence).to_markdown(),
+        table(&report.rows).to_markdown()
+    )
+}
+
+fn report_json(report: &GraphReport, plan: &GraphPlan) -> Value {
     json::obj(vec![
         ("plan", plan.to_json()),
         (
+            "divergence",
+            json::arr(report.divergence.iter().map(|d| d.to_json()).collect()),
+        ),
+        (
             "rows",
             json::arr(
-                rows.iter()
+                report
+                    .rows
+                    .iter()
                     .map(|r| {
                         json::obj(vec![
                             ("model", json::s(&r.model)),
@@ -141,12 +179,13 @@ fn rows_json(rows: &[LayerRow], plan: &GraphPlan) -> Value {
 }
 
 /// Write `graph.md` / `graph.csv` / `graph.json` under `out_dir`. The
-/// JSON carries the full plan and each layer's exact backend config, so
-/// every row traces back to its device point.
-pub fn write_reports(out_dir: &str, rows: &[LayerRow], plan: &GraphPlan) -> Result<()> {
-    write_report(out_dir, "graph.md", &render(rows, plan))?;
-    write_report(out_dir, "graph.csv", &table(rows).to_csv())?;
-    write_report(out_dir, "graph.json", &rows_json(rows, plan).to_string())?;
+/// JSON carries the full plan, the per-model divergence and each
+/// layer's exact backend config, so every row traces back to its
+/// device point.
+pub fn write_reports(out_dir: &str, report: &GraphReport, plan: &GraphPlan) -> Result<()> {
+    write_report(out_dir, "graph.md", &render(report, plan))?;
+    write_report(out_dir, "graph.csv", &table(&report.rows).to_csv())?;
+    write_report(out_dir, "graph.json", &report_json(report, plan).to_string())?;
     Ok(())
 }
 
@@ -156,6 +195,7 @@ mod tests {
     use crate::abfp::DeviceConfig;
     use crate::backend::BackendKind;
     use crate::graph::LayerPlan;
+    use crate::planner::score_plan;
 
     fn mixed_plan() -> GraphPlan {
         GraphPlan::edges_float32(LayerPlan::new(
@@ -166,7 +206,8 @@ mod tests {
 
     #[test]
     fn mixed_plan_rows_report_per_layer_backends() {
-        let rows = run(&["dlrm".to_string()], &mixed_plan(), 8, 4, 1, 1).unwrap();
+        let report = run(&["dlrm".to_string()], &mixed_plan(), 8, 4, 1, 1).unwrap();
+        let rows = &report.rows;
         assert_eq!(rows.len(), 3, "dlrm has 3 linear layers");
         assert_eq!(rows[0].backend, "float32");
         assert_eq!(rows[1].backend, "abfp");
@@ -179,24 +220,53 @@ mod tests {
         assert_eq!(rows[1].macs, 2 * 4 * 64 * 64);
         // Samples are honoured exactly: 6 examples at batch 4 = 4 + 2,
         // never rounded up to 8 (the old div_ceil overcount).
-        let rows = run(&["dlrm".to_string()], &mixed_plan(), 6, 4, 1, 1).unwrap();
-        assert_eq!(rows[1].macs, 6 * 64 * 64);
+        let report = run(&["dlrm".to_string()], &mixed_plan(), 6, 4, 1, 1).unwrap();
+        assert_eq!(report.rows[1].macs, 6 * 64 * 64);
+        assert_eq!(report.divergence.len(), 1);
+        assert!(report.divergence[0].rel_err_pct.is_finite());
 
-        let text = render(&rows, &mixed_plan());
+        let text = render(&report, &mixed_plan());
         assert!(text.contains("plan: default=abfp"), "{text}");
         assert!(text.contains("| dlrm"), "{text}");
-        let j = rows_json(&rows, &mixed_plan()).to_string();
+        assert!(text.contains("rel err %"), "{text}");
+        let j = report_json(&report, &mixed_plan()).to_string();
         assert!(j.contains("\"backend\":\"abfp\""), "{j}");
         assert!(j.contains("\"plan\""), "{j}");
+        assert!(j.contains("\"divergence\""), "{j}");
     }
 
     #[test]
     fn rows_are_deterministic_for_a_seed() {
         let a = run(&["gru".to_string()], &mixed_plan(), 8, 4, 3, 1).unwrap();
         let b = run(&["gru".to_string()], &mixed_plan(), 8, 4, 3, 1).unwrap();
-        let key = |rows: &[LayerRow]| -> Vec<(u64, u64)> {
-            rows.iter().map(|r| (r.conversions, r.saturated)).collect()
+        let key = |r: &GraphReport| -> Vec<(u64, u64)> {
+            r.rows.iter().map(|x| (x.conversions, x.saturated)).collect()
         };
         assert_eq!(key(&a), key(&b));
+        assert_eq!(a.divergence[0].rel_err_pct, b.divergence[0].rel_err_pct);
+    }
+
+    #[test]
+    fn eval_divergence_is_the_planner_metric() {
+        // Satellite contract: eval-graph reports the exact numbers the
+        // planner optimizes — same harness, same streams, no duplicated
+        // metric code to drift.
+        let calib = CalibConfig {
+            samples: 8,
+            batch: 4,
+            data_seed: EVAL_DATA_SEED,
+            noise_seed: 7,
+            threads: 1,
+        };
+        let via_eval = run(&["gru".to_string()], &mixed_plan(), 8, 4, 7, 1).unwrap();
+        let via_planner = score_plan("gru", &mixed_plan(), &calib).unwrap();
+        assert_eq!(
+            via_eval.divergence[0].rel_err_pct,
+            via_planner.divergence.rel_err_pct
+        );
+        assert_eq!(
+            via_eval.divergence[0].top1_agree,
+            via_planner.divergence.top1_agree
+        );
     }
 }

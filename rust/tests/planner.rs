@@ -1,0 +1,161 @@
+//! Acceptance tests for the adaptive precision planner subsystem:
+//! `plan-search` must emit a valid, strictly cheaper, within-budget
+//! plan that actually serves, and `dnf-graph` must demonstrably reduce
+//! divergence for a budget-rejected plan — all on a fresh checkout,
+//! deterministic seeds throughout.
+
+use abfp::abfp::DeviceConfig;
+use abfp::backend::BackendKind;
+use abfp::coordinator::{BatchPolicy, Router};
+use abfp::data::dataset_for;
+use abfp::graph::{GraphPlan, LayerPlan};
+use abfp::planner::{dnf_graph, search, DnfGraphConfig, SearchConfig};
+use abfp::rng::Pcg64;
+
+#[test]
+fn plan_search_emits_a_cheaper_within_budget_plan_that_serves() {
+    // The ISSUE acceptance criterion in one test: search gru at a 2%
+    // budget, then check the winning plan (1) scores within budget,
+    // (2) is strictly cheaper under the energy model than the uniform
+    // FLOAT32 start, (3) round-trips through plan JSON on disk exactly,
+    // and (4) serves through the graph router.
+    let cfg = SearchConfig::smoke(2.0);
+    let res = search::run("gru", &cfg).unwrap();
+
+    assert!(
+        res.best.divergence.within(2.0),
+        "best plan over budget: {:?}",
+        res.best.divergence
+    );
+    assert!(
+        res.best.cost.total < res.start.cost.total,
+        "search failed to beat the uniform FLOAT32 start: {} vs {}",
+        res.best.cost.total,
+        res.start.cost.total
+    );
+    assert_eq!(res.start.divergence.rel_err_pct, 0.0, "start is FLOAT32");
+    assert!(res.evals > 0);
+
+    // (3) the emitted JSON is byte-serialised, reloaded, and equal.
+    let path = std::env::temp_dir()
+        .join(format!("abfp_plan_search_{}.json", std::process::id()));
+    std::fs::write(&path, res.best.plan.to_json().to_string()).unwrap();
+    let loaded = GraphPlan::load(path.to_str().unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, res.best.plan);
+
+    // (4) the loaded plan serves real traffic.
+    let router = Router::start_graph(
+        &["gru".to_string()],
+        &loaded,
+        BatchPolicy::new(8, 1).unwrap(),
+        64,
+        0x5eed,
+        1,
+    )
+    .unwrap();
+    let ds = dataset_for("gru").unwrap();
+    let b = ds.batch(&mut Pcg64::seeded(3), 1);
+    let example_shape: Vec<usize> = b.x.shape()[1..].to_vec();
+    let x = b.x.clone().reshape(&example_shape).unwrap();
+    let rx = router.submit("gru", x).unwrap();
+    rx.recv().unwrap().unwrap();
+    assert_eq!(router.stats("gru").unwrap().requests, 1);
+}
+
+#[test]
+fn search_is_deterministic() {
+    let cfg = SearchConfig::smoke(2.0);
+    let a = search::run("gru", &cfg).unwrap();
+    let b = search::run("gru", &cfg).unwrap();
+    assert_eq!(a.best.plan, b.best.plan);
+    assert_eq!(a.best.divergence.rel_err_pct, b.best.divergence.rel_err_pct);
+    assert_eq!(a.evals, b.evals);
+    assert_eq!(a.trajectory.len(), b.trajectory.len());
+}
+
+#[test]
+fn dnf_rescues_a_budget_rejected_plan() {
+    // The second ISSUE acceptance criterion: a saturating plan (uniform
+    // ABFP at gain 16 — the ADC clips and the output shrinks) fails a
+    // 2% budget raw; graph-level DNF with the affine noise model must
+    // cut its divergence by at least 10% (the measured improvement is
+    // ~25%; 0.9 leaves margin for noise-draw variation while still
+    // failing if finetuning regresses). Fixed seeds end to end.
+    let plan = GraphPlan::uniform(LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(0, (8, 8, 8), 16.0, 0.5),
+    ));
+    let cfg = DnfGraphConfig::default(); // steps 80, lr 2e-3, batch 32
+    let out = dnf_graph::run("gru", &plan, &cfg).unwrap();
+
+    assert!(
+        !out.before.within(2.0),
+        "plan unexpectedly within budget raw: {:?}",
+        out.before
+    );
+    assert!(
+        out.after.rel_err_pct < 0.9 * out.before.rel_err_pct,
+        "DNF did not reduce divergence enough: before {:.3}% after {:.3}%",
+        out.before.rel_err_pct,
+        out.after.rel_err_pct
+    );
+    // The affine calibration saw the saturation shrinkage.
+    assert!(
+        out.layers.iter().any(|l| l.gamma < 0.95),
+        "no shrinkage calibrated: {:?}",
+        out.layers
+    );
+    // Loss actually descended over the schedule.
+    assert_eq!(out.losses.len(), cfg.steps);
+    let first = out.losses.first().unwrap().loss;
+    let last = out.losses.last().unwrap().loss;
+    assert!(last < first, "loss did not descend: {first} -> {last}");
+}
+
+#[test]
+fn planner_assignments_match_graphplan_resolution() {
+    // Satellite: the folding from per-layer candidate assignments into
+    // GraphPlan's default/first/last/overrides form must resolve back
+    // to exactly the assigned candidate for every layer, across every
+    // precedence shape (uniform, distinct edges, interior override).
+    let cands = search::candidates(true);
+    let n = cands.len();
+    assert!(n >= 4);
+    let cases: Vec<Vec<usize>> = vec![
+        vec![0, 0, 0],
+        vec![1, 1, 1],
+        vec![0, 1, 2],
+        vec![1, 0, 1],
+        vec![2, 2, 0],
+        vec![0, 3, 3, 1],
+        vec![3, 0, 0, 0, 3],
+        vec![n - 1],
+    ];
+    for assign in cases {
+        let plan = search::plan_from_assignments(&cands, &assign);
+        for (i, &c) in assign.iter().enumerate() {
+            assert_eq!(
+                plan.resolve(i, assign.len()),
+                cands[c],
+                "assign {assign:?} layer {i}"
+            );
+        }
+        // The planner-emitted JSON text must round-trip through the
+        // same loader serve/eval-graph use, auto-tile sentinel (n=0)
+        // included.
+        let text = plan.to_json().to_string();
+        let reparsed = GraphPlan::parse(&text).unwrap();
+        assert_eq!(reparsed, plan, "json text: {text}");
+        for (i, &c) in assign.iter().enumerate() {
+            assert_eq!(reparsed.resolve(i, assign.len()), cands[c]);
+        }
+    }
+    // The smoke roster really carries the sentinel: every non-float32,
+    // non-explicit-tile candidate survives the text round-trip with
+    // n=0 intact.
+    assert!(
+        cands.iter().any(|c| c.device.n == 0 && c.backend != BackendKind::Float32),
+        "roster lost its auto-tile candidates"
+    );
+}
