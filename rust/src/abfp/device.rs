@@ -130,6 +130,23 @@ impl DeviceConfig {
         if self.n == 0 {
             bail!("tile width n must be >= 1");
         }
+        if !self.gain.is_finite() || self.gain < 1.0 {
+            bail!(
+                "device gain must be finite and >= 1 (got {}): the device \
+                 amplifies the analog dot product before the ADC — gains \
+                 below 1 attenuate instead and are outside the paper's \
+                 sweep space (Eq. 5), and non-finite gains poison every \
+                 output",
+                self.gain
+            );
+        }
+        if !self.noise_lsb.is_finite() || self.noise_lsb < 0.0 {
+            bail!(
+                "device noise_lsb must be finite and >= 0 (got {}): it is \
+                 a noise *amplitude* in ADC LSB units (Eq. 5)",
+                self.noise_lsb
+            );
+        }
         Ok(())
     }
 }
@@ -667,6 +684,49 @@ mod tests {
         let cfg = DeviceConfig::new(32, (2, 2, 2), 1.0, 0.0);
         let text = cfg.to_json().to_string();
         assert!(DeviceConfig::from_json(&json::parse(&text).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn device_config_rejects_bad_gain() {
+        // Regression: gain used to pass unvalidated. Sub-unity gain
+        // attenuates the analog dot product (outside the paper's sweep
+        // space), and non-finite gain poisons every conversion.
+        for gain in [0.0f32, 0.5, -2.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let cfg = DeviceConfig::new(32, (8, 8, 8), gain, 0.5);
+            let err = cfg.validate();
+            assert!(err.is_err(), "gain {gain} must be rejected");
+            assert!(err.unwrap_err().to_string().contains("gain"));
+            // NaN/inf do not survive JSON text, but every finite bad
+            // gain must also be rejected on the from_json path.
+            if gain.is_finite() {
+                let text = cfg.to_json().to_string();
+                assert!(
+                    DeviceConfig::from_json(&json::parse(&text).unwrap()).is_err(),
+                    "gain {gain} must be rejected by from_json"
+                );
+            }
+        }
+        // The legal boundary (gain exactly 1) is accepted.
+        assert!(DeviceConfig::new(32, (8, 8, 8), 1.0, 0.5).validate().is_ok());
+    }
+
+    #[test]
+    fn device_config_rejects_bad_noise() {
+        for noise in [-0.5f32, -1e-6, f32::NAN, f32::INFINITY] {
+            let cfg = DeviceConfig::new(32, (8, 8, 8), 2.0, noise);
+            let err = cfg.validate();
+            assert!(err.is_err(), "noise_lsb {noise} must be rejected");
+            assert!(err.unwrap_err().to_string().contains("noise_lsb"));
+            if noise.is_finite() {
+                let text = cfg.to_json().to_string();
+                assert!(
+                    DeviceConfig::from_json(&json::parse(&text).unwrap()).is_err(),
+                    "noise_lsb {noise} must be rejected by from_json"
+                );
+            }
+        }
+        // Noiseless devices stay legal (every determinism test uses them).
+        assert!(DeviceConfig::new(32, (8, 8, 8), 1.0, 0.0).validate().is_ok());
     }
 
     #[test]

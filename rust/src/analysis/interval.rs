@@ -1,0 +1,267 @@
+//! The interval abstract domain for the static range analyzer.
+//!
+//! One [`Interval`] summarizes every element of one activation tensor
+//! (a width-collapsed hull). Transfer functions mirror the host ops in
+//! [`crate::graph`] exactly — the scalar activations are evaluated
+//! through the *same* `pub(crate)` functions the executor runs — and
+//! every function that involves floating-point rounding pads its result
+//! outward ([`Interval::pad`]), so containment is sound rather than
+//! merely likely. Conservatism is harmless here: a wider interval can
+//! only demote a certificate to a warning, never fake one.
+
+use crate::graph::{gelu, relu, sigmoid};
+use crate::json::{self, Value};
+
+/// A closed interval `[lo, hi]` of f32 values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interval {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+/// Relative outward padding applied after every rounding-afflicted
+/// transfer function: orders of magnitude above f32's 2^-24 unit
+/// roundoff and libm's worst-case ulp error, still far below any
+/// decision threshold the linter uses.
+const PAD_REL: f32 = 1e-5;
+/// Absolute padding floor (covers intervals around zero).
+const PAD_ABS: f32 = 1e-6;
+
+/// Hard lower bound of the tanh-approximation GELU: its global minimum
+/// is ~-0.170 (near v = -0.75); -0.2 leaves a wide soundness margin.
+const GELU_FLOOR: f32 = -0.2;
+
+impl Interval {
+    pub fn new(lo: f32, hi: f32) -> Interval {
+        debug_assert!(lo <= hi, "interval [{lo}, {hi}] is inverted");
+        Interval { lo, hi }
+    }
+
+    /// The degenerate single-point interval.
+    pub fn point(v: f32) -> Interval {
+        Interval::new(v, v)
+    }
+
+    /// Tight hull of a slice (point zero for an empty slice).
+    pub fn of_slice(data: &[f32]) -> Interval {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if lo > hi {
+            return Interval::point(0.0);
+        }
+        Interval::new(lo, hi)
+    }
+
+    /// Smallest interval containing both operands.
+    pub fn hull(self, other: Interval) -> Interval {
+        Interval::new(self.lo.min(other.lo), self.hi.max(other.hi))
+    }
+
+    pub fn contains(&self, v: f32) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Largest magnitude in the interval.
+    pub fn abs_max(&self) -> f32 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    /// Interval width (`hi - lo`).
+    pub fn width(&self) -> f32 {
+        self.hi - self.lo
+    }
+
+    /// All values share one sign (including zero): the certificate
+    /// condition under which staged ABFP activations occupy only half
+    /// of the quantizer's `[-1, 1]` range.
+    pub fn one_signed(&self) -> bool {
+        self.lo >= 0.0 || self.hi <= 0.0
+    }
+
+    /// Pad both ends outward by `PAD_REL` relative + `PAD_ABS` absolute
+    /// — the blanket cover for f32 rounding in a transfer function.
+    pub fn pad(self) -> Interval {
+        let e = PAD_REL * self.abs_max() + PAD_ABS;
+        Interval::new(self.lo - e, self.hi + e)
+    }
+
+    /// Exact interval addition, padded for the f32 rounding of the
+    /// elementwise adds it models (bias, residual).
+    pub fn add(self, other: Interval) -> Interval {
+        Interval::new(self.lo + other.lo, self.hi + other.hi).pad()
+    }
+
+    /// Intersection, clamped to stay a valid interval (callers only
+    /// intersect with a known codomain, so emptiness cannot happen for
+    /// sound inputs; an inverted result collapses to its boundary).
+    pub fn intersect(self, other: Interval) -> Interval {
+        let lo = self.lo.max(other.lo);
+        let hi = self.hi.min(other.hi);
+        if lo <= hi {
+            Interval::new(lo, hi)
+        } else {
+            Interval::point(lo.min(self.hi))
+        }
+    }
+
+    /// ReLU transfer: `v.max(0.0)` endpoint-exact (no rounding — no
+    /// padding, which also preserves `lo >= 0` for the certificates).
+    pub fn relu_iv(self) -> Interval {
+        Interval::new(relu(self.lo), relu(self.hi))
+    }
+
+    /// Tanh transfer: monotone endpoint evaluation + pad, intersected
+    /// with the codomain (sign-preserving, so a non-negative input
+    /// keeps a non-negative bound).
+    pub fn tanh_iv(self) -> Interval {
+        let out = Interval::new(self.lo.tanh(), self.hi.tanh()).pad();
+        out.intersect(self.sign_codomain(-1.0, 1.0))
+    }
+
+    /// Sigmoid transfer: monotone endpoint evaluation + pad ∩ `[0, 1]`
+    /// (f32 sigmoid reaches exactly 0.0 and 1.0 at the tails).
+    pub fn sigmoid_iv(self) -> Interval {
+        let out = Interval::new(sigmoid(self.lo), sigmoid(self.hi)).pad();
+        out.intersect(Interval::new(0.0, 1.0))
+    }
+
+    /// GELU (tanh approximation) transfer. The function decreases from
+    /// ~0⁻ at -inf to its global minimum (~-0.17 near v = -0.75), then
+    /// increases — so the maximum over any interval sits at an
+    /// endpoint, and the minimum is either an endpoint or bounded by
+    /// [`GELU_FLOOR`] whenever the interval reaches below zero.
+    pub fn gelu_iv(self) -> Interval {
+        let (a, b) = (gelu(self.lo), gelu(self.hi));
+        let hi = a.max(b);
+        let mut lo = a.min(b);
+        if self.lo < 0.0 {
+            lo = lo.min(GELU_FLOOR);
+        }
+        let out = Interval::new(lo, hi).pad();
+        out.intersect(self.sign_codomain(GELU_FLOOR - 1.0, f32::INFINITY))
+    }
+
+    /// Codomain restriction for sign-preserving activations: inputs
+    /// that are all-non-negative (all-non-positive) map to outputs
+    /// bounded below (above) by zero; mixed inputs keep `[neg, pos]`.
+    fn sign_codomain(self, neg: f32, pos: f32) -> Interval {
+        if self.lo >= 0.0 {
+            Interval::new(0.0, pos)
+        } else if self.hi <= 0.0 {
+            Interval::new(neg, 0.0)
+        } else {
+            Interval::new(neg, pos)
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("lo", json::num(self.lo as f64)),
+            ("hi", json::num(self.hi as f64)),
+        ])
+    }
+}
+
+impl std::fmt::Display for Interval {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{:.4}, {:.4}]", self.lo, self.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Sample `steps` points in `iv` (endpoints included).
+    fn samples(iv: Interval, steps: usize) -> Vec<f32> {
+        (0..=steps)
+            .map(|i| iv.lo + (iv.hi - iv.lo) * i as f32 / steps as f32)
+            .collect()
+    }
+
+    #[test]
+    fn hull_slice_contains() {
+        let iv = Interval::of_slice(&[3.0, -1.5, 0.25]);
+        assert_eq!(iv, Interval::new(-1.5, 3.0));
+        assert!(iv.contains(0.0) && iv.contains(-1.5) && iv.contains(3.0));
+        assert!(!iv.contains(3.1));
+        assert_eq!(iv.abs_max(), 3.0);
+        assert!(!iv.one_signed());
+        assert!(Interval::new(0.0, 2.0).one_signed());
+        assert!(Interval::new(-2.0, 0.0).one_signed());
+        assert_eq!(Interval::of_slice(&[]), Interval::point(0.0));
+        let h = Interval::new(-1.0, 0.0).hull(Interval::new(2.0, 3.0));
+        assert_eq!(h, Interval::new(-1.0, 3.0));
+    }
+
+    #[test]
+    fn add_and_pad_expand_outward() {
+        let s = Interval::new(1.0, 2.0).add(Interval::new(-0.5, 0.25));
+        assert!(s.lo <= 0.5 && s.hi >= 2.25);
+        // Padding around zero still expands (the absolute term).
+        let z = Interval::point(0.0).pad();
+        assert!(z.lo < 0.0 && z.hi > 0.0);
+    }
+
+    #[test]
+    fn activation_transfers_contain_sampled_host_values() {
+        // Soundness by sampling: for random intervals, every host-fn
+        // value at sampled inputs falls inside the transfer image.
+        let mut rng = Pcg64::seeded(0x1f7e);
+        for _ in 0..200 {
+            let a = rng.normal() * 4.0;
+            let b = a + rng.normal().abs() * 6.0;
+            let iv = Interval::new(a, b);
+            for v in samples(iv, 64) {
+                assert!(iv.relu_iv().contains(relu(v)), "relu {v} in {iv}");
+                assert!(iv.tanh_iv().contains(v.tanh()), "tanh {v} in {iv}");
+                assert!(
+                    iv.sigmoid_iv().contains(sigmoid(v)),
+                    "sigmoid {v} in {iv}"
+                );
+                assert!(iv.gelu_iv().contains(gelu(v)), "gelu {v} in {iv}");
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_dip_is_covered() {
+        // The interval straddles the global minimum: endpoint values
+        // alone would under-cover; the floor must kick in.
+        let iv = Interval::new(-2.0, 0.1);
+        let out = iv.gelu_iv();
+        for v in samples(iv, 512) {
+            assert!(out.contains(gelu(v)), "{v} -> {} not in {out}", gelu(v));
+        }
+        assert!(out.lo <= -0.169 && out.lo >= GELU_FLOOR - 1e-3);
+    }
+
+    #[test]
+    fn sign_preservation_for_certificates() {
+        // Non-negative inputs must keep a non-negative lower bound
+        // through the sign-preserving activations — the property the
+        // downstream ABFP certificate's one-signed branch relies on.
+        let nn = Interval::new(0.0, 5.0);
+        assert!(nn.relu_iv().lo >= 0.0);
+        assert!(nn.tanh_iv().lo >= 0.0);
+        assert!(nn.sigmoid_iv().lo >= 0.0);
+        assert!(nn.gelu_iv().lo >= 0.0);
+        let np = Interval::new(-5.0, 0.0);
+        assert!(np.tanh_iv().hi <= 0.0);
+        // Sigmoid of anything is still [0, 1].
+        assert!(np.sigmoid_iv().lo >= 0.0 && np.sigmoid_iv().hi <= 1.0);
+    }
+
+    #[test]
+    fn json_and_display() {
+        let iv = Interval::new(-1.25, 3.5);
+        let j = iv.to_json().to_string();
+        assert!(j.contains("-1.25") && j.contains("3.5"), "{j}");
+        assert_eq!(format!("{iv}"), "[-1.2500, 3.5000]");
+    }
+}

@@ -1,0 +1,516 @@
+//! The plan linter: interval propagation over a [`ModelGraph`] under a
+//! [`GraphPlan`], yielding per-layer range reports and structured
+//! diagnostics.
+//!
+//! The walk mirrors [`ModelGraph::forward_with`] exactly — the bias add
+//! happens inside the `Linear` step, residual sources are the saved
+//! per-layer intervals — so containment transfers: any activation the
+//! executor produces from an input inside the declared domain lies
+//! inside the propagated interval (`tests/analysis.rs` drives random
+//! batches through `GraphExecutor` to pin this on all six archetypes).
+//!
+//! Severity policy:
+//!
+//! * `Info` — exact (`float32`), structurally saturation-free digital
+//!   accumulation (`fixed`/`bfp`), or a *certified* ABFP layer.
+//! * `Warn` — an uncertified ABFP layer whose worst-case clamp bound
+//!   stays below [`ERROR_BOUND`]: some cells may clip, but not enough
+//!   to statically condemn the plan.
+//! * `Error` — the clamp bound reaches [`ERROR_BOUND`] (the planner's
+//!   default saturation-prune threshold): the plan is statically
+//!   saturating and `serve --graph --plan` / `eval-graph` refuse it
+//!   unless `--allow-unsound-plan` is passed.
+
+use anyhow::Result;
+
+use super::interval::Interval;
+use super::range::{linear_range, AbfpCert};
+use crate::backend::BackendKind;
+use crate::graph::{build, builders::GRAPH_SEED, registry, GraphPlan, Layer, ModelGraph};
+use crate::json::{self, Value};
+use crate::report::Table;
+
+/// Clamp-fraction bound at which a diagnostic becomes an `Error` —
+/// deliberately equal to the planner's default `sat_prune` threshold,
+/// so "the linter rejects it" and "a probe would prune it" agree.
+pub const ERROR_BOUND: f64 = 0.25;
+
+/// Diagnostic severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One structured finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub level: Level,
+    /// `Linear` ordinal the finding is about (None = whole model).
+    pub layer: Option<usize>,
+    pub message: String,
+    /// Actionable fix, e.g. "drop gain to <= 8 or set layer 0 to float32".
+    pub hint: Option<String>,
+    /// Predicted worst-case clamp fraction (ABFP findings only).
+    pub clamp_bound: Option<f64>,
+}
+
+impl Diagnostic {
+    pub fn to_json(&self) -> Value {
+        let mut fields = vec![
+            ("level", json::s(self.level.name())),
+            ("message", json::s(&self.message)),
+        ];
+        if let Some(l) = self.layer {
+            fields.push(("layer", json::num(l as f64)));
+        }
+        if let Some(h) = &self.hint {
+            fields.push(("hint", json::s(h)));
+        }
+        if let Some(b) = self.clamp_bound {
+            fields.push(("clamp_bound", json::num(b)));
+        }
+        json::obj(fields)
+    }
+}
+
+/// Range analysis of one `Linear` layer.
+#[derive(Debug, Clone)]
+pub struct LinearReport {
+    /// `Linear` ordinal in graph order.
+    pub layer: usize,
+    /// Resolved layer plan, compact form (`abfp(n=32,g=2)`).
+    pub summary: String,
+    /// Value interval entering the matmul.
+    pub input: Interval,
+    /// Value interval after the matmul + bias (the `Linear` step's
+    /// output, before any following activation layer).
+    pub output: Interval,
+    /// Saturation-freedom proved (true for exact/digital backends).
+    pub certified: bool,
+    /// Worst-case clamp fraction (0 when certified).
+    pub clamp_bound: f64,
+}
+
+impl LinearReport {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("layer", json::num(self.layer as f64)),
+            ("plan", json::s(&self.summary)),
+            ("input", self.input.to_json()),
+            ("output", self.output.to_json()),
+            ("certified", Value::Bool(self.certified)),
+            ("clamp_bound", json::num(self.clamp_bound)),
+        ])
+    }
+}
+
+/// The linter's verdict on one (model, plan) pair.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    pub model: String,
+    pub plan_summary: String,
+    /// Declared per-element input domain the analysis assumed.
+    pub input_domain: Interval,
+    pub linears: Vec<LinearReport>,
+    /// Value interval of the model output.
+    pub output: Interval,
+    pub diags: Vec<Diagnostic>,
+}
+
+impl LintReport {
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.level == Level::Error).count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.level == Level::Warn).count()
+    }
+
+    /// Compact verdict, e.g. `0E/1W/3I`.
+    pub fn summary(&self) -> String {
+        let info = self.diags.len() - self.error_count() - self.warn_count();
+        format!("{}E/{}W/{}I", self.error_count(), self.warn_count(), info)
+    }
+
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.diags.iter().find(|d| d.level == Level::Error)
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", json::s(&self.model)),
+            ("plan", json::s(&self.plan_summary)),
+            ("summary", json::s(&self.summary())),
+            ("input_domain", self.input_domain.to_json()),
+            ("output", self.output.to_json()),
+            (
+                "linears",
+                json::arr(self.linears.iter().map(|l| l.to_json()).collect()),
+            ),
+            (
+                "diagnostics",
+                json::arr(self.diags.iter().map(|d| d.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The declared input domain for `model`, or a conservative fallback
+/// for graphs outside the registry (flagged by the caller).
+fn declared_domain(model: &str) -> Option<Interval> {
+    registry::meta(model)
+        .ok()
+        .map(|m| Interval::new(m.input_lo, m.input_hi))
+}
+
+/// Largest power of two at or below `g` (for "drop gain to <= N" hints
+/// — gains are powers of two throughout the paper's sweeps).
+fn pow2_floor(g: f64) -> f64 {
+    (2.0f64).powi(g.log2().floor() as i32)
+}
+
+fn abfp_hint(layer: usize, cert: &AbfpCert, tile: usize) -> String {
+    if cert.max_gain_safe >= 1.0 {
+        format!(
+            "drop gain to <= {} or set layer {layer} to float32",
+            pow2_floor(cert.max_gain_safe)
+        )
+    } else {
+        format!(
+            "no gain is provably safe at tile n={tile} on this input \
+             range; set layer {layer} to float32 (or shrink the tile)"
+        )
+    }
+}
+
+/// Lint `plan` against `graph`: propagate value intervals through every
+/// layer and certify/bound every analog matmul.
+pub fn lint_graph(graph: &ModelGraph, plan: &GraphPlan) -> Result<LintReport> {
+    let model = graph.model().to_string();
+    let count = graph.linear_count();
+    let tile = registry::default_tile(&model);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    let input_domain = match declared_domain(&model) {
+        Some(iv) => iv,
+        None => {
+            diags.push(Diagnostic {
+                level: Level::Warn,
+                layer: None,
+                message: format!(
+                    "model {model:?} has no declared input domain in the \
+                     registry; assuming [-1e6, 1e6] (certificates may be \
+                     needlessly pessimistic)"
+                ),
+                hint: None,
+                clamp_bound: None,
+            });
+            Interval::new(-1e6, 1e6)
+        }
+    };
+
+    let mut cur = input_domain;
+    // Saved per-layer-index intervals for residual reads (mirrors the
+    // executor's `FlowScratch::kept` slots).
+    let mut kept: Vec<Interval> = Vec::with_capacity(graph.layers().len());
+    let mut linears: Vec<LinearReport> = Vec::new();
+    let mut li = 0usize;
+
+    for layer in graph.layers() {
+        match layer {
+            Layer::Flatten => {}
+            Layer::Linear { w, b } => {
+                let mut lp = plan.resolve(li, count);
+                if lp.device.n == 0 {
+                    lp.device.n = tile;
+                }
+                let input = cur;
+                let range = linear_range(&lp, w, input)?;
+                cur = range.out;
+                if let Some(b) = b {
+                    cur = cur.add(Interval::of_slice(b.data()));
+                }
+                let (certified, clamp_bound) = match (lp.backend, &range.cert) {
+                    (BackendKind::Abfp, Some(cert)) => {
+                        if cert.certified() {
+                            diags.push(Diagnostic {
+                                level: Level::Info,
+                                layer: Some(li),
+                                message: format!(
+                                    "layer {li} {}: certified saturation-free \
+                                     on input {input} (max safe gain {:.3})",
+                                    lp.summary(),
+                                    cert.max_gain_safe
+                                ),
+                                hint: None,
+                                clamp_bound: Some(0.0),
+                            });
+                        } else {
+                            let bound = cert.clamp_bound();
+                            let level = if bound >= ERROR_BOUND {
+                                Level::Error
+                            } else {
+                                Level::Warn
+                            };
+                            diags.push(Diagnostic {
+                                level,
+                                layer: Some(li),
+                                message: format!(
+                                    "layer {li} {}: up to {:.1}% of ADC \
+                                     conversions may clamp ({}/{} analog \
+                                     cells unsafe on input {input})",
+                                    lp.summary(),
+                                    100.0 * bound,
+                                    cert.unsafe_cells,
+                                    cert.total_cells
+                                ),
+                                hint: Some(abfp_hint(li, cert, lp.device.n)),
+                                clamp_bound: Some(bound),
+                            });
+                        }
+                        (cert.certified(), cert.clamp_bound())
+                    }
+                    (BackendKind::Float32, _) => {
+                        diags.push(Diagnostic {
+                            level: Level::Info,
+                            layer: Some(li),
+                            message: format!(
+                                "layer {li} float32: exact arithmetic, \
+                                 output {cur}"
+                            ),
+                            hint: None,
+                            clamp_bound: None,
+                        });
+                        (true, 0.0)
+                    }
+                    _ => {
+                        diags.push(Diagnostic {
+                            level: Level::Info,
+                            layer: Some(li),
+                            message: format!(
+                                "layer {li} {}: digital accumulation cannot \
+                                 saturate, output {cur}",
+                                lp.summary()
+                            ),
+                            hint: None,
+                            clamp_bound: None,
+                        });
+                        (true, 0.0)
+                    }
+                };
+                linears.push(LinearReport {
+                    layer: li,
+                    summary: lp.summary(),
+                    input,
+                    output: cur,
+                    certified,
+                    clamp_bound,
+                });
+                li += 1;
+            }
+            Layer::Bias(b) => {
+                cur = cur.add(Interval::of_slice(b.data()));
+            }
+            Layer::Relu => cur = cur.relu_iv(),
+            Layer::Gelu => cur = cur.gelu_iv(),
+            Layer::Tanh => cur = cur.tanh_iv(),
+            Layer::Sigmoid => cur = cur.sigmoid_iv(),
+            Layer::Residual { from } => {
+                cur = cur.add(kept[*from]);
+            }
+        }
+        kept.push(cur);
+    }
+
+    Ok(LintReport {
+        model,
+        plan_summary: plan.summary(),
+        input_domain,
+        linears,
+        output: cur,
+        diags,
+    })
+}
+
+/// Lint `plan` against `model`'s seeded registry graph (the graph
+/// `serve --graph`, `eval-graph` and the planner all execute).
+pub fn lint_plan(model: &str, plan: &GraphPlan) -> Result<LintReport> {
+    lint_graph(&build(model, GRAPH_SEED)?, plan)
+}
+
+/// Markdown report (`reports/lint.md`): per-model verdict table, then
+/// per-layer ranges, then the diagnostic list.
+pub fn render(reports: &[LintReport], plan: &GraphPlan) -> String {
+    let mut head = Table::new(
+        "Plan lint — static saturation analysis",
+        &["model", "verdict", "errors", "warnings", "output range"],
+    );
+    for r in reports {
+        head.row(vec![
+            r.model.clone(),
+            r.summary(),
+            r.error_count().to_string(),
+            r.warn_count().to_string(),
+            r.output.to_string(),
+        ]);
+    }
+    let mut out = format!("Plan: `{}`\n\n", plan.summary());
+    out.push_str(&head.to_markdown());
+    for r in reports {
+        let mut t = Table::new(
+            &format!("{} layer ranges (input domain {})", r.model, r.input_domain),
+            &["layer", "plan", "input", "output", "certified", "clamp bound"],
+        );
+        for l in &r.linears {
+            t.row(vec![
+                l.layer.to_string(),
+                l.summary.clone(),
+                l.input.to_string(),
+                l.output.to_string(),
+                if l.certified { "yes".into() } else { "NO".into() },
+                format!("{:.3}", l.clamp_bound),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&t.to_markdown());
+        out.push('\n');
+        for d in &r.diags {
+            out.push_str(&format!("- **{}** {}\n", d.level, d.message));
+            if let Some(h) = &d.hint {
+                out.push_str(&format!("  - hint: {h}\n"));
+            }
+        }
+    }
+    out
+}
+
+/// Machine-readable report (`reports/lint.json`).
+pub fn reports_json(reports: &[LintReport]) -> Value {
+    json::obj(vec![(
+        "reports",
+        json::arr(reports.iter().map(|r| r.to_json()).collect()),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abfp::DeviceConfig;
+    use crate::graph::LayerPlan;
+
+    fn abfp_plan(bits: u32, gain: f32) -> GraphPlan {
+        GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (bits, bits, bits), gain, 0.5),
+        ))
+    }
+
+    #[test]
+    fn float32_plan_is_all_info() {
+        let r = lint_plan("gru", &GraphPlan::float32()).unwrap();
+        assert_eq!(r.error_count(), 0);
+        assert_eq!(r.warn_count(), 0);
+        assert_eq!(r.linears.len(), 3);
+        assert!(r.linears.iter().all(|l| l.certified));
+        assert_eq!(r.summary(), "0E/0W/3I");
+        // The declared gru domain is one-signed non-negative.
+        assert!(r.input_domain.lo >= 0.0);
+        assert!(r.first_error().is_none());
+    }
+
+    #[test]
+    fn gain16_gru_plan_is_statically_saturating() {
+        // The ISSUE acceptance case: the PR-6 DNF-rescue plan (uniform
+        // abfp8 at gain 16) must be flagged as Error-level saturating,
+        // with a near-total clamp bound and an actionable hint.
+        let r = lint_plan("gru", &abfp_plan(8, 16.0)).unwrap();
+        assert!(r.error_count() >= 1, "{:?}", r.diags);
+        let e = r.first_error().unwrap();
+        assert!(e.clamp_bound.unwrap() >= ERROR_BOUND, "{e:?}");
+        assert!(e.hint.is_some(), "{e:?}");
+        let hint = e.hint.clone().unwrap();
+        assert!(
+            hint.contains("gain") || hint.contains("float32"),
+            "{hint}"
+        );
+        // The measured reference for this plan clips ~40% of the first
+        // layer's conversions — the static bound must be at least that.
+        let first = &r.linears[0];
+        assert!(!first.certified);
+        assert!(first.clamp_bound >= 0.4, "{first:?}");
+    }
+
+    #[test]
+    fn moderate_gain_certifies_the_first_gru_layer() {
+        // abfp12 gain 2 on the one-signed gru domain: the first layer
+        // certifies cleanly and the whole plan carries no Error.
+        let r = lint_plan("gru", &abfp_plan(12, 2.0)).unwrap();
+        assert_eq!(r.error_count(), 0, "{:?}", r.diags);
+        assert!(r.linears[0].certified, "{:?}", r.linears[0]);
+        assert_eq!(r.linears[0].clamp_bound, 0.0);
+    }
+
+    #[test]
+    fn six_archetypes_lint_without_errors_on_digital_plans() {
+        let plan = GraphPlan::uniform(LayerPlan::new(
+            BackendKind::Bfp,
+            DeviceConfig::new(0, (8, 8, 8), 1.0, 0.0),
+        ));
+        for m in registry::MODEL_NAMES {
+            let r = lint_plan(m, &plan).unwrap();
+            assert_eq!(r.error_count(), 0, "{m}: {:?}", r.diags);
+            assert!(r.linears.iter().all(|l| l.certified), "{m}");
+            assert!(r.output.width() > 0.0, "{m}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_gets_a_domain_warning() {
+        use crate::graph::Layer;
+        use crate::tensor::Tensor;
+        let g = crate::graph::ModelGraph::new(
+            "adhoc",
+            &[4],
+            vec![Layer::Linear {
+                w: Tensor::full(&[2, 4], 0.1),
+                b: None,
+            }],
+        )
+        .unwrap();
+        let r = lint_graph(&g, &GraphPlan::float32()).unwrap();
+        assert!(r.warn_count() >= 1, "{:?}", r.diags);
+        assert!(r.diags[0].message.contains("input domain"), "{:?}", r.diags);
+    }
+
+    #[test]
+    fn render_and_json_carry_the_findings() {
+        let r = lint_plan("gru", &abfp_plan(8, 16.0)).unwrap();
+        let plan = abfp_plan(8, 16.0);
+        let md = render(std::slice::from_ref(&r), &plan);
+        assert!(md.contains("**error**"), "{md}");
+        assert!(md.contains("hint:"), "{md}");
+        assert!(md.contains("clamp bound"), "{md}");
+        let j = reports_json(std::slice::from_ref(&r)).to_string();
+        for key in ["clamp_bound", "diagnostics", "input_domain", "certified"] {
+            assert!(j.contains(key), "{j}");
+        }
+    }
+}

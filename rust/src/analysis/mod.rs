@@ -1,0 +1,37 @@
+//! Static numeric-range analysis: prove saturation-freedom before
+//! traffic.
+//!
+//! The serving stack so far finds saturating plans *empirically* — the
+//! planner probes layers with calibration batches, DNF measures clamp
+//! fractions after the fact. This module closes the gap statically: an
+//! abstract-interpretation pass propagates per-layer value intervals
+//! ([`Interval`]) through a [`ModelGraph`](crate::graph::ModelGraph)
+//! under a [`GraphPlan`](crate::graph::GraphPlan), models each
+//! backend's quantization step and (for ABFP) the ADC input range, and
+//! emits structured [`Diagnostic`]s — before any worker stages weights.
+//!
+//! The load-bearing guarantee is **soundness**: a layer the analyzer
+//! certifies saturation-free measures *zero* clamped conversions on any
+//! input inside the declared domain (`tests/analysis.rs` pins this
+//! empirically on all six archetypes). The converse is deliberately
+//! conservative — a `Warn` means "not provably clean", not "dirty".
+//!
+//! Consumers:
+//!
+//! * the `lint-plan` CLI subcommand (writes `reports/lint.{md,json}`,
+//!   nonzero exit on any `Error`);
+//! * `serve --graph --plan` / `eval-graph --plan`, which refuse
+//!   Error-level plans unless `--allow-unsound-plan` is passed;
+//! * the planner's candidate pruning ([`crate::planner::search`]),
+//!   which skips probes whose outcome the certificate already decides;
+//! * `GET /v1/models` metadata, which carries the lint verdict.
+
+pub mod interval;
+pub mod lint;
+pub mod range;
+
+pub use interval::Interval;
+pub use lint::{
+    lint_graph, lint_plan, render, reports_json, Diagnostic, Level, LintReport, ERROR_BOUND,
+};
+pub use range::{certify_abfp, linear_range, AbfpCert, LinearRange};

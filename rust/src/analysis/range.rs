@@ -1,0 +1,412 @@
+//! Per-backend linear-layer range modeling: exact matmul bounds from
+//! per-row signed weight sums, quantization-error widening for the
+//! digital formats, and the ABFP saturation certificate.
+//!
+//! ## The ABFP certificate
+//!
+//! For one analog cell — output row `j`, tile `ti` of the **actual
+//! staged weights** — the ADC input is `pre = G * dot + eps` with
+//! `dot = Σ xq·wq` over the tile's `n` quantized slots, `|eps| <=
+//! noise_lsb * bin`, and the conversion clips iff `|pre| > tau = n`.
+//! Staging is sign-preserving with `|xq| <= 1`, so
+//!
+//! * one-signed input interval (`lo >= 0` or `hi <= 0`): `xq` occupies
+//!   `[0, 1]` (or `[-1, 0]`) and `|dot| <= max(P, -N)` where
+//!   `P = Σ max(wq, 0)`, `N = Σ min(wq, 0)`;
+//! * mixed-sign input: `|dot| <= P - N` (the L1 of the staged tile).
+//!
+//! The cell is **clip-free** iff `G·B + noise_lsb·bin <= tau·(1 - ε)`,
+//! with `ε = 1e-4` covering the f32 rounding of the n-term dot (a
+//! relative error below `n·2⁻²⁴ ≈ 8e-6` at `n = 128`). The bound is
+//! magnitude-independent — ABFP normalizes every tile by its absmax —
+//! so only the *sign structure* of the input interval matters, which is
+//! exactly what the interval propagation preserves. The fraction of
+//! cells that fail the condition upper-bounds the measured saturation
+//! fraction of any batch drawn from the interval: safe cells never
+//! clip, unsafe cells clip at most every conversion.
+//!
+//! ## Value intervals
+//!
+//! `float32` layers get the exact per-row interval
+//! `[lo·P + hi·N, hi·P + lo·N]` (signed sums over the FLOAT32
+//! weights), padded for f32 accumulation. `fixed`/`bfp` add a
+//! quantization-step widening (`K·(A·ew + Wmax·ex + ex·ew)`). ABFP
+//! layers get the unconditional hard bound
+//! `R = tau · max(Sx, 1) · Σ_t sw_t / G` per row — sound even under
+//! full saturation, because `|yq| <= tau` by the ADC clamp itself.
+
+use anyhow::{bail, Result};
+
+use super::interval::Interval;
+use crate::abfp::{Device, DeviceConfig};
+use crate::backend::BackendKind;
+use crate::graph::LayerPlan;
+use crate::numerics::delta;
+use crate::tensor::Tensor;
+
+/// Slack absorbing f32 rounding in the per-tile dot accumulation.
+const DOT_SLACK: f64 = 1e-4;
+
+/// The saturation certificate for one ABFP linear layer.
+#[derive(Debug, Clone, Copy)]
+pub struct AbfpCert {
+    /// Analog cells analyzed: weight rows × tiles per row.
+    pub total_cells: usize,
+    /// Cells whose worst-case ADC input exceeds the clip range.
+    pub unsafe_cells: usize,
+    /// Largest gain at which *every* cell is provably clip-free
+    /// (infinite for all-zero weights; `< 1` means no legal gain is
+    /// safe at this tile width / noise level).
+    pub max_gain_safe: f64,
+    /// The input interval was one-signed (half-range bound used).
+    pub one_signed: bool,
+}
+
+impl AbfpCert {
+    /// Zero cells can clip: certified saturation-free.
+    pub fn certified(&self) -> bool {
+        self.unsafe_cells == 0
+    }
+
+    /// Sound upper bound on the measured saturation fraction of any
+    /// batch drawn from the certified input interval.
+    pub fn clamp_bound(&self) -> f64 {
+        if self.total_cells == 0 {
+            0.0
+        } else {
+            self.unsafe_cells as f64 / self.total_cells as f64
+        }
+    }
+}
+
+/// Certify ABFP layer saturation behavior: stage `w` exactly as the
+/// device would and bound every cell's ADC input over `input`.
+pub fn certify_abfp(
+    w: &Tensor,
+    cfg: &DeviceConfig,
+    input: Interval,
+) -> Result<AbfpCert> {
+    if cfg.n == 0 {
+        bail!("certify_abfp wants a resolved tile width (n >= 1)");
+    }
+    let staged = Device::new(*cfg, 0).stage_weights(w)?;
+    let tau = cfg.n as f64;
+    let bin = cfg.output_bin() as f64;
+    let limit = tau * (1.0 - DOT_SLACK) - cfg.noise_lsb as f64 * bin;
+    let one_signed = input.one_signed();
+    let mut unsafe_cells = 0usize;
+    let mut max_gain_safe = f64::INFINITY;
+    for cell in 0..staged.rows * staged.tiles {
+        let tile = staged.tile(cell);
+        let (mut p, mut neg) = (0.0f64, 0.0f64);
+        for &q in tile {
+            if q > 0.0 {
+                p += q as f64;
+            } else {
+                neg += q as f64;
+            }
+        }
+        let b = if one_signed { p.max(-neg) } else { p - neg };
+        if cfg.gain as f64 * b > limit {
+            unsafe_cells += 1;
+        }
+        if b > 0.0 {
+            max_gain_safe = max_gain_safe.min(limit / b);
+        }
+    }
+    if limit <= 0.0 {
+        // The noise floor alone can clip: no gain is safe.
+        max_gain_safe = 0.0;
+        unsafe_cells = staged.rows * staged.tiles;
+    }
+    Ok(AbfpCert {
+        total_cells: staged.rows * staged.tiles,
+        unsafe_cells,
+        max_gain_safe,
+        one_signed,
+    })
+}
+
+/// Exact elementwise-hull matmul bounds plus the row statistics the
+/// widening formulas need, computed in f64 so the bound itself carries
+/// no accumulation error worth modeling.
+struct IdealBounds {
+    iv: Interval,
+    /// Largest per-row L1 weight norm.
+    l1_max: f64,
+    /// Largest weight magnitude.
+    w_abs_max: f64,
+}
+
+fn ideal_bounds(w: &Tensor, input: Interval) -> IdealBounds {
+    let rows = w.shape()[0];
+    let (lo, hi) = (input.lo as f64, input.hi as f64);
+    let mut out_lo = f64::INFINITY;
+    let mut out_hi = f64::NEG_INFINITY;
+    let mut l1_max = 0.0f64;
+    let mut w_abs_max = 0.0f64;
+    for j in 0..rows {
+        let (mut p, mut n) = (0.0f64, 0.0f64);
+        for &v in w.row(j) {
+            let v = v as f64;
+            if v > 0.0 {
+                p += v;
+            } else {
+                n += v;
+            }
+            w_abs_max = w_abs_max.max(v.abs());
+        }
+        // Elementwise minimum/maximum of Σ x_i w_i with x_i in [lo, hi].
+        out_lo = out_lo.min(lo * p + hi * n);
+        out_hi = out_hi.max(hi * p + lo * n);
+        l1_max = l1_max.max(p - n);
+    }
+    if out_lo > out_hi {
+        // Zero-row weight matrix (degenerate but valid).
+        out_lo = 0.0;
+        out_hi = 0.0;
+    }
+    IdealBounds {
+        iv: Interval::new(out_lo as f32, out_hi as f32),
+        l1_max,
+        w_abs_max,
+    }
+}
+
+/// Generous cover for f32 product + accumulation rounding over a
+/// K-term dot: the textbook bound is `~K·u·A·L1` with `u = 2⁻²⁴`;
+/// `1e-3` leaves a ~20x margin at the deepest reduction in the
+/// registry (K = 768).
+fn accumulation_pad(input: Interval, l1_max: f64) -> f64 {
+    1e-3 * input.abs_max() as f64 * l1_max + 1e-6
+}
+
+/// Widen an ideal interval outward by `err` (plus the generic pad).
+fn widen(iv: Interval, err: f64) -> Interval {
+    let e = err as f32;
+    Interval::new(iv.lo - e, iv.hi + e).pad()
+}
+
+/// Output interval of an exact FLOAT32 linear layer.
+pub fn float32_range(w: &Tensor, input: Interval) -> Interval {
+    let ideal = ideal_bounds(w, input);
+    widen(ideal.iv, accumulation_pad(input, ideal.l1_max))
+}
+
+/// Output interval of a digital quantized linear layer (`fixed` or
+/// `bfp`): ideal bounds widened by the per-element quantization steps.
+/// `pow2_scales` selects the BFP error model (a power-of-two scale can
+/// sit up to one full bit above the absmax, doubling the step).
+pub fn digital_range(
+    w: &Tensor,
+    bits_w: u32,
+    bits_x: u32,
+    pow2_scales: bool,
+    input: Interval,
+) -> Result<Interval> {
+    if bits_w < 2 || bits_x < 2 {
+        bail!("digital range analysis wants operand bits >= 2");
+    }
+    let ideal = ideal_bounds(w, input);
+    let k = w.shape()[1] as f64;
+    let a = input.abs_max() as f64;
+    // Per-element absolute quantization error bounds; the 1.1 factor
+    // is slack over the exact d/2 (or d for pow2 scales) step.
+    let half = if pow2_scales { 1.1 } else { 0.55 };
+    let ew = ideal.w_abs_max * delta(bits_w) as f64 * half;
+    let ex = a * delta(bits_x) as f64 * half;
+    let qerr = k * (a * ew + ideal.w_abs_max * ex + ex * ew);
+    Ok(widen(ideal.iv, qerr + accumulation_pad(input, ideal.l1_max)))
+}
+
+/// Unconditional output bound of an ABFP linear layer: per row `j`,
+/// `R_j = tau · max(Sx, 1) · Σ_t sw_t / G` — every ADC sample satisfies
+/// `|yq| <= tau` by the clamp itself, activation tile scales are at
+/// most `max(bf16(A)·(1+2⁻⁶), 1)` (1.0 is the zero-tile scale), and
+/// the weight tile scales come from the actual staging. Sound under
+/// saturation, noise, and the final BFLOAT16 output rounding (covered
+/// by the 2% outward factor).
+pub fn abfp_range(
+    w: &Tensor,
+    cfg: &DeviceConfig,
+    input: Interval,
+) -> Result<Interval> {
+    if cfg.n == 0 {
+        bail!("abfp range analysis wants a resolved tile width (n >= 1)");
+    }
+    let staged = Device::new(*cfg, 0).stage_weights(w)?;
+    let tau = cfg.n as f64;
+    let sx = (input.abs_max() as f64 * (1.0 + 1.0 / 64.0)).max(1.0);
+    let mut r = 0.0f64;
+    for j in 0..staged.rows {
+        let sw_sum: f64 = (0..staged.tiles)
+            .map(|ti| staged.scales[j * staged.tiles + ti] as f64)
+            .sum();
+        r = r.max(tau * sx * sw_sum / cfg.gain as f64);
+    }
+    r *= 1.02;
+    Ok(Interval::new(-r as f32, r as f32))
+}
+
+/// One linear layer's analysis: the output value interval plus the
+/// saturation certificate (ABFP only — the digital formats accumulate
+/// exactly and cannot clip; FLOAT32 is exact).
+#[derive(Debug, Clone, Copy)]
+pub struct LinearRange {
+    pub out: Interval,
+    pub cert: Option<AbfpCert>,
+}
+
+/// Analyze one linear layer under a **resolved** layer plan (tile
+/// width already substituted; `lp.device.n >= 1` for tiled backends).
+pub fn linear_range(lp: &LayerPlan, w: &Tensor, input: Interval) -> Result<LinearRange> {
+    match lp.backend {
+        BackendKind::Float32 => Ok(LinearRange {
+            out: float32_range(w, input),
+            cert: None,
+        }),
+        BackendKind::Fixed => Ok(LinearRange {
+            out: digital_range(w, lp.device.bits_w, lp.device.bits_x, false, input)?,
+            cert: None,
+        }),
+        BackendKind::Bfp => Ok(LinearRange {
+            out: digital_range(w, lp.device.bits_w, lp.device.bits_x, true, input)?,
+            cert: None,
+        }),
+        BackendKind::Abfp => Ok(LinearRange {
+            out: abfp_range(w, &lp.device, input)?,
+            cert: Some(certify_abfp(w, &lp.device, input)?),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NumericBackend;
+    use crate::rng::Pcg64;
+
+    fn rand_w(rng: &mut Pcg64, rows: usize, k: usize) -> Tensor {
+        Tensor::new(&[rows, k], rng.normal_vec(rows * k)).unwrap()
+    }
+
+    /// A batch sampled uniformly from `iv`.
+    fn batch_in(rng: &mut Pcg64, iv: Interval, m: usize, k: usize) -> Tensor {
+        Tensor::new(&[m, k], rng.uniform_vec(m * k, iv.lo, iv.hi)).unwrap()
+    }
+
+    #[test]
+    fn float32_range_contains_host_matmul() {
+        let mut rng = Pcg64::seeded(0xa11);
+        for iv in [Interval::new(-1.0, 2.0), Interval::new(0.0, 15.0)] {
+            let w = rand_w(&mut rng, 9, 40);
+            let out = float32_range(&w, iv);
+            let x = batch_in(&mut rng, iv, 8, 40);
+            let y = x.matmul_nt(&w).unwrap();
+            for &v in y.data() {
+                assert!(out.contains(v), "{v} not in {out} for {iv}");
+            }
+        }
+    }
+
+    #[test]
+    fn digital_range_contains_fixed_and_bfp_outputs() {
+        let mut rng = Pcg64::seeded(0xd161);
+        let iv = Interval::new(-0.5, 1.5);
+        let w = rand_w(&mut rng, 7, 50);
+        let x = batch_in(&mut rng, iv, 6, 50);
+        let cfg = DeviceConfig::new(16, (8, 8, 8), 1.0, 0.0);
+        for (kind, pow2) in [(BackendKind::Fixed, false), (BackendKind::Bfp, true)] {
+            let mut b = kind.build(cfg, 1);
+            let staged = b.stage_weights(&w).unwrap();
+            let y = b.matmul(&x, &staged).unwrap();
+            let out = digital_range(&w, 8, 8, pow2, iv).unwrap();
+            for &v in y.data() {
+                assert!(out.contains(v), "{} {v} not in {out}", kind.name());
+            }
+            assert_eq!(b.stats().saturated, 0, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn abfp_range_contains_outputs_even_when_saturating() {
+        // Gain 64 clips nearly everything; the hard bound must still
+        // contain every output (|yq| <= tau holds through the clamp).
+        let mut rng = Pcg64::seeded(0xabf9);
+        let iv = Interval::new(-2.0, 2.0);
+        let w = rand_w(&mut rng, 6, 48);
+        let x = batch_in(&mut rng, iv, 5, 48);
+        for gain in [1.0f32, 64.0] {
+            let cfg = DeviceConfig::new(16, (8, 8, 8), gain, 0.5);
+            let mut b = BackendKind::Abfp.build(cfg, 7);
+            let staged = b.stage_weights(&w).unwrap();
+            let y = b.matmul(&x, &staged).unwrap();
+            let out = abfp_range(&w, &cfg, iv).unwrap();
+            for &v in y.data() {
+                assert!(out.contains(v), "gain {gain}: {v} not in {out}");
+            }
+        }
+    }
+
+    #[test]
+    fn certificate_is_sound_and_flags_hot_gain() {
+        let mut rng = Pcg64::seeded(0xce27);
+        let iv = Interval::new(0.0, 4.0); // one-signed
+        let w = rand_w(&mut rng, 8, 64);
+        // Moderate gain on a one-signed domain: expect certification,
+        // and the certificate must imply zero measured clamps.
+        let cool = DeviceConfig::new(32, (8, 8, 8), 1.0, 0.5);
+        let cert = certify_abfp(&w, &cool, iv).unwrap();
+        assert!(cert.one_signed);
+        if cert.certified() {
+            let mut b = BackendKind::Abfp.build(cool, 3);
+            let staged = b.stage_weights(&w).unwrap();
+            for seed in 0..4u64 {
+                let mut r2 = Pcg64::seeded(seed);
+                let x = batch_in(&mut r2, iv, 16, 64);
+                b.matmul(&x, &staged).unwrap();
+            }
+            assert_eq!(b.stats().saturated, 0, "certified layer clipped");
+        }
+        // Absurd gain: every cell unsafe, bound saturates to 1.
+        let hot = DeviceConfig::new(32, (8, 8, 8), 4096.0, 0.5);
+        let cert = certify_abfp(&w, &hot, iv).unwrap();
+        assert!(!cert.certified());
+        assert!(cert.clamp_bound() > 0.9, "{cert:?}");
+        // The safe-gain hint is consistent: the certificate at a gain
+        // at or below it must certify.
+        let g = cert.max_gain_safe;
+        assert!(g.is_finite() && g > 0.0, "{cert:?}");
+        let at_hint =
+            DeviceConfig::new(32, (8, 8, 8), (g * 0.999) as f32, 0.5);
+        assert!(certify_abfp(&w, &at_hint, iv).unwrap().certified());
+    }
+
+    #[test]
+    fn one_signed_bound_is_tighter_than_mixed() {
+        let mut rng = Pcg64::seeded(0x0517);
+        let w = rand_w(&mut rng, 8, 64);
+        let cfg = DeviceConfig::new(32, (8, 8, 8), 2.0, 0.5);
+        let one = certify_abfp(&w, &cfg, Interval::new(0.0, 10.0)).unwrap();
+        let mixed = certify_abfp(&w, &cfg, Interval::new(-10.0, 10.0)).unwrap();
+        assert!(one.max_gain_safe >= mixed.max_gain_safe);
+        assert!(one.unsafe_cells <= mixed.unsafe_cells);
+    }
+
+    #[test]
+    fn zero_weights_certify_at_any_gain() {
+        let w = Tensor::zeros(&[4, 32]);
+        let cfg = DeviceConfig::new(16, (8, 8, 8), 1e6, 0.5);
+        let cert = certify_abfp(&w, &cfg, Interval::new(-1.0, 1.0)).unwrap();
+        assert!(cert.certified());
+        assert!(cert.max_gain_safe.is_infinite());
+    }
+
+    #[test]
+    fn unresolved_tile_is_rejected() {
+        let w = Tensor::zeros(&[2, 8]);
+        let cfg = DeviceConfig::new(0, (8, 8, 8), 1.0, 0.5);
+        assert!(certify_abfp(&w, &cfg, Interval::point(0.0)).is_err());
+        assert!(abfp_range(&w, &cfg, Interval::point(0.0)).is_err());
+    }
+}

@@ -218,6 +218,17 @@ impl ModelExecutor for GraphExecutor {
                         .collect(),
                 ),
             ),
+            (
+                "lint",
+                match crate::analysis::lint_graph(&self.graph, &self.plan) {
+                    Ok(r) => json::obj(vec![
+                        ("summary", json::s(&r.summary())),
+                        ("errors", json::num(r.error_count() as f64)),
+                        ("warnings", json::num(r.warn_count() as f64)),
+                    ]),
+                    Err(_) => Value::Null,
+                },
+            ),
         ])
     }
 }

@@ -377,17 +377,21 @@ fn add_slice(y: &mut Tensor, src: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn relu(v: f32) -> f32 {
+/// `pub(crate)` rather than private: the static range analyzer
+/// ([`crate::analysis`]) evaluates the *same* scalar functions at
+/// interval endpoints, so its transfer functions cannot drift from the
+/// executor's arithmetic.
+pub(crate) fn relu(v: f32) -> f32 {
     v.max(0.0)
 }
 
-fn sigmoid(v: f32) -> f32 {
+pub(crate) fn sigmoid(v: f32) -> f32 {
     1.0 / (1.0 + (-v).exp())
 }
 
 /// GELU, tanh approximation (Hendrycks & Gimpel 2016) — the form DNN
 /// runtimes ship.
-fn gelu(v: f32) -> f32 {
+pub(crate) fn gelu(v: f32) -> f32 {
     const C: f32 = 0.797_884_6; // sqrt(2/pi)
     0.5 * v * (1.0 + (C * (v + 0.044_715 * v * v * v)).tanh())
 }

@@ -205,11 +205,26 @@ impl GraphPlan {
         };
         let mut layers = BTreeMap::new();
         if let Some(lv) = v.opt("layers") {
+            let max = super::registry::max_linear_count();
             for (k, p) in lv.as_obj()? {
                 let idx: usize = k
                     .parse()
                     .map_err(|_| anyhow!("plan layer key {k:?} is not a layer index"))?;
-                layers.insert(idx, LayerPlan::from_json(p)?);
+                if idx >= max {
+                    bail!(
+                        "plan layer index {idx} is out of range for every \
+                         registry model (largest has {max} linear layers; \
+                         indices are 0-based) — it would be silently dead \
+                         config"
+                    );
+                }
+                if layers.insert(idx, LayerPlan::from_json(p)?).is_some() {
+                    bail!(
+                        "plan layer index {idx} appears more than once \
+                         (keys like \"0{idx}\" and \"{idx}\" alias the \
+                         same layer)"
+                    );
+                }
             }
         }
         Ok(GraphPlan {

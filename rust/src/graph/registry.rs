@@ -11,7 +11,7 @@
 use anyhow::{anyhow, Result};
 
 /// Static metadata for one Mini archetype.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ModelMeta {
     /// Short archetype name (the CLI / manifest / dataset key).
     pub name: &'static str,
@@ -25,6 +25,19 @@ pub struct ModelMeta {
     pub out_elems: usize,
     /// Default analog tile width for this model's device plans.
     pub default_tile: usize,
+    /// Number of `Linear` layers in the model's seeded graph — pinned
+    /// against [`super::build`] in tests so plan-index validation
+    /// cannot drift from the builders.
+    pub linear_count: usize,
+    /// Declared input-domain lower bound: every per-element input value
+    /// the model is served is promised to lie in
+    /// `[input_lo, input_hi]`. The static range analyzer
+    /// ([`crate::analysis`]) anchors its soundness contract here —
+    /// generous hulls over what the [`crate::data`] generators emit
+    /// (Gaussian-tailed generators get multi-sigma margins).
+    pub input_lo: f32,
+    /// Declared input-domain upper bound (see [`Self::input_lo`]).
+    pub input_hi: f32,
 }
 
 impl ModelMeta {
@@ -43,6 +56,9 @@ pub const REGISTRY: [ModelMeta; 6] = [
         target_shape: &[],
         out_elems: 10,
         default_tile: 128,
+        linear_count: 4,
+        input_lo: -1.0,
+        input_hi: 2.0,
     },
     ModelMeta {
         name: "ssd",
@@ -51,6 +67,9 @@ pub const REGISTRY: [ModelMeta; 6] = [
         target_shape: &[5],
         out_elems: 5,
         default_tile: 128,
+        linear_count: 3,
+        input_lo: -0.5,
+        input_hi: 1.5,
     },
     ModelMeta {
         name: "unet",
@@ -59,6 +78,9 @@ pub const REGISTRY: [ModelMeta; 6] = [
         target_shape: &[16, 16],
         out_elems: 256,
         default_tile: 128,
+        linear_count: 3,
+        input_lo: -1.5,
+        input_hi: 4.5,
     },
     ModelMeta {
         name: "gru",
@@ -67,6 +89,9 @@ pub const REGISTRY: [ModelMeta; 6] = [
         target_shape: &[],
         out_elems: 12,
         default_tile: 32,
+        linear_count: 3,
+        input_lo: 0.0,
+        input_hi: 15.0,
     },
     ModelMeta {
         name: "bert",
@@ -75,6 +100,9 @@ pub const REGISTRY: [ModelMeta; 6] = [
         target_shape: &[2],
         out_elems: 64,
         default_tile: 128,
+        linear_count: 4,
+        input_lo: 0.0,
+        input_hi: 63.0,
     },
     ModelMeta {
         name: "dlrm",
@@ -83,6 +111,9 @@ pub const REGISTRY: [ModelMeta; 6] = [
         target_shape: &[],
         out_elems: 1,
         default_tile: 32,
+        linear_count: 3,
+        input_lo: -8.0,
+        input_hi: 31.0,
     },
 ];
 
@@ -115,6 +146,15 @@ pub fn default_tile(model: &str) -> usize {
     meta(model).map(|m| m.default_tile).unwrap_or(128)
 }
 
+/// The largest `Linear` count any registry model has. A plan's explicit
+/// `layers[i]` override with `i >= max_linear_count()` is dead config
+/// for **every** servable model, so [`GraphPlan::from_json`]
+/// (crate::graph::GraphPlan) rejects it at load instead of silently
+/// ignoring it.
+pub fn max_linear_count() -> usize {
+    REGISTRY.iter().map(|m| m.linear_count).max().unwrap_or(0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +177,40 @@ mod tests {
             assert_eq!(ds.target_shape(), m.target_shape.to_vec(), "{}", m.name);
             assert!(m.in_elems() > 0 && m.out_elems > 0);
             assert!(m.default_tile >= 1);
+        }
+    }
+
+    #[test]
+    fn linear_counts_match_the_builders() {
+        // `linear_count` feeds plan-index validation and the static
+        // analyzer; it must equal what the seeded builders construct.
+        for m in &REGISTRY {
+            let g = crate::graph::build(m.name, crate::graph::builders::GRAPH_SEED)
+                .unwrap();
+            assert_eq!(g.linear_count(), m.linear_count, "{}", m.name);
+        }
+        assert_eq!(max_linear_count(), 4);
+    }
+
+    #[test]
+    fn input_domains_are_ordered_and_generous() {
+        // The declared domain must be a genuine interval, and it must
+        // contain the bulk of what the generators emit: sample a batch
+        // and require that at most a vanishing fraction of raw values
+        // fall outside (Gaussian-tailed generators may graze the edge;
+        // the analyzer's property tests clamp to the domain).
+        for m in &REGISTRY {
+            assert!(m.input_lo < m.input_hi, "{}", m.name);
+            let ds = dataset_for(m.name).unwrap();
+            let b = ds.batch(&mut crate::rng::Pcg64::seeded(0x10_d0), 64);
+            let out = b
+                .x
+                .data()
+                .iter()
+                .filter(|&&v| v < m.input_lo || v > m.input_hi)
+                .count();
+            let frac = out as f64 / b.x.len() as f64;
+            assert!(frac < 0.001, "{}: {frac} of samples outside domain", m.name);
         }
     }
 }

@@ -77,7 +77,10 @@
 //! [`rng`] (PCG64 + distributions), [`json`], [`cli`], [`benchkit`]
 //! (criterion-lite), and [`stats`].
 
+#![forbid(unsafe_code)]
+
 pub mod abfp;
+pub mod analysis;
 pub mod backend;
 pub mod benchkit;
 pub mod cli;

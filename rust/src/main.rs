@@ -54,6 +54,20 @@ USAGE: abfp <command> [flags]
                   trajectory in plan_search.{md,json}.
                   --models a,b  --budget PCT (default 1.0)  --beam N
                   --samples N  --batch N  --seed N  --smoke  --out DIR
+  lint-plan     static numeric-range analyzer (artifact-free): propagate
+                  per-layer value intervals through each model's seeded
+                  graph under the plan and certify every ABFP layer
+                  saturation-free — or bound its worst-case clamp
+                  fraction — without running a single batch. Soundness
+                  contract: a certified layer measures zero clamped
+                  conversions for any input in the declared domain.
+                  Writes lint.{md,json}; exits nonzero on any
+                  Error-level finding. The same analysis gates
+                  serve --graph --plan and eval-graph --plan (see
+                  --allow-unsound-plan) and pre-decides plan-search
+                  saturation probes.
+                  --models a,b  --plan FILE (or --backend/--tile/--gain)
+                  --out DIR
   dnf-graph     graph-level Differential Noise Finetuning
                   (artifact-free): calibrate a per-layer affine noise
                   model for the plan (regression gain + residual
@@ -84,6 +98,9 @@ USAGE: abfp <command> [flags]
                   --bind ADDR (default 0.0.0.0)  --batch N  --wait-ms MS
                   --graph  --plan FILE  --queue N  --seed N (ADC noise
                   only; graph weights are fixed for reproducibility)
+                  A --plan file is linted first: a statically saturating
+                  plan refuses to start (--allow-unsound-plan overrides;
+                  eval-graph --plan gates identically)
   bench-serve   serving benchmark: start the HTTP server over loopback
                   and drive it with the built-in load generator; report
                   achieved QPS + p50/p95 and per-model worker stats.
@@ -133,6 +150,7 @@ fn main() -> Result<()> {
         "fig5" => cmd_fig5(&args),
         "eval-graph" => cmd_eval_graph(&args),
         "plan-search" => cmd_plan_search(&args),
+        "lint-plan" => cmd_lint_plan(&args),
         "dnf-graph" => cmd_dnf_graph(&args),
         "finetune" => cmd_finetune(&args),
         "figs1" => cmd_figs1(&args),
@@ -208,6 +226,75 @@ fn graph_plan_from_args(args: &Args) -> Result<GraphPlan> {
         serving_backend_from_args(args)?,
         device_from_args(args, 0)?,
     )))
+}
+
+/// The static-analysis gate for `--plan FILE` deployments (`serve
+/// --graph --plan`, `eval-graph --plan`): an Error-level lint verdict —
+/// the plan is statically saturating — refuses to start any worker,
+/// unless `--allow-unsound-plan` is passed. Uniform-flag invocations
+/// are not gated: they are explicit experiments (the sweeps measure
+/// saturating points on purpose), not deployed plan files.
+fn lint_gate(args: &Args, sel: &[String], plan: &GraphPlan) -> Result<()> {
+    let allow = args.bool("allow-unsound-plan");
+    if allow && !args.has("plan") {
+        bail!("--allow-unsound-plan only applies with --plan FILE");
+    }
+    if !args.has("plan") {
+        return Ok(());
+    }
+    if allow {
+        eprintln!("[lint] --allow-unsound-plan: skipping the static saturation gate");
+        return Ok(());
+    }
+    for model in sel {
+        let report = abfp::analysis::lint_plan(model, plan)?;
+        if let Some(e) = report.first_error() {
+            let hint = e.hint.as_deref().unwrap_or("pick a cooler device point");
+            bail!(
+                "plan is statically saturating on {model}: {} — {hint}; \
+                 `lint-plan --plan FILE` shows the full report, \
+                 --allow-unsound-plan runs it anyway",
+                e.message
+            );
+        }
+        eprintln!("[lint] {model}: plan passes static analysis ({})", report.summary());
+    }
+    Ok(())
+}
+
+/// `lint-plan`: the static numeric-range analyzer — prove (or refute)
+/// saturation-freedom of a per-layer plan before any traffic exists.
+fn cmd_lint_plan(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "models", "plan", "backend", "backends", "f32", "tile", "gain", "out",
+        "threads",
+    ])?;
+    let out = args.str_or("out", "reports");
+    let plan = graph_plan_from_args(args)?;
+    let sel = model_list(args);
+    let mut reports = Vec::new();
+    for model in &sel {
+        let r = abfp::analysis::lint_plan(model, &plan)?;
+        eprintln!("[lint-plan] {model}: {}", r.summary());
+        reports.push(r);
+    }
+    let md = abfp::analysis::render(&reports, &plan);
+    write_report(&out, "lint.md", &md)?;
+    write_report(
+        &out,
+        "lint.json",
+        &abfp::analysis::reports_json(&reports).to_string(),
+    )?;
+    println!("{md}");
+    eprintln!("reports written to {out}/lint.{{md,json}}");
+    let errors: usize = reports.iter().map(|r| r.error_count()).sum();
+    if errors > 0 {
+        bail!(
+            "{errors} Error-level finding(s): the plan is statically \
+             saturating (details in {out}/lint.md)"
+        );
+    }
+    Ok(())
 }
 
 /// Per-model FLOAT32 pretraining budget (steps) — enough for each mini
@@ -329,11 +416,12 @@ fn cmd_fig5(args: &Args) -> Result<()> {
 fn cmd_eval_graph(args: &Args) -> Result<()> {
     args.check_known(&[
         "models", "plan", "samples", "batch", "seed", "out", "backend",
-        "backends", "f32", "tile", "gain", "threads",
+        "backends", "f32", "tile", "gain", "threads", "allow-unsound-plan",
     ])?;
     let out = args.str_or("out", "reports");
     let plan = graph_plan_from_args(args)?;
     let sel = model_list(args);
+    lint_gate(args, &sel, &plan)?;
     let samples = args.usize_or("samples", 64)?;
     let batch = args.usize_or("batch", 32)?;
     let seed = args.u64_or("seed", 0x5eed)?;
@@ -523,7 +611,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "artifacts", "ckpt", "models", "requests", "tile", "gain", "backend",
         "backends", "f32", "bind", "batch", "wait-ms", "http", "threads",
-        "graph", "plan", "queue", "seed",
+        "graph", "plan", "queue", "seed", "allow-unsound-plan",
     ])?;
     // Flags must never be silently ignored across the two worker
     // paths: `serve --plan mixed.json` without `--graph` would start
@@ -536,7 +624,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     } else {
-        for flag in ["plan", "queue", "seed"] {
+        for flag in ["plan", "queue", "seed", "allow-unsound-plan"] {
             if args.has(flag) {
                 bail!("--{flag} only applies to graph serving; add --graph");
             }
@@ -553,6 +641,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // Artifact-free: the pure-Rust layer graphs under a per-layer
         // numeric plan. Runs on a fresh checkout.
         let plan = graph_plan_from_args(args)?;
+        lint_gate(args, &sel, &plan)?;
         eprintln!(
             "[serve] starting graph workers for {sel:?} plan {{{}}}",
             plan.summary()

@@ -19,6 +19,7 @@ use super::divergence::{
     capture_linear_inputs, probe_layer, score_plan, CalibConfig, Divergence,
 };
 use crate::abfp::DeviceConfig;
+use crate::analysis::{certify_abfp, lint_plan, Interval};
 use crate::backend::BackendKind;
 use crate::energy::matmul_energy;
 use crate::graph::{build, builders::GRAPH_SEED, registry, GraphPlan, LayerPlan};
@@ -40,6 +41,12 @@ pub struct SearchConfig {
     /// Prune a (layer, candidate) whose probe saturates more than this
     /// fraction of its conversions.
     pub sat_prune: f64,
+    /// Let the static analyzer skip probes whose outcome it already
+    /// decides (digital backends cannot saturate; a certified ABFP
+    /// point provably measures zero clamps on the probe batch). The
+    /// final plan is identical either way — only probe count drops —
+    /// pinned in `tests/planner.rs`.
+    pub static_prune: bool,
     pub calib: CalibConfig,
 }
 
@@ -51,6 +58,7 @@ impl SearchConfig {
             smoke: false,
             max_passes: 32,
             sat_prune: 0.25,
+            static_prune: true,
             calib: CalibConfig::default(),
         }
     }
@@ -173,6 +181,13 @@ pub struct SearchResult {
     pub pruned: usize,
     /// Full plan scorings performed (memoized moves excluded).
     pub evals: usize,
+    /// Saturation probes actually executed.
+    pub probes: usize,
+    /// Probes the static analyzer decided without running
+    /// ([`SearchConfig::static_prune`]).
+    pub probes_skipped: usize,
+    /// Static lint verdict of `best` (compact `0E/0W/3I` form).
+    pub lint: String,
 }
 
 impl SearchResult {
@@ -197,17 +212,47 @@ pub fn run(model: &str, cfg: &SearchConfig) -> Result<SearchResult> {
     let cands = candidates(cfg.smoke);
 
     // Saturation probes: one cheap single-layer matmul per (layer,
-    // candidate) on a captured FLOAT32 input batch.
+    // candidate) on a captured FLOAT32 input batch. A probe only ever
+    // feeds the `sat_frac > sat_prune` decision, so any candidate the
+    // static analyzer can *decide* is skipped outright: digital
+    // accumulation (`fixed`/`bfp`) structurally never saturates, and a
+    // certified ABFP point — certified against the hull of the very
+    // batch the probe would run — provably measures zero clamps.
+    // Either way the verdict is "allowed", identical to running it.
+    let tile = registry::default_tile(model);
     let inputs = capture_linear_inputs(&graph, &cfg.calib)?;
     let mut allowed = vec![vec![true; cands.len()]; count];
     let mut pruned = 0usize;
+    let mut probes = 0usize;
+    let mut probes_skipped = 0usize;
     for l in 0..count {
         let w = graph.linear_weight(l).expect("index < linear_count");
+        let observed = Interval::of_slice(inputs[l].data());
         for (c, lp) in cands.iter().enumerate() {
             if lp.backend == BackendKind::Float32 {
                 continue; // exact: nothing to probe, never pruned
             }
+            if cfg.static_prune {
+                match lp.backend {
+                    BackendKind::Fixed | BackendKind::Bfp => {
+                        probes_skipped += 1;
+                        continue;
+                    }
+                    BackendKind::Abfp => {
+                        let mut dev = lp.device;
+                        if dev.n == 0 {
+                            dev.n = tile;
+                        }
+                        if certify_abfp(w, &dev, observed)?.certified() {
+                            probes_skipped += 1;
+                            continue;
+                        }
+                    }
+                    BackendKind::Float32 => unreachable!(),
+                }
+            }
             let probe = probe_layer(model, lp, l, &inputs[l], w, cfg.calib.noise_seed)?;
+            probes += 1;
             if probe.sat_frac > cfg.sat_prune {
                 allowed[l][c] = false;
                 pruned += 1;
@@ -216,7 +261,6 @@ pub fn run(model: &str, cfg: &SearchConfig) -> Result<SearchResult> {
     }
 
     // Per-(layer, candidate) energy — the descent's move ordering.
-    let tile = registry::default_tile(model);
     let mut lc = vec![vec![0.0f64; cands.len()]; count];
     for l in 0..count {
         let w = graph.linear_weight(l).expect("index < linear_count");
@@ -301,6 +345,11 @@ pub fn run(model: &str, cfg: &SearchConfig) -> Result<SearchResult> {
     }
 
     let best_plan = plan_from_assignments(&cands, &best.0);
+    // Static verdict on the winner (a probe-vetted plan should carry
+    // no Error; surfaced in plan_search.{md,json} either way).
+    let lint = lint_plan(model, &best_plan)
+        .map(|r| r.summary())
+        .unwrap_or_else(|e| format!("lint failed: {e}"));
     let best = PlanOutcome {
         cost: plan_cost(&graph, &best_plan),
         plan: best_plan,
@@ -314,6 +363,9 @@ pub fn run(model: &str, cfg: &SearchConfig) -> Result<SearchResult> {
         trajectory,
         pruned,
         evals,
+        probes,
+        probes_skipped,
+        lint,
     })
 }
 
@@ -323,7 +375,8 @@ pub fn render(results: &[SearchResult]) -> String {
         "Plan search — cheapest per-layer plan within the divergence budget",
         &[
             "model", "budget %", "start energy", "best energy", "saving",
-            "rel_err %", "top1 agree", "plan", "evals", "pruned",
+            "rel_err %", "top1 agree", "plan", "evals", "pruned", "probes",
+            "lint",
         ],
     );
     for r in results {
@@ -338,6 +391,8 @@ pub fn render(results: &[SearchResult]) -> String {
             r.best.plan.summary(),
             r.evals.to_string(),
             r.pruned.to_string(),
+            format!("{} (+{} static)", r.probes, r.probes_skipped),
+            r.lint.clone(),
         ]);
     }
     let mut out = t.to_markdown();
@@ -386,6 +441,9 @@ pub fn results_json(results: &[SearchResult]) -> Value {
                         ("saving", json::num(r.saving())),
                         ("evals", json::num(r.evals as f64)),
                         ("pruned", json::num(r.pruned as f64)),
+                        ("probes", json::num(r.probes as f64)),
+                        ("probes_skipped", json::num(r.probes_skipped as f64)),
+                        ("lint", json::s(&r.lint)),
                         (
                             "trajectory",
                             json::arr(

@@ -1,0 +1,210 @@
+//! Soundness tests for the static numeric-range analyzer
+//! (`abfp::analysis`): the intervals it predicts must *contain* what
+//! the executor actually computes, and a layer it certifies
+//! saturation-free must measure exactly zero clamped ADC conversions —
+//! on real batches drawn from each model's declared input domain,
+//! through the same staged backends graph serving uses.
+
+use abfp::abfp::DeviceConfig;
+use abfp::analysis::lint_plan;
+use abfp::backend::{BackendKind, NumericBackend, StagedWeights};
+use abfp::graph::executor::layer_seed;
+use abfp::graph::{
+    build, builders::GRAPH_SEED, registry, FlowScratch, GraphPlan, LayerPlan,
+    MODEL_NAMES,
+};
+use abfp::rng::Pcg64;
+use abfp::tensor::Tensor;
+
+const NOISE_SEED: u64 = 0x50f7;
+const BATCHES: usize = 3;
+const ROWS: usize = 8;
+
+fn dev(n: usize, bits: u32, gain: f32) -> DeviceConfig {
+    DeviceConfig::new(n, (bits, bits, bits), gain, 0.5)
+}
+
+/// The plan roster the soundness sweep runs every archetype under:
+/// exact, mixed edges-float32 + analog interior, and both digital
+/// backends (tile 0 = per-model registry default throughout).
+fn plans() -> Vec<(&'static str, GraphPlan)> {
+    vec![
+        ("float32", GraphPlan::float32()),
+        (
+            "edges-f32/abfp8-g2",
+            GraphPlan::edges_float32(LayerPlan::new(BackendKind::Abfp, dev(0, 8, 2.0))),
+        ),
+        (
+            "bfp8",
+            GraphPlan::uniform(LayerPlan::new(BackendKind::Bfp, dev(0, 8, 1.0))),
+        ),
+        (
+            "fixed8",
+            GraphPlan::uniform(LayerPlan::new(BackendKind::Fixed, dev(0, 8, 1.0))),
+        ),
+    ]
+}
+
+/// Stage executor-equivalent backends for every `Linear` layer of
+/// `model` under `plan` — same tile resolution, same per-layer noise
+/// seeds as `GraphExecutor`.
+fn stage(
+    model: &str,
+    plan: &GraphPlan,
+    count: usize,
+) -> (Vec<Box<dyn NumericBackend>>, Vec<StagedWeights>) {
+    let graph = build(model, GRAPH_SEED).unwrap();
+    let tile = registry::default_tile(model);
+    let mut backends = Vec::new();
+    let mut staged = Vec::new();
+    for li in 0..count {
+        let mut lp = plan.resolve(li, count);
+        if lp.device.n == 0 {
+            lp.device.n = tile;
+        }
+        let mut be = lp.backend.build(lp.device, layer_seed(model, NOISE_SEED, li));
+        staged.push(be.stage_weights(graph.linear_weight(li).unwrap()).unwrap());
+        backends.push(be);
+    }
+    (backends, staged)
+}
+
+/// A batch drawn uniformly from the model's declared input domain.
+fn domain_batch(model: &str, in_elems: usize, rng: &mut Pcg64) -> Tensor {
+    let m = registry::meta(model).unwrap();
+    Tensor::new(
+        &[ROWS, in_elems],
+        rng.uniform_vec(ROWS * in_elems, m.input_lo, m.input_hi),
+    )
+    .unwrap()
+}
+
+#[test]
+fn predicted_intervals_contain_every_observed_activation() {
+    // The containment half of the soundness contract, on all six
+    // archetypes under the full plan roster: every value entering a
+    // Linear layer lies inside the analyzer's predicted input interval,
+    // and every model output lies inside the predicted output interval.
+    for model in MODEL_NAMES {
+        let graph = build(model, GRAPH_SEED).unwrap();
+        let count = graph.linear_count();
+        for (name, plan) in plans() {
+            let report = lint_plan(model, &plan).unwrap();
+            assert_eq!(report.linears.len(), count, "{model}/{name}");
+            let (mut backends, staged) = stage(model, &plan, count);
+            let mut rng = Pcg64::seeded(0xd0_0d ^ graph.in_elems() as u64);
+            let mut scratch = FlowScratch::new();
+            for _ in 0..BATCHES {
+                let x = domain_batch(model, graph.in_elems(), &mut rng);
+                let out = graph
+                    .forward_with(x, &mut scratch, |li, input, out| {
+                        let pred = report.linears[li].input;
+                        for &v in input.data() {
+                            assert!(
+                                pred.contains(v),
+                                "{model}/{name} layer {li}: observed input {v} \
+                                 outside predicted {pred}"
+                            );
+                        }
+                        *out = backends[li].matmul(input, &staged[li])?;
+                        Ok(())
+                    })
+                    .unwrap();
+                for &v in out.data() {
+                    assert!(
+                        report.output.contains(v),
+                        "{model}/{name}: output {v} outside predicted {}",
+                        report.output
+                    );
+                }
+                scratch.recycle_tensor(out);
+            }
+            // The certification half: a certified layer measured zero
+            // clamped conversions across every batch.
+            for li in 0..count {
+                if report.linears[li].certified {
+                    assert_eq!(
+                        backends[li].stats().saturated,
+                        0,
+                        "{model}/{name} layer {li}: certified saturation-free \
+                         but the executor clamped"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn clamp_bound_dominates_the_measured_clamp_fraction() {
+    // The acceptance case run end to end: uniform abfp8 at gain 16 on
+    // gru (the PR-6 DNF-rescue plan) saturates hard empirically — the
+    // static per-layer clamp bound must sit at or above what each
+    // layer actually measures, and the analyzer must flag the plan.
+    let model = "gru";
+    let plan = GraphPlan::uniform(LayerPlan::new(BackendKind::Abfp, dev(0, 8, 16.0)));
+    let report = lint_plan(model, &plan).unwrap();
+    assert!(report.error_count() >= 1, "{:?}", report.diags);
+
+    let graph = build(model, GRAPH_SEED).unwrap();
+    let count = graph.linear_count();
+    let (mut backends, staged) = stage(model, &plan, count);
+    let mut rng = Pcg64::seeded(0xc1a5);
+    let mut scratch = FlowScratch::new();
+    for _ in 0..BATCHES {
+        let x = domain_batch(model, graph.in_elems(), &mut rng);
+        let out = graph
+            .forward_with(x, &mut scratch, |li, input, out| {
+                *out = backends[li].matmul(input, &staged[li])?;
+                Ok(())
+            })
+            .unwrap();
+        scratch.recycle_tensor(out);
+    }
+    let measured0 = backends[0].stats().sat_frac();
+    assert!(
+        measured0 > 0.2,
+        "the reference saturating plan stopped saturating: {measured0}"
+    );
+    for li in 0..count {
+        let measured = backends[li].stats().sat_frac();
+        let bound = report.linears[li].clamp_bound;
+        assert!(
+            measured <= bound + 1e-12,
+            "layer {li}: measured clamp fraction {measured} exceeds the \
+             static bound {bound}"
+        );
+    }
+}
+
+#[test]
+fn certified_moderate_plan_serves_clean() {
+    // The other acceptance direction: an abfp12 gain-2 interior plan on
+    // gru lints without Error and its certified first layer measures
+    // zero clamps (the plan shape plan-search accepts).
+    let plan = GraphPlan::uniform(LayerPlan::new(BackendKind::Abfp, dev(0, 12, 2.0)));
+    let report = lint_plan("gru", &plan).unwrap();
+    assert_eq!(report.error_count(), 0, "{:?}", report.diags);
+    assert!(report.linears[0].certified);
+
+    let graph = build("gru", GRAPH_SEED).unwrap();
+    let count = graph.linear_count();
+    let (mut backends, staged) = stage("gru", &plan, count);
+    let mut rng = Pcg64::seeded(0xfeed);
+    let mut scratch = FlowScratch::new();
+    for _ in 0..BATCHES {
+        let x = domain_batch("gru", graph.in_elems(), &mut rng);
+        let out = graph
+            .forward_with(x, &mut scratch, |li, input, out| {
+                *out = backends[li].matmul(input, &staged[li])?;
+                Ok(())
+            })
+            .unwrap();
+        scratch.recycle_tensor(out);
+    }
+    for li in 0..count {
+        if report.linears[li].certified {
+            assert_eq!(backends[li].stats().saturated, 0, "layer {li}");
+        }
+    }
+}

@@ -75,6 +75,65 @@ fn search_is_deterministic() {
 }
 
 #[test]
+fn static_pruning_probes_less_and_matches() {
+    // The ISSUE acceptance criterion for the planner integration:
+    // static analysis may only *skip* probes whose verdict it proves
+    // (digital backends, certified ABFP points) — so at a fixed seed
+    // the final plan, its score, and the descent itself are identical
+    // with static pruning on or off; only the probe count drops.
+    let mut on = SearchConfig::smoke(2.0);
+    on.static_prune = true;
+    let mut off = on;
+    off.static_prune = false;
+
+    let a = search::run("gru", &on).unwrap();
+    let b = search::run("gru", &off).unwrap();
+
+    assert_eq!(a.best.plan, b.best.plan);
+    assert_eq!(a.best.divergence.rel_err_pct, b.best.divergence.rel_err_pct);
+    assert_eq!(a.evals, b.evals);
+    assert_eq!(a.pruned, b.pruned);
+    assert_eq!(a.trajectory.len(), b.trajectory.len());
+    assert!(
+        a.probes < b.probes,
+        "static pruning skipped nothing: {} vs {} probes",
+        a.probes,
+        b.probes
+    );
+    assert_eq!(a.probes + a.probes_skipped, b.probes + b.probes_skipped);
+    assert_eq!(b.probes_skipped, 0);
+    // The smoke roster carries 2 digital candidates per layer on gru's
+    // 3 layers: at least those 6 probes are decided statically.
+    assert!(a.probes_skipped >= 6, "{} skipped", a.probes_skipped);
+    // The winner carries its lint verdict, and it is Error-free (the
+    // probes already vetoed saturating assignments).
+    assert!(a.lint.starts_with("0E"), "lint verdict: {}", a.lint);
+}
+
+#[test]
+fn plan_json_rejects_dead_and_duplicate_layer_indices() {
+    // Satellite: explicit per-layer indices beyond every registry
+    // model's linear count are dead config (resolve would never read
+    // them) — reject at parse time, naming the bound.
+    let base = r#"{"default": {"backend": "float32"}, "layers": {"9": {"backend": "fixed"}}}"#;
+    let err = GraphPlan::parse(base).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+    assert!(err.contains('9'), "{err}");
+
+    // Duplicate indices (distinct JSON keys aliasing one layer, e.g.
+    // "1" and "01") would silently drop one assignment — reject.
+    let dup = r#"{"default": {"backend": "float32"}, "layers": {"1": {"backend": "fixed"}, "01": {"backend": "bfp"}}}"#;
+    let err = GraphPlan::parse(dup).unwrap_err().to_string();
+    assert!(err.contains("more than once"), "{err}");
+
+    // In-range explicit indices still parse and resolve.
+    let ok = r#"{"default": {"backend": "float32"}, "layers": {"2": {"backend": "fixed"}}}"#;
+    let plan = GraphPlan::parse(ok).unwrap();
+    assert_eq!(plan.resolve(2, 4).backend, BackendKind::Fixed);
+    assert_eq!(plan.resolve(1, 4).backend, BackendKind::Float32);
+}
+
+#[test]
 fn dnf_rescues_a_budget_rejected_plan() {
     // The second ISSUE acceptance criterion: a saturating plan (uniform
     // ABFP at gain 16 — the ADC clips and the output shrinks) fails a
