@@ -3,12 +3,11 @@
 //! bottleneck (the executable dominates; see EXPERIMENTS.md §Perf).
 
 use std::sync::mpsc;
-use std::time::Duration;
 
 use abfp::abfp::DeviceConfig;
 use abfp::backend::BackendKind;
 use abfp::benchkit::{black_box, Bench};
-use abfp::coordinator::{collect_batch, BatchPolicy};
+use abfp::coordinator::{collect_next, BatchPolicy, RequestQueue};
 use abfp::graph::{build, builders::GRAPH_SEED, GraphExecutor, GraphPlan, LayerPlan};
 use abfp::rng::Pcg64;
 use abfp::tensor::Tensor;
@@ -16,20 +15,19 @@ use abfp::tensor::Tensor;
 fn main() {
     let mut b = Bench::new("coordinator");
 
-    // Pure batcher: hot queue, how fast can we group 32k items?
+    // Pure batcher: hot queue, how fast can the continuous collector
+    // snapshot 32k items into batches?
+    let no_deadline = |_: &u32| None;
     b.run("batcher_hot_queue_32k_items", 32_768, || {
-        let (tx, rx) = mpsc::sync_channel(40_000);
+        let q = RequestQueue::new(40_000);
         for i in 0..32_768u32 {
-            tx.send(i).unwrap();
+            q.try_push(i).map_err(|_| "full").unwrap();
         }
-        drop(tx);
-        let policy = BatchPolicy {
-            max_batch: 32,
-            max_wait: Duration::from_millis(100),
-        };
+        q.close();
+        let policy = BatchPolicy::new(32, 100).unwrap();
         let mut total = 0usize;
-        while let Some(batch) = collect_batch(&rx, policy) {
-            total += batch.len();
+        while let Some(c) = collect_next(&q, &policy, no_deadline) {
+            total += c.batch.len();
         }
         assert_eq!(black_box(total), 32_768);
     });

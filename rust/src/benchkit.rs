@@ -73,6 +73,9 @@ pub struct Bench {
     smoke: bool,
     /// Derived metrics ([`Bench::note`]): speedups, ratios, counts.
     notes: Vec<(String, f64)>,
+    /// Structured attachments ([`Bench::attach`]): whole JSON sections
+    /// (e.g. a load report per serving mode) carried alongside timings.
+    sections: Vec<(String, Value)>,
 }
 
 /// True when `BENCHKIT_SMOKE` requests the reduced CI sampling.
@@ -98,6 +101,7 @@ impl Bench {
             samples: 12,
             smoke,
             notes: Vec::new(),
+            sections: Vec::new(),
         }
     }
 
@@ -150,6 +154,13 @@ impl Bench {
         self.notes.push((key.to_string(), value));
     }
 
+    /// Attach a structured JSON section to the report (last write per
+    /// key wins at read time via object key order; keys should be
+    /// unique).
+    pub fn attach(&mut self, key: &str, value: Value) {
+        self.sections.push((key.to_string(), value));
+    }
+
     /// The machine-readable report: suite, sampling mode, every case's
     /// timing summary, and the derived metrics.
     pub fn to_json(&self) -> Value {
@@ -182,6 +193,10 @@ impl Bench {
                         .map(|(k, v)| (k.clone(), json::num(*v)))
                         .collect(),
                 ),
+            ),
+            (
+                "sections",
+                Value::Obj(self.sections.iter().cloned().collect()),
             ),
         ])
     }
@@ -240,7 +255,10 @@ mod tests {
             black_box(0u64);
         });
         b.note("speedup_t4", 2.5);
+        b.attach("load", json::obj(vec![("qps", json::num(10.0))]));
         let j = b.to_json().to_string();
+        assert!(j.contains("\"sections\""), "{j}");
+        assert!(j.contains("\"load\":{\"qps\":10"), "{j}");
         assert!(j.contains("\"suite\":\"jsuite\""), "{j}");
         assert!(j.contains("\"name\":\"jsuite/case_a\""), "{j}");
         assert!(j.contains("\"median_ns\""), "{j}");

@@ -1,26 +1,78 @@
 //! The dynamic batcher: group queued requests into one device execution.
+//!
+//! Two strategies share one entry point ([`collect_next`]):
+//!
+//! * [`BatchMode::Continuous`] (the default since the event-loop
+//!   refactor): block only for the *first* request, then snapshot
+//!   whatever else is queued **right now** (up to `max_batch`) and
+//!   execute immediately. Requests that arrive while a batch is on the
+//!   device queue up and join the next snapshot the moment it finishes
+//!   — the executor never idles waiting for a batch to "fill", and
+//!   batch size tracks queue depth automatically (deep queue → full
+//!   batches, idle queue → batch-of-1 at minimum latency).
+//! * [`BatchMode::Gather`] (the pre-refactor behaviour, kept as the
+//!   measurable A/B baseline for `bench-serve`): after the first
+//!   request, keep waiting up to `max_wait` for the batch to fill
+//!   before executing. Under moderate load this idles the executor for
+//!   up to `max_wait` per batch.
+//!
+//! Both modes shed **deadline-expired** requests before execution: a
+//! request whose per-request deadline (set from
+//! [`BatchPolicy::deadline`] at submit time) has already passed is
+//! returned in [`Collected::shed`] instead of the batch, so the worker
+//! answers it 503 immediately rather than spending device time on an
+//! answer the client has stopped waiting for.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use super::queue::{PopWait, RequestQueue};
+
+/// How the worker assembles batches; see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Snapshot the queue the moment the previous batch finishes.
+    Continuous,
+    /// Wait up to `max_wait` for the batch to fill (legacy baseline).
+    Gather,
+}
+
+impl BatchMode {
+    /// The `/v1/models` detail spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BatchMode::Continuous => "continuous",
+            BatchMode::Gather => "gather",
+        }
+    }
+}
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Maximum requests per batch (the artifact's compiled batch size).
     pub max_batch: usize,
-    /// Maximum time the first request in a batch may wait.
+    /// Gather mode: maximum time the first request in a batch may wait
+    /// for the batch to fill. Continuous mode ignores it (the whole
+    /// point is to never hold the executor idle on purpose).
     pub max_wait: Duration,
+    /// Per-request service deadline measured from submit;
+    /// `Duration::ZERO` disables shedding. Requests still queued when
+    /// it expires are shed with 503 instead of executed.
+    pub deadline: Duration,
+    pub mode: BatchMode,
 }
 
 impl BatchPolicy {
     /// Validated constructor: `max_batch == 0` is a config error, not a
     /// policy. (It used to slip through and silently degrade the worker
-    /// to single-item "batches" — `collect_batch` always holds the
-    /// first request, so the cap never engaged and every device
-    /// execution ran at batch 1 while the caller believed it had
-    /// disabled batching entirely.)
+    /// to single-item "batches" — the collector always holds the first
+    /// request, so the cap never engaged and every device execution ran
+    /// at batch 1 while the caller believed it had disabled batching
+    /// entirely.) Defaults to [`BatchMode::Continuous`] with no
+    /// deadline; `max_wait_ms` only matters if the policy is switched
+    /// to gather mode.
     pub fn new(max_batch: usize, max_wait_ms: u64) -> Result<BatchPolicy> {
         if max_batch == 0 {
             bail!("batch policy: max_batch must be >= 1 (got 0)");
@@ -28,90 +80,196 @@ impl BatchPolicy {
         Ok(BatchPolicy {
             max_batch,
             max_wait: Duration::from_millis(max_wait_ms),
+            deadline: Duration::ZERO,
+            mode: BatchMode::Continuous,
         })
+    }
+
+    /// The legacy gather-then-execute policy (the `bench-serve` A/B
+    /// baseline).
+    pub fn gather(max_batch: usize, max_wait_ms: u64) -> Result<BatchPolicy> {
+        Ok(BatchPolicy {
+            mode: BatchMode::Gather,
+            ..BatchPolicy::new(max_batch, max_wait_ms)?
+        })
+    }
+
+    /// Builder: set the per-request service deadline (0 disables).
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> BatchPolicy {
+        self.deadline = Duration::from_millis(deadline_ms);
+        self
     }
 }
 
-/// Collect one batch: blocks for the first item, then drains either
-/// until `max_batch` items are held or `max_wait` has elapsed since the
-/// first item arrived. Returns `None` when the channel is closed and
-/// empty (shutdown).
-pub fn collect_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
-    let first = rx.recv().ok()?;
-    let deadline = Instant::now() + policy.max_wait;
-    let mut batch = vec![first];
-    while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
+/// One collection round: the batch to execute plus the requests shed
+/// for blowing their deadline while queued (answer those 503, charge
+/// them no device time).
+pub struct Collected<T> {
+    pub batch: Vec<T>,
+    pub shed: Vec<T>,
+}
+
+/// Collect one batch from `queue` under `policy`. Blocks for the first
+/// item; `deadline_of` exposes each item's absolute deadline (or
+/// `None`). Returns `None` when the queue is closed and fully drained
+/// (worker shutdown). A returned `Collected` may have an empty `batch`
+/// (everything collected was shed) — the caller answers the shed
+/// requests and collects again.
+pub fn collect_next<T>(
+    queue: &RequestQueue<T>,
+    policy: &BatchPolicy,
+    deadline_of: impl Fn(&T) -> Option<Instant>,
+) -> Option<Collected<T>> {
+    let mut batch: Vec<T> = Vec::new();
+    match policy.mode {
+        BatchMode::Continuous => {
+            batch.push(queue.pop_wait()?);
+            queue.drain_into(&mut batch, policy.max_batch - 1);
         }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+        BatchMode::Gather => {
+            batch.push(queue.pop_wait()?);
+            let window = Instant::now() + policy.max_wait;
+            while batch.len() < policy.max_batch {
+                match queue.pop_until(window) {
+                    PopWait::Item(item) => batch.push(item),
+                    PopWait::TimedOut | PopWait::Closed => break,
+                }
+            }
         }
     }
-    Some(batch)
+    // Deadline shedding (both modes): expired requests never reach the
+    // executor. The comparison uses one `now` for the whole round so a
+    // batch is split consistently.
+    let now = Instant::now();
+    let mut shed = Vec::new();
+    if batch
+        .iter()
+        .any(|item| deadline_of(item).is_some_and(|d| d <= now))
+    {
+        let (expired, live): (Vec<T>, Vec<T>) = batch
+            .into_iter()
+            .partition(|item| deadline_of(item).is_some_and(|d| d <= now));
+        shed = expired;
+        batch = live;
+    }
+    Some(Collected { batch, shed })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+    use std::sync::Arc;
     use std::thread;
 
-    #[test]
-    fn fills_to_max_batch_when_queue_is_hot() {
-        let (tx, rx) = mpsc::channel();
-        for i in 0..10 {
-            tx.send(i).unwrap();
-        }
-        let b = collect_batch(&rx, BatchPolicy::new(4, 50).unwrap()).unwrap();
-        assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = collect_batch(&rx, BatchPolicy::new(4, 50).unwrap()).unwrap();
-        assert_eq!(b, vec![4, 5, 6, 7]);
+    fn no_deadline(_: &u32) -> Option<Instant> {
+        None
     }
 
     #[test]
-    fn deadline_flushes_partial_batch() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(1).unwrap();
+    fn continuous_fills_from_a_hot_queue_without_waiting() {
+        let q = RequestQueue::new(64);
+        for i in 0..10u32 {
+            q.try_push(i).map_err(|_| ()).unwrap();
+        }
+        let policy = BatchPolicy::new(4, 50).unwrap();
         let t0 = Instant::now();
-        let b = collect_batch(&rx, BatchPolicy::new(8, 30).unwrap()).unwrap();
-        assert_eq!(b, vec![1]);
+        let c = collect_next(&q, &policy, no_deadline).unwrap();
+        assert_eq!(c.batch, vec![0, 1, 2, 3]);
+        assert!(c.shed.is_empty());
+        let c = collect_next(&q, &policy, no_deadline).unwrap();
+        assert_eq!(c.batch, vec![4, 5, 6, 7]);
+        // No gather wait: both rounds complete far inside max_wait.
+        assert!(t0.elapsed() < Duration::from_millis(40));
+    }
+
+    #[test]
+    fn continuous_executes_a_single_request_immediately() {
+        // The latency half of the continuous contract: an idle queue
+        // yields a batch of 1 with no artificial wait.
+        let q = RequestQueue::new(8);
+        q.try_push(9u32).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let c =
+            collect_next(&q, &BatchPolicy::new(8, 100).unwrap(), no_deadline).unwrap();
+        assert_eq!(c.batch, vec![9]);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn gather_mode_waits_out_its_window() {
+        let q = RequestQueue::new(8);
+        q.try_push(1u32).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let c =
+            collect_next(&q, &BatchPolicy::gather(8, 30).unwrap(), no_deadline).unwrap();
+        assert_eq!(c.batch, vec![1]);
         assert!(t0.elapsed() >= Duration::from_millis(25));
-        drop(tx);
+    }
+
+    #[test]
+    fn gather_stragglers_join_before_the_window_closes() {
+        let q = Arc::new(RequestQueue::new(8));
+        q.try_push(0u32).map_err(|_| ()).unwrap();
+        let qc = q.clone();
+        let sender = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            qc.try_push(1).map_err(|_| ()).unwrap();
+            thread::sleep(Duration::from_millis(5));
+            qc.try_push(2).map_err(|_| ()).unwrap();
+        });
+        let c =
+            collect_next(&q, &BatchPolicy::gather(3, 200).unwrap(), no_deadline).unwrap();
+        assert_eq!(c.batch, vec![0, 1, 2]);
+        sender.join().unwrap();
     }
 
     #[test]
     fn none_on_shutdown() {
-        let (tx, rx) = mpsc::channel::<u32>();
-        drop(tx);
-        assert!(collect_batch(&rx, BatchPolicy::new(4, 10).unwrap()).is_none());
+        let q = RequestQueue::<u32>::new(4);
+        q.close();
+        assert!(
+            collect_next(&q, &BatchPolicy::new(4, 10).unwrap(), no_deadline).is_none()
+        );
     }
 
     #[test]
     fn zero_max_batch_is_rejected_at_construction() {
         // Regression: BatchPolicy::new(0, _) used to construct fine and
-        // quietly serve degenerate single-item batches (collect_batch
-        // always holds the first request). A 0 cap is a config error.
+        // quietly serve degenerate single-item batches. A 0 cap is a
+        // config error.
         let err = BatchPolicy::new(0, 10).unwrap_err();
         assert!(err.to_string().contains("max_batch"), "{err}");
         assert!(BatchPolicy::new(1, 0).is_ok());
+        assert!(BatchPolicy::gather(0, 10).is_err());
     }
 
     #[test]
-    fn stragglers_join_before_deadline() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(0).unwrap();
-        let sender = thread::spawn(move || {
-            thread::sleep(Duration::from_millis(5));
-            tx.send(1).unwrap();
-            thread::sleep(Duration::from_millis(5));
-            tx.send(2).unwrap();
-        });
-        let b = collect_batch(&rx, BatchPolicy::new(3, 200).unwrap()).unwrap();
-        assert_eq!(b, vec![0, 1, 2]);
-        sender.join().unwrap();
+    fn expired_requests_are_shed_not_executed() {
+        // Items carry their own deadline; one is already expired.
+        let q = RequestQueue::new(8);
+        let now = Instant::now();
+        let deadlines = [
+            now - Duration::from_millis(5), // expired
+            now + Duration::from_secs(60),  // live
+            now - Duration::from_millis(1), // expired
+        ];
+        for i in 0..3u32 {
+            q.try_push(i).map_err(|_| ()).unwrap();
+        }
+        let policy = BatchPolicy::new(8, 0).unwrap().with_deadline_ms(100);
+        let c = collect_next(&q, &policy, |i| Some(deadlines[*i as usize])).unwrap();
+        assert_eq!(c.batch, vec![1]);
+        assert_eq!(c.shed, vec![0, 2]);
+    }
+
+    #[test]
+    fn all_expired_yields_an_empty_batch_round() {
+        let q = RequestQueue::new(8);
+        q.try_push(0u32).map_err(|_| ()).unwrap();
+        let expired = Instant::now() - Duration::from_millis(1);
+        let c = collect_next(&q, &BatchPolicy::new(4, 0).unwrap(), |_| Some(expired))
+            .unwrap();
+        assert!(c.batch.is_empty());
+        assert_eq!(c.shed, vec![0]);
     }
 }

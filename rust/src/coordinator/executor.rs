@@ -18,6 +18,15 @@
 //! startup cost (engine load, checkpoint read, weight staging) happens
 //! in the factory, before the worker reports ready; `execute` is the
 //! request hot path and stages nothing.
+//!
+//! Under continuous batching (the default — see
+//! [`BatchMode`](super::BatchMode)) the batch size an executor sees is
+//! the queue depth at collection time, clamped to
+//! [`ModelExecutor::max_batch`]: full batches under load, batch-of-1
+//! when idle. An executor must therefore be efficient across the whole
+//! `1..=max_batch()` range, not just at its compiled batch — which is why
+//! [`ModelExecutor::pack_rows`] lets artifact executors take their
+//! fixed-row padding in the pack instead of repacking per batch size.
 
 use std::rc::Rc;
 use std::time::Duration;

@@ -1,6 +1,33 @@
-//! The HTTP/1.1 front door: a dependency-free (`std::net` only) server
-//! that exposes the in-process [`Router`] to the network — the MLPerf
-//! datacenter-inference "server scenario" boundary.
+//! The HTTP/1.1 front door: a dependency-free (`std::net` + vendored
+//! `netpoll`) server that exposes the in-process [`Router`] to the
+//! network — the MLPerf datacenter-inference "server scenario"
+//! boundary.
+//!
+//! ## The readiness event loop
+//!
+//! Connections are **state machines, not threads**. A small fixed pool
+//! of event-loop threads ([`HttpConfig::pool`], default 4) shares one
+//! nonblocking listener; each loop multiplexes its connections over
+//! `poll(2)` readiness (vendored `netpoll` — the crate root forbids
+//! unsafe, so the one syscall lives there). Reading a request, waiting
+//! on a worker, or flushing a response parks *state*, never a thread:
+//! 1024 idle keep-alive connections cost memory and fds, not threads,
+//! and a slow-loris client is reaped by [`HttpConfig::conn_deadline`]
+//! without ever occupying one.
+//!
+//! A predict submits through [`Router::try_submit_notify`] with a UDP
+//! waker hook: the worker pokes the loop's waker socket right after the
+//! response lands on the oneshot channel, so loops sleep in `poll`
+//! instead of spinning on `try_recv`. Per connection the machine is:
+//!
+//! ```text
+//!        read         head+body        try_submit_notify
+//!   Idle ----> ReadHead ----> ReadBody ----> InFlight --(waker)--+
+//!    ^  (100-continue appended while the body streams)           |
+//!    |                                                           v
+//!    +------------------- keep-alive / pipelining <---------- Write
+//!                    (`connection: close` / protocol error -> Linger)
+//! ```
 //!
 //! Routes:
 //!
@@ -10,10 +37,12 @@
 //!   `total_ms`, `batch_size`.
 //! * `GET /v1/models` — the served-model roster (`models`, a name
 //!   array) plus per-model executor metadata (`detail`: executor kind,
-//!   shapes; graph workers add layer count and the per-layer numeric
-//!   plan).
+//!   shapes, the worker's `batching` mode; graph workers add layer
+//!   count and the per-layer numeric plan).
 //! * `GET /healthz` — liveness (`ok`).
-//! * `GET /metrics` — Prometheus text format from [`ServerStats`].
+//! * `GET /metrics` — Prometheus text format from [`ServerStats`] +
+//!   [`HttpStats`] (queue depth, batch-size histogram, deadline sheds,
+//!   wakeups).
 //!
 //! Error-status contract (pinned by `tests/http.rs`):
 //!
@@ -22,31 +51,34 @@
 //! | malformed HTTP / bad JSON / bad shape   | 400    |
 //! | unknown model or route                  | 404    |
 //! | unsupported method / transfer encoding  | 405 / 400 |
-//! | idle / trickled request past [`CONN_DEADLINE`] | close / 408 |
+//! | idle / trickled request past the deadline | close / 408 |
 //! | body over [`MAX_BODY`]                  | 413    |
 //! | worker queue full ([`SubmitError::Busy`]) | 429 (+ `retry-after: 1`) |
 //! | executor failure / worker dropped       | 500    |
-//! | worker gone                             | 503    |
+//! | worker gone / shed past service deadline | 503   |
 //!
-//! Backpressure: connection threads submit through
-//! [`Router::try_submit`], so a saturated model queue answers 429
-//! immediately instead of parking the connection thread — the accept
-//! loop never blocks behind a slow model. Keep-alive is honoured
-//! (HTTP/1.1 default; `connection: close` respected); each connection
-//! gets its own thread, reading with a short poll timeout so graceful
-//! [`HttpServer::shutdown`] completes in-flight requests and then
-//! closes every socket within ~2 poll intervals.
+//! Backpressure: the loop submits through the nonblocking
+//! [`Router::try_submit_notify`], so a saturated model queue answers
+//! 429 immediately — no loop thread ever parks behind a slow model.
+//! Keep-alive and pipelining are honoured (HTTP/1.1 default;
+//! `connection: close` respected); graceful [`HttpServer::shutdown`]
+//! stops accepting, completes every in-flight request, flushes, and
+//! closes — bounded by a drain grace period.
 
 use std::io::{ErrorKind, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::net::{SocketAddr, TcpListener, TcpStream, UdpSocket};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
+use netpoll::{Poller, READABLE, WRITABLE};
 
-use super::server::{Response, Router, ServerStats, SubmitError};
+use super::server::{
+    Notify, RequestError, Response, Router, ServerStats, SubmitError,
+};
 use crate::json;
 use crate::tensor::Tensor;
 
@@ -54,55 +86,145 @@ use crate::tensor::Tensor;
 const MAX_HEAD: usize = 64 * 1024;
 /// Request-body cap (a 1M-element f32 example in JSON is ~12 MB).
 pub const MAX_BODY: usize = 64 * 1024 * 1024;
-/// Socket poll interval: how often idle connection threads notice the
-/// shutdown flag.
-const POLL: Duration = Duration::from_millis(200);
-/// Write timeout: a client that stops reading (full kernel send buffer,
-/// no progress for this long) errors the write instead of wedging its
-/// connection thread — which would otherwise make the thread-joining
-/// graceful shutdown hang forever. This also bounds shutdown latency
-/// behind stalled writers.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
-/// Per-request read deadline: a keep-alive connection may sit idle (or
-/// trickle a partial request) for at most this long before the thread
-/// closes it — otherwise slow-loris clients pin one thread + fd each
-/// forever (idle costs a thread in the per-connection model).
-const CONN_DEADLINE: Duration = Duration::from_secs(60);
+/// Post-error drain window: after a protocol-error response the write
+/// side half-closes and the read side discards the rest of the upload
+/// for at most this long, so close-with-unread-data RST can't destroy
+/// the error response before the client reads it.
+const LINGER: Duration = Duration::from_millis(500);
 
 const CT_JSON: &str = "application/json";
 const CT_TEXT: &str = "text/plain; charset=utf-8";
 /// Prometheus exposition format version.
 const CT_PROM: &str = "text/plain; version=0.0.4; charset=utf-8";
 
+/// Event-loop tuning. [`HttpConfig::default`] is what
+/// [`HttpServer::bind`] uses; [`HttpServer::bind_with`] takes an
+/// explicit one (the soak tests shorten `conn_deadline` to reap
+/// slow-loris clients fast).
+#[derive(Debug, Clone, Copy)]
+pub struct HttpConfig {
+    /// Event-loop threads sharing the listener. The server's whole
+    /// thread budget is `pool` + one worker per model — independent of
+    /// connection count.
+    pub pool: usize,
+    /// Per-request read deadline: a keep-alive connection may sit idle
+    /// (closed quietly) or trickle a partial request (408) for at most
+    /// this long.
+    pub conn_deadline: Duration,
+    /// A client that stops reading (full kernel send buffer, zero write
+    /// progress for this long) is dropped instead of parking its
+    /// response forever.
+    pub write_stall: Duration,
+    /// Per-loop connection cap; accepts pause (backlog holds) above it.
+    pub max_conns: usize,
+    /// Graceful-shutdown drain bound: in-flight requests get this long
+    /// to complete and flush before the loop force-closes.
+    pub shutdown_grace: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            pool: 4,
+            conn_deadline: Duration::from_secs(60),
+            write_stall: Duration::from_secs(5),
+            max_conns: 16 * 1024,
+            shutdown_grace: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Front-door counters (atomic; shared by every loop thread), exposed
+/// through `GET /metrics` alongside the per-model [`ServerStats`].
+#[derive(Debug, Default)]
+pub struct HttpStats {
+    wakeups: AtomicU64,
+    accepted: AtomicU64,
+    open: AtomicU64,
+    reaped: AtomicU64,
+}
+
+impl HttpStats {
+    /// Event-loop `poll` returns across the pool.
+    pub fn wakeups(&self) -> u64 {
+        self.wakeups.load(Ordering::Relaxed)
+    }
+
+    /// Connections accepted since startup.
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Connections open right now (gauge).
+    pub fn open(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Connections force-closed by deadline / write stall (slow-loris
+    /// and stopped-reader reaping).
+    pub fn reaped(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
+    }
+}
+
 /// The listening server. Dropping it (or calling
-/// [`HttpServer::shutdown`]) stops the accept loop, joins every
-/// connection thread (in-flight requests complete), and releases the
-/// port.
+/// [`HttpServer::shutdown`]) stops accepting, drains in-flight
+/// requests, joins the loop pool, and releases the port.
 pub struct HttpServer {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    loops: Vec<JoinHandle<()>>,
+    /// Each loop's waker address — nudged at shutdown so loops notice
+    /// the flag mid-`poll` instead of at the next timeout.
+    wakers: Vec<SocketAddr>,
+    stats: Arc<HttpStats>,
 }
 
 impl HttpServer {
     /// Bind and start serving `router` on `addr` (e.g. `"0.0.0.0:8080"`;
     /// port 0 picks an ephemeral port — read it back with
-    /// [`HttpServer::addr`]).
+    /// [`HttpServer::addr`]) under the default [`HttpConfig`].
     pub fn bind(router: Arc<Router>, addr: &str) -> Result<HttpServer> {
+        HttpServer::bind_with(router, addr, HttpConfig::default())
+    }
+
+    /// [`HttpServer::bind`] with explicit event-loop tuning.
+    pub fn bind_with(
+        router: Arc<Router>,
+        addr: &str,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let conns = Arc::new(Mutex::new(Vec::new()));
-        let (sd, cn) = (shutdown.clone(), conns.clone());
-        let accept = std::thread::Builder::new()
-            .name("abfp-http-accept".to_string())
-            .spawn(move || accept_loop(listener, router, sd, cn))?;
+        let stats = Arc::new(HttpStats::default());
+        let pool = cfg.pool.max(1);
+        let mut loops = Vec::with_capacity(pool);
+        let mut wakers = Vec::with_capacity(pool);
+        for i in 0..pool {
+            let listener = listener.try_clone()?;
+            // Loopback UDP waker pair: the loop polls `rx`; workers poke
+            // through the connected `tx` (see `UdpNotify`).
+            let waker_rx = UdpSocket::bind("127.0.0.1:0")?;
+            waker_rx.set_nonblocking(true)?;
+            let waker_tx = UdpSocket::bind("127.0.0.1:0")?;
+            waker_tx.connect(waker_rx.local_addr()?)?;
+            wakers.push(waker_rx.local_addr()?);
+            let notify: Arc<dyn Notify> = Arc::new(UdpNotify(waker_tx));
+            let (r, sd, st) = (router.clone(), shutdown.clone(), stats.clone());
+            loops.push(
+                std::thread::Builder::new()
+                    .name(format!("abfp-http-loop-{i}"))
+                    .spawn(move || event_loop(listener, waker_rx, notify, r, st, sd, cfg))?,
+            );
+        }
         Ok(HttpServer {
             addr: local,
             shutdown,
-            accept: Some(accept),
-            conns,
+            loops,
+            wakers,
+            stats,
         })
     }
 
@@ -111,20 +233,25 @@ impl HttpServer {
         self.addr
     }
 
-    /// Graceful shutdown: stop accepting, let in-flight requests finish,
-    /// join every thread. Idempotent.
+    /// Front-door counters (wakeups, connections).
+    pub fn stats(&self) -> Arc<HttpStats> {
+        self.stats.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, let in-flight requests finish
+    /// and flush (bounded by [`HttpConfig::shutdown_grace`]), join the
+    /// loop pool. Idempotent.
     pub fn shutdown(&mut self) {
         if !self.shutdown.swap(true, Ordering::SeqCst) {
-            // Nudge the accept loop out of its blocking accept().
-            TcpStream::connect(self.addr).ok();
+            // Nudge every loop out of a long idle `poll`.
+            if let Ok(nudge) = UdpSocket::bind("127.0.0.1:0") {
+                for w in &self.wakers {
+                    nudge.send_to(&[1], w).ok();
+                }
+            }
         }
-        if let Some(j) = self.accept.take() {
+        for j in self.loops.drain(..) {
             j.join().ok();
-        }
-        let handles: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *self.conns.lock().unwrap());
-        for h in handles {
-            h.join().ok();
         }
     }
 }
@@ -135,38 +262,120 @@ impl Drop for HttpServer {
     }
 }
 
-fn accept_loop(
+/// The worker-side wakeup hook: a connected loopback UDP socket whose
+/// datagrams make the owning loop's `poll` return. Payload is
+/// irrelevant — readability is the doorbell.
+struct UdpNotify(UdpSocket);
+
+impl Notify for UdpNotify {
+    fn notify(&self) {
+        self.0.send(&[1]).ok();
+    }
+}
+
+/// One event-loop thread: accept + per-connection state machines over a
+/// rebuilt-per-iteration `poll(2)` set (level-triggered, allocation-free
+/// once warm).
+fn event_loop(
     listener: TcpListener,
+    waker: UdpSocket,
+    notify: Arc<dyn Notify>,
     router: Arc<Router>,
+    stats: Arc<HttpStats>,
     shutdown: Arc<AtomicBool>,
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    cfg: HttpConfig,
 ) {
-    for stream in listener.incoming() {
-        if shutdown.load(Ordering::SeqCst) {
-            break;
+    let mut poller = Poller::new();
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut accept_backoff: Option<Instant> = None;
+    let mut drain_deadline: Option<Instant> = None;
+    loop {
+        let stopping = shutdown.load(Ordering::SeqCst);
+        let now = Instant::now();
+        if stopping {
+            let dd = *drain_deadline.get_or_insert(now + cfg.shutdown_grace);
+            if conns.is_empty() || now >= dd {
+                stats.open.fetch_sub(conns.len() as u64, Ordering::Relaxed);
+                return; // drained (or grace expired: force-close)
+            }
         }
-        let stream = match stream {
-            Ok(s) => s,
-            Err(_) => {
-                // Persistent accept errors (EMFILE when fds are
-                // exhausted by the per-connection model) would
-                // otherwise busy-spin this loop at 100% CPU, starving
-                // the very connections that could release descriptors.
-                std::thread::sleep(Duration::from_millis(10));
-                continue;
-            }
+
+        poller.clear();
+        let accepting = !stopping
+            && conns.len() < cfg.max_conns
+            && !accept_backoff.is_some_and(|until| now < until);
+        let lslot = if accepting {
+            Some(poller.register(&listener, READABLE))
+        } else {
+            None
         };
-        let (r, sd) = (router.clone(), shutdown.clone());
-        match std::thread::Builder::new()
-            .name("abfp-http-conn".to_string())
-            .spawn(move || handle_conn(stream, &r, &sd))
-        {
-            Ok(join) => {
-                let mut c = conns.lock().unwrap();
-                c.retain(|h| !h.is_finished()); // prune completed threads
-                c.push(join);
+        let wslot = poller.register(&waker, READABLE);
+        for conn in conns.iter_mut() {
+            conn.slot = poller.register(&conn.stream, conn.interest());
+        }
+
+        // Waiting on a worker is waker-driven, but keep a short
+        // fallback tick so a lost datagram degrades to latency, not a
+        // hang; deadlines only need coarse ticks.
+        let any_pending = conns.iter().any(|c| c.pending.is_some());
+        let timeout = if any_pending || stopping {
+            Duration::from_millis(10)
+        } else if !conns.is_empty() {
+            Duration::from_millis(50)
+        } else {
+            Duration::from_millis(500)
+        };
+        if poller.wait(Some(timeout)).is_err() {
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        stats.wakeups.fetch_add(1, Ordering::Relaxed);
+
+        if poller.readable(wslot) {
+            let mut sink = [0u8; 64];
+            while waker.recv(&mut sink).is_ok() {}
+        }
+
+        if lslot.is_some_and(|ls| poller.readable(ls)) {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nodelay(true).ok();
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        stats.accepted.fetch_add(1, Ordering::Relaxed);
+                        stats.open.fetch_add(1, Ordering::Relaxed);
+                        conns.push(Conn::new(stream));
+                        if conns.len() >= cfg.max_conns {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(_) => {
+                        // EMFILE and friends: back off instead of
+                        // busy-spinning the loop at 100% CPU.
+                        accept_backoff = Some(Instant::now() + Duration::from_millis(20));
+                        break;
+                    }
+                }
             }
-            Err(e) => eprintln!("http: could not spawn connection thread: {e}"),
+        }
+
+        let now = Instant::now();
+        let mut i = 0;
+        while i < conns.len() {
+            let readable = poller.readable(conns[i].slot);
+            let writable = poller.writable(conns[i].slot);
+            let keep = conns[i].step(
+                readable, writable, now, stopping, &router, &stats, &notify, &cfg,
+            );
+            if keep {
+                i += 1;
+            } else {
+                conns.swap_remove(i);
+                stats.open.fetch_sub(1, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -177,6 +386,26 @@ struct HttpRequest {
     path: String,
     keep_alive: bool,
     body: Vec<u8>,
+}
+
+/// Head fields cached while the body streams in (the head is scanned
+/// and parsed exactly once per request).
+struct ParsedHead {
+    head_end: usize,
+    method: String,
+    path: String,
+    keep_alive: bool,
+    content_length: usize,
+    expect_continue: bool,
+}
+
+/// A predict in flight on the worker: the oneshot receiver plus what
+/// the response writer needs once it lands.
+struct Pending {
+    rx: Receiver<Result<Response, RequestError>>,
+    model: String,
+    head_only: bool,
+    keep_alive: bool,
 }
 
 /// A protocol-level failure mapped to a status for the client.
@@ -194,76 +423,260 @@ impl HttpError {
     }
 }
 
-fn handle_conn(mut stream: TcpStream, router: &Router, shutdown: &AtomicBool) {
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(POLL)).ok();
-    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        let req = match read_request(&mut stream, &mut buf, shutdown) {
-            Ok(Some(r)) => r,
-            Ok(None) => return, // clean close, or shutdown while idle
-            Err(e) => {
-                write_response(
-                    &mut stream,
-                    e.status,
-                    CT_JSON,
-                    error_body(&e.msg).as_bytes(),
-                    false,
-                    false,
-                )
-                .ok();
-                // The client may still be mid-upload (413 from the head
-                // alone): drain briefly so close-with-unread-data RST
-                // can't destroy the error response before it is read.
-                linger_close(&mut stream);
-                return;
-            }
-        };
-        let keep_alive = req.keep_alive && !shutdown.load(Ordering::SeqCst);
-        let (status, ctype, body) = route(router, &req);
-        // HEAD gets GET's status and headers (content-length included)
-        // with the body elided, per HTTP/1.1 — so a `HEAD /healthz`
-        // liveness probe sees the same 200 a GET would.
-        let head_only = req.method == "HEAD";
-        if write_response(
-            &mut stream,
-            status,
-            ctype,
-            body.as_bytes(),
-            keep_alive,
-            head_only,
-        )
-        .is_err()
-            || !keep_alive
-        {
-            return;
-        }
-    }
+/// One connection's state machine. All I/O is nonblocking; the loop
+/// drives `step` off poll readiness.
+struct Conn {
+    stream: TcpStream,
+    /// This iteration's poll slot (stale between registrations; a fresh
+    /// conn's `usize::MAX` reads as not-ready, which is safe).
+    slot: usize,
+    /// Inbound bytes carried across reads (keep-alive pipelining).
+    buf: Vec<u8>,
+    /// Resumable `\r\n\r\n` scan offset into `buf`.
+    scanned: usize,
+    parsed: Option<ParsedHead>,
+    /// `100 Continue` already sent for the in-progress request.
+    continued: bool,
+    pending: Option<Pending>,
+    /// Outbound bytes not yet accepted by the kernel.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// When the current request phase started (reset per request and
+    /// when the write buffer drains) — the conn-deadline clock.
+    t0: Instant,
+    /// Last write progress (the write-stall clock).
+    wrote: Instant,
+    peer_eof: bool,
+    close_after_flush: bool,
+    /// Close with a half-close + read-drain (protocol errors), so the
+    /// error response survives the client's remaining upload.
+    linger: bool,
+    /// Draining mode: write side shut, discarding reads until EOF or
+    /// the linger deadline.
+    draining: Option<Instant>,
 }
 
-/// Read one full request (head + `content-length` body) from the
-/// connection. `buf` carries bytes across calls (keep-alive
-/// pipelining). `Ok(None)` means the peer closed between requests or
-/// the server is shutting down with no request in flight.
-fn read_request(
-    stream: &mut TcpStream,
-    buf: &mut Vec<u8>,
-    shutdown: &AtomicBool,
-) -> Result<Option<HttpRequest>, HttpError> {
-    let t0 = Instant::now();
-    let mut continued = false;
-    // The head is scanned and parsed exactly once: `scanned` resumes the
-    // terminator search where the last read left off, and `parsed`
-    // caches the head fields while the body streams in. (Rescanning
-    // from offset 0 per 8 KB read made a streamed B-byte body cost
-    // O(B^2 / chunk) — pathological at the 64 MB cap.)
-    let mut scanned = 0usize;
-    let mut parsed: Option<(usize, HttpRequest, usize, bool)> = None;
-    loop {
-        if parsed.is_none() {
-            if let Some(head_end) = find_head_end_from(buf, scanned) {
-                let head = std::str::from_utf8(&buf[..head_end])
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        let now = Instant::now();
+        Conn {
+            stream,
+            slot: usize::MAX,
+            buf: Vec::new(),
+            scanned: 0,
+            parsed: None,
+            continued: false,
+            pending: None,
+            out: Vec::new(),
+            out_pos: 0,
+            t0: now,
+            wrote: now,
+            peer_eof: false,
+            close_after_flush: false,
+            linger: false,
+            draining: None,
+        }
+    }
+
+    /// What this connection needs `poll` to watch for right now.
+    fn interest(&self) -> u8 {
+        if self.draining.is_some() {
+            return READABLE;
+        }
+        let mut interest = 0;
+        // Reads pause while a predict is in flight (response ordering +
+        // natural backpressure: the kernel buffers pipelined bytes) and
+        // once the inbound buffer holds a max-size request.
+        if self.pending.is_none()
+            && !self.peer_eof
+            && !self.close_after_flush
+            && self.buf.len() <= MAX_HEAD + MAX_BODY + 4
+        {
+            interest |= READABLE;
+        }
+        if self.out_pos < self.out.len() {
+            interest |= WRITABLE;
+        }
+        interest
+    }
+
+    /// Drive the state machine one tick. Returns false when the
+    /// connection should be dropped.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        readable: bool,
+        writable: bool,
+        now: Instant,
+        stopping: bool,
+        router: &Router,
+        http: &HttpStats,
+        notify: &Arc<dyn Notify>,
+        cfg: &HttpConfig,
+    ) -> bool {
+        if let Some(deadline) = self.draining {
+            return self.drain_tick(readable, now, deadline);
+        }
+
+        // 1. A completed predict becomes a response (waker-driven).
+        if let Some(p) = &self.pending {
+            match p.rx.try_recv() {
+                Err(TryRecvError::Empty) => {}
+                outcome => {
+                    let p = self.pending.take().unwrap();
+                    let (status, body) = match outcome {
+                        Ok(Ok(resp)) => (200, response_body(&p.model, &resp)),
+                        Ok(Err(e @ RequestError::Exec(_))) => {
+                            (500, error_body(&e.to_string()))
+                        }
+                        Ok(Err(e @ RequestError::DeadlineExceeded { .. })) => {
+                            (503, error_body(&e.to_string()))
+                        }
+                        Err(_) => (500, error_body("worker dropped the request")),
+                    };
+                    self.push_response(
+                        status,
+                        CT_JSON,
+                        body.as_bytes(),
+                        p.keep_alive,
+                        p.head_only,
+                    );
+                    if !p.keep_alive {
+                        self.close_after_flush = true;
+                    }
+                    self.t0 = now;
+                }
+            }
+        }
+
+        // 2. Pull whatever the socket has (up to the buffer cap).
+        if readable && self.interest() & READABLE != 0 {
+            let mut chunk = [0u8; 8192];
+            loop {
+                match self.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        self.peer_eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.buf.extend_from_slice(&chunk[..n]);
+                        if self.buf.len() > MAX_HEAD + MAX_BODY + 4 {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => return false,
+                }
+            }
+        }
+
+        // 3. Turn buffered bytes into requests (pipelining: keep going
+        // until a predict goes in flight or the bytes run dry).
+        while self.pending.is_none() && !self.close_after_flush && self.draining.is_none()
+        {
+            match self.try_extract() {
+                Err(e) => {
+                    // Protocol error: answer it, then half-close +
+                    // drain so the response survives the rest of the
+                    // upload.
+                    let body = error_body(&e.msg);
+                    self.push_response(e.status, CT_JSON, body.as_bytes(), false, false);
+                    self.close_after_flush = true;
+                    self.linger = true;
+                }
+                Ok(None) => break,
+                Ok(Some(req)) => {
+                    self.t0 = now;
+                    self.dispatch(req, stopping, router, http, notify);
+                }
+            }
+        }
+
+        // 4. Flush; a dead write side ends the connection.
+        if self.flush(now).is_err() {
+            return false;
+        }
+        if self.out_pos >= self.out.len() && !self.out.is_empty() {
+            self.out.clear();
+            self.out_pos = 0;
+            self.t0 = now;
+        }
+        let _ = writable; // readiness consumed implicitly by flush()
+
+        // 5. Close / reap decisions.
+        let flushed = self.out.is_empty();
+        if self.close_after_flush && flushed {
+            if self.linger {
+                self.stream.shutdown(std::net::Shutdown::Write).ok();
+                self.draining = Some(now + LINGER);
+                return true;
+            }
+            return false;
+        }
+        if !flushed && now.duration_since(self.wrote) > cfg.write_stall {
+            http.reaped.fetch_add(1, Ordering::Relaxed);
+            return false; // client stopped reading
+        }
+        if self.pending.is_none() && flushed {
+            let partial = !self.buf.is_empty() || self.parsed.is_some();
+            if self.peer_eof {
+                return false; // clean close (any partial tail is void)
+            }
+            if stopping {
+                if partial {
+                    // Half-received request at shutdown: answer and go.
+                    let body = error_body("server shutting down");
+                    self.push_response(503, CT_JSON, body.as_bytes(), false, false);
+                    self.close_after_flush = true;
+                    self.linger = true;
+                    return true;
+                }
+                return false; // idle at shutdown
+            }
+            if now.duration_since(self.t0) > cfg.conn_deadline {
+                http.reaped.fetch_add(1, Ordering::Relaxed);
+                if partial {
+                    // Trickled (slow-loris) request: 408 then close.
+                    let body = error_body("request timed out");
+                    self.push_response(408, CT_JSON, body.as_bytes(), false, false);
+                    self.close_after_flush = true;
+                    self.linger = true;
+                    return true;
+                }
+                return false; // idle keep-alive: close quietly
+            }
+        }
+        true
+    }
+
+    /// Linger mode: discard the client's remaining upload until EOF or
+    /// the deadline, then drop.
+    fn drain_tick(&mut self, readable: bool, now: Instant, deadline: Instant) -> bool {
+        if now >= deadline {
+            return false;
+        }
+        if readable {
+            let mut sink = [0u8; 8192];
+            loop {
+                match self.stream.read(&mut sink) {
+                    Ok(0) => return false, // client saw the close
+                    Ok(_) => {}            // discard
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => return false,
+                }
+            }
+        }
+        true
+    }
+
+    /// Try to carve one complete request out of `buf`. `Ok(None)` =
+    /// need more bytes (a `100 Continue` may have been queued).
+    fn try_extract(&mut self) -> Result<Option<HttpRequest>, HttpError> {
+        if self.parsed.is_none() {
+            if let Some(head_end) = find_head_end_from(&self.buf, self.scanned) {
+                let head = std::str::from_utf8(&self.buf[..head_end])
                     .map_err(|_| HttpError::new(400, "non-UTF-8 request head"))?;
                 let (method, path, keep_alive, content_length, expect_continue) =
                     parse_head(head)?;
@@ -273,74 +686,458 @@ fn read_request(
                         format!("body of {content_length} bytes exceeds {MAX_BODY}"),
                     ));
                 }
-                let req = HttpRequest {
+                self.parsed = Some(ParsedHead {
+                    head_end,
                     method,
                     path,
                     keep_alive,
-                    body: Vec::new(),
-                };
-                parsed = Some((head_end, req, content_length, expect_continue));
-            } else if buf.len() > MAX_HEAD {
+                    content_length,
+                    expect_continue,
+                });
+            } else if self.buf.len() > MAX_HEAD {
                 return Err(HttpError::new(413, "request head too large"));
             } else {
                 // Resume the \r\n\r\n search just before the tail (the
-                // terminator may straddle a chunk boundary).
-                scanned = buf.len().saturating_sub(3);
+                // terminator may straddle a read boundary).
+                self.scanned = self.buf.len().saturating_sub(3);
+                return Ok(None);
             }
         }
-        let head_scalars = parsed
-            .as_ref()
-            .map(|(head_end, _, content_length, expect_continue)| {
-                (*head_end, *content_length, *expect_continue)
-            });
-        if let Some((head_end, content_length, expect_continue)) = head_scalars {
-            let total = head_end + 4 + content_length;
-            if buf.len() >= total {
-                let (_, mut req, _, _) = parsed.take().unwrap();
-                req.body = buf[head_end + 4..total].to_vec();
-                buf.drain(..total);
-                return Ok(Some(req));
+        let p = self.parsed.as_ref().unwrap();
+        let total = p.head_end + 4 + p.content_length;
+        if self.buf.len() < total {
+            // Body still in flight: honour `expect: 100-continue` once
+            // so clients like curl start sending it.
+            if p.expect_continue && !self.continued {
+                self.continued = true;
+                self.out.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
             }
-            // Body still in flight: honour `expect: 100-continue` once so
-            // clients like curl start sending it.
-            if expect_continue && !continued {
-                continued = true;
-                stream
-                    .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
-                    .map_err(|e| HttpError::new(400, format!("write failed: {e}")))?;
+            return Ok(None);
+        }
+        let p = self.parsed.take().unwrap();
+        let body = self.buf[p.head_end + 4..total].to_vec();
+        self.buf.drain(..total);
+        self.scanned = 0;
+        self.continued = false;
+        Ok(Some(HttpRequest {
+            method: p.method,
+            path: p.path,
+            keep_alive: p.keep_alive,
+            body,
+        }))
+    }
+
+    /// Route one complete request: predicts go in flight on the worker,
+    /// everything else is answered synchronously.
+    fn dispatch(
+        &mut self,
+        req: HttpRequest,
+        stopping: bool,
+        router: &Router,
+        http: &HttpStats,
+        notify: &Arc<dyn Notify>,
+    ) {
+        // HEAD gets GET's status and headers (content-length included)
+        // with the body elided, per HTTP/1.1 — so a `HEAD /healthz`
+        // liveness probe sees the same 200 a GET would.
+        let head_only = req.method == "HEAD";
+        let keep_alive = req.keep_alive && !stopping;
+        let predict_model = (req.method == "POST")
+            .then(|| {
+                req.path
+                    .strip_prefix("/v1/models/")
+                    .and_then(|rest| rest.strip_suffix(":predict"))
+            })
+            .flatten()
+            .filter(|m| !m.is_empty());
+        if let Some(model) = predict_model {
+            match start_predict(router, model, &req.body, notify) {
+                Ok(rx) => {
+                    self.pending = Some(Pending {
+                        rx,
+                        model: model.to_string(),
+                        head_only,
+                        keep_alive,
+                    });
+                    return;
+                }
+                Err((status, body)) => {
+                    self.push_response(
+                        status,
+                        CT_JSON,
+                        body.as_bytes(),
+                        keep_alive,
+                        head_only,
+                    );
+                }
+            }
+        } else {
+            let (status, ctype, body) = route_sync(router, http, &req);
+            self.push_response(status, ctype, body.as_bytes(), keep_alive, head_only);
+        }
+        if !keep_alive {
+            self.close_after_flush = true;
+        }
+    }
+
+    /// Queue one response (status line + headers + body) for writing.
+    fn push_response(
+        &mut self,
+        status: u16,
+        ctype: &str,
+        body: &[u8],
+        keep_alive: bool,
+        head_only: bool,
+    ) {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        let retry = if status == 429 { "retry-after: 1\r\n" } else { "" };
+        let head = format!(
+            "HTTP/1.1 {status} {}\r\ncontent-type: {ctype}\r\ncontent-length: {}\r\nconnection: {conn}\r\n{retry}\r\n",
+            reason(status),
+            body.len()
+        );
+        self.out.extend_from_slice(head.as_bytes());
+        if !head_only {
+            self.out.extend_from_slice(body);
+        }
+    }
+
+    /// Nonblocking flush of the outbound buffer.
+    fn flush(&mut self, now: Instant) -> std::io::Result<()> {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.out_pos += n;
+                    self.wrote = now;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
             }
         }
-        let mut chunk = [0u8; 8192];
-        match stream.read(&mut chunk) {
-            Ok(0) => {
-                if buf.is_empty() {
-                    return Ok(None);
-                }
-                return Err(HttpError::new(400, "connection closed mid-request"));
-            }
-            Ok(n) => buf.extend_from_slice(&chunk[..n]),
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock
-                    || e.kind() == ErrorKind::TimedOut =>
-            {
-                if shutdown.load(Ordering::SeqCst) {
-                    if buf.is_empty() {
-                        return Ok(None);
-                    }
-                    // Half-received request at shutdown: drop it rather
-                    // than stall the join.
-                    return Err(HttpError::new(503, "server shutting down"));
-                }
-                if t0.elapsed() > CONN_DEADLINE {
-                    if buf.is_empty() {
-                        return Ok(None); // idle keep-alive: close quietly
-                    }
-                    return Err(HttpError::new(408, "request timed out"));
-                }
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(HttpError::new(400, format!("read failed: {e}"))),
+        Ok(())
+    }
+}
+
+/// Parse + submit a predict; `Err` is an immediate `(status, body)`.
+fn start_predict(
+    router: &Router,
+    model: &str,
+    body: &[u8],
+    notify: &Arc<dyn Notify>,
+) -> Result<Receiver<Result<Response, RequestError>>, (u16, String)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, error_body("body is not UTF-8")))?;
+    let value =
+        json::parse(text).map_err(|e| (400, error_body(&format!("invalid JSON: {e}"))))?;
+    let x = parse_tensor(&value).map_err(|e| (400, error_body(&e.to_string())))?;
+    router
+        .try_submit_notify(model, x, Some(notify.clone()))
+        .map_err(|e| {
+            let status = match &e {
+                SubmitError::UnknownModel(_) => 404,
+                SubmitError::BadShape(_) => 400,
+                SubmitError::Busy(_) => 429,
+                SubmitError::Gone(_) => 503,
+            };
+            (status, error_body(&e.to_string()))
+        })
+}
+
+/// Dispatch a non-predict request: `(status, content-type, body)`.
+/// HEAD routes exactly like GET (the caller elides the body when
+/// writing).
+fn route_sync(
+    router: &Router,
+    http: &HttpStats,
+    req: &HttpRequest,
+) -> (u16, &'static str, String) {
+    let method = match req.method.as_str() {
+        "HEAD" => "GET",
+        m => m,
+    };
+    match (method, req.path.as_str()) {
+        ("GET", "/healthz") => (200, CT_TEXT, "ok\n".to_string()),
+        ("GET", "/v1/models") => (200, CT_JSON, models_body(router)),
+        ("GET", "/metrics") => (200, CT_PROM, metrics_body(router, http)),
+        ("POST", _) => (404, CT_JSON, error_body("no such route")),
+        ("GET", _) => (404, CT_JSON, error_body("no such route")),
+        _ => (405, CT_JSON, error_body("method not allowed")),
+    }
+}
+
+/// Request tensor: `{"data": [...], "shape": [...]?}`.
+fn parse_tensor(v: &json::Value) -> Result<Tensor> {
+    let data_v = v
+        .get("data")
+        .map_err(|_| anyhow!(r#"body must be {{"data": [...], "shape": [...]?}}"#))?;
+    let data: Vec<f32> = data_v
+        .as_arr()?
+        .iter()
+        .map(|n| n.as_f64().map(|f| f as f32))
+        .collect::<Result<_>>()?;
+    let shape = match v.opt("shape") {
+        Some(s) => s.as_shape()?,
+        None => vec![data.len()],
+    };
+    Tensor::new(&shape, data)
+}
+
+fn tensor_json(t: &Tensor) -> json::Value {
+    json::obj(vec![
+        (
+            "shape",
+            json::arr(t.shape().iter().map(|&d| json::num(d as f64)).collect()),
+        ),
+        (
+            "data",
+            json::arr(t.data().iter().map(|&v| json::num(v as f64)).collect()),
+        ),
+    ])
+}
+
+fn response_body(model: &str, r: &Response) -> String {
+    json::obj(vec![
+        ("model", json::s(model)),
+        ("outputs", json::arr(r.outputs.iter().map(tensor_json).collect())),
+        ("queue_ms", json::num(r.queue_ms)),
+        ("total_ms", json::num(r.total_ms)),
+        ("batch_size", json::num(r.batch_size as f64)),
+    ])
+    .to_string()
+}
+
+fn error_body(msg: &str) -> String {
+    json::obj(vec![("error", json::s(msg))]).to_string()
+}
+
+fn models_body(router: &Router) -> String {
+    let names = router.served_models();
+    // `models` stays a plain name array (the stable roster contract
+    // pinned by tests/http.rs); `detail` carries each worker executor's
+    // self-description — kind, shapes, batching mode, and for graph
+    // workers the layer count and per-layer numeric plan.
+    let mut detail = std::collections::BTreeMap::new();
+    for m in &names {
+        if let Ok(meta) = router.model_meta(m) {
+            detail.insert(m.clone(), meta);
         }
+    }
+    json::obj(vec![
+        (
+            "models",
+            json::arr(names.iter().map(|m| json::s(m)).collect()),
+        ),
+        ("detail", json::Value::Obj(detail)),
+    ])
+    .to_string()
+}
+
+/// Prometheus exposition of every worker's [`ServerStats`] plus the
+/// front door's [`HttpStats`].
+fn metrics_body(router: &Router, http: &HttpStats) -> String {
+    use std::fmt::Write as _;
+
+    let mut rows: Vec<(String, ServerStats)> = Vec::new();
+    for m in router.served_models() {
+        if let Ok(s) = router.stats(&m) {
+            rows.push((m, s));
+        }
+    }
+    let mut out = String::new();
+    emit(
+        &mut out,
+        "abfp_requests_total",
+        "counter",
+        "Requests served successfully.",
+        &rows,
+        |s| s.requests as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_failed_requests_total",
+        "counter",
+        "Requests answered with an execution error.",
+        &rows,
+        |s| s.failed_requests as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_shed_requests_total",
+        "counter",
+        "Requests shed 503 for blowing their service deadline while queued.",
+        &rows,
+        |s| s.shed_requests as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_batches_total",
+        "counter",
+        "Device batches executed successfully.",
+        &rows,
+        |s| s.batches as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_failed_batches_total",
+        "counter",
+        "Device batches that failed to execute.",
+        &rows,
+        |s| s.failed_batches as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_worker_wakeups_total",
+        "counter",
+        "Worker batch-collection rounds (continuous-batching wakeups).",
+        &rows,
+        |s| s.wakeups as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_queue_depth",
+        "gauge",
+        "Requests queued on the worker right now.",
+        &rows,
+        |s| s.queue_depth as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_batch_size_mean",
+        "gauge",
+        "Mean requests per executed batch.",
+        &rows,
+        |s| s.mean_batch,
+    );
+    emit(
+        &mut out,
+        "abfp_exec_ms_mean",
+        "gauge",
+        "Mean device execution time per batch (ms).",
+        &rows,
+        |s| s.mean_exec_ms,
+    );
+
+    // Executed-batch size histogram (cumulative buckets, Prometheus
+    // histogram convention: _bucket/_sum/_count).
+    let _ = writeln!(out, "# HELP abfp_batch_size Executed batch sizes.");
+    let _ = writeln!(out, "# TYPE abfp_batch_size histogram");
+    for (m, s) in &rows {
+        let mut cum = 0u64;
+        for (le, n) in &s.batch_hist {
+            cum += n;
+            let le = if le.is_infinite() {
+                "+Inf".to_string()
+            } else {
+                format!("{le}")
+            };
+            let _ = writeln!(
+                out,
+                "abfp_batch_size_bucket{{model=\"{m}\",le=\"{le}\"}} {cum}"
+            );
+        }
+        // Sum of batch sizes == successfully served requests.
+        let _ = writeln!(out, "abfp_batch_size_sum{{model=\"{m}\"}} {}", s.requests);
+        let _ = writeln!(out, "abfp_batch_size_count{{model=\"{m}\"}} {}", s.batches);
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP abfp_latency_ms Request latency (queue + batch wait + execution)."
+    );
+    let _ = writeln!(out, "# TYPE abfp_latency_ms gauge");
+    for (m, s) in &rows {
+        let _ = writeln!(
+            out,
+            "abfp_latency_ms{{model=\"{m}\",quantile=\"0.5\"}} {}",
+            fmt_prom(s.p50_ms)
+        );
+        let _ = writeln!(
+            out,
+            "abfp_latency_ms{{model=\"{m}\",quantile=\"0.95\"}} {}",
+            fmt_prom(s.p95_ms)
+        );
+    }
+
+    // Front-door (event-loop) counters: no model label.
+    let scalars: [(&str, &str, &str, u64); 4] = [
+        (
+            "abfp_http_wakeups_total",
+            "counter",
+            "Event-loop poll wakeups across the pool.",
+            http.wakeups(),
+        ),
+        (
+            "abfp_http_connections_accepted_total",
+            "counter",
+            "Connections accepted.",
+            http.accepted(),
+        ),
+        (
+            "abfp_http_connections_open",
+            "gauge",
+            "Connections open right now.",
+            http.open(),
+        ),
+        (
+            "abfp_http_connections_reaped_total",
+            "counter",
+            "Connections closed by deadline or write stall.",
+            http.reaped(),
+        ),
+    ];
+    for (name, kind, help, v) in scalars {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    out
+}
+
+fn emit(
+    out: &mut String,
+    name: &str,
+    kind: &str,
+    help: &str,
+    rows: &[(String, ServerStats)],
+    get: impl Fn(&ServerStats) -> f64,
+) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for (m, s) in rows {
+        let _ = writeln!(out, "{name}{{model=\"{m}\"}} {}", fmt_prom(get(s)));
+    }
+}
+
+/// Prometheus float spelling (`NaN` / `+Inf` / `-Inf`, not Rust's
+/// `inf`). Stats are finite by construction, but the scrape must never
+/// be the thing that breaks.
+fn fmt_prom(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
     }
 }
 
@@ -409,308 +1206,10 @@ fn parse_head(head: &str) -> Result<(String, String, bool, usize, bool), HttpErr
     Ok((method, path, keep_alive, content_length, expect_continue))
 }
 
-/// Dispatch a parsed request: `(status, content-type, body)`. HEAD
-/// routes exactly like GET (the caller elides the body when writing).
-fn route(router: &Router, req: &HttpRequest) -> (u16, &'static str, String) {
-    let method = match req.method.as_str() {
-        "HEAD" => "GET",
-        m => m,
-    };
-    match (method, req.path.as_str()) {
-        ("GET", "/healthz") => (200, CT_TEXT, "ok\n".to_string()),
-        ("GET", "/v1/models") => (200, CT_JSON, models_body(router)),
-        ("GET", "/metrics") => (200, CT_PROM, metrics_body(router)),
-        ("POST", path) => {
-            match path
-                .strip_prefix("/v1/models/")
-                .and_then(|rest| rest.strip_suffix(":predict"))
-            {
-                Some(model) if !model.is_empty() => {
-                    predict(router, model, &req.body)
-                }
-                _ => (404, CT_JSON, error_body("no such route")),
-            }
-        }
-        ("GET", _) => (404, CT_JSON, error_body("no such route")),
-        _ => (405, CT_JSON, error_body("method not allowed")),
-    }
-}
-
-/// `POST /v1/models/{model}:predict`.
-fn predict(router: &Router, model: &str, body: &[u8]) -> (u16, &'static str, String) {
-    let text = match std::str::from_utf8(body) {
-        Ok(t) => t,
-        Err(_) => return (400, CT_JSON, error_body("body is not UTF-8")),
-    };
-    let value = match json::parse(text) {
-        Ok(v) => v,
-        Err(e) => return (400, CT_JSON, error_body(&format!("invalid JSON: {e}"))),
-    };
-    let x = match parse_tensor(&value) {
-        Ok(x) => x,
-        Err(e) => return (400, CT_JSON, error_body(&e.to_string())),
-    };
-    let rx = match router.try_submit(model, x) {
-        Ok(rx) => rx,
-        Err(e) => {
-            let status = match &e {
-                SubmitError::UnknownModel(_) => 404,
-                SubmitError::BadShape(_) => 400,
-                SubmitError::Busy(_) => 429,
-                SubmitError::Gone(_) => 503,
-            };
-            return (status, CT_JSON, error_body(&e.to_string()));
-        }
-    };
-    match rx.recv() {
-        Err(_) => (500, CT_JSON, error_body("worker dropped the request")),
-        Ok(Err(e)) => (500, CT_JSON, error_body(&e.to_string())),
-        Ok(Ok(resp)) => (200, CT_JSON, response_body(model, &resp)),
-    }
-}
-
-/// Request tensor: `{"data": [...], "shape": [...]?}`.
-fn parse_tensor(v: &json::Value) -> Result<Tensor> {
-    let data_v = v
-        .get("data")
-        .map_err(|_| anyhow!(r#"body must be {{"data": [...], "shape": [...]?}}"#))?;
-    let data: Vec<f32> = data_v
-        .as_arr()?
-        .iter()
-        .map(|n| n.as_f64().map(|f| f as f32))
-        .collect::<Result<_>>()?;
-    let shape = match v.opt("shape") {
-        Some(s) => s.as_shape()?,
-        None => vec![data.len()],
-    };
-    Tensor::new(&shape, data)
-}
-
-fn tensor_json(t: &Tensor) -> json::Value {
-    json::obj(vec![
-        (
-            "shape",
-            json::arr(t.shape().iter().map(|&d| json::num(d as f64)).collect()),
-        ),
-        (
-            "data",
-            json::arr(t.data().iter().map(|&v| json::num(v as f64)).collect()),
-        ),
-    ])
-}
-
-fn response_body(model: &str, r: &Response) -> String {
-    json::obj(vec![
-        ("model", json::s(model)),
-        ("outputs", json::arr(r.outputs.iter().map(tensor_json).collect())),
-        ("queue_ms", json::num(r.queue_ms)),
-        ("total_ms", json::num(r.total_ms)),
-        ("batch_size", json::num(r.batch_size as f64)),
-    ])
-    .to_string()
-}
-
-fn error_body(msg: &str) -> String {
-    json::obj(vec![("error", json::s(msg))]).to_string()
-}
-
-fn models_body(router: &Router) -> String {
-    let names = router.served_models();
-    // `models` stays a plain name array (the stable roster contract
-    // pinned by tests/http.rs); `detail` carries each worker executor's
-    // self-description — kind, shapes, and for graph workers the layer
-    // count and per-layer numeric plan.
-    let mut detail = std::collections::BTreeMap::new();
-    for m in &names {
-        if let Ok(meta) = router.model_meta(m) {
-            detail.insert(m.clone(), meta);
-        }
-    }
-    json::obj(vec![
-        (
-            "models",
-            json::arr(names.iter().map(|m| json::s(m)).collect()),
-        ),
-        ("detail", json::Value::Obj(detail)),
-    ])
-    .to_string()
-}
-
-/// Prometheus exposition of every worker's [`ServerStats`].
-fn metrics_body(router: &Router) -> String {
-    use std::fmt::Write as _;
-
-    let mut rows: Vec<(String, ServerStats)> = Vec::new();
-    for m in router.served_models() {
-        if let Ok(s) = router.stats(&m) {
-            rows.push((m, s));
-        }
-    }
-    let mut out = String::new();
-    emit(
-        &mut out,
-        "abfp_requests_total",
-        "counter",
-        "Requests served successfully.",
-        &rows,
-        |s| s.requests as f64,
-    );
-    emit(
-        &mut out,
-        "abfp_failed_requests_total",
-        "counter",
-        "Requests answered with an execution error.",
-        &rows,
-        |s| s.failed_requests as f64,
-    );
-    emit(
-        &mut out,
-        "abfp_batches_total",
-        "counter",
-        "Device batches executed successfully.",
-        &rows,
-        |s| s.batches as f64,
-    );
-    emit(
-        &mut out,
-        "abfp_failed_batches_total",
-        "counter",
-        "Device batches that failed to execute.",
-        &rows,
-        |s| s.failed_batches as f64,
-    );
-    emit(
-        &mut out,
-        "abfp_batch_size_mean",
-        "gauge",
-        "Mean requests per executed batch.",
-        &rows,
-        |s| s.mean_batch,
-    );
-    emit(
-        &mut out,
-        "abfp_exec_ms_mean",
-        "gauge",
-        "Mean device execution time per batch (ms).",
-        &rows,
-        |s| s.mean_exec_ms,
-    );
-    let _ = writeln!(
-        out,
-        "# HELP abfp_latency_ms Request latency (queue + batch wait + execution)."
-    );
-    let _ = writeln!(out, "# TYPE abfp_latency_ms gauge");
-    for (m, s) in &rows {
-        let _ = writeln!(
-            out,
-            "abfp_latency_ms{{model=\"{m}\",quantile=\"0.5\"}} {}",
-            fmt_prom(s.p50_ms)
-        );
-        let _ = writeln!(
-            out,
-            "abfp_latency_ms{{model=\"{m}\",quantile=\"0.95\"}} {}",
-            fmt_prom(s.p95_ms)
-        );
-    }
-    out
-}
-
-fn emit(
-    out: &mut String,
-    name: &str,
-    kind: &str,
-    help: &str,
-    rows: &[(String, ServerStats)],
-    get: impl Fn(&ServerStats) -> f64,
-) {
-    use std::fmt::Write as _;
-    let _ = writeln!(out, "# HELP {name} {help}");
-    let _ = writeln!(out, "# TYPE {name} {kind}");
-    for (m, s) in rows {
-        let _ = writeln!(out, "{name}{{model=\"{m}\"}} {}", fmt_prom(get(s)));
-    }
-}
-
-/// Prometheus float spelling (`NaN` / `+Inf` / `-Inf`, not Rust's
-/// `inf`). Stats are finite by construction, but the scrape must never
-/// be the thing that breaks.
-fn fmt_prom(v: f64) -> String {
-    if v.is_nan() {
-        "NaN".to_string()
-    } else if v == f64::INFINITY {
-        "+Inf".to_string()
-    } else if v == f64::NEG_INFINITY {
-        "-Inf".to_string()
-    } else {
-        format!("{v}")
-    }
-}
-
-fn reason(status: u16) -> &'static str {
-    match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        408 => "Request Timeout",
-        413 => "Payload Too Large",
-        429 => "Too Many Requests",
-        500 => "Internal Server Error",
-        503 => "Service Unavailable",
-        _ => "Unknown",
-    }
-}
-
-/// Half-close the send side and briefly drain the receive side before
-/// dropping the socket. Closing with unread request bytes still queued
-/// makes Linux send RST, which can destroy a just-written error
-/// response before the client reads it — they would see "connection
-/// reset by peer" instead of the 413/400/408 we sent.
-fn linger_close(stream: &mut TcpStream) {
-    use std::net::Shutdown;
-    stream.shutdown(Shutdown::Write).ok();
-    let deadline = Instant::now() + Duration::from_millis(500);
-    let mut sink = [0u8; 8192];
-    while Instant::now() < deadline {
-        match stream.read(&mut sink) {
-            Ok(0) => break, // client saw the close and finished
-            Ok(_) => {}     // discard the rest of the upload
-            Err(e)
-                if e.kind() == ErrorKind::WouldBlock
-                    || e.kind() == ErrorKind::TimedOut => {}
-            Err(_) => break,
-        }
-    }
-}
-
-/// Write one response. `head_only` (HEAD requests) sends the status
-/// line and headers — including the content-length the body would have
-/// had — without the body itself.
-fn write_response(
-    stream: &mut TcpStream,
-    status: u16,
-    ctype: &str,
-    body: &[u8],
-    keep_alive: bool,
-    head_only: bool,
-) -> std::io::Result<()> {
-    let conn = if keep_alive { "keep-alive" } else { "close" };
-    let retry = if status == 429 { "retry-after: 1\r\n" } else { "" };
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\ncontent-type: {ctype}\r\ncontent-length: {}\r\nconnection: {conn}\r\n{retry}\r\n",
-        reason(status),
-        body.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    if !head_only {
-        stream.write_all(body)?;
-    }
-    stream.flush()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::TcpListener;
 
     #[test]
     fn head_parsing() {
@@ -770,5 +1269,79 @@ mod tests {
         assert_eq!(fmt_prom(f64::NAN), "NaN");
         assert_eq!(fmt_prom(f64::INFINITY), "+Inf");
         assert_eq!(fmt_prom(f64::NEG_INFINITY), "-Inf");
+    }
+
+    /// A Conn over a throwaway loopback socket, for driving the parse
+    /// state machine directly (no event loop).
+    fn test_conn() -> Conn {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let _accepted = listener.accept().unwrap();
+        Conn::new(stream)
+    }
+
+    #[test]
+    fn extraction_handles_split_and_pipelined_requests() {
+        let mut c = test_conn();
+        // First request arrives split mid-head, then mid-body, with a
+        // second request pipelined right behind it.
+        c.buf.extend_from_slice(b"POST /x HTTP/1.1\r\ncontent-");
+        assert!(c.try_extract().unwrap().is_none());
+        c.buf.extend_from_slice(b"length: 5\r\n\r\nab");
+        assert!(c.try_extract().unwrap().is_none());
+        c.buf.extend_from_slice(b"cdeGET /healthz HTTP/1.1\r\n\r\n");
+        let req = c.try_extract().unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"abcde");
+        assert!(req.keep_alive);
+        let req = c.try_extract().unwrap().unwrap();
+        assert_eq!((req.method.as_str(), req.path.as_str()), ("GET", "/healthz"));
+        assert!(req.body.is_empty());
+        assert!(c.try_extract().unwrap().is_none());
+        assert!(c.buf.is_empty());
+    }
+
+    #[test]
+    fn extraction_sends_100_continue_once_and_caps_the_body() {
+        let mut c = test_conn();
+        c.buf.extend_from_slice(
+            b"POST /x HTTP/1.1\r\ncontent-length: 9\r\nexpect: 100-continue\r\n\r\n",
+        );
+        assert!(c.try_extract().unwrap().is_none());
+        assert_eq!(c.out, b"HTTP/1.1 100 Continue\r\n\r\n");
+        // Only once per request.
+        assert!(c.try_extract().unwrap().is_none());
+        assert_eq!(c.out.len(), 25);
+        c.buf.extend_from_slice(b"012345678");
+        assert_eq!(c.try_extract().unwrap().unwrap().body, b"012345678");
+
+        // An oversized declared body is refused from the head alone.
+        let mut c = test_conn();
+        let head = format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY + 1);
+        c.buf.extend_from_slice(head.as_bytes());
+        assert_eq!(c.try_extract().unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn interest_follows_connection_state() {
+        let mut c = test_conn();
+        assert_eq!(c.interest(), READABLE);
+        c.out.extend_from_slice(b"x");
+        assert_eq!(c.interest(), READABLE | WRITABLE);
+        let (tx, rx) = std::sync::mpsc::channel();
+        drop(tx);
+        c.pending = Some(Pending {
+            rx,
+            model: "m".into(),
+            head_only: false,
+            keep_alive: true,
+        });
+        // In flight: reads pause (ordering + backpressure), write
+        // interest persists.
+        assert_eq!(c.interest(), WRITABLE);
+        c.pending = None;
+        c.out.clear();
+        c.draining = Some(Instant::now());
+        assert_eq!(c.interest(), READABLE);
     }
 }

@@ -52,6 +52,10 @@ pub struct LoadReport {
     pub throttled: usize,
     pub client_errors: usize,
     pub server_errors: usize,
+    /// 503s — deadline sheds / worker-unavailable answers. A *subset*
+    /// of `server_errors` (the class sums are unchanged), split out so
+    /// a continuous-batching run shows its shed rate at a glance.
+    pub shed: usize,
     pub transport_errors: usize,
     pub wall_s: f64,
     /// Completed-request throughput (`ok / wall_s`).
@@ -65,7 +69,7 @@ impl LoadReport {
     /// One-line human rendering.
     pub fn render(&self) -> String {
         format!(
-            "{} ok / {} sent in {:.2}s = {:.1} req/s  (429 {}, 4xx {}, 5xx {}, io {})  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
+            "{} ok / {} sent in {:.2}s = {:.1} req/s  (429 {}, 4xx {}, 5xx {} [503 {}], io {})  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
             self.ok,
             self.sent,
             self.wall_s,
@@ -73,11 +77,51 @@ impl LoadReport {
             self.throttled,
             self.client_errors,
             self.server_errors,
+            self.shed,
             self.transport_errors,
             self.p50_ms,
             self.p95_ms,
             self.max_ms,
         )
+    }
+
+    /// Machine-readable rendering (the `bench_serve.json` building
+    /// block).
+    pub fn to_json(&self) -> json::Value {
+        json::obj(vec![
+            ("sent", json::num(self.sent as f64)),
+            ("ok", json::num(self.ok as f64)),
+            ("throttled_429", json::num(self.throttled as f64)),
+            ("client_errors_4xx", json::num(self.client_errors as f64)),
+            ("server_errors_5xx", json::num(self.server_errors as f64)),
+            ("shed_503", json::num(self.shed as f64)),
+            ("transport_errors", json::num(self.transport_errors as f64)),
+            ("wall_s", json::num(self.wall_s)),
+            ("qps", json::num(self.qps)),
+            ("p50_ms", json::num(self.p50_ms)),
+            ("p95_ms", json::num(self.p95_ms)),
+            ("max_ms", json::num(self.max_ms)),
+        ])
+    }
+}
+
+/// A [`run_sharded`] outcome: the merged view plus one report per
+/// client worker (each with its own quantiles and completed-QPS share —
+/// a skewed worker is visible instead of averaged away).
+#[derive(Debug, Clone, Default)]
+pub struct ShardedReport {
+    pub merged: LoadReport,
+    pub workers: Vec<LoadReport>,
+}
+
+impl ShardedReport {
+    /// Multi-line human rendering: merged first, then per worker.
+    pub fn render(&self) -> String {
+        let mut out = format!("merged    {}", self.merged.render());
+        for (i, w) in self.workers.iter().enumerate() {
+            out.push_str(&format!("\nworker {i:>2} {}", w.render()));
+        }
+        out
     }
 }
 
@@ -161,7 +205,7 @@ impl Conn {
     }
 }
 
-/// Per-worker tally, merged after the run.
+/// Per-client tally, merged after the run.
 #[derive(Default)]
 struct Tally {
     sent: usize,
@@ -169,14 +213,61 @@ struct Tally {
     throttled: usize,
     client_errors: usize,
     server_errors: usize,
+    shed: usize,
     transport_errors: usize,
     latencies_ms: Vec<f64>,
 }
 
+/// Fold a group of tallies into one report over the shared wall clock.
+fn report_from<'a>(
+    tallies: impl Iterator<Item = &'a Tally>,
+    wall_s: f64,
+) -> LoadReport {
+    let mut report = LoadReport {
+        wall_s,
+        ..LoadReport::default()
+    };
+    let mut lat: Vec<f64> = Vec::new();
+    for t in tallies {
+        report.sent += t.sent;
+        report.ok += t.ok;
+        report.throttled += t.throttled;
+        report.client_errors += t.client_errors;
+        report.server_errors += t.server_errors;
+        report.shed += t.shed;
+        report.transport_errors += t.transport_errors;
+        lat.extend_from_slice(&t.latencies_ms);
+    }
+    lat.sort_by(f64::total_cmp);
+    report.qps = report.ok as f64 / wall_s.max(1e-9);
+    report.p50_ms = quantile_sorted(&lat, 0.5);
+    report.p95_ms = quantile_sorted(&lat, 0.95);
+    report.max_ms = lat.last().copied().unwrap_or(0.0);
+    report
+}
+
 /// Run the load. Blocks until all `spec.requests` have been attempted.
 pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
+    Ok(run_sharded(spec, 1)?.merged)
+}
+
+/// Run the load split across `workers` client groups. The
+/// `spec.concurrency` connections are dealt round-robin to the groups;
+/// every group draws from the one global request counter (and open-loop
+/// schedule), so the split changes *reporting granularity*, not the
+/// offered load. Each worker's report has its own quantiles and its
+/// share of the completed QPS; `merged` is identical to what [`run`]
+/// returns.
+pub fn run_sharded(spec: &LoadSpec, workers: usize) -> Result<ShardedReport> {
     if spec.requests == 0 || spec.concurrency == 0 || spec.in_elems == 0 {
         bail!("loadgen: requests, concurrency and in_elems must all be >= 1");
+    }
+    if workers == 0 || workers > spec.concurrency {
+        bail!(
+            "loadgen: workers must be in 1..=concurrency (got {workers} \
+             workers for {} connections)",
+            spec.concurrency
+        );
     }
     let path = format!("/v1/models/{}:predict", spec.model);
     let next = Arc::new(AtomicUsize::new(0));
@@ -198,26 +289,19 @@ pub fn run(spec: &LoadSpec) -> Result<LoadReport> {
     });
     let wall_s = t0.elapsed().as_secs_f64();
 
-    let mut report = LoadReport {
-        wall_s,
-        ..LoadReport::default()
-    };
-    let mut lat: Vec<f64> = Vec::new();
-    for t in tallies {
-        report.sent += t.sent;
-        report.ok += t.ok;
-        report.throttled += t.throttled;
-        report.client_errors += t.client_errors;
-        report.server_errors += t.server_errors;
-        report.transport_errors += t.transport_errors;
-        lat.extend(t.latencies_ms);
-    }
-    lat.sort_by(f64::total_cmp);
-    report.qps = report.ok as f64 / wall_s.max(1e-9);
-    report.p50_ms = quantile_sorted(&lat, 0.5);
-    report.p95_ms = quantile_sorted(&lat, 0.95);
-    report.max_ms = lat.last().copied().unwrap_or(0.0);
-    Ok(report)
+    let merged = report_from(tallies.iter(), wall_s);
+    let per_worker = (0..workers)
+        .map(|w| {
+            report_from(
+                tallies.iter().skip(w).step_by(workers),
+                wall_s,
+            )
+        })
+        .collect();
+    Ok(ShardedReport {
+        merged,
+        workers: per_worker,
+    })
 }
 
 fn client_main(
@@ -280,6 +364,12 @@ fn client_main(
             }
             Some(429) => tally.throttled += 1,
             Some(c) if (400..500).contains(&c) => tally.client_errors += 1,
+            Some(503) => {
+                // Deadline shed / unavailable: still a 5xx in the class
+                // sums, additionally split out.
+                tally.server_errors += 1;
+                tally.shed += 1;
+            }
             Some(_) => tally.server_errors += 1,
         }
     }
@@ -305,6 +395,54 @@ mod tests {
         assert_eq!(b, body_for(3, 8));
         let v = json::parse(&b).unwrap();
         assert_eq!(v.get("data").unwrap().as_arr().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn report_merging_preserves_class_sums_and_quantiles() {
+        let t1 = Tally {
+            sent: 3,
+            ok: 2,
+            server_errors: 1,
+            shed: 1,
+            latencies_ms: vec![1.0, 3.0],
+            ..Tally::default()
+        };
+        let t2 = Tally {
+            sent: 2,
+            ok: 1,
+            throttled: 1,
+            latencies_ms: vec![5.0],
+            ..Tally::default()
+        };
+        let ts = [t1, t2];
+        let merged = report_from(ts.iter(), 2.0);
+        assert_eq!(merged.sent, 5);
+        assert_eq!(merged.ok, 3);
+        assert_eq!(merged.shed, 1);
+        assert!(merged.shed <= merged.server_errors);
+        assert_eq!(merged.max_ms, 5.0);
+        assert!((merged.qps - 1.5).abs() < 1e-9);
+        // Round-robin shard 0 of 2 sees only t1.
+        let w0 = report_from(ts.iter().step_by(2), 2.0);
+        assert_eq!(w0.sent, 3);
+        assert_eq!(w0.max_ms, 3.0);
+        let j = merged.to_json().to_string();
+        assert!(j.contains("\"shed_503\""));
+        assert!(j.contains("\"qps\""));
+    }
+
+    #[test]
+    fn sharded_worker_count_is_validated() {
+        let spec = LoadSpec {
+            addr: "127.0.0.1:1".into(),
+            model: "x".into(),
+            in_elems: 4,
+            requests: 1,
+            concurrency: 2,
+            target_qps: 0.0,
+        };
+        assert!(run_sharded(&spec, 0).is_err());
+        assert!(run_sharded(&spec, 3).is_err());
     }
 
     #[test]

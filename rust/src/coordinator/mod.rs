@@ -1,18 +1,34 @@
-//! The serving coordinator: request router + dynamic batcher + device
-//! workers, fronted by a std-only HTTP/1.1 server (the
-//! vLLM-router-shaped component of the stack).
+//! The serving coordinator: readiness event loop + request router +
+//! continuous batcher + device workers, fronted by a std-only HTTP/1.1
+//! server (the vLLM-router-shaped component of the stack).
 //!
-//! Architecture (one box per thread):
+//! Architecture (one box per thread; thread count is **fixed**, not
+//! per-connection):
 //!
 //! ```text
-//!   TCP clients -> HttpServer accept loop -> per-connection threads
-//!      |                                          |  try_submit (429 on
-//!      |                                          v   a full queue)
-//!      |                                       Router ----> [ModelWorker "cnn"]
-//!      |                                          |            (device thread:
-//!   in-process clients --- submit(Request) ------+             Engine + batcher
-//!                           -> oneshot Result<Response>        + PJRT executable)
+//!   TCP clients --\
+//!   TCP clients ----> [event loop 0..P]  poll(2) readiness, nonblocking
+//!   TCP clients --/    per-conn state machines: ReadHead -> ReadBody
+//!        |             -> InFlight -> Write (keep-alive loops back)
+//!        |                  | try_submit_notify (429 on a full queue)
+//!        |                  v
+//!        |               Router ------> [ModelWorker "cnn"]
+//!        |                  ^             (device thread: continuous
+//!   in-process clients -----+              batcher + Engine + executor)
+//!        submit(Request) -> oneshot        | response + UDP waker poke
+//!        Result<Response, RequestError> <--/   back to the event loop
 //! ```
+//!
+//! The front door is a small pool of **event-loop threads** (default
+//! ~4), each multiplexing hundreds of connections over `poll(2)`
+//! readiness (vendored `netpoll`; the crate root forbids unsafe). A
+//! connection is a state machine, not a thread: reading a request,
+//! waiting on a worker, or flushing a response parks *state*, never a
+//! thread — so 1024 idle keep-alive connections cost memory, not
+//! threads, and a slow-loris client is reaped by deadline without
+//! occupying anything. While a predict is in flight the worker pokes
+//! the loop's UDP waker ([`Notify`]) after delivering the response, so
+//! loops sleep in `poll` instead of spinning.
 //!
 //! Every worker runs one loop (`worker_main`) generic over
 //! [`ModelExecutor`] — the serving-side twin of
@@ -23,31 +39,43 @@
 //! [`Router::start_graph`]), and [`PjrtExecutor`] (AOT artifacts).
 //! `PjRtClient` is thread-confined (Rc internals), so executors are
 //! constructed by a factory *on* their dedicated worker thread — the
-//! same discipline as one accelerator stream per model replica. The
-//! batcher groups requests up to the executor's batch capacity or a
-//! deadline, executes once, and fans results back out (the PJRT
-//! executor pads to its compiled batch; padding rows cost nothing extra
-//! because the artifact batch is fixed either way). An executor failure
-//! fails the batch, not the worker: every waiting client gets an error
-//! response and the failure is counted in [`ServerStats`].
+//! same discipline as one accelerator stream per model replica.
+//!
+//! Batching is **continuous** ([`BatchMode::Continuous`], the default):
+//! the worker snapshots its queue the moment the previous batch
+//! finishes, so batch size tracks queue depth (deep queue -> full
+//! batches, idle queue -> batch-of-1 at minimum latency) and the
+//! executor never idles waiting for a batch to "fill". The legacy
+//! gather-then-execute strategy survives as [`BatchMode::Gather`] — the
+//! measurable A/B baseline `bench-serve` compares against. Requests
+//! that blow their service deadline while queued are shed with a typed
+//! 503 ([`RequestError::DeadlineExceeded`]) before touching the device.
+//! An executor failure fails the batch, not the worker: every waiting
+//! client gets an error response and the failure is counted in
+//! [`ServerStats`].
 //!
 //! [`HttpServer`] speaks dependency-free HTTP/1.1 over
 //! `std::net::TcpListener` (`POST /v1/models/{m}:predict`,
 //! `GET /v1/models`, `GET /healthz`, Prometheus `GET /metrics`) with
-//! keep-alive and graceful shutdown; [`loadgen`] drives it open- or
-//! closed-loop over loopback and reports QPS / p50 / p95.
+//! keep-alive, pipelining, and graceful shutdown that drains in-flight
+//! requests; [`loadgen`] drives it open- or closed-loop over loopback —
+//! optionally from several client workers — and reports QPS / p50 /
+//! p95 per worker and merged.
 
 mod batcher;
 mod executor;
 mod http;
 pub mod loadgen;
+mod queue;
 mod server;
 
-pub use batcher::{collect_batch, BatchPolicy};
+pub use batcher::{collect_next, BatchMode, BatchPolicy, Collected};
 pub use executor::{
     EchoExecutor, Executed, ModelExecutor, PjrtExecutor, ECHO_FAIL_SENTINEL,
 };
-pub use http::HttpServer;
+pub use http::{HttpConfig, HttpServer, HttpStats};
+pub use queue::{PopWait, PushError, RequestQueue};
 pub use server::{
-    Request, Response, Router, ServerStats, SubmitError, WorkerConfig,
+    Notify, Request, RequestError, Response, Router, ServerStats, SubmitError,
+    WorkerConfig, BATCH_HIST_LE,
 };

@@ -1,0 +1,265 @@
+//! The worker request queue: a bounded MPMC deque built for continuous
+//! batching.
+//!
+//! `std::sync::mpsc` could carry requests (and did, through PR 7), but
+//! it cannot express the two operations the continuous batcher lives
+//! on: an O(1) **snapshot drain** ("give me everything queued right
+//! now, up to the batch cap, without blocking") and a cheap **depth
+//! gauge** for `/metrics` and batch sizing. This queue is a
+//! `Mutex<VecDeque>` + two condvars (`available` for poppers, `space`
+//! for blocked pushers) with close-down semantics that mirror mpsc's:
+//! after [`RequestQueue::close`], pushes fail immediately while pops
+//! drain the remaining items and then report `None` — so graceful
+//! shutdown still answers everything that was accepted.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a [`RequestQueue::try_push`] was refused; carries the item back.
+pub enum PushError<T> {
+    /// The queue is at capacity right now (the 429 backpressure point).
+    Full(T),
+    /// The queue is closed (worker shut down).
+    Closed(T),
+}
+
+/// Outcome of a deadline-bounded pop.
+pub enum PopWait<T> {
+    Item(T),
+    TimedOut,
+    Closed,
+}
+
+/// Bounded MPMC queue; see the module docs for why mpsc doesn't fit.
+pub struct RequestQueue<T> {
+    inner: Mutex<VecDeque<T>>,
+    available: Condvar,
+    space: Condvar,
+    cap: usize,
+    closed: AtomicBool,
+}
+
+impl<T> RequestQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to >= 1).
+    pub fn new(cap: usize) -> RequestQueue<T> {
+        RequestQueue {
+            inner: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            space: Condvar::new(),
+            cap: cap.max(1),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current depth — the `/metrics` queue gauge. Racy by nature (the
+    /// answer can be stale by the time the caller reads it) but exact
+    /// at the instant of the lock.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    /// Non-blocking push: `Full` when at capacity (429 to the HTTP
+    /// caller), `Closed` after shutdown. Never parks the caller.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut q = self.inner.lock().unwrap();
+        if self.is_closed() {
+            return Err(PushError::Closed(item));
+        }
+        if q.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        q.push_back(item);
+        drop(q);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push (in-process [`Router::submit`] callers): parks
+    /// while the queue is full; `Err(item)` once closed.
+    ///
+    /// [`Router::submit`]: super::Router::submit
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                return Err(item);
+            }
+            if q.len() < self.cap {
+                q.push_back(item);
+                drop(q);
+                self.available.notify_one();
+                return Ok(());
+            }
+            q = self.space.wait(q).unwrap();
+        }
+    }
+
+    /// Blocking pop: parks until an item arrives. `None` only when the
+    /// queue is closed **and** drained — accepted work is never lost.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                drop(q);
+                self.space.notify_one();
+                return Some(item);
+            }
+            if self.is_closed() {
+                return None;
+            }
+            q = self.available.wait(q).unwrap();
+        }
+    }
+
+    /// Pop with a deadline (the gather-mode batch window): parks until
+    /// an item arrives, `deadline` passes, or the queue closes empty.
+    pub fn pop_until(&self, deadline: Instant) -> PopWait<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                drop(q);
+                self.space.notify_one();
+                return PopWait::Item(item);
+            }
+            if self.is_closed() {
+                return PopWait::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopWait::TimedOut;
+            }
+            let (guard, _timeout) =
+                self.available.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Snapshot drain — the continuous-batching primitive: move up to
+    /// `max` queued items into `out` without blocking, returning how
+    /// many moved. The worker calls this the moment the previous batch
+    /// finishes, so requests that arrived mid-execution join the next
+    /// batch immediately (no gather wait).
+    pub fn drain_into(&self, out: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let mut q = self.inner.lock().unwrap();
+        let n = max.min(q.len());
+        out.extend(q.drain(..n));
+        drop(q);
+        if n > 0 {
+            self.space.notify_all();
+        }
+        n
+    }
+
+    /// Close the queue: pushes fail from now on; poppers drain what
+    /// remains and then see `Closed`/`None`. Idempotent.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        // Take and release the lock so a popper between its closed
+        // check and its condvar wait cannot miss the wakeup below.
+        drop(self.inner.lock().unwrap());
+        self.available.notify_all();
+        self.space.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_depth() {
+        let q = RequestQueue::new(8);
+        for i in 0..5 {
+            q.try_push(i).map_err(|_| ()).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.pop_wait(), Some(0));
+        let mut out = Vec::new();
+        assert_eq!(q.drain_into(&mut out, 10), 4);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn try_push_reports_full_and_closed() {
+        let q = RequestQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Full"),
+        }
+        q.close();
+        match q.try_push(4) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 4),
+            _ => panic!("expected Closed"),
+        }
+        // Accepted items drain after close; then poppers see the end.
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), Some(2));
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn blocking_push_unblocks_when_space_frees() {
+        let q = Arc::new(RequestQueue::new(1));
+        q.try_push(0u32).map_err(|_| ()).unwrap();
+        let qc = q.clone();
+        let pusher = std::thread::spawn(move || qc.push(1).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_wait(), Some(0)); // frees the slot
+        assert!(pusher.join().unwrap());
+        assert_eq!(q.pop_wait(), Some(1));
+    }
+
+    #[test]
+    fn pop_until_times_out_then_delivers() {
+        let q = Arc::new(RequestQueue::new(4));
+        let t0 = Instant::now();
+        match q.pop_until(t0 + Duration::from_millis(20)) {
+            PopWait::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        let qc = q.clone();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            qc.try_push(7u32).map_err(|_| ()).unwrap();
+        });
+        match q.pop_until(Instant::now() + Duration::from_secs(5)) {
+            PopWait::Item(v) => assert_eq!(v, 7),
+            _ => panic!("expected item"),
+        }
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q = Arc::new(RequestQueue::<u32>::new(4));
+        let qc = q.clone();
+        let popper = std::thread::spawn(move || qc.pop_wait());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(popper.join().unwrap(), None);
+        assert!(q.is_closed());
+    }
+}

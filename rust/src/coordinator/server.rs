@@ -2,19 +2,20 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::batcher::{collect_batch, BatchPolicy};
+use super::batcher::{collect_next, BatchPolicy};
 use super::executor::{EchoExecutor, ModelExecutor, PjrtExecutor};
+use super::queue::{PushError, RequestQueue};
 use crate::abfp::DeviceConfig;
 use crate::backend::BackendKind;
 use crate::graph::{builders, GraphExecutor, GraphPlan};
-use crate::json::Value;
+use crate::json::{self, Value};
 use crate::stats::{quantile_sorted, Percentiles, Running};
 use crate::tensor::Tensor;
 
@@ -22,15 +23,64 @@ use crate::tensor::Tensor;
 /// bound [`Router::try_submit`]'s backpressure trips on).
 const DEFAULT_QUEUE: usize = 1024;
 
+/// Wakeup hook a submitter can attach to its request: the worker calls
+/// [`Notify::notify`] right after delivering the response, so an
+/// event-loop caller (which cannot block on the response channel) gets
+/// poked to `try_recv` instead of polling. In-process blocking callers
+/// leave it unset.
+pub trait Notify: Send + Sync {
+    fn notify(&self);
+}
+
+/// Why a request that *was* accepted onto a worker queue still failed —
+/// typed (instead of a bare `anyhow` message) so the HTTP front door
+/// can map each variant to a status without string matching: `Exec` is
+/// 500, `DeadlineExceeded` is 503.
+#[derive(Debug, Clone)]
+pub enum RequestError {
+    /// The executor failed the whole batch (HTTP 500). Carries the
+    /// preformatted `model {name:?}: execute failed: ...` message.
+    Exec(String),
+    /// The request sat in the queue past its service deadline and was
+    /// shed before touching the executor (HTTP 503): the client had
+    /// already given up, so device time would have been wasted.
+    DeadlineExceeded {
+        model: String,
+        /// How long the request waited before being shed.
+        waited_ms: f64,
+    },
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RequestError::Exec(msg) => f.write_str(msg),
+            RequestError::DeadlineExceeded { model, waited_ms } => write!(
+                f,
+                "model {model:?}: request shed after {waited_ms:.1} ms in queue \
+                 (service deadline exceeded)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
 /// One inference request: a single example for a named model. The
-/// response channel carries a `Result`: an executor failure reaches the
-/// waiting client as a real error (it used to see only a bare
-/// channel-closed when the worker dropped the batch).
+/// response channel carries a `Result`: an executor failure or a
+/// deadline shed reaches the waiting client as a typed
+/// [`RequestError`] (it used to see only a bare channel-closed when
+/// the worker dropped the batch).
 pub struct Request {
     pub model: String,
     pub x: Tensor,
     pub enqueued: Instant,
-    pub respond: Sender<Result<Response>>,
+    /// Absolute service deadline (from [`BatchPolicy::deadline`] at
+    /// submit time); `None` = never shed.
+    pub deadline: Option<Instant>,
+    pub respond: Sender<Result<Response, RequestError>>,
+    /// Poked after the response is delivered; see [`Notify`].
+    pub notify: Option<Arc<dyn Notify>>,
 }
 
 /// The response: per-output tensors for this example plus timing.
@@ -107,20 +157,46 @@ pub struct ServerStats {
     pub batches: u64,
     pub failed_requests: u64,
     pub failed_batches: u64,
+    /// Requests shed for blowing their service deadline while queued
+    /// (answered 503, never executed).
+    pub shed_requests: u64,
+    /// Worker collection rounds (one per batch *or* shed-only round) —
+    /// the per-model event-loop wakeup counter in `/metrics`.
+    pub wakeups: u64,
+    /// Queue depth at snapshot time (gauge, not a counter).
+    pub queue_depth: usize,
     pub mean_batch: f64,
+    /// Executed-batch size histogram as `(le, count)` pairs —
+    /// per-bucket counts (not cumulative), last bound `+Inf`.
+    pub batch_hist: Vec<(f64, u64)>,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub mean_exec_ms: f64,
+}
+
+/// Histogram bucket bounds for executed batch sizes (`le` labels in
+/// `/metrics`; the final `+Inf` bucket is implicit in the array).
+pub const BATCH_HIST_LE: [f64; 10] =
+    [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, f64::INFINITY];
+
+fn batch_bucket(bsz: usize) -> usize {
+    BATCH_HIST_LE
+        .iter()
+        .position(|&le| (bsz as f64) <= le)
+        .unwrap_or(BATCH_HIST_LE.len() - 1)
 }
 
 struct WorkerStats {
     latency: Percentiles,
     exec_ms: Running,
     batch_sizes: Running,
+    batch_hist: [u64; BATCH_HIST_LE.len()],
     requests: u64,
     batches: u64,
     failed_requests: u64,
     failed_batches: u64,
+    shed_requests: u64,
+    wakeups: u64,
 }
 
 impl WorkerStats {
@@ -129,10 +205,13 @@ impl WorkerStats {
             latency: Percentiles::new(4096),
             exec_ms: Running::new(),
             batch_sizes: Running::new(),
+            batch_hist: [0; BATCH_HIST_LE.len()],
             requests: 0,
             batches: 0,
             failed_requests: 0,
             failed_batches: 0,
+            shed_requests: 0,
+            wakeups: 0,
         }
     }
 
@@ -147,7 +226,15 @@ impl WorkerStats {
             batches: self.batches,
             failed_requests: self.failed_requests,
             failed_batches: self.failed_batches,
+            shed_requests: self.shed_requests,
+            wakeups: self.wakeups,
+            queue_depth: 0, // filled by Router::stats (the queue gauge)
             mean_batch: self.batch_sizes.mean(),
+            batch_hist: BATCH_HIST_LE
+                .iter()
+                .zip(self.batch_hist.iter())
+                .map(|(&le, &n)| (le, n))
+                .collect(),
             p50_ms: quantile_sorted(&sorted, 0.5),
             p95_ms: quantile_sorted(&sorted, 0.95),
             mean_exec_ms: self.exec_ms.mean(),
@@ -187,10 +274,12 @@ impl fmt::Display for SubmitError {
 impl std::error::Error for SubmitError {}
 
 /// What a worker reports once its executor is constructed: the
-/// validated input width plus the executor's self-description (served
-/// through `GET /v1/models`).
+/// validated input width, the batch cap actually in force (the policy
+/// clamped to the executor's capacity), and the executor's
+/// self-description (served through `GET /v1/models`).
 struct WorkerReady {
     in_elems: usize,
+    effective_batch: usize,
     meta: Value,
 }
 
@@ -200,15 +289,35 @@ pub struct Router {
 }
 
 struct WorkerHandle {
-    tx: SyncSender<Request>,
+    queue: Arc<RequestQueue<Request>>,
     stats: Arc<Mutex<WorkerStats>>,
     /// Flat input size the model expects per example — requests are
     /// validated against it in [`Router::submit`] so a malformed shape
     /// is an error to the caller, never a panic inside the worker.
     in_elems: usize,
-    /// The executor's startup self-description (kind, shapes, plan).
+    /// Per-request service deadline stamped onto submits (`None` when
+    /// the policy's deadline is zero).
+    deadline: Option<Duration>,
+    /// The executor's startup self-description (kind, shapes, plan),
+    /// extended with the worker's `batching` configuration.
     meta: Value,
     join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    fn request(&self, model: &str, x: Tensor, notify: Option<Arc<dyn Notify>>) -> (Request, Receiver<Result<Response, RequestError>>) {
+        let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
+        let req = Request {
+            model: model.to_string(),
+            x,
+            enqueued: now,
+            deadline: self.deadline.map(|d| now + d),
+            respond: tx,
+            notify,
+        };
+        (req, rx)
+    }
 }
 
 /// Spawn one worker thread around an executor factory. The factory runs
@@ -225,22 +334,45 @@ where
     E: ModelExecutor + 'static,
     F: FnOnce() -> Result<E> + Send + 'static,
 {
-    let (tx, rx) = mpsc::sync_channel::<Request>(queue.max(1));
+    let queue = Arc::new(RequestQueue::<Request>::new(queue));
+    let queue_c = queue.clone();
     let stats = Arc::new(Mutex::new(WorkerStats::new()));
     let stats_c = stats.clone();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<WorkerReady>>();
     let name_c = name.to_string();
     let join = std::thread::Builder::new()
         .name(format!("abfp-worker-{name}"))
-        .spawn(move || worker_main(&name_c, factory, policy, rx, stats_c, ready_tx))?;
+        .spawn(move || {
+            worker_main(&name_c, factory, policy, queue_c, stats_c, ready_tx)
+        })?;
     let ready = ready_rx
         .recv()
         .map_err(|_| anyhow!("worker {name} died during startup"))??;
+    // Surface the batching configuration in `GET /v1/models` detail —
+    // mode, the effective batch cap, deadline and queue bound — so a
+    // deployment's batching behaviour is inspectable from the outside.
+    let batching = json::obj(vec![
+        ("mode", json::s(policy.mode.as_str())),
+        ("max_batch", json::num(ready.effective_batch as f64)),
+        (
+            "deadline_ms",
+            json::num(policy.deadline.as_secs_f64() * 1e3),
+        ),
+        ("queue", json::num(queue.capacity() as f64)),
+    ]);
+    let meta = match ready.meta {
+        Value::Obj(mut m) => {
+            m.insert("batching".to_string(), batching);
+            Value::Obj(m)
+        }
+        other => other,
+    };
     Ok(WorkerHandle {
-        tx,
+        queue,
         stats,
         in_elems: ready.in_elems,
-        meta: ready.meta,
+        deadline: (!policy.deadline.is_zero()).then_some(policy.deadline),
+        meta,
         join: Some(join),
     })
 }
@@ -317,17 +449,16 @@ impl Router {
     /// Submit one example; returns a receiver for the response. Blocks
     /// while the worker queue is full (in-process callers; the HTTP
     /// front door uses [`Router::try_submit`] instead).
-    pub fn submit(&self, model: &str, x: Tensor) -> Result<Receiver<Result<Response>>> {
+    pub fn submit(
+        &self,
+        model: &str,
+        x: Tensor,
+    ) -> Result<Receiver<Result<Response, RequestError>>> {
         let worker = self.validated(model, &x)?;
-        let (tx, rx) = mpsc::channel();
+        let (req, rx) = worker.request(model, x, None);
         worker
-            .tx
-            .send(Request {
-                model: model.to_string(),
-                x,
-                enqueued: Instant::now(),
-                respond: tx,
-            })
+            .queue
+            .push(req)
             .map_err(|_| anyhow!("worker {model} is gone"))?;
         Ok(rx)
     }
@@ -335,34 +466,40 @@ impl Router {
     /// Non-blocking submit: a full worker queue is [`SubmitError::Busy`]
     /// to the caller *now*, instead of stalling the calling thread. This
     /// is the backpressure point of the HTTP front door — a saturated
-    /// model answers 429 from the connection thread rather than tying it
-    /// up (and, transitively, wedging the accept loop's thread budget).
+    /// model answers 429 from the event loop rather than parking one of
+    /// its few threads behind a slow model.
     pub fn try_submit(
         &self,
         model: &str,
         x: Tensor,
-    ) -> Result<Receiver<Result<Response>>, SubmitError> {
+    ) -> Result<Receiver<Result<Response, RequestError>>, SubmitError> {
+        self.try_submit_notify(model, x, None)
+    }
+
+    /// [`Router::try_submit`] with a wakeup hook: `notify` is poked
+    /// after the response lands on the returned channel, so an event
+    /// loop can sleep in `poll` instead of spinning on `try_recv`.
+    pub fn try_submit_notify(
+        &self,
+        model: &str,
+        x: Tensor,
+        notify: Option<Arc<dyn Notify>>,
+    ) -> Result<Receiver<Result<Response, RequestError>>, SubmitError> {
         let worker = self.validated(model, &x)?;
-        let (tx, rx) = mpsc::channel();
-        match worker.tx.try_send(Request {
-            model: model.to_string(),
-            x,
-            enqueued: Instant::now(),
-            respond: tx,
-        }) {
+        let (req, rx) = worker.request(model, x, notify);
+        match worker.queue.try_push(req) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(_)) => Err(SubmitError::Busy(model.to_string())),
-            Err(TrySendError::Disconnected(_)) => {
-                Err(SubmitError::Gone(model.to_string()))
-            }
+            Err(PushError::Full(_)) => Err(SubmitError::Busy(model.to_string())),
+            Err(PushError::Closed(_)) => Err(SubmitError::Gone(model.to_string())),
         }
     }
 
     /// Blocking convenience: submit and wait.
     pub fn infer(&self, model: &str, x: Tensor) -> Result<Response> {
-        self.submit(model, x)?
+        Ok(self
+            .submit(model, x)?
             .recv()
-            .map_err(|_| anyhow!("worker {model} dropped the request"))?
+            .map_err(|_| anyhow!("worker {model} dropped the request"))??)
     }
 
     pub fn stats(&self, model: &str) -> Result<ServerStats> {
@@ -370,7 +507,12 @@ impl Router {
             .workers
             .get(model)
             .ok_or_else(|| anyhow!("model {model:?} is not served"))?;
-        Ok(worker.stats.lock().unwrap().snapshot())
+        let mut snap = worker.stats.lock().unwrap().snapshot();
+        // The queue gauge reads the live queue, not the stats mutex —
+        // depth at this instant, including requests the worker hasn't
+        // collected yet.
+        snap.queue_depth = worker.queue.len();
+        Ok(snap)
     }
 
     /// The worker executor's startup self-description (kind, shapes,
@@ -418,13 +560,18 @@ impl Router {
 
 impl Drop for Router {
     fn drop(&mut self) {
-        // Close request channels first, then join workers.
+        // Close every queue first (the Arc is shared with the worker,
+        // so dropping the handle alone would never end the worker's
+        // collect loop), then join. Closed queues still drain: accepted
+        // requests are answered before the workers exit.
+        for w in self.workers.values() {
+            w.queue.close();
+        }
         let handles: Vec<JoinHandle<()>> = self
             .workers
             .values_mut()
             .filter_map(|w| w.join.take())
             .collect();
-        self.workers.clear(); // drops senders
         for h in handles {
             h.join().ok();
         }
@@ -440,7 +587,7 @@ fn worker_main<E: ModelExecutor>(
     model: &str,
     factory: impl FnOnce() -> Result<E>,
     policy: BatchPolicy,
-    rx: Receiver<Request>,
+    queue: Arc<RequestQueue<Request>>,
     stats: Arc<Mutex<WorkerStats>>,
     ready: Sender<Result<WorkerReady>>,
 ) {
@@ -452,22 +599,31 @@ fn worker_main<E: ModelExecutor>(
         }
     };
     let in_elems = exec.in_elems();
-    // The router validates request shapes against this before they can
-    // reach the batch assembly below.
-    ready
-        .send(Ok(WorkerReady {
-            in_elems,
-            meta: exec.describe(),
-        }))
-        .ok();
     // Never assemble more requests than the executor can take at once
     // (PJRT artifacts compile a fixed batch).
     let policy = BatchPolicy {
         max_batch: policy.max_batch.min(exec.max_batch()),
         ..policy
     };
+    // The router validates request shapes against `in_elems` before
+    // they can reach the batch assembly below.
+    ready
+        .send(Ok(WorkerReady {
+            in_elems,
+            effective_batch: policy.max_batch,
+            meta: exec.describe(),
+        }))
+        .ok();
 
-    while let Some(batch) = collect_batch(&rx, policy) {
+    while let Some(collected) = collect_next(&queue, &policy, |r: &Request| r.deadline) {
+        stats.lock().unwrap().wakeups += 1;
+        if !collected.shed.is_empty() {
+            shed_requests(collected.shed, &stats);
+        }
+        let batch = collected.batch;
+        if batch.is_empty() {
+            continue; // shed-only round
+        }
         let t_exec = Instant::now();
         // Pack the request batch once, directly into the executor's
         // target layout: (pack_rows(b), in_elems), one row per example,
@@ -520,9 +676,31 @@ fn fail_batch(batch: Vec<Request>, err: &str, stats: &Mutex<WorkerStats>) {
         s.failed_batches += 1;
     }
     for req in batch {
+        let msg = format!("model {:?}: {err}", req.model);
+        req.respond.send(Err(RequestError::Exec(msg))).ok();
+        if let Some(n) = &req.notify {
+            n.notify();
+        }
+    }
+}
+
+/// Answer deadline-shed requests: each waiting client gets
+/// [`RequestError::DeadlineExceeded`] (503 at the front door) and the
+/// shed lands in [`ServerStats::shed_requests`]. No device time is
+/// spent and no batch counters move — these never executed.
+fn shed_requests(shed: Vec<Request>, stats: &Mutex<WorkerStats>) {
+    stats.lock().unwrap().shed_requests += shed.len() as u64;
+    for req in shed {
+        let waited_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
         req.respond
-            .send(Err(anyhow!("model {:?}: {err}", req.model)))
+            .send(Err(RequestError::DeadlineExceeded {
+                model: req.model.clone(),
+                waited_ms,
+            }))
             .ok();
+        if let Some(n) = &req.notify {
+            n.notify();
+        }
     }
 }
 
@@ -563,6 +741,7 @@ fn finish_batch(
         s.requests += bsz as u64;
         s.batches += 1;
         s.batch_sizes.push(bsz as f64);
+        s.batch_hist[batch_bucket(bsz)] += 1;
         s.exec_ms.push(exec_ms);
         for (_, _, total_ms, _) in &ready {
             s.latency.push(*total_ms);
@@ -578,6 +757,11 @@ fn finish_batch(
                 batch_size: bsz,
             }))
             .ok();
+        // Poke the submitter's event loop AFTER the response is on the
+        // channel, so its try_recv is guaranteed to find it.
+        if let Some(n) = &req.notify {
+            n.notify();
+        }
     }
 }
 
@@ -652,6 +836,114 @@ mod tests {
     }
 
     #[test]
+    fn worker_meta_reports_the_batching_mode() {
+        // Satellite 3: `GET /v1/models` detail must expose how the
+        // worker batches — mode, effective cap, deadline, queue bound.
+        let router = echo_router(4);
+        let meta = router.model_meta("echo").unwrap().to_string();
+        assert!(meta.contains("\"batching\""), "{meta}");
+        assert!(meta.contains("\"mode\":\"continuous\""), "{meta}");
+        assert!(meta.contains("\"max_batch\":4"), "{meta}");
+        assert!(meta.contains("\"queue\":16"), "{meta}");
+
+        let gather = Router::start_echo(
+            &[("g".to_string(), 2)],
+            BatchPolicy::gather(2, 1).unwrap(),
+            8,
+            Duration::ZERO,
+        )
+        .unwrap();
+        let meta = gather.model_meta("g").unwrap().to_string();
+        assert!(meta.contains("\"mode\":\"gather\""), "{meta}");
+    }
+
+    #[test]
+    fn deadline_expired_requests_are_shed_with_a_typed_error() {
+        // A slow worker (40 ms per batch of 1) with a 15 ms service
+        // deadline: the head of a burst executes, the tail blows its
+        // deadline in the queue and must come back as DeadlineExceeded
+        // (503 at the front door), counted in shed_requests, without
+        // ever touching the executor.
+        let router = Router::start_echo(
+            &[("echo".to_string(), 2)],
+            BatchPolicy::new(1, 0).unwrap().with_deadline_ms(15),
+            32,
+            Duration::from_millis(40),
+        )
+        .unwrap();
+        let receivers: Vec<_> = (0..6)
+            .map(|_| router.try_submit("echo", Tensor::zeros(&[2])).unwrap())
+            .collect();
+        let (mut ok, mut shed) = (0, 0);
+        for rx in receivers {
+            match rx.recv().unwrap() {
+                Ok(_) => ok += 1,
+                Err(RequestError::DeadlineExceeded { model, waited_ms }) => {
+                    assert_eq!(model, "echo");
+                    assert!(waited_ms >= 15.0, "shed early: {waited_ms}");
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(ok >= 1, "the head of the burst should execute");
+        assert!(shed >= 1, "the tail should blow the 15 ms deadline");
+        let s = router.stats("echo").unwrap();
+        assert_eq!(s.shed_requests, shed as u64);
+        assert_eq!(s.requests, ok as u64);
+        assert_eq!(s.failed_requests, 0);
+    }
+
+    #[test]
+    fn notify_hook_fires_after_the_response_is_available() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Counter(AtomicUsize);
+        impl Notify for Counter {
+            fn notify(&self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let router = echo_router(2);
+        let counter = Arc::new(Counter(AtomicUsize::new(0)));
+        let hook: Arc<dyn Notify> = counter.clone();
+        let rx = router
+            .try_submit_notify("echo", Tensor::zeros(&[2]), Some(hook))
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.outputs[0].len(), 2);
+        // The worker pokes notify after send(); recv() returning means
+        // the send happened, and the poke follows within the worker's
+        // same fan-out iteration.
+        let t0 = Instant::now();
+        while counter.0.load(Ordering::SeqCst) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "notify never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(counter.0.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn stats_track_wakeups_and_batch_histogram() {
+        let router = echo_router(2);
+        for _ in 0..3 {
+            router.infer("echo", Tensor::zeros(&[2])).unwrap();
+        }
+        let s = router.stats("echo").unwrap();
+        assert_eq!(s.requests, 3);
+        assert!(s.wakeups >= s.batches, "every batch is one wakeup");
+        assert_eq!(s.queue_depth, 0);
+        // All three sequential infers executed as batches of 1: the
+        // first histogram bucket (le=1) holds every batch.
+        assert_eq!(s.batch_hist.len(), BATCH_HIST_LE.len());
+        assert_eq!(s.batch_hist[0].0, 1.0);
+        assert_eq!(s.batch_hist[0].1, s.batches);
+        assert_eq!(
+            s.batch_hist.iter().map(|(_, n)| n).sum::<u64>(),
+            s.batches
+        );
+    }
+
+    #[test]
     fn try_submit_reports_busy_on_a_full_queue() {
         // A slow worker (50 ms per batch of 1) over a 2-slot queue: the
         // burst below must overflow into Busy instead of blocking the
@@ -697,7 +989,9 @@ mod tests {
                 model: "m".into(),
                 x: Tensor::zeros(&[2]),
                 enqueued: Instant::now(),
+                deadline: None,
                 respond: tx,
+                notify: None,
             });
             receivers.push(rx);
         }
@@ -779,7 +1073,9 @@ mod tests {
                 model: "m".into(),
                 x: Tensor::zeros(&[2]),
                 enqueued: Instant::now(),
+                deadline: None,
                 respond: tx,
+                notify: None,
             });
             receivers.push(rx);
         }

@@ -9,7 +9,11 @@ use abfp::abfp::DeviceConfig;
 use abfp::backend::BackendKind;
 use abfp::cli::Args;
 use abfp::config::SweepGrid;
-use abfp::coordinator::{loadgen, BatchPolicy, HttpServer, Router, WorkerConfig};
+use abfp::coordinator::{
+    loadgen, BatchMode, BatchPolicy, HttpConfig, HttpServer, Router,
+    ServerStats, WorkerConfig,
+};
+use abfp::json;
 use abfp::data::dataset_for;
 use abfp::graph::{self, GraphPlan, LayerPlan};
 use abfp::models;
@@ -96,6 +100,10 @@ USAGE: abfp <command> [flags]
                   --models a,b  --requests N  --tile N  --gain G
                   --backend NAME  (--f32 = --backend float32)
                   --bind ADDR (default 0.0.0.0)  --batch N  --wait-ms MS
+                  --mode continuous|gather (default continuous)
+                  --deadline-ms MS (shed still-queued requests with 503
+                  past this; 0 = never)  --pool N (HTTP event-loop
+                  threads, default 4)
                   --graph  --plan FILE  --queue N  --seed N (ADC noise
                   only; graph weights are fixed for reproducibility)
                   A --plan file is linted first: a statically saturating
@@ -103,14 +111,23 @@ USAGE: abfp <command> [flags]
                   eval-graph --plan gates identically)
   bench-serve   serving benchmark: start the HTTP server over loopback
                   and drive it with the built-in load generator; report
-                  achieved QPS + p50/p95 and per-model worker stats.
+                  achieved QPS + p50/p95 + 200/429/503 split, per-model
+                  worker stats, and write the whole run (load reports,
+                  batch-size histograms, QPS/p95 ratios) to
+                  {--out}/bench_serve.json. --mode both (default) A/Bs
+                  continuous vs gather batching on fresh routers and
+                  records the machine-independent ratios; --baseline
+                  FILE --tolerance PCT re-checks that file's `gates`
+                  object against this run (the CI regression gate).
                   Default worker is the artifact-free echo harness
                   (--elems N  --delay-ms MS  --queue N); --graph benches
                   the pure-Rust layer graphs (real multi-layer compute,
                   still artifact-free; --plan FILE as on serve);
                   --models a,b benches real artifact-backed workers.
-                  --concurrency N  --requests N  --qps Q (0 = closed
-                  loop)  --port P  --batch N  --wait-ms MS
+                  --concurrency N  --workers N (per-worker + merged load
+                  stats)  --requests N  --qps Q (0 = closed loop)
+                  --port P  --batch N  --wait-ms MS  --deadline-ms MS
+                  --pool N  --out DIR
   help          this text
 
 Backends: float32 | abfp | fixed | bfp (comma lists and `all` accepted
@@ -611,7 +628,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "artifacts", "ckpt", "models", "requests", "tile", "gain", "backend",
         "backends", "f32", "bind", "batch", "wait-ms", "http", "threads",
-        "graph", "plan", "queue", "seed", "allow-unsound-plan",
+        "graph", "plan", "queue", "seed", "allow-unsound-plan", "pool",
+        "deadline-ms", "mode",
     ])?;
     // Flags must never be silently ignored across the two worker
     // paths: `serve --plan mixed.json` without `--graph` would start
@@ -634,8 +652,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .list("models")
         .unwrap_or_else(|| vec!["bert".into(), "dlrm".into()]);
     let n_requests = args.usize_or("requests", 256)?;
-    let policy =
-        BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?)?;
+    let mut policy = policy_from_args(args)?;
+    policy.mode = batch_mode(&args.str_or("mode", "continuous"))?;
 
     let router = if args.bool("graph") {
         // Artifact-free: the pure-Rust layer graphs under a per-layer
@@ -685,7 +703,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         use std::io::IsTerminal;
         let bind = args.str_or("bind", "0.0.0.0");
         let router = Arc::new(router);
-        let mut server = HttpServer::bind(router.clone(), &bind_addr(&bind, port))?;
+        let mut server = HttpServer::bind_with(
+            router.clone(),
+            &bind_addr(&bind, port),
+            http_config_from_args(args)?,
+        )?;
         println!("listening on http://{}", server.addr());
         println!("  POST /v1/models/{{model}}:predict   GET /v1/models /healthz /metrics");
         if std::io::stdin().is_terminal() {
@@ -763,6 +785,64 @@ fn print_server_stats(router: &Router) -> Result<()> {
     Ok(())
 }
 
+/// The worker batching policy flags shared by serve and bench-serve:
+/// `--batch N  --wait-ms MS  --deadline-ms MS` (mode is set by the
+/// caller — serve takes one `--mode`, bench-serve may A/B both).
+fn policy_from_args(args: &Args) -> Result<BatchPolicy> {
+    Ok(
+        BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?)?
+            .with_deadline_ms(args.u64_or("deadline-ms", 0)?),
+    )
+}
+
+fn batch_mode(name: &str) -> Result<BatchMode> {
+    match name {
+        "continuous" => Ok(BatchMode::Continuous),
+        "gather" => Ok(BatchMode::Gather),
+        other => bail!("batch mode must be continuous or gather (got {other:?})"),
+    }
+}
+
+/// Front-door tuning shared by serve and bench-serve: `--pool N` event
+/// loops (default 4).
+fn http_config_from_args(args: &Args) -> Result<HttpConfig> {
+    Ok(HttpConfig {
+        pool: args.usize_or("pool", 4)?.max(1),
+        ..HttpConfig::default()
+    })
+}
+
+/// A worker's [`ServerStats`] as a JSON section for `bench_serve.json`.
+fn server_stats_json(s: &ServerStats) -> json::Value {
+    json::obj(vec![
+        ("requests", json::num(s.requests as f64)),
+        ("failed_requests", json::num(s.failed_requests as f64)),
+        ("batches", json::num(s.batches as f64)),
+        ("failed_batches", json::num(s.failed_batches as f64)),
+        ("shed_requests", json::num(s.shed_requests as f64)),
+        ("wakeups", json::num(s.wakeups as f64)),
+        ("queue_depth", json::num(s.queue_depth as f64)),
+        ("mean_batch", json::num(s.mean_batch)),
+        ("mean_exec_ms", json::num(s.mean_exec_ms)),
+        ("p50_ms", json::num(s.p50_ms)),
+        ("p95_ms", json::num(s.p95_ms)),
+        (
+            "batch_hist",
+            json::arr(
+                s.batch_hist
+                    .iter()
+                    .map(|(le, n)| {
+                        json::obj(vec![
+                            ("le", json::num(*le)),
+                            ("count", json::num(*n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// `bench-serve`: the serving benchmark — HTTP server + load generator
 /// over loopback, one process. The default worker is the artifact-free
 /// echo harness so the serving stack itself (HTTP parse, router, dynamic
@@ -770,11 +850,22 @@ fn print_server_stats(router: &Router) -> Result<()> {
 /// pure-Rust layer-graph workers (real multi-layer compute, still
 /// artifact-free); `--models` without `--graph` benches real
 /// artifact-backed workers.
+///
+/// `--mode both` (the default) runs the continuous-vs-gather A/B —
+/// every target is driven twice, once per batching mode against a
+/// freshly started router — and records the QPS and p95 ratios as
+/// derived metrics. The whole run (per-mode load reports, per-worker
+/// shards, server-side batch histograms and shed counts, the ratios)
+/// is written to `{--out}/bench_serve.json`; `--baseline FILE`
+/// re-checks that file's `gates` object against this run's ratios
+/// (machine-independent, so the gate travels across CI hardware) with
+/// `--tolerance PCT` slack.
 fn cmd_bench_serve(args: &Args) -> Result<()> {
     args.check_known(&[
         "requests", "concurrency", "qps", "batch", "wait-ms", "bind", "port",
         "models", "backend", "backends", "f32", "tile", "gain", "artifacts",
         "ckpt", "elems", "queue", "delay-ms", "threads", "graph", "plan", "seed",
+        "mode", "workers", "deadline-ms", "pool", "out", "baseline", "tolerance",
     ])?;
     // Refuse flag combinations that would silently bench a different
     // worker configuration than the one named: graph-only flags without
@@ -817,16 +908,133 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     }
     let requests = args.usize_or("requests", 256)?;
     let concurrency = args.usize_or("concurrency", 8)?;
+    let workers = args.usize_or("workers", 1)?;
     let qps = args.f32_or("qps", 0.0)? as f64;
-    let policy =
-        BatchPolicy::new(args.usize_or("batch", 32)?, args.u64_or("wait-ms", 4)?)?;
+    let base_policy = policy_from_args(args)?;
     let bind = args.str_or("bind", "127.0.0.1");
     let port = args.port_or("port", 0)?;
+    let http_cfg = http_config_from_args(args)?;
+    let mode_sel = args.str_or("mode", "both");
+    let modes: Vec<BatchMode> = if mode_sel == "both" {
+        // Gather first: the A/B reads baseline-then-treatment.
+        vec![BatchMode::Gather, BatchMode::Continuous]
+    } else {
+        vec![batch_mode(&mode_sel)?]
+    };
 
-    // `targets` is every (model, in_elems) the load generator will
-    // drive — all served models, not just the first, so nobody pays
-    // worker startup for a model the bench then ignores.
-    let (router, targets) = if args.bool("graph") {
+    let mut b = abfp::benchkit::Bench::new("serve").with_samples(0, 1);
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    let mut merged_by: Vec<(String, &'static str, loadgen::LoadReport)> =
+        Vec::new();
+
+    for mode in &modes {
+        let mut policy = base_policy;
+        policy.mode = *mode;
+        let mode_name = mode.as_str();
+        // A fresh router per mode: batching strategy is fixed at worker
+        // start, and reusing one would blend both modes' server stats.
+        let (router, targets) = bench_router(args, policy)?;
+        let router = Arc::new(router);
+        let mut server =
+            HttpServer::bind_with(router.clone(), &bind_addr(&bind, port), http_cfg)?;
+        for (model, in_elems) in &targets {
+            let spec = loadgen::LoadSpec {
+                addr: server.addr().to_string(),
+                model: model.clone(),
+                in_elems: *in_elems,
+                requests,
+                concurrency,
+                target_qps: qps,
+            };
+            eprintln!(
+                "[bench-serve] {mode_name}: {} x{} ({} load workers) -> http://{}/v1/models/{}:predict ({})",
+                requests,
+                concurrency,
+                workers,
+                server.addr(),
+                model,
+                if qps > 0.0 {
+                    format!("open loop @ {qps} qps")
+                } else {
+                    "closed loop".to_string()
+                }
+            );
+            let mut outcome: Option<Result<loadgen::ShardedReport>> = None;
+            b.run(&format!("{model}_{mode_name}"), requests, || {
+                outcome = Some(loadgen::run_sharded(&spec, workers));
+            });
+            let sharded = outcome.expect("bench closure ran")?;
+            println!("{model} [{mode_name}]:\n{}", sharded.render());
+            let stats = router.stats(model)?;
+            b.attach(
+                &format!("{model}_{mode_name}"),
+                json::obj(vec![
+                    ("mode", json::s(mode_name)),
+                    ("load", sharded.merged.to_json()),
+                    (
+                        "load_workers",
+                        json::arr(
+                            sharded.workers.iter().map(|w| w.to_json()).collect(),
+                        ),
+                    ),
+                    ("server", server_stats_json(&stats)),
+                ]),
+            );
+            merged_by.push((model.clone(), mode_name, sharded.merged.clone()));
+        }
+        print_server_stats(&router)?;
+        server.shutdown();
+    }
+
+    // The A/B verdict, as machine-independent ratios: absolute QPS
+    // moves with the host, the continuous/gather ratio does not (same
+    // binary, same box, back to back).
+    for (model, mode_name, cont) in &merged_by {
+        if *mode_name != "continuous" {
+            continue;
+        }
+        if let Some((_, _, gat)) = merged_by
+            .iter()
+            .find(|(m, md, _)| m == model && *md == "gather")
+        {
+            let qps_ratio = cont.qps / gat.qps.max(1e-9);
+            let p95_ratio = gat.p95_ms / cont.p95_ms.max(1e-9);
+            println!(
+                "{model}: continuous/gather qps {qps_ratio:.2}x, gather/continuous p95 {p95_ratio:.2}x"
+            );
+            derived.push((
+                format!("{model}_qps_ratio_continuous_over_gather"),
+                qps_ratio,
+            ));
+            derived.push((
+                format!("{model}_p95_ratio_gather_over_continuous"),
+                p95_ratio,
+            ));
+        }
+    }
+    for (k, v) in &derived {
+        b.note(k, *v);
+    }
+
+    let out = args.str_or("out", "reports");
+    b.save(&format!("{out}/bench_serve.json"))?;
+
+    if let Some(baseline) = args.get("baseline") {
+        let tolerance = args.f32_or("tolerance", 20.0)? as f64;
+        gate_against_baseline(baseline, tolerance, &derived)?;
+    }
+    Ok(())
+}
+
+/// Start the bench-serve worker stack for one batching policy.
+/// `targets` is every (model, in_elems) the load generator will drive —
+/// all served models, not just the first, so nobody pays worker startup
+/// for a model the bench then ignores.
+fn bench_router(
+    args: &Args,
+    policy: BatchPolicy,
+) -> Result<(Router, Vec<(String, usize)>)> {
+    if args.bool("graph") {
         // Pure-Rust layer-graph workers: real multi-layer inference on
         // a fresh checkout, no artifacts.
         let sel = model_list(args);
@@ -844,7 +1052,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         for model in sel {
             targets.push((model.clone(), graph::meta(&model)?.in_elems()));
         }
-        (router, targets)
+        Ok((router, targets))
     } else if let Some(sel) = args.list("models") {
         // Real artifact-backed workers (needs `make artifacts`).
         let backend = serving_backend_from_args(args)?;
@@ -867,7 +1075,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             let in_elems = ds.batch(&mut Pcg64::seeded(1), 1).x.len();
             targets.push((model, in_elems));
         }
-        (router, targets)
+        Ok((router, targets))
     } else {
         // Echo harness: real batcher/stats/backpressure, host compute.
         let in_elems = args.usize_or("elems", 64)?;
@@ -879,36 +1087,43 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             queue,
             delay,
         )?;
-        (router, vec![("echo".to_string(), in_elems)])
-    };
-
-    let router = Arc::new(router);
-    let mut server = HttpServer::bind(router.clone(), &bind_addr(&bind, port))?;
-    for (model, in_elems) in &targets {
-        let spec = loadgen::LoadSpec {
-            addr: server.addr().to_string(),
-            model: model.clone(),
-            in_elems: *in_elems,
-            requests,
-            concurrency,
-            target_qps: qps,
-        };
-        eprintln!(
-            "[bench-serve] {} x{} -> http://{}/v1/models/{}:predict ({})",
-            requests,
-            concurrency,
-            server.addr(),
-            model,
-            if qps > 0.0 {
-                format!("open loop @ {qps} qps")
-            } else {
-                "closed loop".to_string()
-            }
-        );
-        let report = loadgen::run(&spec)?;
-        println!("{model}: {}", report.render());
+        Ok((router, vec![("echo".to_string(), in_elems)]))
     }
-    print_server_stats(&router)?;
-    server.shutdown();
+}
+
+/// `--baseline FILE` regression gate: the file's `gates` object maps
+/// derived-metric names to their baseline values; this run must land
+/// within `tolerance_pct` below each (ratios are machine-independent,
+/// so one checked-in baseline gates every CI host).
+fn gate_against_baseline(
+    path: &str,
+    tolerance_pct: f64,
+    derived: &[(String, f64)],
+) -> Result<()> {
+    let doc = json::parse(&std::fs::read_to_string(path)?)?;
+    let gates = doc.get("gates")?.as_obj()?;
+    let mut failures = Vec::new();
+    for (key, want) in gates {
+        let want = want.as_f64()?;
+        let floor = want * (1.0 - tolerance_pct / 100.0);
+        match derived.iter().find(|(k, _)| k == key) {
+            Some((_, got)) if *got >= floor => println!(
+                "[gate] {key}: {got:.3} >= {floor:.3} (baseline {want:.3} - {tolerance_pct}%)  ok"
+            ),
+            Some((_, got)) => failures.push(format!(
+                "{key}: {got:.3} < {floor:.3} (baseline {want:.3} - {tolerance_pct}%)"
+            )),
+            None => failures.push(format!(
+                "{key}: not measured this run (gate needs --mode both)"
+            )),
+        }
+    }
+    if !failures.is_empty() {
+        bail!(
+            "bench-serve regression gate failed against {path}:\n  {}",
+            failures.join("\n  ")
+        );
+    }
+    println!("[gate] all {} gate(s) passed against {path}", gates.len());
     Ok(())
 }

@@ -1,0 +1,248 @@
+//! Soak tests for the readiness event loop: connection scale (≥1024
+//! keep-alive sockets on a fixed thread budget), slow-loris reaping,
+//! and graceful shutdown draining in-flight work.
+//!
+//! Each test opens hundreds-to-thousands of sockets, so they share one
+//! process-wide lock: the fd budget and the thread-count assertion are
+//! process-global, and two soaks interleaving would double both.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use abfp::coordinator::loadgen::Conn;
+use abfp::coordinator::{BatchPolicy, HttpConfig, HttpServer, Router};
+
+static SOAK: Mutex<()> = Mutex::new(());
+
+fn soak_lock() -> MutexGuard<'static, ()> {
+    // A poisoned lock just means an earlier soak failed; the fd/thread
+    // accounting below is still valid.
+    SOAK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn echo_server(
+    in_elems: usize,
+    delay: Duration,
+    cfg: HttpConfig,
+) -> (HttpServer, std::sync::Arc<Router>) {
+    let router = std::sync::Arc::new(
+        Router::start_echo(
+            &[("echo".to_string(), in_elems)],
+            BatchPolicy::new(8, 2).unwrap(),
+            1024,
+            delay,
+        )
+        .unwrap(),
+    );
+    let server =
+        HttpServer::bind_with(router.clone(), "127.0.0.1:0", cfg).unwrap();
+    (server, router)
+}
+
+/// OS threads in this process right now (Linux; other targets return
+/// `None` and the caller skips the budget assertion).
+fn thread_count() -> Option<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        std::fs::read_dir("/proc/self/task").ok().map(|d| d.count())
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+#[test]
+fn a_thousand_keepalive_connections_on_a_fixed_thread_budget() {
+    let _g = soak_lock();
+    // Each connection costs two fds (client + accepted side) plus the
+    // process baseline; scale down only if the limit cannot be raised.
+    let want_conns: usize = 1024;
+    let limit = netpoll::raise_nofile_limit((want_conns as u64) * 2 + 512)
+        .unwrap_or(512);
+    let n = want_conns.min(((limit.saturating_sub(256)) / 2) as usize);
+    assert!(n >= 256, "fd limit too low for a meaningful soak: {limit}");
+
+    let (mut server, _router) = echo_server(
+        8,
+        Duration::ZERO,
+        HttpConfig {
+            pool: 2,
+            ..HttpConfig::default()
+        },
+    );
+    let addr = server.addr().to_string();
+    let after_start = thread_count();
+
+    // Open every connection and prove each is actually served.
+    let mut conns: Vec<Conn> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut c = Conn::open(&addr)
+            .unwrap_or_else(|e| panic!("connect #{i} failed: {e}"));
+        let (status, body) = c
+            .request("GET", "/healthz", "")
+            .unwrap_or_else(|e| panic!("healthz #{i} failed: {e}"));
+        assert_eq!((status, body.as_str()), (200, "ok\n"), "conn #{i}");
+        conns.push(c);
+    }
+
+    // The whole point of the event loop: n live connections, zero
+    // additional threads. (Siblings blocked on the soak lock are
+    // constant across the two samples.)
+    if let (Some(t0), Some(t1)) = (after_start, thread_count()) {
+        assert!(
+            t1 <= t0 + 2,
+            "serving {n} connections grew the thread count {t0} -> {t1}"
+        );
+    }
+
+    let stats = server.stats();
+    assert!(stats.accepted() >= n as u64, "accepted {}", stats.accepted());
+    assert!(stats.open() >= n as u64, "open {}", stats.open());
+
+    // Keep-alive survives the pileup: a sample of old connections still
+    // answers (both loops, arbitrary accept order, so stride through).
+    for (i, c) in conns.iter_mut().enumerate().step_by(97) {
+        let (status, _) = c
+            .request("GET", "/healthz", "")
+            .unwrap_or_else(|e| panic!("reuse #{i} failed: {e}"));
+        assert_eq!(status, 200, "reuse #{i}");
+    }
+
+    drop(conns);
+    server.shutdown();
+}
+
+#[test]
+fn slow_loris_is_reaped_and_idlers_are_closed_quietly() {
+    let _g = soak_lock();
+    let (mut server, _router) = echo_server(
+        8,
+        Duration::ZERO,
+        HttpConfig {
+            pool: 1,
+            conn_deadline: Duration::from_millis(250),
+            ..HttpConfig::default()
+        },
+    );
+    let addr = server.addr().to_string();
+
+    // The loris: a partial request head, then silence.
+    let mut loris = TcpStream::connect(&addr).unwrap();
+    loris
+        .write_all(b"POST /v1/models/echo:predict HTTP/1.1\r\nhost: x\r\n")
+        .unwrap();
+    loris.flush().unwrap();
+    // The idler: connects and never sends a byte.
+    let mut idler = TcpStream::connect(&addr).unwrap();
+
+    loris
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    idler
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+
+    // The loris gets a 408 and then EOF.
+    let mut got = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match loris.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(k) => got.extend_from_slice(&chunk[..k]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                panic!("loris was never reaped (read timed out)")
+            }
+            Err(e) if e.kind() == ErrorKind::TimedOut => {
+                panic!("loris was never reaped (read timed out)")
+            }
+            // The reaper may RST a connection it already half-closed.
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&got);
+    assert!(
+        text.starts_with("HTTP/1.1 408"),
+        "expected a 408 before close, got {text:?}"
+    );
+
+    // The idler is closed quietly: EOF, not a response.
+    let mut got = Vec::new();
+    loop {
+        match idler.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(k) => got.extend_from_slice(&chunk[..k]),
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                panic!("idler was never closed (read timed out)")
+            }
+            Err(_) => break,
+        }
+    }
+    assert!(got.is_empty(), "idler got bytes: {:?}", String::from_utf8_lossy(&got));
+
+    // Both count as reaped (deadline enforcement), loris and idler alike.
+    let reaped = server.stats().reaped();
+    assert!(reaped >= 2, "reaped {reaped}");
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let _g = soak_lock();
+    // A slow worker (300 ms per batch) guarantees the request is still
+    // in flight when shutdown starts.
+    let (mut server, _router) = echo_server(
+        4,
+        Duration::from_millis(300),
+        HttpConfig {
+            pool: 1,
+            ..HttpConfig::default()
+        },
+    );
+    let addr = server.addr().to_string();
+
+    let t0 = Instant::now();
+    let client = std::thread::spawn({
+        let addr = addr.clone();
+        move || {
+            let mut c = Conn::open(&addr).unwrap();
+            c.request(
+                "POST",
+                "/v1/models/echo:predict",
+                r#"{"data": [1.0, 2.0, 3.0, 4.0]}"#,
+            )
+        }
+    });
+    // Let the request reach the worker, then pull the plug.
+    std::thread::sleep(Duration::from_millis(100));
+    server.shutdown();
+    let shutdown_s = t0.elapsed().as_secs_f64();
+
+    let (status, body) = client
+        .join()
+        .expect("client thread")
+        .expect("in-flight request must complete across graceful shutdown");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("outputs"), "{body}");
+    // Drained, not timed out: well under the 10 s grace bound.
+    assert!(shutdown_s < 8.0, "shutdown took {shutdown_s:.1}s");
+
+    // The port is released: nothing is listening anymore.
+    let refused = match TcpStream::connect(&addr) {
+        Err(_) => true,
+        Ok(mut s) => {
+            // Accepted by a stale backlog entry at worst; a request on
+            // it must fail.
+            s.set_read_timeout(Some(Duration::from_secs(2))).ok();
+            s.write_all(b"GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n").ok();
+            let mut buf = [0u8; 64];
+            matches!(s.read(&mut buf), Ok(0) | Err(_))
+        }
+    };
+    assert!(refused, "server still answering after shutdown");
+}

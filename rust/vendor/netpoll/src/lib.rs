@@ -1,0 +1,343 @@
+//! netpoll — the one readiness syscall the abfp serving core needs,
+//! vendored so the main crate can keep `#![forbid(unsafe_code)]`.
+//!
+//! The event loop in `abfp::coordinator::http` multiplexes thousands of
+//! nonblocking sockets over a small fixed thread pool. The only piece
+//! of that which std cannot express safely is "sleep until one of these
+//! file descriptors is ready" — classic `poll(2)`. This crate confines
+//! that single FFI call (plus a `setrlimit` helper the soak test uses
+//! to open >1024 sockets) behind a safe [`Poller`] API:
+//!
+//! ```no_run
+//! use netpoll::{Poller, READABLE, WRITABLE};
+//! let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+//! let mut poller = Poller::new();
+//! loop {
+//!     poller.clear();
+//!     let slot = poller.register(&listener, READABLE);
+//!     poller.wait(Some(std::time::Duration::from_millis(50))).unwrap();
+//!     if poller.readable(slot) { /* accept until WouldBlock */ }
+//! }
+//! ```
+//!
+//! The registration set is rebuilt every iteration (`clear` +
+//! `register`), level-triggered like `poll(2)` itself — no slab, no
+//! epoll-style ownership, and the backing `Vec` is reused so a steady
+//! loop allocates nothing once warm.
+//!
+//! On non-unix targets (no `poll`), [`Poller::wait`] degrades to a
+//! bounded sleep that reports every registered source ready: the caller
+//! already treats readiness as a hint (nonblocking ops return
+//! `WouldBlock` when there is nothing to do), so the loop stays correct
+//! and merely burns a few wakeups per second — the documented portable
+//! sleep-backoff fallback.
+
+use std::io;
+use std::time::Duration;
+
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+
+/// Interest/readiness bit: the source has bytes to read (or a pending
+/// accept, or an error/hangup the next read will surface).
+pub const READABLE: u8 = 0b01;
+/// Interest/readiness bit: the source can accept writes (or has an
+/// error/hangup the next write will surface).
+pub const WRITABLE: u8 = 0b10;
+
+#[cfg(unix)]
+mod sys {
+    use std::io;
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    /// `struct pollfd` — identical layout on Linux and the BSDs.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    #[cfg(target_os = "linux")]
+    type NFds = std::ffi::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NFds = std::ffi::c_uint;
+
+    extern "C" {
+        fn poll(
+            fds: *mut PollFd,
+            nfds: NFds,
+            timeout: std::ffi::c_int,
+        ) -> std::ffi::c_int;
+    }
+
+    /// Blocking `poll(2)` over `fds` with an EINTR retry loop.
+    /// `timeout_ms < 0` blocks indefinitely, `0` polls.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            // SAFETY: `fds` is a valid, exclusively borrowed slice of
+            // `#[repr(C)]` pollfd records for the duration of the call,
+            // and the length is passed alongside the pointer.
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+            if rc >= 0 {
+                return Ok(rc as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+}
+
+/// A reusable `poll(2)` registration set. Rebuild it each loop
+/// iteration with [`Poller::clear`] + [`Poller::register`], then
+/// [`Poller::wait`]; readiness is read back per returned slot index.
+#[derive(Default)]
+pub struct Poller {
+    #[cfg(unix)]
+    fds: Vec<sys::PollFd>,
+    /// Fallback bookkeeping: `(interest, ready)` per slot.
+    #[cfg(not(unix))]
+    fds: Vec<(u8, u8)>,
+}
+
+impl Poller {
+    pub fn new() -> Poller {
+        Poller::default()
+    }
+
+    /// Drop every registration, keeping the backing allocation.
+    pub fn clear(&mut self) {
+        self.fds.clear();
+    }
+
+    /// Number of registered sources.
+    pub fn len(&self) -> usize {
+        self.fds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fds.is_empty()
+    }
+
+    /// Register a socket (anything `AsRawFd` on unix) with an interest
+    /// mask ([`READABLE`] | [`WRITABLE`]). Returns the slot index used
+    /// to read readiness back after [`Poller::wait`].
+    #[cfg(unix)]
+    pub fn register<S: AsRawFd>(&mut self, src: &S, interest: u8) -> usize {
+        let mut events = 0i16;
+        if interest & READABLE != 0 {
+            events |= sys::POLLIN;
+        }
+        if interest & WRITABLE != 0 {
+            events |= sys::POLLOUT;
+        }
+        self.fds.push(sys::PollFd {
+            fd: src.as_raw_fd(),
+            events,
+            revents: 0,
+        });
+        self.fds.len() - 1
+    }
+
+    /// Fallback registration: no fd is captured; [`Poller::wait`]
+    /// reports the slot ready per its interest after a bounded sleep.
+    #[cfg(not(unix))]
+    pub fn register<S>(&mut self, _src: &S, interest: u8) -> usize {
+        self.fds.push((interest, 0));
+        self.fds.len() - 1
+    }
+
+    /// Wait until at least one registered source is ready or `timeout`
+    /// elapses (`None` = wait indefinitely). Returns how many sources
+    /// reported readiness.
+    #[cfg(unix)]
+    pub fn wait(&mut self, timeout: Option<Duration>) -> io::Result<usize> {
+        let timeout_ms: i32 = match timeout {
+            None => -1,
+            // Round up so a nonzero timeout can't spin at 0 ms; clamp
+            // to i32 (poll's interface) — ~24 days is "indefinitely".
+            Some(t) => t.as_millis().max(1).min(i32::MAX as u128) as i32,
+        };
+        sys::poll_fds(&mut self.fds, timeout_ms)
+    }
+
+    /// Portable fallback: bounded sleep, then report everything ready.
+    #[cfg(not(unix))]
+    pub fn wait(&mut self, timeout: Option<Duration>) -> io::Result<usize> {
+        let nap = timeout.unwrap_or(Duration::from_millis(10)).min(Duration::from_millis(10));
+        std::thread::sleep(nap);
+        for slot in self.fds.iter_mut() {
+            slot.1 = slot.0;
+        }
+        Ok(self.fds.len())
+    }
+
+    /// Did `slot` report readable? Errors/hangups count as readable —
+    /// the caller's next nonblocking read surfaces the real error.
+    pub fn readable(&self, slot: usize) -> bool {
+        self.ready(slot, READABLE)
+    }
+
+    /// Did `slot` report writable? Errors/hangups count as writable —
+    /// the caller's next nonblocking write surfaces the real error.
+    pub fn writable(&self, slot: usize) -> bool {
+        self.ready(slot, WRITABLE)
+    }
+
+    #[cfg(unix)]
+    fn ready(&self, slot: usize, interest: u8) -> bool {
+        let Some(fd) = self.fds.get(slot) else {
+            return false;
+        };
+        let err = sys::POLLERR | sys::POLLHUP | sys::POLLNVAL;
+        let want = match interest {
+            READABLE => sys::POLLIN | err,
+            _ => sys::POLLOUT | err,
+        };
+        fd.revents & want != 0
+    }
+
+    #[cfg(not(unix))]
+    fn ready(&self, slot: usize, interest: u8) -> bool {
+        self.fds.get(slot).map(|s| s.1 & interest != 0).unwrap_or(false)
+    }
+}
+
+#[cfg(any(
+    all(target_os = "linux", target_pointer_width = "64"),
+    target_os = "macos"
+))]
+mod rlimit {
+    use std::io;
+
+    /// `struct rlimit` with 64-bit `rlim_t` (glibc/musl on 64-bit
+    /// Linux, always on macOS).
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(target_os = "macos")]
+    const RLIMIT_NOFILE: i32 = 8;
+
+    extern "C" {
+        fn getrlimit(resource: std::ffi::c_int, rlim: *mut RLimit) -> std::ffi::c_int;
+        fn setrlimit(resource: std::ffi::c_int, rlim: *const RLimit) -> std::ffi::c_int;
+    }
+
+    pub fn raise_nofile(want: u64) -> io::Result<u64> {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        // SAFETY: `lim` is a valid exclusive `#[repr(C)]` out-pointer.
+        if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if lim.cur >= want {
+            return Ok(lim.cur);
+        }
+        lim.cur = want.min(lim.max);
+        // SAFETY: `lim` is a valid `#[repr(C)]` record for the call.
+        if unsafe { setrlimit(RLIMIT_NOFILE, &lim) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(lim.cur)
+    }
+}
+
+/// Raise the soft `RLIMIT_NOFILE` toward `want` (capped at the hard
+/// limit) and return the resulting soft limit. The ≥1024-connection
+/// soak test calls this; unsupported targets report
+/// `ErrorKind::Unsupported` and the caller scales its load down.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    #[cfg(any(
+        all(target_os = "linux", target_pointer_width = "64"),
+        target_os = "macos"
+    ))]
+    {
+        rlimit::raise_nofile(want)
+    }
+    #[cfg(not(any(
+        all(target_os = "linux", target_pointer_width = "64"),
+        target_os = "macos"
+    )))]
+    {
+        let _ = want;
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "raise_nofile_limit: unsupported target",
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream, UdpSocket};
+    use std::time::Instant;
+
+    #[test]
+    fn udp_readability_tracks_datagrams() {
+        let rx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        rx.set_nonblocking(true).unwrap();
+        let tx = UdpSocket::bind("127.0.0.1:0").unwrap();
+        tx.connect(rx.local_addr().unwrap()).unwrap();
+
+        let mut p = Poller::new();
+        let slot = p.register(&rx, READABLE);
+        // Nothing sent: times out quickly without readiness (on unix).
+        let t0 = Instant::now();
+        p.wait(Some(Duration::from_millis(20))).unwrap();
+        if cfg!(unix) {
+            assert!(!p.readable(slot));
+            assert!(t0.elapsed() >= Duration::from_millis(15));
+        }
+
+        tx.send(b"x").unwrap();
+        p.clear();
+        let slot = p.register(&rx, READABLE);
+        let n = p.wait(Some(Duration::from_secs(2))).unwrap();
+        assert!(n >= 1);
+        assert!(p.readable(slot));
+        let mut buf = [0u8; 8];
+        assert_eq!(rx.recv(&mut buf).unwrap(), 1);
+    }
+
+    #[test]
+    fn tcp_listener_and_stream_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let client = TcpStream::connect(addr).unwrap();
+        let mut p = Poller::new();
+        let lslot = p.register(&listener, READABLE);
+        let n = p.wait(Some(Duration::from_secs(2))).unwrap();
+        assert!(n >= 1 && p.readable(lslot), "pending accept not reported");
+        let (server_side, _) = listener.accept().unwrap();
+
+        // A fresh connected stream with an empty send buffer: writable.
+        p.clear();
+        let wslot = p.register(&server_side, WRITABLE);
+        p.wait(Some(Duration::from_secs(2))).unwrap();
+        assert!(p.writable(wslot));
+        drop(client);
+    }
+
+    #[test]
+    fn nofile_limit_is_raised_or_unsupported() {
+        match raise_nofile_limit(1024) {
+            Ok(cur) => assert!(cur >= 256, "soft NOFILE suspiciously low: {cur}"),
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::Unsupported),
+        }
+    }
+}
