@@ -4,10 +4,17 @@
 //!
 //! The walk mirrors [`ModelGraph::forward_with`] exactly — the bias add
 //! happens inside the `Linear` step, residual sources are the saved
-//! per-layer intervals — so containment transfers: any activation the
-//! executor produces from an input inside the declared domain lies
+//! per-layer intervals, and an `Attention` layer contributes four site
+//! reports in q/k/v/o order — so containment transfers: any activation
+//! the executor produces from an input inside the declared domain lies
 //! inside the propagated interval (`tests/analysis.rs` drives random
-//! batches through `GraphExecutor` to pin this on all six archetypes).
+//! batches through `GraphExecutor` to pin this on all seven archetypes).
+//!
+//! Transformer transfers are conservative where exactness is hard:
+//! embedding output is the exact table hull, LayerNorm uses the
+//! algebraic bound `|x_i - mean| / sigma_pop <= sqrt(d - 1)`, softmax
+//! is the padded unit interval, and the attention context — a convex
+//! combination of V rows — is the padded V-site output interval.
 //!
 //! Severity policy:
 //!
@@ -29,6 +36,7 @@ use crate::backend::BackendKind;
 use crate::graph::{build, builders::GRAPH_SEED, registry, GraphPlan, Layer, ModelGraph};
 use crate::json::{self, Value};
 use crate::report::Table;
+use crate::tensor::Tensor;
 
 /// Clamp-fraction bound at which a diagnostic becomes an `Error` —
 /// deliberately equal to the planner's default `sat_prune` threshold,
@@ -63,7 +71,7 @@ impl std::fmt::Display for Level {
 #[derive(Debug, Clone)]
 pub struct Diagnostic {
     pub level: Level,
-    /// `Linear` ordinal the finding is about (None = whole model).
+    /// Matmul-site ordinal the finding is about (None = whole model).
     pub layer: Option<usize>,
     pub message: String,
     /// Actionable fix, e.g. "drop gain to <= 8 or set layer 0 to float32".
@@ -91,10 +99,11 @@ impl Diagnostic {
     }
 }
 
-/// Range analysis of one `Linear` layer.
+/// Range analysis of one planned matmul site (`Linear`, `TokenLinear`,
+/// or one of an `Attention` layer's q/k/v/o projections).
 #[derive(Debug, Clone)]
 pub struct LinearReport {
-    /// `Linear` ordinal in graph order.
+    /// Site ordinal in [`ModelGraph::linear_weights`] order.
     pub layer: usize,
     /// Resolved layer plan, compact form (`abfp(n=32,g=2)`).
     pub summary: String,
@@ -201,6 +210,137 @@ fn abfp_hint(layer: usize, cert: &AbfpCert, tile: usize) -> String {
     }
 }
 
+/// Interval transfer for LayerNorm. For any real vector,
+/// `sum_j (x_j - mean)^2 >= (x_i - mean)^2 * d / (d - 1)`, so the
+/// population-normalized value satisfies
+/// `|x_i - mean| / sigma_pop <= sqrt(d - 1)` (attained by a one-hot
+/// deviation); the `eps` in the denominator only shrinks the ratio.
+/// The output therefore lies in the hull over channels of
+/// `beta_i ± |gamma_i| * sqrt(d - 1)`, widened by a relative cushion
+/// far above the f32 rounding of the mean/variance reduction.
+fn layer_norm_iv(gamma: &[f32], beta: &[f32]) -> Interval {
+    let d = gamma.len();
+    let s = ((d.saturating_sub(1)) as f32).sqrt() * (1.0 + 1e-4);
+    let mut out: Option<Interval> = None;
+    for (&g, &b) in gamma.iter().zip(beta) {
+        let iv = Interval::new(b - g.abs() * s, b + g.abs() * s);
+        out = Some(match out {
+            Some(acc) => acc.hull(iv),
+            None => iv,
+        });
+    }
+    out.unwrap_or(Interval::point(0.0)).pad()
+}
+
+/// Shared analysis of one planned matmul site: resolve the layer plan,
+/// bound the output through [`linear_range`], emit the severity
+/// diagnostic, and record the per-site [`LinearReport`].
+struct SiteLinter<'a> {
+    plan: &'a GraphPlan,
+    count: usize,
+    tile: usize,
+    diags: &'a mut Vec<Diagnostic>,
+    linears: &'a mut Vec<LinearReport>,
+}
+
+impl SiteLinter<'_> {
+    /// Returns the value interval after the matmul (+ optional bias).
+    fn site(
+        &mut self,
+        li: usize,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        input: Interval,
+    ) -> Result<Interval> {
+        let mut lp = self.plan.resolve(li, self.count);
+        if lp.device.n == 0 {
+            lp.device.n = self.tile;
+        }
+        let range = linear_range(&lp, w, input)?;
+        let mut cur = range.out;
+        if let Some(b) = b {
+            cur = cur.add(Interval::of_slice(b.data()));
+        }
+        let (certified, clamp_bound) = match (lp.backend, &range.cert) {
+            (BackendKind::Abfp, Some(cert)) => {
+                if cert.certified() {
+                    self.diags.push(Diagnostic {
+                        level: Level::Info,
+                        layer: Some(li),
+                        message: format!(
+                            "layer {li} {}: certified saturation-free \
+                             on input {input} (max safe gain {:.3})",
+                            lp.summary(),
+                            cert.max_gain_safe
+                        ),
+                        hint: None,
+                        clamp_bound: Some(0.0),
+                    });
+                } else {
+                    let bound = cert.clamp_bound();
+                    let level = if bound >= ERROR_BOUND {
+                        Level::Error
+                    } else {
+                        Level::Warn
+                    };
+                    self.diags.push(Diagnostic {
+                        level,
+                        layer: Some(li),
+                        message: format!(
+                            "layer {li} {}: up to {:.1}% of ADC \
+                             conversions may clamp ({}/{} analog \
+                             cells unsafe on input {input})",
+                            lp.summary(),
+                            100.0 * bound,
+                            cert.unsafe_cells,
+                            cert.total_cells
+                        ),
+                        hint: Some(abfp_hint(li, cert, lp.device.n)),
+                        clamp_bound: Some(bound),
+                    });
+                }
+                (cert.certified(), cert.clamp_bound())
+            }
+            (BackendKind::Float32, _) => {
+                self.diags.push(Diagnostic {
+                    level: Level::Info,
+                    layer: Some(li),
+                    message: format!(
+                        "layer {li} float32: exact arithmetic, \
+                         output {cur}"
+                    ),
+                    hint: None,
+                    clamp_bound: None,
+                });
+                (true, 0.0)
+            }
+            _ => {
+                self.diags.push(Diagnostic {
+                    level: Level::Info,
+                    layer: Some(li),
+                    message: format!(
+                        "layer {li} {}: digital accumulation cannot \
+                         saturate, output {cur}",
+                        lp.summary()
+                    ),
+                    hint: None,
+                    clamp_bound: None,
+                });
+                (true, 0.0)
+            }
+        };
+        self.linears.push(LinearReport {
+            layer: li,
+            summary: lp.summary(),
+            input,
+            output: cur,
+            certified,
+            clamp_bound,
+        });
+        Ok(cur)
+    }
+}
+
 /// Lint `plan` against `graph`: propagate value intervals through every
 /// layer and certify/bound every analog matmul.
 pub fn lint_graph(graph: &ModelGraph, plan: &GraphPlan) -> Result<LintReport> {
@@ -234,110 +374,62 @@ pub fn lint_graph(graph: &ModelGraph, plan: &GraphPlan) -> Result<LintReport> {
     let mut linears: Vec<LinearReport> = Vec::new();
     let mut li = 0usize;
 
-    for layer in graph.layers() {
-        match layer {
-            Layer::Flatten => {}
-            Layer::Linear { w, b } => {
-                let mut lp = plan.resolve(li, count);
-                if lp.device.n == 0 {
-                    lp.device.n = tile;
+    {
+        let mut sl = SiteLinter {
+            plan,
+            count,
+            tile,
+            diags: &mut diags,
+            linears: &mut linears,
+        };
+        for layer in graph.layers() {
+            match layer {
+                Layer::Flatten => {}
+                Layer::Linear { w, b } | Layer::TokenLinear { w, b } => {
+                    cur = sl.site(li, w, b.as_ref(), cur)?;
+                    li += 1;
                 }
-                let input = cur;
-                let range = linear_range(&lp, w, input)?;
-                cur = range.out;
-                if let Some(b) = b {
+                Layer::Bias(b) => {
                     cur = cur.add(Interval::of_slice(b.data()));
                 }
-                let (certified, clamp_bound) = match (lp.backend, &range.cert) {
-                    (BackendKind::Abfp, Some(cert)) => {
-                        if cert.certified() {
-                            diags.push(Diagnostic {
-                                level: Level::Info,
-                                layer: Some(li),
-                                message: format!(
-                                    "layer {li} {}: certified saturation-free \
-                                     on input {input} (max safe gain {:.3})",
-                                    lp.summary(),
-                                    cert.max_gain_safe
-                                ),
-                                hint: None,
-                                clamp_bound: Some(0.0),
-                            });
-                        } else {
-                            let bound = cert.clamp_bound();
-                            let level = if bound >= ERROR_BOUND {
-                                Level::Error
-                            } else {
-                                Level::Warn
-                            };
-                            diags.push(Diagnostic {
-                                level,
-                                layer: Some(li),
-                                message: format!(
-                                    "layer {li} {}: up to {:.1}% of ADC \
-                                     conversions may clamp ({}/{} analog \
-                                     cells unsafe on input {input})",
-                                    lp.summary(),
-                                    100.0 * bound,
-                                    cert.unsafe_cells,
-                                    cert.total_cells
-                                ),
-                                hint: Some(abfp_hint(li, cert, lp.device.n)),
-                                clamp_bound: Some(bound),
-                            });
-                        }
-                        (cert.certified(), cert.clamp_bound())
-                    }
-                    (BackendKind::Float32, _) => {
-                        diags.push(Diagnostic {
-                            level: Level::Info,
-                            layer: Some(li),
-                            message: format!(
-                                "layer {li} float32: exact arithmetic, \
-                                 output {cur}"
-                            ),
-                            hint: None,
-                            clamp_bound: None,
-                        });
-                        (true, 0.0)
-                    }
-                    _ => {
-                        diags.push(Diagnostic {
-                            level: Level::Info,
-                            layer: Some(li),
-                            message: format!(
-                                "layer {li} {}: digital accumulation cannot \
-                                 saturate, output {cur}",
-                                lp.summary()
-                            ),
-                            hint: None,
-                            clamp_bound: None,
-                        });
-                        (true, 0.0)
-                    }
-                };
-                linears.push(LinearReport {
-                    layer: li,
-                    summary: lp.summary(),
-                    input,
-                    output: cur,
-                    certified,
-                    clamp_bound,
-                });
-                li += 1;
+                Layer::Relu => cur = cur.relu_iv(),
+                Layer::Gelu => cur = cur.gelu_iv(),
+                Layer::Tanh => cur = cur.tanh_iv(),
+                Layer::Sigmoid => cur = cur.sigmoid_iv(),
+                Layer::Residual { from } => {
+                    cur = cur.add(kept[*from]);
+                }
+                Layer::Embedding { table } => {
+                    // Exact: ids round + clamp into the table, so every
+                    // output element is a table entry.
+                    cur = Interval::of_slice(table.data());
+                }
+                Layer::LayerNorm { gamma, beta } => {
+                    cur = layer_norm_iv(gamma.data(), beta.data());
+                }
+                Layer::Softmax { .. } => {
+                    // Each output is e_i / sum(e) with non-negative
+                    // terms; the pad covers the f32 division rounding.
+                    cur = Interval::new(0.0, 1.0).pad();
+                }
+                Layer::Attention { wq, wk, wv, wo } => {
+                    // q/k/v all read the layer input; only the V range
+                    // flows onward. The softmax weights lie in the unit
+                    // simplex, so each context element is a convex
+                    // combination of that position's V column — inside
+                    // the V-site output interval up to f32 dot-product
+                    // rounding, covered by two pad() layers (~2e-5
+                    // relative, ~10x the worst-case length-32 error).
+                    sl.site(li, wq, None, cur)?;
+                    sl.site(li + 1, wk, None, cur)?;
+                    let v = sl.site(li + 2, wv, None, cur)?;
+                    let context = v.pad().pad();
+                    cur = sl.site(li + 3, wo, None, context)?;
+                    li += 4;
+                }
             }
-            Layer::Bias(b) => {
-                cur = cur.add(Interval::of_slice(b.data()));
-            }
-            Layer::Relu => cur = cur.relu_iv(),
-            Layer::Gelu => cur = cur.gelu_iv(),
-            Layer::Tanh => cur = cur.tanh_iv(),
-            Layer::Sigmoid => cur = cur.sigmoid_iv(),
-            Layer::Residual { from } => {
-                cur = cur.add(kept[*from]);
-            }
+            kept.push(cur);
         }
-        kept.push(cur);
     }
 
     Ok(LintReport {
@@ -469,7 +561,7 @@ mod tests {
     }
 
     #[test]
-    fn six_archetypes_lint_without_errors_on_digital_plans() {
+    fn seven_archetypes_lint_without_errors_on_digital_plans() {
         let plan = GraphPlan::uniform(LayerPlan::new(
             BackendKind::Bfp,
             DeviceConfig::new(0, (8, 8, 8), 1.0, 0.0),
@@ -480,6 +572,25 @@ mod tests {
             assert!(r.linears.iter().all(|l| l.certified), "{m}");
             assert!(r.output.width() > 0.0, "{m}");
         }
+    }
+
+    #[test]
+    fn transformer_attention_gets_per_site_reports() {
+        let r = lint_plan("transformer", &GraphPlan::float32()).unwrap();
+        assert_eq!(r.linears.len(), 7, "{:?}", r.linears);
+        assert_eq!(r.error_count(), 0, "{:?}", r.diags);
+        assert!(r.linears.iter().all(|l| l.certified));
+        // The softmax head bounds the model output near [0, 1].
+        assert!(r.output.lo >= -1e-4 && r.output.hi <= 1.0 + 1e-4, "{}", r.output);
+        // q/k/v share the post-LayerNorm input interval; the o site
+        // reads the context, which sits inside the padded V output.
+        assert_eq!(r.linears[0].input, r.linears[1].input);
+        assert_eq!(r.linears[1].input, r.linears[2].input);
+        let (v, o) = (&r.linears[2], &r.linears[3]);
+        assert!(o.input.lo <= v.output.lo && o.input.hi >= v.output.hi);
+        // Site ordinals are the linear_weights enumeration order.
+        let ords: Vec<usize> = r.linears.iter().map(|l| l.layer).collect();
+        assert_eq!(ords, vec![0, 1, 2, 3, 4, 5, 6]);
     }
 
     #[test]

@@ -49,6 +49,24 @@ pub struct Executed {
     pub padded_batch: usize,
 }
 
+/// One finished autoregressive decode
+/// ([`ModelExecutor::generate`]): the greedily-sampled token ids and
+/// the per-token wall-clock the serving layer reports.
+#[derive(Debug, Clone)]
+pub struct GenerateOutcome {
+    /// Generated token ids, `max_new` of them.
+    pub tokens: Vec<u32>,
+    /// Wall-clock milliseconds per emitted token. Entry 0 covers the
+    /// whole prompt prefill plus the first token; entries 1.. are pure
+    /// single-token decode steps.
+    pub per_token_ms: Vec<f64>,
+    /// Final KV-cache length (prompt + generated tokens).
+    pub cache_len: usize,
+    /// Cached K/V f32 elements across layers at completion — the
+    /// `/metrics` cache-occupancy gauge.
+    pub cached_elems: usize,
+}
+
 /// A model execution engine behind the serving worker loop.
 ///
 /// Contract: the worker packs `b` requests (`1 <= b <= max_batch()`)
@@ -101,6 +119,22 @@ pub trait ModelExecutor {
     /// Machine-readable metadata for `GET /v1/models` and the serve
     /// startup log (executor kind, shapes, numeric plan, ...).
     fn describe(&self) -> Value;
+
+    /// Whether this executor can run the autoregressive `:generate`
+    /// scenario ([`ModelExecutor::generate`]). The router rejects
+    /// generate requests for models whose worker reports `false`, so
+    /// clients get a 400 instead of a worker-side failure.
+    fn supports_generate(&self) -> bool {
+        false
+    }
+
+    /// Decode `max_new` tokens autoregressively from `prompt` (token
+    /// ids as f32). Runs **unbatched** on the worker thread — decode
+    /// is the batch-1 latency workload. Executors that return `true`
+    /// from [`ModelExecutor::supports_generate`] must override this.
+    fn generate(&mut self, _prompt: &[f32], _max_new: usize) -> Result<GenerateOutcome> {
+        bail!("executor {:?} does not support :generate", self.kind());
+    }
 }
 
 /// Fault-injection sentinel for [`EchoExecutor`] workers: an example

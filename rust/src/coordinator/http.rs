@@ -35,6 +35,13 @@
 //!   `{"data": [...], "shape": [...]?}` (one example; `shape` defaults
 //!   to flat). 200 answers carry per-example `outputs`, `queue_ms`,
 //!   `total_ms`, `batch_size`.
+//! * `POST /v1/models/{model}:generate` — JSON body
+//!   `{"tokens": [...], "max_new_tokens": N}` (a token-id prompt).
+//!   Drives the worker's KV-cache autoregressive decode loop; 200
+//!   answers carry the decoded `tokens`, `per_token_ms` (entry 0 is
+//!   prompt prefill + first token), `tok_p50_ms`/`tok_p95_ms`,
+//!   `cache_len`/`cached_elems`, and the usual timing fields. Models
+//!   without decode support answer 400.
 //! * `GET /v1/models` — the served-model roster (`models`, a name
 //!   array) plus per-model executor metadata (`detail`: executor kind,
 //!   shapes, the worker's `batching` mode; graph workers add layer
@@ -80,6 +87,7 @@ use super::server::{
     Notify, RequestError, Response, Router, ServerStats, SubmitError,
 };
 use crate::json;
+use crate::stats::quantile_sorted;
 use crate::tensor::Tensor;
 
 /// Header-section cap (request line + headers).
@@ -399,13 +407,15 @@ struct ParsedHead {
     expect_continue: bool,
 }
 
-/// A predict in flight on the worker: the oneshot receiver plus what
-/// the response writer needs once it lands.
+/// A predict or generate in flight on the worker: the oneshot receiver
+/// plus what the response writer needs once it lands.
 struct Pending {
     rx: Receiver<Result<Response, RequestError>>,
     model: String,
     head_only: bool,
     keep_alive: bool,
+    /// Format the answer as a `:generate` decode response.
+    generate: bool,
 }
 
 /// A protocol-level failure mapped to a status for the client.
@@ -525,6 +535,9 @@ impl Conn {
                 outcome => {
                     let p = self.pending.take().unwrap();
                     let (status, body) = match outcome {
+                        Ok(Ok(resp)) if p.generate => {
+                            (200, generate_body(&p.model, &resp))
+                        }
                         Ok(Ok(resp)) => (200, response_body(&p.model, &resp)),
                         Ok(Err(e @ RequestError::Exec(_))) => {
                             (500, error_body(&e.to_string()))
@@ -742,22 +755,34 @@ impl Conn {
         // liveness probe sees the same 200 a GET would.
         let head_only = req.method == "HEAD";
         let keep_alive = req.keep_alive && !stopping;
-        let predict_model = (req.method == "POST")
-            .then(|| {
-                req.path
-                    .strip_prefix("/v1/models/")
-                    .and_then(|rest| rest.strip_suffix(":predict"))
-            })
-            .flatten()
-            .filter(|m| !m.is_empty());
-        if let Some(model) = predict_model {
-            match start_predict(router, model, &req.body, notify) {
+        let action = |suffix: &'static str| {
+            (req.method == "POST")
+                .then(|| {
+                    req.path
+                        .strip_prefix("/v1/models/")
+                        .and_then(|rest| rest.strip_suffix(suffix))
+                })
+                .flatten()
+                .filter(|m| !m.is_empty())
+        };
+        let predict_model = action(":predict");
+        let generate_model = action(":generate");
+        if predict_model.is_some() || generate_model.is_some() {
+            let (model, submitted) = match predict_model {
+                Some(model) => (model, start_predict(router, model, &req.body, notify)),
+                None => {
+                    let model = generate_model.unwrap();
+                    (model, start_generate(router, model, &req.body, notify))
+                }
+            };
+            match submitted {
                 Ok(rx) => {
                     self.pending = Some(Pending {
                         rx,
                         model: model.to_string(),
                         head_only,
                         keep_alive,
+                        generate: generate_model.is_some(),
                     });
                     return;
                 }
@@ -820,6 +845,16 @@ impl Conn {
     }
 }
 
+/// [`SubmitError`] -> HTTP status (the typed front-door contract).
+fn submit_status(e: &SubmitError) -> u16 {
+    match e {
+        SubmitError::UnknownModel(_) => 404,
+        SubmitError::BadShape(_) => 400,
+        SubmitError::Busy(_) => 429,
+        SubmitError::Gone(_) => 503,
+    }
+}
+
 /// Parse + submit a predict; `Err` is an immediate `(status, body)`.
 fn start_predict(
     router: &Router,
@@ -834,15 +869,42 @@ fn start_predict(
     let x = parse_tensor(&value).map_err(|e| (400, error_body(&e.to_string())))?;
     router
         .try_submit_notify(model, x, Some(notify.clone()))
-        .map_err(|e| {
-            let status = match &e {
-                SubmitError::UnknownModel(_) => 404,
-                SubmitError::BadShape(_) => 400,
-                SubmitError::Busy(_) => 429,
-                SubmitError::Gone(_) => 503,
-            };
-            (status, error_body(&e.to_string()))
-        })
+        .map_err(|e| (submit_status(&e), error_body(&e.to_string())))
+}
+
+/// Parse + submit a `:generate`; `Err` is an immediate `(status, body)`.
+/// Body contract: `{"tokens": [...], "max_new_tokens": N}`.
+fn start_generate(
+    router: &Router,
+    model: &str,
+    body: &[u8],
+    notify: &Arc<dyn Notify>,
+) -> Result<Receiver<Result<Response, RequestError>>, (u16, String)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, error_body("body is not UTF-8")))?;
+    let value =
+        json::parse(text).map_err(|e| (400, error_body(&format!("invalid JSON: {e}"))))?;
+    let contract = r#"body must be {"tokens": [...], "max_new_tokens": N}"#;
+    let prompt: Vec<f32> = value
+        .get("tokens")
+        .map_err(|_| (400, error_body(contract)))?
+        .as_arr()
+        .map_err(|e| (400, error_body(&e.to_string())))?
+        .iter()
+        .map(|n| n.as_f64().map(|f| f as f32))
+        .collect::<Result<_>>()
+        .map_err(|e| (400, error_body(&e.to_string())))?;
+    let max_new = value
+        .get("max_new_tokens")
+        .map_err(|_| (400, error_body(contract)))?
+        .as_f64()
+        .map_err(|e| (400, error_body(&e.to_string())))?;
+    if !(max_new.is_finite() && max_new >= 0.0) {
+        return Err((400, error_body("max_new_tokens must be a non-negative number")));
+    }
+    router
+        .try_submit_generate(model, prompt, max_new as usize, Some(notify.clone()))
+        .map_err(|e| (submit_status(&e), error_body(&e.to_string())))
 }
 
 /// Dispatch a non-predict request: `(status, content-type, body)`.
@@ -904,6 +966,34 @@ fn response_body(model: &str, r: &Response) -> String {
         ("queue_ms", json::num(r.queue_ms)),
         ("total_ms", json::num(r.total_ms)),
         ("batch_size", json::num(r.batch_size as f64)),
+    ])
+    .to_string()
+}
+
+/// The `:generate` 200 body: decoded token ids plus per-token latency
+/// (raw series and summary quantiles) and KV-cache occupancy.
+fn generate_body(model: &str, r: &Response) -> String {
+    let Some(d) = &r.decode else {
+        return response_body(model, r); // defensive: not a decode answer
+    };
+    let mut sorted = d.per_token_ms.clone();
+    sorted.sort_by(f64::total_cmp);
+    json::obj(vec![
+        ("model", json::s(model)),
+        (
+            "tokens",
+            json::arr(d.tokens.iter().map(|&t| json::num(t as f64)).collect()),
+        ),
+        (
+            "per_token_ms",
+            json::arr(d.per_token_ms.iter().map(|&v| json::num(v)).collect()),
+        ),
+        ("tok_p50_ms", json::num(quantile_sorted(&sorted, 0.5))),
+        ("tok_p95_ms", json::num(quantile_sorted(&sorted, 0.95))),
+        ("cache_len", json::num(d.cache_len as f64)),
+        ("cached_elems", json::num(d.cached_elems as f64)),
+        ("queue_ms", json::num(r.queue_ms)),
+        ("total_ms", json::num(r.total_ms)),
     ])
     .to_string()
 }
@@ -1057,6 +1147,83 @@ fn metrics_body(router: &Router, http: &HttpStats) -> String {
             out,
             "abfp_latency_ms{{model=\"{m}\",quantile=\"0.95\"}} {}",
             fmt_prom(s.p95_ms)
+        );
+    }
+
+    // Autoregressive decode (`:generate`) counters and gauges.
+    emit(
+        &mut out,
+        "abfp_decode_requests_total",
+        "counter",
+        ":generate decode requests completed.",
+        &rows,
+        |s| s.decode_requests as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_decode_tokens_total",
+        "counter",
+        "New tokens decoded across :generate requests.",
+        &rows,
+        |s| s.decode_tokens as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_decode_cache_elems",
+        "gauge",
+        "KV-cache elements held after the most recent decode.",
+        &rows,
+        |s| s.cache_elems as f64,
+    );
+
+    // Per-token decode latency histogram (cumulative buckets).
+    let _ = writeln!(
+        out,
+        "# HELP abfp_decode_token_ms Per-token decode latency \
+         (ms; token 0 includes prompt prefill)."
+    );
+    let _ = writeln!(out, "# TYPE abfp_decode_token_ms histogram");
+    for (m, s) in &rows {
+        let mut cum = 0u64;
+        for (le, n) in &s.decode_hist {
+            cum += n;
+            let le = if le.is_infinite() {
+                "+Inf".to_string()
+            } else {
+                format!("{le}")
+            };
+            let _ = writeln!(
+                out,
+                "abfp_decode_token_ms_bucket{{model=\"{m}\",le=\"{le}\"}} {cum}"
+            );
+        }
+        let _ = writeln!(
+            out,
+            "abfp_decode_token_ms_sum{{model=\"{m}\"}} {}",
+            fmt_prom(s.decode_ms_sum)
+        );
+        let _ = writeln!(
+            out,
+            "abfp_decode_token_ms_count{{model=\"{m}\"}} {}",
+            s.decode_tokens
+        );
+    }
+
+    let _ = writeln!(
+        out,
+        "# HELP abfp_decode_token_latency_ms Per-token decode latency quantiles."
+    );
+    let _ = writeln!(out, "# TYPE abfp_decode_token_latency_ms gauge");
+    for (m, s) in &rows {
+        let _ = writeln!(
+            out,
+            "abfp_decode_token_latency_ms{{model=\"{m}\",quantile=\"0.5\"}} {}",
+            fmt_prom(s.tok_p50_ms)
+        );
+        let _ = writeln!(
+            out,
+            "abfp_decode_token_latency_ms{{model=\"{m}\",quantile=\"0.95\"}} {}",
+            fmt_prom(s.tok_p95_ms)
         );
     }
 
@@ -1335,6 +1502,7 @@ mod tests {
             model: "m".into(),
             head_only: false,
             keep_alive: true,
+            generate: false,
         });
         // In flight: reads pause (ordering + backpressure), write
         // interest persists.

@@ -12,6 +12,12 @@
 //! the offered rate degrades once all clients are stuck waiting — a
 //! paced approximation of a true open loop; raise `concurrency` until
 //! achieved QPS reaches the target.)
+//!
+//! [`run_generate`] is the decode twin: a closed-loop driver for
+//! `POST :generate` that parses each answer's `per_token_ms` series and
+//! reports tokens/sec plus per-token p50/p95 alongside the usual
+//! request-level classes — shared by `bench-serve --scenario generate`
+//! and the soak paths.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -101,6 +107,64 @@ impl LoadReport {
             ("p50_ms", json::num(self.p50_ms)),
             ("p95_ms", json::num(self.p95_ms)),
             ("max_ms", json::num(self.max_ms)),
+        ])
+    }
+}
+
+/// What to decode, how hard (closed loop only — a decode request holds
+/// its worker for the whole autoregressive loop, so pacing is the
+/// completion rate).
+#[derive(Debug, Clone)]
+pub struct GenSpec {
+    /// Server address, e.g. `"127.0.0.1:8080"`.
+    pub addr: String,
+    /// Model to hit (`POST /v1/models/{model}:generate`).
+    pub model: String,
+    /// Prompt tokens per request.
+    pub prompt_len: usize,
+    /// New tokens requested per decode (`max_new_tokens`).
+    pub max_new: usize,
+    /// Vocabulary bound for the deterministic prompt ids.
+    pub vocab: usize,
+    /// Total decode requests across all clients.
+    pub requests: usize,
+    /// Concurrent client connections.
+    pub concurrency: usize,
+}
+
+/// The [`run_generate`] outcome: request-level classes/quantiles plus
+/// the decode-level view (tokens/sec and per-token quantiles pooled
+/// from every 200 answer's `per_token_ms` series).
+#[derive(Debug, Clone, Default)]
+pub struct GenReport {
+    pub load: LoadReport,
+    /// Tokens decoded across all 200 answers.
+    pub tokens: usize,
+    pub tokens_per_s: f64,
+    pub tok_p50_ms: f64,
+    pub tok_p95_ms: f64,
+}
+
+impl GenReport {
+    /// One-line human rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "{}  |  {} tokens = {:.1} tok/s  tok p50 {:.3} ms  tok p95 {:.3} ms",
+            self.load.render(),
+            self.tokens,
+            self.tokens_per_s,
+            self.tok_p50_ms,
+            self.tok_p95_ms,
+        )
+    }
+
+    pub fn to_json(&self) -> json::Value {
+        json::obj(vec![
+            ("load", self.load.to_json()),
+            ("tokens", json::num(self.tokens as f64)),
+            ("tokens_per_s", json::num(self.tokens_per_s)),
+            ("tok_p50_ms", json::num(self.tok_p50_ms)),
+            ("tok_p95_ms", json::num(self.tok_p95_ms)),
         ])
     }
 }
@@ -355,24 +419,176 @@ fn client_main(
             }
         }
         match status {
-            None => tally.transport_errors += 1,
             Some(200) => {
                 tally.ok += 1;
                 tally
                     .latencies_ms
                     .push(t_req.elapsed().as_secs_f64() * 1e3);
             }
-            Some(429) => tally.throttled += 1,
-            Some(c) if (400..500).contains(&c) => tally.client_errors += 1,
-            Some(503) => {
-                // Deadline shed / unavailable: still a 5xx in the class
-                // sums, additionally split out.
-                tally.server_errors += 1;
-                tally.shed += 1;
-            }
-            Some(_) => tally.server_errors += 1,
+            other => tally_failure(other, &mut tally),
         }
     }
+}
+
+/// Fold a non-200 outcome into the tally's status classes (shared by
+/// the predict and generate client loops).
+fn tally_failure(status: Option<u16>, tally: &mut Tally) {
+    match status {
+        None => tally.transport_errors += 1,
+        Some(429) => tally.throttled += 1,
+        Some(c) if (400..500).contains(&c) => tally.client_errors += 1,
+        Some(503) => {
+            // Deadline shed / unavailable: still a 5xx in the class
+            // sums, additionally split out.
+            tally.server_errors += 1;
+            tally.shed += 1;
+        }
+        Some(_) => tally.server_errors += 1,
+    }
+}
+
+/// Per-client decode tally: the request-level classes plus the pooled
+/// per-token latency series parsed out of each 200 answer.
+#[derive(Default)]
+struct GenTally {
+    tally: Tally,
+    per_token_ms: Vec<f64>,
+    tokens: usize,
+}
+
+/// Run the decode load. Blocks until all `spec.requests` have been
+/// attempted; closed loop only (each client fires its next `:generate`
+/// the moment the previous answer lands).
+pub fn run_generate(spec: &GenSpec) -> Result<GenReport> {
+    if spec.requests == 0
+        || spec.concurrency == 0
+        || spec.prompt_len == 0
+        || spec.max_new == 0
+    {
+        bail!(
+            "loadgen: generate needs requests, concurrency, prompt_len \
+             and max_new all >= 1"
+        );
+    }
+    let path = format!("/v1/models/{}:generate", spec.model);
+    let next = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let tallies: Vec<GenTally> = std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for _ in 0..spec.concurrency {
+            let next = next.clone();
+            let (spec, path) = (spec.clone(), path.clone());
+            joins.push(s.spawn(move || gen_client_main(&spec, &path, &next)));
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("loadgen generate thread panicked"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let load = report_from(tallies.iter().map(|g| &g.tally), wall_s);
+    let tokens: usize = tallies.iter().map(|g| g.tokens).sum();
+    let mut tok: Vec<f64> = tallies
+        .iter()
+        .flat_map(|g| g.per_token_ms.iter().copied())
+        .collect();
+    tok.sort_by(f64::total_cmp);
+    Ok(GenReport {
+        load,
+        tokens,
+        tokens_per_s: tokens as f64 / wall_s.max(1e-9),
+        tok_p50_ms: quantile_sorted(&tok, 0.5),
+        tok_p95_ms: quantile_sorted(&tok, 0.95),
+    })
+}
+
+fn gen_client_main(
+    spec: &GenSpec,
+    path: &str,
+    next: &AtomicUsize,
+) -> GenTally {
+    let mut acc = GenTally::default();
+    let mut conn: Option<Conn> = None;
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= spec.requests {
+            return acc;
+        }
+        let body = gen_body_for(i, spec.prompt_len, spec.max_new, spec.vocab);
+        acc.tally.sent += 1;
+        let t_req = Instant::now();
+        // Same one-transparent-reconnect idiom as `client_main`.
+        let mut answer = None;
+        for attempt in 0..2 {
+            if conn.is_none() {
+                match Conn::open(&spec.addr) {
+                    Ok(c) => conn = Some(c),
+                    Err(_) => break,
+                }
+            }
+            let c = conn.as_mut().unwrap();
+            match c.request("POST", path, &body) {
+                Ok(resp) => {
+                    answer = Some(resp);
+                    break;
+                }
+                Err(_) => {
+                    conn = None;
+                    if attempt == 1 {
+                        break;
+                    }
+                }
+            }
+        }
+        match answer {
+            Some((200, resp_body)) => {
+                acc.tally.ok += 1;
+                acc.tally
+                    .latencies_ms
+                    .push(t_req.elapsed().as_secs_f64() * 1e3);
+                absorb_generate_body(&resp_body, &mut acc);
+            }
+            other => tally_failure(other.map(|(code, _)| code), &mut acc.tally),
+        }
+    }
+}
+
+/// Pull `tokens` / `per_token_ms` out of a 200 `:generate` answer. A
+/// body this client can't parse is counted as zero tokens rather than
+/// failing the run — the request-level `ok` count already recorded the
+/// server's verdict.
+fn absorb_generate_body(body: &str, acc: &mut GenTally) {
+    let Ok(v) = json::parse(body) else { return };
+    if let Ok(toks) = v.get("tokens").and_then(|t| t.as_arr()) {
+        acc.tokens += toks.len();
+    }
+    if let Ok(ms) = v.get("per_token_ms").and_then(|t| t.as_arr()) {
+        for m in ms {
+            if let Ok(x) = m.as_f64() {
+                acc.per_token_ms.push(x);
+            }
+        }
+    }
+}
+
+/// Deterministic token-id prompt for decode request `i` (varies by
+/// index so KV caches do not all replay the same prefix).
+fn gen_body_for(
+    i: usize,
+    prompt_len: usize,
+    max_new: usize,
+    vocab: usize,
+) -> String {
+    let vocab = vocab.max(1);
+    let toks: Vec<json::Value> = (0..prompt_len)
+        .map(|j| json::num(((i * 7 + j * 3) % vocab) as f64))
+        .collect();
+    json::obj(vec![
+        ("tokens", json::arr(toks)),
+        ("max_new_tokens", json::num(max_new as f64)),
+    ])
+    .to_string()
 }
 
 /// Deterministic per-request example (varies by index so batches are
@@ -443,6 +659,57 @@ mod tests {
         };
         assert!(run_sharded(&spec, 0).is_err());
         assert!(run_sharded(&spec, 3).is_err());
+    }
+
+    #[test]
+    fn generate_bodies_are_deterministic_and_in_vocab() {
+        let b = gen_body_for(5, 6, 4, 32);
+        assert_eq!(b, gen_body_for(5, 6, 4, 32));
+        let v = json::parse(&b).unwrap();
+        let toks = v.get("tokens").unwrap().as_arr().unwrap();
+        assert_eq!(toks.len(), 6);
+        for t in toks {
+            let t = t.as_f64().unwrap();
+            assert!((0.0..32.0).contains(&t) && t.fract() == 0.0);
+        }
+        assert_eq!(
+            v.get("max_new_tokens").unwrap().as_f64().unwrap(),
+            4.0
+        );
+        // Different request index -> different prompt.
+        assert_ne!(b, gen_body_for(6, 6, 4, 32));
+    }
+
+    #[test]
+    fn generate_answers_fold_into_the_decode_tally() {
+        let mut acc = GenTally::default();
+        absorb_generate_body(
+            r#"{"tokens": [1, 2, 3], "per_token_ms": [0.5, 0.25, 0.125]}"#,
+            &mut acc,
+        );
+        absorb_generate_body("not json at all", &mut acc);
+        assert_eq!(acc.tokens, 3);
+        assert_eq!(acc.per_token_ms, vec![0.5, 0.25, 0.125]);
+    }
+
+    #[test]
+    fn empty_generate_spec_is_rejected() {
+        let spec = GenSpec {
+            addr: "127.0.0.1:1".into(),
+            model: "x".into(),
+            prompt_len: 0,
+            max_new: 4,
+            vocab: 32,
+            requests: 1,
+            concurrency: 1,
+        };
+        assert!(run_generate(&spec).is_err());
+        let broken = GenSpec {
+            max_new: 0,
+            prompt_len: 3,
+            ..spec
+        };
+        assert!(run_generate(&broken).is_err());
     }
 
     #[test]

@@ -54,6 +54,13 @@
 //! client gets an error response and the failure is counted in
 //! [`ServerStats`].
 //!
+//! Decode-capable graph workers (the transformer archetype) also serve
+//! `POST /v1/models/{m}:generate`: the worker runs the executor's
+//! KV-cache autoregressive loop for one sequence at a time (decode
+//! state is per-sequence, so these never pack into a prediction batch)
+//! and answers with the decoded tokens plus per-token latency; decode
+//! counters and a per-token latency histogram land in `/metrics`.
+//!
 //! [`HttpServer`] speaks dependency-free HTTP/1.1 over
 //! `std::net::TcpListener` (`POST /v1/models/{m}:predict`,
 //! `GET /v1/models`, `GET /healthz`, Prometheus `GET /metrics`) with
@@ -71,11 +78,12 @@ mod server;
 
 pub use batcher::{collect_next, BatchMode, BatchPolicy, Collected};
 pub use executor::{
-    EchoExecutor, Executed, ModelExecutor, PjrtExecutor, ECHO_FAIL_SENTINEL,
+    EchoExecutor, Executed, GenerateOutcome, ModelExecutor, PjrtExecutor,
+    ECHO_FAIL_SENTINEL,
 };
 pub use http::{HttpConfig, HttpServer, HttpStats};
 pub use queue::{PopWait, PushError, RequestQueue};
 pub use server::{
     Notify, Request, RequestError, Response, Router, ServerStats, SubmitError,
-    WorkerConfig, BATCH_HIST_LE,
+    WorkerConfig, BATCH_HIST_LE, DECODE_HIST_LE,
 };

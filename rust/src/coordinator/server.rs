@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::{collect_next, BatchPolicy};
-use super::executor::{EchoExecutor, ModelExecutor, PjrtExecutor};
+use super::executor::{EchoExecutor, GenerateOutcome, ModelExecutor, PjrtExecutor};
 use super::queue::{PushError, RequestQueue};
 use crate::abfp::DeviceConfig;
 use crate::backend::BackendKind;
@@ -78,6 +78,10 @@ pub struct Request {
     /// Absolute service deadline (from [`BatchPolicy::deadline`] at
     /// submit time); `None` = never shed.
     pub deadline: Option<Instant>,
+    /// `Some(n)` marks an autoregressive `:generate` request: `x` is
+    /// the prompt (variable length), and the worker runs the decode
+    /// loop for up to `n` new tokens instead of batching the example.
+    pub max_new: Option<usize>,
     pub respond: Sender<Result<Response, RequestError>>,
     /// Poked after the response is delivered; see [`Notify`].
     pub notify: Option<Arc<dyn Notify>>,
@@ -90,6 +94,8 @@ pub struct Response {
     pub queue_ms: f64,
     pub total_ms: f64,
     pub batch_size: usize,
+    /// Decode result for `:generate` requests (`outputs` stays empty).
+    pub decode: Option<GenerateOutcome>,
 }
 
 /// PJRT worker configuration: which numeric backend serves the model.
@@ -172,6 +178,21 @@ pub struct ServerStats {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub mean_exec_ms: f64,
+    /// `:generate` requests completed (also counted in `requests`).
+    pub decode_requests: u64,
+    /// New tokens decoded across all `:generate` requests.
+    pub decode_tokens: u64,
+    /// Per-token decode latency histogram as `(le, count)` pairs —
+    /// per-bucket counts, last bound `+Inf`. Token 0 of each request
+    /// (prompt prefill + first token) is included.
+    pub decode_hist: Vec<(f64, u64)>,
+    pub tok_p50_ms: f64,
+    pub tok_p95_ms: f64,
+    /// Total per-token decode time (ms) — the histogram's `_sum`.
+    pub decode_ms_sum: f64,
+    /// KV-cache elements held after the most recent `:generate`
+    /// completed (gauge — the decode buffers the worker keeps warm).
+    pub cache_elems: u64,
 }
 
 /// Histogram bucket bounds for executed batch sizes (`le` labels in
@@ -179,11 +200,22 @@ pub struct ServerStats {
 pub const BATCH_HIST_LE: [f64; 10] =
     [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, f64::INFINITY];
 
+/// Histogram bucket bounds for per-token decode latency in ms.
+pub const DECODE_HIST_LE: [f64; 10] =
+    [0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 50.0, f64::INFINITY];
+
 fn batch_bucket(bsz: usize) -> usize {
     BATCH_HIST_LE
         .iter()
         .position(|&le| (bsz as f64) <= le)
         .unwrap_or(BATCH_HIST_LE.len() - 1)
+}
+
+fn decode_bucket(ms: f64) -> usize {
+    DECODE_HIST_LE
+        .iter()
+        .position(|&le| ms <= le)
+        .unwrap_or(DECODE_HIST_LE.len() - 1)
 }
 
 struct WorkerStats {
@@ -197,6 +229,12 @@ struct WorkerStats {
     failed_batches: u64,
     shed_requests: u64,
     wakeups: u64,
+    tok_latency: Percentiles,
+    decode_hist: [u64; DECODE_HIST_LE.len()],
+    decode_requests: u64,
+    decode_tokens: u64,
+    decode_ms_sum: f64,
+    cache_elems: u64,
 }
 
 impl WorkerStats {
@@ -212,6 +250,12 @@ impl WorkerStats {
             failed_batches: 0,
             shed_requests: 0,
             wakeups: 0,
+            tok_latency: Percentiles::new(4096),
+            decode_hist: [0; DECODE_HIST_LE.len()],
+            decode_requests: 0,
+            decode_tokens: 0,
+            decode_ms_sum: 0.0,
+            cache_elems: 0,
         }
     }
 
@@ -221,6 +265,7 @@ impl WorkerStats {
         // held this worker's stats mutex), and `total_cmp` inside
         // `sorted_clone` means a NaN latency can't poison the mutex.
         let sorted = self.latency.sorted_clone();
+        let tok_sorted = self.tok_latency.sorted_clone();
         ServerStats {
             requests: self.requests,
             batches: self.batches,
@@ -238,6 +283,17 @@ impl WorkerStats {
             p50_ms: quantile_sorted(&sorted, 0.5),
             p95_ms: quantile_sorted(&sorted, 0.95),
             mean_exec_ms: self.exec_ms.mean(),
+            decode_requests: self.decode_requests,
+            decode_tokens: self.decode_tokens,
+            decode_hist: DECODE_HIST_LE
+                .iter()
+                .zip(self.decode_hist.iter())
+                .map(|(&le, &n)| (le, n))
+                .collect(),
+            tok_p50_ms: quantile_sorted(&tok_sorted, 0.5),
+            tok_p95_ms: quantile_sorted(&tok_sorted, 0.95),
+            decode_ms_sum: self.decode_ms_sum,
+            cache_elems: self.cache_elems,
         }
     }
 }
@@ -280,6 +336,8 @@ impl std::error::Error for SubmitError {}
 struct WorkerReady {
     in_elems: usize,
     effective_batch: usize,
+    /// Whether the executor serves the `:generate` decode loop.
+    generate: bool,
     meta: Value,
 }
 
@@ -298,6 +356,8 @@ struct WorkerHandle {
     /// Per-request service deadline stamped onto submits (`None` when
     /// the policy's deadline is zero).
     deadline: Option<Duration>,
+    /// Whether this worker's executor serves `:generate`.
+    generate: bool,
     /// The executor's startup self-description (kind, shapes, plan),
     /// extended with the worker's `batching` configuration.
     meta: Value,
@@ -305,7 +365,13 @@ struct WorkerHandle {
 }
 
 impl WorkerHandle {
-    fn request(&self, model: &str, x: Tensor, notify: Option<Arc<dyn Notify>>) -> (Request, Receiver<Result<Response, RequestError>>) {
+    fn request(
+        &self,
+        model: &str,
+        x: Tensor,
+        max_new: Option<usize>,
+        notify: Option<Arc<dyn Notify>>,
+    ) -> (Request, Receiver<Result<Response, RequestError>>) {
         let (tx, rx) = mpsc::channel();
         let now = Instant::now();
         let req = Request {
@@ -313,6 +379,7 @@ impl WorkerHandle {
             x,
             enqueued: now,
             deadline: self.deadline.map(|d| now + d),
+            max_new,
             respond: tx,
             notify,
         };
@@ -372,6 +439,7 @@ where
         stats,
         in_elems: ready.in_elems,
         deadline: (!policy.deadline.is_zero()).then_some(policy.deadline),
+        generate: ready.generate,
         meta,
         join: Some(join),
     })
@@ -455,7 +523,7 @@ impl Router {
         x: Tensor,
     ) -> Result<Receiver<Result<Response, RequestError>>> {
         let worker = self.validated(model, &x)?;
-        let (req, rx) = worker.request(model, x, None);
+        let (req, rx) = worker.request(model, x, None, None);
         worker
             .queue
             .push(req)
@@ -486,12 +554,71 @@ impl Router {
         notify: Option<Arc<dyn Notify>>,
     ) -> Result<Receiver<Result<Response, RequestError>>, SubmitError> {
         let worker = self.validated(model, &x)?;
-        let (req, rx) = worker.request(model, x, notify);
+        let (req, rx) = worker.request(model, x, None, notify);
         match worker.queue.try_push(req) {
             Ok(()) => Ok(rx),
             Err(PushError::Full(_)) => Err(SubmitError::Busy(model.to_string())),
             Err(PushError::Closed(_)) => Err(SubmitError::Gone(model.to_string())),
         }
+    }
+
+    /// Non-blocking submit of an autoregressive `:generate` request:
+    /// `prompt` is the token-id prefix, `max_new` the decode budget.
+    /// Validation mirrors [`Router::try_submit`]'s contract — anything
+    /// the worker would reject is a typed error here, before the queue:
+    /// a model without decode support, an empty prompt, a zero budget,
+    /// or a sequence that would outgrow the model's KV-cache capacity
+    /// are all [`SubmitError::BadShape`] (HTTP 400).
+    pub fn try_submit_generate(
+        &self,
+        model: &str,
+        prompt: Vec<f32>,
+        max_new: usize,
+        notify: Option<Arc<dyn Notify>>,
+    ) -> Result<Receiver<Result<Response, RequestError>>, SubmitError> {
+        let worker = self
+            .workers
+            .get(model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?;
+        if !worker.generate {
+            return Err(SubmitError::BadShape(format!(
+                "model {model:?} does not support :generate \
+                 (not a decode-capable graph)"
+            )));
+        }
+        if prompt.is_empty() || max_new == 0 {
+            return Err(SubmitError::BadShape(format!(
+                "model {model:?}: :generate needs a non-empty prompt \
+                 and max_new_tokens >= 1"
+            )));
+        }
+        let need = prompt.len() + max_new - 1;
+        if need > worker.in_elems {
+            return Err(SubmitError::BadShape(format!(
+                "model {model:?}: prompt ({}) + max_new_tokens ({max_new}) \
+                 exceeds the KV-cache capacity of {} positions",
+                prompt.len(),
+                worker.in_elems
+            )));
+        }
+        let x = Tensor::from_vec(prompt);
+        let (req, rx) = worker.request(model, x, Some(max_new), notify);
+        match worker.queue.try_push(req) {
+            Ok(()) => Ok(rx),
+            Err(PushError::Full(_)) => Err(SubmitError::Busy(model.to_string())),
+            Err(PushError::Closed(_)) => Err(SubmitError::Gone(model.to_string())),
+        }
+    }
+
+    /// Blocking convenience: submit a `:generate` request and wait for
+    /// the decode to finish (in-process callers and tests).
+    pub fn generate(&self, model: &str, prompt: Vec<f32>, max_new: usize) -> Result<Response> {
+        let rx = self
+            .try_submit_generate(model, prompt, max_new, None)
+            .map_err(|e| anyhow!(e.to_string()))?;
+        Ok(rx
+            .recv()
+            .map_err(|_| anyhow!("worker {model} dropped the request"))??)
     }
 
     /// Blocking convenience: submit and wait.
@@ -611,6 +738,7 @@ fn worker_main<E: ModelExecutor>(
         .send(Ok(WorkerReady {
             in_elems,
             effective_batch: policy.max_batch,
+            generate: exec.supports_generate(),
             meta: exec.describe(),
         }))
         .ok();
@@ -620,9 +748,18 @@ fn worker_main<E: ModelExecutor>(
         if !collected.shed.is_empty() {
             shed_requests(collected.shed, &stats);
         }
-        let batch = collected.batch;
+        // Decode requests run individually through the executor's KV
+        // cache (autoregressive state is per-sequence, so they never
+        // pack into a prediction batch); predicts batch as before.
+        let (gens, batch): (Vec<Request>, Vec<Request>) = collected
+            .batch
+            .into_iter()
+            .partition(|r| r.max_new.is_some());
+        for req in gens {
+            run_generate(model, &mut exec, req, &stats);
+        }
         if batch.is_empty() {
-            continue; // shed-only round
+            continue; // shed-only or decode-only round
         }
         let t_exec = Instant::now();
         // Pack the request batch once, directly into the executor's
@@ -659,6 +796,60 @@ fn worker_main<E: ModelExecutor>(
                 eprintln!("worker {model}: execute failed: {e}");
                 fail_batch(batch, &format!("execute failed: {e}"), &stats);
             }
+        }
+    }
+}
+
+/// Run one `:generate` request through the executor's decode loop and
+/// answer the waiting client. Counted as a batch of 1 in the serving
+/// stats, plus the decode-specific counters (tokens, per-token latency
+/// histogram, KV-cache occupancy gauge).
+fn run_generate<E: ModelExecutor>(
+    model: &str,
+    exec: &mut E,
+    req: Request,
+    stats: &Mutex<WorkerStats>,
+) {
+    let max_new = req.max_new.unwrap_or(0);
+    let t_exec = Instant::now();
+    match exec.generate(req.x.data(), max_new) {
+        Ok(outcome) => {
+            let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = (total_ms - exec_ms).max(0.0);
+            {
+                let mut s = stats.lock().unwrap();
+                s.requests += 1;
+                s.batches += 1;
+                s.batch_sizes.push(1.0);
+                s.batch_hist[batch_bucket(1)] += 1;
+                s.exec_ms.push(exec_ms);
+                s.latency.push(total_ms);
+                s.decode_requests += 1;
+                s.decode_tokens += outcome.tokens.len() as u64;
+                s.cache_elems = outcome.cached_elems as u64;
+                for &ms in &outcome.per_token_ms {
+                    s.tok_latency.push(ms);
+                    s.decode_hist[decode_bucket(ms)] += 1;
+                    s.decode_ms_sum += ms;
+                }
+            }
+            req.respond
+                .send(Ok(Response {
+                    outputs: Vec::new(),
+                    queue_ms,
+                    total_ms,
+                    batch_size: 1,
+                    decode: Some(outcome),
+                }))
+                .ok();
+            if let Some(n) = &req.notify {
+                n.notify();
+            }
+        }
+        Err(e) => {
+            eprintln!("worker {model}: generate failed: {e}");
+            fail_batch(vec![req], &format!("generate failed: {e}"), stats);
         }
     }
 }
@@ -755,6 +946,7 @@ fn finish_batch(
                 queue_ms,
                 total_ms,
                 batch_size: bsz,
+                decode: None,
             }))
             .ok();
         // Poke the submitter's event loop AFTER the response is on the
@@ -990,6 +1182,7 @@ mod tests {
                 x: Tensor::zeros(&[2]),
                 enqueued: Instant::now(),
                 deadline: None,
+                max_new: None,
                 respond: tx,
                 notify: None,
             });
@@ -1059,6 +1252,74 @@ mod tests {
     }
 
     #[test]
+    fn graph_router_decodes_through_generate() {
+        // The decode scenario at router level: the transformer worker
+        // answers :generate with tokens + per-token latency, the stats
+        // grow the decode counters, and validation rejects unsupported
+        // models / oversized sequences up front as BadShape.
+        use crate::graph::LayerPlan;
+        let plan = GraphPlan::edges_float32(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 4.0, 0.5),
+        ));
+        let names = ["transformer".to_string(), "gru".to_string()];
+        let router = Router::start_graph(
+            &names,
+            &plan,
+            BatchPolicy::new(8, 1).unwrap(),
+            64,
+            7,
+            1,
+        )
+        .unwrap();
+        let resp = router
+            .generate("transformer", vec![1.0, 5.0, 2.0], 6)
+            .unwrap();
+        let decode = resp.decode.expect("generate response carries decode");
+        assert_eq!(decode.tokens.len(), 6);
+        assert_eq!(decode.per_token_ms.len(), 6);
+        assert!(decode.tokens.iter().all(|&t| t < 32));
+        assert_eq!(decode.cache_len, 3 + 6);
+        assert!(resp.outputs.is_empty());
+
+        let s = router.stats("transformer").unwrap();
+        assert_eq!(s.decode_requests, 1);
+        assert_eq!(s.decode_tokens, 6);
+        assert!(s.cache_elems > 0);
+        assert_eq!(
+            s.decode_hist.iter().map(|(_, n)| n).sum::<u64>(),
+            6,
+            "{:?}",
+            s.decode_hist
+        );
+        // Decode rides the ordinary request counters too.
+        assert_eq!(s.requests, 1);
+
+        // An MLP archetype refuses :generate with a 400-class error.
+        let err = router
+            .try_submit_generate("gru", vec![1.0], 4, None)
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::BadShape(_)), "{err}");
+        // Capacity and degenerate-argument validation happen up front.
+        let err = router
+            .try_submit_generate("transformer", vec![0.0; 30], 8, None)
+            .unwrap_err();
+        assert!(err.to_string().contains("KV-cache capacity"), "{err}");
+        assert!(router
+            .try_submit_generate("transformer", Vec::new(), 4, None)
+            .is_err());
+        assert!(router
+            .try_submit_generate("transformer", vec![1.0], 0, None)
+            .is_err());
+        assert!(matches!(
+            router
+                .try_submit_generate("nope", vec![1.0], 1, None)
+                .unwrap_err(),
+            SubmitError::UnknownModel(_)
+        ));
+    }
+
+    #[test]
     fn latency_stats_include_queue_time() {
         // Regression: worker stats used to push `exec_ms` per request,
         // so queue time was invisible in p50/p95. Requests that waited
@@ -1074,6 +1335,7 @@ mod tests {
                 x: Tensor::zeros(&[2]),
                 enqueued: Instant::now(),
                 deadline: None,
+                max_new: None,
                 respond: tx,
                 notify: None,
             });

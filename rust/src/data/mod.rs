@@ -1,4 +1,4 @@
-//! Synthetic dataset generators for the six MLPerf-archetype tasks.
+//! Synthetic dataset generators for the seven MLPerf-archetype tasks.
 //!
 //! The paper evaluates on ImageNet/COCO/BraTS/Librispeech/SQuAD/Click-Logs;
 //! none are available here (repro gate), so each generator synthesizes a
@@ -14,12 +14,14 @@
 //!   gru   x (24,) token ids,         y () motif class in 0..12
 //!   bert  x (32,) token ids,         y (2,) [start, end]
 //!   dlrm  x (12,) 8 dense + 4 cat,   y () click in {0,1}
+//!   transformer x (32,) token ids,   y (32,) next-token ids
 
 mod bert;
 mod cnn;
 mod dlrm;
 mod gru;
 mod ssd;
+mod transformer;
 mod unet;
 
 use anyhow::{bail, Result};
@@ -76,6 +78,7 @@ pub fn dataset_for(model: &str) -> Result<Box<dyn Dataset>> {
         "gru" => Box::new(gru::Motifs),
         "bert" => Box::new(bert::SpanQa),
         "dlrm" => Box::new(dlrm::ClickLogs::default()),
+        "transformer" => Box::new(transformer::TokenStream),
         other => bail!("no dataset for model {other:?}"),
     })
 }
@@ -85,6 +88,7 @@ pub use cnn::Gratings;
 pub use dlrm::ClickLogs;
 pub use gru::Motifs;
 pub use ssd::Scenes;
+pub use transformer::TokenStream;
 pub use unet::Blobs;
 
 #[cfg(test)]
@@ -93,7 +97,7 @@ mod tests {
 
     #[test]
     fn all_tasks_generate_and_are_deterministic() {
-        for name in ["cnn", "ssd", "unet", "gru", "bert", "dlrm"] {
+        for name in ["cnn", "ssd", "unet", "gru", "bert", "dlrm", "transformer"] {
             let ds = dataset_for(name).unwrap();
             let a = ds.batch(&mut Pcg64::seeded(7), 4);
             let b = ds.batch(&mut Pcg64::seeded(7), 4);

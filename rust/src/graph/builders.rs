@@ -1,12 +1,14 @@
-//! Deterministic seeded graph builders for the six Mini archetypes.
+//! Deterministic seeded graph builders for the seven Mini archetypes.
 //!
-//! Each builder produces a small MLP-shaped [`ModelGraph`] whose
-//! interface (input shape, head width) comes from the [`registry`] and
-//! whose weights are drawn from a per-model PCG64 stream — the same
-//! `(model, seed)` pair always yields the same graph, bit for bit, on
-//! every machine. The archetypes deliberately cover the whole IR
-//! between them: ReLU + residual (cnn/unet/dlrm), standalone bias heads
-//! (ssd/dlrm), tanh + sigmoid gates (gru), GELU + residual (bert).
+//! Each builder produces a small [`ModelGraph`] whose interface (input
+//! shape, head width) comes from the [`registry`] and whose weights
+//! are drawn from a per-model PCG64 stream — the same `(model, seed)`
+//! pair always yields the same graph, bit for bit, on every machine.
+//! The archetypes deliberately cover the whole IR between them: ReLU +
+//! residual (cnn/unet/dlrm), standalone bias heads (ssd/dlrm), tanh +
+//! sigmoid gates (gru), GELU + residual (bert), and
+//! embedding/LayerNorm/attention/per-token linear/softmax
+//! (transformer).
 //!
 //! These are *structure* stand-ins, like the synthetic datasets in
 //! [`crate::data`]: what the per-layer numeric experiments stress is
@@ -95,6 +97,25 @@ pub fn build(model: &str, seed: u64) -> Result<ModelGraph> {
             b.linear(out, false);
             b.head_bias();
         }
+        "transformer" => {
+            // One pre-LN attention block + vocab head over token ids —
+            // every op is per-token, so the graph decodes through the
+            // KV cache. Seven planned matmul sites: q/k/v/o, FFN
+            // up/down, vocab head.
+            let (d, ff, vocab) = (16, 32, 32);
+            let skip = b.embedding(vocab, d);
+            b.layer_norm(d);
+            b.attention(d);
+            let skip2 = b.push(Layer::Residual { from: skip });
+            b.layer_norm(d);
+            b.token_linear(d, ff);
+            b.push(Layer::Gelu);
+            b.token_linear(ff, d);
+            b.push(Layer::Residual { from: skip2 });
+            b.layer_norm(d);
+            b.token_linear(d, vocab);
+            b.push(Layer::Softmax { d: vocab });
+        }
         other => unreachable!("registry accepted unknown model {other:?}"),
     }
     ModelGraph::new(model, meta.input_shape, b.layers)
@@ -148,6 +169,58 @@ impl Builder {
         let b = Tensor::from_vec(self.rng.uniform_vec(self.width, -0.05, 0.05));
         self.push(Layer::Bias(b))
     }
+
+    /// Token embedding: `(vocab, d)` table with N(0, 0.5) entries
+    /// (LayerNorm renormalizes right after, so the scale is mild).
+    fn embedding(&mut self, vocab: usize, d: usize) -> usize {
+        let table = Tensor::new(
+            &[vocab, d],
+            (0..vocab * d).map(|_| self.rng.normal() * 0.5).collect(),
+        )
+        .expect("builder embedding dims");
+        self.width *= d;
+        self.push(Layer::Embedding { table })
+    }
+
+    /// LayerNorm over `d` channels: gamma near 1, beta near 0.
+    fn layer_norm(&mut self, d: usize) -> usize {
+        let gamma = Tensor::from_vec(self.rng.uniform_vec(d, 0.9, 1.1));
+        let beta = Tensor::from_vec(self.rng.uniform_vec(d, -0.05, 0.05));
+        self.push(Layer::LayerNorm { gamma, beta })
+    }
+
+    /// One square `(d, d)` He-scaled projection.
+    fn proj(&mut self, d: usize) -> Tensor {
+        let scale = 1.0 / (d as f32).sqrt();
+        Tensor::new(
+            &[d, d],
+            (0..d * d).map(|_| self.rng.normal() * scale).collect(),
+        )
+        .expect("builder projection dims")
+    }
+
+    /// Causal self-attention with q/k/v/o projections drawn in site
+    /// order from the model's stream.
+    fn attention(&mut self, d: usize) -> usize {
+        let wq = self.proj(d);
+        let wk = self.proj(d);
+        let wv = self.proj(d);
+        let wo = self.proj(d);
+        self.push(Layer::Attention { wq, wk, wv, wo })
+    }
+
+    /// Per-token linear `d_in -> d_out` with bias.
+    fn token_linear(&mut self, d_in: usize, d_out: usize) -> usize {
+        let scale = 1.0 / (d_in as f32).sqrt();
+        let w = Tensor::new(
+            &[d_out, d_in],
+            (0..d_out * d_in).map(|_| self.rng.normal() * scale).collect(),
+        )
+        .expect("builder token-linear dims");
+        let b = Some(Tensor::from_vec(self.rng.uniform_vec(d_out, -0.05, 0.05)));
+        self.width = self.width / d_in * d_out;
+        self.push(Layer::TokenLinear { w, b })
+    }
 }
 
 #[cfg(test)]
@@ -195,8 +268,38 @@ mod tests {
                 seen.insert(l.name());
             }
         }
-        for op in ["flatten", "linear", "bias", "relu", "gelu", "tanh", "sigmoid", "residual"] {
+        for op in [
+            "flatten",
+            "linear",
+            "bias",
+            "relu",
+            "gelu",
+            "tanh",
+            "sigmoid",
+            "residual",
+            "embedding",
+            "layernorm",
+            "softmax",
+            "attention",
+            "token_linear",
+        ] {
             assert!(seen.contains(op), "no archetype exercises {op}");
+        }
+    }
+
+    #[test]
+    fn transformer_archetype_is_decode_ready() {
+        let g = build("transformer", GRAPH_SEED).unwrap();
+        assert!(g.seq_flexible(), "every transformer op must be per-token");
+        assert_eq!(g.linear_count(), 7);
+        // A short prefix runs too (decode feeds growing prefixes).
+        let x = crate::tensor::Tensor::new(&[1, 3], vec![1.0, 5.0, 2.0]).unwrap();
+        let y = g.host_forward(&x).unwrap();
+        assert_eq!(y.shape(), &[1, 3 * 32]);
+        // Per-token softmax head: each vocab chunk sums to 1.
+        for chunk in y.data().chunks(32) {
+            let s: f32 = chunk.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "softmax chunk sums to {s}");
         }
     }
 }

@@ -12,12 +12,14 @@
 //! and the noise sequence replays exactly from `(plan, seed)`
 //! (`tests/graph.rs`).
 
-use anyhow::Result;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
 
 use super::plan::GraphPlan;
-use super::{registry, FlowScratch, ModelGraph};
+use super::{registry, DecodeState, FlowScratch, ModelGraph};
 use crate::backend::{BackendStats, NumericBackend, Scratch, StagedWeights};
-use crate::coordinator::{Executed, ModelExecutor};
+use crate::coordinator::{Executed, GenerateOutcome, ModelExecutor};
 use crate::json::{self, Value};
 use crate::tensor::Tensor;
 
@@ -57,6 +59,10 @@ pub struct GraphExecutor {
     flow: FlowScratch,
     /// Per-`Linear`-layer backend scratch (activation staging).
     scratch: Vec<Scratch>,
+    /// KV cache + per-token residual slots for the decode scenario —
+    /// owned like the scratch above so steady-state decode steps
+    /// allocate nothing once warm.
+    decode: DecodeState,
 }
 
 /// The noise-stream seed of `Linear` ordinal `i` of `model` under user
@@ -113,6 +119,7 @@ impl GraphExecutor {
             stages,
             flow: FlowScratch::new(),
             scratch,
+            decode: DecodeState::new(),
         })
     }
 
@@ -173,6 +180,102 @@ impl GraphExecutor {
             self.flow.recycle_tensor(t);
         }
     }
+
+    /// Forget the current decode sequence (KV cache back to length 0,
+    /// buffer capacity retained). The per-site noise cursors keep
+    /// advancing across sequences — like successive `forward` batches,
+    /// each request draws fresh noise, deterministically in request
+    /// order.
+    pub fn reset_decode(&mut self) {
+        self.decode.reset();
+    }
+
+    /// Decode one token against the executor's KV cache and return the
+    /// `(1, vocab)` next-token distribution; recycle it with
+    /// [`Self::recycle_outputs`]. Each matmul site runs the same
+    /// staged backend the full forward uses, one row per step, which
+    /// is what makes decode bit-identical to a fresh full-prefix
+    /// `forward` (`tests/determinism.rs` D9).
+    pub fn decode_step(&mut self, token: f32) -> Result<Tensor> {
+        let GraphExecutor {
+            graph,
+            stages,
+            flow,
+            scratch,
+            decode,
+            ..
+        } = self;
+        graph.forward_step(token, decode, flow, |i, input, out| {
+            let s = &mut stages[i];
+            s.backend.matmul_into(input, &s.staged, &mut scratch[i], out)
+        })
+    }
+
+    /// Run the full autoregressive loop: absorb `prompt` into a fresh
+    /// KV cache, then greedily decode `max_new` tokens. Timing entry 0
+    /// covers the whole prompt prefill plus the first emitted token;
+    /// the rest are single-token decode steps.
+    pub fn generate(&mut self, prompt: &[f32], max_new: usize) -> Result<GenerateOutcome> {
+        if prompt.is_empty() {
+            bail!("generate wants at least one prompt token");
+        }
+        if max_new == 0 {
+            bail!("generate wants max_new_tokens >= 1");
+        }
+        let cap = self.graph.in_elems();
+        // The last generated token is never fed back, so the cache
+        // holds prompt + max_new - 1 rows.
+        if prompt.len() + max_new - 1 > cap {
+            bail!(
+                "prompt of {} + {max_new} new tokens exceeds the {cap}-token \
+                 KV-cache capacity of {:?}",
+                prompt.len(),
+                self.graph.model()
+            );
+        }
+        self.reset_decode();
+        let mut tokens = Vec::with_capacity(max_new);
+        let mut per_token_ms = Vec::with_capacity(max_new);
+        let t0 = Instant::now();
+        let mut last: Option<Tensor> = None;
+        for &tok in prompt {
+            if let Some(prev) = last.take() {
+                self.flow.recycle_tensor(prev);
+            }
+            last = Some(self.decode_step(tok)?);
+        }
+        let y = last.expect("non-empty prompt");
+        per_token_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        let mut next = argmax(y.data()) as u32;
+        tokens.push(next);
+        self.flow.recycle_tensor(y);
+        for _ in 1..max_new {
+            let t1 = Instant::now();
+            let y = self.decode_step(next as f32)?;
+            per_token_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+            next = argmax(y.data()) as u32;
+            tokens.push(next);
+            self.flow.recycle_tensor(y);
+        }
+        Ok(GenerateOutcome {
+            tokens,
+            per_token_ms,
+            cache_len: self.decode.cache_len(),
+            cached_elems: self.decode.cached_elems(),
+        })
+    }
+}
+
+/// Greedy sampling: index of the largest probability (first wins on
+/// ties, so decode stays deterministic).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
 }
 
 impl ModelExecutor for GraphExecutor {
@@ -200,13 +303,37 @@ impl ModelExecutor for GraphExecutor {
         self.recycle_outputs(outputs);
     }
 
+    fn supports_generate(&self) -> bool {
+        self.graph.seq_flexible()
+    }
+
+    fn generate(&mut self, prompt: &[f32], max_new: usize) -> Result<GenerateOutcome> {
+        GraphExecutor::generate(self, prompt, max_new)
+    }
+
     fn describe(&self) -> Value {
+        // Per-op-type layer breakdown for `GET /v1/models` detail.
+        let mut op_counts: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
+        for l in self.graph.layers() {
+            *op_counts.entry(l.name()).or_insert(0) += 1;
+        }
         json::obj(vec![
             ("executor", json::s("graph")),
             ("model", json::s(self.graph.model())),
             ("in_elems", json::num(self.graph.in_elems() as f64)),
             ("out_elems", json::num(self.graph.out_elems() as f64)),
             ("layers", json::num(self.graph.layers().len() as f64)),
+            (
+                "op_counts",
+                json::obj(
+                    op_counts
+                        .into_iter()
+                        .map(|(k, v)| (k, json::num(v as f64)))
+                        .collect(),
+                ),
+            ),
+            ("generate", Value::Bool(self.graph.seq_flexible())),
             ("linear_layers", json::num(self.stages.len() as f64)),
             ("plan", json::s(&self.plan.summary())),
             (
@@ -314,6 +441,37 @@ mod tests {
         assert!(d.contains("\"executor\":\"graph\""), "{d}");
         assert!(d.contains("\"linear_layers\":4"), "{d}");
         assert!(d.contains("float32"), "{d}");
+    }
+
+    #[test]
+    fn generate_decodes_greedily_and_enforces_capacity() {
+        let plan = GraphPlan::edges_float32(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 4.0, 0.5),
+        ));
+        let graph = build("transformer", GRAPH_SEED).unwrap();
+        let mut exec = GraphExecutor::new(graph, &plan, 3, 0).unwrap();
+        assert!(exec.supports_generate());
+        let out = GraphExecutor::generate(&mut exec, &[1.0, 5.0, 2.0], 6).unwrap();
+        assert_eq!(out.tokens.len(), 6);
+        assert_eq!(out.per_token_ms.len(), 6);
+        assert!(out.tokens.iter().all(|&t| t < 32));
+        // 3 prompt tokens + 5 fed-back tokens (the last is never fed).
+        assert_eq!(out.cache_len, 8);
+        assert!(out.cached_elems > 0);
+        // A new request starts a fresh sequence on the same buffers.
+        let again = GraphExecutor::generate(&mut exec, &[1.0, 5.0, 2.0], 6).unwrap();
+        assert_eq!(again.cache_len, 8);
+        // Capacity and degenerate requests are refused up front.
+        assert!(GraphExecutor::generate(&mut exec, &[0.0; 30], 4).is_err());
+        assert!(GraphExecutor::generate(&mut exec, &[], 4).is_err());
+        assert!(GraphExecutor::generate(&mut exec, &[1.0], 0).is_err());
+        // MLP archetypes don't decode.
+        let mut mlp =
+            GraphExecutor::new(build("gru", GRAPH_SEED).unwrap(), &GraphPlan::float32(), 1, 0)
+                .unwrap();
+        assert!(!mlp.supports_generate());
+        assert!(GraphExecutor::generate(&mut mlp, &[1.0], 2).is_err());
     }
 
     #[test]

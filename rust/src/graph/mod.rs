@@ -7,11 +7,15 @@
 //! artifacts:
 //!
 //! * [`ModelGraph`] — a small layer IR (`Linear`, `Bias`, activations,
-//!   `Residual`, `Flatten`) with shape validation and a FLOAT32 host
-//!   reference forward.
+//!   `Residual`, `Flatten`, plus the transformer ops `Embedding`,
+//!   `LayerNorm`, `Softmax`, `Attention`, `TokenLinear`) with shape
+//!   validation and a FLOAT32 host reference forward, and a KV-cache
+//!   decode mode ([`ModelGraph::forward_step`]) for token-by-token
+//!   autoregressive serving.
 //! * [`registry`] — the single source of truth for model metadata
 //!   (paper name, shapes, default tile); [`builders::build`] constructs
-//!   a deterministic seeded graph for each of the six Mini archetypes.
+//!   a deterministic seeded graph for each of the seven Mini
+//!   archetypes.
 //! * [`GraphPlan`] — a **per-layer** assignment of
 //!   [`BackendKind`](crate::backend::BackendKind) +
 //!   [`DeviceConfig`](crate::abfp::DeviceConfig), JSON round-trippable,
@@ -60,6 +64,34 @@ pub enum Layer {
     /// Add the output of layer `from` (skip connection). Widths must
     /// match; validated at graph construction.
     Residual { from: usize },
+    /// Token-id embedding lookup: each input element is a token id
+    /// (rounded to the nearest integer, clamped into `[0, vocab)` —
+    /// inputs arrive as f32 over HTTP), replaced by its `(vocab, d)`
+    /// table row. Width `t -> t*d`.
+    Embedding { table: Tensor },
+    /// Per-token LayerNorm over `gamma.len()`-wide chunks — the float
+    /// side of the hybrid-BFP split, always on the host.
+    LayerNorm { gamma: Tensor, beta: Tensor },
+    /// Max-subtracted softmax over `d`-wide chunks, on the host in
+    /// float (stable for magnitude-1e4 logits; pinned in
+    /// `tests/graph.rs`).
+    Softmax { d: usize },
+    /// Single-head causal self-attention with square `(d, d)`
+    /// q/k/v/output projections — **four planned matmul sites** (in
+    /// q, k, v, o order), each resolving its own
+    /// [`LayerPlan`](plan::LayerPlan); scores, softmax, and the
+    /// context combination stay in float per the hybrid-BFP split.
+    Attention {
+        wq: Tensor,
+        wk: Tensor,
+        wv: Tensor,
+        wo: Tensor,
+    },
+    /// `Linear` applied per token: `(batch, t*d_in) -> (batch,
+    /// t*d_out)` as one `(batch*t, d_in)` matmul — a single planned
+    /// site shared by every position, exactly how transformer MLP
+    /// blocks and vocab heads batch.
+    TokenLinear { w: Tensor, b: Option<Tensor> },
 }
 
 impl Layer {
@@ -74,6 +106,21 @@ impl Layer {
             Layer::Tanh => "tanh",
             Layer::Sigmoid => "sigmoid",
             Layer::Residual { .. } => "residual",
+            Layer::Embedding { .. } => "embedding",
+            Layer::LayerNorm { .. } => "layernorm",
+            Layer::Softmax { .. } => "softmax",
+            Layer::Attention { .. } => "attention",
+            Layer::TokenLinear { .. } => "token_linear",
+        }
+    }
+
+    /// Planned matmul sites this layer contributes (0 for host-only
+    /// ops): what a [`GraphPlan`] indexes.
+    pub fn matmul_sites(&self) -> usize {
+        match self {
+            Layer::Linear { .. } | Layer::TokenLinear { .. } => 1,
+            Layer::Attention { .. } => 4,
+            _ => 0,
         }
     }
 }
@@ -93,6 +140,10 @@ pub struct ModelGraph {
     /// precomputed at construction so the forward walker neither scans
     /// nor allocates per call.
     kept: Vec<bool>,
+    /// True when every op is per-token (no full-width `Linear`/`Bias`):
+    /// the graph then accepts any prefix width `1..=in_elems` and can
+    /// decode token by token ([`ModelGraph::forward_step`]).
+    seq_flexible: bool,
 }
 
 /// Reusable activation buffers for repeated [`ModelGraph::forward_with`]
@@ -127,6 +178,54 @@ impl FlowScratch {
     /// Return a tensor's storage to the pool (the shape is dropped).
     pub fn recycle_tensor(&mut self, t: Tensor) {
         self.recycle(t.into_vec());
+    }
+}
+
+/// Per-sequence autoregressive decode state for
+/// [`ModelGraph::forward_step`]: one grown-per-step K/V row store per
+/// `Attention` layer plus per-layer residual slots for the current
+/// token. Owned by the caller (the executor holds one the way it
+/// holds [`FlowScratch`]), so a warm steady-state decode step
+/// allocates nothing — `reset` keeps every buffer's capacity.
+#[derive(Debug, Default)]
+pub struct DecodeState {
+    pos: usize,
+    kv: Vec<KvCache>,
+    kept: Vec<Vec<f32>>,
+}
+
+/// K and V rows for one `Attention` layer, `d` floats per cached
+/// token, appended once per decode step.
+#[derive(Debug, Default)]
+struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl DecodeState {
+    pub fn new() -> DecodeState {
+        DecodeState::default()
+    }
+
+    /// Tokens absorbed so far (== the KV-cache row count per layer).
+    pub fn cache_len(&self) -> usize {
+        self.pos
+    }
+
+    /// Cached K/V elements across all attention layers — the
+    /// `/metrics` cache-occupancy gauge.
+    pub fn cached_elems(&self) -> usize {
+        self.kv.iter().map(|c| c.k.len() + c.v.len()).sum()
+    }
+
+    /// Start a new sequence: forget positions and cached rows but keep
+    /// every buffer's capacity.
+    pub fn reset(&mut self) {
+        self.pos = 0;
+        for c in &mut self.kv {
+            c.k.clear();
+            c.v.clear();
+        }
     }
 }
 
@@ -197,6 +296,98 @@ impl ModelGraph {
                         );
                     }
                 }
+                Layer::Embedding { table } => {
+                    if table.shape().len() != 2
+                        || table.shape()[0] == 0
+                        || table.shape()[1] == 0
+                    {
+                        bail!(
+                            "graph {model:?} layer {idx}: embedding table must \
+                             be 2-D (vocab, d), got {:?}",
+                            table.shape()
+                        );
+                    }
+                    width *= table.shape()[1];
+                }
+                Layer::LayerNorm { gamma, beta } => {
+                    let d = gamma.len();
+                    if d == 0 || beta.len() != d {
+                        bail!(
+                            "graph {model:?} layer {idx}: layernorm gamma has \
+                             {d} elements, beta {}",
+                            beta.len()
+                        );
+                    }
+                    if width % d != 0 {
+                        bail!(
+                            "graph {model:?} layer {idx}: layernorm over {d} \
+                             channels does not divide width {width}"
+                        );
+                    }
+                }
+                Layer::Softmax { d } => {
+                    if *d == 0 || width % *d != 0 {
+                        bail!(
+                            "graph {model:?} layer {idx}: softmax over {d} \
+                             does not divide width {width}"
+                        );
+                    }
+                }
+                Layer::Attention { wq, wk, wv, wo } => {
+                    if wq.shape().len() != 2
+                        || wq.shape()[0] != wq.shape()[1]
+                        || wq.shape()[0] == 0
+                    {
+                        bail!(
+                            "graph {model:?} layer {idx}: attention wq must be \
+                             square (d, d), got {:?}",
+                            wq.shape()
+                        );
+                    }
+                    let d = wq.shape()[0];
+                    for (name, w) in [("wk", wk), ("wv", wv), ("wo", wo)] {
+                        if w.shape() != wq.shape() {
+                            bail!(
+                                "graph {model:?} layer {idx}: attention {name} \
+                                 {:?} does not match wq {:?}",
+                                w.shape(),
+                                wq.shape()
+                            );
+                        }
+                    }
+                    if width % d != 0 {
+                        bail!(
+                            "graph {model:?} layer {idx}: attention d_model {d} \
+                             does not divide width {width}"
+                        );
+                    }
+                }
+                Layer::TokenLinear { w, b } => {
+                    if w.shape().len() != 2 {
+                        bail!(
+                            "graph {model:?} layer {idx}: token-linear weight \
+                             must be 2-D (out, in), got {:?}",
+                            w.shape()
+                        );
+                    }
+                    let (d_out, d_in) = (w.shape()[0], w.shape()[1]);
+                    if d_in == 0 || d_out == 0 || width % d_in != 0 {
+                        bail!(
+                            "graph {model:?} layer {idx}: token linear \
+                             ({d_out}, {d_in}) does not divide width {width}"
+                        );
+                    }
+                    width = width / d_in * d_out;
+                    if let Some(b) = b {
+                        if b.len() != d_out {
+                            bail!(
+                                "graph {model:?} layer {idx}: token-linear bias \
+                                 has {} elements for {d_out} outputs",
+                                b.len()
+                            );
+                        }
+                    }
+                }
             }
             widths.push(width);
         }
@@ -206,12 +397,16 @@ impl ModelGraph {
                 kept[*from] = true;
             }
         }
+        let seq_flexible = !layers
+            .iter()
+            .any(|l| matches!(l, Layer::Linear { .. } | Layer::Bias(_)));
         Ok(ModelGraph {
             model: model.to_string(),
             input_shape: input_shape.to_vec(),
             layers,
             out_elems: width,
             kept,
+            seq_flexible,
         })
     }
 
@@ -237,23 +432,32 @@ impl ModelGraph {
         &self.layers
     }
 
-    /// Number of `Linear` layers — the layers a [`GraphPlan`] governs.
-    pub fn linear_count(&self) -> usize {
-        self.layers
-            .iter()
-            .filter(|l| matches!(l, Layer::Linear { .. }))
-            .count()
+    /// Whether the graph accepts any prefix width `1..=in_elems`
+    /// (every op is per-token) — the prerequisite for KV-cache decode.
+    pub fn seq_flexible(&self) -> bool {
+        self.seq_flexible
     }
 
-    /// The `(out, in)` weight of the `i`-th `Linear` layer.
+    /// Number of planned matmul **sites** — what a [`GraphPlan`]
+    /// governs. `Linear`/`TokenLinear` contribute one site each;
+    /// `Attention` contributes four (q, k, v, o projections).
+    pub fn linear_count(&self) -> usize {
+        self.layers.iter().map(Layer::matmul_sites).sum()
+    }
+
+    /// The `(out, in)` weights of every planned matmul site, in site
+    /// order (`Attention` yields q, k, v, o).
+    pub fn linear_weights(&self) -> impl Iterator<Item = &Tensor> {
+        self.layers.iter().flat_map(|l| match l {
+            Layer::Linear { w, .. } | Layer::TokenLinear { w, .. } => vec![w],
+            Layer::Attention { wq, wk, wv, wo } => vec![wq, wk, wv, wo],
+            _ => Vec::new(),
+        })
+    }
+
+    /// The `(out, in)` weight of the `i`-th planned matmul site.
     pub fn linear_weight(&self, i: usize) -> Option<&Tensor> {
-        self.layers
-            .iter()
-            .filter_map(|l| match l {
-                Layer::Linear { w, .. } => Some(w),
-                _ => None,
-            })
-            .nth(i)
+        self.linear_weights().nth(i)
     }
 
     /// Run the graph over a packed `(batch, in_elems)` activation
@@ -280,11 +484,19 @@ impl ModelGraph {
     where
         F: FnMut(usize, &Tensor, &mut Tensor) -> Result<()>,
     {
-        if x.shape().len() != 2 || x.shape()[1] != self.in_elems() {
+        let want = self.in_elems();
+        let width_ok = x.shape().len() == 2
+            && if self.seq_flexible {
+                // Token graphs take any prefix: width == token count.
+                (1..=want).contains(&x.shape()[1])
+            } else {
+                x.shape()[1] == want
+            };
+        if !width_ok {
             bail!(
-                "graph {:?} wants a (batch, {}) activation, got {:?}",
+                "graph {:?} wants a (batch, {}{want}) activation, got {:?}",
                 self.model,
-                self.in_elems(),
+                if self.seq_flexible { "1..=" } else { "" },
                 x.shape()
             );
         }
@@ -314,6 +526,96 @@ impl ModelGraph {
                 Layer::Residual { from } => {
                     add_slice(&mut cur, &scratch.kept[*from])?;
                 }
+                Layer::Embedding { table } => {
+                    let (batch, toks) = (cur.shape()[0], cur.shape()[1]);
+                    let d = table.shape()[1];
+                    let mut out = Tensor::from_vec(scratch.take());
+                    let dst = out.reset_matrix(batch, toks * d);
+                    embed_rows(cur.data(), table, dst);
+                    let consumed = std::mem::replace(&mut cur, out);
+                    scratch.recycle_tensor(consumed);
+                }
+                Layer::LayerNorm { gamma, beta } => {
+                    layer_norm_rows(cur.data_mut(), gamma.data(), beta.data())?;
+                }
+                Layer::Softmax { d } => softmax_rows(cur.data_mut(), *d)?,
+                Layer::Attention { wq, .. } => {
+                    let d = wq.shape()[0];
+                    let (batch, width) = (cur.shape()[0], cur.shape()[1]);
+                    if width % d != 0 {
+                        bail!(
+                            "attention d_model {d} does not divide activation \
+                             width {width}"
+                        );
+                    }
+                    let seq = width / d;
+                    let rows = batch * seq;
+                    // (batch, seq*d) -> (batch*seq, d) is free: data is
+                    // row-major, tokens are the rows.
+                    let x = std::mem::replace(&mut cur, Tensor::from_vec(Vec::new()))
+                        .reshape(&[rows, d])?;
+                    let mut q = Tensor::from_vec(scratch.take());
+                    let mut k = Tensor::from_vec(scratch.take());
+                    let mut v = Tensor::from_vec(scratch.take());
+                    linear(li, &x, &mut q)?;
+                    linear(li + 1, &x, &mut k)?;
+                    linear(li + 2, &x, &mut v)?;
+                    // Scores, softmax, and the context combination stay
+                    // in float (hybrid-BFP split), causal per example.
+                    let mut ctx = Tensor::from_vec(scratch.take());
+                    let cd = ctx.reset_matrix(rows, d);
+                    let mut scores = scratch.take();
+                    for bi in 0..batch {
+                        let base = bi * seq;
+                        for i in 0..seq {
+                            let row = base + i;
+                            attend_row(
+                                &q.data()[row * d..(row + 1) * d],
+                                &k.data()[base * d..(base + i + 1) * d],
+                                &v.data()[base * d..(base + i + 1) * d],
+                                i + 1,
+                                d,
+                                &mut scores,
+                                &mut cd[row * d..(row + 1) * d],
+                            );
+                        }
+                    }
+                    scratch.recycle(scores);
+                    let mut out = Tensor::from_vec(scratch.take());
+                    linear(li + 3, &ctx, &mut out)?;
+                    li += 4;
+                    scratch.recycle_tensor(x);
+                    scratch.recycle_tensor(q);
+                    scratch.recycle_tensor(k);
+                    scratch.recycle_tensor(v);
+                    scratch.recycle_tensor(ctx);
+                    let out = out.reshape(&[batch, width])?;
+                    let consumed = std::mem::replace(&mut cur, out);
+                    scratch.recycle_tensor(consumed);
+                }
+                Layer::TokenLinear { w, b } => {
+                    let (batch, width) = (cur.shape()[0], cur.shape()[1]);
+                    let (d_out, d_in) = (w.shape()[0], w.shape()[1]);
+                    if width % d_in != 0 {
+                        bail!(
+                            "token-linear fan-in {d_in} does not divide \
+                             activation width {width}"
+                        );
+                    }
+                    let rows = batch * (width / d_in);
+                    let x = std::mem::replace(&mut cur, Tensor::from_vec(Vec::new()))
+                        .reshape(&[rows, d_in])?;
+                    let mut out = Tensor::from_vec(scratch.take());
+                    linear(li, &x, &mut out)?;
+                    li += 1;
+                    if let Some(b) = b {
+                        add_bias(&mut out, b)?;
+                    }
+                    scratch.recycle_tensor(x);
+                    let out = out.reshape(&[batch, width / d_in * d_out])?;
+                    let consumed = std::mem::replace(&mut cur, out);
+                    scratch.recycle_tensor(consumed);
+                }
             }
             // Only layers a Residual reads back are copied out (into a
             // reusable slot, not a fresh clone).
@@ -331,18 +633,155 @@ impl ModelGraph {
     /// (`Float32Backend::matmul` is bit-identical to `matmul_nt`;
     /// pinned in `tests/graph.rs`).
     pub fn host_forward(&self, x: &Tensor) -> Result<Tensor> {
-        let ws: Vec<&Tensor> = self
-            .layers
-            .iter()
-            .filter_map(|l| match l {
-                Layer::Linear { w, .. } => Some(w),
-                _ => None,
-            })
-            .collect();
+        let ws: Vec<&Tensor> = self.linear_weights().collect();
         let mut scratch = FlowScratch::new();
         self.forward_with(x.clone(), &mut scratch, |i, input, out| {
             input.matmul_nt_into(ws[i], out)
         })
+    }
+
+    /// Decode one token against the KV cache: the token-by-token
+    /// counterpart of [`ModelGraph::forward_with`]. The activation is
+    /// a single `(1, width)` row; each `Attention` layer projects
+    /// q/k/v for this token only (three 1-row matmuls through
+    /// `linear`), appends the fresh k/v rows to `state`'s cache, and
+    /// attends over the cached prefix — O(t·d) per step instead of the
+    /// O(t²·d) full-prefix recompute.
+    ///
+    /// Bit-parity with recompute: every matmul site claims its
+    /// coordinate-keyed noise rows in cumulative order (step t is
+    /// global row t per site), exactly the rows a **fresh**
+    /// full-prefix [`ModelGraph::forward_with`] claims in one call —
+    /// the batch-split invariance pinned in `tests/determinism.rs`
+    /// (D2, D9). The float stages (embedding, LayerNorm,
+    /// scores/softmax/context, activations) run through the same
+    /// helpers with the same accumulation order on both paths.
+    ///
+    /// Returns the `(1, per-token out)` activation for this position;
+    /// recycle it into `scratch` when done.
+    pub fn forward_step<F>(
+        &self,
+        token: f32,
+        state: &mut DecodeState,
+        scratch: &mut FlowScratch,
+        mut linear: F,
+    ) -> Result<Tensor>
+    where
+        F: FnMut(usize, &Tensor, &mut Tensor) -> Result<()>,
+    {
+        if !self.seq_flexible {
+            bail!(
+                "graph {:?} has full-width ops (linear/bias) — decode wants \
+                 per-token ops only",
+                self.model
+            );
+        }
+        if state.pos >= self.in_elems() {
+            bail!(
+                "KV cache full: graph {:?} caps sequences at {} tokens",
+                self.model,
+                self.in_elems()
+            );
+        }
+        let atts = self
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Attention { .. }))
+            .count();
+        if state.kv.len() < atts {
+            state.kv.resize_with(atts, KvCache::default);
+        }
+        if state.kept.len() < self.layers.len() {
+            state.kept.resize(self.layers.len(), Vec::new());
+        }
+        let t = state.pos;
+        let mut cur = Tensor::from_vec(scratch.take());
+        cur.reset_matrix(1, 1)[0] = token;
+        let mut li = 0usize;
+        let mut ai = 0usize;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            match layer {
+                Layer::Flatten => {}
+                Layer::Linear { .. } | Layer::Bias(_) => {
+                    bail!("full-width op {:?} in decode walk", layer.name());
+                }
+                Layer::Embedding { table } => {
+                    let toks = cur.shape()[1];
+                    let d = table.shape()[1];
+                    let mut out = Tensor::from_vec(scratch.take());
+                    let dst = out.reset_matrix(1, toks * d);
+                    embed_rows(cur.data(), table, dst);
+                    let consumed = std::mem::replace(&mut cur, out);
+                    scratch.recycle_tensor(consumed);
+                }
+                Layer::LayerNorm { gamma, beta } => {
+                    layer_norm_rows(cur.data_mut(), gamma.data(), beta.data())?;
+                }
+                Layer::Softmax { d } => softmax_rows(cur.data_mut(), *d)?,
+                Layer::Relu => cur.map_inplace(relu),
+                Layer::Gelu => cur.map_inplace(gelu),
+                Layer::Tanh => cur.map_inplace(|v| v.tanh()),
+                Layer::Sigmoid => cur.map_inplace(sigmoid),
+                Layer::Residual { from } => add_slice(&mut cur, &state.kept[*from])?,
+                Layer::Attention { wq, .. } => {
+                    let d = wq.shape()[0];
+                    if cur.shape()[1] != d {
+                        bail!(
+                            "attention d_model {d} vs step width {}",
+                            cur.shape()[1]
+                        );
+                    }
+                    let mut q = Tensor::from_vec(scratch.take());
+                    let mut k = Tensor::from_vec(scratch.take());
+                    let mut v = Tensor::from_vec(scratch.take());
+                    linear(li, &cur, &mut q)?;
+                    linear(li + 1, &cur, &mut k)?;
+                    linear(li + 2, &cur, &mut v)?;
+                    let cache = &mut state.kv[ai];
+                    cache.k.extend_from_slice(k.data());
+                    cache.v.extend_from_slice(v.data());
+                    let mut ctx = Tensor::from_vec(scratch.take());
+                    let cd = ctx.reset_matrix(1, d);
+                    let mut scores = scratch.take();
+                    attend_row(q.data(), &cache.k, &cache.v, t + 1, d, &mut scores, cd);
+                    scratch.recycle(scores);
+                    let mut out = Tensor::from_vec(scratch.take());
+                    linear(li + 3, &ctx, &mut out)?;
+                    li += 4;
+                    ai += 1;
+                    scratch.recycle_tensor(q);
+                    scratch.recycle_tensor(k);
+                    scratch.recycle_tensor(v);
+                    scratch.recycle_tensor(ctx);
+                    let consumed = std::mem::replace(&mut cur, out);
+                    scratch.recycle_tensor(consumed);
+                }
+                Layer::TokenLinear { w, b } => {
+                    let d_in = w.shape()[1];
+                    if cur.shape()[1] != d_in {
+                        bail!(
+                            "token-linear fan-in {d_in} vs step width {}",
+                            cur.shape()[1]
+                        );
+                    }
+                    let mut out = Tensor::from_vec(scratch.take());
+                    linear(li, &cur, &mut out)?;
+                    li += 1;
+                    if let Some(b) = b {
+                        add_bias(&mut out, b)?;
+                    }
+                    let consumed = std::mem::replace(&mut cur, out);
+                    scratch.recycle_tensor(consumed);
+                }
+            }
+            if self.kept[idx] {
+                let slot = &mut state.kept[idx];
+                slot.clear();
+                slot.extend_from_slice(cur.data());
+            }
+        }
+        state.pos += 1;
+        Ok(cur)
     }
 }
 
@@ -375,6 +814,123 @@ fn add_slice(y: &mut Tensor, src: &[f32]) -> Result<()> {
         *v += s;
     }
     Ok(())
+}
+
+/// Gather embedding rows for a slice of token ids. Ids are rounded to
+/// the nearest integer and clamped into `[0, vocab)`: inputs arrive as
+/// f32 over HTTP, and calibration batches probe the declared domain
+/// with arbitrary floats (NaN maps to token 0).
+pub(crate) fn embed_rows(ids: &[f32], table: &Tensor, out: &mut [f32]) {
+    let vocab = table.shape()[0];
+    let d = table.shape()[1];
+    let td = table.data();
+    for (tok, dst) in ids.iter().zip(out.chunks_mut(d)) {
+        let id = (tok.round().max(0.0) as usize).min(vocab - 1);
+        dst.copy_from_slice(&td[id * d..(id + 1) * d]);
+    }
+}
+
+/// Epsilon inside LayerNorm's variance sqrt (the value DNN runtimes
+/// default to).
+pub(crate) const LN_EPS: f32 = 1e-5;
+
+/// Per-token LayerNorm over `gamma.len()`-wide chunks, in place:
+/// population variance + [`LN_EPS`], one fixed-order pass per chunk so
+/// the full-batch and decode paths agree bit for bit.
+pub(crate) fn layer_norm_rows(data: &mut [f32], gamma: &[f32], beta: &[f32]) -> Result<()> {
+    let d = gamma.len();
+    if d == 0 || beta.len() != d || data.len() % d != 0 {
+        bail!(
+            "layernorm over {d} channels on {} values (beta {})",
+            data.len(),
+            beta.len()
+        );
+    }
+    for row in data.chunks_mut(d) {
+        let mut mean = 0.0f32;
+        for &x in row.iter() {
+            mean += x;
+        }
+        mean /= d as f32;
+        let mut var = 0.0f32;
+        for &x in row.iter() {
+            let c = x - mean;
+            var += c * c;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (i, x) in row.iter_mut().enumerate() {
+            *x = gamma[i] * ((*x - mean) * inv) + beta[i];
+        }
+    }
+    Ok(())
+}
+
+/// Max-subtracted softmax over `d`-wide chunks, in place. Subtracting
+/// the row max keeps `exp` in `(0, 1]`, so magnitude-1e4 logits stay
+/// finite (pinned in `tests/graph.rs`).
+pub(crate) fn softmax_rows(data: &mut [f32], d: usize) -> Result<()> {
+    if d == 0 || data.len() % d != 0 {
+        bail!("softmax over {d} on {} values", data.len());
+    }
+    for row in data.chunks_mut(d) {
+        softmax_row(row);
+    }
+    Ok(())
+}
+
+/// One softmax row, shared verbatim by [`softmax_rows`] and
+/// [`attend_row`] (score normalization) for decode bit-parity.
+fn softmax_row(row: &mut [f32]) {
+    let mut m = f32::NEG_INFINITY;
+    for &x in row.iter() {
+        if x > m {
+            m = x;
+        }
+    }
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in row.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Causal attention for one query row: scaled dot-product scores
+/// against `count` cached key rows, softmax, probability-weighted sum
+/// of the value rows into `out` (length `d`). Fixed accumulation
+/// order — the full-batch and KV-cache decode paths both call exactly
+/// this, which is what makes decode bit-identical to recompute.
+pub(crate) fn attend_row(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    count: usize,
+    d: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    debug_assert!(q.len() == d && k.len() >= count * d && v.len() >= count * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    scores.clear();
+    for j in 0..count {
+        let kj = &k[j * d..(j + 1) * d];
+        let mut dot = 0.0f32;
+        for c in 0..d {
+            dot += q[c] * kj[c];
+        }
+        scores.push(dot * scale);
+    }
+    softmax_row(scores);
+    out.fill(0.0);
+    for (j, &p) in scores.iter().enumerate() {
+        let vj = &v[j * d..(j + 1) * d];
+        for c in 0..d {
+            out[c] += p * vj[c];
+        }
+    }
 }
 
 /// `pub(crate)` rather than private: the static range analyzer
@@ -470,6 +1026,145 @@ mod tests {
         let g = ModelGraph::new("t", &[4], vec![lin(2, 4, 0.5, None)]).unwrap();
         assert!(g.host_forward(&Tensor::zeros(&[1, 3])).is_err());
         assert!(g.host_forward(&Tensor::zeros(&[4])).is_err());
+    }
+
+    /// Deterministic filler for transformer-op test weights.
+    fn t(shape: &[usize], mul: usize) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n)
+            .map(|i| (((i * mul + 3) % 17) as f32 - 8.0) * 0.11)
+            .collect();
+        Tensor::new(shape, data).unwrap()
+    }
+
+    #[test]
+    fn transformer_ops_host_values() {
+        // Embedding: ids pick table rows; fractional ids round, wild
+        // ids clamp into [0, vocab).
+        let table = Tensor::new(&[3, 2], vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]).unwrap();
+        let g = ModelGraph::new("t", &[4], vec![Layer::Embedding { table }]).unwrap();
+        assert_eq!(g.out_elems(), 8);
+        assert!(g.seq_flexible());
+        let x = Tensor::new(&[1, 4], vec![0.0, 2.4, 1.6, 9.0]).unwrap();
+        let y = g.host_forward(&x).unwrap();
+        assert_eq!(y.data(), &[0.0, 1.0, 20.0, 21.0, 20.0, 21.0, 20.0, 21.0]);
+
+        // Softmax: per-chunk rows sum to 1, finite for huge logits.
+        let g = ModelGraph::new("t", &[4], vec![Layer::Softmax { d: 2 }]).unwrap();
+        let x = Tensor::new(&[1, 4], vec![3e4, 3e4, -2e4, 2e4]).unwrap();
+        let y = g.host_forward(&x).unwrap();
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        assert!((y.data()[0] - 0.5).abs() < 1e-6);
+        assert!((y.data()[3] - 1.0).abs() < 1e-6);
+
+        // LayerNorm: zero-mean unit-var per token, then scale + shift.
+        let ln = Layer::LayerNorm {
+            gamma: Tensor::full(&[2], 2.0),
+            beta: Tensor::full(&[2], 1.0),
+        };
+        let g = ModelGraph::new("t", &[4], vec![ln]).unwrap();
+        let x = Tensor::new(&[1, 4], vec![1.0, 3.0, -5.0, 5.0]).unwrap();
+        let y = g.host_forward(&x).unwrap();
+        assert!((y.data()[0] + 1.0).abs() < 1e-3);
+        assert!((y.data()[1] - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn transformer_validation_rejects_bad_shapes() {
+        let e = |t: Tensor| vec![Layer::Embedding { table: t }];
+        assert!(ModelGraph::new("t", &[4], e(Tensor::zeros(&[5]))).is_err());
+        let att = Layer::Attention {
+            wq: t(&[4, 4], 3),
+            wk: t(&[4, 4], 5),
+            wv: t(&[4, 3], 7), // not square
+            wo: t(&[4, 4], 9),
+        };
+        assert!(ModelGraph::new("t", &[8], vec![att]).is_err());
+        // d_model must divide the activation width.
+        let att = Layer::Attention {
+            wq: t(&[3, 3], 3),
+            wk: t(&[3, 3], 5),
+            wv: t(&[3, 3], 7),
+            wo: t(&[3, 3], 9),
+        };
+        assert!(ModelGraph::new("t", &[8], vec![att]).is_err());
+        // Softmax width mismatch.
+        assert!(ModelGraph::new("t", &[4], vec![Layer::Softmax { d: 3 }]).is_err());
+        // LayerNorm gamma/beta mismatch.
+        let ln = Layer::LayerNorm {
+            gamma: t(&[4], 3),
+            beta: t(&[3], 5),
+        };
+        assert!(ModelGraph::new("t", &[4], vec![ln]).is_err());
+    }
+
+    #[test]
+    fn decode_matches_recompute_on_the_host() {
+        // Miniature token graph: embedding -> LN -> attention ->
+        // residual -> vocab head -> softmax. Five matmul sites.
+        let (d, vocab, seq) = (4usize, 5usize, 6usize);
+        let layers = vec![
+            Layer::Embedding {
+                table: t(&[vocab, d], 5),
+            },
+            Layer::LayerNorm {
+                gamma: t(&[d], 7),
+                beta: t(&[d], 11),
+            },
+            Layer::Attention {
+                wq: t(&[d, d], 3),
+                wk: t(&[d, d], 9),
+                wv: t(&[d, d], 13),
+                wo: t(&[d, d], 15),
+            },
+            Layer::Residual { from: 0 },
+            Layer::TokenLinear {
+                w: t(&[vocab, d], 21),
+                b: Some(t(&[vocab], 23)),
+            },
+            Layer::Softmax { d: vocab },
+        ];
+        let g = ModelGraph::new("tiny", &[seq], layers).unwrap();
+        assert!(g.seq_flexible());
+        assert_eq!(g.linear_count(), 5);
+        assert_eq!(g.out_elems(), seq * vocab);
+        let tokens = [1.0f32, 4.0, 0.0, 2.0, 3.0, 1.0];
+        let ws: Vec<&Tensor> = g.linear_weights().collect();
+        let mut state = DecodeState::new();
+        let mut scratch = FlowScratch::new();
+        for (ti, &tok) in tokens.iter().enumerate() {
+            let y = g
+                .forward_step(tok, &mut state, &mut scratch, |i, input, out| {
+                    input.matmul_nt_into(ws[i], out)
+                })
+                .unwrap();
+            // Full recompute over the prefix must agree bit for bit on
+            // the newest token's output chunk.
+            let x = Tensor::new(&[1, ti + 1], tokens[..=ti].to_vec()).unwrap();
+            let full = g.host_forward(&x).unwrap();
+            let w = full.shape()[1];
+            assert_eq!(y.data(), &full.data()[w - vocab..], "step {ti}");
+            scratch.recycle_tensor(y);
+        }
+        assert_eq!(state.cache_len(), seq);
+        assert_eq!(state.cached_elems(), 2 * seq * d);
+        // The KV cache enforces its capacity...
+        let r = g.forward_step(0.0, &mut state, &mut scratch, |_, _, _| Ok(()));
+        assert!(r.is_err());
+        // ...and reset starts a fresh sequence without reallocating.
+        state.reset();
+        assert_eq!(state.cache_len(), 0);
+        assert_eq!(state.cached_elems(), 0);
+        let y = g
+            .forward_step(2.0, &mut state, &mut scratch, |i, input, out| {
+                input.matmul_nt_into(ws[i], out)
+            })
+            .unwrap();
+        let full = g
+            .host_forward(&Tensor::new(&[1, 1], vec![2.0]).unwrap())
+            .unwrap();
+        assert_eq!(y.data(), full.data());
+        scratch.recycle_tensor(y);
     }
 
     #[test]

@@ -92,11 +92,14 @@ USAGE: abfp <command> [flags]
   serve         start the router; --http PORT exposes the HTTP/1.1
                   front door (POST /v1/models/{m}:predict, GET
                   /v1/models, /healthz, Prometheus /metrics; ctrl-d =
-                  graceful shutdown). Without --http: in-process
-                  closed-loop latency bench. --graph serves the
-                  pure-Rust layer graphs (no artifacts needed); --plan
-                  FILE loads a per-layer numeric plan (JSON), e.g.
-                  FLOAT32 edges + ABFP interior.
+                  graceful shutdown). Decode-capable graph models
+                  (transformer) also serve POST /v1/models/{m}:generate
+                  — KV-cache autoregressive decode with per-token
+                  latency in the response and /metrics. Without --http:
+                  in-process closed-loop latency bench. --graph serves
+                  the pure-Rust layer graphs (no artifacts needed);
+                  --plan FILE loads a per-layer numeric plan (JSON),
+                  e.g. FLOAT32 edges + ABFP interior.
                   --models a,b  --requests N  --tile N  --gain G
                   --backend NAME  (--f32 = --backend float32)
                   --bind ADDR (default 0.0.0.0)  --batch N  --wait-ms MS
@@ -128,6 +131,15 @@ USAGE: abfp <command> [flags]
                   stats)  --requests N  --qps Q (0 = closed loop)
                   --port P  --batch N  --wait-ms MS  --deadline-ms MS
                   --pool N  --out DIR
+                  --scenario generate drives POST :generate instead:
+                  batch-1 KV-cache decode on the graph workers (implies
+                  --graph; default --models transformer), closed loop,
+                  swept over simulator thread counts (1/2/4, or the one
+                  --threads point). Reports tokens/sec + per-token
+                  p50/p95 per point and writes
+                  {--out}/bench_serve_generate.json.
+                  --prompt N (prompt tokens, default 4)
+                  --max-new N (new tokens per request, default 8)
   help          this text
 
 Backends: float32 | abfp | fixed | bfp (comma lists and `all` accepted
@@ -199,6 +211,18 @@ fn backend_flag(args: &Args, default: &str) -> String {
 fn model_list(args: &Args) -> Vec<String> {
     args.list("models")
         .unwrap_or_else(|| models::MODEL_NAMES.iter().map(|s| s.to_string()).collect())
+}
+
+/// Default roster for artifact-backed commands (pretrain, sweep-table2):
+/// only the archetypes that actually have AOT artifacts — the graph-only
+/// transformer decode archetype would fail against the manifest.
+fn artifact_model_list(args: &Args) -> Vec<String> {
+    args.list("models").unwrap_or_else(|| {
+        models::ARTIFACT_MODEL_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    })
 }
 
 /// The serving backend selector (`--f32` is an alias for
@@ -337,7 +361,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     let ckpt = args.str_or("ckpt", "checkpoints");
     let steps_flag = args.usize_or("steps", 0)?;
     let seed = args.u64_or("seed", 1)?;
-    for model in model_list(args) {
+    for model in artifact_model_list(args) {
         let steps = pretrain_steps(&model, steps_flag);
         eprintln!("[pretrain] {model}: {steps} steps");
         let mut tr = Trainer::new(&eng, &model, seed)?;
@@ -379,7 +403,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
     grid.eval_samples = args.usize_or("samples", grid.eval_samples)?;
     let backends = BackendKind::parse_list(&backend_flag(args, "abfp"))?;
     let mut sweeps = Vec::new();
-    for model in model_list(args) {
+    for model in artifact_model_list(args) {
         eprintln!(
             "[table2] {model} (backends: {})",
             backends
@@ -709,7 +733,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             http_config_from_args(args)?,
         )?;
         println!("listening on http://{}", server.addr());
-        println!("  POST /v1/models/{{model}}:predict   GET /v1/models /healthz /metrics");
+        println!("  POST /v1/models/{{model}}:predict (+ :generate on decode-capable graph models)");
+        println!("  GET /v1/models /healthz /metrics");
         if std::io::stdin().is_terminal() {
             // Interactive: ctrl-d drains gracefully. (Only when stdin is
             // a terminal — under systemd/docker/nohup stdin is /dev/null
@@ -866,7 +891,18 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "models", "backend", "backends", "f32", "tile", "gain", "artifacts",
         "ckpt", "elems", "queue", "delay-ms", "threads", "graph", "plan", "seed",
         "mode", "workers", "deadline-ms", "pool", "out", "baseline", "tolerance",
+        "scenario", "prompt", "max-new",
     ])?;
+    match args.str_or("scenario", "predict").as_str() {
+        "generate" => return cmd_bench_generate(args),
+        "predict" => {}
+        other => bail!("scenario must be predict or generate (got {other:?})"),
+    }
+    for flag in ["prompt", "max-new"] {
+        if args.has(flag) {
+            bail!("--{flag} only applies to --scenario generate");
+        }
+    }
     // Refuse flag combinations that would silently bench a different
     // worker configuration than the one named: graph-only flags without
     // --graph, echo-only flags when echo is not the harness, --queue on
@@ -1023,6 +1059,126 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         let tolerance = args.f32_or("tolerance", 20.0)? as f64;
         gate_against_baseline(baseline, tolerance, &derived)?;
     }
+    Ok(())
+}
+
+/// `bench-serve --scenario generate`: batch-1 decode thread-scaling.
+/// Graph-only (decode needs the KV-cache graph executors): a fresh
+/// router per simulator thread count, the closed-loop decode driver
+/// against each, tokens/sec + per-token quantiles recorded per point —
+/// decode is batch-1, so the sweep measures how far intra-op matmul
+/// parallelism carries a single sequence.
+fn cmd_bench_generate(args: &Args) -> Result<()> {
+    for flag in [
+        "artifacts", "ckpt", "elems", "delay-ms", "qps", "mode", "workers",
+        "baseline", "tolerance",
+    ] {
+        if args.has(flag) {
+            bail!(
+                "--{flag} does not apply to --scenario generate \
+                 (graph decode, closed loop)"
+            );
+        }
+    }
+    let sel = args
+        .list("models")
+        .unwrap_or_else(|| vec!["transformer".into()]);
+    let plan = graph_plan_from_args(args)?;
+    lint_gate(args, &sel, &plan)?;
+    let smoke = abfp::benchkit::smoke_requested();
+    let requests = args.usize_or("requests", if smoke { 4 } else { 32 })?;
+    let concurrency = args.usize_or("concurrency", if smoke { 2 } else { 4 })?;
+    let prompt_len = args.usize_or("prompt", 4)?;
+    let max_new = args.usize_or("max-new", 8)?;
+    let policy = policy_from_args(args)?;
+    let bind = args.str_or("bind", "127.0.0.1");
+    let port = args.port_or("port", 0)?;
+    let http_cfg = http_config_from_args(args)?;
+    // `--threads N` pins one point; otherwise sweep the simulator pool.
+    let thread_points: Vec<usize> = if args.has("threads") {
+        vec![args.usize_or("threads", 0)?]
+    } else if smoke {
+        vec![1, 2]
+    } else {
+        vec![1, 2, 4]
+    };
+
+    let mut b = abfp::benchkit::Bench::new("serve_generate").with_samples(0, 1);
+    let mut derived: Vec<(String, f64)> = Vec::new();
+    for &threads in &thread_points {
+        let router = Arc::new(Router::start_graph(
+            &sel,
+            &plan,
+            policy,
+            args.usize_or("queue", 1024)?,
+            args.u64_or("seed", 0x5eed)?,
+            threads,
+        )?);
+        let mut server = HttpServer::bind_with(
+            router.clone(),
+            &bind_addr(&bind, port),
+            http_cfg,
+        )?;
+        for model in &sel {
+            let meta = graph::meta(model)?;
+            // Token ids live in the model's declared input domain.
+            let vocab = (meta.input_hi as usize).saturating_add(1);
+            let spec = loadgen::GenSpec {
+                addr: server.addr().to_string(),
+                model: model.clone(),
+                prompt_len,
+                max_new,
+                vocab,
+                requests,
+                concurrency,
+            };
+            eprintln!(
+                "[bench-serve] generate: {model} x{requests} (prompt \
+                 {prompt_len} + {max_new} new, {concurrency} clients, \
+                 {threads} sim thread(s))"
+            );
+            let key = format!("{model}_generate_t{threads}");
+            let mut outcome: Option<Result<loadgen::GenReport>> = None;
+            b.run(&key, requests * max_new, || {
+                outcome = Some(loadgen::run_generate(&spec));
+            });
+            let report = outcome.expect("bench closure ran")?;
+            println!(
+                "{model} [generate, {threads} thread(s)]:\n{}",
+                report.render()
+            );
+            if report.load.ok == 0 {
+                bail!(
+                    "no decode request against {model} succeeded — the \
+                     bench measured nothing (is the model decode-capable?)"
+                );
+            }
+            b.attach(
+                &key,
+                json::obj(vec![
+                    ("threads", json::num(threads as f64)),
+                    ("prompt_len", json::num(prompt_len as f64)),
+                    ("max_new", json::num(max_new as f64)),
+                    ("generate", report.to_json()),
+                ]),
+            );
+            derived.push((
+                format!("{model}_tokens_per_s_t{threads}"),
+                report.tokens_per_s,
+            ));
+            derived.push((
+                format!("{model}_tok_p50_ms_t{threads}"),
+                report.tok_p50_ms,
+            ));
+        }
+        print_server_stats(&router)?;
+        server.shutdown();
+    }
+    for (k, v) in &derived {
+        b.note(k, *v);
+    }
+    let out = args.str_or("out", "reports");
+    b.save(&format!("{out}/bench_serve_generate.json"))?;
     Ok(())
 }
 

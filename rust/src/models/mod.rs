@@ -15,9 +15,23 @@ use anyhow::Result;
 use crate::runtime::{Engine, ModelInfo};
 use crate::tensor::Tensor;
 
-/// All six archetypes, in the paper's Table I order (from the graph
+/// Every archetype, in the paper's Table I order (from the graph
 /// registry — the single source of truth for model metadata).
 pub use crate::graph::registry::MODEL_NAMES;
+
+/// The archetypes with AOT artifacts (`make artifacts`): everything in
+/// [`MODEL_NAMES`] except `transformer`, which exists only in the
+/// pure-Rust layer-graph path (its attention/KV-cache decode ops have
+/// no AOT pipeline). Derived from the registry so the roster cannot
+/// drift.
+pub const ARTIFACT_MODEL_NAMES: [&str; 6] = [
+    crate::graph::registry::REGISTRY[0].name,
+    crate::graph::registry::REGISTRY[1].name,
+    crate::graph::registry::REGISTRY[2].name,
+    crate::graph::registry::REGISTRY[3].name,
+    crate::graph::registry::REGISTRY[4].name,
+    crate::graph::registry::REGISTRY[5].name,
+];
 
 /// Human-readable label mapping an archetype to the paper's DNN.
 /// Unknown names are an error carrying the accepted roster (this used
@@ -81,5 +95,12 @@ mod tests {
         }
         let err = paper_name("resnet").unwrap_err();
         assert!(err.to_string().contains("unknown model"), "{err}");
+    }
+
+    #[test]
+    fn artifact_roster_is_every_model_but_the_decode_archetype() {
+        assert_eq!(ARTIFACT_MODEL_NAMES, MODEL_NAMES[..6]);
+        assert!(!ARTIFACT_MODEL_NAMES.contains(&"transformer"));
+        assert!(MODEL_NAMES.contains(&"transformer"));
     }
 }

@@ -24,6 +24,11 @@
 //!   D8  The zero-allocation seam (`matmul_into` with a reused
 //!       `Scratch`) replays the allocating `matmul` exactly, call
 //!       after call, on all four backends.
+//!   D9  KV-cache decode vs recompute: after t single-token decode
+//!       steps, the next-token distribution is bit-identical to the
+//!       final-position chunk of a FRESH executor's one forward over
+//!       the whole t-token prefix, under a mixed ABFP plan, at every
+//!       thread count — the whole-model corollary of D2.
 //!
 //! Operand sizes sit above the inline threshold of the `parallel`
 //! chunk helpers (4096 output elements) so they genuinely fan out
@@ -33,6 +38,7 @@ use abfp::abfp::{Device, DeviceConfig};
 use abfp::backend::{
     project_params, project_tensor, BackendKind, NumericBackend, Scratch,
 };
+use abfp::graph::{build, builders::GRAPH_SEED, GraphExecutor, GraphPlan, LayerPlan};
 use abfp::numerics::bf16_round;
 use abfp::parallel::{par_cell_chunks, CellGrid};
 use abfp::rng::{CounterRng, Pcg64};
@@ -242,6 +248,48 @@ fn d8_scratch_reuse_replays_the_allocating_path_all_backends() {
         assert_eq!(out, want_a, "{}", kind.name());
         reused.matmul_into(&xb, &staged, &mut scratch, &mut out).unwrap();
         assert_eq!(out, want_b, "{}", kind.name());
+    }
+}
+
+#[test]
+fn d9_decode_steps_replay_fresh_full_prefix_forwards() {
+    // Decode holds a KV cache and pushes ONE row per matmul site per
+    // step; a fresh executor recomputing the whole prefix pushes all
+    // t rows in one call. D2 (batch-split invariance) says each site's
+    // per-row noise draws are identical either way, and the float ops
+    // (embedding / LayerNorm / softmax / attention) are the same helper
+    // code on both paths — so the two must agree bit for bit at every
+    // prefix length, under a mixed ABFP plan, at any thread count.
+    let plan = GraphPlan::edges_float32(LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(0, (8, 8, 8), 4.0, 0.5),
+    ));
+    let prefix = [3.0f32, 17.0, 4.0, 29.0, 0.0, 11.0];
+    for threads in [1usize, 2, 8] {
+        let graph = build("transformer", GRAPH_SEED).unwrap();
+        let vocab = graph.out_elems() / graph.in_elems();
+        let mut dec =
+            GraphExecutor::new(graph.clone(), &plan, 9, threads).unwrap();
+        for (t, &tok) in prefix.iter().enumerate() {
+            let step = dec.decode_step(tok).unwrap();
+            assert_eq!(step.shape(), &[1, vocab], "threads={threads} t={t}");
+            // A fresh executor (same plan + seed) recomputes the whole
+            // prefix in one forward; its last position must match the
+            // incremental step exactly.
+            let mut full =
+                GraphExecutor::new(graph.clone(), &plan, 9, threads).unwrap();
+            let x = Tensor::new(&[1, t + 1], prefix[..=t].to_vec()).unwrap();
+            let y = full.forward(x).unwrap();
+            let want = &y.data()[t * vocab..(t + 1) * vocab];
+            assert_eq!(
+                step.data(),
+                want,
+                "decode diverged from recompute at threads={threads}, \
+                 prefix len {}",
+                t + 1
+            );
+            dec.recycle_outputs(vec![step]);
+        }
     }
 }
 

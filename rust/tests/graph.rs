@@ -1,8 +1,8 @@
 //! Integration tests for the pure-Rust layer-graph serving path:
 //! FLOAT32-plan parity against the host reference, bit-exact
-//! determinism across thread counts, plan-file round-trips, and the
-//! full mixed-plan HTTP serving loop. Everything here runs on a fresh
-//! checkout — no artifacts anywhere.
+//! determinism across thread counts, plan-file round-trips, the full
+//! mixed-plan HTTP serving loop, and KV-cache decode over `:generate`.
+//! Everything here runs on a fresh checkout — no artifacts anywhere.
 
 use std::sync::Arc;
 
@@ -175,6 +175,133 @@ fn mixed_plan_serves_over_http_with_layer_metadata() {
     let s = router.stats("dlrm").unwrap();
     assert_eq!(s.requests, 2);
     assert_eq!(s.failed_requests, 0);
+    drop(server);
+}
+
+#[test]
+fn transformer_decodes_over_http_with_decode_metrics() {
+    // The decode acceptance path end to end: a mixed ABFP plan serves
+    // `POST :generate` over HTTP, the answer carries tokens + per-token
+    // latency, bad prompts 400 without wedging the worker, and decode
+    // counters land in /metrics.
+    let plan = mixed_plan();
+    let router = Arc::new(
+        Router::start_graph(
+            &["transformer".to_string()],
+            &plan,
+            BatchPolicy::new(8, 1).unwrap(),
+            64,
+            0x5eed,
+            1,
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let mut c = abfp::coordinator::loadgen::Conn::open(&server.addr().to_string())
+        .unwrap();
+
+    // Decode capability is advertised in the roster detail.
+    let (status, body) = c.request("GET", "/v1/models", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    let detail = v.get("detail").unwrap().get("transformer").unwrap();
+    assert!(detail.get("generate").unwrap().as_bool().unwrap(), "{body}");
+
+    // The autoregressive loop: 3-token prompt, 5 new tokens.
+    let (status, body) = c
+        .request(
+            "POST",
+            "/v1/models/transformer:generate",
+            r#"{"tokens": [3, 17, 4], "max_new_tokens": 5}"#,
+        )
+        .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = json::parse(&body).unwrap();
+    let toks = resp.get("tokens").unwrap().as_arr().unwrap();
+    assert_eq!(toks.len(), 5, "{body}");
+    for t in toks {
+        let t = t.as_f64().unwrap();
+        assert!((0.0..32.0).contains(&t) && t.fract() == 0.0, "{body}");
+    }
+    let ms = resp.get("per_token_ms").unwrap().as_arr().unwrap();
+    assert_eq!(ms.len(), 5, "{body}");
+    // Per-token latencies are clean enough to histogram: finite and
+    // non-negative, so `Histogram::push` never takes its NaN arm.
+    let mut h = abfp::stats::Histogram::new(0.0, 1e4, 16);
+    for m in ms {
+        let m = m.as_f64().unwrap();
+        assert!(m.is_finite() && m >= 0.0, "{body}");
+        h.push(m);
+    }
+    assert_eq!(h.nan, 0);
+    // Cache: 3 prompt + 5 new - 1 (last token never fed back) = 7 rows.
+    assert_eq!(resp.get("cache_len").unwrap().as_usize().unwrap(), 7);
+    assert!(resp.get("tok_p95_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    // Bad decode requests 400 without wedging the worker.
+    for bad in [
+        r#"{"tokens": [], "max_new_tokens": 2}"#,
+        r#"{"tokens": [1, 2], "max_new_tokens": 0}"#,
+        r#"{"tokens": [1, 2]}"#,
+    ] {
+        let (status, body) =
+            c.request("POST", "/v1/models/transformer:generate", bad).unwrap();
+        assert_eq!(status, 400, "{bad}: {body}");
+    }
+    let (status, _) = c
+        .request(
+            "POST",
+            "/v1/models/transformer:generate",
+            r#"{"tokens": [9], "max_new_tokens": 1}"#,
+        )
+        .unwrap();
+    assert_eq!(status, 200);
+
+    // Decode counters land in /metrics: 5 + 1 tokens across 2 requests.
+    let (status, body) = c.request("GET", "/metrics", "").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("abfp_decode_requests_total{model=\"transformer\"} 2"), "{body}");
+    assert!(body.contains("abfp_decode_tokens_total{model=\"transformer\"} 6"), "{body}");
+    assert!(body.contains("abfp_decode_token_ms_bucket"), "{body}");
+    assert!(body.contains("abfp_decode_token_ms_count{model=\"transformer\"} 6"), "{body}");
+    drop(server);
+}
+
+#[test]
+fn generate_load_driver_reports_tokens_and_quantiles() {
+    // The closed-loop decode driver end to end: several clients decoding
+    // concurrently against one transformer worker, every request served,
+    // token count and per-token quantiles folded into the report.
+    let router = Arc::new(
+        Router::start_graph(
+            &["transformer".to_string()],
+            &mixed_plan(),
+            BatchPolicy::new(8, 1).unwrap(),
+            64,
+            0x5eed,
+            1,
+        )
+        .unwrap(),
+    );
+    let server = HttpServer::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let spec = abfp::coordinator::loadgen::GenSpec {
+        addr: server.addr().to_string(),
+        model: "transformer".to_string(),
+        prompt_len: 3,
+        max_new: 4,
+        vocab: 32,
+        requests: 10,
+        concurrency: 3,
+    };
+    let report = abfp::coordinator::loadgen::run_generate(&spec).unwrap();
+    assert_eq!(report.load.sent, 10, "{}", report.render());
+    assert_eq!(report.load.ok, 10, "{}", report.render());
+    assert_eq!(report.tokens, 40, "{}", report.render());
+    assert!(report.tokens_per_s > 0.0);
+    assert!(report.tok_p50_ms >= 0.0);
+    assert!(report.tok_p95_ms >= report.tok_p50_ms);
+    let j = report.to_json().to_string();
+    assert!(j.contains("\"tokens_per_s\""), "{j}");
     drop(server);
 }
 

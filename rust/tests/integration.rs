@@ -1,5 +1,7 @@
-//! Runtime integration: manifest loading, artifact execution across all
-//! six models, init determinism, and end-to-end metric plumbing.
+//! Runtime integration: manifest loading, artifact execution across the
+//! six artifact-backed models, init determinism, and end-to-end metric
+//! plumbing. (The graph-only `transformer` decode archetype has no AOT
+//! artifacts and is covered by `tests/graph.rs` instead.)
 //!
 //! Requires `make artifacts` (skips, loudly, when missing). The
 //! artifact directory defaults to `artifacts/` and can be pointed
@@ -27,7 +29,7 @@ fn engine() -> Option<Engine> {
 #[test]
 fn manifest_lists_all_models_and_artifacts() {
     let Some(engine) = engine() else { return };
-    for name in models::MODEL_NAMES {
+    for name in models::ARTIFACT_MODEL_NAMES {
         let info = engine.manifest.model(name).expect(name);
         assert!(!info.params.is_empty());
         assert!(info.num_outputs >= 1);
@@ -78,7 +80,7 @@ fn init_is_deterministic_and_matches_manifest_shapes() {
 #[test]
 fn all_models_forward_f32_and_abfp() {
     let Some(engine) = engine() else { return };
-    for name in models::MODEL_NAMES {
+    for name in models::ARTIFACT_MODEL_NAMES {
         let info = engine.manifest.model(name).unwrap().clone();
         let params = models::init_params(&engine, &info, 7).unwrap();
         let ds = dataset_for(name).unwrap();
