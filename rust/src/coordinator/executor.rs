@@ -142,6 +142,12 @@ pub trait ModelExecutor {
 /// failure for its whole batch.
 pub const ECHO_FAIL_SENTINEL: f32 = 1e30;
 
+/// Panic-injection sentinel for [`EchoExecutor`] workers: an example
+/// whose first element is at or below this value makes the executor
+/// **panic** mid-batch — the worst executor failure mode — exercising
+/// the supervision path (catch, typed 503, restart under backoff).
+pub const ECHO_PANIC_SENTINEL: f32 = -1e30;
+
 /// The artifact-free echo executor: output 0 of each example is the
 /// example itself, so clients can verify per-example routing through
 /// the batch assembly. `delay` simulates per-batch device time; the
@@ -176,6 +182,9 @@ impl ModelExecutor for EchoExecutor {
         for i in 0..b {
             if x.data()[i * self.in_elems] >= ECHO_FAIL_SENTINEL {
                 bail!("simulated device failure (echo sentinel)");
+            }
+            if x.data()[i * self.in_elems] <= ECHO_PANIC_SENTINEL {
+                panic!("simulated executor panic (echo sentinel)");
             }
         }
         Ok(Executed {
@@ -364,5 +373,13 @@ mod tests {
         let bad = Tensor::new(&[2, 2], vec![0.0, 0.0, ECHO_FAIL_SENTINEL, 0.0]).unwrap();
         let err = e.execute(2, bad).unwrap_err();
         assert!(err.to_string().contains("simulated device failure"), "{err}");
+    }
+
+    #[test]
+    fn echo_panic_sentinel_panics() {
+        let mut e = EchoExecutor::new(2, Duration::ZERO).unwrap();
+        let bad = Tensor::new(&[1, 2], vec![ECHO_PANIC_SENTINEL, 0.0]).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.execute(1, bad)));
+        assert!(r.is_err(), "panic sentinel must panic, not error");
     }
 }

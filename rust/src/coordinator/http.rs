@@ -46,7 +46,10 @@
 //!   array) plus per-model executor metadata (`detail`: executor kind,
 //!   shapes, the worker's `batching` mode; graph workers add layer
 //!   count and the per-layer numeric plan).
-//! * `GET /healthz` — liveness (`ok`).
+//! * `GET /healthz` — readiness: `ok` when every breaker is Closed,
+//!   `degraded: <models>` (still 200 — traffic is served on the
+//!   fallback) when one is Open/HalfOpen, 503 `restarting` when no
+//!   model can serve, 503 `draining` during graceful shutdown.
 //! * `GET /metrics` — Prometheus text format from [`ServerStats`] +
 //!   [`HttpStats`] (queue depth, batch-size histogram, deadline sheds,
 //!   wakeups).
@@ -63,6 +66,7 @@
 //! | worker queue full ([`SubmitError::Busy`]) | 429 (+ `retry-after: 1`) |
 //! | executor failure / worker dropped       | 500    |
 //! | worker gone / shed past service deadline | 503   |
+//! | device fault / guard trip / mid-restart ([`RequestError::Unavailable`]) | 503 (+ `retry-after: 1`) |
 //!
 //! Backpressure: the loop submits through the nonblocking
 //! [`Router::try_submit_notify`], so a saturated model queue answers
@@ -84,7 +88,7 @@ use anyhow::{anyhow, Result};
 use netpoll::{Poller, READABLE, WRITABLE};
 
 use super::server::{
-    Notify, RequestError, Response, Router, ServerStats, SubmitError,
+    HealthSnapshot, Notify, RequestError, Response, Router, ServerStats, SubmitError,
 };
 use crate::json;
 use crate::stats::quantile_sorted;
@@ -545,6 +549,9 @@ impl Conn {
                         Ok(Err(e @ RequestError::DeadlineExceeded { .. })) => {
                             (503, error_body(&e.to_string()))
                         }
+                        Ok(Err(e @ RequestError::Unavailable { .. })) => {
+                            (503, error_body(&e.to_string()))
+                        }
                         Err(_) => (500, error_body("worker dropped the request")),
                     };
                     self.push_response(
@@ -797,7 +804,7 @@ impl Conn {
                 }
             }
         } else {
-            let (status, ctype, body) = route_sync(router, http, &req);
+            let (status, ctype, body) = route_sync(router, http, &req, stopping);
             self.push_response(status, ctype, body.as_bytes(), keep_alive, head_only);
         }
         if !keep_alive {
@@ -815,7 +822,14 @@ impl Conn {
         head_only: bool,
     ) {
         let conn = if keep_alive { "keep-alive" } else { "close" };
-        let retry = if status == 429 { "retry-after: 1\r\n" } else { "" };
+        // Both backpressure (429) and degraded-service (503) answers
+        // are retryable: tell well-behaved clients when to come back
+        // (loadgen's retry budget honours this).
+        let retry = if status == 429 || status == 503 {
+            "retry-after: 1\r\n"
+        } else {
+            ""
+        };
         let head = format!(
             "HTTP/1.1 {status} {}\r\ncontent-type: {ctype}\r\ncontent-length: {}\r\nconnection: {conn}\r\n{retry}\r\n",
             reason(status),
@@ -914,18 +928,39 @@ fn route_sync(
     router: &Router,
     http: &HttpStats,
     req: &HttpRequest,
+    stopping: bool,
 ) -> (u16, &'static str, String) {
     let method = match req.method.as_str() {
         "HEAD" => "GET",
         m => m,
     };
     match (method, req.path.as_str()) {
-        ("GET", "/healthz") => (200, CT_TEXT, "ok\n".to_string()),
+        ("GET", "/healthz") => healthz_body(router, stopping),
         ("GET", "/v1/models") => (200, CT_JSON, models_body(router)),
         ("GET", "/metrics") => (200, CT_PROM, metrics_body(router, http)),
         ("POST", _) => (404, CT_JSON, error_body("no such route")),
         ("GET", _) => (404, CT_JSON, error_body("no such route")),
         _ => (405, CT_JSON, error_body("method not allowed")),
+    }
+}
+
+/// Readiness-aware `/healthz` (it used to be an unconditional static
+/// ok): 503 while draining for shutdown or while every model's worker
+/// is mid-restart; `degraded` (still 200 — traffic is being served,
+/// on the fallback) when any breaker is not Closed; the healthy answer
+/// stays byte-identical `ok\n`.
+fn healthz_body(router: &Router, stopping: bool) -> (u16, &'static str, String) {
+    if stopping {
+        return (503, CT_TEXT, "draining\n".to_string());
+    }
+    if !router.ready() {
+        return (503, CT_TEXT, "restarting\n".to_string());
+    }
+    let degraded = router.degraded_models();
+    if degraded.is_empty() {
+        (200, CT_TEXT, "ok\n".to_string())
+    } else {
+        (200, CT_TEXT, format!("degraded: {}\n", degraded.join(",")))
     }
 }
 
@@ -1011,6 +1046,16 @@ fn models_body(router: &Router) -> String {
     let mut detail = std::collections::BTreeMap::new();
     for m in &names {
         if let Ok(meta) = router.model_meta(m) {
+            // Live health from the worker's breaker state
+            // (`ok|degraded|restarting`), refreshed per scrape — the
+            // rest of the meta is static executor self-description.
+            let meta = match (meta, router.health(m)) {
+                (json::Value::Obj(mut obj), Ok(h)) => {
+                    obj.insert("health".to_string(), json::s(h.state.health_label()));
+                    json::Value::Obj(obj)
+                }
+                (meta, _) => meta,
+            };
             detail.insert(m.clone(), meta);
         }
     }
@@ -1059,6 +1104,14 @@ fn metrics_body(router: &Router, http: &HttpStats) -> String {
         "Requests shed 503 for blowing their service deadline while queued.",
         &rows,
         |s| s.shed_requests as f64,
+    );
+    emit(
+        &mut out,
+        "abfp_unavailable_requests_total",
+        "counter",
+        "Requests answered with a retryable 503 (fault, guard trip, or mid-restart).",
+        &rows,
+        |s| s.unavailable_requests as f64,
     );
     emit(
         &mut out,
@@ -1225,6 +1278,59 @@ fn metrics_body(router: &Router, http: &HttpStats) -> String {
             "abfp_decode_token_latency_ms{{model=\"{m}\",quantile=\"0.95\"}} {}",
             fmt_prom(s.tok_p95_ms)
         );
+    }
+
+    // Supervision: per-model breaker state and degradation counters
+    // (lock-free atomics on the worker's HealthState).
+    let health: Vec<(String, HealthSnapshot)> = router
+        .served_models()
+        .into_iter()
+        .filter_map(|m| router.health(&m).ok().map(|h| (m, h)))
+        .collect();
+    let breaker_metrics: [(&str, &str, &str, fn(&HealthSnapshot) -> f64); 6] = [
+        (
+            "abfp_breaker_state",
+            "gauge",
+            "Circuit-breaker state (0=closed, 1=open, 2=half_open, 3=restarting).",
+            |h| h.state.code() as f64,
+        ),
+        (
+            "abfp_worker_restarts_total",
+            "counter",
+            "Successful executor rebuilds after a panic or failed restart.",
+            |h| h.restarts as f64,
+        ),
+        (
+            "abfp_fallback_batches_total",
+            "counter",
+            "Batches served by the FLOAT32 host-reference fallback.",
+            |h| h.fallback_batches as f64,
+        ),
+        (
+            "abfp_fault_events_total",
+            "counter",
+            "Fault-class failures observed (guard trips, outages, panics).",
+            |h| h.faults as f64,
+        ),
+        (
+            "abfp_breaker_probes_total",
+            "counter",
+            "HalfOpen probe attempts against the primary plan.",
+            |h| h.probes as f64,
+        ),
+        (
+            "abfp_breaker_rearms_total",
+            "counter",
+            "Probes that succeeded and re-armed the analog plan.",
+            |h| h.rearms as f64,
+        ),
+    ];
+    for (name, kind, help, get) in breaker_metrics {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        for (m, h) in &health {
+            let _ = writeln!(out, "{name}{{model=\"{m}\"}} {}", fmt_prom(get(h)));
+        }
     }
 
     // Front-door (event-loop) counters: no model label.

@@ -28,6 +28,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::json;
+use crate::rng::Pcg64;
 use crate::stats::quantile_sorted;
 
 /// What to drive, how hard.
@@ -45,6 +46,11 @@ pub struct LoadSpec {
     pub concurrency: usize,
     /// Open-loop target rate; `0.0` = closed loop.
     pub target_qps: f64,
+    /// Retry budget per logical request: a 429/503 answer is retried up
+    /// to this many times with jittered backoff honouring the server's
+    /// `Retry-After` header. Retries are reported separately
+    /// ([`LoadReport::retries`]) and never count as fresh offered load.
+    pub retries: usize,
 }
 
 /// The outcome: status-class counts and latency quantiles over the
@@ -63,6 +69,11 @@ pub struct LoadReport {
     /// a continuous-batching run shows its shed rate at a glance.
     pub shed: usize,
     pub transport_errors: usize,
+    /// Retry attempts spent on 429/503 answers (when
+    /// [`LoadSpec::retries`] > 0). Counted apart from `sent`: a logical
+    /// request is offered once however many times it is retried, and
+    /// only its final answer lands in the status classes above.
+    pub retries: usize,
     pub wall_s: f64,
     /// Completed-request throughput (`ok / wall_s`).
     pub qps: f64,
@@ -75,7 +86,7 @@ impl LoadReport {
     /// One-line human rendering.
     pub fn render(&self) -> String {
         format!(
-            "{} ok / {} sent in {:.2}s = {:.1} req/s  (429 {}, 4xx {}, 5xx {} [503 {}], io {})  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
+            "{} ok / {} sent in {:.2}s = {:.1} req/s  (429 {}, 4xx {}, 5xx {} [503 {}], io {}, retries {})  p50 {:.1} ms  p95 {:.1} ms  max {:.1} ms",
             self.ok,
             self.sent,
             self.wall_s,
@@ -85,6 +96,7 @@ impl LoadReport {
             self.server_errors,
             self.shed,
             self.transport_errors,
+            self.retries,
             self.p50_ms,
             self.p95_ms,
             self.max_ms,
@@ -102,6 +114,7 @@ impl LoadReport {
             ("server_errors_5xx", json::num(self.server_errors as f64)),
             ("shed_503", json::num(self.shed as f64)),
             ("transport_errors", json::num(self.transport_errors as f64)),
+            ("retries", json::num(self.retries as f64)),
             ("wall_s", json::num(self.wall_s)),
             ("qps", json::num(self.qps)),
             ("p50_ms", json::num(self.p50_ms)),
@@ -221,6 +234,19 @@ impl Conn {
         path: &str,
         body: &str,
     ) -> Result<(u16, String)> {
+        let (status, body, _) = self.request_full(method, path, body)?;
+        Ok((status, body))
+    }
+
+    /// [`Conn::request`] keeping the retryability signal: `(status,
+    /// body, retry_after_seconds)` — the parsed `Retry-After` header
+    /// when the server sent one (429/503 answers do).
+    pub fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> Result<(u16, String, Option<f64>)> {
         let head = format!(
             "{method} {path} HTTP/1.1\r\nhost: {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
             self.addr,
@@ -247,12 +273,18 @@ impl Conn {
             .nth(1)
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| anyhow!("malformed status line in {head_text:?}"))?;
-        let content_length: usize = head_text
-            .lines()
-            .filter_map(|l| l.split_once(':'))
-            .find(|(name, _)| name.trim().eq_ignore_ascii_case("content-length"))
-            .and_then(|(_, v)| v.trim().parse().ok())
+        let header = |name: &str| {
+            head_text
+                .lines()
+                .filter_map(|l| l.split_once(':'))
+                .find(|(n, _)| n.trim().eq_ignore_ascii_case(name))
+                .map(|(_, v)| v.trim().to_string())
+        };
+        let content_length: usize = header("content-length")
+            .and_then(|v| v.parse().ok())
             .unwrap_or(0);
+        let retry_after: Option<f64> =
+            header("retry-after").and_then(|v| v.parse().ok());
         let total = head_end + 4 + content_length;
         while self.buf.len() < total {
             let mut chunk = [0u8; 8192];
@@ -265,7 +297,7 @@ impl Conn {
         let resp_body =
             String::from_utf8(self.buf[head_end + 4..total].to_vec())?;
         self.buf.drain(..total);
-        Ok((status, resp_body))
+        Ok((status, resp_body, retry_after))
     }
 }
 
@@ -279,6 +311,7 @@ struct Tally {
     server_errors: usize,
     shed: usize,
     transport_errors: usize,
+    retries: usize,
     latencies_ms: Vec<f64>,
 }
 
@@ -300,6 +333,7 @@ fn report_from<'a>(
         report.server_errors += t.server_errors;
         report.shed += t.shed;
         report.transport_errors += t.transport_errors;
+        report.retries += t.retries;
         lat.extend_from_slice(&t.latencies_ms);
     }
     lat.sort_by(f64::total_cmp);
@@ -392,33 +426,28 @@ fn client_main(
         let body = body_for(i, spec.in_elems);
         tally.sent += 1;
         let t_req = Instant::now();
-        // One transparent reconnect: a keep-alive socket the server has
-        // since closed (idle timeout, restart) fails the first write or
-        // read — retry once on a fresh connection before counting an
-        // error.
-        let mut status = None;
-        for attempt in 0..2 {
-            if conn.is_none() {
-                match Conn::open(&spec.addr) {
-                    Ok(c) => conn = Some(c),
-                    Err(_) => break,
-                }
-            }
-            let c = conn.as_mut().unwrap();
-            match c.request("POST", path, &body) {
-                Ok((code, _)) => {
-                    status = Some(code);
-                    break;
-                }
-                Err(_) => {
-                    conn = None;
-                    if attempt == 1 {
-                        break;
-                    }
-                }
-            }
+        // Per-request jitter stream: keyed by the logical request index
+        // so a retrying fleet decorrelates instead of thundering back
+        // in lockstep at the Retry-After boundary.
+        let mut rng = Pcg64::new(0x10ad_6e11, i as u64);
+        let mut outcome = attempt_once(&mut conn, spec, path, &body);
+        let mut retry = 0usize;
+        while retry < spec.retries && matches!(outcome, Some((429 | 503, _))) {
+            // Jittered backoff honouring the server's Retry-After hint
+            // (seconds): the hint is the base, doubled per consecutive
+            // retry and capped, scaled into [0.5, 1.0) of itself.
+            let base = outcome.and_then(|(_, ra)| ra).unwrap_or(0.05).max(0.001);
+            let backoff = (base * (1u64 << retry.min(4)) as f64).min(2.0);
+            let delay = backoff * rng.uniform(0.5, 1.0) as f64;
+            std::thread::sleep(Duration::from_secs_f64(delay));
+            retry += 1;
+            tally.retries += 1;
+            outcome = attempt_once(&mut conn, spec, path, &body);
         }
-        match status {
+        // Only the final answer lands in the status classes; latency
+        // for a retried request covers its whole lifetime, backoff
+        // included (that is what the client experienced).
+        match outcome.map(|(code, _)| code) {
             Some(200) => {
                 tally.ok += 1;
                 tally
@@ -428,6 +457,38 @@ fn client_main(
             other => tally_failure(other, &mut tally),
         }
     }
+}
+
+/// One send with the transparent reconnect: a keep-alive socket the
+/// server has since closed (idle timeout, restart) fails the first
+/// write or read — retry once on a fresh connection before counting a
+/// transport error. Returns `(status, retry_after_seconds)`, or `None`
+/// on transport failure.
+fn attempt_once(
+    conn: &mut Option<Conn>,
+    spec: &LoadSpec,
+    path: &str,
+    body: &str,
+) -> Option<(u16, Option<f64>)> {
+    for attempt in 0..2 {
+        if conn.is_none() {
+            match Conn::open(&spec.addr) {
+                Ok(c) => *conn = Some(c),
+                Err(_) => break,
+            }
+        }
+        let c = conn.as_mut().unwrap();
+        match c.request_full("POST", path, body) {
+            Ok((code, _, retry_after)) => return Some((code, retry_after)),
+            Err(_) => {
+                *conn = None;
+                if attempt == 1 {
+                    break;
+                }
+            }
+        }
+    }
+    None
 }
 
 /// Fold a non-200 outcome into the tally's status classes (shared by
@@ -656,6 +717,7 @@ mod tests {
             requests: 1,
             concurrency: 2,
             target_qps: 0.0,
+            retries: 0,
         };
         assert!(run_sharded(&spec, 0).is_err());
         assert!(run_sharded(&spec, 3).is_err());
@@ -721,6 +783,7 @@ mod tests {
             requests: 1,
             concurrency: 1,
             target_qps: 0.0,
+            retries: 0,
         };
         assert!(run(&spec).is_err());
     }

@@ -79,11 +79,11 @@ mod server;
 pub use batcher::{collect_next, BatchMode, BatchPolicy, Collected};
 pub use executor::{
     EchoExecutor, Executed, GenerateOutcome, ModelExecutor, PjrtExecutor,
-    ECHO_FAIL_SENTINEL,
+    ECHO_FAIL_SENTINEL, ECHO_PANIC_SENTINEL,
 };
 pub use http::{HttpConfig, HttpServer, HttpStats};
 pub use queue::{PopWait, PushError, RequestQueue};
 pub use server::{
-    Notify, Request, RequestError, Response, Router, ServerStats, SubmitError,
-    WorkerConfig, BATCH_HIST_LE, DECODE_HIST_LE,
+    BreakerConfig, BreakerState, HealthSnapshot, Notify, Request, RequestError, Response,
+    Router, ServerStats, SubmitError, WorkerConfig, BATCH_HIST_LE, DECODE_HIST_LE,
 };

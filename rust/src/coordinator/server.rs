@@ -2,6 +2,8 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -10,10 +12,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::{collect_next, BatchPolicy};
-use super::executor::{EchoExecutor, GenerateOutcome, ModelExecutor, PjrtExecutor};
+use super::executor::{EchoExecutor, Executed, GenerateOutcome, ModelExecutor, PjrtExecutor};
 use super::queue::{PushError, RequestQueue};
 use crate::abfp::DeviceConfig;
 use crate::backend::BackendKind;
+use crate::fault::{is_fault_class, FaultPlan};
 use crate::graph::{builders, GraphExecutor, GraphPlan};
 use crate::json::{self, Value};
 use crate::stats::{quantile_sorted, Percentiles, Running};
@@ -35,7 +38,7 @@ pub trait Notify: Send + Sync {
 /// Why a request that *was* accepted onto a worker queue still failed —
 /// typed (instead of a bare `anyhow` message) so the HTTP front door
 /// can map each variant to a status without string matching: `Exec` is
-/// 500, `DeadlineExceeded` is 503.
+/// 500, `DeadlineExceeded` and `Unavailable` are 503.
 #[derive(Debug, Clone)]
 pub enum RequestError {
     /// The executor failed the whole batch (HTTP 500). Carries the
@@ -49,6 +52,11 @@ pub enum RequestError {
         /// How long the request waited before being shed.
         waited_ms: f64,
     },
+    /// The device is misbehaving (injected or real fault, guard trip,
+    /// or a worker mid-restart): the request was answered instead of
+    /// hung, and the condition is retryable — HTTP 503 with
+    /// `Retry-After`, unlike the permanent-looking `Exec` 500.
+    Unavailable { model: String, reason: String },
 }
 
 impl fmt::Display for RequestError {
@@ -59,6 +67,10 @@ impl fmt::Display for RequestError {
                 f,
                 "model {model:?}: request shed after {waited_ms:.1} ms in queue \
                  (service deadline exceeded)"
+            ),
+            RequestError::Unavailable { model, reason } => write!(
+                f,
+                "model {model:?}: temporarily unavailable ({reason}); retry later"
             ),
         }
     }
@@ -152,6 +164,144 @@ impl WorkerConfig {
     }
 }
 
+/// Supervision knobs for a worker: when the per-model circuit breaker
+/// trips, how long it stays open, and how restart backoff grows.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive fault-class batch failures (guard trips, device
+    /// outages, panics) before the breaker opens onto the fallback.
+    pub trip_after: u32,
+    /// Batches served on the fallback before a HalfOpen probe re-tries
+    /// the primary plan.
+    pub probe_after: u64,
+    /// First restart backoff; doubles per consecutive failed restart.
+    pub backoff_base: Duration,
+    /// Backoff growth cap.
+    pub backoff_cap: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            trip_after: 3,
+            probe_after: 8,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(1),
+        }
+    }
+}
+
+/// The per-model circuit breaker's state (Closed → Open → HalfOpen,
+/// plus Restarting for a panicked worker with no fallback to serve on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: the primary (analog) plan serves.
+    Closed,
+    /// Tripped: the FLOAT32 host-reference fallback serves.
+    Open,
+    /// Probing: the fallback still covers while the primary is
+    /// shadow-tested for re-arm.
+    HalfOpen,
+    /// The executor is being rebuilt under backoff; requests are
+    /// answered with a typed 503 meanwhile.
+    Restarting,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+            BreakerState::Restarting => "restarting",
+        }
+    }
+
+    /// Numeric encoding for the `/metrics` gauge.
+    pub fn code(&self) -> u8 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::Open => 1,
+            BreakerState::HalfOpen => 2,
+            BreakerState::Restarting => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> BreakerState {
+        match code {
+            1 => BreakerState::Open,
+            2 => BreakerState::HalfOpen,
+            3 => BreakerState::Restarting,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// The `GET /v1/models` health label.
+    pub fn health_label(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "ok",
+            BreakerState::Open | BreakerState::HalfOpen => "degraded",
+            BreakerState::Restarting => "restarting",
+        }
+    }
+}
+
+/// Shared worker health: the breaker state plus the degradation
+/// counters, updated by the worker thread and read lock-free by
+/// `/metrics`, `/healthz`, and `GET /v1/models`.
+#[derive(Debug, Default)]
+pub struct HealthState {
+    state: AtomicU8,
+    restarts: AtomicU64,
+    fallback_batches: AtomicU64,
+    faults: AtomicU64,
+    probes: AtomicU64,
+    rearms: AtomicU64,
+}
+
+impl HealthState {
+    fn state(&self) -> BreakerState {
+        BreakerState::from_code(self.state.load(Ordering::Acquire))
+    }
+
+    fn set_state(&self, s: BreakerState) {
+        self.state.store(s.code(), Ordering::Release);
+    }
+
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HealthSnapshot {
+        HealthSnapshot {
+            state: self.state(),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            fallback_batches: self.fallback_batches.load(Ordering::Relaxed),
+            faults: self.faults.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            rearms: self.rearms.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One model's health at a point in time (see [`Router::health`]).
+#[derive(Debug, Clone, Copy)]
+pub struct HealthSnapshot {
+    pub state: BreakerState,
+    /// Successful executor rebuilds after a panic or failed restart.
+    pub restarts: u64,
+    /// Batches served by the FLOAT32 fallback while the breaker was
+    /// open (full accuracy, higher energy).
+    pub fallback_batches: u64,
+    /// Fault-class batch failures observed (guard trips, device
+    /// outages, executor panics).
+    pub faults: u64,
+    /// HalfOpen probe attempts against the primary plan.
+    pub probes: u64,
+    /// Probes that succeeded and re-armed the primary (analog) plan.
+    pub rearms: u64,
+}
+
 /// Aggregated serving statistics (read via [`Router::stats`]).
 ///
 /// `requests`/`batches` count successful completions; failures are
@@ -166,6 +316,11 @@ pub struct ServerStats {
     /// Requests shed for blowing their service deadline while queued
     /// (answered 503, never executed).
     pub shed_requests: u64,
+    /// Requests answered with the typed retryable 503
+    /// ([`RequestError::Unavailable`]): device faults, guard trips,
+    /// panics, and restart windows. Counted apart from
+    /// `failed_requests`, which stays the permanent `Exec` 500 class.
+    pub unavailable_requests: u64,
     /// Worker collection rounds (one per batch *or* shed-only round) —
     /// the per-model event-loop wakeup counter in `/metrics`.
     pub wakeups: u64,
@@ -228,6 +383,7 @@ struct WorkerStats {
     failed_requests: u64,
     failed_batches: u64,
     shed_requests: u64,
+    unavailable_requests: u64,
     wakeups: u64,
     tok_latency: Percentiles,
     decode_hist: [u64; DECODE_HIST_LE.len()],
@@ -249,6 +405,7 @@ impl WorkerStats {
             failed_requests: 0,
             failed_batches: 0,
             shed_requests: 0,
+            unavailable_requests: 0,
             wakeups: 0,
             tok_latency: Percentiles::new(4096),
             decode_hist: [0; DECODE_HIST_LE.len()],
@@ -272,6 +429,7 @@ impl WorkerStats {
             failed_requests: self.failed_requests,
             failed_batches: self.failed_batches,
             shed_requests: self.shed_requests,
+            unavailable_requests: self.unavailable_requests,
             wakeups: self.wakeups,
             queue_depth: 0, // filled by Router::stats (the queue gauge)
             mean_batch: self.batch_sizes.mean(),
@@ -361,6 +519,8 @@ struct WorkerHandle {
     /// The executor's startup self-description (kind, shapes, plan),
     /// extended with the worker's `batching` configuration.
     meta: Value,
+    /// Breaker state + degradation counters, shared with the worker.
+    health: Arc<HealthState>,
     join: Option<JoinHandle<()>>,
 }
 
@@ -390,7 +550,8 @@ impl WorkerHandle {
 /// Spawn one worker thread around an executor factory. The factory runs
 /// **on the worker thread** (PJRT clients are thread-confined) and its
 /// result is reported through the ready channel before any request can
-/// be routed.
+/// be routed. Every worker is supervised (panics restart the executor
+/// under backoff); this convenience runs without a fallback executor.
 fn spawn_worker<E, F>(
     name: &str,
     queue: usize,
@@ -399,18 +560,47 @@ fn spawn_worker<E, F>(
 ) -> Result<WorkerHandle>
 where
     E: ModelExecutor + 'static,
-    F: FnOnce() -> Result<E> + Send + 'static,
+    F: Fn() -> Result<E> + Send + 'static,
+{
+    spawn_supervised(
+        name,
+        queue,
+        policy,
+        Box::new(factory),
+        None,
+        BreakerConfig::default(),
+    )
+}
+
+/// [`spawn_worker`] with the full supervision spec: a re-invokable
+/// primary factory (restarts rebuild through it), an optional fallback
+/// factory the circuit breaker fails over to, and the breaker knobs.
+fn spawn_supervised<E>(
+    name: &str,
+    queue: usize,
+    policy: BatchPolicy,
+    factory: Box<dyn Fn() -> Result<E> + Send>,
+    fallback: Option<Box<dyn Fn() -> Result<E> + Send>>,
+    breaker: BreakerConfig,
+) -> Result<WorkerHandle>
+where
+    E: ModelExecutor + 'static,
 {
     let queue = Arc::new(RequestQueue::<Request>::new(queue));
     let queue_c = queue.clone();
     let stats = Arc::new(Mutex::new(WorkerStats::new()));
     let stats_c = stats.clone();
+    let health = Arc::new(HealthState::default());
+    let health_c = health.clone();
     let (ready_tx, ready_rx) = mpsc::channel::<Result<WorkerReady>>();
     let name_c = name.to_string();
+    let has_fallback = fallback.is_some();
     let join = std::thread::Builder::new()
         .name(format!("abfp-worker-{name}"))
         .spawn(move || {
-            worker_main(&name_c, factory, policy, queue_c, stats_c, ready_tx)
+            worker_main(
+                &name_c, factory, fallback, breaker, health_c, policy, queue_c, stats_c, ready_tx,
+            )
         })?;
     let ready = ready_rx
         .recv()
@@ -427,9 +617,15 @@ where
         ),
         ("queue", json::num(queue.capacity() as f64)),
     ]);
+    let supervision = json::obj(vec![
+        ("fallback", Value::Bool(has_fallback)),
+        ("trip_after", json::num(breaker.trip_after as f64)),
+        ("probe_after", json::num(breaker.probe_after as f64)),
+    ]);
     let meta = match ready.meta {
         Value::Obj(mut m) => {
             m.insert("batching".to_string(), batching);
+            m.insert("supervision".to_string(), supervision);
             Value::Obj(m)
         }
         other => other,
@@ -441,6 +637,7 @@ where
         deadline: (!policy.deadline.is_zero()).then_some(policy.deadline),
         generate: ready.generate,
         meta,
+        health,
         join: Some(join),
     })
 }
@@ -482,13 +679,50 @@ impl Router {
         seed: u64,
         threads: usize,
     ) -> Result<Router> {
+        Self::start_graph_supervised(
+            model_names,
+            plan,
+            policy,
+            queue,
+            seed,
+            threads,
+            None,
+            BreakerConfig::default(),
+        )
+    }
+
+    /// [`Router::start_graph`] with the full degradation story wired
+    /// in: each worker carries a FLOAT32 host-reference fallback its
+    /// circuit breaker fails over to when the analog plan misbehaves
+    /// (serving stays up at full accuracy and higher energy), and an
+    /// optional [`FaultPlan`] injects a deterministic device-fault
+    /// schedule into the primary plan's non-FLOAT32 layers — the
+    /// `bench-serve --faults` chaos path.
+    pub fn start_graph_supervised(
+        model_names: &[String],
+        plan: &GraphPlan,
+        policy: BatchPolicy,
+        queue: usize,
+        seed: u64,
+        threads: usize,
+        faults: Option<&FaultPlan>,
+        breaker: BreakerConfig,
+    ) -> Result<Router> {
         let mut workers = BTreeMap::new();
         for name in model_names {
             let (model, plan_c) = (name.clone(), plan.clone());
-            let handle = spawn_worker(name, queue, policy, move || {
+            let faults_c = faults.cloned();
+            let primary = Box::new(move || {
                 let graph = crate::graph::build(&model, builders::GRAPH_SEED)?;
-                GraphExecutor::new(graph, &plan_c, seed, threads)
-            })?;
+                GraphExecutor::with_faults(graph, &plan_c, seed, threads, faults_c.as_ref())
+            });
+            let model_f = name.clone();
+            let fallback = Box::new(move || {
+                let graph = crate::graph::build(&model_f, builders::GRAPH_SEED)?;
+                GraphExecutor::new(graph, &GraphPlan::float32(), seed, threads)
+            });
+            let handle =
+                spawn_supervised(name, queue, policy, primary, Some(fallback), breaker)?;
             workers.insert(name.clone(), handle);
         }
         Ok(Router { workers })
@@ -656,6 +890,34 @@ impl Router {
         self.workers.keys().cloned().collect()
     }
 
+    /// This model's breaker state and degradation counters.
+    pub fn health(&self, model: &str) -> Result<HealthSnapshot> {
+        let worker = self
+            .workers
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model:?} is not served"))?;
+        Ok(worker.health.snapshot())
+    }
+
+    /// Readiness for `/healthz`: at least one worker can serve traffic
+    /// right now (possibly degraded onto its fallback). False when
+    /// every model is mid-restart — or when nothing is served at all.
+    pub fn ready(&self) -> bool {
+        self.workers
+            .values()
+            .any(|w| w.health.state() != BreakerState::Restarting)
+    }
+
+    /// Models currently not serving their primary plan (breaker open,
+    /// probing, or restarting) — the `/healthz` "degraded" detail.
+    pub fn degraded_models(&self) -> Vec<String> {
+        self.workers
+            .iter()
+            .filter(|(_, w)| w.health.state() != BreakerState::Closed)
+            .map(|(name, _)| name.clone())
+            .collect()
+    }
+
     /// Artifact-free router for integration tests and `bench-serve`:
     /// each `(name, in_elems)` pair is served by a host-side
     /// [`EchoExecutor`] — the real batcher / stats / failure machinery
@@ -705,20 +967,516 @@ impl Drop for Router {
     }
 }
 
+/// How an executor call ended when it didn't succeed: a regular error
+/// (kept typed so fault-class failures stay classifiable) or a caught
+/// panic (the executor is presumed corrupt and gets dropped).
+enum ExecFail {
+    Err(anyhow::Error),
+    Panic(String),
+}
+
+impl fmt::Display for ExecFail {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecFail::Err(e) => write!(f, "{e}"),
+            ExecFail::Panic(msg) => write!(f, "panic: {msg}"),
+        }
+    }
+}
+
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "executor panicked".to_string()
+    }
+}
+
+/// Run `execute` with a panic firewall: a panicking executor fails the
+/// call instead of killing the worker thread (which used to wedge
+/// every in-flight and future request for the model).
+fn call_execute<E: ModelExecutor>(exec: &mut E, b: usize, x: Tensor) -> Result<Executed, ExecFail> {
+    match std::panic::catch_unwind(AssertUnwindSafe(|| exec.execute(b, x))) {
+        Ok(Ok(done)) => Ok(done),
+        Ok(Err(e)) => Err(ExecFail::Err(e)),
+        Err(p) => Err(ExecFail::Panic(panic_msg(p))),
+    }
+}
+
+/// Which executor serves the current round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    /// Breaker closed: the primary (analog) plan serves.
+    Primary,
+    /// Breaker open: the FLOAT32 fallback serves.
+    Fallback,
+    /// HalfOpen: the primary is shadow-tested on this round's input;
+    /// the fallback still covers if the probe fails.
+    Probe,
+}
+
+/// The supervision wrapper around a worker's executors: owns the
+/// primary (and, once tripped, the fallback), the circuit-breaker
+/// state machine, and the restart backoff. One per worker thread —
+/// plain state, no locks; the shared [`HealthState`] atomics are the
+/// only cross-thread view.
+struct Supervised<E: ModelExecutor> {
+    factory: Box<dyn Fn() -> Result<E> + Send>,
+    fallback_factory: Option<Box<dyn Fn() -> Result<E> + Send>>,
+    cfg: BreakerConfig,
+    health: Arc<HealthState>,
+    primary: Option<E>,
+    standby: Option<E>,
+    /// Consecutive fault-class batch failures (reset by any success).
+    consecutive_faults: u32,
+    /// Batches served on the fallback since the breaker last opened.
+    open_batches: u64,
+    /// Consecutive failed restart attempts (drives backoff growth).
+    restart_attempts: u32,
+    /// Earliest instant the next restart attempt may run.
+    restart_at: Option<Instant>,
+}
+
+impl<E: ModelExecutor> Supervised<E> {
+    /// Resolve who serves this round, performing any pending state
+    /// transition first (backoff restart, Open→HalfOpen promotion,
+    /// primary rebuild for a probe). `Err` carries the reason every
+    /// request of the round is answered `Unavailable` with.
+    fn begin_round(&mut self, model: &str) -> Result<Role, String> {
+        match self.health.state() {
+            BreakerState::Restarting => {
+                self.restart_primary(model)?;
+                Ok(Role::Primary)
+            }
+            BreakerState::Closed => {
+                if self.primary.is_none() {
+                    self.restart_primary(model)?;
+                }
+                Ok(Role::Primary)
+            }
+            BreakerState::Open => {
+                if self.standby.is_none() && !self.build_standby(model) {
+                    // No fallback to serve on: degrade to restart-style
+                    // typed refusals rather than hanging the round.
+                    return Err("breaker open and no fallback is available".to_string());
+                }
+                if self.open_batches >= self.cfg.probe_after {
+                    if self.ensure_primary(model) {
+                        self.health.set_state(BreakerState::HalfOpen);
+                        return Ok(Role::Probe);
+                    }
+                    self.open_batches = 0; // rebuild failed: wait a full window
+                }
+                Ok(Role::Fallback)
+            }
+            BreakerState::HalfOpen => {
+                if self.ensure_primary(model) {
+                    Ok(Role::Probe)
+                } else {
+                    self.open_batches = 0;
+                    self.health.set_state(BreakerState::Open);
+                    Ok(Role::Fallback)
+                }
+            }
+        }
+    }
+
+    /// Rebuild the primary after a panic/restart, honoring the backoff
+    /// deadline (sleeps out the remainder — the queue keeps buffering).
+    fn restart_primary(&mut self, model: &str) -> Result<(), String> {
+        if let Some(at) = self.restart_at {
+            let now = Instant::now();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        }
+        match (self.factory)() {
+            Ok(e) => {
+                self.primary = Some(e);
+                self.health.set_state(BreakerState::Closed);
+                HealthState::bump(&self.health.restarts);
+                self.restart_attempts = 0;
+                self.restart_at = None;
+                self.consecutive_faults = 0;
+                Ok(())
+            }
+            Err(e) => {
+                eprintln!("worker {model}: restart failed: {e}");
+                self.health.set_state(BreakerState::Restarting);
+                self.schedule_restart();
+                Err(format!("worker restarting ({e})"))
+            }
+        }
+    }
+
+    /// Make sure a primary exists for probing (rebuild if a panic
+    /// dropped it). Returns false when the rebuild fails.
+    fn ensure_primary(&mut self, model: &str) -> bool {
+        if self.primary.is_some() {
+            return true;
+        }
+        match (self.factory)() {
+            Ok(e) => {
+                self.primary = Some(e);
+                HealthState::bump(&self.health.restarts);
+                true
+            }
+            Err(e) => {
+                eprintln!("worker {model}: primary rebuild for probe failed: {e}");
+                false
+            }
+        }
+    }
+
+    fn build_standby(&mut self, model: &str) -> bool {
+        let Some(f) = &self.fallback_factory else {
+            return false;
+        };
+        match f() {
+            Ok(e) => {
+                self.standby = Some(e);
+                true
+            }
+            Err(e) => {
+                eprintln!("worker {model}: fallback build failed: {e}");
+                false
+            }
+        }
+    }
+
+    /// Count one fault-class failure; trips the breaker at the
+    /// configured threshold.
+    fn note_fault(&mut self) {
+        HealthState::bump(&self.health.faults);
+        self.consecutive_faults += 1;
+        if self.consecutive_faults >= self.cfg.trip_after {
+            self.try_open();
+        }
+    }
+
+    /// A panic is worse than a guard trip: it trips the breaker
+    /// immediately (fallback available) or puts the worker into
+    /// backoff restart (no fallback).
+    fn note_panic(&mut self) {
+        HealthState::bump(&self.health.faults);
+        if self.fallback_factory.is_some() {
+            self.consecutive_faults = self.cfg.trip_after.max(1);
+            self.try_open();
+        } else {
+            self.health.set_state(BreakerState::Restarting);
+            self.schedule_restart();
+        }
+    }
+
+    fn try_open(&mut self) {
+        if self.fallback_factory.is_some() {
+            self.open_batches = 0;
+            self.health.set_state(BreakerState::Open);
+            // The standby builds lazily on the next round.
+        } else if self.primary.is_none() {
+            self.health.set_state(BreakerState::Restarting);
+            self.schedule_restart();
+        }
+        // No fallback and a live primary: nothing to fail over to —
+        // keep serving; fault-class errors keep answering typed 503s.
+    }
+
+    /// A successful probe: the analog plan behaves again — re-arm it.
+    fn rearm(&mut self) {
+        self.health.set_state(BreakerState::Closed);
+        HealthState::bump(&self.health.rearms);
+        self.consecutive_faults = 0;
+        self.open_batches = 0;
+        self.restart_attempts = 0;
+        self.restart_at = None;
+        self.standby = None; // rebuilt on the next trip
+    }
+
+    /// A failed probe: back to Open for another full fallback window.
+    fn demote(&mut self) {
+        HealthState::bump(&self.health.faults);
+        self.open_batches = 0;
+        self.health.set_state(BreakerState::Open);
+    }
+
+    fn schedule_restart(&mut self) {
+        let exp = self.restart_attempts.min(10);
+        let delay = self
+            .cfg
+            .backoff_base
+            .saturating_mul(1u32 << exp)
+            .min(self.cfg.backoff_cap);
+        self.restart_attempts += 1;
+        self.restart_at = Some(Instant::now() + delay);
+    }
+
+    /// Serve one packed prediction batch through the state machine.
+    fn serve_batch(
+        &mut self,
+        model: &str,
+        batch: Vec<Request>,
+        in_elems: usize,
+        stats: &Mutex<WorkerStats>,
+    ) {
+        let role = match self.begin_round(model) {
+            Ok(role) => role,
+            Err(reason) => {
+                fail_batch_unavailable(batch, &reason, stats);
+                return;
+            }
+        };
+        let b = batch.len();
+        let t_exec = Instant::now();
+        let x = {
+            let exec = match role {
+                Role::Primary | Role::Probe => self.primary.as_mut(),
+                Role::Fallback => self.standby.as_mut(),
+            }
+            .expect("begin_round provides the serving executor");
+            pack_batch(exec, &batch, in_elems)
+        };
+        match role {
+            Role::Primary => {
+                match call_execute(self.primary.as_mut().expect("role"), b, x) {
+                    Ok(executed) => {
+                        self.consecutive_faults = 0;
+                        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+                        finish_batch(
+                            batch,
+                            &executed.outputs,
+                            executed.padded_batch,
+                            exec_ms,
+                            stats,
+                        );
+                        self.primary.as_mut().expect("role").recycle(executed.outputs);
+                    }
+                    Err(fail) => self.fail_over(model, batch, fail, stats),
+                }
+            }
+            Role::Probe => {
+                HealthState::bump(&self.health.probes);
+                // Shadow the primary on a clone; the fallback still
+                // covers the round if the probe fails, so probing never
+                // costs a client a response.
+                match call_execute(self.primary.as_mut().expect("probe"), b, x.clone()) {
+                    Ok(executed) => {
+                        self.rearm();
+                        let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+                        finish_batch(
+                            batch,
+                            &executed.outputs,
+                            executed.padded_batch,
+                            exec_ms,
+                            stats,
+                        );
+                        self.primary.as_mut().expect("probe").recycle(executed.outputs);
+                    }
+                    Err(fail) => {
+                        eprintln!("worker {model}: halfopen probe failed: {fail}");
+                        if let ExecFail::Panic(_) = fail {
+                            self.primary = None;
+                        }
+                        self.demote();
+                        self.serve_on_fallback(model, batch, b, x, t_exec, stats);
+                    }
+                }
+            }
+            Role::Fallback => self.serve_on_fallback(model, batch, b, x, t_exec, stats),
+        }
+    }
+
+    fn serve_on_fallback(
+        &mut self,
+        model: &str,
+        batch: Vec<Request>,
+        b: usize,
+        x: Tensor,
+        t_exec: Instant,
+        stats: &Mutex<WorkerStats>,
+    ) {
+        let standby = self.standby.as_mut().expect("open breaker has a standby");
+        match call_execute(standby, b, x) {
+            Ok(executed) => {
+                HealthState::bump(&self.health.fallback_batches);
+                self.open_batches += 1;
+                let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+                finish_batch(
+                    batch,
+                    &executed.outputs,
+                    executed.padded_batch,
+                    exec_ms,
+                    stats,
+                );
+                self.standby.as_mut().expect("still held").recycle(executed.outputs);
+            }
+            Err(fail) => {
+                // The host-reference fallback failing is a genuine
+                // executor failure: permanent 500 class, same contract
+                // as an unsupervised worker.
+                eprintln!("worker {model}: fallback execute failed: {fail}");
+                if let ExecFail::Panic(_) = fail {
+                    self.standby = None;
+                }
+                fail_batch(batch, &format!("execute failed: {fail}"), stats);
+            }
+        }
+    }
+
+    /// Classify a primary-execute failure: fault-class errors answer a
+    /// retryable 503 and feed the breaker; generic errors keep the
+    /// pinned `Exec` 500 contract and do NOT feed it; panics drop the
+    /// executor and trip/restart immediately.
+    fn fail_over(
+        &mut self,
+        model: &str,
+        batch: Vec<Request>,
+        fail: ExecFail,
+        stats: &Mutex<WorkerStats>,
+    ) {
+        match fail {
+            ExecFail::Err(e) if is_fault_class(&e) => {
+                eprintln!("worker {model}: fault-class failure: {e}");
+                self.note_fault();
+                fail_batch_unavailable(batch, &format!("{e}"), stats);
+            }
+            ExecFail::Err(e) => {
+                eprintln!("worker {model}: execute failed: {e}");
+                fail_batch(batch, &format!("execute failed: {e}"), stats);
+            }
+            ExecFail::Panic(msg) => {
+                eprintln!("worker {model}: executor panicked: {msg}");
+                self.primary = None;
+                self.note_panic();
+                fail_batch_unavailable(batch, &format!("executor panicked: {msg}"), stats);
+            }
+        }
+    }
+
+    /// Serve one `:generate` request through the same state machine.
+    fn serve_generate(&mut self, model: &str, req: Request, stats: &Mutex<WorkerStats>) {
+        let role = match self.begin_round(model) {
+            Ok(role) => role,
+            Err(reason) => {
+                fail_batch_unavailable(vec![req], &reason, stats);
+                return;
+            }
+        };
+        match role {
+            Role::Primary | Role::Probe => {
+                if role == Role::Probe {
+                    HealthState::bump(&self.health.probes);
+                }
+                let exec = self.primary.as_mut().expect("begin_round");
+                match run_generate(exec, req, stats) {
+                    Ok(()) => {
+                        if role == Role::Probe {
+                            self.rearm();
+                        } else {
+                            self.consecutive_faults = 0;
+                        }
+                    }
+                    Err((req, fail)) => {
+                        if role == Role::Probe {
+                            eprintln!("worker {model}: halfopen probe failed: {fail}");
+                            if let ExecFail::Panic(_) = fail {
+                                self.primary = None;
+                            }
+                            self.demote();
+                            self.generate_on_fallback(model, req, stats);
+                        } else {
+                            self.fail_over_generate(model, req, fail, stats);
+                        }
+                    }
+                }
+            }
+            Role::Fallback => self.generate_on_fallback(model, req, stats),
+        }
+    }
+
+    fn generate_on_fallback(&mut self, model: &str, req: Request, stats: &Mutex<WorkerStats>) {
+        let standby = self.standby.as_mut().expect("open breaker has a standby");
+        match run_generate(standby, req, stats) {
+            Ok(()) => {
+                HealthState::bump(&self.health.fallback_batches);
+                self.open_batches += 1;
+            }
+            Err((req, fail)) => {
+                eprintln!("worker {model}: fallback generate failed: {fail}");
+                if let ExecFail::Panic(_) = fail {
+                    self.standby = None;
+                }
+                fail_batch(vec![req], &format!("generate failed: {fail}"), stats);
+            }
+        }
+    }
+
+    fn fail_over_generate(
+        &mut self,
+        model: &str,
+        req: Request,
+        fail: ExecFail,
+        stats: &Mutex<WorkerStats>,
+    ) {
+        match fail {
+            ExecFail::Err(e) if is_fault_class(&e) => {
+                eprintln!("worker {model}: fault-class generate failure: {e}");
+                self.note_fault();
+                fail_batch_unavailable(vec![req], &format!("{e}"), stats);
+            }
+            ExecFail::Err(e) => {
+                eprintln!("worker {model}: generate failed: {e}");
+                fail_batch(vec![req], &format!("generate failed: {e}"), stats);
+            }
+            ExecFail::Panic(msg) => {
+                eprintln!("worker {model}: executor panicked: {msg}");
+                self.primary = None;
+                self.note_panic();
+                fail_batch_unavailable(vec![req], &format!("executor panicked: {msg}"), stats);
+            }
+        }
+    }
+}
+
+/// Pack a request batch into the executor's `(pack_rows(b), in_elems)`
+/// layout, one row per example, zero-padded tail (PJRT pads to its
+/// compiled batch here, so nothing repacks downstream). The backing
+/// buffer comes from the executor's pool when it has one (clear +
+/// resize zero-fill the pad rows without reallocating once warm), so a
+/// warm graph worker packs without touching the heap.
+fn pack_batch<E: ModelExecutor>(exec: &mut E, batch: &[Request], in_elems: usize) -> Tensor {
+    let b = batch.len();
+    let rows = exec.pack_rows(b).max(b);
+    let mut xdata = exec.take_pack_buffer();
+    xdata.clear();
+    xdata.resize(rows * in_elems, 0.0);
+    for (i, req) in batch.iter().enumerate() {
+        xdata[i * in_elems..(i + 1) * in_elems].copy_from_slice(req.x.data());
+    }
+    Tensor::new(&[rows, in_elems], xdata).unwrap()
+}
+
 /// The worker loop, generic over the execution engine: construct the
 /// executor (factory runs here, on the worker thread), report ready,
 /// then batch -> pack -> execute -> fan out until the channel closes.
 /// Echo, graph, and PJRT serving all flow through this one loop — same
-/// batcher, same stats, same failure fan-out.
+/// batcher, same stats, same failure fan-out — under the supervision
+/// wrapper: panics are caught and restarted with capped exponential
+/// backoff, and fault-class failures drive the per-model circuit
+/// breaker (see [`Supervised`]).
 fn worker_main<E: ModelExecutor>(
     model: &str,
-    factory: impl FnOnce() -> Result<E>,
+    factory: Box<dyn Fn() -> Result<E> + Send>,
+    fallback: Option<Box<dyn Fn() -> Result<E> + Send>>,
+    breaker: BreakerConfig,
+    health: Arc<HealthState>,
     policy: BatchPolicy,
     queue: Arc<RequestQueue<Request>>,
     stats: Arc<Mutex<WorkerStats>>,
     ready: Sender<Result<WorkerReady>>,
 ) {
-    let mut exec = match factory() {
+    let exec = match factory() {
         Ok(e) => e,
         Err(e) => {
             ready.send(Err(e)).ok();
@@ -742,6 +1500,18 @@ fn worker_main<E: ModelExecutor>(
             meta: exec.describe(),
         }))
         .ok();
+    let mut sup = Supervised {
+        factory,
+        fallback_factory: fallback,
+        cfg: breaker,
+        health,
+        primary: Some(exec),
+        standby: None,
+        consecutive_faults: 0,
+        open_batches: 0,
+        restart_attempts: 0,
+        restart_at: None,
+    };
 
     while let Some(collected) = collect_next(&queue, &policy, |r: &Request| r.deadline) {
         stats.lock().unwrap().wakeups += 1;
@@ -756,102 +1526,71 @@ fn worker_main<E: ModelExecutor>(
             .into_iter()
             .partition(|r| r.max_new.is_some());
         for req in gens {
-            run_generate(model, &mut exec, req, &stats);
+            sup.serve_generate(model, req, &stats);
         }
         if batch.is_empty() {
             continue; // shed-only or decode-only round
         }
-        let t_exec = Instant::now();
-        // Pack the request batch once, directly into the executor's
-        // target layout: (pack_rows(b), in_elems), one row per example,
-        // zero-padded tail (PJRT pads to its compiled batch here, so
-        // nothing repacks downstream). The backing buffer comes from
-        // the executor's pool when it has one (clear + resize zero-fill
-        // the pad rows without reallocating once warm), so a warm graph
-        // worker packs without touching the heap.
-        let b = batch.len();
-        let rows = exec.pack_rows(b).max(b);
-        let mut xdata = exec.take_pack_buffer();
-        xdata.clear();
-        xdata.resize(rows * in_elems, 0.0);
-        for (i, req) in batch.iter().enumerate() {
-            xdata[i * in_elems..(i + 1) * in_elems].copy_from_slice(req.x.data());
-        }
-        let x = Tensor::new(&[rows, in_elems], xdata).unwrap();
-
-        // An executor failure fails the *batch*, never the worker: every
-        // waiting client gets an error response and the stats record it.
-        // (The old `continue` dropped the whole batch — clients saw only
-        // a bare channel-closed error and the requests vanished from the
-        // serving stats.)
-        match exec.execute(b, x) {
-            Ok(executed) => {
-                let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-                finish_batch(batch, &executed.outputs, executed.padded_batch, exec_ms, &stats);
-                // Fan-out copied per-client slices; the batched output
-                // buffers go back to the executor's pool.
-                exec.recycle(executed.outputs);
-            }
-            Err(e) => {
-                eprintln!("worker {model}: execute failed: {e}");
-                fail_batch(batch, &format!("execute failed: {e}"), &stats);
-            }
-        }
+        // An executor failure fails the *batch*, never the worker:
+        // every waiting client gets a typed error response and the
+        // stats record it. (The old `continue` dropped the whole batch
+        // — clients saw only a bare channel-closed error and the
+        // requests vanished from the serving stats.)
+        sup.serve_batch(model, batch, in_elems, &stats);
     }
 }
 
 /// Run one `:generate` request through the executor's decode loop and
 /// answer the waiting client. Counted as a batch of 1 in the serving
 /// stats, plus the decode-specific counters (tokens, per-token latency
-/// histogram, KV-cache occupancy gauge).
+/// histogram, KV-cache occupancy gauge). A failure (or caught panic)
+/// hands the request back to the caller for classification.
 fn run_generate<E: ModelExecutor>(
-    model: &str,
     exec: &mut E,
     req: Request,
     stats: &Mutex<WorkerStats>,
-) {
+) -> Result<(), (Request, ExecFail)> {
     let max_new = req.max_new.unwrap_or(0);
     let t_exec = Instant::now();
-    match exec.generate(req.x.data(), max_new) {
-        Ok(outcome) => {
-            let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
-            let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let queue_ms = (total_ms - exec_ms).max(0.0);
-            {
-                let mut s = stats.lock().unwrap();
-                s.requests += 1;
-                s.batches += 1;
-                s.batch_sizes.push(1.0);
-                s.batch_hist[batch_bucket(1)] += 1;
-                s.exec_ms.push(exec_ms);
-                s.latency.push(total_ms);
-                s.decode_requests += 1;
-                s.decode_tokens += outcome.tokens.len() as u64;
-                s.cache_elems = outcome.cached_elems as u64;
-                for &ms in &outcome.per_token_ms {
-                    s.tok_latency.push(ms);
-                    s.decode_hist[decode_bucket(ms)] += 1;
-                    s.decode_ms_sum += ms;
-                }
-            }
-            req.respond
-                .send(Ok(Response {
-                    outputs: Vec::new(),
-                    queue_ms,
-                    total_ms,
-                    batch_size: 1,
-                    decode: Some(outcome),
-                }))
-                .ok();
-            if let Some(n) = &req.notify {
-                n.notify();
-            }
-        }
-        Err(e) => {
-            eprintln!("worker {model}: generate failed: {e}");
-            fail_batch(vec![req], &format!("generate failed: {e}"), stats);
+    let outcome =
+        match std::panic::catch_unwind(AssertUnwindSafe(|| exec.generate(req.x.data(), max_new))) {
+            Ok(Ok(o)) => o,
+            Ok(Err(e)) => return Err((req, ExecFail::Err(e))),
+            Err(p) => return Err((req, ExecFail::Panic(panic_msg(p)))),
+        };
+    let exec_ms = t_exec.elapsed().as_secs_f64() * 1e3;
+    let total_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+    let queue_ms = (total_ms - exec_ms).max(0.0);
+    {
+        let mut s = stats.lock().unwrap();
+        s.requests += 1;
+        s.batches += 1;
+        s.batch_sizes.push(1.0);
+        s.batch_hist[batch_bucket(1)] += 1;
+        s.exec_ms.push(exec_ms);
+        s.latency.push(total_ms);
+        s.decode_requests += 1;
+        s.decode_tokens += outcome.tokens.len() as u64;
+        s.cache_elems = outcome.cached_elems as u64;
+        for &ms in &outcome.per_token_ms {
+            s.tok_latency.push(ms);
+            s.decode_hist[decode_bucket(ms)] += 1;
+            s.decode_ms_sum += ms;
         }
     }
+    req.respond
+        .send(Ok(Response {
+            outputs: Vec::new(),
+            queue_ms,
+            total_ms,
+            batch_size: 1,
+            decode: Some(outcome),
+        }))
+        .ok();
+    if let Some(n) = &req.notify {
+        n.notify();
+    }
+    Ok(())
 }
 
 /// Fan an execution failure back out: each waiting client receives an
@@ -869,6 +1608,29 @@ fn fail_batch(batch: Vec<Request>, err: &str, stats: &Mutex<WorkerStats>) {
     for req in batch {
         let msg = format!("model {:?}: {err}", req.model);
         req.respond.send(Err(RequestError::Exec(msg))).ok();
+        if let Some(n) = &req.notify {
+            n.notify();
+        }
+    }
+}
+
+/// Fan a *retryable* failure back out: each waiting client receives
+/// [`RequestError::Unavailable`] (503 + `Retry-After` at the front
+/// door) and the refusals land in [`ServerStats::unavailable_requests`]
+/// — NOT in `failed_requests`, which stays reserved for the permanent
+/// `Exec` (500) class.
+fn fail_batch_unavailable(batch: Vec<Request>, reason: &str, stats: &Mutex<WorkerStats>) {
+    {
+        let mut s = stats.lock().unwrap();
+        s.unavailable_requests += batch.len() as u64;
+    }
+    for req in batch {
+        req.respond
+            .send(Err(RequestError::Unavailable {
+                model: req.model.clone(),
+                reason: reason.to_string(),
+            }))
+            .ok();
         if let Some(n) = &req.notify {
             n.notify();
         }
@@ -1376,5 +2138,206 @@ mod tests {
     fn slice_example_passthrough_scalars() {
         let t = Tensor::scalar(5.0);
         assert_eq!(slice_example(&t, 1, 4), t);
+    }
+
+    #[test]
+    fn panic_restarts_the_worker_and_answers_a_typed_503() {
+        // Satellite (c): an executor panic used to kill the worker
+        // thread forever — the in-flight request hung on a closed
+        // channel and every later submit errored. Supervision must
+        // catch it, answer the batch with a retryable typed error, and
+        // rebuild the executor under backoff so the next request
+        // succeeds.
+        use crate::coordinator::ECHO_PANIC_SENTINEL;
+        let router = echo_router(3);
+        let mut bad = Tensor::zeros(&[3]);
+        bad.data_mut()[0] = ECHO_PANIC_SENTINEL;
+        let err = router.infer("echo", bad).unwrap_err();
+        assert!(err.to_string().contains("temporarily unavailable"), "{err}");
+        assert!(err.to_string().contains("panic"), "{err}");
+        // The next request triggers the backoff restart and succeeds.
+        let resp = router.infer("echo", Tensor::zeros(&[3])).unwrap();
+        assert_eq!(resp.outputs[0].len(), 3);
+        let h = router.health("echo").unwrap();
+        assert_eq!(h.state, BreakerState::Closed);
+        assert_eq!(h.restarts, 1);
+        assert_eq!(h.faults, 1);
+        let s = router.stats("echo").unwrap();
+        assert_eq!(s.unavailable_requests, 1, "503 class, not 500");
+        assert_eq!(s.failed_requests, 0);
+        assert_eq!(s.requests, 1);
+    }
+
+    /// FLOAT32 edges + ABFP interior — the one wrapped (fault-eligible)
+    /// matmul site is layer ordinal 1, and with batch-1 requests its
+    /// global row clock advances by exactly one per request.
+    fn abfp_interior_plan() -> GraphPlan {
+        use crate::graph::LayerPlan;
+        GraphPlan::edges_float32(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+        ))
+    }
+
+    #[test]
+    fn breaker_opens_onto_a_bit_identical_float32_fallback() {
+        // Satellite (c): an open-ended device outage refuses every
+        // primary batch; after `trip_after` fault-class failures the
+        // breaker opens and the FLOAT32 standby serves — bit-identical
+        // to the host-reference forward, full accuracy at higher
+        // energy.
+        use crate::fault::{FaultKind, FaultPlan, FaultRule, OPEN_END};
+        use crate::graph::{build, builders::GRAPH_SEED};
+        let faults = FaultPlan::new(
+            7,
+            vec![FaultRule {
+                kind: FaultKind::Outage,
+                start_row: 0,
+                end_row: OPEN_END,
+            }],
+        );
+        let breaker = BreakerConfig {
+            trip_after: 2,
+            probe_after: 1_000_000, // never probe in this test
+            ..BreakerConfig::default()
+        };
+        let router = Router::start_graph_supervised(
+            &["gru".to_string()],
+            &abfp_interior_plan(),
+            BatchPolicy::new(1, 0).unwrap(),
+            64,
+            7,
+            1,
+            Some(&faults),
+            breaker,
+        )
+        .unwrap();
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let x = Tensor::full(&[graph.in_elems()], 0.25);
+        for _ in 0..2 {
+            let err = router.infer("gru", x.clone()).unwrap_err();
+            assert!(err.to_string().contains("temporarily unavailable"), "{err}");
+            assert!(err.to_string().contains("outage"), "{err}");
+        }
+        let h = router.health("gru").unwrap();
+        assert_eq!(h.state, BreakerState::Open);
+        assert_eq!(h.faults, 2);
+
+        // The fallback serves, bit-identical to the host reference.
+        let xb = x.reshape(&[1, graph.in_elems()]).unwrap();
+        let expect = graph.host_forward(&xb).unwrap();
+        for _ in 0..3 {
+            let resp = router.infer("gru", x.clone()).unwrap();
+            assert_eq!(resp.outputs[0].data(), expect.data());
+        }
+        let h = router.health("gru").unwrap();
+        assert_eq!(h.state, BreakerState::Open);
+        assert_eq!(h.fallback_batches, 3);
+        assert_eq!(h.probes, 0);
+        let s = router.stats("gru").unwrap();
+        assert_eq!(s.unavailable_requests, 2);
+        assert_eq!(s.failed_requests, 0);
+        assert_eq!(s.requests, 3);
+    }
+
+    #[test]
+    fn halfopen_probe_rearms_the_analog_plan_after_the_fault_clears() {
+        // Satellite (c): a bounded outage window [0, 2) — the wrapped
+        // interior matmul consumes one global row per batch-1 request,
+        // so the schedule is deterministic: req1 faults (row 0, trips
+        // at trip_after=1), two fallback batches, a probe at row 1
+        // still inside the window (fails, back to Open; its covering
+        // fallback answer counts toward the next probe window), one
+        // more fallback batch, then a probe at row 2 outside the
+        // window succeeds and re-arms the ABFP plan.
+        use crate::fault::{FaultKind, FaultPlan, FaultRule};
+        use crate::graph::{build, builders::GRAPH_SEED};
+        let faults = FaultPlan::new(
+            7,
+            vec![FaultRule {
+                kind: FaultKind::Outage,
+                start_row: 0,
+                end_row: 2,
+            }],
+        );
+        let breaker = BreakerConfig {
+            trip_after: 1,
+            probe_after: 2,
+            ..BreakerConfig::default()
+        };
+        let router = Router::start_graph_supervised(
+            &["gru".to_string()],
+            &abfp_interior_plan(),
+            BatchPolicy::new(1, 0).unwrap(),
+            64,
+            7,
+            1,
+            Some(&faults),
+            breaker,
+        )
+        .unwrap();
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let x = Tensor::full(&[graph.in_elems()], 0.25);
+        let xb = x.reshape(&[1, graph.in_elems()]).unwrap();
+        let host_ref = graph.host_forward(&xb).unwrap();
+
+        // req1: row 0 is in the outage window -> typed 503, breaker opens.
+        let err = router.infer("gru", x.clone()).unwrap_err();
+        assert!(err.to_string().contains("outage"), "{err}");
+        assert_eq!(router.health("gru").unwrap().state, BreakerState::Open);
+
+        // req2-3: fallback window (host-reference outputs).
+        for _ in 0..2 {
+            let resp = router.infer("gru", x.clone()).unwrap();
+            assert_eq!(resp.outputs[0].data(), host_ref.data());
+        }
+        // req4: probe at row 1 — still faulted; the fallback covers the
+        // round, so the client sees a normal response.
+        let resp = router.infer("gru", x.clone()).unwrap();
+        assert_eq!(resp.outputs[0].data(), host_ref.data());
+        let h = router.health("gru").unwrap();
+        assert_eq!(h.state, BreakerState::Open);
+        assert_eq!(h.probes, 1);
+        assert_eq!(h.rearms, 0);
+
+        // req5: one more fallback batch fills the probe window (the
+        // req4 cover already counted toward it).
+        let resp = router.infer("gru", x.clone()).unwrap();
+        assert_eq!(resp.outputs[0].data(), host_ref.data());
+        // req6: probe at row 2 — outside the window. The analog plan
+        // answers (ABFP output, not the host reference) and re-arms.
+        let resp = router.infer("gru", x.clone()).unwrap();
+        assert_ne!(resp.outputs[0].data(), host_ref.data());
+        let h = router.health("gru").unwrap();
+        assert_eq!(h.state, BreakerState::Closed);
+        assert_eq!(h.probes, 2);
+        assert_eq!(h.rearms, 1);
+        assert_eq!(h.fallback_batches, 4);
+
+        // req7: closed again — the primary (analog) plan serves.
+        let resp = router.infer("gru", x.clone()).unwrap();
+        assert_ne!(resp.outputs[0].data(), host_ref.data());
+        assert_eq!(router.health("gru").unwrap().state, BreakerState::Closed);
+        let s = router.stats("gru").unwrap();
+        assert_eq!(s.unavailable_requests, 1);
+        assert_eq!(s.failed_requests, 0);
+    }
+
+    #[test]
+    fn readiness_tracks_breaker_states() {
+        use crate::coordinator::ECHO_PANIC_SENTINEL;
+        let router = echo_router(2);
+        assert!(router.ready());
+        assert!(router.degraded_models().is_empty());
+        let mut bad = Tensor::zeros(&[2]);
+        bad.data_mut()[0] = ECHO_PANIC_SENTINEL;
+        router.infer("echo", bad).unwrap_err();
+        // With no fallback the worker sits in Restarting until the next
+        // request arrives: not ready, and reported as degraded.
+        assert!(!router.ready());
+        assert_eq!(router.degraded_models(), vec!["echo".to_string()]);
+        router.infer("echo", Tensor::zeros(&[2])).unwrap();
+        assert!(router.ready());
+        assert!(router.degraded_models().is_empty());
     }
 }

@@ -1,0 +1,728 @@
+//! Deterministic AMS device-fault injection at the
+//! [`NumericBackend`](crate::backend::NumericBackend) seam.
+//!
+//! The paper's premise is that analog devices are imperfect; ABFP +
+//! gain tolerate the *modeled* ADC noise, but real AMS hardware also
+//! sticks, drifts, and dies. This module makes those failure modes a
+//! first-class, reproducible input: a [`FaultPlan`] (JSON, sibling of
+//! [`GraphPlan`](crate::graph::GraphPlan)) describes a schedule of
+//! injected faults over **global device rows** — the same monotone row
+//! clock the ABFP noise engine runs on — and [`FaultBackend`] wraps any
+//! backend to apply it.
+//!
+//! ```json
+//! {
+//!   "seed": 9,
+//!   "faults": [
+//!     {"kind": "stuck_adc", "rate": 0.2, "value": 24.0,
+//!      "start_row": 32, "end_row": 64},
+//!     {"kind": "outage", "start_row": 64, "end_row": 96}
+//!   ]
+//! }
+//! ```
+//!
+//! Fault taxonomy (per rule, active only inside its row window):
+//!
+//! | kind          | effect on the layer output                          |
+//! |---------------|-----------------------------------------------------|
+//! | `stuck_adc`   | element is replaced by a stuck output code `value` with probability `rate` |
+//! | `gain_drift`  | every element is scaled by `factor` (analog gain drift) |
+//! | `noise_spike` | element gains extra uniform noise in `[-amp, amp]` with probability `rate` |
+//! | `nan_burst`   | element becomes NaN with probability `rate`         |
+//! | `outage`      | the whole call fails with a typed [`DeviceOutage`]  |
+//!
+//! Determinism contract: every stochastic decision is drawn from the
+//! coordinate-keyed [`CounterRng`] at `(global_row, col, rule)` — a pure
+//! function of the plan seed and the coordinates, never of thread count
+//! or batch splits. Like [`Device`](crate::abfp::Device), the wrapper
+//! claims its rows through a private monotone cursor, so a batch split
+//! across calls lands on the same global rows and draws the same
+//! faults (`fault_injection_is_batch_split_invariant` below).
+//!
+//! The row cursor advances even when an outage refuses the call — the
+//! device consumed that service window — which is what lets the circuit
+//! breaker's HalfOpen probes walk *through* a bounded outage window and
+//! re-arm the analog plan once it has passed.
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{BackendStats, NumericBackend, Scratch, StagedWeights};
+use crate::json::{self, Value};
+use crate::rng::CounterRng;
+use crate::tensor::Tensor;
+
+/// Stream id separating fault-injection draws from every other
+/// [`CounterRng`] consumer (the ADC noise engine runs on `0x0abf_9000`).
+const FAULT_STREAM: u64 = 0x0abf_fa01;
+
+/// Row bound meaning "never closes" (serialized by omitting `end_row`).
+pub const OPEN_END: u64 = u64::MAX;
+
+/// Typed error for a whole-device outage: the serving worker maps it
+/// (and [`GuardTrip`]) to a retryable 503 instead of the generic
+/// executor-failure 500, and it feeds the per-model circuit breaker.
+#[derive(Debug, Clone)]
+pub struct DeviceOutage {
+    /// Global device rows the refused call had claimed.
+    pub start: u64,
+    pub end: u64,
+}
+
+impl fmt::Display for DeviceOutage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected device outage: global rows {}..{} fall in an \
+             outage window",
+            self.start, self.end
+        )
+    }
+}
+
+impl std::error::Error for DeviceOutage {}
+
+/// Typed error raised by the [`GraphExecutor`](crate::graph::GraphExecutor)
+/// runtime guardrails when a layer's measured behavior leaves its
+/// certified envelope (non-finite outputs, saturation above the static
+/// clamp bound, or values outside the certified range). Mapped to 503
+/// by the worker and counted toward the circuit breaker, exactly like
+/// [`DeviceOutage`].
+#[derive(Debug, Clone)]
+pub struct GuardTrip {
+    /// Matmul-site ordinal the violation was observed at.
+    pub layer: usize,
+    /// Backend serving the site.
+    pub backend: &'static str,
+    pub reason: String,
+}
+
+impl fmt::Display for GuardTrip {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "numeric guard tripped at matmul site {} ({}): {}",
+            self.layer, self.backend, self.reason
+        )
+    }
+}
+
+impl std::error::Error for GuardTrip {}
+
+/// True when `e`'s chain carries a fault-class error ([`DeviceOutage`]
+/// or [`GuardTrip`]): the worker answers the batch with a typed 503 and
+/// feeds the breaker, while generic executor failures stay 500.
+pub fn is_fault_class(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<DeviceOutage>().is_some() || c.downcast_ref::<GuardTrip>().is_some()
+    })
+}
+
+/// What one fault rule does inside its window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// An ADC output code sticks: the element is replaced by `value`
+    /// with probability `rate`.
+    StuckAdc { rate: f64, value: f32 },
+    /// Analog gain drift: every in-window element is scaled by
+    /// `factor`.
+    GainDrift { factor: f32 },
+    /// Noise-sigma spike: extra uniform noise in `[-amp, amp]` with
+    /// probability `rate`.
+    NoiseSpike { rate: f64, amp: f32 },
+    /// Transient NaN burst with probability `rate`.
+    NanBurst { rate: f64 },
+    /// Whole-device outage: the call fails with [`DeviceOutage`].
+    Outage,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::StuckAdc { .. } => "stuck_adc",
+            FaultKind::GainDrift { .. } => "gain_drift",
+            FaultKind::NoiseSpike { .. } => "noise_spike",
+            FaultKind::NanBurst { .. } => "nan_burst",
+            FaultKind::Outage => "outage",
+        }
+    }
+}
+
+/// One scheduled fault: a [`FaultKind`] active on global device rows
+/// `start_row..end_row` (end exclusive; [`OPEN_END`] = never clears).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    pub start_row: u64,
+    pub end_row: u64,
+}
+
+impl FaultRule {
+    /// Does the rule's window contain global row `r`?
+    #[inline]
+    pub fn covers(&self, r: u64) -> bool {
+        self.start_row <= r && r < self.end_row
+    }
+
+    /// Does the rule's window overlap the claimed span `[lo, hi)`?
+    #[inline]
+    pub fn overlaps(&self, lo: u64, hi: u64) -> bool {
+        self.start_row < hi && lo < self.end_row
+    }
+
+    fn to_json(self) -> Value {
+        let mut fields = vec![("kind", json::s(self.kind.name()))];
+        match self.kind {
+            FaultKind::StuckAdc { rate, value } => {
+                fields.push(("rate", json::num(rate)));
+                fields.push(("value", json::num(value as f64)));
+            }
+            FaultKind::GainDrift { factor } => {
+                fields.push(("factor", json::num(factor as f64)));
+            }
+            FaultKind::NoiseSpike { rate, amp } => {
+                fields.push(("rate", json::num(rate)));
+                fields.push(("amp", json::num(amp as f64)));
+            }
+            FaultKind::NanBurst { rate } => fields.push(("rate", json::num(rate))),
+            FaultKind::Outage => {}
+        }
+        fields.push(("start_row", json::num(self.start_row as f64)));
+        if self.end_row != OPEN_END {
+            fields.push(("end_row", json::num(self.end_row as f64)));
+        }
+        json::obj(fields)
+    }
+
+    fn from_json(v: &Value, defaults: (u64, u64)) -> Result<FaultRule> {
+        let rate = |key: &str| -> Result<f64> {
+            let r = v.get(key)?.as_f64()?;
+            if !r.is_finite() || !(0.0..=1.0).contains(&r) {
+                bail!("fault rate must lie in [0, 1], got {r}");
+            }
+            Ok(r)
+        };
+        let finite = |key: &str| -> Result<f32> {
+            let x = v.get(key)?.as_f64()? as f32;
+            if !x.is_finite() {
+                bail!("fault field {key:?} must be finite");
+            }
+            Ok(x)
+        };
+        let kind = match v.get("kind")?.as_str()? {
+            "stuck_adc" => FaultKind::StuckAdc {
+                rate: rate("rate")?,
+                value: finite("value")?,
+            },
+            "gain_drift" => {
+                let factor = finite("factor")?;
+                if factor <= 0.0 {
+                    bail!("gain_drift factor must be > 0, got {factor}");
+                }
+                FaultKind::GainDrift { factor }
+            }
+            "noise_spike" => {
+                let amp = finite("amp")?;
+                if amp < 0.0 {
+                    bail!("noise_spike amp must be >= 0, got {amp}");
+                }
+                FaultKind::NoiseSpike {
+                    rate: rate("rate")?,
+                    amp,
+                }
+            }
+            "nan_burst" => FaultKind::NanBurst { rate: rate("rate")? },
+            "outage" => FaultKind::Outage,
+            other => bail!(
+                "unknown fault kind {other:?}; expected \
+                 stuck_adc|gain_drift|noise_spike|nan_burst|outage"
+            ),
+        };
+        let row = |key: &str, default: u64| -> Result<u64> {
+            match v.opt(key) {
+                Some(x) => {
+                    let r = x.as_f64()?;
+                    if !r.is_finite() || r < 0.0 || r.fract() != 0.0 {
+                        bail!("fault {key} must be a non-negative integer, got {r}");
+                    }
+                    Ok(r as u64)
+                }
+                None => Ok(default),
+            }
+        };
+        let rule = FaultRule {
+            kind,
+            start_row: row("start_row", defaults.0)?,
+            end_row: row("end_row", defaults.1)?,
+        };
+        if rule.start_row >= rule.end_row {
+            bail!(
+                "fault window [{}, {}) is empty — end_row must exceed start_row",
+                rule.start_row,
+                rule.end_row
+            );
+        }
+        Ok(rule)
+    }
+
+    /// Compact human form, e.g. `stuck_adc(rate=0.2,value=24)@[32,64)`.
+    pub fn summary(&self) -> String {
+        let window = if self.end_row == OPEN_END {
+            format!("[{},open)", self.start_row)
+        } else {
+            format!("[{},{})", self.start_row, self.end_row)
+        };
+        let body = match self.kind {
+            FaultKind::StuckAdc { rate, value } => {
+                format!("stuck_adc(rate={rate},value={value})")
+            }
+            FaultKind::GainDrift { factor } => format!("gain_drift(factor={factor})"),
+            FaultKind::NoiseSpike { rate, amp } => {
+                format!("noise_spike(rate={rate},amp={amp})")
+            }
+            FaultKind::NanBurst { rate } => format!("nan_burst(rate={rate})"),
+            FaultKind::Outage => "outage".to_string(),
+        };
+        format!("{body}@{window}")
+    }
+}
+
+/// A seeded, deterministic schedule of device faults (JSON sibling of
+/// [`GraphPlan`](crate::graph::GraphPlan); see the module docs for the
+/// schema). Plain data: cloneable, shareable across workers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Keys the injection draws (independent of the ADC noise seed).
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, rules: Vec<FaultRule>) -> FaultPlan {
+        FaultPlan { seed, rules }
+    }
+
+    /// Does any rule carry an [`FaultKind::Outage`]?
+    pub fn has_outage(&self) -> bool {
+        self.rules.iter().any(|r| r.kind == FaultKind::Outage)
+    }
+
+    /// First global row past every rule's window ([`OPEN_END`] when any
+    /// window never closes) — the row clock at which the device is
+    /// healthy again.
+    pub fn last_row(&self) -> u64 {
+        self.rules.iter().map(|r| r.end_row).max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("seed", json::num(self.seed as f64)),
+            (
+                "faults",
+                json::arr(self.rules.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Top-level `start_row`/`end_row` act as defaults for rules that
+    /// omit their own window; `seed` defaults to 0.
+    pub fn from_json(v: &Value) -> Result<FaultPlan> {
+        let seed = match v.opt("seed") {
+            Some(s) => s.as_f64()? as u64,
+            None => 0,
+        };
+        let default_start = match v.opt("start_row") {
+            Some(s) => s.as_f64()? as u64,
+            None => 0,
+        };
+        let default_end = match v.opt("end_row") {
+            Some(s) => s.as_f64()? as u64,
+            None => OPEN_END,
+        };
+        let rules = v
+            .get("faults")
+            .map_err(|_| anyhow!(r#"a fault plan needs {{"faults": [{{"kind": ...}}]}}"#))?
+            .as_arr()?
+            .iter()
+            .map(|r| FaultRule::from_json(r, (default_start, default_end)))
+            .collect::<Result<Vec<_>>>()?;
+        if rules.is_empty() {
+            bail!("a fault plan needs at least one fault rule");
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+
+    /// Parse a plan from JSON text.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        Self::from_json(&json::parse(text)?)
+    }
+
+    /// Load a plan file (the `bench-serve --faults FILE` path).
+    pub fn load(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read fault plan {path:?}: {e}"))?;
+        Self::parse(&text).map_err(|e| anyhow!("fault plan {path:?}: {e}"))
+    }
+
+    /// Compact human summary, e.g.
+    /// `stuck_adc(rate=0.2,value=24)@[32,64) + outage@[64,96) (seed 9)`.
+    pub fn summary(&self) -> String {
+        let rules: Vec<String> = self.rules.iter().map(|r| r.summary()).collect();
+        format!("{} (seed {})", rules.join(" + "), self.seed)
+    }
+}
+
+/// A [`NumericBackend`] decorator that injects the plan's faults into
+/// the wrapped backend's outputs (and refuses calls during an outage
+/// window). Staging, stats, and naming delegate to the inner backend,
+/// so plans, lint metadata, and `/metrics` see the device the layer
+/// *believes* it runs on — the faults are the surprise.
+pub struct FaultBackend {
+    inner: Box<dyn NumericBackend>,
+    plan: FaultPlan,
+    rng: CounterRng,
+    /// Next unclaimed global device row (mirrors `Device::row_base`):
+    /// each call claims its batch rows here, which is what makes the
+    /// injection schedule batch-split invariant.
+    row_base: u64,
+    injected: u64,
+    outages: u64,
+}
+
+impl FaultBackend {
+    /// Wrap `inner` under `plan`. `stream` decorrelates siblings that
+    /// share one plan (the graph executor passes the matmul-site
+    /// ordinal, so each layer's device draws independent faults).
+    pub fn new(inner: Box<dyn NumericBackend>, plan: FaultPlan, stream: u64) -> FaultBackend {
+        let rng = CounterRng::new(plan.seed, FAULT_STREAM ^ stream);
+        FaultBackend {
+            inner,
+            plan,
+            rng,
+            row_base: 0,
+            injected: 0,
+            outages: 0,
+        }
+    }
+
+    /// Elements corrupted so far (stuck/drift/spike/NaN injections).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Calls refused by an outage window so far.
+    pub fn outages(&self) -> u64 {
+        self.outages
+    }
+
+    /// Next unclaimed global device row (the injection clock).
+    pub fn row_clock(&self) -> u64 {
+        self.row_base
+    }
+}
+
+impl NumericBackend for FaultBackend {
+    fn name(&self) -> &'static str {
+        // The device the layer believes it runs on: plans and metrics
+        // keep reading the inner backend's identity.
+        self.inner.name()
+    }
+
+    fn config_json(&self) -> Value {
+        json::obj(vec![
+            ("fault_plan", json::s(&self.plan.summary())),
+            ("fault_injected", json::num(self.injected as f64)),
+            ("fault_outages", json::num(self.outages as f64)),
+            ("inner", self.inner.config_json()),
+        ])
+    }
+
+    fn stage_weights(&self, w: &Tensor) -> Result<StagedWeights> {
+        self.inner.stage_weights(w)
+    }
+
+    fn matmul_into(
+        &mut self,
+        x: &Tensor,
+        w: &StagedWeights,
+        scratch: &mut Scratch,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        if x.shape().len() != 2 {
+            bail!("fault wrapper wants a 2-D activation, got {:?}", x.shape());
+        }
+        // Claim the batch rows BEFORE executing: an outage consumes its
+        // service window too, so retries and breaker probes walk
+        // through a bounded window instead of pinning at its start.
+        let base = self.row_base;
+        let m = x.shape()[0] as u64;
+        self.row_base = base.saturating_add(m);
+        let hi = self.row_base;
+        if self
+            .plan
+            .rules
+            .iter()
+            .any(|r| r.kind == FaultKind::Outage && r.overlaps(base, hi))
+        {
+            self.outages += 1;
+            return Err(anyhow::Error::new(DeviceOutage { start: base, end: hi }));
+        }
+        self.inner.matmul_into(x, w, scratch, out)?;
+        if !self.plan.rules.iter().any(|r| r.overlaps(base, hi)) {
+            return Ok(());
+        }
+        let cols = out.shape()[1];
+        let data = out.data_mut();
+        for r in base..hi {
+            if !self.plan.rules.iter().any(|rule| rule.covers(r)) {
+                continue;
+            }
+            let i = (r - base) as usize;
+            let row = &mut data[i * cols..(i + 1) * cols];
+            for (j, y) in row.iter_mut().enumerate() {
+                for (fi, rule) in self.plan.rules.iter().enumerate() {
+                    if !rule.covers(r) {
+                        continue;
+                    }
+                    // Coordinate c splits each rule's decision draw from
+                    // its magnitude draw.
+                    let c = 2 * fi as u64;
+                    match rule.kind {
+                        FaultKind::StuckAdc { rate, value } => {
+                            if self.rng.f64_at(r, j as u64, c) < rate {
+                                *y = value;
+                                self.injected += 1;
+                            }
+                        }
+                        FaultKind::GainDrift { factor } => {
+                            *y *= factor;
+                            self.injected += 1;
+                        }
+                        FaultKind::NoiseSpike { rate, amp } => {
+                            if self.rng.f64_at(r, j as u64, c) < rate {
+                                *y += self.rng.uniform_at(r, j as u64, c + 1, -amp, amp);
+                                self.injected += 1;
+                            }
+                        }
+                        FaultKind::NanBurst { rate } => {
+                            if self.rng.f64_at(r, j as u64, c) < rate {
+                                *y = f32::NAN;
+                                self.injected += 1;
+                            }
+                        }
+                        FaultKind::Outage => {}
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.inner.stats()
+    }
+
+    fn reset_stats(&mut self) {
+        // Accounting resets; the row clock does NOT — device time keeps
+        // flowing, so the fault schedule cannot be replayed by a stats
+        // reset.
+        self.inner.reset_stats();
+        self.injected = 0;
+        self.outages = 0;
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.inner.set_threads(threads);
+    }
+
+    fn threads(&self) -> usize {
+        self.inner.threads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Float32Backend;
+
+    fn stuck(rate: f64, value: f32, lo: u64, hi: u64) -> FaultRule {
+        FaultRule {
+            kind: FaultKind::StuckAdc { rate, value },
+            start_row: lo,
+            end_row: hi,
+        }
+    }
+
+    fn wrap(plan: FaultPlan) -> FaultBackend {
+        FaultBackend::new(Box::new(Float32Backend::new()), plan, 0)
+    }
+
+    fn weights() -> Tensor {
+        Tensor::new(&[3, 4], (0..12).map(|i| 0.1 * i as f32).collect()).unwrap()
+    }
+
+    fn batch(rows: usize) -> Tensor {
+        Tensor::new(
+            &[rows, 4],
+            (0..rows * 4).map(|i| (i % 7) as f32 * 0.25 - 0.5).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn json_roundtrip_and_validation() {
+        let plan = FaultPlan::new(
+            9,
+            vec![
+                stuck(0.2, 24.0, 32, 64),
+                FaultRule {
+                    kind: FaultKind::Outage,
+                    start_row: 64,
+                    end_row: 96,
+                },
+                FaultRule {
+                    kind: FaultKind::NoiseSpike { rate: 0.5, amp: 2.0 },
+                    start_row: 0,
+                    end_row: OPEN_END,
+                },
+            ],
+        );
+        let back = FaultPlan::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(back, plan);
+        assert!(plan.has_outage());
+        assert_eq!(plan.last_row(), OPEN_END);
+        assert!(plan.summary().contains("outage@[64,96)"), "{}", plan.summary());
+
+        // Top-level window defaults apply to rules without their own.
+        let p = FaultPlan::parse(
+            r#"{"seed": 3, "start_row": 8, "end_row": 16,
+                "faults": [{"kind": "nan_burst", "rate": 0.5}]}"#,
+        )
+        .unwrap();
+        assert_eq!((p.rules[0].start_row, p.rules[0].end_row), (8, 16));
+
+        // Garbage is refused with a reason, never silently accepted.
+        for bad in [
+            r#"{"seed": 1}"#,                                        // no faults
+            r#"{"faults": []}"#,                                     // empty
+            r#"{"faults": [{"kind": "melt"}]}"#,                     // unknown kind
+            r#"{"faults": [{"kind": "nan_burst", "rate": 1.5}]}"#,   // rate > 1
+            r#"{"faults": [{"kind": "gain_drift", "factor": 0}]}"#,  // factor <= 0
+            r#"{"faults": [{"kind": "outage", "start_row": 8, "end_row": 8}]}"#, // empty window
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fault_injection_is_batch_split_invariant() {
+        // The determinism contract: one 8-row batch and two 4-row
+        // halves must draw the identical fault schedule, because the
+        // row cursor maps both onto the same global rows.
+        let plan = FaultPlan::new(7, vec![stuck(0.5, 9.0, 2, 6)]);
+        let w = weights();
+        let x = batch(8);
+
+        let mut whole = wrap(plan.clone());
+        let staged = whole.stage_weights(&w).unwrap();
+        let y_whole = whole.matmul(&x, &staged).unwrap();
+
+        let mut halves = wrap(plan.clone());
+        let lo = Tensor::new(&[4, 4], x.data()[..16].to_vec()).unwrap();
+        let hi = Tensor::new(&[4, 4], x.data()[16..].to_vec()).unwrap();
+        let y_lo = halves.matmul(&lo, &staged).unwrap();
+        let y_hi = halves.matmul(&hi, &staged).unwrap();
+        let mut joined = y_lo.data().to_vec();
+        joined.extend_from_slice(y_hi.data());
+        assert_eq!(y_whole.data(), &joined[..]);
+
+        // Only the window rows were touched: rows 0..2 and 6..8 match
+        // the clean inner backend bit for bit, and the window corrupted
+        // at least one element at rate 0.5 over 4x3 cells.
+        let mut clean = Float32Backend::new();
+        let y_clean = clean.matmul(&x, &staged).unwrap();
+        assert_eq!(y_whole.data()[..2 * 3], y_clean.data()[..2 * 3]);
+        assert_eq!(y_whole.data()[6 * 3..], y_clean.data()[6 * 3..]);
+        assert_ne!(y_whole.data()[2 * 3..6 * 3], y_clean.data()[2 * 3..6 * 3]);
+        assert!(whole.injected() > 0);
+        assert_eq!(whole.injected(), halves.injected());
+    }
+
+    #[test]
+    fn outage_fires_only_inside_its_window_and_consumes_rows() {
+        let plan = FaultPlan::new(
+            1,
+            vec![FaultRule {
+                kind: FaultKind::Outage,
+                start_row: 4,
+                end_row: 8,
+            }],
+        );
+        let mut b = wrap(plan);
+        let w = weights();
+        let staged = b.stage_weights(&w).unwrap();
+        // Rows 0..4: healthy.
+        assert!(b.matmul(&batch(4), &staged).is_ok());
+        // Rows 4..8: refused with the typed outage — and the rows are
+        // still consumed, so the schedule moves on.
+        let err = b.matmul(&batch(4), &staged).unwrap_err();
+        assert!(is_fault_class(&err), "{err}");
+        assert!(err.chain().any(|c| c.downcast_ref::<DeviceOutage>().is_some()));
+        assert_eq!(b.outages(), 1);
+        assert_eq!(b.row_clock(), 8);
+        // Rows 8..12: recovered.
+        assert!(b.matmul(&batch(4), &staged).is_ok());
+    }
+
+    #[test]
+    fn certain_rates_corrupt_every_window_element() {
+        let w = weights();
+        let x = batch(2);
+        let mut stuck_all = wrap(FaultPlan::new(2, vec![stuck(1.0, 42.0, 0, OPEN_END)]));
+        let staged = stuck_all.stage_weights(&w).unwrap();
+        let y = stuck_all.matmul(&x, &staged).unwrap();
+        assert!(y.data().iter().all(|&v| v == 42.0), "{:?}", y.data());
+
+        let mut nan_all = wrap(FaultPlan::new(
+            2,
+            vec![FaultRule {
+                kind: FaultKind::NanBurst { rate: 1.0 },
+                start_row: 0,
+                end_row: OPEN_END,
+            }],
+        ));
+        let y = nan_all.matmul(&x, &staged).unwrap();
+        assert!(y.data().iter().all(|v| v.is_nan()));
+
+        // Gain drift is a pure scale of the clean output.
+        let mut drift = wrap(FaultPlan::new(
+            2,
+            vec![FaultRule {
+                kind: FaultKind::GainDrift { factor: 2.0 },
+                start_row: 0,
+                end_row: OPEN_END,
+            }],
+        ));
+        let y = drift.matmul(&x, &staged).unwrap();
+        let y_clean = Float32Backend::new().matmul(&x, &staged).unwrap();
+        for (a, b) in y.data().iter().zip(y_clean.data()) {
+            assert_eq!(*a, b * 2.0);
+        }
+    }
+
+    #[test]
+    fn guard_trip_is_fault_class_and_generic_errors_are_not() {
+        let trip = anyhow::Error::new(GuardTrip {
+            layer: 1,
+            backend: "abfp",
+            reason: "non-finite output".to_string(),
+        });
+        assert!(is_fault_class(&trip));
+        assert!(trip.to_string().contains("matmul site 1"), "{trip}");
+        assert!(!is_fault_class(&anyhow!("device on fire")));
+        // Context wrapping keeps the classification.
+        let wrapped = trip.context("execute failed");
+        assert!(is_fault_class(&wrapped));
+    }
+}

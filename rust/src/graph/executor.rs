@@ -18,8 +18,9 @@ use anyhow::{bail, Result};
 
 use super::plan::GraphPlan;
 use super::{registry, DecodeState, FlowScratch, ModelGraph};
-use crate::backend::{BackendStats, NumericBackend, Scratch, StagedWeights};
+use crate::backend::{BackendKind, BackendStats, NumericBackend, Scratch, StagedWeights};
 use crate::coordinator::{Executed, GenerateOutcome, ModelExecutor};
+use crate::fault::{FaultBackend, FaultPlan, GuardTrip};
 use crate::json::{self, Value};
 use crate::tensor::Tensor;
 
@@ -27,6 +28,105 @@ use crate::tensor::Tensor;
 struct Stage {
     backend: Box<dyn NumericBackend>,
     staged: StagedWeights,
+}
+
+/// Measured-saturation slack over the static clamp bound: the bound is
+/// sound for in-domain batches on a healthy device, so the margin only
+/// absorbs out-of-domain drift a caller chose to serve anyway.
+const SAT_MARGIN: f64 = 0.02;
+
+/// Absolute floor of the saturation guard. The static input domain is a
+/// typical-data hull, not a hard limit, so rare tail elements may clamp
+/// a handful of conversions on a perfectly healthy device; a device
+/// that actually left its envelope blows far past this fraction.
+const SAT_FLOOR: f64 = 0.05;
+
+/// Rail-sentinel slack factor over the certified output hull. Coarse by
+/// design — the sentinel exists to catch stuck-at-rail output codes and
+/// gross gain runaway, not to re-prove the static range analysis.
+const RANGE_SLACK: f32 = 8.0;
+
+/// Runtime numeric guardrail for one matmul site: cheap output
+/// sentinels derived from the static lint certificate
+/// ([`crate::analysis::lint_graph`]), checked after every batch matmul.
+/// A violation means the device's behavior left its certified envelope
+/// and surfaces as a typed [`GuardTrip`] the serving stack maps to a
+/// retryable 503 (and counts toward the circuit breaker).
+#[derive(Debug, Clone, Copy, Default)]
+struct SiteGuard {
+    /// Measured saturation fraction must stay at or below this (the
+    /// static clamp bound + [`SAT_MARGIN`]); `None` disables the check.
+    sat_bound: Option<f64>,
+    /// Largest output magnitude tolerated ([`RANGE_SLACK`] × the
+    /// certified output hull); `None` disables the check.
+    abs_bound: Option<f32>,
+}
+
+impl SiteGuard {
+    /// Check one site's batch output. `before` is the backend's stats
+    /// snapshot from just before the matmul, so the saturation check
+    /// sees only this call's conversions.
+    fn check(
+        &self,
+        site: usize,
+        backend: &dyn NumericBackend,
+        before: BackendStats,
+        out: &Tensor,
+    ) -> Result<()> {
+        let trip = |reason: String| {
+            Err(anyhow::Error::new(GuardTrip {
+                layer: site,
+                backend: backend.name(),
+                reason,
+            }))
+        };
+        // Non-finite values poison everything downstream; always fatal.
+        if let Some(bad) = out.data().iter().find(|v| !v.is_finite()) {
+            return trip(format!("non-finite output element ({bad})"));
+        }
+        if let Some(bound) = self.abs_bound {
+            let worst = out.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if worst > bound {
+                return trip(format!(
+                    "output magnitude {worst:.3e} exceeds the certified \
+                     range sentinel {bound:.3e}"
+                ));
+            }
+        }
+        if let Some(bound) = self.sat_bound {
+            let after = backend.stats();
+            let conv = after.conversions.saturating_sub(before.conversions);
+            let sat = after.saturated.saturating_sub(before.saturated);
+            if conv > 0 && sat as f64 / conv as f64 > bound {
+                return trip(format!(
+                    "measured saturation {:.4} exceeds the static clamp \
+                     bound {:.4}",
+                    sat as f64 / conv as f64,
+                    bound
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-site guards from the static lint report. A graph/plan the linter
+/// cannot analyze gets finite-only guards (bounds disabled), never an
+/// error — guarding is best-effort hardening, not a second lint gate.
+fn build_guards(graph: &ModelGraph, plan: &GraphPlan) -> Vec<SiteGuard> {
+    let count = graph.linear_count();
+    let mut guards = vec![SiteGuard::default(); count];
+    if let Ok(report) = crate::analysis::lint_graph(graph, plan) {
+        for l in &report.linears {
+            if l.layer < count {
+                guards[l.layer] = SiteGuard {
+                    sat_bound: Some((l.clamp_bound + SAT_MARGIN).max(SAT_FLOOR)),
+                    abs_bound: Some(RANGE_SLACK * l.output.abs_max().max(1.0) + 1.0),
+                };
+            }
+        }
+    }
+    guards
 }
 
 /// Accumulated per-layer accounting (the `eval-graph` sweep rows and
@@ -63,6 +163,10 @@ pub struct GraphExecutor {
     /// owned like the scratch above so steady-state decode steps
     /// allocate nothing once warm.
     decode: DecodeState,
+    /// Per-site runtime guardrails (lint-derived sentinels).
+    guards: Vec<SiteGuard>,
+    /// Guard violations observed since construction.
+    guard_trips: u64,
 }
 
 /// The noise-stream seed of `Linear` ordinal `i` of `model` under user
@@ -90,12 +194,29 @@ impl GraphExecutor {
         seed: u64,
         threads: usize,
     ) -> Result<GraphExecutor> {
+        Self::with_faults(graph, plan, seed, threads, None)
+    }
+
+    /// [`Self::new`], optionally wrapping every non-FLOAT32 layer's
+    /// backend in a [`FaultBackend`] under `faults` — the seam the
+    /// chaos harness (`bench-serve --faults`) injects device failures
+    /// through. Each layer gets its own decorrelated injection stream
+    /// (keyed by site ordinal); FLOAT32 layers model the digital host
+    /// and stay clean.
+    pub fn with_faults(
+        graph: ModelGraph,
+        plan: &GraphPlan,
+        seed: u64,
+        threads: usize,
+        faults: Option<&FaultPlan>,
+    ) -> Result<GraphExecutor> {
         let count = graph.linear_count();
         // Tile width 0 in a layer plan means "this model's registry
         // default" (gru/dlrm run narrower arrays than the image
         // archetypes); hand-built graphs outside the registry fall back
         // to the paper tile.
         let default_tile = registry::default_tile(graph.model());
+        let guards = build_guards(&graph, plan);
         let mut stages = Vec::with_capacity(count);
         for i in 0..count {
             let mut lp = plan.resolve(i, count);
@@ -106,6 +227,11 @@ impl GraphExecutor {
                 .backend
                 .build(lp.device, layer_seed(graph.model(), seed, i));
             backend.set_threads(threads);
+            if let Some(fp) = faults {
+                if lp.backend != BackendKind::Float32 {
+                    backend = Box::new(FaultBackend::new(backend, fp.clone(), i as u64));
+                }
+            }
             let w = graph
                 .linear_weight(i)
                 .expect("linear_count bounds the index");
@@ -120,7 +246,16 @@ impl GraphExecutor {
             flow: FlowScratch::new(),
             scratch,
             decode: DecodeState::new(),
+            guards,
+            guard_trips: 0,
         })
+    }
+
+    /// Guard violations observed since construction (monotone; a trip
+    /// also fails the offending `forward` with a typed
+    /// [`GuardTrip`](crate::fault::GuardTrip)).
+    pub fn guard_trips(&self) -> u64 {
+        self.guard_trips
     }
 
     pub fn graph(&self) -> &ModelGraph {
@@ -159,17 +294,33 @@ impl GraphExecutor {
     /// storage joins the executor's buffer pool. Warm steady state
     /// allocates no data-sized buffer — activations cycle through the
     /// pool and each layer stages into its reusable [`Scratch`].
+    /// Every matmul site's output passes its runtime guardrail (see
+    /// [`SiteGuard`]): non-finite detection plus the lint-derived
+    /// saturation and range sentinels. A violation fails the batch with
+    /// a typed [`GuardTrip`](crate::fault::GuardTrip) — the signal the
+    /// serving supervisor degrades on.
     pub fn forward(&mut self, x: Tensor) -> Result<Tensor> {
         let GraphExecutor {
             graph,
             stages,
             flow,
             scratch,
+            guards,
+            guard_trips,
             ..
         } = self;
         graph.forward_with(x, flow, |i, input, out| {
             let s = &mut stages[i];
-            s.backend.matmul_into(input, &s.staged, &mut scratch[i], out)
+            let before = s.backend.stats();
+            s.backend
+                .matmul_into(input, &s.staged, &mut scratch[i], out)?;
+            if let Some(g) = guards.get(i) {
+                if let Err(trip) = g.check(i, s.backend.as_ref(), before, out) {
+                    *guard_trips += 1;
+                    return Err(trip);
+                }
+            }
+            Ok(())
         })
     }
 
@@ -335,6 +486,21 @@ impl ModelExecutor for GraphExecutor {
             ),
             ("generate", Value::Bool(self.graph.seq_flexible())),
             ("linear_layers", json::num(self.stages.len() as f64)),
+            (
+                "guards",
+                json::obj(vec![
+                    (
+                        "sites",
+                        json::num(
+                            self.guards
+                                .iter()
+                                .filter(|g| g.sat_bound.is_some())
+                                .count() as f64,
+                        ),
+                    ),
+                    ("trips", json::num(self.guard_trips as f64)),
+                ]),
+            ),
             ("plan", json::s(&self.plan.summary())),
             (
                 "layer_backends",
@@ -472,6 +638,90 @@ mod tests {
                 .unwrap();
         assert!(!mlp.supports_generate());
         assert!(GraphExecutor::generate(&mut mlp, &[1.0], 2).is_err());
+    }
+
+    #[test]
+    fn guards_trip_on_injected_faults_with_typed_errors() {
+        use crate::fault::{is_fault_class, FaultKind, FaultPlan, FaultRule, GuardTrip, OPEN_END};
+        let interior = LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 4.0, 0.5),
+        );
+        let plan = GraphPlan::edges_float32(interior);
+        let graph = build("gru", GRAPH_SEED).unwrap();
+        let x = batch(graph.in_elems(), 4, 3);
+
+        // A NaN burst at certainty: the non-finite sentinel fires at
+        // the faulted site with the typed GuardTrip.
+        let nan = FaultPlan::new(
+            5,
+            vec![FaultRule {
+                kind: FaultKind::NanBurst { rate: 1.0 },
+                start_row: 0,
+                end_row: OPEN_END,
+            }],
+        );
+        let mut exec =
+            GraphExecutor::with_faults(graph.clone(), &plan, 1, 0, Some(&nan)).unwrap();
+        let err = exec.forward(x.clone()).unwrap_err();
+        assert!(is_fault_class(&err), "{err}");
+        let trip = err
+            .chain()
+            .find_map(|c| c.downcast_ref::<GuardTrip>())
+            .expect("typed guard trip");
+        assert_eq!(trip.layer, 1, "gru's only analog site is ordinal 1");
+        assert_eq!(trip.backend, "abfp");
+        assert_eq!(exec.guard_trips(), 1);
+        assert!(exec.describe().to_string().contains("\"trips\":1"));
+
+        // A stuck ADC output code far past the certified hull: the
+        // range sentinel fires even though every value stays finite.
+        let stuck = FaultPlan::new(
+            5,
+            vec![FaultRule {
+                kind: FaultKind::StuckAdc {
+                    rate: 1.0,
+                    value: 1.0e6,
+                },
+                start_row: 0,
+                end_row: OPEN_END,
+            }],
+        );
+        let mut exec =
+            GraphExecutor::with_faults(graph.clone(), &plan, 1, 0, Some(&stuck)).unwrap();
+        let err = exec.forward(x.clone()).unwrap_err();
+        assert!(is_fault_class(&err), "{err}");
+        assert!(err.to_string().contains("range sentinel"), "{err}");
+
+        // FLOAT32 layers model the digital host: a fault plan wraps
+        // only the analog sites, so an all-float32 plan is untouched
+        // and serves the exact host reference under any fault plan.
+        let want = graph.host_forward(&x).unwrap();
+        let mut clean =
+            GraphExecutor::with_faults(graph, &GraphPlan::float32(), 1, 0, Some(&nan)).unwrap();
+        assert_eq!(clean.forward(x).unwrap(), want);
+        assert_eq!(clean.guard_trips(), 0);
+    }
+
+    #[test]
+    fn healthy_plans_never_trip_guards() {
+        // The guard bounds derive from the sound static certificate, so
+        // a healthy device serving in-domain batches must never trip —
+        // including noisy ABFP plans.
+        let plan = GraphPlan::edges_float32(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(0, (8, 8, 8), 4.0, 0.5),
+        ));
+        for model in ["gru", "dlrm"] {
+            let graph = build(model, GRAPH_SEED).unwrap();
+            let x = batch(graph.in_elems(), 8, 13);
+            let mut exec = GraphExecutor::new(graph, &plan, 7, 0).unwrap();
+            for _ in 0..4 {
+                let y = exec.forward(x.clone()).unwrap();
+                exec.recycle_outputs(vec![y]);
+            }
+            assert_eq!(exec.guard_trips(), 0, "{model}");
+        }
     }
 
     #[test]

@@ -89,6 +89,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dnf;
 pub mod energy;
+pub mod fault;
 pub mod graph;
 pub mod json;
 pub mod metrics;

@@ -13,9 +13,11 @@ use abfp::coordinator::{
     loadgen, BatchMode, BatchPolicy, HttpConfig, HttpServer, Router,
     ServerStats, WorkerConfig,
 };
+use abfp::fault::{FaultPlan, OPEN_END};
 use abfp::json;
 use abfp::data::dataset_for;
 use abfp::graph::{self, GraphPlan, LayerPlan};
+use abfp::stats::quantile_sorted;
 use abfp::models;
 use abfp::planner::{self, DnfGraphConfig, SearchConfig};
 use abfp::report::write_report;
@@ -131,6 +133,23 @@ USAGE: abfp <command> [flags]
                   stats)  --requests N  --qps Q (0 = closed loop)
                   --port P  --batch N  --wait-ms MS  --deadline-ms MS
                   --pool N  --out DIR
+                  --faults PLAN runs the chaos bench instead: one
+                  supervised gru graph worker (FLOAT32 edges + ABFP
+                  interior, FLOAT32 host-reference fallback) driven
+                  through healthy -> faulted -> recovered phases, where
+                  PLAN is a fault-plan JSON (seed + rules of kind
+                  stuck_adc|gain_drift|noise_spike|nan_burst|outage over
+                  global device-row windows). Reports per-phase
+                  availability / latency / divergence-vs-FLOAT32 to
+                  {--out}/bench_faults.json and gates in-process:
+                  availability >= 99% per phase, the faulted phase
+                  serves bit-identical FLOAT32 fallback answers, and
+                  the recovered phase re-serves the analog plan.
+                  --trip-after N (breaker opens after N consecutive
+                  fault-class failures, default 2)  --probe-after N
+                  (fallback batches per HalfOpen probe, default 4)
+                  --retries N (client retry budget on 429/503,
+                  default 4)  --requests N (recovered-phase length)
                   --scenario generate drives POST :generate instead:
                   batch-1 KV-cache decode on the graph workers (implies
                   --graph; default --models transformer), closed loop,
@@ -891,8 +910,17 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "models", "backend", "backends", "f32", "tile", "gain", "artifacts",
         "ckpt", "elems", "queue", "delay-ms", "threads", "graph", "plan", "seed",
         "mode", "workers", "deadline-ms", "pool", "out", "baseline", "tolerance",
-        "scenario", "prompt", "max-new",
+        "scenario", "prompt", "max-new", "faults", "trip-after", "probe-after",
+        "retries",
     ])?;
+    if args.has("faults") {
+        return cmd_bench_faults(args);
+    }
+    for flag in ["trip-after", "probe-after", "retries"] {
+        if args.has(flag) {
+            bail!("--{flag} only applies to the chaos bench; add --faults PLAN");
+        }
+    }
     match args.str_or("scenario", "predict").as_str() {
         "generate" => return cmd_bench_generate(args),
         "predict" => {}
@@ -981,6 +1009,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
                 requests,
                 concurrency,
                 target_qps: qps,
+                retries: 0,
             };
             eprintln!(
                 "[bench-serve] {mode_name}: {} x{} ({} load workers) -> http://{}/v1/models/{}:predict ({})",
@@ -1179,6 +1208,335 @@ fn cmd_bench_generate(args: &Args) -> Result<()> {
     }
     let out = args.str_or("out", "reports");
     b.save(&format!("{out}/bench_serve_generate.json"))?;
+    Ok(())
+}
+
+/// `bench-serve --faults PLAN`: the chaos bench. One supervised gru
+/// graph worker (FLOAT32 edges + ABFP interior, tile 32 / gain 4 — one
+/// fault-eligible matmul site whose global row clock advances exactly
+/// one row per batch-1 request) is driven over loopback through three
+/// phases derived from the fault plan's row windows:
+///
+///   healthy    rows before the first fault window — analog serving
+///   faulted    the fault window is live: typed 503s until the breaker
+///              opens, then bit-identical FLOAT32 fallback answers;
+///              HalfOpen probes walk the row clock through the window
+///              (driven until the breaker re-arms, bounded)
+///   recovered  after re-arm — the analog plan serves again
+///
+/// Every logical request retries 429/503 with jittered backoff
+/// honouring `Retry-After` (budget `--retries`), and every 200 answer
+/// is compared element-wise against `host_forward` — the FLOAT32
+/// reference — so the report can *prove* which engine answered:
+/// divergence 0 = fallback, > 0 = analog. Per-phase availability /
+/// latency / divergence land in `{--out}/bench_faults.json`, and the
+/// run gates in-process: availability >= 99% per phase, >= 1
+/// bit-identical fallback answer in the faulted phase, nonzero
+/// divergence in the recovered phase (the analog plan really re-armed),
+/// and zero 500s end to end.
+fn cmd_bench_faults(args: &Args) -> Result<()> {
+    use std::time::Instant;
+
+    for flag in [
+        "scenario", "mode", "workers", "baseline", "tolerance", "elems",
+        "delay-ms", "models", "plan", "qps", "batch", "wait-ms", "backend",
+        "backends", "f32", "tile", "gain", "artifacts", "ckpt", "concurrency",
+        "graph", "prompt", "max-new",
+    ] {
+        if args.has(flag) {
+            bail!(
+                "--{flag} does not apply to the chaos bench \
+                 (fixed gru worker, batch-1, closed loop of 1 client)"
+            );
+        }
+    }
+    let plan_path = args.get("faults").expect("dispatched on --faults");
+    let faults = FaultPlan::load(plan_path)?;
+    // `from_json` guarantees at least one rule.
+    let fault_start = faults.rules.iter().map(|r| r.start_row).min().unwrap();
+    let fault_end = faults.rules.iter().map(|r| r.end_row).max().unwrap();
+    if fault_end == OPEN_END {
+        bail!(
+            "fault plan {plan_path} has an open-ended window (no end_row): \
+             the fault never clears, so there is no recovered phase to measure"
+        );
+    }
+    let smoke = abfp::benchkit::smoke_requested();
+    let recovered_len = args.usize_or("requests", if smoke { 8 } else { 32 })?;
+    let retries = args.usize_or("retries", 4)?;
+    let trip_after = args.usize_or("trip-after", 2)? as u32;
+    let probe_after = args.usize_or("probe-after", 4)? as u64;
+    let breaker = abfp::coordinator::BreakerConfig {
+        trip_after,
+        probe_after,
+        ..Default::default()
+    };
+
+    let model = "gru".to_string();
+    let graph_plan = GraphPlan::edges_float32(LayerPlan::new(
+        BackendKind::Abfp,
+        DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+    ));
+    eprintln!(
+        "[bench-serve] chaos: {model} plan {{{}}} faults {{{}}} breaker \
+         trip_after={trip_after} probe_after={probe_after} retries={retries}",
+        graph_plan.summary(),
+        faults.summary()
+    );
+    let router = Arc::new(Router::start_graph_supervised(
+        &[model.clone()],
+        &graph_plan,
+        BatchPolicy::new(1, 0)?,
+        args.usize_or("queue", 64)?,
+        args.u64_or("seed", 0x5eed)?,
+        args.usize_or("threads", 0)?,
+        Some(&faults),
+        breaker,
+    )?);
+    let mut server = HttpServer::bind_with(
+        router.clone(),
+        &bind_addr(&args.str_or("bind", "127.0.0.1"), args.port_or("port", 0)?),
+        http_config_from_args(args)?,
+    )?;
+
+    // The FLOAT32 host reference the worker's fallback must match
+    // bit-for-bit (JSON shortest-round-trip printing preserves every
+    // f32 exactly, so equality over HTTP is bit-equality).
+    let graph = graph::build(&model, graph::builders::GRAPH_SEED)?;
+    let meta = graph::meta(&model)?;
+    let in_elems = graph.in_elems();
+    let path = format!("/v1/models/{model}:predict");
+    let mut conn = loadgen::Conn::open(&server.addr().to_string())?;
+
+    #[derive(Default)]
+    struct Phase {
+        sent: usize,
+        ok: usize,
+        retries: usize,
+        not_ok: usize,
+        latencies_ms: Vec<f64>,
+        identical: usize,
+        max_div: f64,
+        sum_div: f64,
+    }
+    // One logical request: deterministic input in the model's declared
+    // domain, retry budget on 429/503 honouring Retry-After, outcome
+    // folded into the phase tally. Returns whether the final answer
+    // was a 200.
+    let mut drive = |i: usize, tally: &mut Phase| -> Result<bool> {
+        let mut rng = Pcg64::new(0xfa57_bea7, i as u64);
+        let data: Vec<f32> =
+            (0..in_elems).map(|_| rng.uniform(meta.input_lo, meta.input_hi)).collect();
+        let x = abfp::tensor::Tensor::new(&[1, in_elems], data.clone())?;
+        let host_ref = graph.host_forward(&x)?;
+        let body = format!(
+            r#"{{"data": [{}]}}"#,
+            data.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+        );
+        tally.sent += 1;
+        let t0 = Instant::now();
+        let (mut status, mut text, mut retry_after) =
+            conn.request_full("POST", &path, &body)?;
+        for k in 0..retries {
+            if status != 429 && status != 503 {
+                break;
+            }
+            let base = retry_after.unwrap_or(0.05).max(0.001);
+            let backoff = (base * (1u64 << k.min(4)) as f64).min(2.0);
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                backoff * rng.uniform(0.5, 1.0) as f64,
+            ));
+            tally.retries += 1;
+            (status, text, retry_after) = conn.request_full("POST", &path, &body)?;
+        }
+        tally.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        if status != 200 {
+            tally.not_ok += 1;
+            return Ok(false);
+        }
+        tally.ok += 1;
+        let resp = json::parse(&text)?;
+        let out = resp.get("outputs")?.as_arr()?[0].get("data")?.as_arr()?;
+        let want = host_ref.data();
+        if out.len() != want.len() {
+            bail!("response has {} outputs, host reference {}", out.len(), want.len());
+        }
+        let mut div: f64 = 0.0;
+        for (got, want) in out.iter().zip(want) {
+            div = div.max((got.as_f64()? - *want as f64).abs());
+        }
+        if div == 0.0 {
+            tally.identical += 1;
+        }
+        tally.max_div = tally.max_div.max(div);
+        tally.sum_div += div;
+        Ok(true)
+    };
+
+    // Phase 1 — healthy: exactly the rows before the fault window.
+    let mut healthy = Phase::default();
+    let mut req = 0usize;
+    for _ in 0..fault_start {
+        drive(req, &mut healthy)?;
+        req += 1;
+    }
+
+    // Phase 2 — faulted: drive until the breaker has re-armed (HalfOpen
+    // probes consume one row each, so the cap below is enough to walk
+    // any bounded window; hitting it means the plan never recovered).
+    let width = fault_end - fault_start;
+    let cap = trip_after as u64 * (retries as u64 + 1)
+        + (width + 2) * (probe_after + 1)
+        + 16;
+    let mut faulted = Phase::default();
+    while router.health(&model)?.rearms == 0 {
+        if faulted.sent as u64 >= cap {
+            bail!(
+                "faulted phase never recovered within {cap} requests \
+                 (breaker: {:?})",
+                router.health(&model)?
+            );
+        }
+        drive(req, &mut faulted)?;
+        req += 1;
+    }
+
+    // Phase 3 — recovered: the analog plan serves again.
+    let mut recovered = Phase::default();
+    for _ in 0..recovered_len {
+        drive(req, &mut recovered)?;
+        req += 1;
+    }
+
+    let stats = router.stats(&model)?;
+    let health = router.health(&model)?;
+    server.shutdown();
+
+    let phase_json = |name: &str, p: &Phase| {
+        let mut lat = p.latencies_ms.clone();
+        lat.sort_by(|a, b| a.total_cmp(b));
+        let availability =
+            if p.sent == 0 { 1.0 } else { p.ok as f64 / p.sent as f64 };
+        println!(
+            "{name}: {}/{} ok ({:.1}% available, {} retries), p50 {:.2} ms, \
+             p95 {:.2} ms, divergence max {:.3e} mean {:.3e}, {} bit-identical \
+             to FLOAT32",
+            p.ok,
+            p.sent,
+            availability * 100.0,
+            p.retries,
+            quantile_sorted(&lat, 0.5),
+            quantile_sorted(&lat, 0.95),
+            p.max_div,
+            p.sum_div / (p.ok.max(1) as f64),
+            p.identical
+        );
+        json::obj(vec![
+            ("phase", json::s(name)),
+            ("sent", json::num(p.sent as f64)),
+            ("ok", json::num(p.ok as f64)),
+            ("not_ok", json::num(p.not_ok as f64)),
+            ("retries", json::num(p.retries as f64)),
+            ("availability", json::num(availability)),
+            ("p50_ms", json::num(quantile_sorted(&lat, 0.5))),
+            ("p95_ms", json::num(quantile_sorted(&lat, 0.95))),
+            ("max_divergence", json::num(p.max_div)),
+            (
+                "mean_divergence",
+                json::num(p.sum_div / (p.ok.max(1) as f64)),
+            ),
+            ("identical_to_float32", json::num(p.identical as f64)),
+        ])
+    };
+    let doc = json::obj(vec![
+        ("bench", json::s("serve_faults")),
+        ("model", json::s(&model)),
+        ("fault_plan", faults.to_json()),
+        (
+            "breaker",
+            json::obj(vec![
+                ("trip_after", json::num(trip_after as f64)),
+                ("probe_after", json::num(probe_after as f64)),
+            ]),
+        ),
+        ("retry_budget", json::num(retries as f64)),
+        (
+            "phases",
+            json::arr(vec![
+                phase_json("healthy", &healthy),
+                phase_json("faulted", &faulted),
+                phase_json("recovered", &recovered),
+            ]),
+        ),
+        ("server", server_stats_json(&stats)),
+        (
+            "health",
+            json::obj(vec![
+                ("state", json::s(health.state.health_label())),
+                ("restarts", json::num(health.restarts as f64)),
+                ("fallback_batches", json::num(health.fallback_batches as f64)),
+                ("faults", json::num(health.faults as f64)),
+                ("probes", json::num(health.probes as f64)),
+                ("rearms", json::num(health.rearms as f64)),
+            ]),
+        ),
+    ]);
+    let out = args.str_or("out", "reports");
+    std::fs::create_dir_all(&out)?;
+    let report_path = format!("{out}/bench_faults.json");
+    std::fs::write(&report_path, doc.to_string())?;
+    println!("[bench-serve] chaos report -> {report_path}");
+
+    // The in-process gate: this is what the CI chaos leg runs.
+    let mut failures = Vec::new();
+    for (name, p) in
+        [("healthy", &healthy), ("faulted", &faulted), ("recovered", &recovered)]
+    {
+        if p.sent > 0 && (p.ok as f64) < 0.99 * p.sent as f64 {
+            failures.push(format!(
+                "{name} phase availability {}/{} < 99%",
+                p.ok, p.sent
+            ));
+        }
+    }
+    if healthy.sent > 0 && healthy.max_div == 0.0 {
+        failures
+            .push("healthy phase never served the analog plan".to_string());
+    }
+    if faulted.identical == 0 {
+        failures.push(
+            "faulted phase produced no bit-identical FLOAT32 fallback answer"
+                .to_string(),
+        );
+    }
+    if recovered.sent > 0 && recovered.max_div == 0.0 {
+        failures.push(
+            "recovered phase still bit-identical to FLOAT32 — the analog \
+             plan did not re-arm"
+                .to_string(),
+        );
+    }
+    if health.rearms == 0 || health.fallback_batches == 0 {
+        failures.push(format!(
+            "breaker round trip incomplete: {} rearm(s), {} fallback batch(es)",
+            health.rearms, health.fallback_batches
+        ));
+    }
+    if stats.failed_requests > 0 {
+        failures.push(format!(
+            "{} request(s) answered 500 — degradation must stay typed \
+             (503/fallback), never an executor error",
+            stats.failed_requests
+        ));
+    }
+    if !failures.is_empty() {
+        bail!("chaos gate failed:\n  {}", failures.join("\n  "));
+    }
+    println!(
+        "[gate] chaos round trip ok: {} fault(s), {} fallback batch(es), \
+         {} probe(s), {} rearm(s), 0 500s",
+        health.faults, health.fallback_batches, health.probes, health.rearms
+    );
     Ok(())
 }
 

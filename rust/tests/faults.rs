@@ -1,0 +1,133 @@
+//! The acceptance pin for the supervised degradation story: one
+//! deterministic walk through the entire round trip —
+//!
+//!   analog serving -> scheduled device outage -> typed 503 -> breaker
+//!   opens -> bit-identical FLOAT32 fallback -> HalfOpen probes walk
+//!   the row clock through the fault window -> probe succeeds -> the
+//!   analog plan re-arms -> analog serving again
+//!
+//! — with the engine that answered each request proven by comparing
+//! its outputs against the FLOAT32 host reference (divergent = analog,
+//! bit-identical = fallback), every breaker counter pinned exactly,
+//! and the whole trajectory reproduced bit-for-bit by a second
+//! identically-configured router (`bench-serve --faults` replays the
+//! same schedule over HTTP).
+//!
+//! The gru graph under FLOAT32 edges + ABFP interior has exactly one
+//! wrapped (fault-eligible) matmul site, and batch-1 requests advance
+//! its global row clock by exactly one row per request — so request
+//! index IS the device row, and the outage window below maps 1:1 onto
+//! request ordinals.
+
+use abfp::abfp::DeviceConfig;
+use abfp::backend::BackendKind;
+use abfp::coordinator::{BatchPolicy, BreakerConfig, BreakerState, Router};
+use abfp::fault::{FaultKind, FaultPlan, FaultRule};
+use abfp::graph::{build, builders::GRAPH_SEED, GraphPlan, LayerPlan};
+use abfp::tensor::Tensor;
+
+fn supervised_router() -> Router {
+    let faults = FaultPlan::new(
+        7,
+        vec![FaultRule {
+            kind: FaultKind::Outage,
+            start_row: 3,
+            end_row: 6,
+        }],
+    );
+    Router::start_graph_supervised(
+        &["gru".to_string()],
+        &GraphPlan::edges_float32(LayerPlan::new(
+            BackendKind::Abfp,
+            DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+        )),
+        BatchPolicy::new(1, 0).unwrap(),
+        64,
+        7,
+        1,
+        Some(&faults),
+        BreakerConfig {
+            trip_after: 1,
+            probe_after: 2,
+            ..BreakerConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Drive 14 batch-1 requests through the outage window and return the
+/// per-request outcome: `Ok(outputs)` or `Err(reason)`.
+fn walk(router: &Router, x: &Tensor) -> Vec<Result<Vec<f32>, String>> {
+    (0..14)
+        .map(|_| {
+            router
+                .infer("gru", x.clone())
+                .map(|r| r.outputs[0].data().to_vec())
+                .map_err(|e| e.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn full_degradation_round_trip_is_deterministic() {
+    let router = supervised_router();
+    let graph = build("gru", GRAPH_SEED).unwrap();
+    let x = Tensor::full(&[graph.in_elems()], 0.25);
+    let host_ref = graph
+        .host_forward(&x.reshape(&[1, graph.in_elems()]).unwrap())
+        .unwrap()
+        .data()
+        .to_vec();
+
+    let walk1 = walk(&router, &x);
+
+    // Row/request map (window [3, 6), trip_after 1, probe_after 2).
+    // A failed probe's covering fallback answer counts toward the next
+    // probe window, so probes run every other round while the breaker
+    // walks the outage:
+    //   req 0-2   rows 0-2  analog, divergent from the host reference
+    //   req 3     row 3     outage -> typed 503, breaker opens
+    //   req 4-5             fallback, bit-identical to the reference
+    //   req 6     row 4     probe fails -> fallback covers the client
+    //   req 7               fallback
+    //   req 8     row 5     probe fails -> fallback covers
+    //   req 9               fallback
+    //   req 10    row 6     probe clears the window -> re-arm, analog
+    //   req 11-13 rows 7-9  analog again
+    for (i, out) in walk1.iter().enumerate() {
+        match i {
+            3 => {
+                let reason = out.as_ref().expect_err("req 3 must be the typed 503");
+                assert!(reason.contains("temporarily unavailable"), "{reason}");
+                assert!(reason.contains("outage"), "{reason}");
+            }
+            0..=2 | 10..=13 => {
+                let out = out.as_ref().unwrap_or_else(|e| panic!("req {i}: {e}"));
+                assert_ne!(out, &host_ref, "req {i} must be analog (divergent)");
+            }
+            _ => {
+                let out = out.as_ref().unwrap_or_else(|e| panic!("req {i}: {e}"));
+                assert_eq!(out, &host_ref, "req {i} must be the FLOAT32 fallback");
+            }
+        }
+    }
+
+    // Every breaker counter, exactly.
+    let h = router.health("gru").unwrap();
+    assert_eq!(h.state, BreakerState::Closed);
+    assert_eq!(h.probes, 3);
+    assert_eq!(h.rearms, 1);
+    assert_eq!(h.fallback_batches, 6);
+    assert_eq!(h.restarts, 0);
+    let s = router.stats("gru").unwrap();
+    assert_eq!(s.unavailable_requests, 1);
+    assert_eq!(s.failed_requests, 0);
+    assert_eq!(s.requests, 13);
+
+    // Bit-reproducible: a second identically-configured router replays
+    // the identical trajectory — statuses, reasons, and every analog
+    // output bit-for-bit (coordinate-keyed ADC noise + the seeded fault
+    // schedule leave nothing to wall clock or thread timing).
+    let walk2 = walk(&supervised_router(), &x);
+    assert_eq!(walk1, walk2);
+}

@@ -9,7 +9,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use abfp::coordinator::loadgen::{self, Conn};
-use abfp::coordinator::{BatchPolicy, HttpServer, Router, ECHO_FAIL_SENTINEL};
+use abfp::coordinator::{
+    BatchPolicy, HttpServer, Router, ECHO_FAIL_SENTINEL, ECHO_PANIC_SENTINEL,
+};
 use abfp::json;
 
 /// Keep-alive client (the crate's own minimal HTTP client — the same
@@ -121,6 +123,7 @@ fn loopback_end_to_end() {
         requests: 64,
         concurrency: 8,
         target_qps: 0.0,
+        retries: 0,
     })
     .unwrap();
     assert_eq!(report.sent, 64);
@@ -193,6 +196,7 @@ fn saturated_queue_answers_429_not_hangs() {
         requests: 24,
         concurrency: 24,
         target_qps: 0.0,
+        retries: 0,
     })
     .unwrap();
     assert_eq!(report.sent, 24);
@@ -226,9 +230,95 @@ fn open_loop_reports_target_pacing() {
         requests: 20,
         concurrency: 4,
         target_qps: 200.0,
+        retries: 0,
     })
     .unwrap();
     assert_eq!(report.ok, 20, "{}", report.render());
     assert!(report.wall_s >= 0.09, "open loop ran faster than its schedule");
     assert!(report.qps <= 250.0, "pacing ignored: {}", report.render());
+}
+
+#[test]
+fn panic_degrades_health_and_answers_typed_503_with_retry_after() {
+    let (_server, router) =
+        echo_server(4, BatchPolicy::new(1, 0).unwrap(), 64, Duration::ZERO);
+    let mut c = connect(_server.addr());
+
+    // Executor panic: the supervisor answers a typed 503 carrying a
+    // Retry-After hint — not a 500, and not a hung client.
+    let poison = format!(
+        r#"{{"data": [{}, 0, 0, 0]}}"#,
+        (ECHO_PANIC_SENTINEL as f64) * 2.0
+    );
+    let (status, body, retry_after) =
+        c.request_full("POST", "/v1/models/echo:predict", &poison).unwrap();
+    assert_eq!(status, 503, "{body}");
+    assert!(body.contains("temporarily unavailable"), "{body}");
+    assert_eq!(retry_after, Some(1.0), "503 must carry Retry-After");
+
+    // The worker restarts lazily at the next arrival, so until then the
+    // health surfaces report the degradation: readiness flips to 503
+    // and the roster carries the per-model health label.
+    let (status, body) = c.request("GET", "/healthz", "").unwrap();
+    assert_eq!((status, body.as_str()), (503, "restarting\n"));
+    let (status, body) = c.request("GET", "/v1/models", "").unwrap();
+    assert_eq!(status, 200);
+    let models = json::parse(&body).unwrap();
+    let health = models
+        .get("detail")
+        .unwrap()
+        .get("echo")
+        .unwrap()
+        .get("health")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert_eq!(health, "restarting");
+
+    // The next request rides the restart: served 200, and both health
+    // surfaces recover to their healthy (byte-pinned) forms.
+    let (status, body) =
+        c.request("POST", "/v1/models/echo:predict", r#"{"data": [1, 2, 3, 4]}"#).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let (status, body) = c.request("GET", "/healthz", "").unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+    // The panic landed in the unavailable class, not the 500 class.
+    let s = router.stats("echo").unwrap();
+    assert_eq!(s.unavailable_requests, 1);
+    assert_eq!(s.failed_requests, 0);
+}
+
+#[test]
+fn retry_budget_turns_throttles_into_eventual_answers() {
+    // Same saturation shape as the 429 test, but with a retry budget:
+    // every logical request still counts once in offered load, retries
+    // are tallied separately, and each request lands in exactly one
+    // final status class.
+    let (_server, _router) = echo_server(
+        2,
+        BatchPolicy::new(1, 0).unwrap(),
+        2,
+        Duration::from_millis(20),
+    );
+    let report = loadgen::run(&loadgen::LoadSpec {
+        addr: _server.addr().to_string(),
+        model: "echo".to_string(),
+        in_elems: 2,
+        requests: 24,
+        concurrency: 24,
+        target_qps: 0.0,
+        retries: 4,
+    })
+    .unwrap();
+    assert_eq!(report.sent, 24, "retries must not inflate offered load");
+    assert!(report.retries >= 1, "no retry exercised: {}", report.render());
+    assert_eq!(
+        report.ok + report.throttled + report.client_errors + report.server_errors,
+        24 - report.transport_errors,
+        "{}",
+        report.render()
+    );
+    assert!(report.ok >= 1, "{}", report.render());
 }

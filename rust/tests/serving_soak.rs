@@ -192,6 +192,102 @@ fn slow_loris_is_reaped_and_idlers_are_closed_quietly() {
 }
 
 #[test]
+fn fault_phase_soak_answers_every_client_without_500s() {
+    let _g = soak_lock();
+    // Supervised gru graph worker with a scheduled device outage over
+    // rows 8..12 of its one wrapped matmul site. Concurrent clients
+    // drive straight through trip -> fallback -> probe -> re-arm; the
+    // degradation must stay typed end to end: every client answered
+    // (the test completing IS the zero-hung-clients assertion), zero
+    // 500s, only 429/503 as transients, and the analog plan back in
+    // service afterwards.
+    use abfp::abfp::DeviceConfig;
+    use abfp::backend::BackendKind;
+    use abfp::coordinator::{loadgen, BreakerConfig};
+    use abfp::fault::{FaultKind, FaultPlan, FaultRule};
+    use abfp::graph::{GraphPlan, LayerPlan};
+
+    let faults = FaultPlan::new(
+        7,
+        vec![FaultRule {
+            kind: FaultKind::Outage,
+            start_row: 8,
+            end_row: 12,
+        }],
+    );
+    let breaker = BreakerConfig {
+        trip_after: 1,
+        probe_after: 2,
+        ..BreakerConfig::default()
+    };
+    let router = std::sync::Arc::new(
+        Router::start_graph_supervised(
+            &["gru".to_string()],
+            &GraphPlan::edges_float32(LayerPlan::new(
+                BackendKind::Abfp,
+                DeviceConfig::new(32, (8, 8, 8), 4.0, 0.5),
+            )),
+            BatchPolicy::new(1, 0).unwrap(),
+            256,
+            7,
+            1,
+            Some(&faults),
+            breaker,
+        )
+        .unwrap(),
+    );
+    let mut server = HttpServer::bind_with(
+        router.clone(),
+        "127.0.0.1:0",
+        HttpConfig {
+            pool: 2,
+            ..HttpConfig::default()
+        },
+    )
+    .unwrap();
+
+    let report = loadgen::run(&loadgen::LoadSpec {
+        addr: server.addr().to_string(),
+        model: "gru".to_string(),
+        in_elems: abfp::graph::meta("gru").unwrap().in_elems(),
+        requests: 96,
+        concurrency: 8,
+        target_qps: 0.0,
+        retries: 4,
+    })
+    .unwrap();
+
+    assert_eq!(report.sent, 96);
+    assert_eq!(report.transport_errors, 0, "{}", report.render());
+    // Every request landed in exactly one final status class.
+    assert_eq!(
+        report.ok + report.throttled + report.client_errors + report.server_errors,
+        96,
+        "{}",
+        report.render()
+    );
+    // Any 5xx must be the typed 503 (unavailable/shed), never a 500.
+    assert_eq!(report.server_errors, report.shed, "{}", report.render());
+    assert_eq!(report.client_errors, 0, "{}", report.render());
+    assert!(report.ok >= 90, "availability collapsed: {}", report.render());
+
+    // The breaker made its full round trip and nothing leaked as a 500.
+    let s = router.stats("gru").unwrap();
+    assert_eq!(s.failed_requests, 0, "executor errors leaked as 500s");
+    assert_eq!(s.failed_batches, 0);
+    let h = router.health("gru").unwrap();
+    assert!(h.faults >= 1, "outage never surfaced: {h:?}");
+    assert!(h.fallback_batches >= 1, "fallback never served: {h:?}");
+    assert!(h.rearms >= 1, "analog plan never re-armed: {h:?}");
+
+    // Healthy to the byte after the chaos.
+    let mut c = Conn::open(&server.addr().to_string()).unwrap();
+    let (status, body) = c.request("GET", "/healthz", "").unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+    server.shutdown();
+}
+
+#[test]
 fn graceful_shutdown_drains_in_flight_requests() {
     let _g = soak_lock();
     // A slow worker (300 ms per batch) guarantees the request is still
